@@ -1,0 +1,144 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//!   1. cooldown hysteresis (paper §3.3: prevents oscillation) — run the
+//!      mixed trace with and without cooldown and count role flips;
+//!   2. KV ring capacity (paper §3.2: 32 slots) — sweep slot counts and
+//!      show the backpressure/TTFT trade-off;
+//!   3. controller power step size — convergence speed vs stability;
+//!   4. bursty vs Poisson arrivals (paper §3.3: "stability even under
+//!      bursty or unpredictable workloads").
+//!
+//! `cargo bench --bench ablations`
+
+use rapid::config::presets;
+use rapid::experiments::longbench_trace;
+use rapid::sim::{self, SimOptions};
+use rapid::types::{Slo, MILLIS, SECOND};
+use rapid::util::rng::Rng;
+use rapid::workload::{build_trace, sonnet::mixed_phases, sonnet::MixedPhasesSpec, sonnet::Sonnet, ArrivalProcess};
+
+fn main() {
+    let n: usize = std::env::var("RAPID_BENCH_REQUESTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(800);
+
+    // ------------------------------------------------------------------
+    // 1. Cooldown hysteresis
+    // ------------------------------------------------------------------
+    println!("== ablation: controller cooldown (mixed trace, full RAPID) ==");
+    let spec = MixedPhasesSpec {
+        prefill_heavy_count: n / 2,
+        decode_heavy_count: n / 2,
+        ..Default::default()
+    };
+    let trace = mixed_phases(42, spec);
+    println!("{:<16}{:>10}{:>12}{:>12}", "cooldown", "decisions", "role flips", "attainment");
+    let mut flips_by_cooldown = Vec::new();
+    for cd_ms in [0u64, 250, 1000, 2000, 6000] {
+        let mut cfg = presets::rapid_600();
+        cfg.controller.cooldown = cd_ms * MILLIS;
+        cfg.controller.gpu_cooldown = (cd_ms * MILLIS).max(500 * MILLIS);
+        let res = sim::run(&cfg, &trace, &SimOptions::default());
+        let flips = res
+            .decisions
+            .iter()
+            .filter(|(_, d)| d.contains("MoveGpu"))
+            .count();
+        flips_by_cooldown.push((cd_ms, flips, res.attainment()));
+        println!(
+            "{:<16}{:>10}{:>12}{:>11.1}%",
+            format!("{cd_ms} ms"),
+            res.decisions.len(),
+            flips,
+            res.attainment() * 100.0
+        );
+    }
+    let no_cd = flips_by_cooldown[0].1;
+    let paper_cd = flips_by_cooldown[3].1;
+    println!(
+        "  [{}] cooldown damps role churn (no-cooldown {} flips >= 2s-cooldown {})\n",
+        if no_cd >= paper_cd { "PASS" } else { "FAIL" },
+        no_cd,
+        paper_cd
+    );
+
+    // ------------------------------------------------------------------
+    // 2. KV ring capacity
+    // ------------------------------------------------------------------
+    println!("== ablation: KV ring slots (LongBench @1.5 QPS/GPU, 4P-750/4D-450) ==");
+    println!("{:<10}{:>12}{:>14}", "slots", "attainment", "p90 TTFT ms");
+    let lb = longbench_trace(42, 12.0, n, Slo::paper_default());
+    let mut atts = Vec::new();
+    for slots in [1usize, 2, 4, 8, 32, 128] {
+        let mut cfg = presets::p4_750_d4_450();
+        cfg.batch.ring_slots = slots;
+        let res = sim::run(&cfg, &lb, &SimOptions::default());
+        atts.push((slots, res.attainment()));
+        println!(
+            "{:<10}{:>11.1}%{:>14.0}",
+            slots,
+            res.attainment() * 100.0,
+            res.ttft_percentile(90.0) / 1000.0
+        );
+    }
+    let tiny = atts[0].1;
+    let paper32 = atts.iter().find(|(s, _)| *s == 32).unwrap().1;
+    println!(
+        "  [{}] starved ring (1 slot) hurts vs the paper's 32 ({:.1}% <= {:.1}%)\n",
+        if tiny <= paper32 + 0.02 { "PASS" } else { "FAIL" },
+        tiny * 100.0,
+        paper32 * 100.0
+    );
+
+    // ------------------------------------------------------------------
+    // 3. Power step size
+    // ------------------------------------------------------------------
+    println!("== ablation: MovePower step size (mixed trace, DynPower) ==");
+    println!("{:<10}{:>12}{:>12}", "step W", "decisions", "attainment");
+    for step in [10.0f64, 25.0, 50.0, 100.0, 200.0] {
+        let mut cfg = presets::dyn_power_600();
+        cfg.controller.power_step_w = step;
+        let res = sim::run(&cfg, &trace, &SimOptions::default());
+        println!(
+            "{:<10}{:>12}{:>11.1}%",
+            step,
+            res.decisions.len(),
+            res.attainment() * 100.0
+        );
+    }
+    println!();
+
+    // ------------------------------------------------------------------
+    // 4. Bursty arrivals (robustness, paper §3.3)
+    // ------------------------------------------------------------------
+    println!("== ablation: Poisson vs bursty arrivals (RAPID vs static) ==");
+    let mk_bursty = |seed: u64| {
+        let mut ap = ArrivalProcess::bursty(Rng::new(seed), 10.0, 4.0, 0.2);
+        let mut sizes = Sonnet::new(Rng::new(seed ^ 5), 3000, 96);
+        build_trace(n, &mut ap, &mut sizes, Slo::paper_default())
+    };
+    let mk_poisson = |seed: u64| {
+        let mut ap = ArrivalProcess::poisson(Rng::new(seed), 10.0);
+        let mut sizes = Sonnet::new(Rng::new(seed ^ 5), 3000, 96);
+        build_trace(n, &mut ap, &mut sizes, Slo::paper_default())
+    };
+    let mut rows = Vec::new();
+    for (label, trace) in [("poisson", mk_poisson(7)), ("bursty", mk_bursty(7))] {
+        let stat = sim::run(&presets::p4d4(600.0), &trace, &SimOptions::default());
+        let rapid = sim::run(&presets::rapid_600(), &trace, &SimOptions::default());
+        println!(
+            "  {label:<8} static-uniform {:>5.1}%  rapid {:>5.1}%",
+            stat.attainment() * 100.0,
+            rapid.attainment() * 100.0
+        );
+        rows.push((label, stat.attainment(), rapid.attainment()));
+    }
+    let bursty_gain = rows[1].2 - rows[1].1;
+    println!(
+        "  [{}] RAPID holds its edge under bursty arrivals (gain {:+.1} pts)\n",
+        if bursty_gain > -0.02 { "PASS" } else { "FAIL" },
+        bursty_gain * 100.0
+    );
+    let _ = SECOND;
+}

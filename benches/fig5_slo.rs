@@ -1,0 +1,27 @@
+//! Fig 5(a)+(b): SLO attainment vs request rate, static configs
+//!
+//! `cargo bench --bench fig5_slo` regenerates the figure's rows/series and
+//! validates the paper-shape assertions (DESIGN.md §6). Absolute numbers
+//! differ from the paper (simulated substrate); shapes must hold.
+
+fn main() {
+    let n: usize = std::env::var("RAPID_BENCH_REQUESTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1000);
+    let t0 = std::time::Instant::now();
+    let fa = rapid::experiments::fig5::run(false, 42, n);
+    println!("{}", fa.render());
+    let mut checks = fa.checks();
+    let fb = rapid::experiments::fig5::run(true, 42, n);
+    println!("{}", fb.render());
+    checks.extend(fb.checks());
+    println!("{}", rapid::experiments::render_checks(&checks));
+    let failed = checks.iter().filter(|c| !c.pass).count();
+    println!(
+        "fig5_slo: {}/{} shape checks passed in {:.1}s",
+        checks.len() - failed,
+        checks.len(),
+        t0.elapsed().as_secs_f64()
+    );
+}

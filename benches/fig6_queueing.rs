@@ -1,0 +1,24 @@
+//! Fig 6: queueing vs execution TTFT decomposition
+//!
+//! `cargo bench --bench fig6_queueing` regenerates the figure's rows/series and
+//! validates the paper-shape assertions (DESIGN.md §6). Absolute numbers
+//! differ from the paper (simulated substrate); shapes must hold.
+
+fn main() {
+    let n: usize = std::env::var("RAPID_BENCH_REQUESTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1000);
+    let t0 = std::time::Instant::now();
+    let f = rapid::experiments::fig6::run(42, n);
+    println!("{}", f.render());
+    let checks = f.checks();
+    println!("{}", rapid::experiments::render_checks(&checks));
+    let failed = checks.iter().filter(|c| !c.pass).count();
+    println!(
+        "fig6_queueing: {}/{} shape checks passed in {:.1}s",
+        checks.len() - failed,
+        checks.len(),
+        t0.elapsed().as_secs_f64()
+    );
+}

@@ -1,0 +1,69 @@
+//! The paper's §5.1 empirical design-space search: sweep GPU splits and
+//! per-phase power allocations under the 4800 W budget on LongBench, and
+//! report the best static configuration ("We shifted GPUs between prefill
+//! and decode by increments of one, and shifted power by 50 W … to
+//! identify 4P-750W/4D-450W as the optimal configuration").
+//!
+//! Run: `cargo run --release --example power_sweep [-- <qps_per_gpu>]`
+
+use rapid::config::{presets, Topology};
+use rapid::experiments::longbench_trace;
+use rapid::sim::{self, SimOptions};
+use rapid::types::Slo;
+
+fn main() {
+    let qps: f64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.5);
+    let n = 1000;
+    let seed = 42;
+    println!("static design-space sweep @{qps} QPS/GPU, 4800 W node budget\n");
+    println!(
+        "{:<10}{:>10}{:>10}{:>13}{:>10}{:>10}",
+        "split", "prefill W", "decode W", "attainment", "goodput", "qps/kW"
+    );
+    let mut best: Option<(String, f64, f64)> = None;
+    for p in 2..=6usize {
+        let d = 8 - p;
+        let mut pw = 400.0;
+        while pw <= 750.0 + 1e-9 {
+            let dw = (4800.0 - pw * p as f64) / d as f64;
+            if (400.0..=750.0).contains(&dw) {
+                let mut cfg = presets::p4d4(600.0);
+                cfg.name = format!("{p}P-{pw:.0}W/{d}D-{dw:.0}W");
+                cfg.topology = Topology::Disaggregated {
+                    prefill: p,
+                    decode: d,
+                };
+                cfg.prefill_cap_w = pw;
+                cfg.decode_cap_w = dw;
+                if cfg.validate().is_ok() {
+                    let trace = longbench_trace(seed, qps * 8.0, n, Slo::paper_default());
+                    let res = sim::run(&cfg, &trace, &SimOptions::default());
+                    println!(
+                        "{:<10}{:>10.0}{:>10.0}{:>12.1}%{:>10.2}{:>10.3}",
+                        format!("{p}P{d}D"),
+                        pw,
+                        dw,
+                        res.attainment() * 100.0,
+                        res.goodput_qps(),
+                        res.qps_per_kw()
+                    );
+                    let score = res.attainment();
+                    if best.as_ref().map_or(true, |&(_, s, _)| score > s) {
+                        best = Some((cfg.name.clone(), score, res.goodput_qps()));
+                    }
+                }
+            }
+            pw += 50.0;
+        }
+    }
+    if let Some((name, att, gp)) = best {
+        println!(
+            "\nbest static configuration: {name} (attainment {:.1}%, goodput {gp:.2} qps)",
+            att * 100.0
+        );
+        println!("paper's answer at this operating point: 4P-750W/4D-450W");
+    }
+}

@@ -1,0 +1,44 @@
+//! Quickstart: the smallest end-to-end use of the RAPID stack.
+//!
+//! 1. Load the AOT artifacts (run `make artifacts` first).
+//! 2. Serve a handful of prompts through the disaggregated
+//!    prefill/decode workers on the PJRT CPU runtime.
+//! 3. Print per-request TTFT/TPOT and the throughput report.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use rapid::server::{serve, report, ServeCaps, ServeRequest};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let prompts = [
+        "hello, disaggregated world",
+        "prefill wants power",
+        "decode wants slots",
+        "the budget is fixed",
+    ];
+    let requests: Vec<ServeRequest> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| ServeRequest {
+            id: i as u64,
+            prompt: p.to_string(),
+            max_new_tokens: 8,
+        })
+        .collect();
+
+    println!("loading {artifacts}/ and serving {} prompts...", requests.len());
+    let t0 = std::time::Instant::now();
+    let (outcomes, _stats) = serve(&artifacts, requests, 8.0, 1, 1, ServeCaps::default())?;
+    for o in &outcomes {
+        println!(
+            "  {}: ttft={:>5.1} ms  tpot={:>6.1} ms  {} tokens",
+            o.record.id,
+            o.record.ttft() as f64 / 1000.0,
+            o.record.tpot() as f64 / 1000.0,
+            o.record.output_tokens,
+        );
+    }
+    println!("\n{}", report(&outcomes, t0.elapsed().as_secs_f64()));
+    Ok(())
+}

@@ -1,0 +1,287 @@
+"""AOT export: lower the L2 model to HLO *text* + weights + manifest.
+
+This is the single build-time bridge between python and rust. It runs once
+(`make artifacts`) and produces:
+
+  artifacts/prefill_b{B}.hlo.txt   — prefill executable per batch variant
+  artifacts/decode_b{B}.hlo.txt    — decode-step executable per batch variant
+  artifacts/weights.bin            — raw little-endian f32, params in
+                                     ModelConfig.param_specs() order
+  artifacts/manifest.json          — config, param table (name/shape/offset),
+                                     variant table (arg & output shapes)
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Calling convention (positional, recorded in the manifest). To keep the
+serving hot path free of host<->device tuple traffic (this PJRT build
+cannot untuple buffer-execution outputs, and re-uploading weights or KV
+per step dominates latency — EXPERIMENTS.md §Perf), each executable has a
+SINGLE flat f32 output, the "state":
+
+  state    = concat(k_cache.ravel(), v_cache.ravel(), logits.ravel())
+  prefill: [*params, tokens i32[B,S], lens i32[B]]      -> state
+  decode:  [*params, token i32[B], pos i32[B], state]   -> state
+  extract: [state]                                      -> logits f32[B,V]
+
+The rust runtime keeps `state` as a device-resident buffer chained
+between steps; only `extract`'s logits (a few KB) come to the host.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+PREFILL_BATCHES = (1, 2, 4)
+DECODE_BATCHES = (1, 2, 4, 8)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange).
+
+    return_tuple=False: every module has exactly ONE array output (the
+    flat state or the logits), so the root compiles to a plain array —
+    required because this xla_extension's PJRT neither untuples buffer-
+    execution outputs nor converts tuple buffers to literals.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def _flat_params(cfg: M.ModelConfig, params: Dict[str, jax.Array]) -> List[jax.Array]:
+    return [params[name] for name, _ in cfg.param_specs()]
+
+
+def _shape_entry(arr) -> dict:
+    return {"shape": list(arr.shape), "dtype": str(arr.dtype)}
+
+
+def cache_shape(cfg: M.ModelConfig, batch: int):
+    return (cfg.n_layers, batch, cfg.n_heads, cfg.max_seq, cfg.head_dim)
+
+
+def cache_elems(cfg: M.ModelConfig, batch: int) -> int:
+    s = cache_shape(cfg, batch)
+    return int(np.prod(s))
+
+
+def state_elems(cfg: M.ModelConfig, batch: int) -> int:
+    return 2 * cache_elems(cfg, batch) + batch * cfg.vocab
+
+
+def _pack(cfg, batch, logits, kc, vc):
+    return jnp.concatenate([kc.ravel(), vc.ravel(), logits.ravel()])
+
+
+def _unpack_caches(cfg, batch, state):
+    n = cache_elems(cfg, batch)
+    kc = state[:n].reshape(cache_shape(cfg, batch))
+    vc = state[n : 2 * n].reshape(cache_shape(cfg, batch))
+    return kc, vc
+
+
+def lower_prefill(cfg: M.ModelConfig, batch: int):
+    """Lower the prefill entry point (single flat state output)."""
+    specs = cfg.param_specs()
+
+    def fn(*args):
+        flat, tokens, lens = args[: len(specs)], args[len(specs)], args[len(specs) + 1]
+        params = {name: a for (name, _), a in zip(specs, flat)}
+        logits, kc, vc = M.prefill(cfg, params, tokens, lens)
+        return _pack(cfg, batch, logits, kc, vc)
+
+    example = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in specs]
+    example.append(jax.ShapeDtypeStruct((batch, cfg.prefill_seq), jnp.int32))
+    example.append(jax.ShapeDtypeStruct((batch,), jnp.int32))
+    return jax.jit(fn).lower(*example), example
+
+
+def lower_decode(cfg: M.ModelConfig, batch: int):
+    """Lower the decode step (state in, state out — device-chainable)."""
+    specs = cfg.param_specs()
+
+    def fn(*args):
+        n = len(specs)
+        flat, token, pos, state = args[:n], args[n], args[n + 1], args[n + 2]
+        params = {name: a for (name, _), a in zip(specs, flat)}
+        kc, vc = _unpack_caches(cfg, batch, state)
+        logits, kc2, vc2 = M.decode(cfg, params, token, pos, kc, vc)
+        return _pack(cfg, batch, logits, kc2, vc2)
+
+    example = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in specs]
+    example.append(jax.ShapeDtypeStruct((batch,), jnp.int32))
+    example.append(jax.ShapeDtypeStruct((batch,), jnp.int32))
+    example.append(jax.ShapeDtypeStruct((state_elems(cfg, batch),), jnp.float32))
+    return jax.jit(fn).lower(*example), example
+
+
+def lower_extract(cfg: M.ModelConfig, batch: int):
+    """Lower the logits extraction: state -> f32[batch, vocab]."""
+
+    def fn(state):
+        n = 2 * cache_elems(cfg, batch)
+        return state[n:].reshape(batch, cfg.vocab)
+
+    example = [jax.ShapeDtypeStruct((state_elems(cfg, batch),), jnp.float32)]
+    return jax.jit(fn).lower(*example), example
+
+
+def golden_sample(cfg: M.ModelConfig, params, n_decode: int = 8) -> dict:
+    """Greedy continuation the rust runtime must reproduce exactly.
+
+    Uses the byte-level toy tokenizer convention (BOS=256 + raw bytes).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    text = "the power-aware scheduler shifts watts"
+    tokens = [256] + [b for b in text.encode()]
+    s = cfg.prefill_seq
+    padded = tokens[:s] + [0] * max(0, s - len(tokens))
+    tok = jnp.array([padded], jnp.int32)
+    lens = jnp.array([min(len(tokens), s)], jnp.int32)
+    logits, kc, vc = M.prefill(cfg, params, tok, lens)
+    out = [int(jnp.argmax(logits[0]))]
+    pos = lens
+    cur = jnp.array([out[0]], jnp.int32)
+    for _ in range(n_decode):
+        logits, kc, vc = M.decode(cfg, params, cur, pos, kc, vc)
+        nxt = int(jnp.argmax(logits[0]))
+        out.append(nxt)
+        cur = jnp.array([nxt], jnp.int32)
+        pos = pos + 1
+    return {"prompt_text": text, "prompt_tokens": tokens, "greedy": out}
+
+
+def export(out_dir: str, seed: int = 0) -> dict:
+    """Write all artifacts; returns the manifest dict."""
+    os.makedirs(out_dir, exist_ok=True)
+    cfg = M.ModelConfig()
+    params = M.init_params(cfg, seed)
+
+    # --- weights.bin + param table -------------------------------------
+    offset = 0
+    param_table = []
+    with open(os.path.join(out_dir, "weights.bin"), "wb") as f:
+        for name, shape in cfg.param_specs():
+            arr = np.asarray(params[name], dtype="<f4")
+            f.write(arr.tobytes())
+            param_table.append(
+                {"name": name, "shape": list(shape), "offset_elems": offset}
+            )
+            offset += arr.size
+
+    # --- executables -----------------------------------------------------
+    variants = []
+    for b in PREFILL_BATCHES:
+        lowered, example = lower_prefill(cfg, b)
+        fname = f"prefill_b{b}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(to_hlo_text(lowered))
+        variants.append(
+            {
+                "kind": "prefill",
+                "batch": b,
+                "file": fname,
+                "state_elems": state_elems(cfg, b),
+                "data_args": [
+                    {"name": "tokens", "shape": [b, cfg.prefill_seq], "dtype": "int32"},
+                    {"name": "lens", "shape": [b], "dtype": "int32"},
+                ],
+                "outputs": [
+                    {"name": "state", "shape": [state_elems(cfg, b)], "dtype": "float32"}
+                ],
+            }
+        )
+    for b in DECODE_BATCHES:
+        lowered, example = lower_decode(cfg, b)
+        fname = f"decode_b{b}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(to_hlo_text(lowered))
+        variants.append(
+            {
+                "kind": "decode",
+                "batch": b,
+                "file": fname,
+                "state_elems": state_elems(cfg, b),
+                "data_args": [
+                    {"name": "token", "shape": [b], "dtype": "int32"},
+                    {"name": "pos", "shape": [b], "dtype": "int32"},
+                    {"name": "state", "shape": [state_elems(cfg, b)], "dtype": "float32"},
+                ],
+                "outputs": [
+                    {"name": "state", "shape": [state_elems(cfg, b)], "dtype": "float32"}
+                ],
+            }
+        )
+    for b in sorted(set(PREFILL_BATCHES) | set(DECODE_BATCHES)):
+        lowered, example = lower_extract(cfg, b)
+        fname = f"extract_b{b}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(to_hlo_text(lowered))
+        variants.append(
+            {
+                "kind": "extract",
+                "batch": b,
+                "file": fname,
+                "state_elems": state_elems(cfg, b),
+                "data_args": [
+                    {"name": "state", "shape": [state_elems(cfg, b)], "dtype": "float32"}
+                ],
+                "outputs": [
+                    {"name": "logits", "shape": [b, cfg.vocab], "dtype": "float32"}
+                ],
+            }
+        )
+
+    manifest = {
+        "format_version": 2,
+        "seed": seed,
+        "model": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "head_dim": cfg.head_dim,
+            "d_ff": cfg.d_ff,
+            "max_seq": cfg.max_seq,
+            "prefill_seq": cfg.prefill_seq,
+        },
+        "weights": {"file": "weights.bin", "total_elems": offset},
+        "params": param_table,
+        "variants": variants,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    with open(os.path.join(out_dir, "golden.json"), "w") as f:
+        json.dump(golden_sample(cfg, params), f, indent=1)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    manifest = export(args.out, args.seed)
+    n = len(manifest["variants"])
+    print(f"wrote {n} executables + weights to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

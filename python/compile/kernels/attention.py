@@ -1,0 +1,243 @@
+"""Layer-1 Pallas kernels: prefill flash attention, decode attention, SwiGLU.
+
+These are the compute hot-spots of the serving engine (the analogue of the
+paper's GPU attention kernels). The paper targets AMD GPUs; per the
+hardware-adaptation rule we re-think the kernels for the TPU execution
+model instead of porting threadblock structure:
+
+  * prefill attention is a flash-attention-style *block-tiled* kernel:
+    `BlockSpec` tiles queries along the sequence axis into VMEM-sized
+    blocks and streams K/V block-by-block with an online-softmax
+    accumulator — the BlockSpec/grid expression of the HBM<->VMEM schedule
+    a CUDA kernel would express with threadblocks + shared memory;
+  * the MXU-facing work is the two matmuls per block (`q @ k^T`, `p @ v`),
+    kept in fp32 accumulation;
+  * decode attention is a single-query, bandwidth-bound kernel tiled along
+    the KV axis.
+
+All kernels are compiled with `interpret=True`: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret mode lowers to plain HLO that
+round-trips through the rust loader (see /opt/xla-example/README.md).
+Correctness is pinned to `ref.py` by python/tests/test_kernels.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+# Interpret mode is mandatory on this target (CPU PJRT); kept as a module
+# switch so a real-TPU build only has to flip it.
+INTERPRET = True
+
+
+# ---------------------------------------------------------------------------
+# Prefill: causal flash attention
+# ---------------------------------------------------------------------------
+
+
+def _prefill_kernel(q_ref, k_ref, v_ref, o_ref, *, sm_scale, block_q, block_kv):
+    """One (batch, head, q-block) grid step of causal flash attention.
+
+    q_ref: (1, 1, block_q, d) VMEM tile of queries.
+    k_ref/v_ref: (1, 1, seq, d) — the full K/V stream for this (b, h); the
+      kernel walks it in `block_kv` chunks with an online softmax, touching
+      only the blocks the causal mask allows.
+    """
+    q = q_ref[0, 0].astype(jnp.float32) * sm_scale  # (block_q, d)
+    iq = pl.program_id(2)
+    seq = k_ref.shape[2]
+    d = q.shape[-1]
+
+    q_pos = iq * block_q + jax.lax.iota(jnp.int32, block_q)  # (block_q,)
+
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+
+    # Causal: only kv blocks with start <= last q position contribute.
+    n_blocks = iq * (block_q // block_kv) + (block_q // block_kv)
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = jax.lax.dynamic_slice(
+            k_ref[0, 0], (j * block_kv, 0), (block_kv, d)
+        ).astype(jnp.float32)
+        v = jax.lax.dynamic_slice(
+            v_ref[0, 0], (j * block_kv, 0), (block_kv, d)
+        ).astype(jnp.float32)
+        s = q @ k.T  # (block_q, block_kv)
+        kv_pos = j * block_kv + jax.lax.iota(jnp.int32, block_kv)
+        s = jnp.where(kv_pos[None, :] <= q_pos[:, None], s, NEG_INF)
+
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, acc0))
+    o_ref[0, 0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.named_call, name="pallas_prefill_attention")
+def prefill_attention(q, k, v, *, sm_scale=None, block_q=64, block_kv=64):
+    """Causal multi-head attention over a padded prompt (flash-style).
+
+    Args:
+      q, k, v: f32[batch, heads, seq, head_dim]; `seq` must be a multiple
+        of `block_q`, and `block_q` of `block_kv`.
+
+    Returns:
+      f32[batch, heads, seq, head_dim]
+    """
+    b, h, s, d = q.shape
+    if sm_scale is None:
+        sm_scale = float(1.0 / (d**0.5))
+    block_q = min(block_q, s)
+    block_kv = min(block_kv, block_q)
+    if s % block_q or block_q % block_kv:
+        raise ValueError(f"seq={s} not tileable by ({block_q}, {block_kv})")
+
+    grid = (b, h, s // block_q)
+    kernel = functools.partial(
+        _prefill_kernel, sm_scale=sm_scale, block_q=block_q, block_kv=block_kv
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda ib, ih, iq: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda ib, ih, iq: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda ib, ih, iq: (ib, ih, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda ib, ih, iq: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=INTERPRET,
+    )(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Decode: single-query attention over the KV cache
+# ---------------------------------------------------------------------------
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, *, sm_scale, block_kv):
+    """One (batch, head) grid step: q attends to cache slots `<= pos`."""
+    q = q_ref[0, 0].astype(jnp.float32) * sm_scale  # (d,)
+    pos = pos_ref[0]
+    seq = k_ref.shape[2]
+    d = q.shape[-1]
+
+    m0 = jnp.float32(NEG_INF)
+    l0 = jnp.float32(0.0)
+    acc0 = jnp.zeros((d,), jnp.float32)
+
+    # Only blocks that contain live slots (<= pos) are visited.
+    n_blocks = (pos + 1 + block_kv - 1) // block_kv
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = jax.lax.dynamic_slice(
+            k_ref[0, 0], (j * block_kv, 0), (block_kv, d)
+        ).astype(jnp.float32)
+        v = jax.lax.dynamic_slice(
+            v_ref[0, 0], (j * block_kv, 0), (block_kv, d)
+        ).astype(jnp.float32)
+        s = k @ q  # (block_kv,)
+        kv_pos = j * block_kv + jax.lax.iota(jnp.int32, block_kv)
+        s = jnp.where(kv_pos <= pos, s, NEG_INF)
+
+        m_new = jnp.maximum(m, s.max())
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum()
+        acc_new = acc * alpha + p @ v
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, acc0))
+    o_ref[0, 0] = (acc / l).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, sm_scale=None, block_kv=64):
+    """Single-step decode attention.
+
+    Args:
+      q: f32[batch, heads, head_dim] — query at slot `pos`.
+      k_cache, v_cache: f32[batch, heads, max_seq, head_dim].
+      pos: i32[batch] — live slots are `<= pos` per batch element.
+
+    Returns:
+      f32[batch, heads, head_dim]
+    """
+    b, h, s, d = k_cache.shape
+    if sm_scale is None:
+        sm_scale = float(1.0 / (d**0.5))
+    block_kv = min(block_kv, s)
+    if s % block_kv:
+        raise ValueError(f"max_seq={s} not tileable by block_kv={block_kv}")
+
+    kernel = functools.partial(_decode_kernel, sm_scale=sm_scale, block_kv=block_kv)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1,), lambda ib, ih: (ib,)),
+            pl.BlockSpec((1, 1, d), lambda ib, ih: (ib, ih, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda ib, ih: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda ib, ih: (ib, ih, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda ib, ih: (ib, ih, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=INTERPRET,
+    )(pos, q, k_cache, v_cache)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU feed-forward
+# ---------------------------------------------------------------------------
+
+
+def _swiglu_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref):
+    """Row-block SwiGLU: both matmuls + the gated activation fused in VMEM."""
+    x = x_ref[...].astype(jnp.float32)
+    g = x @ wg_ref[...].astype(jnp.float32)
+    u = x @ wu_ref[...].astype(jnp.float32)
+    act = g * jax.lax.logistic(g) * u
+    o_ref[...] = (act @ wd_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def swiglu_ffn(x, w_gate, w_up, w_down, *, block_rows=64):
+    """SwiGLU FFN with row-blocked fusion.
+
+    Args:
+      x: f32[rows, d_model]; rows must be a multiple of block_rows (or
+        smaller than it).
+      w_gate, w_up: f32[d_model, d_ff]; w_down: f32[d_ff, d_model].
+    """
+    n, dm = x.shape
+    d_ff = w_gate.shape[1]
+    block_rows = min(block_rows, n)
+    if n % block_rows:
+        raise ValueError(f"rows={n} not tileable by block_rows={block_rows}")
+
+    return pl.pallas_call(
+        _swiglu_kernel,
+        grid=(n // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, dm), lambda i: (i, 0)),
+            pl.BlockSpec((dm, d_ff), lambda i: (0, 0)),
+            pl.BlockSpec((dm, d_ff), lambda i: (0, 0)),
+            pl.BlockSpec((d_ff, dm), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, dm), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, dm), x.dtype),
+        interpret=INTERPRET,
+    )(x, w_gate, w_up, w_down)

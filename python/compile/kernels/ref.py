@@ -1,0 +1,86 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Every Pallas kernel in this package has an exact pure-`jax.numpy`
+counterpart here. pytest (and hypothesis sweeps) assert `assert_allclose`
+between kernel and oracle across shapes/dtypes — this is the core
+correctness signal for Layer 1.
+
+Conventions (shared with attention.py / model.py):
+  * attention tensors are laid out `(batch, heads, seq, head_dim)`;
+  * prompts are right-padded to the compiled sequence length; a per-batch
+    `lens` vector marks the true prompt length. Causal masking makes pad
+    *keys* unreachable from real queries, and pad-query outputs are
+    discarded by the caller (see DESIGN.md for the cache-slot argument);
+  * decode reads cache slots `j <= pos` (inclusive: slot `pos` holds the
+    KV of the token being decoded).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_prefill(q, k, v, *, sm_scale=None):
+    """Causal multi-head attention over a full (padded) prompt.
+
+    Args:
+      q, k, v: f32[batch, heads, seq, head_dim]
+      sm_scale: softmax scale; defaults to 1/sqrt(head_dim).
+
+    Returns:
+      f32[batch, heads, seq, head_dim]
+    """
+    b, h, s, d = q.shape
+    if sm_scale is None:
+        sm_scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * sm_scale
+    qi = jnp.arange(s)[:, None]
+    kj = jnp.arange(s)[None, :]
+    logits = jnp.where(kj <= qi, logits, NEG_INF)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def attention_decode(q, k_cache, v_cache, pos, *, sm_scale=None):
+    """Single-step decode attention against a KV cache.
+
+    Args:
+      q: f32[batch, heads, head_dim] — query for the token at slot `pos`.
+      k_cache, v_cache: f32[batch, heads, max_seq, head_dim].
+      pos: i32[batch] — slot of the current token; slots `<= pos` are live.
+
+    Returns:
+      f32[batch, heads, head_dim]
+    """
+    b, h, s, d = k_cache.shape
+    if sm_scale is None:
+        sm_scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    logits = jnp.einsum("bhd,bhkd->bhk", q, k_cache).astype(jnp.float32) * sm_scale
+    live = jnp.arange(s)[None, None, :] <= pos[:, None, None]
+    logits = jnp.where(live, logits, NEG_INF)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhk,bhkd->bhd", probs, v_cache.astype(jnp.float32)).astype(q.dtype)
+
+
+def swiglu_ffn(x, w_gate, w_up, w_down):
+    """SwiGLU feed-forward: (silu(x @ w_gate) * (x @ w_up)) @ w_down.
+
+    Args:
+      x: f32[rows, d_model]
+      w_gate, w_up: f32[d_model, d_ff]
+      w_down: f32[d_ff, d_model]
+    """
+    gate = x @ w_gate
+    up = x @ w_up
+    act = gate * jnp.reciprocal(1.0 + jnp.exp(-gate)) * up  # silu(gate) * up
+    return act @ w_down
+
+
+def rmsnorm(x, weight, eps=1e-5):
+    """RMSNorm over the last axis (L2 building block, used by model.py)."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jnp.reciprocal(jnp.sqrt(var + eps)) * weight).astype(x.dtype)

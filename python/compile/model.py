@@ -1,0 +1,241 @@
+"""Layer-2 JAX model: a mini-Llama forward pass built on the L1 kernels.
+
+This is the compute graph the rust coordinator serves. It is a faithful
+small-scale Llama-3 architecture (RMSNorm, RoPE, SwiGLU, causal MHA) with
+two entry points matching the disaggregated serving split:
+
+  * `prefill(params, tokens, lens)`   -> (next-token logits, kv caches)
+  * `decode(params, token, pos, kv)`  -> (logits, updated kv caches)
+
+Both call the Pallas kernels in `kernels/attention.py` so the kernels lower
+into the same HLO module that `aot.py` exports for the rust runtime.
+
+Cache-slot protocol (shared with the rust engine, see DESIGN.md):
+prompts are right-padded to the compiled prefill length `S`; prefill writes
+cache slots `[0, S)` (slots >= len contain garbage K/V that causal masking
+keeps unreachable); decode writes slot `pos` then attends to `<= pos`, so
+garbage slots are overwritten exactly one step before they become visible.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as K
+from .kernels import ref as ref_k
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters (mini-Llama defaults)."""
+
+    vocab: int = 512
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    d_ff: int = 704
+    max_seq: int = 256
+    prefill_seq: int = 128
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def param_specs(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        """Flat, ordered parameter list — the AOT calling convention.
+
+        The rust runtime feeds weights positionally in exactly this order;
+        `aot.py` records it in the manifest.
+        """
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        specs: List[Tuple[str, Tuple[int, ...]]] = [("embed", (v, d))]
+        for l in range(self.n_layers):
+            specs += [
+                (f"layer{l}.attn_norm", (d,)),
+                (f"layer{l}.wq", (d, d)),
+                (f"layer{l}.wk", (d, d)),
+                (f"layer{l}.wv", (d, d)),
+                (f"layer{l}.wo", (d, d)),
+                (f"layer{l}.ffn_norm", (d,)),
+                (f"layer{l}.w_gate", (d, f)),
+                (f"layer{l}.w_up", (d, f)),
+                (f"layer{l}.w_down", (f, d)),
+            ]
+        specs += [("final_norm", (d,)), ("lm_head", (d, v))]
+        return specs
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, jax.Array]:
+    """Deterministic scaled-normal init (the repo's fixed test model)."""
+    key = jax.random.PRNGKey(seed)
+    params: Dict[str, jax.Array] = {}
+    for i, (name, shape) in enumerate(cfg.param_specs()):
+        k = jax.random.fold_in(key, i)
+        if name.endswith("norm"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else 1
+            params[name] = (
+                jax.random.normal(k, shape, jnp.float32) * (fan_in**-0.5)
+            )
+    return params
+
+
+def _rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., seq, head_dim), positions: (..., seq)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, half)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1
+    ).astype(x.dtype)
+
+
+def _split_heads(x: jax.Array, n_heads: int) -> jax.Array:
+    """(B, S, D) -> (B, H, S, Dh)."""
+    b, s, d = x.shape
+    return x.reshape(b, s, n_heads, d // n_heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    """(B, H, S, Dh) -> (B, S, D)."""
+    b, h, s, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+
+
+def prefill(
+    cfg: ModelConfig, params: Dict[str, jax.Array], tokens: jax.Array, lens: jax.Array
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Process a padded prompt batch; return first-token logits + KV caches.
+
+    Args:
+      tokens: i32[B, S] right-padded prompts (S == cfg.prefill_seq).
+      lens:   i32[B] true prompt lengths (1 <= len <= S).
+
+    Returns:
+      logits:  f32[B, vocab] at position len-1 (the first generated token).
+      k_cache: f32[L, B, H, max_seq, Dh] (slots [0, S) written).
+      v_cache: same shape.
+    """
+    b, s = tokens.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    x = params["embed"][tokens]  # (B, S, D)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    k_layers, v_layers = [], []
+    for l in range(cfg.n_layers):
+        p = lambda n: params[f"layer{l}.{n}"]
+        xn = ref_k.rmsnorm(x, p("attn_norm"), cfg.norm_eps)
+        q = _split_heads(xn @ p("wq"), h)
+        k = _split_heads(xn @ p("wk"), h)
+        v = _split_heads(xn @ p("wv"), h)
+        q = _rope(q, positions[:, None, :], cfg.rope_theta)
+        k = _rope(k, positions[:, None, :], cfg.rope_theta)
+        attn = K.prefill_attention(q, k, v)  # (B, H, S, Dh)
+        x = x + _merge_heads(attn) @ p("wo")
+        xn = ref_k.rmsnorm(x, p("ffn_norm"), cfg.norm_eps)
+        ff = K.swiglu_ffn(
+            xn.reshape(b * s, cfg.d_model), p("w_gate"), p("w_up"), p("w_down")
+        ).reshape(b, s, cfg.d_model)
+        x = x + ff
+        # Cache slots beyond S stay zero; causal masking keeps them dead.
+        pad = cfg.max_seq - s
+        k_layers.append(jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0))))
+        v_layers.append(jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0))))
+
+    x = ref_k.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    last = jnp.take_along_axis(x, (lens - 1)[:, None, None], axis=1)[:, 0]  # (B, D)
+    logits = last @ params["lm_head"]
+    return logits, jnp.stack(k_layers), jnp.stack(v_layers)
+
+
+def decode(
+    cfg: ModelConfig,
+    params: Dict[str, jax.Array],
+    token: jax.Array,
+    pos: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One decode step for a batch of sequences.
+
+    Args:
+      token: i32[B] current token ids (slot `pos`).
+      pos:   i32[B] cache slot of `token` (== generated-so-far + len - 1 + 1).
+      k_cache, v_cache: f32[L, B, H, max_seq, Dh].
+
+    Returns:
+      (logits f32[B, vocab], updated k_cache, updated v_cache)
+    """
+    b = token.shape[0]
+    h, dh = cfg.n_heads, cfg.head_dim
+    x = params["embed"][token]  # (B, D)
+
+    new_k, new_v = [], []
+    for l in range(cfg.n_layers):
+        p = lambda n: params[f"layer{l}.{n}"]
+        xn = ref_k.rmsnorm(x, p("attn_norm"), cfg.norm_eps)
+        q = (xn @ p("wq")).reshape(b, h, dh)
+        k = (xn @ p("wk")).reshape(b, h, dh)
+        v = (xn @ p("wv")).reshape(b, h, dh)
+        q = _rope(q, pos[:, None], cfg.rope_theta)
+        k = _rope(k, pos[:, None], cfg.rope_theta)
+
+        # Write slot `pos` per batch element, then attend to slots <= pos.
+        def write(cache_bh, val_bh, p_b):
+            # cache_bh: (H, max_seq, Dh), val_bh: (H, Dh)
+            return jax.lax.dynamic_update_slice(
+                cache_bh, val_bh[:, None, :], (0, p_b, 0)
+            )
+
+        kc = jax.vmap(write)(k_cache[l], k, pos)
+        vc = jax.vmap(write)(v_cache[l], v, pos)
+        new_k.append(kc)
+        new_v.append(vc)
+
+        attn = K.decode_attention(q, kc, vc, pos)  # (B, H, Dh)
+        x = x + attn.reshape(b, h * dh) @ p("wo")
+        xn = ref_k.rmsnorm(x, p("ffn_norm"), cfg.norm_eps)
+        x = x + K.swiglu_ffn(xn, p("w_gate"), p("w_up"), p("w_down"), block_rows=b)
+
+    x = ref_k.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"]
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def full_forward(
+    cfg: ModelConfig, params: Dict[str, jax.Array], tokens: jax.Array
+) -> jax.Array:
+    """Reference: plain causal forward over the whole sequence (no cache).
+
+    Used by tests to validate the prefill+decode cache protocol: logits at
+    position t here must match prefill-then-decode logits.
+    Uses only ref.py math (no Pallas) so it is an independent oracle.
+    """
+    b, s = tokens.shape
+    h = cfg.n_heads
+    x = params["embed"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    for l in range(cfg.n_layers):
+        p = lambda n: params[f"layer{l}.{n}"]
+        xn = ref_k.rmsnorm(x, p("attn_norm"), cfg.norm_eps)
+        q = _rope(_split_heads(xn @ p("wq"), h), positions[:, None, :], cfg.rope_theta)
+        k = _rope(_split_heads(xn @ p("wk"), h), positions[:, None, :], cfg.rope_theta)
+        v = _split_heads(xn @ p("wv"), h)
+        attn = ref_k.attention_prefill(q, k, v)
+        x = x + _merge_heads(attn) @ p("wo")
+        xn = ref_k.rmsnorm(x, p("ffn_norm"), cfg.norm_eps)
+        x = x + ref_k.swiglu_ffn(
+            xn.reshape(b * s, cfg.d_model), p("w_gate"), p("w_up"), p("w_down")
+        ).reshape(b, s, cfg.d_model)
+    x = ref_k.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x @ params["lm_head"]  # (B, S, vocab)

@@ -1,0 +1,220 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes/dtypes; every property asserts allclose against
+the oracle. These tests are the root of the repo's correctness chain: the
+L2 model builds on these kernels, and the rust runtime executes the HLO
+they lower into.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as A
+from compile.kernels import ref as R
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+def _rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def _keys(seed, n):
+    k = jax.random.PRNGKey(seed)
+    return [jax.random.fold_in(k, i) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# prefill attention
+# ---------------------------------------------------------------------------
+
+
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    s_blocks=st.integers(1, 4),
+    d=st.sampled_from([8, 16, 32, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_prefill_matches_ref(b, h, s_blocks, d, seed):
+    s = 64 * s_blocks
+    kq, kk, kv = _keys(seed, 3)
+    q, k, v = _rand(kq, (b, h, s, d)), _rand(kk, (b, h, s, d)), _rand(kv, (b, h, s, d))
+    out = A.prefill_attention(q, k, v)
+    ref = R.attention_prefill(q, k, v)
+    np.testing.assert_allclose(out, ref, atol=3e-5, rtol=3e-5)
+
+
+@given(
+    block_q=st.sampled_from([16, 32, 64, 128]),
+    block_kv=st.sampled_from([8, 16, 32, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_prefill_block_shape_invariance(block_q, block_kv, seed):
+    """Output must not depend on the tiling choice."""
+    if block_q % block_kv:
+        block_kv = block_q
+    kq, kk, kv = _keys(seed, 3)
+    b, h, s, d = 1, 2, 128, 16
+    q, k, v = _rand(kq, (b, h, s, d)), _rand(kk, (b, h, s, d)), _rand(kv, (b, h, s, d))
+    out = A.prefill_attention(q, k, v, block_q=block_q, block_kv=block_kv)
+    ref = R.attention_prefill(q, k, v)
+    np.testing.assert_allclose(out, ref, atol=3e-5, rtol=3e-5)
+
+
+def test_prefill_causality():
+    """Perturbing future keys/values must not change earlier outputs."""
+    kq, kk, kv = _keys(0, 3)
+    b, h, s, d = 1, 2, 128, 16
+    q, k, v = _rand(kq, (b, h, s, d)), _rand(kk, (b, h, s, d)), _rand(kv, (b, h, s, d))
+    base = A.prefill_attention(q, k, v)
+    k2 = k.at[:, :, 64:, :].set(999.0)
+    v2 = v.at[:, :, 64:, :].set(-999.0)
+    pert = A.prefill_attention(q, k2, v2)
+    np.testing.assert_allclose(base[:, :, :64], pert[:, :, :64], atol=1e-6)
+
+
+def test_prefill_scale_override():
+    kq, kk, kv = _keys(1, 3)
+    q, k, v = (_rand(x, (1, 1, 64, 8)) for x in (kq, kk, kv))
+    out = A.prefill_attention(q, k, v, sm_scale=0.5)
+    ref = R.attention_prefill(q, k, v, sm_scale=0.5)
+    np.testing.assert_allclose(out, ref, atol=3e-5, rtol=3e-5)
+
+
+def test_prefill_rejects_untileable():
+    q = jnp.zeros((1, 1, 100, 8))
+    with pytest.raises(ValueError):
+        A.prefill_attention(q, q, q, block_q=64)
+
+
+def test_prefill_numerics_large_logits():
+    """Online softmax must stay finite with large score magnitudes."""
+    kq, kk, kv = _keys(2, 3)
+    q = _rand(kq, (1, 1, 64, 16), scale=30.0)
+    k = _rand(kk, (1, 1, 64, 16), scale=30.0)
+    v = _rand(kv, (1, 1, 64, 16))
+    out = A.prefill_attention(q, k, v)
+    assert np.isfinite(np.asarray(out)).all()
+    ref = R.attention_prefill(q, k, v)
+    np.testing.assert_allclose(out, ref, atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+
+@given(
+    b=st.integers(1, 4),
+    h=st.integers(1, 4),
+    s_blocks=st.integers(1, 4),
+    d=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_decode_matches_ref(b, h, s_blocks, d, seed):
+    s = 64 * s_blocks
+    kq, kk, kv, kp = _keys(seed, 4)
+    q = _rand(kq, (b, h, d))
+    kc, vc = _rand(kk, (b, h, s, d)), _rand(kv, (b, h, s, d))
+    pos = jax.random.randint(kp, (b,), 0, s, jnp.int32)
+    out = A.decode_attention(q, kc, vc, pos)
+    ref = R.attention_decode(q, kc, vc, pos)
+    np.testing.assert_allclose(out, ref, atol=3e-5, rtol=3e-5)
+
+
+def test_decode_mask_excludes_dead_slots():
+    """Garbage beyond pos must never leak into the output."""
+    kq, kk, kv = _keys(3, 3)
+    b, h, s, d = 2, 2, 128, 16
+    q = _rand(kq, (b, h, d))
+    kc, vc = _rand(kk, (b, h, s, d)), _rand(kv, (b, h, s, d))
+    pos = jnp.array([10, 70], jnp.int32)
+    base = A.decode_attention(q, kc, vc, pos)
+    kc2 = kc.at[0, :, 11:, :].set(1e4).at[1, :, 71:, :].set(1e4)
+    vc2 = vc.at[0, :, 11:, :].set(-1e4).at[1, :, 71:, :].set(-1e4)
+    pert = A.decode_attention(q, kc2, vc2, pos)
+    np.testing.assert_allclose(base, pert, atol=1e-6)
+
+
+def test_decode_pos_zero():
+    """pos=0 attends to exactly one slot: output == v[0]."""
+    kq, kk, kv = _keys(4, 3)
+    b, h, s, d = 1, 2, 64, 8
+    q = _rand(kq, (b, h, d))
+    kc, vc = _rand(kk, (b, h, s, d)), _rand(kv, (b, h, s, d))
+    out = A.decode_attention(q, kc, vc, jnp.zeros((b,), jnp.int32))
+    np.testing.assert_allclose(out, vc[:, :, 0, :], atol=1e-5, rtol=1e-5)
+
+
+@given(block_kv=st.sampled_from([8, 16, 32, 64, 128]), seed=st.integers(0, 2**16))
+def test_decode_block_shape_invariance(block_kv, seed):
+    kq, kk, kv, kp = _keys(seed, 4)
+    b, h, s, d = 2, 2, 128, 16
+    q = _rand(kq, (b, h, d))
+    kc, vc = _rand(kk, (b, h, s, d)), _rand(kv, (b, h, s, d))
+    pos = jax.random.randint(kp, (b,), 0, s, jnp.int32)
+    out = A.decode_attention(q, kc, vc, pos, block_kv=block_kv)
+    ref = R.attention_decode(q, kc, vc, pos)
+    np.testing.assert_allclose(out, ref, atol=3e-5, rtol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU FFN
+# ---------------------------------------------------------------------------
+
+
+@given(
+    n_blocks=st.integers(1, 4),
+    dm=st.sampled_from([16, 32, 64]),
+    dff=st.sampled_from([32, 48, 176]),
+    seed=st.integers(0, 2**16),
+)
+def test_swiglu_matches_ref(n_blocks, dm, dff, seed):
+    n = 64 * n_blocks
+    kx, kg, ku, kd = _keys(seed, 4)
+    x = _rand(kx, (n, dm))
+    wg, wu = _rand(kg, (dm, dff), scale=0.3), _rand(ku, (dm, dff), scale=0.3)
+    wd = _rand(kd, (dff, dm), scale=0.3)
+    out = A.swiglu_ffn(x, wg, wu, wd)
+    ref = R.swiglu_ffn(x, wg, wu, wd)
+    np.testing.assert_allclose(out, ref, atol=1e-4, rtol=1e-4)
+
+
+def test_swiglu_small_batch_block():
+    """Rows smaller than the block (decode path, batch < 64)."""
+    kx, kg, ku, kd = _keys(5, 4)
+    x = _rand(kx, (4, 32))
+    wg, wu = _rand(kg, (32, 48), scale=0.3), _rand(ku, (32, 48), scale=0.3)
+    wd = _rand(kd, (48, 32), scale=0.3)
+    out = A.swiglu_ffn(x, wg, wu, wd, block_rows=4)
+    np.testing.assert_allclose(out, R.swiglu_ffn(x, wg, wu, wd), atol=1e-4, rtol=1e-4)
+
+
+def test_swiglu_zero_input_is_zero():
+    x = jnp.zeros((64, 16))
+    w = jnp.ones((16, 32)) * 0.1
+    wd = jnp.ones((32, 16)) * 0.1
+    out = A.swiglu_ffn(x, w, w, wd)
+    np.testing.assert_allclose(out, jnp.zeros((64, 16)), atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# kernels must lower inside jit (the AOT requirement)
+# ---------------------------------------------------------------------------
+
+
+def test_kernels_lower_under_jit():
+    kq, kk, kv = _keys(6, 3)
+    b, h, s, d = 1, 2, 64, 16
+    q, k, v = (_rand(x, (b, h, s, d)) for x in (kq, kk, kv))
+
+    @jax.jit
+    def fn(q, k, v):
+        return A.prefill_attention(q, k, v)
+
+    np.testing.assert_allclose(fn(q, k, v), R.attention_prefill(q, k, v), atol=3e-5, rtol=3e-5)

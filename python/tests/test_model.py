@@ -1,0 +1,149 @@
+"""L2 correctness: prefill/decode cache protocol vs the no-cache oracle.
+
+`full_forward` is built purely from ref.py math (no Pallas), so agreement
+between (prefill -> decode -> decode ...) and full_forward validates both
+the Pallas kernels in model context and the cache-slot protocol the rust
+engine relies on.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+settings.register_profile("model", deadline=None, max_examples=8)
+settings.load_profile("model")
+
+CFG = M.ModelConfig(
+    vocab=64, d_model=32, n_layers=2, n_heads=2, d_ff=48, max_seq=128, prefill_seq=64
+)
+PARAMS = M.init_params(CFG, seed=3)
+
+ATOL = 5e-4
+
+
+def _tokens(seed, b, s, vocab):
+    return jax.random.randint(jax.random.PRNGKey(seed), (b, s), 0, vocab, jnp.int32)
+
+
+@given(b=st.integers(1, 3), seed=st.integers(0, 2**16))
+def test_prefill_matches_full_forward(b, seed):
+    tokens = _tokens(seed, b, CFG.prefill_seq, CFG.vocab)
+    lens = jax.random.randint(
+        jax.random.fold_in(jax.random.PRNGKey(seed), 1), (b,), 1, CFG.prefill_seq + 1
+    ).astype(jnp.int32)
+    logits, kc, vc = M.prefill(CFG, PARAMS, tokens, lens)
+    full = M.full_forward(CFG, PARAMS, tokens)
+    for i in range(b):
+        np.testing.assert_allclose(
+            logits[i], full[i, int(lens[i]) - 1], atol=ATOL, rtol=ATOL
+        )
+
+
+def test_cache_shapes():
+    tokens = _tokens(0, 2, CFG.prefill_seq, CFG.vocab)
+    lens = jnp.full((2,), CFG.prefill_seq, jnp.int32)
+    logits, kc, vc = M.prefill(CFG, PARAMS, tokens, lens)
+    expect = (CFG.n_layers, 2, CFG.n_heads, CFG.max_seq, CFG.head_dim)
+    assert kc.shape == expect and vc.shape == expect
+    assert logits.shape == (2, CFG.vocab)
+    # Slots beyond prefill_seq must be zero (they are dead until written).
+    assert np.all(np.asarray(kc[:, :, :, CFG.prefill_seq :, :]) == 0.0)
+
+
+@given(seed=st.integers(0, 2**16), steps=st.integers(1, 4))
+def test_decode_chain_matches_full_forward(seed, steps):
+    """prefill + N greedy decode steps == full forward on the grown seq."""
+    b = 2
+    tokens = _tokens(seed, b, CFG.prefill_seq, CFG.vocab)
+    lens = jnp.array([CFG.prefill_seq // 2, CFG.prefill_seq], jnp.int32)
+    logits, kc, vc = M.prefill(CFG, PARAMS, tokens, lens)
+
+    grown = [np.asarray(tokens[i, : int(lens[i])]).tolist() for i in range(b)]
+    pos = lens
+    for _ in range(steps):
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        for i in range(b):
+            grown[i].append(int(nxt[i]))
+        logits, kc, vc = M.decode(CFG, PARAMS, nxt, pos, kc, vc)
+        pos = pos + 1
+
+    for i in range(b):
+        seq = jnp.array(grown[i], jnp.int32)[None, :]
+        full = M.full_forward(CFG, PARAMS, seq)
+        np.testing.assert_allclose(logits[i], full[0, -1], atol=ATOL, rtol=ATOL)
+
+
+def test_decode_batch_independence():
+    """Each batch lane must evolve independently (no cross-lane leaks)."""
+    tokens = _tokens(11, 2, CFG.prefill_seq, CFG.vocab)
+    lens = jnp.array([20, 40], jnp.int32)
+    logits2, kc2, vc2 = M.prefill(CFG, PARAMS, tokens, lens)
+    logits1, kc1, vc1 = M.prefill(
+        CFG, PARAMS, tokens[:1], lens[:1]
+    )
+    np.testing.assert_allclose(logits2[0], logits1[0], atol=ATOL, rtol=ATOL)
+
+    nxt2 = jnp.argmax(logits2, -1).astype(jnp.int32)
+    nxt1 = nxt2[:1]
+    d2, _, _ = M.decode(CFG, PARAMS, nxt2, lens, kc2, vc2)
+    d1, _, _ = M.decode(CFG, PARAMS, nxt1, lens[:1], kc1, vc1)
+    np.testing.assert_allclose(d2[0], d1[0], atol=ATOL, rtol=ATOL)
+
+
+def test_rope_position_sensitivity():
+    """Same token at different positions must produce different K."""
+    x = jnp.ones((1, 1, 2, 8), jnp.float32)
+    r0 = M._rope(x, jnp.array([[[0, 1]]], jnp.int32), 10000.0)
+    assert not np.allclose(r0[0, 0, 0], r0[0, 0, 1])
+
+
+def test_rope_norm_preservation():
+    """RoPE is a rotation: per-pair L2 norm is preserved."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (1, 1, 4, 16), jnp.float32)
+    pos = jnp.array([[[0, 3, 7, 100]]], jnp.int32)
+    r = M._rope(x, pos, 10000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(r), axis=-1),
+        atol=1e-4,
+        rtol=1e-4,
+    )
+
+
+def test_param_specs_order_stable():
+    """The AOT calling convention depends on this exact order."""
+    names = [n for n, _ in CFG.param_specs()]
+    assert names[0] == "embed"
+    assert names[-2:] == ["final_norm", "lm_head"]
+    assert names[1:10] == [
+        "layer0.attn_norm",
+        "layer0.wq",
+        "layer0.wk",
+        "layer0.wv",
+        "layer0.wo",
+        "layer0.ffn_norm",
+        "layer0.w_gate",
+        "layer0.w_up",
+        "layer0.w_down",
+    ]
+
+
+def test_init_params_deterministic():
+    p1 = M.init_params(CFG, seed=9)
+    p2 = M.init_params(CFG, seed=9)
+    for k in p1:
+        np.testing.assert_array_equal(p1[k], p2[k])
+    p3 = M.init_params(CFG, seed=10)
+    assert not np.allclose(p1["embed"], p3["embed"])
+
+
+def test_default_config_is_the_served_model():
+    cfg = M.ModelConfig()
+    assert cfg.head_dim * cfg.n_heads == cfg.d_model
+    assert cfg.prefill_seq <= cfg.max_seq
+    assert cfg.prefill_seq % 64 == 0  # tileable by the kernel defaults

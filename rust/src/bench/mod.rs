@@ -1,0 +1,86 @@
+//! Bench harness (offline substitute for `criterion`).
+//!
+//! Used by every `benches/*` target (all `harness = false`): warmup,
+//! timed iterations, mean / p50 / p99, and a one-line report compatible
+//! with eyeballing regressions. Also hosts `Table` for the figure benches
+//! that print paper-style rows rather than timings.
+
+use std::time::Instant;
+
+use crate::util::stats::percentile;
+
+/// Timing result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Timing {
+    pub name: String,
+    pub iters: usize,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+}
+
+impl Timing {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>8} iters  mean {:>10.1} us  p50 {:>10.1} us  p99 {:>10.1} us",
+            self.name, self.iters, self.mean_us, self.p50_us, self.p99_us
+        )
+    }
+}
+
+/// Time `f` with warmup; iteration count adapts so the run takes roughly
+/// `target_ms` total (bounded by `max_iters`).
+pub fn bench<F: FnMut()>(name: &str, target_ms: u64, max_iters: usize, mut f: F) -> Timing {
+    // Warmup + calibration.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((target_ms as f64 / 1000.0 / once) as usize)
+        .clamp(3, max_iters.max(3));
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e6);
+    }
+    Timing {
+        name: name.to_string(),
+        iters,
+        mean_us: samples.iter().sum::<f64>() / samples.len() as f64,
+        p50_us: percentile(&samples, 50.0),
+        p99_us: percentile(&samples, 99.0),
+    }
+}
+
+/// Throughput helper: events per second given a timing and batch size.
+pub fn per_second(t: &Timing, batch: usize) -> f64 {
+    batch as f64 / (t.mean_us / 1e6)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut acc = 0u64;
+        let t = bench("noop-ish", 10, 1000, || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(t.iters >= 3);
+        assert!(t.mean_us >= 0.0);
+        assert!(t.report().contains("noop-ish"));
+    }
+
+    #[test]
+    fn per_second_scales_with_batch() {
+        let t = Timing {
+            name: "x".into(),
+            iters: 1,
+            mean_us: 1000.0, // 1 ms
+            p50_us: 1000.0,
+            p99_us: 1000.0,
+        };
+        assert!((per_second(&t, 100) - 100_000.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,234 @@
+//! Declarative CLI argument parser (offline substitute for `clap`).
+//!
+//! Supports subcommands, `--flag value`, `--flag=value`, boolean flags,
+//! defaults, and generated `--help` text — the subset `rapid` needs.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown flag '--{0}' (see --help)")]
+    UnknownFlag(String),
+    #[error("flag '--{0}' needs a value")]
+    MissingValue(String),
+    #[error("invalid value for '--{flag}': {msg}")]
+    BadValue { flag: String, msg: String },
+    #[error("{0}")]
+    Usage(String),
+}
+
+/// One flag specification.
+#[derive(Debug, Clone)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// None = boolean flag (presence = true).
+    pub default: Option<&'static str>,
+    pub takes_value: bool,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    present: Vec<String>,
+    /// Positional arguments after flags.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.values.get(name) {
+            None => Ok(None),
+            Some(v) => v.parse::<T>().map(Some).map_err(|e| CliError::BadValue {
+                flag: name.to_string(),
+                msg: format!("{e}"),
+            }),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        Ok(self.get_parsed::<f64>(name)?.unwrap_or(default))
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        Ok(self.get_parsed::<u64>(name)?.unwrap_or(default))
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        Ok(self.get_parsed::<usize>(name)?.unwrap_or(default))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.present.iter().any(|p| p == name)
+    }
+}
+
+/// A subcommand with its flags.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub flags: Vec<FlagSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command {
+            name,
+            about,
+            flags: Vec::new(),
+        }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            default: None,
+            takes_value: false,
+        });
+        self
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            default: Some(default),
+            takes_value: true,
+        });
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut out = format!("rapid {} — {}\n\nflags:\n", self.name, self.about);
+        for f in &self.flags {
+            let default = f
+                .default
+                .map(|d| format!(" (default: {d})"))
+                .unwrap_or_default();
+            out.push_str(&format!("  --{:<22} {}{}\n", f.name, f.help, default));
+        }
+        out
+    }
+
+    /// Parse `argv` (after the subcommand name).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        // Seed defaults.
+        for f in &self.flags {
+            if let Some(d) = f.default {
+                args.values.insert(f.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(rest) = a.strip_prefix("--") {
+                let (name, inline) = match rest.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let Some(spec) = self.flags.iter().find(|f| f.name == name) else {
+                    return Err(CliError::UnknownFlag(name));
+                };
+                if spec.takes_value {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError::MissingValue(name.clone()))?
+                        }
+                    };
+                    args.values.insert(name, value);
+                } else {
+                    args.present.push(name);
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("sim", "run a simulation")
+            .opt("preset", "4p4d-600", "configuration preset")
+            .opt("qps", "1.5", "per-GPU request rate")
+            .opt("requests", "1200", "number of requests")
+            .flag("verbose", "chatty output")
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = cmd().parse(&argv(&["--qps", "2.0"])).unwrap();
+        assert_eq!(a.get("preset"), Some("4p4d-600"));
+        assert_eq!(a.f64_or("qps", 0.0).unwrap(), 2.0);
+        assert_eq!(a.usize_or("requests", 0).unwrap(), 1200);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax_and_bool_flags() {
+        let a = cmd().parse(&argv(&["--qps=0.75", "--verbose"])).unwrap();
+        assert_eq!(a.f64_or("qps", 0.0).unwrap(), 0.75);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(matches!(
+            cmd().parse(&argv(&["--nope"])),
+            Err(CliError::UnknownFlag(_))
+        ));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(matches!(
+            cmd().parse(&argv(&["--qps"])),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn bad_value_reports_flag() {
+        let a = cmd().parse(&argv(&["--qps", "fast"])).unwrap();
+        assert!(matches!(
+            a.f64_or("qps", 0.0),
+            Err(CliError::BadValue { .. })
+        ));
+    }
+
+    #[test]
+    fn positional_args_collected() {
+        let a = cmd().parse(&argv(&["out.csv", "--verbose"])).unwrap();
+        assert_eq!(a.positional, vec!["out.csv"]);
+    }
+
+    #[test]
+    fn help_text_lists_flags() {
+        let h = cmd().help_text();
+        assert!(h.contains("--preset"));
+        assert!(h.contains("default: 1200"));
+    }
+}

@@ -1,0 +1,9 @@
+//! Configuration system: TOML-subset parser + typed schema + presets.
+
+pub mod schema;
+pub mod toml;
+
+pub use schema::{
+    presets, BatchConfig, ClusterConfig, ConfigError, ControlPolicy, ControllerConfig,
+    PerfModelConfig, Topology,
+};

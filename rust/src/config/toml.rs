@@ -1,0 +1,354 @@
+//! TOML-subset parser (offline substitute for the `toml` crate).
+//!
+//! Supports the grammar the config system uses: `[section]` and
+//! `[section.sub]` tables, `key = value` with string / integer / float /
+//! boolean / homogeneous-array values, comments, and bare or quoted keys.
+//! Not supported (by design): multi-line strings, inline tables, dates,
+//! array-of-tables.
+
+use std::collections::BTreeMap;
+
+/// A parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    /// Numeric coercion: integers read as floats too.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Flat document: dotted-path -> value (`power.budget_w = 4800`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Document {
+    pub entries: BTreeMap<String, Value>,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error on line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl Document {
+    pub fn parse(text: &str) -> Result<Document, TomlError> {
+        let mut doc = Document::default();
+        let mut prefix = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: &str| TomlError {
+                line: lineno + 1,
+                msg: msg.to_string(),
+            };
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| err("unterminated table header"))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(err("empty table name"));
+                }
+                prefix = name.to_string();
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| err("expected key = value"))?;
+            let key = unquote(line[..eq].trim()).map_err(|m| err(&m))?;
+            if key.is_empty() {
+                return Err(err("empty key"));
+            }
+            let value = parse_value(line[eq + 1..].trim()).map_err(|m| err(&m))?;
+            let path = if prefix.is_empty() {
+                key
+            } else {
+                format!("{prefix}.{key}")
+            };
+            if doc.entries.insert(path.clone(), value).is_some() {
+                return Err(err(&format!("duplicate key '{path}'")));
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        self.entries.get(path)
+    }
+
+    pub fn get_str(&self, path: &str) -> Option<&str> {
+        self.get(path).and_then(Value::as_str)
+    }
+
+    pub fn get_i64(&self, path: &str) -> Option<i64> {
+        self.get(path).and_then(Value::as_i64)
+    }
+
+    pub fn get_f64(&self, path: &str) -> Option<f64> {
+        self.get(path).and_then(Value::as_f64)
+    }
+
+    pub fn get_bool(&self, path: &str) -> Option<bool> {
+        self.get(path).and_then(Value::as_bool)
+    }
+
+    /// All keys under a section prefix (for unknown-key validation).
+    pub fn keys_under<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = &'a str> + 'a {
+        self.entries.keys().filter_map(move |k| {
+            k.strip_prefix(prefix)
+                .and_then(|rest| rest.strip_prefix('.'))
+                .map(|_| k.as_str())
+        })
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside quoted strings must not start a comment.
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '\\' if in_str => {
+                escaped = !escaped;
+                continue;
+            }
+            '"' if !escaped => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+        escaped = false;
+    }
+    line
+}
+
+fn unquote(key: &str) -> Result<String, String> {
+    if let Some(inner) = key.strip_prefix('"') {
+        inner
+            .strip_suffix('"')
+            .map(|s| s.to_string())
+            .ok_or_else(|| "unterminated quoted key".to_string())
+    } else if key
+        .chars()
+        .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-' || c == '.')
+    {
+        Ok(key.to_string())
+    } else {
+        Err(format!("invalid bare key '{key}'"))
+    }
+}
+
+fn parse_value(text: &str) -> Result<Value, String> {
+    let text = text.trim();
+    if text.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = text.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return Ok(Value::Str(unescape(inner)?));
+    }
+    if text == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if text == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = text.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(Vec::new()));
+        }
+        let items = split_top_level(inner)
+            .into_iter()
+            .map(|s| parse_value(s.trim()))
+            .collect::<Result<Vec<_>, _>>()?;
+        return Ok(Value::Array(items));
+    }
+    let clean = text.replace('_', "");
+    if !text.contains('.') && !text.contains('e') && !text.contains('E') {
+        if let Ok(i) = clean.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value '{text}'"))
+}
+
+fn unescape(s: &str) -> Result<String, String> {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('n') => out.push('\n'),
+            Some('t') => out.push('\t'),
+            Some('r') => out.push('\r'),
+            Some('"') => out.push('"'),
+            Some('\\') => out.push('\\'),
+            other => return Err(format!("bad escape '\\{:?}'", other)),
+        }
+    }
+    Ok(out)
+}
+
+/// Split an array body on commas that are not inside strings or brackets.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = Document::parse(
+            r#"
+# top comment
+name = "rapid"   # trailing comment
+[power]
+budget_w = 4800
+per_gpu_max = 750.0
+capped = true
+[power.ramp]
+settle_ms = 300
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("name"), Some("rapid"));
+        assert_eq!(doc.get_i64("power.budget_w"), Some(4800));
+        assert_eq!(doc.get_f64("power.per_gpu_max"), Some(750.0));
+        assert_eq!(doc.get_bool("power.capped"), Some(true));
+        assert_eq!(doc.get_i64("power.ramp.settle_ms"), Some(300));
+    }
+
+    #[test]
+    fn int_coerces_to_f64() {
+        let doc = Document::parse("x = 5").unwrap();
+        assert_eq!(doc.get_f64("x"), Some(5.0));
+        assert_eq!(doc.get_i64("x"), Some(5));
+    }
+
+    #[test]
+    fn arrays() {
+        let doc = Document::parse(r#"caps = [750, 750, 450.5, 450]"#).unwrap();
+        let a = doc.get("caps").unwrap().as_array().unwrap();
+        assert_eq!(a.len(), 4);
+        assert_eq!(a[0].as_f64(), Some(750.0));
+        assert_eq!(a[2].as_f64(), Some(450.5));
+    }
+
+    #[test]
+    fn nested_arrays_and_strings_with_commas() {
+        let doc = Document::parse(r#"x = [[1, 2], [3, 4]]"#).unwrap();
+        let outer = doc.get("x").unwrap().as_array().unwrap();
+        assert_eq!(outer.len(), 2);
+        let doc2 = Document::parse(r#"s = ["a,b", "c#d"]"#).unwrap();
+        let a = doc2.get("s").unwrap().as_array().unwrap();
+        assert_eq!(a[0].as_str(), Some("a,b"));
+        assert_eq!(a[1].as_str(), Some("c#d"));
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let doc = Document::parse(r##"tag = "a#b""##).unwrap();
+        assert_eq!(doc.get_str("tag"), Some("a#b"));
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let doc = Document::parse("n = 1_000_000").unwrap();
+        assert_eq!(doc.get_i64("n"), Some(1_000_000));
+    }
+
+    #[test]
+    fn escapes_in_strings() {
+        let doc = Document::parse(r#"s = "line\nbreak\t\"q\"""#).unwrap();
+        assert_eq!(doc.get_str("s"), Some("line\nbreak\t\"q\""));
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        let err = Document::parse("a = 1\na = 2").unwrap_err();
+        assert!(err.to_string().contains("duplicate"));
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn bad_syntax_reports_line() {
+        let err = Document::parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(err.line, 2);
+        assert!(Document::parse("[unclosed").is_err());
+        assert!(Document::parse("x = ").is_err());
+        assert!(Document::parse(r#"x = "unterminated"#).is_err());
+    }
+
+    #[test]
+    fn keys_under_prefix() {
+        let doc = Document::parse("[a]\nx = 1\ny = 2\n[b]\nz = 3").unwrap();
+        let keys: Vec<&str> = doc.keys_under("a").collect();
+        assert_eq!(keys, vec!["a.x", "a.y"]);
+    }
+}

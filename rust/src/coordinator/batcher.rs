@@ -1,0 +1,202 @@
+//! Local per-GPU batching (paper §3.2: "Each worker process has a local
+//! scheduler that batches requests based on the GPU's memory capacity").
+//!
+//! * Prefill: FIFO batch formation under a token budget and a request cap
+//!   (vLLM-style: never reorder, fill until a limit trips).
+//! * Decode: continuous batching — admissions happen at step boundaries
+//!   up to the memory-capacity slot limit.
+//! * Coalesced: chunked prefill — one token-budgeted chunk of the head
+//!   prompt per iteration, co-scheduled with the resident decode batch.
+
+use std::collections::VecDeque;
+
+use crate::config::BatchConfig;
+use crate::types::Request;
+
+/// A formed prefill batch.
+#[derive(Debug, Clone, Default)]
+pub struct PrefillBatch {
+    pub requests: Vec<Request>,
+    pub total_tokens: u32,
+}
+
+/// Pop a FIFO prefill batch respecting the token and request budgets.
+/// Always admits at least one request (a single over-budget prompt must
+/// not deadlock the queue).
+pub fn form_prefill_batch(queue: &mut VecDeque<Request>, cfg: &BatchConfig) -> PrefillBatch {
+    let mut batch = PrefillBatch::default();
+    while let Some(front) = queue.front() {
+        let would_be = batch.total_tokens + front.input_tokens;
+        let fits = batch.requests.is_empty()
+            || (would_be <= cfg.max_prefill_tokens
+                && batch.requests.len() < cfg.max_prefill_reqs);
+        if !fits {
+            break;
+        }
+        let r = queue.pop_front().unwrap();
+        batch.total_tokens += r.input_tokens;
+        batch.requests.push(r);
+    }
+    batch
+}
+
+/// Decode admission: how many pending requests may join given the current
+/// resident count and the slot limit.
+pub fn decode_admissions(resident: usize, pending: usize, cfg: &BatchConfig) -> usize {
+    cfg.max_decode_reqs.saturating_sub(resident).min(pending)
+}
+
+/// Chunked-prefill scheduling state for one prompt on a coalesced GPU.
+#[derive(Debug, Clone)]
+pub struct ChunkProgress {
+    pub request: Request,
+    pub done_tokens: u32,
+}
+
+impl ChunkProgress {
+    pub fn new(request: Request) -> Self {
+        ChunkProgress {
+            request,
+            done_tokens: 0,
+        }
+    }
+
+    pub fn remaining(&self) -> u32 {
+        self.request.input_tokens - self.done_tokens
+    }
+
+    /// Advance by up to `budget` tokens; returns tokens consumed.
+    pub fn advance(&mut self, budget: u32) -> u32 {
+        let step = self.remaining().min(budget);
+        self.done_tokens += step;
+        step
+    }
+
+    pub fn complete(&self) -> bool {
+        self.done_tokens >= self.request.input_tokens
+    }
+}
+
+/// Take the next chunk across queued prompts (head-first, spilling into
+/// later prompts if the head finishes inside the budget — Sarathi packs
+/// chunks to the budget).
+pub fn take_chunk(queue: &mut VecDeque<ChunkProgress>, budget: u32) -> (u32, Vec<Request>) {
+    let mut used = 0u32;
+    let mut finished = Vec::new();
+    while used < budget {
+        let Some(head) = queue.front_mut() else { break };
+        used += head.advance(budget - used);
+        if head.complete() {
+            finished.push(queue.pop_front().unwrap().request);
+        } else {
+            break;
+        }
+    }
+    (used, finished)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{RequestId, Slo};
+
+    fn req(id: u64, tokens: u32) -> Request {
+        Request {
+            id: RequestId(id),
+            arrival: 0,
+            input_tokens: tokens,
+            output_tokens: 16,
+            slo: Slo::paper_default(),
+        }
+    }
+
+    fn cfg() -> BatchConfig {
+        BatchConfig {
+            max_prefill_tokens: 4096,
+            max_prefill_reqs: 4,
+            max_decode_reqs: 8,
+            ring_slots: 32,
+        }
+    }
+
+    #[test]
+    fn prefill_batch_respects_token_budget() {
+        let mut q: VecDeque<Request> =
+            vec![req(0, 2000), req(1, 1500), req(2, 1500)].into();
+        let b = form_prefill_batch(&mut q, &cfg());
+        assert_eq!(b.requests.len(), 2);
+        assert_eq!(b.total_tokens, 3500);
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn prefill_batch_respects_request_cap() {
+        let mut q: VecDeque<Request> = (0..10).map(|i| req(i, 10)).collect();
+        let b = form_prefill_batch(&mut q, &cfg());
+        assert_eq!(b.requests.len(), 4);
+        assert_eq!(q.len(), 6);
+    }
+
+    #[test]
+    fn oversized_prompt_still_admitted_alone() {
+        let mut q: VecDeque<Request> = vec![req(0, 9999), req(1, 100)].into();
+        let b = form_prefill_batch(&mut q, &cfg());
+        assert_eq!(b.requests.len(), 1);
+        assert_eq!(b.total_tokens, 9999);
+    }
+
+    #[test]
+    fn fifo_order_never_reordered() {
+        let mut q: VecDeque<Request> = vec![req(5, 100), req(3, 100), req(9, 100)].into();
+        let b = form_prefill_batch(&mut q, &cfg());
+        let ids: Vec<u64> = b.requests.iter().map(|r| r.id.0).collect();
+        assert_eq!(ids, vec![5, 3, 9]);
+    }
+
+    #[test]
+    fn empty_queue_empty_batch() {
+        let mut q = VecDeque::new();
+        let b = form_prefill_batch(&mut q, &cfg());
+        assert!(b.requests.is_empty());
+        assert_eq!(b.total_tokens, 0);
+    }
+
+    #[test]
+    fn decode_admissions_respect_capacity() {
+        let c = cfg();
+        assert_eq!(decode_admissions(0, 100, &c), 8);
+        assert_eq!(decode_admissions(6, 100, &c), 2);
+        assert_eq!(decode_admissions(8, 100, &c), 0);
+        assert_eq!(decode_admissions(2, 1, &c), 1);
+    }
+
+    #[test]
+    fn chunk_progress_advances_and_completes() {
+        let mut p = ChunkProgress::new(req(0, 5000));
+        assert_eq!(p.advance(2048), 2048);
+        assert_eq!(p.advance(2048), 2048);
+        assert!(!p.complete());
+        assert_eq!(p.advance(2048), 904);
+        assert!(p.complete());
+    }
+
+    #[test]
+    fn take_chunk_packs_across_prompts() {
+        let mut q: VecDeque<ChunkProgress> =
+            vec![ChunkProgress::new(req(0, 1000)), ChunkProgress::new(req(1, 5000))].into();
+        let (used, finished) = take_chunk(&mut q, 2048);
+        assert_eq!(used, 2048);
+        assert_eq!(finished.len(), 1);
+        assert_eq!(finished[0].id.0, 0);
+        // Head of queue is now request 1 with 1048 tokens done.
+        assert_eq!(q.front().unwrap().done_tokens, 1048);
+    }
+
+    #[test]
+    fn take_chunk_empty_queue() {
+        let mut q = VecDeque::new();
+        let (used, finished) = take_chunk(&mut q, 2048);
+        assert_eq!(used, 0);
+        assert!(finished.is_empty());
+    }
+}

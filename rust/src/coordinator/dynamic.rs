@@ -1,0 +1,345 @@
+//! Algorithm 1 — the reactive dynamic resource scheduler (paper §3.3).
+//!
+//! Fully observation-driven: no latency prediction, no offline profiling.
+//! The controller watches recent TTFT/TPOT (normalized to each request's
+//! SLO so mixed-SLO traces work), live queue pressure, and the power
+//! manager's headroom, and emits one action per decision:
+//!
+//! ```text
+//! if TTFT > SLO and |Q_P| > THRESHOLD and TPOT < SLO and cooled_down:
+//!     MovePower(Decode -> Prefill)
+//!     if power limits reached: MoveGpu(Decode -> Prefill); uniform caps
+//! elif TPOT > SLO and TTFT < SLO and cooled_down:
+//!     MovePower(Prefill -> Decode)
+//!     if power limits reached: MoveGpu(Prefill -> Decode); uniform caps
+//! ```
+//!
+//! Queue buildup is treated as an early stress indicator (pre-SLO-violation
+//! trigger), and a cooldown between decisions provides hysteresis against
+//! oscillation — both directly from the paper.
+
+use crate::config::{ControlPolicy, ControllerConfig};
+use crate::types::{Micros, Role};
+use crate::util::stats::SlidingWindow;
+
+/// What the controller asked for this tick (Fig 9's decision log).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Action {
+    /// Shift cap watts from the source role's pool to the other pool.
+    MovePower { from: Role },
+    /// Reassign one GPU from `from` to the other role, then distribute
+    /// uniform power (paper line 14).
+    MoveGpu { from: Role },
+}
+
+/// Live cluster signals the controller reads each tick.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub now: Micros,
+    /// Total queued prefill requests (|Q_P|).
+    pub prefill_queue: usize,
+    /// Total queued-but-not-resident decode requests (|Q_D|).
+    pub decode_queue: usize,
+    pub prefill_gpus: usize,
+    pub decode_gpus: usize,
+    /// True if every prefill GPU cap is at max (or budget headroom is 0)
+    /// so MovePower(Decode->Prefill) cannot help further.
+    pub prefill_power_saturated: bool,
+    /// Symmetric condition for the decode direction.
+    pub decode_power_saturated: bool,
+}
+
+/// The controller: windows of SLO-normalized latency ratios + Algorithm 1.
+#[derive(Debug)]
+pub struct Controller {
+    cfg: ControllerConfig,
+    policy: ControlPolicy,
+    /// TTFT samples as latency/slo ratios (>1 means violation).
+    ttft: SlidingWindow,
+    /// TPOT samples as latency/slo ratios.
+    tpot: SlidingWindow,
+    last_move: Option<Micros>,
+    last_gpu_move: Option<Micros>,
+}
+
+impl Controller {
+    pub fn new(cfg: ControllerConfig, policy: ControlPolicy) -> Self {
+        Controller {
+            ttft: SlidingWindow::new(cfg.metric_window),
+            tpot: SlidingWindow::new(cfg.metric_window),
+            cfg,
+            policy,
+            last_move: None,
+            last_gpu_move: None,
+        }
+    }
+
+    pub fn cfg(&self) -> &ControllerConfig {
+        &self.cfg
+    }
+
+    /// Record a completed-or-projected TTFT observation (ratio to its SLO).
+    pub fn observe_ttft(&mut self, now: Micros, ratio: f64) {
+        self.ttft.push(now, ratio);
+    }
+
+    /// Record a decode step's per-token latency ratio to the SLO.
+    pub fn observe_tpot(&mut self, now: Micros, ratio: f64) {
+        self.tpot.push(now, ratio);
+    }
+
+    fn cooled_down(&self, now: Micros) -> bool {
+        self.last_move
+            .map_or(true, |t| now.saturating_sub(t) >= self.cfg.cooldown)
+    }
+
+    /// Role moves are costlier (drain + reload), so they get extra spacing.
+    fn gpu_cooled_down(&self, now: Micros) -> bool {
+        self.last_gpu_move
+            .map_or(true, |t| now.saturating_sub(t) >= self.cfg.gpu_cooldown)
+    }
+
+    /// Time of the last reallocation decision (tests / traces).
+    pub fn last_move(&self) -> Option<Micros> {
+        self.last_move
+    }
+
+    /// Algorithm 1, one tick. Returns at most one action; the engine
+    /// executes it (the controller stays side-effect free).
+    pub fn decide(&mut self, snap: &Snapshot) -> Option<Action> {
+        if !self.policy.is_dynamic() || !self.cooled_down(snap.now) {
+            return None;
+        }
+        // "pXX ratio > 1.0" == "more than (100-XX)% of samples violate":
+        // counted in O(n) instead of sorting the window (hot path).
+        let viol_frac = (100.0 - self.cfg.trigger_percentile) / 100.0;
+        let ttft_hot = self
+            .ttft
+            .frac_above(snap.now, 1.0)
+            .map_or(false, |f| f > viol_frac);
+        let tpot_hot = self
+            .tpot
+            .frac_above(snap.now, 1.0)
+            .map_or(false, |f| f > viol_frac);
+
+        let prefill_pressured =
+            ttft_hot && snap.prefill_queue > self.cfg.queue_threshold && !tpot_hot;
+        let decode_pressured = tpot_hot && !ttft_hot;
+
+        let action = if prefill_pressured {
+            self.escalate(snap.now, Role::Decode, snap.prefill_power_saturated, snap.decode_gpus)
+        } else if decode_pressured {
+            self.escalate(snap.now, Role::Prefill, snap.decode_power_saturated, snap.prefill_gpus)
+        } else {
+            None
+        };
+        if action.is_some() {
+            self.last_move = Some(snap.now);
+        }
+        if let Some(Action::MoveGpu { .. }) = action {
+            self.last_gpu_move = Some(snap.now);
+        }
+        action
+    }
+
+    /// Power first; GPU reallocation when power is exhausted (line 12/19).
+    /// `from` is the donor role; `donor_gpus` its current pool size (the
+    /// paper guarantees >= 1 GPU per phase).
+    fn escalate(
+        &self,
+        now: Micros,
+        from: Role,
+        power_saturated: bool,
+        donor_gpus: usize,
+    ) -> Option<Action> {
+        let can_power = self.policy.moves_power() && !power_saturated;
+        if can_power {
+            return Some(Action::MovePower { from });
+        }
+        if self.policy.moves_gpus() && donor_gpus > 1 && self.gpu_cooled_down(now) {
+            return Some(Action::MoveGpu { from });
+        }
+        // DynPower-only with saturated power: nothing to do.
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::SECOND;
+
+    fn snap(now: Micros) -> Snapshot {
+        Snapshot {
+            now,
+            prefill_queue: 0,
+            decode_queue: 0,
+            prefill_gpus: 4,
+            decode_gpus: 4,
+            prefill_power_saturated: false,
+            decode_power_saturated: false,
+        }
+    }
+
+    fn controller(policy: ControlPolicy) -> Controller {
+        Controller::new(ControllerConfig::default(), policy)
+    }
+
+    fn pressure_prefill(c: &mut Controller, now: Micros) {
+        for i in 0..10 {
+            c.observe_ttft(now - i, 1.6); // violating
+            c.observe_tpot(now - i, 0.4); // healthy
+        }
+    }
+
+    fn pressure_decode(c: &mut Controller, now: Micros) {
+        for i in 0..10 {
+            c.observe_ttft(now - i, 0.3);
+            c.observe_tpot(now - i, 1.5);
+        }
+    }
+
+    #[test]
+    fn prefill_pressure_moves_power_from_decode() {
+        let mut c = controller(ControlPolicy::DynPowerGpu);
+        let now = 10 * SECOND;
+        pressure_prefill(&mut c, now);
+        let mut s = snap(now);
+        s.prefill_queue = 20;
+        assert_eq!(c.decide(&s), Some(Action::MovePower { from: Role::Decode }));
+    }
+
+    #[test]
+    fn queue_threshold_gates_prefill_trigger() {
+        // Paper line 8: TTFT violation alone is not enough — the queue
+        // must show structural backlog.
+        let mut c = controller(ControlPolicy::DynPowerGpu);
+        let now = 10 * SECOND;
+        pressure_prefill(&mut c, now);
+        let mut s = snap(now);
+        s.prefill_queue = 2; // below THRESHOLD
+        assert_eq!(c.decide(&s), None);
+    }
+
+    #[test]
+    fn decode_pressure_moves_power_from_prefill() {
+        let mut c = controller(ControlPolicy::DynPowerGpu);
+        let now = 10 * SECOND;
+        pressure_decode(&mut c, now);
+        assert_eq!(
+            c.decide(&snap(now)),
+            Some(Action::MovePower { from: Role::Prefill })
+        );
+    }
+
+    #[test]
+    fn both_violated_no_action() {
+        // TTFT high AND TPOT high: neither branch fires (no donor).
+        let mut c = controller(ControlPolicy::DynPowerGpu);
+        let now = 10 * SECOND;
+        for i in 0..10 {
+            c.observe_ttft(now - i, 1.5);
+            c.observe_tpot(now - i, 1.5);
+        }
+        let mut s = snap(now);
+        s.prefill_queue = 50;
+        assert_eq!(c.decide(&s), None);
+    }
+
+    #[test]
+    fn escalates_to_gpu_move_when_power_saturated() {
+        let mut c = controller(ControlPolicy::DynPowerGpu);
+        let now = 10 * SECOND;
+        pressure_prefill(&mut c, now);
+        let mut s = snap(now);
+        s.prefill_queue = 20;
+        s.prefill_power_saturated = true;
+        assert_eq!(c.decide(&s), Some(Action::MoveGpu { from: Role::Decode }));
+    }
+
+    #[test]
+    fn gpu_move_respects_min_one_per_phase() {
+        let mut c = controller(ControlPolicy::DynPowerGpu);
+        let now = 10 * SECOND;
+        pressure_prefill(&mut c, now);
+        let mut s = snap(now);
+        s.prefill_queue = 20;
+        s.prefill_power_saturated = true;
+        s.decode_gpus = 1; // last decode GPU: must not be taken
+        assert_eq!(c.decide(&s), None);
+    }
+
+    #[test]
+    fn cooldown_blocks_consecutive_moves() {
+        let mut c = controller(ControlPolicy::DynPowerGpu);
+        let now = 10 * SECOND;
+        pressure_prefill(&mut c, now);
+        let mut s = snap(now);
+        s.prefill_queue = 20;
+        assert!(c.decide(&s).is_some());
+        // Immediately after: blocked.
+        pressure_prefill(&mut c, now + 1);
+        s.now = now + 1;
+        assert_eq!(c.decide(&s), None);
+        // After cooldown: allowed again.
+        let later = now + ControllerConfig::default().cooldown;
+        pressure_prefill(&mut c, later);
+        s.now = later;
+        assert!(c.decide(&s).is_some());
+    }
+
+    #[test]
+    fn static_policy_never_acts() {
+        let mut c = controller(ControlPolicy::Static);
+        let now = 10 * SECOND;
+        pressure_prefill(&mut c, now);
+        let mut s = snap(now);
+        s.prefill_queue = 100;
+        assert_eq!(c.decide(&s), None);
+    }
+
+    #[test]
+    fn dyn_power_only_never_moves_gpus() {
+        let mut c = controller(ControlPolicy::DynPower);
+        let now = 10 * SECOND;
+        pressure_prefill(&mut c, now);
+        let mut s = snap(now);
+        s.prefill_queue = 20;
+        s.prefill_power_saturated = true;
+        assert_eq!(c.decide(&s), None, "DynPower must not escalate to MoveGpu");
+    }
+
+    #[test]
+    fn dyn_gpu_only_goes_straight_to_gpu_move() {
+        let mut c = controller(ControlPolicy::DynGpu);
+        let now = 10 * SECOND;
+        pressure_prefill(&mut c, now);
+        let mut s = snap(now);
+        s.prefill_queue = 20;
+        // power not saturated, but DynGpu cannot move power
+        assert_eq!(c.decide(&s), Some(Action::MoveGpu { from: Role::Decode }));
+    }
+
+    #[test]
+    fn healthy_metrics_no_action() {
+        let mut c = controller(ControlPolicy::DynPowerGpu);
+        let now = 10 * SECOND;
+        for i in 0..10 {
+            c.observe_ttft(now - i, 0.5);
+            c.observe_tpot(now - i, 0.5);
+        }
+        let mut s = snap(now);
+        s.prefill_queue = 100; // queue alone is not a trigger
+        assert_eq!(c.decide(&s), None);
+    }
+
+    #[test]
+    fn stale_window_means_no_signal() {
+        let mut c = controller(ControlPolicy::DynPowerGpu);
+        pressure_prefill(&mut c, SECOND);
+        // 20 s later the samples have aged out; no action.
+        let mut s = snap(21 * SECOND);
+        s.prefill_queue = 50;
+        assert_eq!(c.decide(&s), None);
+    }
+}

@@ -1,0 +1,16 @@
+//! The L3 coordination layer — the paper's system contribution.
+//!
+//! * [`router`] — central request routing across worker pools;
+//! * [`batcher`] — per-GPU local scheduling (prefill batches, continuous
+//!   decode batching, chunked prefill for the coalesced baseline);
+//! * [`dynamic`] — Algorithm 1, the reactive power/GPU reallocation
+//!   controller.
+//!
+//! The same policy code drives both the discrete-event simulator
+//! ([`crate::sim`]) and the real PJRT serving path ([`crate::server`]).
+
+pub mod batcher;
+pub mod dynamic;
+pub mod router;
+
+pub use dynamic::{Action, Controller, Snapshot};

@@ -1,0 +1,87 @@
+//! Central request router (paper §3.2).
+//!
+//! "A central scheduler process receives incoming requests, routes them
+//! to a specific worker, and coordinates inter-stage communication."
+//! Routing is least-loaded: prefill by queued prompt tokens (prompt cost
+//! is token-proportional), decode by active+pending request count
+//! (decode cost is batch-slot-proportional).
+
+use crate::types::GpuId;
+
+/// Load summary of one candidate worker, as the router sees it.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerLoad {
+    pub gpu: GpuId,
+    /// Queued prompt tokens (prefill) — the unit of prefill backlog.
+    pub queued_tokens: u64,
+    /// Queued + active requests — the unit of decode occupancy.
+    pub requests: usize,
+    /// Workers mid-drain are not eligible.
+    pub accepting: bool,
+}
+
+/// Pick the prefill worker with the least queued prompt tokens.
+pub fn pick_prefill(loads: &[WorkerLoad]) -> Option<GpuId> {
+    loads
+        .iter()
+        .filter(|l| l.accepting)
+        .min_by_key(|l| (l.queued_tokens, l.requests, l.gpu.0))
+        .map(|l| l.gpu)
+}
+
+/// Pick the decode worker with the fewest resident requests.
+pub fn pick_decode(loads: &[WorkerLoad]) -> Option<GpuId> {
+    loads
+        .iter()
+        .filter(|l| l.accepting)
+        .min_by_key(|l| (l.requests, l.queued_tokens, l.gpu.0))
+        .map(|l| l.gpu)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn load(gpu: usize, tokens: u64, reqs: usize, accepting: bool) -> WorkerLoad {
+        WorkerLoad {
+            gpu: GpuId(gpu),
+            queued_tokens: tokens,
+            requests: reqs,
+            accepting,
+        }
+    }
+
+    #[test]
+    fn prefill_prefers_fewest_tokens() {
+        let loads = [load(0, 5000, 1, true), load(1, 200, 9, true), load(2, 3000, 0, true)];
+        assert_eq!(pick_prefill(&loads), Some(GpuId(1)));
+    }
+
+    #[test]
+    fn decode_prefers_fewest_requests() {
+        let loads = [load(0, 0, 7, true), load(1, 0, 2, true), load(2, 0, 4, true)];
+        assert_eq!(pick_decode(&loads), Some(GpuId(1)));
+    }
+
+    #[test]
+    fn draining_workers_skipped() {
+        let loads = [load(0, 0, 0, false), load(1, 9000, 30, true)];
+        assert_eq!(pick_prefill(&loads), Some(GpuId(1)));
+        assert_eq!(pick_decode(&loads), Some(GpuId(1)));
+        let none = [load(0, 0, 0, false)];
+        assert_eq!(pick_prefill(&none), None);
+    }
+
+    #[test]
+    fn ties_break_by_gpu_id_for_determinism() {
+        let loads = [load(2, 100, 1, true), load(0, 100, 1, true), load(1, 100, 1, true)];
+        assert_eq!(pick_prefill(&loads), Some(GpuId(0)));
+        assert_eq!(pick_decode(&loads), Some(GpuId(0)));
+    }
+
+    #[test]
+    fn empty_pool_is_none() {
+        assert_eq!(pick_prefill(&[]), None);
+        assert_eq!(pick_decode(&[]), None);
+    }
+}

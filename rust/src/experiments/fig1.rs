@@ -1,0 +1,99 @@
+//! Fig 1: goodput vs QPS/GPU for 4P4D-600W, 5P3D-600W and the RAPID
+//! non-uniform 4P-750W/4D-450W, all inside the 4800 W node budget
+//! (LongBench, TTFT = 1 s / TPOT = 40 ms). The RAPID curve should
+//! dominate, especially at high request rates.
+
+use crate::config::{presets, ClusterConfig};
+use crate::experiments::{rate_sweep, RatePoint, ShapeCheck};
+use crate::types::Slo;
+
+pub struct Fig1 {
+    pub curves: Vec<(ClusterConfig, Vec<RatePoint>)>,
+}
+
+pub const RATES: &[f64] = &[0.25, 0.5, 0.75, 1.0, 1.25, 1.5, 1.75, 2.0];
+
+pub fn run(seed: u64, n: usize) -> Fig1 {
+    let configs = vec![
+        presets::p4d4(600.0),
+        presets::p5d3_600(),
+        presets::p4_750_d4_450(), // "[4P4D]-RAPID" in the figure
+    ];
+    Fig1 {
+        curves: configs
+            .into_iter()
+            .map(|cfg| {
+                let pts = rate_sweep(&cfg, RATES, seed, n, Slo::paper_default());
+                (cfg, pts)
+            })
+            .collect(),
+    }
+}
+
+impl Fig1 {
+    fn curve(&self, name: &str) -> &[RatePoint] {
+        &self
+            .curves
+            .iter()
+            .find(|(c, _)| c.name == name)
+            .expect("curve")
+            .1
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::from(
+            "Goodput (attained QPS, node total) vs QPS/GPU — 4800 W budget, LongBench\n",
+        );
+        out.push_str(&format!("{:<18}", "QPS/GPU"));
+        for r in RATES {
+            out.push_str(&format!("{r:>7.2}"));
+        }
+        out.push('\n');
+        for (cfg, pts) in &self.curves {
+            out.push_str(&format!("{:<18}", cfg.name));
+            for p in pts {
+                out.push_str(&format!("{:>7.2}", p.goodput_qps));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn checks(&self) -> Vec<ShapeCheck> {
+        let rapid = self.curve("4P-750W/4D-450W");
+        let p4d4 = self.curve("4P4D-600W");
+        let p5d3 = self.curve("5P3D-600W");
+        // At high rate (>= 1.5 QPS/GPU) RAPID must dominate both.
+        let hi = |pts: &[RatePoint]| {
+            pts.iter()
+                .filter(|p| p.qps_per_gpu >= 1.5)
+                .map(|p| p.goodput_qps)
+                .sum::<f64>()
+        };
+        let (g_rapid, g_44, g_53) = (hi(rapid), hi(p4d4), hi(p5d3));
+        // Peak goodput across the sweep.
+        let peak = |pts: &[RatePoint]| pts.iter().map(|p| p.goodput_qps).fold(0.0, f64::max);
+        vec![
+            ShapeCheck::new(
+                "RAPID non-uniform power wins at high QPS (Fig 1)",
+                g_rapid > g_44 && g_rapid > g_53,
+                format!("sum-goodput@>=1.5: rapid={g_rapid:.1} 4p4d={g_44:.1} 5p3d={g_53:.1}"),
+            ),
+            ShapeCheck::new(
+                "5P3D improves on uniform 4P4D-600W but not on RAPID",
+                g_53 >= g_44 * 0.95 && g_53 <= g_rapid,
+                format!("{g_53:.1} in [{:.1}, {g_rapid:.1}]", g_44 * 0.95),
+            ),
+            ShapeCheck::new(
+                "RAPID peak goodput at least ties the best (within 5%)",
+                peak(rapid) >= 0.95 * peak(p4d4).max(peak(p5d3)),
+                format!(
+                    "peaks: rapid={:.1} 4p4d={:.1} 5p3d={:.1}",
+                    peak(rapid),
+                    peak(p4d4),
+                    peak(p5d3)
+                ),
+            ),
+        ]
+    }
+}

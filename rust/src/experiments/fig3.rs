@@ -1,0 +1,93 @@
+//! Fig 3: time series of total GPU power for an *uncapped* node running
+//! LongBench (≤8 K inputs) at QPS/GPU = 1.5, plotted as 10 ms rolling
+//! averages against the 4800 W budget line. The point of the figure:
+//! without caps the node frequently exceeds the budget (while staying
+//! under the 6000 W hardware limit) — power must be actively managed.
+
+use crate::config::presets;
+use crate::experiments::{longbench_trace, ShapeCheck};
+use crate::sim::{self, SimOptions};
+use crate::types::{Slo, MILLIS};
+use crate::util::stats::TimeSeries;
+
+pub struct Fig3 {
+    /// 10 ms rolling average of node GPU power.
+    pub rolling: TimeSeries,
+    pub budget_w: f64,
+    pub hw_limit_w: f64,
+    pub frac_above_budget: f64,
+    pub peak_w: f64,
+}
+
+pub fn run(seed: u64, n: usize) -> Fig3 {
+    let cfg = presets::uncapped_coalesced();
+    let trace = longbench_trace(seed, 1.5 * cfg.n_gpus as f64, n, Slo::paper_default());
+    let opts = SimOptions {
+        sample_period: 10 * MILLIS, // the paper's 10 ms telemetry
+        ..Default::default()
+    };
+    let result = sim::run(&cfg, &trace, &opts);
+    let rolling = result.node_power.rolling_mean(10 * MILLIS);
+    let frac_above_budget = rolling.frac_above(4800.0);
+    let peak_w = rolling.max();
+    Fig3 {
+        rolling,
+        budget_w: 4800.0,
+        hw_limit_w: 6000.0,
+        frac_above_budget,
+        peak_w,
+    }
+}
+
+impl Fig3 {
+    pub fn render(&self) -> String {
+        let mut out = String::from(
+            "Uncapped node power (10 ms rolling avg), LongBench @1.5 QPS/GPU\n",
+        );
+        out.push_str(&format!(
+            "budget line: {:.0} W | hw limit: {:.0} W | peak: {:.0} W | time above budget: {:.1}%\n",
+            self.budget_w,
+            self.hw_limit_w,
+            self.peak_w,
+            self.frac_above_budget * 100.0
+        ));
+        // Sparkline-style series (sampled down to ~80 columns).
+        let pts = &self.rolling.points;
+        if !pts.is_empty() {
+            let stride = (pts.len() / 80).max(1);
+            out.push_str("series (W): ");
+            for (i, &(_, v)) in pts.iter().enumerate() {
+                if i % stride == 0 {
+                    out.push(match v {
+                        v if v > 4800.0 => '#',
+                        v if v > 3600.0 => '+',
+                        v if v > 2400.0 => '-',
+                        _ => '.',
+                    });
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn checks(&self) -> Vec<ShapeCheck> {
+        vec![
+            ShapeCheck::new(
+                "uncapped node frequently exceeds the 4800 W budget",
+                self.frac_above_budget > 0.05,
+                format!("{:.1}% of samples above", self.frac_above_budget * 100.0),
+            ),
+            ShapeCheck::new(
+                "... while staying under the 6000 W hardware limit",
+                self.peak_w <= self.hw_limit_w + 1.0,
+                format!("peak {:.0} W", self.peak_w),
+            ),
+            ShapeCheck::new(
+                "power is bursty, not pinned at the peak",
+                self.frac_above_budget < 0.95,
+                format!("{:.1}% above", self.frac_above_budget * 100.0),
+            ),
+        ]
+    }
+}

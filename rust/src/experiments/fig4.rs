@@ -1,0 +1,155 @@
+//! Fig 4: (a) prefill P90 TTFT and (b) decode P90 TPOT vs per-GPU power
+//! cap (400–750 W in 50 W steps) across batch sizes, for the paper's
+//! microbenchmark shape (4096 input / 128 output tokens); (c) the power-
+//! cap step-response transient (a 47% cap cut takes hundreds of ms).
+//!
+//! Values are normalized to the 400 W configuration like the paper
+//! ("performance results are relative to the P90 latencies of the 400 W
+//! configuration"), so (a) plots the speedup curves the scheduler
+//! exploits: prefill keeps gaining to ~700 W, decode flattens at ~600 W.
+
+use crate::config::PerfModelConfig;
+use crate::power::capper::{CapState, RampProfile};
+use crate::power::PowerModel;
+use crate::experiments::ShapeCheck;
+use crate::types::{Micros, MILLIS};
+
+pub const POWERS: &[f64] = &[400.0, 450.0, 500.0, 550.0, 600.0, 650.0, 700.0, 750.0];
+pub const PREFILL_BATCHES: &[usize] = &[1, 2, 4, 8];
+pub const DECODE_BATCHES: &[usize] = &[8, 16, 32, 64];
+const INPUT_TOKENS: u32 = 4096;
+
+pub struct Fig4 {
+    /// [batch][power] relative prefill speedup vs 400 W.
+    pub prefill_speedup: Vec<Vec<f64>>,
+    /// [batch][power] relative decode speedup vs 400 W.
+    pub decode_speedup: Vec<Vec<f64>>,
+    /// (t, effective cap) samples of the 750 W -> 400 W step (Fig 4c).
+    pub step_response: Vec<(Micros, f64)>,
+    /// When the cap settled within 1 W.
+    pub settle_time: Micros,
+}
+
+pub fn run() -> Fig4 {
+    let model = PowerModel::new(PerfModelConfig::default());
+    let prefill_speedup = PREFILL_BATCHES
+        .iter()
+        .map(|&b| {
+            let t400 = model.prefill_batch_time(INPUT_TOKENS * b as u32, 400.0);
+            POWERS
+                .iter()
+                .map(|&w| {
+                    t400 as f64 / model.prefill_batch_time(INPUT_TOKENS * b as u32, w) as f64
+                })
+                .collect()
+        })
+        .collect();
+    let decode_speedup = DECODE_BATCHES
+        .iter()
+        .map(|&b| {
+            let t400 = model.decode_step_time(b, INPUT_TOKENS as f64, 400.0);
+            POWERS
+                .iter()
+                .map(|&w| t400 as f64 / model.decode_step_time(b, INPUT_TOKENS as f64, w) as f64)
+                .collect()
+        })
+        .collect();
+    // Fig 4c: 47% cut (750 -> ~400 W).
+    let mut cap = CapState::new(750.0);
+    let profile = RampProfile::default();
+    let deadline = cap.set_target(0, 400.0, &profile);
+    let mut step_response = Vec::new();
+    let mut settle_time = deadline;
+    let horizon = deadline * 2;
+    let mut t = 0;
+    while t <= horizon {
+        let eff = cap.effective(t);
+        step_response.push((t, eff));
+        if (eff - 400.0).abs() < 1.0 && settle_time == deadline {
+            settle_time = t;
+        }
+        t += MILLIS;
+    }
+    Fig4 {
+        prefill_speedup,
+        decode_speedup,
+        step_response,
+        settle_time,
+    }
+}
+
+impl Fig4 {
+    pub fn render(&self) -> String {
+        let mut out = String::from("(a) Prefill speedup vs 400 W (P90 TTFT ratio)\n");
+        out.push_str(&format!("{:<10}", "batch"));
+        for w in POWERS {
+            out.push_str(&format!("{:>7.0}", w));
+        }
+        out.push('\n');
+        for (bi, b) in PREFILL_BATCHES.iter().enumerate() {
+            out.push_str(&format!("{:<10}", b));
+            for v in &self.prefill_speedup[bi] {
+                out.push_str(&format!("{v:>7.2}"));
+            }
+            out.push('\n');
+        }
+        out.push_str("\n(b) Decode speedup vs 400 W (P90 TPOT ratio)\n");
+        out.push_str(&format!("{:<10}", "batch"));
+        for w in POWERS {
+            out.push_str(&format!("{:>7.0}", w));
+        }
+        out.push('\n');
+        for (bi, b) in DECODE_BATCHES.iter().enumerate() {
+            out.push_str(&format!("{:<10}", b));
+            for v in &self.decode_speedup[bi] {
+                out.push_str(&format!("{v:>7.2}"));
+            }
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "\n(c) 750->400 W cap step: settles in {} ms\n",
+            self.settle_time / MILLIS
+        ));
+        out
+    }
+
+    pub fn checks(&self) -> Vec<ShapeCheck> {
+        let p_max = self.prefill_speedup[0].last().copied().unwrap_or(0.0);
+        let d_max = self.decode_speedup[0].last().copied().unwrap_or(0.0);
+        let d600 = self.decode_speedup[0][4]; // 600 W column
+        let p700 = self.prefill_speedup[0][6];
+        vec![
+            ShapeCheck::new(
+                "prefill gains ~1.8x from 400->750 W (paper: up to 1.8x)",
+                (1.6..=2.0).contains(&p_max),
+                format!("{p_max:.2}x"),
+            ),
+            ShapeCheck::new(
+                "decode flattens at 1.3-1.5x (paper: 1.3x-1.5x)",
+                (1.3..=1.5).contains(&d_max),
+                format!("{d_max:.2}x"),
+            ),
+            ShapeCheck::new(
+                "decode gains above 600 W are ~zero",
+                (d_max - d600).abs() < 0.02,
+                format!("600W={d600:.2} 750W={d_max:.2}"),
+            ),
+            ShapeCheck::new(
+                "prefill still gaining between 600 and 700 W",
+                p700 > self.prefill_speedup[0][4] + 0.02,
+                format!("600W={:.2} 700W={p700:.2}", self.prefill_speedup[0][4]),
+            ),
+            ShapeCheck::new(
+                "cap step settles in hundreds of ms (Fig 4c)",
+                (100 * MILLIS..800 * MILLIS).contains(&self.settle_time),
+                format!("{} ms", self.settle_time / MILLIS),
+            ),
+            ShapeCheck::new(
+                "transient is monotone (no overshoot below target)",
+                self.step_response.windows(2).all(|w| w[1].1 <= w[0].1 + 1e-9)
+                    && self.step_response.iter().all(|&(_, v)| v >= 400.0 - 1e-9),
+                "monotone decreasing to 400 W".to_string(),
+            ),
+        ]
+    }
+}

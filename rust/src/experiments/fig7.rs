@@ -1,0 +1,119 @@
+//! Fig 7: SLO-scale sweep. SLOs scaled uniformly from 2.0x (relaxed,
+//! TTFT = 2 s / TPOT = 80 ms) down to 0.5x (strict, 0.5 s / 20 ms) at
+//! QPS/GPU in {1.25, 1.375, 1.5}. The non-uniform power configuration
+//! should match the 6000 W 4P4D-750W until the SLOs get very tight, and
+//! beat the same-budget uniform configs throughout.
+
+use crate::config::{presets, ClusterConfig};
+use crate::experiments::{longbench_trace, run_config, ShapeCheck};
+use crate::types::Slo;
+
+pub const SCALES: &[f64] = &[2.0, 1.5, 1.25, 1.0, 0.75, 0.5];
+pub const RATES: &[f64] = &[1.25, 1.375, 1.5];
+
+pub struct Fig7 {
+    /// [rate][config] -> attainment per scale.
+    pub grids: Vec<Vec<(ClusterConfig, Vec<f64>)>>,
+}
+
+fn configs() -> Vec<ClusterConfig> {
+    vec![
+        presets::p4d4(750.0),
+        presets::p4d4(600.0),
+        presets::p5d3_600(),
+        presets::p4_750_d4_450(),
+    ]
+}
+
+pub fn run(seed: u64, n: usize) -> Fig7 {
+    let grids = RATES
+        .iter()
+        .map(|&rate| {
+            configs()
+                .into_iter()
+                .map(|cfg| {
+                    let atts = SCALES
+                        .iter()
+                        .map(|&s| {
+                            let slo = Slo::paper_default().scaled(s);
+                            let trace =
+                                longbench_trace(seed, rate * cfg.n_gpus as f64, n, slo);
+                            run_config(&cfg, &trace).attainment()
+                        })
+                        .collect();
+                    (cfg.clone(), atts)
+                })
+                .collect()
+        })
+        .collect();
+    Fig7 { grids }
+}
+
+impl Fig7 {
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (ri, rate) in RATES.iter().enumerate() {
+            out.push_str(&format!("\nQPS/GPU = {rate}\n{:<18}", "SLO scale"));
+            for s in SCALES {
+                out.push_str(&format!("{s:>7.2}"));
+            }
+            out.push('\n');
+            for (cfg, atts) in &self.grids[ri] {
+                out.push_str(&format!("{:<18}", cfg.name));
+                for a in atts {
+                    out.push_str(&format!("{:>7.1}", a * 100.0));
+                }
+                out.push('\n');
+            }
+        }
+        out
+    }
+
+    fn curve<'a>(&'a self, rate_idx: usize, name: &str) -> &'a [f64] {
+        &self.grids[rate_idx]
+            .iter()
+            .find(|(c, _)| c.name == name)
+            .expect("config present")
+            .1
+    }
+
+    pub fn checks(&self) -> Vec<ShapeCheck> {
+        let mut checks = Vec::new();
+        for (ri, rate) in RATES.iter().enumerate() {
+            let nonuni = self.curve(ri, "4P-750W/4D-450W");
+            let uni600 = self.curve(ri, "4P4D-600W");
+            let full750 = self.curve(ri, "4P4D-750W");
+            // Non-uniform beats uniform-600 at every relaxed-to-baseline scale.
+            let dominates = SCALES
+                .iter()
+                .zip(nonuni.iter().zip(uni600))
+                .filter(|(s, _)| **s >= 1.0)
+                .all(|(_, (a, b))| a >= &(b - 0.03));
+            checks.push(ShapeCheck::new(
+                format!("@{rate} QPS/GPU: non-uniform >= uniform 600 W for scales >= 1"),
+                dominates,
+                format!("nonuni={nonuni:.2?} uni={uni600:.2?}"),
+            ));
+            // Matches the 6000 W config until the SLOs get very strict.
+            let relaxed_match = SCALES
+                .iter()
+                .zip(nonuni.iter().zip(full750))
+                .filter(|(s, _)| **s >= 1.25)
+                .all(|(_, (a, b))| a >= &(b - 0.05));
+            checks.push(ShapeCheck::new(
+                format!("@{rate} QPS/GPU: matches 4P4D-750W while SLOs relaxed"),
+                relaxed_match,
+                format!("nonuni={nonuni:.2?} 750={full750:.2?}"),
+            ));
+        }
+        // Attainment must degrade monotonically-ish as SLOs tighten.
+        let nonuni = self.curve(0, "4P-750W/4D-450W");
+        let monotone = nonuni.windows(2).all(|w| w[1] <= w[0] + 0.05);
+        checks.push(ShapeCheck::new(
+            "attainment degrades as SLOs tighten",
+            monotone,
+            format!("{nonuni:.2?}"),
+        ));
+        checks
+    }
+}

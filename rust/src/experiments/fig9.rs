@@ -1,0 +1,202 @@
+//! Fig 9: how dynamic RAPID manages power and GPUs over the mixed Sonnet
+//! trace at 2.0 QPS/GPU — (a) DynPower's cap timeline, (b) DynGPU's role
+//! timeline, (c) full RAPID's combined behaviour with the paper's ①-⑤
+//! milestones:
+//!   ① power moves to prefill first,
+//!   ② a decode GPU is reassigned to prefill when power saturates,
+//!   ③ combined allocation satisfies phase-1 SLOs,
+//!   ④ at the phase boundary resources start flowing back,
+//!   ⑤ decode-heavy steady state: most GPUs on decode, uniform caps.
+
+use crate::config::{presets, ClusterConfig};
+use crate::experiments::{run_config, ShapeCheck};
+use crate::metrics::RunResult;
+use crate::types::{Micros, SECOND};
+use crate::workload::sonnet::{mixed_phases, MixedPhasesSpec};
+
+pub struct Fig9 {
+    pub spec: MixedPhasesSpec,
+    /// Phase-1/phase-2 boundary (arrival of the first decode-heavy req).
+    pub phase_boundary: Micros,
+    pub dyn_power: (ClusterConfig, RunResult),
+    pub dyn_gpu: (ClusterConfig, RunResult),
+    pub rapid: (ClusterConfig, RunResult),
+}
+
+pub fn run(seed: u64, requests_per_phase: usize) -> Fig9 {
+    let spec = MixedPhasesSpec {
+        prefill_heavy_count: requests_per_phase,
+        decode_heavy_count: requests_per_phase,
+        ..Default::default()
+    };
+    let trace = mixed_phases(seed, spec);
+    let phase_boundary = trace.requests[requests_per_phase].arrival;
+    let run_one = |cfg: ClusterConfig| {
+        let res = run_config(&cfg, &trace);
+        (cfg, res)
+    };
+    Fig9 {
+        spec,
+        phase_boundary,
+        dyn_power: run_one(presets::dyn_power_600()),
+        dyn_gpu: run_one(presets::dyn_gpu_600()),
+        rapid: run_one(presets::rapid_600()),
+    }
+}
+
+/// Mean prefill-pool cap in a time window of a cap trace, given roles.
+fn mean_caps_in(
+    result: &RunResult,
+    from: Micros,
+    to: Micros,
+) -> Option<Vec<f64>> {
+    let rows: Vec<&(Micros, Vec<f64>)> = result
+        .cap_trace
+        .iter()
+        .filter(|(t, _)| *t >= from && *t < to)
+        .collect();
+    if rows.is_empty() {
+        return None;
+    }
+    let n = rows[0].1.len();
+    let mut mean = vec![0.0; n];
+    for (_, caps) in &rows {
+        for (i, c) in caps.iter().enumerate() {
+            mean[i] += c;
+        }
+    }
+    for m in &mut mean {
+        *m /= rows.len() as f64;
+    }
+    Some(mean)
+}
+
+/// Role counts at the end of a window (from the role trace).
+fn roles_at(result: &RunResult, t: Micros) -> (usize, usize) {
+    result
+        .role_trace
+        .iter()
+        .take_while(|(rt, _, _)| *rt <= t)
+        .last()
+        .map(|&(_, p, d)| (p, d))
+        .unwrap_or((0, 0))
+}
+
+/// Peak prefill GPU count over a window.
+fn max_prefill_in(result: &RunResult, from: Micros, to: Micros) -> usize {
+    result
+        .role_trace
+        .iter()
+        .filter(|(t, _, _)| *t >= from && *t <= to)
+        .map(|&(_, p, _)| p)
+        .max()
+        .unwrap_or(0)
+}
+
+impl Fig9 {
+    pub fn render(&self) -> String {
+        let pb = self.phase_boundary;
+        let mut out = format!(
+            "Mixed Sonnet @{:.2} QPS/GPU (peak-load point); phase boundary at {:.0}s\n",
+            self.spec.rate_qps / 8.0,
+            pb as f64 / SECOND as f64
+        );
+        for (label, (_, res)) in [
+            ("(a) 4P4D-DynPower", &self.dyn_power),
+            ("(b) DynGPU-600W", &self.dyn_gpu),
+            ("(c) DynGPU-DynPower", &self.rapid),
+        ] {
+            out.push_str(&format!("\n{label}: attainment={:.1}%\n", res.attainment() * 100.0));
+            out.push_str("  role timeline (t_s, prefill, decode):\n");
+            for &(t, p, d) in res.role_trace.iter().take(24) {
+                out.push_str(&format!("    {:>6.1} {p}P {d}D\n", t as f64 / 1e6));
+            }
+            if let Some(m1) = mean_caps_in(res, 0, pb) {
+                out.push_str(&format!(
+                    "  mean caps phase1: {:?}\n",
+                    m1.iter().map(|c| c.round()).collect::<Vec<_>>()
+                ));
+            }
+            if let Some(m2) = mean_caps_in(res, pb, pb * 2) {
+                out.push_str(&format!(
+                    "  mean caps phase2: {:?}\n",
+                    m2.iter().map(|c| c.round()).collect::<Vec<_>>()
+                ));
+            }
+            out.push_str(&format!("  decisions: {}\n", res.decisions.len()));
+            for (t, d) in res.decisions.iter().take(12) {
+                out.push_str(&format!("    {:>6.1}s {d}\n", *t as f64 / 1e6));
+            }
+        }
+        out
+    }
+
+    pub fn checks(&self) -> Vec<ShapeCheck> {
+        let pb = self.phase_boundary;
+        let (_, dp) = &self.dyn_power;
+        let (_, dg) = &self.dyn_gpu;
+        let (_, ra) = &self.rapid;
+        let mut checks = Vec::new();
+
+        // (a) DynPower: prefill caps rise toward max during phase 1, fall
+        // back to uniform in phase 2.
+        if let (Some(m1), Some(m2)) = (mean_caps_in(dp, pb / 4, pb), mean_caps_in(dp, pb + pb / 2, pb * 2)) {
+            let prefill_phase1 = m1[..4].iter().sum::<f64>() / 4.0;
+            let decode_phase1 = m1[4..].iter().sum::<f64>() / 4.0;
+            let spread2 = m2.iter().fold(0f64, |a, &c| a.max(c)) - m2.iter().fold(f64::MAX, |a, &c| a.min(c));
+            checks.push(ShapeCheck::new(
+                "(a) DynPower raises prefill caps above decode in phase 1",
+                prefill_phase1 > decode_phase1 + 50.0,
+                format!("prefill={prefill_phase1:.0} decode={decode_phase1:.0}"),
+            ));
+            checks.push(ShapeCheck::new(
+                "(a) phase 2 returns toward uniform caps (paper: all at 600 W)",
+                spread2 < 120.0,
+                format!("cap spread={spread2:.0} W"),
+            ));
+        }
+        // (b) DynGPU: prefill pool grows in phase 1, decode pool dominates
+        // in phase 2 (paper: up to 6 prefill, then 7 decode).
+        let peak_p = max_prefill_in(dg, 0, pb);
+        let (p2, d2) = roles_at(dg, pb * 2 - SECOND);
+        checks.push(ShapeCheck::new(
+            "(b) DynGPU grows the prefill pool beyond 4 in phase 1 (paper: up to 6)",
+            peak_p >= 5,
+            format!("peak prefill GPUs = {peak_p}"),
+        ));
+        checks.push(ShapeCheck::new(
+            "(b) DynGPU shifts the majority to decode in phase 2 (paper: 7 decode)",
+            d2 >= 5 && p2 >= 1,
+            format!("end of phase 2: {p2}P {d2}D"),
+        ));
+        // (c) full RAPID: both mechanisms appear, in order (power before
+        // GPU moves), and it beats both single-mechanism schemes.
+        let first_power = ra
+            .decisions
+            .iter()
+            .find(|(_, d)| d.contains("MovePower"))
+            .map(|&(t, _)| t);
+        let first_gpu = ra
+            .decisions
+            .iter()
+            .find(|(_, d)| d.contains("MoveGpu"))
+            .map(|&(t, _)| t);
+        checks.push(ShapeCheck::new(
+            "(c) RAPID moves power first, then GPUs (milestones 1-2)",
+            matches!((first_power, first_gpu), (Some(p), Some(g)) if p <= g),
+            format!("first power: {first_power:?}, first gpu: {first_gpu:?}"),
+        ));
+        checks.push(ShapeCheck::new(
+            "(c) full RAPID attains >= both single-mechanism schemes",
+            ra.attainment() >= dp.attainment() - 0.02
+                && ra.attainment() >= dg.attainment() - 0.02,
+            format!(
+                "rapid={:.2} dynpower={:.2} dyngpu={:.2}",
+                ra.attainment(),
+                dp.attainment(),
+                dg.attainment()
+            ),
+        ));
+        checks
+    }
+}

@@ -1,0 +1,168 @@
+//! Experiment drivers: one module per paper figure/table.
+//!
+//! Each driver builds the paper's workload, runs the relevant cluster
+//! configurations through the simulator, renders the same rows/series the
+//! paper reports, and checks the paper-shape assertions (who wins, by
+//! roughly what factor, where crossovers fall) listed in DESIGN.md §6.
+//! The `benches/` targets and the `rapid fig*` CLI subcommands both call
+//! into here.
+
+pub mod fig1;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+
+use crate::config::ClusterConfig;
+use crate::metrics::RunResult;
+use crate::sim::{self, SimOptions};
+use crate::types::Slo;
+use crate::util::rng::Rng;
+use crate::workload::{build_trace, longbench::LongBench, ArrivalProcess, Trace};
+
+/// One shape assertion: description + pass/fail + the measured detail.
+#[derive(Debug, Clone)]
+pub struct ShapeCheck {
+    pub what: String,
+    pub pass: bool,
+    pub detail: String,
+}
+
+impl ShapeCheck {
+    pub fn new(what: impl Into<String>, pass: bool, detail: impl Into<String>) -> Self {
+        ShapeCheck {
+            what: what.into(),
+            pass,
+            detail: detail.into(),
+        }
+    }
+}
+
+/// Render checks as a PASS/FAIL block.
+pub fn render_checks(checks: &[ShapeCheck]) -> String {
+    let mut out = String::new();
+    for c in checks {
+        out.push_str(&format!(
+            "  [{}] {} ({})\n",
+            if c.pass { "PASS" } else { "FAIL" },
+            c.what,
+            c.detail
+        ));
+    }
+    out
+}
+
+/// Default request count per simulated run. Large enough for stable
+/// percentiles, small enough that full sweeps run in seconds.
+pub const DEFAULT_REQUESTS: usize = 1200;
+
+/// Build a LongBench trace at a node-level rate (QPS across all GPUs).
+pub fn longbench_trace(seed: u64, node_qps: f64, n: usize, slo: Slo) -> Trace {
+    let mut root = Rng::new(seed);
+    let mut ap = ArrivalProcess::poisson(root.fork(1), node_qps);
+    let mut sizes = LongBench::new(root.fork(2));
+    build_trace(n, &mut ap, &mut sizes, slo)
+}
+
+/// Run one configuration over a trace with default sim options.
+pub fn run_config(cfg: &ClusterConfig, trace: &Trace) -> RunResult {
+    cfg.validate().expect("config invalid");
+    sim::run(cfg, trace, &SimOptions::default())
+}
+
+/// A point on an attainment-vs-rate curve.
+#[derive(Debug, Clone)]
+pub struct RatePoint {
+    pub qps_per_gpu: f64,
+    pub attainment: f64,
+    pub goodput_qps: f64,
+    pub qps_per_kw: f64,
+}
+
+/// Sweep a config across per-GPU request rates (LongBench).
+pub fn rate_sweep(
+    cfg: &ClusterConfig,
+    rates_per_gpu: &[f64],
+    seed: u64,
+    n: usize,
+    slo: Slo,
+) -> Vec<RatePoint> {
+    rates_per_gpu
+        .iter()
+        .map(|&r| {
+            let trace = longbench_trace(seed, r * cfg.n_gpus as f64, n, slo);
+            let res = run_config(cfg, &trace);
+            RatePoint {
+                qps_per_gpu: r,
+                attainment: res.attainment(),
+                goodput_qps: res.goodput_qps(),
+                qps_per_kw: res.qps_per_kw(),
+            }
+        })
+        .collect()
+}
+
+/// Highest swept rate whose attainment still meets `threshold`
+/// (the paper's "sustainable rate at 80% SLO attainment").
+pub fn sustainable_rate(points: &[RatePoint], threshold: f64) -> f64 {
+    points
+        .iter()
+        .filter(|p| p.attainment >= threshold)
+        .map(|p| p.qps_per_gpu)
+        .fold(0.0, f64::max)
+}
+
+/// Linear-interpolated rate at which attainment crosses `threshold`
+/// (finer than `sustainable_rate` for factor comparisons).
+pub fn crossing_rate(points: &[RatePoint], threshold: f64) -> f64 {
+    let mut prev: Option<&RatePoint> = None;
+    for p in points {
+        if let Some(q) = prev {
+            if q.attainment >= threshold && p.attainment < threshold {
+                let frac = (q.attainment - threshold) / (q.attainment - p.attainment);
+                return q.qps_per_gpu + frac * (p.qps_per_gpu - q.qps_per_gpu);
+            }
+        }
+        prev = Some(p);
+    }
+    sustainable_rate(points, threshold)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(q: f64, a: f64) -> RatePoint {
+        RatePoint {
+            qps_per_gpu: q,
+            attainment: a,
+            goodput_qps: 0.0,
+            qps_per_kw: 0.0,
+        }
+    }
+
+    #[test]
+    fn sustainable_rate_picks_last_above_threshold() {
+        let pts = vec![pt(0.5, 0.99), pt(1.0, 0.92), pt(1.5, 0.70), pt(2.0, 0.30)];
+        assert_eq!(sustainable_rate(&pts, 0.8), 1.0);
+        assert_eq!(sustainable_rate(&pts, 0.95), 0.5);
+        assert_eq!(sustainable_rate(&pts, 0.2), 2.0);
+    }
+
+    #[test]
+    fn crossing_rate_interpolates() {
+        let pts = vec![pt(1.0, 0.9), pt(2.0, 0.7)];
+        let x = crossing_rate(&pts, 0.8);
+        assert!((x - 1.5).abs() < 1e-9, "x={x}");
+    }
+
+    #[test]
+    fn longbench_trace_matches_rate() {
+        let t = longbench_trace(1, 12.0, 600, Slo::paper_default());
+        assert_eq!(t.len(), 600);
+        assert!((t.offered_qps() / 12.0 - 1.0).abs() < 0.2);
+    }
+}

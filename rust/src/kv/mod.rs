@@ -1,0 +1,5 @@
+//! KV-cache transfer machinery (paper §3.2's ring buffer).
+
+pub mod ring;
+
+pub use ring::{KvRing, PublishRejected, RingError};

@@ -1,0 +1,284 @@
+//! KV-cache transfer ring buffer (paper §3.2).
+//!
+//! The paper transfers KV from prefill to decode GPUs through "a
+//! persistent ring buffer shared across GPUs … per-slot atomic ready
+//! flags and … low-overhead polling", with a pull model and a request
+//! buffer of 32 slots. This is that structure, built on atomics:
+//!
+//! * the producer (prefill worker) reserves a slot, writes the payload,
+//!   then sets the slot's ready flag (release ordering);
+//! * the consumer (decode worker) polls the head slot's flag (acquire),
+//!   takes the payload, and frees the slot;
+//! * when all slots are in flight the producer sees backpressure
+//!   (`try_publish` returns `RingFull`) — exactly the stall the paper's
+//!   queue-based controller watches for.
+//!
+//! The same type serves the real PJRT path (multi-threaded) and the
+//! simulator (single-threaded slot accounting).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum RingError {
+    #[error("ring full: all {0} slots in flight")]
+    RingFull(usize),
+}
+
+/// `try_publish` hands the payload back on failure so callers can retry.
+pub type PublishRejected<T> = (RingError, T);
+
+/// One slot: payload guarded by a ready flag. The Mutex is uncontended by
+/// construction (a slot has exactly one writer then one reader between
+/// flag transitions); it exists to keep the payload Send+Sync without
+/// unsafe.
+struct Slot<T> {
+    ready: AtomicBool,
+    payload: Mutex<Option<T>>,
+}
+
+/// MPSC ring: many prefill workers publish, one decode-side puller drains
+/// per consumer index. Slots are freed on consume, so capacity bounds the
+/// number of undrained KV handles (the paper's "request buffer of 32").
+pub struct KvRing<T> {
+    slots: Vec<Slot<T>>,
+    /// Next slot to try publishing into.
+    head: AtomicU64,
+    /// Next slot to consume.
+    tail: AtomicU64,
+    published: AtomicU64,
+    consumed: AtomicU64,
+}
+
+impl<T> KvRing<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        KvRing {
+            slots: (0..capacity)
+                .map(|_| Slot {
+                    ready: AtomicBool::new(false),
+                    payload: Mutex::new(None),
+                })
+                .collect(),
+            head: AtomicU64::new(0),
+            tail: AtomicU64::new(0),
+            published: AtomicU64::new(0),
+            consumed: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Number of published-but-unconsumed slots.
+    pub fn in_flight(&self) -> usize {
+        (self.published.load(Ordering::Acquire) - self.consumed.load(Ordering::Acquire))
+            as usize
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.in_flight() >= self.capacity()
+    }
+
+    /// Publish a payload; returns the slot index, or hands the payload
+    /// back with a backpressure error.
+    pub fn try_publish(&self, payload: T) -> Result<usize, PublishRejected<T>> {
+        // Reserve: head may only advance if a slot is free.
+        loop {
+            let head = self.head.load(Ordering::Acquire);
+            let tail = self.tail.load(Ordering::Acquire);
+            if head - tail >= self.capacity() as u64 {
+                return Err((RingError::RingFull(self.capacity()), payload));
+            }
+            if self
+                .head
+                .compare_exchange(head, head + 1, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                let idx = (head % self.capacity() as u64) as usize;
+                let slot = &self.slots[idx];
+                *slot.payload.lock().unwrap() = Some(payload);
+                slot.ready.store(true, Ordering::Release); // publish
+                self.published.fetch_add(1, Ordering::AcqRel);
+                return Ok(idx);
+            }
+        }
+    }
+
+    /// Poll the tail slot; consume it if ready (the decode pull).
+    pub fn try_consume(&self) -> Option<T> {
+        let tail = self.tail.load(Ordering::Acquire);
+        let head = self.head.load(Ordering::Acquire);
+        if tail >= head {
+            return None;
+        }
+        let idx = (tail % self.capacity() as u64) as usize;
+        let slot = &self.slots[idx];
+        if !slot.ready.load(Ordering::Acquire) {
+            return None; // producer reserved but hasn't finished writing
+        }
+        if self
+            .tail
+            .compare_exchange(tail, tail + 1, Ordering::AcqRel, Ordering::Acquire)
+            .is_err()
+        {
+            return None; // another consumer won (MPMC-safe, though we use SPSC)
+        }
+        let payload = slot.payload.lock().unwrap().take();
+        slot.ready.store(false, Ordering::Release);
+        self.consumed.fetch_add(1, Ordering::AcqRel);
+        payload
+    }
+
+    /// Publish, spinning with `backoff` while the ring is full (the
+    /// producer-side stall of the paper's backpressure design).
+    pub fn publish_blocking(&self, mut payload: T, mut backoff: impl FnMut()) -> usize {
+        loop {
+            match self.try_publish(payload) {
+                Ok(idx) => return idx,
+                Err(returned) => {
+                    payload = returned.1;
+                    backoff();
+                }
+            }
+        }
+    }
+
+    /// Drain everything currently ready (used on role-change drains).
+    pub fn drain(&self) -> Vec<T> {
+        let mut out = Vec::new();
+        while let Some(x) = self.try_consume() {
+            out.push(x);
+        }
+        out
+    }
+
+    /// Totals for conservation checks: (published, consumed).
+    pub fn totals(&self) -> (u64, u64) {
+        (
+            self.published.load(Ordering::Acquire),
+            self.consumed.load(Ordering::Acquire),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn publish_then_consume_fifo() {
+        let ring = KvRing::new(4);
+        for i in 0..4 {
+            ring.try_publish(i).unwrap();
+        }
+        assert!(ring.is_full());
+        let (err, returned) = ring.try_publish(99).unwrap_err();
+        assert_eq!(err, RingError::RingFull(4));
+        assert_eq!(returned, 99, "payload handed back on backpressure");
+        for i in 0..4 {
+            assert_eq!(ring.try_consume(), Some(i));
+        }
+        assert_eq!(ring.try_consume(), None);
+    }
+
+    #[test]
+    fn slots_recycle_after_consume() {
+        let ring = KvRing::new(2);
+        for round in 0..10 {
+            ring.try_publish(round * 2).unwrap();
+            ring.try_publish(round * 2 + 1).unwrap();
+            assert!(ring.is_full());
+            assert_eq!(ring.try_consume(), Some(round * 2));
+            assert_eq!(ring.try_consume(), Some(round * 2 + 1));
+        }
+        let (p, c) = ring.totals();
+        assert_eq!(p, 20);
+        assert_eq!(c, 20);
+    }
+
+    #[test]
+    fn drain_empties_ring() {
+        let ring = KvRing::new(8);
+        for i in 0..5 {
+            ring.try_publish(i).unwrap();
+        }
+        assert_eq!(ring.drain(), vec![0, 1, 2, 3, 4]);
+        assert_eq!(ring.in_flight(), 0);
+    }
+
+    #[test]
+    fn concurrent_producers_single_consumer_conserve() {
+        let ring = Arc::new(KvRing::new(32));
+        let n_producers = 4;
+        let per_producer = 2000u64;
+        let mut handles = Vec::new();
+        for p in 0..n_producers {
+            let r = Arc::clone(&ring);
+            handles.push(std::thread::spawn(move || {
+                let mut sent = 0;
+                while sent < per_producer {
+                    match r.try_publish(p * 1_000_000 + sent) {
+                        Ok(_) => sent += 1,
+                        Err(_) => std::thread::yield_now(),
+                    }
+                }
+            }));
+        }
+        let consumer = {
+            let r = Arc::clone(&ring);
+            std::thread::spawn(move || {
+                let total = n_producers as usize * per_producer as usize;
+                let mut got = Vec::with_capacity(total);
+                while got.len() < total {
+                    match r.try_consume() {
+                        Some(v) => got.push(v),
+                        None => std::thread::yield_now(),
+                    }
+                }
+                got
+            })
+        };
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut got = consumer.join().unwrap();
+        assert_eq!(got.len(), 8000);
+        got.sort();
+        got.dedup();
+        assert_eq!(got.len(), 8000, "no duplicates, no losses");
+        let (p, c) = ring.totals();
+        assert_eq!(p, c);
+    }
+
+    #[test]
+    fn per_producer_order_preserved() {
+        // FIFO overall implies per-producer FIFO.
+        let ring = Arc::new(KvRing::<u64>::new(16));
+        let r = Arc::clone(&ring);
+        let producer = std::thread::spawn(move || {
+            for i in 0..5000u64 {
+                loop {
+                    if r.try_publish(i).is_ok() {
+                        break;
+                    }
+                    std::thread::yield_now();
+                }
+            }
+        });
+        let mut last = None;
+        let mut seen = 0;
+        while seen < 5000 {
+            if let Some(v) = ring.try_consume() {
+                if let Some(l) = last {
+                    assert!(v > l, "order violated: {v} after {l}");
+                }
+                last = Some(v);
+                seen += 1;
+            }
+        }
+        producer.join().unwrap();
+    }
+}

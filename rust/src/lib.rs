@@ -1,0 +1,20 @@
+//! RAPID: power-aware dynamic reallocation for disaggregated LLM inference.
+//!
+//! Reproduction of "Power Aware Dynamic Reallocation For Inference"
+//! (Jiang et al., 2026). See DESIGN.md for the architecture and the
+//! paper-to-repo substitution map.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod kv;
+pub mod metrics;
+pub mod power;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod types;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,273 @@
+//! `rapid` — launcher CLI for the RAPID reproduction.
+//!
+//! Subcommands:
+//!   fig1 | fig3 | fig4 | fig5 | fig6 | fig7 | fig8 | fig9
+//!       regenerate a paper figure (table + shape checks)
+//!   sim      run one configuration over a workload, print metrics
+//!   sweep    static design-space search (the paper's §5.1 exploration)
+//!   serve    real PJRT serving demo (requires `make artifacts`)
+//!   presets  list configuration presets
+
+use rapid::cli::Command;
+use rapid::config::{presets, ClusterConfig};
+use rapid::experiments::{self as exp, render_checks};
+use rapid::sim::{self, SimOptions};
+use rapid::types::{Slo, MILLIS, SECOND};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn common(cmd: Command) -> Command {
+    cmd.opt("seed", "42", "workload RNG seed")
+        .opt("requests", "1200", "requests per simulated run")
+}
+
+fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
+    let sub = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = if argv.is_empty() { &[] } else { &argv[1..] };
+    match sub {
+        "fig1" => {
+            let cmd = common(Command::new("fig1", "goodput vs QPS/GPU under 4800 W"));
+            let a = parse_or_help(&cmd, rest)?;
+            let f = exp::fig1::run(a.u64_or("seed", 42)?, a.usize_or("requests", 1200)?);
+            println!("{}", f.render());
+            println!("{}", render_checks(&f.checks()));
+        }
+        "fig3" => {
+            let cmd = common(Command::new("fig3", "uncapped node power time-series"));
+            let a = parse_or_help(&cmd, rest)?;
+            let f = exp::fig3::run(a.u64_or("seed", 42)?, a.usize_or("requests", 1200)?);
+            println!("{}", f.render());
+            println!("{}", render_checks(&f.checks()));
+        }
+        "fig4" => {
+            let cmd = Command::new("fig4", "power/latency curves + cap step response");
+            let _ = parse_or_help(&cmd, rest)?;
+            let f = exp::fig4::run();
+            println!("{}", f.render());
+            println!("{}", render_checks(&f.checks()));
+        }
+        "fig5" => {
+            let cmd = common(Command::new("fig5", "SLO attainment vs rate (static configs)"))
+                .flag("part-b", "use the stricter TPOT = 25 ms SLO (Fig 5b)");
+            let a = parse_or_help(&cmd, rest)?;
+            let f = exp::fig5::run(
+                a.flag("part-b"),
+                a.u64_or("seed", 42)?,
+                a.usize_or("requests", 1200)?,
+            );
+            println!("{}", f.render());
+            println!("{}", render_checks(&f.checks()));
+        }
+        "fig6" => {
+            let cmd = common(Command::new("fig6", "queueing vs execution breakdown"));
+            let a = parse_or_help(&cmd, rest)?;
+            let f = exp::fig6::run(a.u64_or("seed", 42)?, a.usize_or("requests", 1200)?);
+            println!("{}", f.render());
+            println!("{}", render_checks(&f.checks()));
+        }
+        "fig7" => {
+            let cmd = common(Command::new("fig7", "SLO scaling sweep"));
+            let a = parse_or_help(&cmd, rest)?;
+            let f = exp::fig7::run(a.u64_or("seed", 42)?, a.usize_or("requests", 800)?);
+            println!("{}", f.render());
+            println!("{}", render_checks(&f.checks()));
+        }
+        "fig8" => {
+            let cmd = common(Command::new("fig8", "static vs dynamic RAPID (mixed Sonnet)"))
+                .opt("qps", "1.05", "per-GPU request rate (peak-load point on this substrate)");
+            let a = parse_or_help(&cmd, rest)?;
+            let f = exp::fig8::run(
+                a.u64_or("seed", 42)?,
+                a.f64_or("qps", 2.0)?,
+                a.usize_or("requests", 1000)?,
+            );
+            println!("{}", f.render());
+            println!("{}", render_checks(&f.checks()));
+        }
+        "fig9" => {
+            let cmd = common(Command::new("fig9", "dynamic management timelines"));
+            let a = parse_or_help(&cmd, rest)?;
+            let f = exp::fig9::run(a.u64_or("seed", 42)?, a.usize_or("requests", 1000)?);
+            println!("{}", f.render());
+            println!("{}", render_checks(&f.checks()));
+        }
+        "sim" => {
+            let cmd = common(Command::new("sim", "run one config over a workload"))
+                .opt("preset", "4p4d-600", "config preset (see `rapid presets`)")
+                .opt("config", "", "TOML config file (overrides preset)")
+                .opt("qps", "1.5", "per-GPU request rate")
+                .opt("workload", "longbench", "longbench | mixed")
+                .opt("ttft-slo-ms", "1000", "TTFT SLO (ms)")
+                .opt("tpot-slo-ms", "40", "TPOT SLO (ms)");
+            let a = parse_or_help(&cmd, rest)?;
+            let cfg = load_config(a.get("config").unwrap_or(""), a.get("preset").unwrap())?;
+            let slo = Slo::new(
+                a.u64_or("ttft-slo-ms", 1000)? * MILLIS,
+                a.u64_or("tpot-slo-ms", 40)? * MILLIS,
+            );
+            let n = a.usize_or("requests", 1200)?;
+            let seed = a.u64_or("seed", 42)?;
+            let trace = match a.get("workload").unwrap() {
+                "mixed" => rapid::workload::sonnet::mixed_phases(
+                    seed,
+                    rapid::workload::sonnet::MixedPhasesSpec {
+                        prefill_heavy_count: n / 2,
+                        decode_heavy_count: n / 2,
+                        rate_qps: a.f64_or("qps", 1.5)? * cfg.n_gpus as f64,
+                        ..Default::default()
+                    },
+                ),
+                _ => exp::longbench_trace(
+                    seed,
+                    a.f64_or("qps", 1.5)? * cfg.n_gpus as f64,
+                    n,
+                    slo,
+                ),
+            };
+            let res = sim::run(&cfg, &trace, &SimOptions::default());
+            print_result(&cfg, &res);
+        }
+        "sweep" => {
+            let cmd = common(Command::new(
+                "sweep",
+                "static design-space search: GPUs x power splits (paper §5.1)",
+            ))
+            .opt("qps", "1.5", "per-GPU request rate");
+            let a = parse_or_help(&cmd, rest)?;
+            run_sweep(
+                a.u64_or("seed", 42)?,
+                a.f64_or("qps", 1.5)?,
+                a.usize_or("requests", 1200)?,
+            );
+        }
+        "presets" => {
+            println!("available presets:");
+            for name in presets::NAMES {
+                let c = presets::by_name(name).unwrap();
+                println!(
+                    "  {:<16} {:<18} budget={:>5.0}W prefill={:>3.0}W decode={:>3.0}W policy={:?}",
+                    name, c.name, c.node_budget_w, c.prefill_cap_w, c.decode_cap_w, c.control
+                );
+            }
+        }
+        "serve" => {
+            let cmd = Command::new("serve", "real PJRT serving demo")
+                .opt("artifacts", "artifacts", "artifact directory")
+                .opt("requests", "16", "number of requests")
+                .opt("qps", "4.0", "arrival rate")
+                .opt("prefill-gpus", "2", "prefill workers")
+                .opt("decode-gpus", "2", "decode workers");
+            let a = parse_or_help(&cmd, rest)?;
+            rapid::server::serve_demo(
+                a.get("artifacts").unwrap(),
+                a.usize_or("requests", 16)?,
+                a.f64_or("qps", 4.0)?,
+                a.usize_or("prefill-gpus", 2)?,
+                a.usize_or("decode-gpus", 2)?,
+            )?;
+        }
+        "help" | "--help" | "-h" => {
+            println!("rapid — power-aware disaggregated inference (paper reproduction)");
+            println!("subcommands: fig1 fig3 fig4 fig5 fig6 fig7 fig8 fig9 sim sweep serve presets");
+            println!("run `rapid <subcommand> --help` for flags");
+        }
+        other => {
+            return Err(format!("unknown subcommand '{other}' (try `rapid help`)").into());
+        }
+    }
+    Ok(())
+}
+
+fn parse_or_help(
+    cmd: &Command,
+    argv: &[String],
+) -> Result<rapid::cli::Args, Box<dyn std::error::Error>> {
+    if argv.iter().any(|a| a == "--help" || a == "-h") {
+        println!("{}", cmd.help_text());
+        std::process::exit(0);
+    }
+    Ok(cmd.parse(argv)?)
+}
+
+fn load_config(path: &str, preset: &str) -> Result<ClusterConfig, Box<dyn std::error::Error>> {
+    if !path.is_empty() {
+        let text = std::fs::read_to_string(path)?;
+        return Ok(ClusterConfig::from_toml(&text)?);
+    }
+    Ok(presets::by_name(preset)?)
+}
+
+fn print_result(cfg: &ClusterConfig, res: &rapid::metrics::RunResult) {
+    println!("config: {}", cfg.name);
+    println!("  requests:        {}", res.records.len());
+    println!("  duration:        {:.1} s", res.duration as f64 / SECOND as f64);
+    println!("  attainment:      {:.1}%", res.attainment() * 100.0);
+    println!("  goodput:         {:.2} qps", res.goodput_qps());
+    println!("  qps/kW:          {:.3}", res.qps_per_kw());
+    println!(
+        "  TTFT p50/p90:    {:.0} / {:.0} ms",
+        res.ttft_percentile(50.0) / 1000.0,
+        res.ttft_percentile(90.0) / 1000.0
+    );
+    println!(
+        "  TPOT p50/p90:    {:.1} / {:.1} ms",
+        res.tpot_percentile(50.0) / 1000.0,
+        res.tpot_percentile(90.0) / 1000.0
+    );
+    let (q, e) = res.ttft_breakdown();
+    println!("  queue/exec:      {:.0} / {:.0} ms", q / 1000.0, e / 1000.0);
+    println!("  provisioned:     {:.0} W", res.mean_provisioned_w);
+    println!("  peak node draw:  {:.0} W", res.node_power.max());
+    println!("  decisions:       {}", res.decisions.len());
+}
+
+fn run_sweep(seed: u64, qps: f64, n: usize) {
+    println!("static design-space sweep @{qps} QPS/GPU (LongBench, 4800 W budget)");
+    println!("{:<8}{:<12}{:<12}{:>12}{:>10}", "P/D", "prefill W", "decode W", "attainment", "goodput");
+    let mut best: Option<(String, f64)> = None;
+    for p in 2..=6usize {
+        let d = 8 - p;
+        // Power splits in 25 W steps that fit the budget exactly.
+        let mut pw = 400.0;
+        while pw <= 750.0 {
+            let dw = (4800.0 - pw * p as f64) / d as f64;
+            if (400.0..=750.0).contains(&dw) {
+                let mut cfg = presets::p4d4(600.0);
+                cfg.name = format!("{p}P-{pw:.0}W/{d}D-{dw:.0}W");
+                cfg.topology = rapid::config::Topology::Disaggregated { prefill: p, decode: d };
+                cfg.prefill_cap_w = pw;
+                cfg.decode_cap_w = dw;
+                if cfg.validate().is_ok() {
+                    let trace = exp::longbench_trace(seed, qps * 8.0, n, Slo::paper_default());
+                    let res = sim::run(&cfg, &trace, &SimOptions::default());
+                    println!(
+                        "{:<8}{:<12.0}{:<12.0}{:>11.1}%{:>10.2}",
+                        format!("{p}P{d}D"),
+                        pw,
+                        dw,
+                        res.attainment() * 100.0,
+                        res.goodput_qps()
+                    );
+                    let score = res.attainment();
+                    if best.as_ref().map_or(true, |(_, s)| score > *s) {
+                        best = Some((cfg.name.clone(), score));
+                    }
+                }
+            }
+            pw += 25.0;
+        }
+    }
+    if let Some((name, score)) = best {
+        println!("\nbest static configuration: {name} (attainment {:.1}%)", score * 100.0);
+    }
+}

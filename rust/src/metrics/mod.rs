@@ -1,0 +1,196 @@
+//! Experiment metrics: request records → paper-figure aggregates.
+
+use crate::types::{Micros, RequestRecord, Watts, SECOND};
+use crate::util::stats::{percentile, TimeSeries};
+
+/// Everything a run produces; each paper figure is a view over this.
+#[derive(Debug, Default, Clone)]
+pub struct RunResult {
+    pub config_name: String,
+    pub records: Vec<RequestRecord>,
+    /// Node total GPU power draw over time.
+    pub node_power: TimeSeries,
+    /// Per-GPU cap targets over time (Fig 9a): (t, caps per gpu).
+    pub cap_trace: Vec<(Micros, Vec<Watts>)>,
+    /// (t, prefill_gpus, decode_gpus) role changes (Fig 9b).
+    pub role_trace: Vec<(Micros, usize, usize)>,
+    /// Controller decisions (Fig 9c annotations).
+    pub decisions: Vec<(Micros, String)>,
+    /// Virtual/wall time the run covered.
+    pub duration: Micros,
+    /// Mean provisioned GPU power (sum of caps averaged over time).
+    pub mean_provisioned_w: Watts,
+}
+
+impl RunResult {
+    /// Fraction of requests meeting both SLOs (paper's "SLO attainment").
+    pub fn attainment(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records.iter().filter(|r| r.attained()).count() as f64
+            / self.records.len() as f64
+    }
+
+    /// Attained requests per second (paper's "goodput", Fig 1).
+    pub fn goodput_qps(&self) -> f64 {
+        if self.duration == 0 {
+            return 0.0;
+        }
+        let attained = self.records.iter().filter(|r| r.attained()).count();
+        attained as f64 / (self.duration as f64 / SECOND as f64)
+    }
+
+    /// Goodput per provisioned watt (the paper's QPS/W, §5.1).
+    pub fn qps_per_kw(&self) -> f64 {
+        if self.mean_provisioned_w <= 0.0 {
+            return 0.0;
+        }
+        self.goodput_qps() / (self.mean_provisioned_w / 1000.0)
+    }
+
+    pub fn ttft_percentile(&self, p: f64) -> f64 {
+        percentile(
+            &self.records.iter().map(|r| r.ttft() as f64).collect::<Vec<_>>(),
+            p,
+        )
+    }
+
+    pub fn tpot_percentile(&self, p: f64) -> f64 {
+        percentile(
+            &self
+                .records
+                .iter()
+                .filter(|r| r.output_tokens > 1)
+                .map(|r| r.tpot() as f64)
+                .collect::<Vec<_>>(),
+            p,
+        )
+    }
+
+    /// Mean queueing delay / exec time split (Fig 6).
+    pub fn ttft_breakdown(&self) -> (f64, f64) {
+        if self.records.is_empty() {
+            return (0.0, 0.0);
+        }
+        let n = self.records.len() as f64;
+        let q: f64 = self.records.iter().map(|r| r.queueing_delay() as f64).sum();
+        let e: f64 = self.records.iter().map(|r| r.exec_time() as f64).sum();
+        (q / n, e / n)
+    }
+
+    /// Attainment over completion-time buckets (Fig 6/9 time axes).
+    pub fn attainment_over_time(&self, bucket: Micros) -> Vec<(Micros, f64)> {
+        if self.records.is_empty() {
+            return Vec::new();
+        }
+        let max_t = self.records.iter().map(|r| r.finish).max().unwrap();
+        let n_buckets = (max_t / bucket + 1) as usize;
+        let mut hit = vec![0u32; n_buckets];
+        let mut tot = vec![0u32; n_buckets];
+        for r in &self.records {
+            let b = (r.finish / bucket) as usize;
+            tot[b] += 1;
+            if r.attained() {
+                hit[b] += 1;
+            }
+        }
+        (0..n_buckets)
+            .filter(|&b| tot[b] > 0)
+            .map(|b| (b as Micros * bucket, hit[b] as f64 / tot[b] as f64))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{RequestId, Slo, MILLIS};
+
+    fn record(id: u64, arrival: Micros, first: Micros, finish: Micros, out: u32) -> RequestRecord {
+        RequestRecord {
+            id: RequestId(id),
+            arrival,
+            prefill_start: arrival + 10 * MILLIS,
+            first_token: first,
+            finish,
+            input_tokens: 1000,
+            output_tokens: out,
+            slo: Slo::paper_default(),
+        }
+    }
+
+    fn result_with(records: Vec<RequestRecord>, duration: Micros) -> RunResult {
+        RunResult {
+            records,
+            duration,
+            mean_provisioned_w: 4800.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn attainment_and_goodput() {
+        // one attained (fast), one TTFT-violating
+        let r = result_with(
+            vec![
+                record(0, 0, 500 * MILLIS, SECOND, 20),
+                record(1, 0, 2 * SECOND, 3 * SECOND, 20),
+            ],
+            10 * SECOND,
+        );
+        assert!((r.attainment() - 0.5).abs() < 1e-9);
+        assert!((r.goodput_qps() - 0.1).abs() < 1e-9);
+        assert!((r.qps_per_kw() - 0.1 / 4.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles_over_records() {
+        let recs = (0..10)
+            .map(|i| record(i, 0, (i + 1) * 100 * MILLIS, 5 * SECOND, 10))
+            .collect();
+        let r = result_with(recs, 10 * SECOND);
+        assert!(r.ttft_percentile(50.0) > 400_000.0);
+        assert!(r.ttft_percentile(90.0) <= 1_000_000.0);
+    }
+
+    #[test]
+    fn breakdown_sums_to_ttft() {
+        let r = result_with(vec![record(0, 0, 800 * MILLIS, SECOND, 4)], SECOND);
+        let (q, e) = r.ttft_breakdown();
+        assert!((q + e - 800_000.0).abs() < 1.0);
+        assert!((q - 10_000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn attainment_over_time_buckets() {
+        let r = result_with(
+            vec![
+                record(0, 0, 100 * MILLIS, 700 * MILLIS, 20),    // bucket 0, attained
+                record(1, 0, 5 * SECOND, 6 * SECOND, 20),        // bucket 1, violated
+                record(2, 0, 100 * MILLIS, 6500 * MILLIS, 200),  // bucket 1
+            ],
+            10 * SECOND,
+        );
+        let buckets = r.attainment_over_time(5 * SECOND);
+        assert_eq!(buckets.len(), 2);
+        assert!((buckets[0].1 - 1.0).abs() < 1e-9);
+        assert!(buckets[1].1 < 1.0);
+    }
+
+    #[test]
+    fn empty_result_is_zeroes() {
+        let r = RunResult::default();
+        assert_eq!(r.attainment(), 0.0);
+        assert_eq!(r.goodput_qps(), 0.0);
+        assert!(r.ttft_percentile(90.0).is_nan());
+    }
+
+    #[test]
+    fn tpot_percentile_skips_single_token() {
+        let mut recs = vec![record(0, 0, SECOND, SECOND, 1)]; // excluded
+        recs.push(record(1, 0, SECOND, 2 * SECOND, 21)); // 50ms tpot
+        let r = result_with(recs, 10 * SECOND);
+        assert!((r.tpot_percentile(50.0) - 50_000.0).abs() < 1.0);
+    }
+}

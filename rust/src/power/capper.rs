@@ -1,0 +1,164 @@
+//! Power-cap ramp dynamics (paper Fig 4c, §2.2).
+//!
+//! AMD-SMI power caps are not instantaneous: after a large cap reduction
+//! the power-management firmware takes hundreds of milliseconds to settle
+//! at the new limit. RAPID therefore (a) lowers *source* GPUs and waits
+//! for them to settle before raising *sink* GPUs, and (b) budgets a
+//! conservative settle delay into the controller. `CapState` models that
+//! transient as a first-order lag with a delta-proportional settle time.
+
+use crate::types::{Micros, Watts, MILLIS};
+
+/// Per-GPU cap state: the target (requested) cap plus the effective cap
+/// the firmware currently enforces while ramping.
+#[derive(Debug, Clone)]
+pub struct CapState {
+    target: Watts,
+    /// Effective cap at `updated_at` (interpolate forward from here).
+    effective_at_update: Watts,
+    updated_at: Micros,
+    /// Time constant of the exponential approach (us).
+    tau: Micros,
+}
+
+/// Settle parameters: how long the firmware takes per watt of cap delta.
+#[derive(Debug, Clone, Copy)]
+pub struct RampProfile {
+    /// Base latency of any cap change (command + firmware pickup).
+    pub base: Micros,
+    /// Additional settle time per watt of downward delta.
+    pub per_watt_down: Micros,
+    /// Upward changes apply faster (no thermal unwinding needed).
+    pub per_watt_up: Micros,
+}
+
+impl Default for RampProfile {
+    fn default() -> Self {
+        // Fig 4c: a 47% cut (≈350 W) takes a few hundred ms to land.
+        RampProfile {
+            base: 20 * MILLIS,
+            per_watt_down: 800, // 350 W down -> ~300 ms
+            per_watt_up: 200,
+        }
+    }
+}
+
+impl RampProfile {
+    /// Conservative settle estimate for a cap change `from -> to`.
+    pub fn settle_time(&self, from: Watts, to: Watts) -> Micros {
+        let delta = (from - to).abs();
+        let per_watt = if to < from { self.per_watt_down } else { self.per_watt_up };
+        self.base + (delta * per_watt as f64) as Micros
+    }
+}
+
+impl CapState {
+    pub fn new(cap: Watts) -> Self {
+        CapState {
+            target: cap,
+            effective_at_update: cap,
+            updated_at: 0,
+            tau: 0,
+        }
+    }
+
+    pub fn target(&self) -> Watts {
+        self.target
+    }
+
+    /// Request a new cap at time `now`; returns the conservative settle
+    /// deadline the caller must respect before relying on the new limit.
+    pub fn set_target(&mut self, now: Micros, cap: Watts, profile: &RampProfile) -> Micros {
+        let current = self.effective(now);
+        let settle = profile.settle_time(current, cap);
+        self.effective_at_update = current;
+        self.updated_at = now;
+        self.target = cap;
+        // First-order lag: reach ~95% of the delta at the settle deadline.
+        self.tau = (settle / 3).max(1);
+        now + settle
+    }
+
+    /// Effective cap the firmware enforces at `now` (exponential approach).
+    pub fn effective(&self, now: Micros) -> Watts {
+        let dt = now.saturating_sub(self.updated_at);
+        if self.tau == 0 {
+            return self.target;
+        }
+        let frac = 1.0 - (-(dt as f64) / self.tau as f64).exp();
+        self.effective_at_update + (self.target - self.effective_at_update) * frac
+    }
+
+    /// Has the transient effectively finished (within 1 W)?
+    pub fn settled(&self, now: Micros) -> bool {
+        (self.effective(now) - self.target).abs() < 1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::SECOND;
+
+    #[test]
+    fn settle_time_proportional_to_delta() {
+        let p = RampProfile::default();
+        let big = p.settle_time(750.0, 400.0);
+        let small = p.settle_time(750.0, 700.0);
+        assert!(big > small);
+        // Fig 4c anchor: ~350 W cut lands in hundreds of ms.
+        assert!((200 * MILLIS..600 * MILLIS).contains(&big), "big={big}");
+    }
+
+    #[test]
+    fn upward_faster_than_downward() {
+        let p = RampProfile::default();
+        assert!(p.settle_time(400.0, 750.0) < p.settle_time(750.0, 400.0));
+    }
+
+    #[test]
+    fn effective_cap_lags_then_settles() {
+        let mut c = CapState::new(750.0);
+        let deadline = c.set_target(0, 400.0, &RampProfile::default());
+        // Immediately after the command, still near the old cap.
+        assert!(c.effective(1 * MILLIS) > 700.0);
+        // Half-way: in between.
+        let mid = c.effective(deadline / 2);
+        assert!(mid < 750.0 && mid > 400.0);
+        // At the deadline: settled (within ~5%, then clamps close).
+        assert!(c.effective(deadline) < 420.0);
+        assert!(c.settled(deadline + SECOND));
+    }
+
+    #[test]
+    fn new_state_is_instantly_settled() {
+        let c = CapState::new(600.0);
+        assert_eq!(c.effective(0), 600.0);
+        assert!(c.settled(0));
+    }
+
+    #[test]
+    fn retarget_mid_ramp_starts_from_current_effective() {
+        let mut c = CapState::new(750.0);
+        let d1 = c.set_target(0, 400.0, &RampProfile::default());
+        let mid = c.effective(d1 / 4);
+        c.set_target(d1 / 4, 700.0, &RampProfile::default());
+        // Effective continues from `mid`, not from 400.
+        let just_after = c.effective(d1 / 4 + 1);
+        assert!((just_after - mid).abs() < 5.0, "{just_after} vs {mid}");
+    }
+
+    #[test]
+    fn monotone_approach_no_overshoot() {
+        let mut c = CapState::new(750.0);
+        let deadline = c.set_target(0, 450.0, &RampProfile::default());
+        let mut last = c.effective(0);
+        for i in 0..50 {
+            let t = deadline * i / 50;
+            let e = c.effective(t);
+            assert!(e <= last + 1e-9, "no overshoot at {t}");
+            assert!(e >= 450.0 - 1e-9);
+            last = e;
+        }
+    }
+}

@@ -1,0 +1,422 @@
+//! Node power manager: budget enforcement + source-before-sink shifting.
+//!
+//! Owns every GPU's `CapState` and guarantees the paper's §2.2 safety
+//! protocol: total *allowed* GPU power never exceeds the node budget, and
+//! when power moves between pools the source caps are lowered and given
+//! time to settle before the sink caps rise. Raises are queued as pending
+//! operations released by `poll(now)`.
+
+use crate::power::capper::{CapState, RampProfile};
+use crate::types::{GpuId, Micros, Watts};
+
+#[derive(Debug, thiserror::Error)]
+pub enum PowerError {
+    #[error("cap change would exceed node budget: {total:.0} W > {budget:.0} W")]
+    BudgetExceeded { total: Watts, budget: Watts },
+    #[error("cap {cap:.0} W outside limits [{min:.0}, {max:.0}]")]
+    OutOfLimits { cap: Watts, min: Watts, max: Watts },
+    #[error("no gpus in {0} pool")]
+    EmptyPool(&'static str),
+}
+
+/// A deferred cap raise, released once the paired lowers have settled.
+#[derive(Debug, Clone)]
+struct PendingRaise {
+    gpu: GpuId,
+    cap: Watts,
+    at: Micros,
+}
+
+/// Outcome of a `move_power` call (for logging / Fig 9 traces).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PowerMove {
+    pub lowered: Vec<(GpuId, Watts)>,
+    pub raised: Vec<(GpuId, Watts)>,
+    /// When the raises take effect (sources settled).
+    pub effective_at: Micros,
+}
+
+#[derive(Debug)]
+pub struct PowerManager {
+    caps: Vec<CapState>,
+    pending: Vec<PendingRaise>,
+    profile: RampProfile,
+    budget: Watts,
+    enforce: bool,
+    min_w: Watts,
+    max_w: Watts,
+}
+
+impl PowerManager {
+    pub fn new(
+        initial_caps: &[Watts],
+        budget: Watts,
+        enforce: bool,
+        min_w: Watts,
+        max_w: Watts,
+    ) -> Self {
+        PowerManager {
+            caps: initial_caps.iter().map(|&w| CapState::new(w)).collect(),
+            pending: Vec::new(),
+            profile: RampProfile::default(),
+            budget,
+            enforce,
+            min_w,
+            max_w,
+        }
+    }
+
+    pub fn n_gpus(&self) -> usize {
+        self.caps.len()
+    }
+
+    pub fn budget(&self) -> Watts {
+        self.budget
+    }
+
+    pub fn profile(&self) -> &RampProfile {
+        &self.profile
+    }
+
+    /// Target cap of one GPU (what was last requested).
+    pub fn target(&self, gpu: GpuId) -> Watts {
+        self.caps[gpu.0].target()
+    }
+
+    /// Effective (firmware-enforced) cap right now, mid-transient.
+    pub fn effective(&self, gpu: GpuId, now: Micros) -> Watts {
+        self.caps[gpu.0].effective(now)
+    }
+
+    /// Sum of target caps plus any pending raises (the committed power).
+    pub fn committed_total(&self) -> Watts {
+        let mut per_gpu: Vec<Watts> = self.caps.iter().map(|c| c.target()).collect();
+        for p in &self.pending {
+            per_gpu[p.gpu.0] = per_gpu[p.gpu.0].max(p.cap);
+        }
+        per_gpu.iter().sum()
+    }
+
+    fn check_limits(&self, cap: Watts) -> Result<(), PowerError> {
+        if cap < self.min_w - 1e-9 || cap > self.max_w + 1e-9 {
+            return Err(PowerError::OutOfLimits {
+                cap,
+                min: self.min_w,
+                max: self.max_w,
+            });
+        }
+        Ok(())
+    }
+
+    /// Immediately retarget one GPU's cap (budget-checked).
+    pub fn set_cap(&mut self, now: Micros, gpu: GpuId, cap: Watts) -> Result<Micros, PowerError> {
+        self.check_limits(cap)?;
+        if self.enforce {
+            let delta = cap - self.caps[gpu.0].target();
+            let total = self.committed_total() + delta.max(0.0);
+            if delta > 0.0 && total > self.budget + 1e-6 {
+                return Err(PowerError::BudgetExceeded {
+                    total,
+                    budget: self.budget,
+                });
+            }
+        }
+        Ok(self.caps[gpu.0].set_target(now, cap, &self.profile))
+    }
+
+    /// Move `total_w` watts from `sources` to `sinks` (split evenly inside
+    /// each pool, clamped to limits). Sources lower now; sinks raise after
+    /// every source's settle deadline. Returns what actually moved — the
+    /// clamps can reduce it (the controller's POWERLIMITSREACHED signal).
+    pub fn move_power(
+        &mut self,
+        now: Micros,
+        sources: &[GpuId],
+        sinks: &[GpuId],
+        total_w: Watts,
+        sink_ceiling: Watts,
+    ) -> Result<PowerMove, PowerError> {
+        if sources.is_empty() {
+            return Err(PowerError::EmptyPool("source"));
+        }
+        if sinks.is_empty() {
+            return Err(PowerError::EmptyPool("sink"));
+        }
+        // A pending raise on a source would land *after* we lower it and
+        // overshoot the budget: cancel source-side pending raises first.
+        self.pending.retain(|p| !sources.contains(&p.gpu));
+        // Sink room must account for raises already committed to them.
+        let committed_cap = |mgr: &Self, g: GpuId| {
+            let mut c = mgr.caps[g.0].target();
+            for p in &mgr.pending {
+                if p.gpu == g {
+                    c = c.max(p.cap);
+                }
+            }
+            c
+        };
+        // How much can each side actually absorb?
+        let per_source = total_w / sources.len() as f64;
+        let mut takeable = 0.0;
+        let mut lowers: Vec<(GpuId, Watts)> = Vec::new();
+        for &g in sources {
+            let cur = self.caps[g.0].target();
+            let new = (cur - per_source).max(self.min_w);
+            takeable += cur - new;
+            lowers.push((g, new));
+        }
+        let ceiling = sink_ceiling.min(self.max_w);
+        let mut givable = 0.0;
+        for &g in sinks {
+            givable += (ceiling - committed_cap(self, g)).max(0.0);
+        }
+        let moved = takeable.min(givable);
+        if moved < 1.0 {
+            // Nothing meaningful can move; report zero-move.
+            return Ok(PowerMove {
+                lowered: Vec::new(),
+                raised: Vec::new(),
+                effective_at: now,
+            });
+        }
+        // Scale the lowers down if sinks can't absorb everything.
+        let scale = moved / takeable;
+        let mut settle_deadline = now;
+        let mut lowered = Vec::new();
+        for (g, _) in &mut lowers {
+            let cur = self.caps[g.0].target();
+            let reduce = (cur - ((cur - per_source).max(self.min_w))) * scale;
+            let new = cur - reduce;
+            let d = self.caps[g.0].set_target(now, new, &self.profile);
+            settle_deadline = settle_deadline.max(d);
+            lowered.push((*g, new));
+        }
+        // Queue the raises for after the sources settle.
+        let per_sink_room: Vec<Watts> = sinks
+            .iter()
+            .map(|&g| (ceiling - committed_cap(self, g)).max(0.0))
+            .collect();
+        let room_total: f64 = per_sink_room.iter().sum();
+        let mut raised = Vec::new();
+        for (&g, &room) in sinks.iter().zip(&per_sink_room) {
+            if room <= 0.0 {
+                continue;
+            }
+            let share = moved * room / room_total;
+            let cap = committed_cap(self, g) + share;
+            self.pending.push(PendingRaise {
+                gpu: g,
+                cap,
+                at: settle_deadline,
+            });
+            raised.push((g, cap));
+        }
+        Ok(PowerMove {
+            lowered,
+            raised,
+            effective_at: settle_deadline,
+        })
+    }
+
+    /// Set every GPU to `budget / n` (paper: DISTRIBUTEUNIFORMPOWER after a
+    /// role move). Lower-first/raise-later sequencing applies here too.
+    pub fn distribute_uniform(&mut self, now: Micros) -> Micros {
+        let uniform = (self.budget / self.caps.len() as f64).clamp(self.min_w, self.max_w);
+        self.pending.clear();
+        let mut settle = now;
+        // Phase 1: all lowers immediately.
+        for i in 0..self.caps.len() {
+            if self.caps[i].target() > uniform {
+                let d = self.caps[i].set_target(now, uniform, &self.profile);
+                settle = settle.max(d);
+            }
+        }
+        // Phase 2: raises queued after the lowers settle.
+        for i in 0..self.caps.len() {
+            if self.caps[i].target() < uniform {
+                self.pending.push(PendingRaise {
+                    gpu: GpuId(i),
+                    cap: uniform,
+                    at: settle,
+                });
+            }
+        }
+        settle
+    }
+
+    /// Apply any pending raises that are due; returns them for logging.
+    pub fn poll(&mut self, now: Micros) -> Vec<(GpuId, Watts)> {
+        let mut applied = Vec::new();
+        let mut remaining = Vec::new();
+        let pending = std::mem::take(&mut self.pending);
+        for p in pending {
+            if p.at <= now {
+                // Raise within limits; budget holds by construction.
+                let cap = p.cap.clamp(self.min_w, self.max_w);
+                self.caps[p.gpu.0].set_target(now, cap, &self.profile);
+                applied.push((p.gpu, cap));
+            } else {
+                remaining.push(p);
+            }
+        }
+        self.pending = remaining;
+        applied
+    }
+
+    /// Earliest pending-raise deadline (so the DES can schedule a poll).
+    pub fn next_pending_at(&self) -> Option<Micros> {
+        self.pending.iter().map(|p| p.at).min()
+    }
+
+    /// Budget invariant on committed power (property-tested).
+    pub fn budget_ok(&self) -> bool {
+        !self.enforce || self.committed_total() <= self.budget + 1e-6
+    }
+
+    /// All target caps (Fig 9a trace).
+    pub fn targets(&self) -> Vec<Watts> {
+        self.caps.iter().map(|c| c.target()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::SECOND;
+
+    fn manager_4p4d() -> PowerManager {
+        PowerManager::new(&[600.0; 8], 4800.0, true, 400.0, 750.0)
+    }
+
+    #[test]
+    fn set_cap_respects_budget() {
+        let mut m = manager_4p4d();
+        // Raising one GPU to 750 would commit 4950 W.
+        let err = m.set_cap(0, GpuId(0), 750.0).unwrap_err();
+        assert!(matches!(err, PowerError::BudgetExceeded { .. }));
+        // Lowering is always fine.
+        m.set_cap(0, GpuId(0), 450.0).unwrap();
+        // Now there's headroom for a raise elsewhere.
+        m.set_cap(1 * SECOND, GpuId(1), 750.0).unwrap();
+        assert!(m.budget_ok());
+    }
+
+    #[test]
+    fn set_cap_respects_limits() {
+        let mut m = manager_4p4d();
+        assert!(m.set_cap(0, GpuId(0), 300.0).is_err());
+        assert!(m.set_cap(0, GpuId(0), 800.0).is_err());
+    }
+
+    #[test]
+    fn move_power_sequences_source_before_sink() {
+        let mut m = manager_4p4d();
+        let sources: Vec<GpuId> = (4..8).map(GpuId).collect();
+        let sinks: Vec<GpuId> = (0..4).map(GpuId).collect();
+        let mv = m
+            .move_power(0, &sources, &sinks, 200.0, 750.0)
+            .unwrap();
+        assert_eq!(mv.lowered.len(), 4);
+        assert!(mv.effective_at > 0, "raises must wait for settle");
+        // Sinks unchanged until poll after effective_at.
+        assert_eq!(m.target(GpuId(0)), 600.0);
+        assert!(m.poll(mv.effective_at - 1).is_empty());
+        let applied = m.poll(mv.effective_at);
+        assert_eq!(applied.len(), 4);
+        assert!((m.target(GpuId(0)) - 650.0).abs() < 1e-6);
+        assert!((m.target(GpuId(4)) - 550.0).abs() < 1e-6);
+        assert!(m.budget_ok());
+    }
+
+    #[test]
+    fn move_power_clamps_at_min() {
+        let mut m = PowerManager::new(&[420.0, 420.0, 600.0, 600.0], 4800.0, true, 400.0, 750.0);
+        let mv = m
+            .move_power(0, &[GpuId(0), GpuId(1)], &[GpuId(2), GpuId(3)], 200.0, 750.0)
+            .unwrap();
+        // Each source can only give 20 W.
+        let total_lowered: f64 = mv
+            .lowered
+            .iter()
+            .map(|&(g, new)| 420.0 - new.max(400.0) + (g.0 as f64) * 0.0)
+            .sum();
+        assert!(total_lowered <= 40.0 + 1e-6, "lowered {total_lowered}");
+        m.poll(mv.effective_at);
+        assert!(m.budget_ok());
+        for i in 0..2 {
+            assert!(m.target(GpuId(i)) >= 400.0 - 1e-9);
+        }
+    }
+
+    #[test]
+    fn move_power_respects_sink_ceiling() {
+        let mut m = manager_4p4d();
+        let mv = m
+            .move_power(0, &[GpuId(4)], &[GpuId(0)], 200.0, 650.0)
+            .unwrap();
+        m.poll(mv.effective_at);
+        assert!(m.target(GpuId(0)) <= 650.0 + 1e-9);
+    }
+
+    #[test]
+    fn move_power_zero_when_sinks_full() {
+        let mut m = PowerManager::new(&[750.0, 400.0], 1150.0, true, 400.0, 750.0);
+        let mv = m
+            .move_power(0, &[GpuId(1)], &[GpuId(0)], 100.0, 750.0)
+            .unwrap();
+        assert!(mv.raised.is_empty(), "sink already at max: {mv:?}");
+        // Source untouched by a zero-move.
+        assert_eq!(m.target(GpuId(1)), 400.0);
+    }
+
+    #[test]
+    fn distribute_uniform_converges_to_budget_share() {
+        let mut m = PowerManager::new(
+            &[750.0, 750.0, 750.0, 750.0, 450.0, 450.0, 450.0, 450.0],
+            4800.0,
+            true,
+            400.0,
+            750.0,
+        );
+        let settle = m.distribute_uniform(0);
+        m.poll(settle);
+        for i in 0..8 {
+            assert!((m.target(GpuId(i)) - 600.0).abs() < 1e-6);
+        }
+        assert!(m.budget_ok());
+    }
+
+    #[test]
+    fn committed_total_counts_pending() {
+        let mut m = manager_4p4d();
+        let mv = m
+            .move_power(0, &[GpuId(4)], &[GpuId(0)], 100.0, 750.0)
+            .unwrap();
+        // Before the raise lands, committed must already include it so a
+        // concurrent set_cap cannot double-spend the headroom.
+        assert!(m.committed_total() >= 4800.0 - 1e-6);
+        let err = m.set_cap(1, GpuId(1), 700.0);
+        assert!(err.is_err(), "double-spend must be rejected");
+        m.poll(mv.effective_at);
+        assert!(m.budget_ok());
+    }
+
+    #[test]
+    fn unenforced_budget_allows_oversubscription() {
+        let mut m = PowerManager::new(&[750.0; 8], 4800.0, false, 400.0, 750.0);
+        // 6000 W committed but enforce=false (Fig 3's uncapped run).
+        assert!(m.committed_total() > m.budget());
+        assert!(m.budget_ok());
+        m.set_cap(0, GpuId(0), 750.0).unwrap();
+    }
+
+    #[test]
+    fn next_pending_at_reports_earliest() {
+        let mut m = manager_4p4d();
+        assert!(m.next_pending_at().is_none());
+        let mv = m
+            .move_power(0, &[GpuId(4)], &[GpuId(0)], 50.0, 750.0)
+            .unwrap();
+        assert_eq!(m.next_pending_at(), Some(mv.effective_at));
+    }
+}

@@ -1,0 +1,11 @@
+//! Power subsystem: performance/power model, cap ramp dynamics, and the
+//! node-level power manager that enforces the budget + source-before-sink
+//! shifting protocol (paper §2).
+
+pub mod capper;
+pub mod manager;
+pub mod model;
+
+pub use capper::{CapState, RampProfile};
+pub use manager::{PowerError, PowerManager, PowerMove};
+pub use model::PowerModel;

@@ -1,0 +1,291 @@
+//! Calibrated power→performance model (paper Fig 4, DESIGN.md §4).
+//!
+//! The paper measured Llama-3.1-8B on an MI300X at caps 400–750 W:
+//!   * prefill (compute-bound) speeds up ≈1.8x from 400 W to 750 W and
+//!     flattens above ~700 W;
+//!   * decode (memory-bound) speeds up ≈1.3–1.5x and flattens above
+//!     ~600 W — the asymmetry RAPID exploits.
+//!
+//! We model each phase's speedup (relative to 400 W) as a saturating
+//! exponential with the knee/max taken from the figure, and derive batch
+//! latencies from calibrated base rates. Power *draw* is modelled as
+//! idle + utilization-dependent dynamic power, clipped by the cap.
+
+use crate::config::PerfModelConfig;
+use crate::types::{Micros, Watts};
+
+/// Reference power for the speedup curves (lowest cap in Fig 4).
+pub const REF_W: Watts = 400.0;
+
+/// Saturating speedup curve: 1.0 at `REF_W`, `max` at/above `knee`.
+/// Exponential approach keeps the marginal gain per 50 W step roughly
+/// matching Fig 4 (steady gains, then a flat tail).
+fn saturating_speedup(power: Watts, knee: Watts, max: f64) -> f64 {
+    let p = power.clamp(REF_W, 1000.0);
+    if p >= knee {
+        return max;
+    }
+    // Normalized position in [0,1] with an exponential shoulder.
+    let x = (p - REF_W) / (knee - REF_W);
+    let k = 0.5; // shoulder sharpness: 600 W prefill ≈ 15% slower than 750 W (§5.1)
+    let frac = (1.0 - (-k * x).exp()) / (1.0 - (-k_f()).exp());
+    1.0 + (max - 1.0) * frac.min(1.0)
+}
+
+#[inline]
+fn k_f() -> f64 {
+    0.5
+}
+
+/// The whole-node performance/power model. Cheap to copy; all methods are
+/// pure so both the DES and the real-serving pacer share it.
+#[derive(Debug, Clone)]
+pub struct PowerModel {
+    cfg: PerfModelConfig,
+}
+
+impl PowerModel {
+    pub fn new(cfg: PerfModelConfig) -> Self {
+        PowerModel { cfg }
+    }
+
+    pub fn cfg(&self) -> &PerfModelConfig {
+        &self.cfg
+    }
+
+    /// Prefill speedup at `power` relative to 400 W (Fig 4a).
+    pub fn prefill_speedup(&self, power: Watts) -> f64 {
+        saturating_speedup(power, self.cfg.prefill_knee_w, self.cfg.prefill_speedup_max)
+    }
+
+    /// Decode speedup at `power` relative to 400 W (Fig 4b).
+    pub fn decode_speedup(&self, power: Watts) -> f64 {
+        saturating_speedup(power, self.cfg.decode_knee_w, self.cfg.decode_speedup_max)
+    }
+
+    /// Prompt-processing rate (tokens/s) of one prefill GPU at `power`.
+    pub fn prefill_rate(&self, power: Watts) -> f64 {
+        let at_max = self.cfg.prefill_rate_tps;
+        let su_max = self.prefill_speedup(750.0);
+        at_max * self.prefill_speedup(power) / su_max
+    }
+
+    /// Execution time of a prefill batch totalling `tokens` prompt tokens.
+    pub fn prefill_batch_time(&self, tokens: u32, power: Watts) -> Micros {
+        let secs = tokens as f64 / self.prefill_rate(power);
+        self.cfg.prefill_overhead + (secs * 1e6) as Micros
+    }
+
+    /// One decode iteration with `batch` active requests whose mean live
+    /// context is `mean_ctx_tokens`, at `power`. Memory-bound: base
+    /// (weight streaming) + per-request scheduling + per-request KV reads
+    /// proportional to context length.
+    pub fn decode_step_time(&self, batch: usize, mean_ctx_tokens: f64, power: Watts) -> Micros {
+        if batch == 0 {
+            return 0;
+        }
+        let ctx = mean_ctx_tokens.min(self.cfg.decode_kv_ctx_cap_tokens);
+        let kv = self.cfg.decode_kv_us_per_ktok * (ctx / 1000.0);
+        let at_600 = self.cfg.decode_base as f64
+            + (self.cfg.decode_per_req as f64 + kv) * batch as f64;
+        let su_600 = self.decode_speedup(600.0);
+        (at_600 * su_600 / self.decode_speedup(power)) as Micros
+    }
+
+    /// Latency of a chunked-prefill coalesced iteration: a prefill chunk of
+    /// `chunk_tokens` (having already processed `done_tokens` of the same
+    /// prompt) co-scheduled with `decode_batch` decode requests
+    /// (Sarathi-style). Two interference terms the disaggregated path does
+    /// not pay: cross-chunk attention re-reads (`chunk_reread_frac` of the
+    /// prompt prefix re-touched per chunk) and the piggybacked decode cost.
+    pub fn coalesced_step_time(
+        &self,
+        chunk_tokens: u32,
+        done_tokens: u32,
+        decode_batch: usize,
+        mean_ctx_tokens: f64,
+        power: Watts,
+    ) -> Micros {
+        let prefill_part = if chunk_tokens > 0 {
+            let effective =
+                chunk_tokens as f64 + self.cfg.chunk_reread_frac * done_tokens as f64;
+            self.prefill_batch_time(effective as u32, power)
+        } else {
+            0
+        };
+        let decode_part = self.decode_step_time(decode_batch, mean_ctx_tokens, power);
+        // Overlap factor: chunked prefill hides part of the decode cost
+        // inside the chunk's compute, but interference remains (the
+        // motivation for disaggregation).
+        if chunk_tokens > 0 {
+            prefill_part + (decode_part as f64 * 0.6) as Micros
+        } else {
+            decode_part
+        }
+    }
+
+    /// KV-cache transfer time for `tokens` over the intra-node link.
+    pub fn kv_transfer_time(&self, tokens: u32) -> Micros {
+        let bytes = tokens as u64 * self.cfg.kv_bytes_per_token;
+        ((bytes as f64 / self.cfg.xgmi_bw) * 1e6) as Micros
+    }
+
+    /// Instantaneous power draw of a GPU at `cap` with `util` in [0,1].
+    /// Prefill saturates its cap; decode tops out near its knee (it cannot
+    /// pull much more power even uncapped — memory-bound).
+    pub fn draw(&self, cap: Watts, util: f64, is_prefill: bool) -> Watts {
+        let util = util.clamp(0.0, 1.0);
+        let ceiling = if is_prefill {
+            cap
+        } else {
+            // Decode rarely draws far above its knee even when allowed.
+            cap.min(self.cfg.decode_knee_w + 20.0)
+        };
+        let dynamic = (ceiling - self.cfg.idle_w).max(0.0) * util;
+        (self.cfg.idle_w + dynamic).min(cap)
+    }
+
+    /// Idle draw (W).
+    pub fn idle_w(&self) -> Watts {
+        self.cfg.idle_w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> PowerModel {
+        PowerModel::new(PerfModelConfig::default())
+    }
+
+    #[test]
+    fn speedup_anchors_match_paper() {
+        let m = model();
+        assert!((m.prefill_speedup(400.0) - 1.0).abs() < 1e-9);
+        assert!((m.prefill_speedup(750.0) - 1.8).abs() < 1e-9);
+        assert!((m.decode_speedup(400.0) - 1.0).abs() < 1e-9);
+        let d600 = m.decode_speedup(600.0);
+        assert!((d600 - 1.45).abs() < 1e-9, "decode flat by 600: {d600}");
+        // above the knee: flat
+        assert_eq!(m.decode_speedup(700.0), m.decode_speedup(750.0));
+    }
+
+    #[test]
+    fn speedups_monotone_in_power() {
+        let m = model();
+        let mut last_p = 0.0;
+        let mut last_d = 0.0;
+        for w in (400..=750).step_by(50) {
+            let p = m.prefill_speedup(w as f64);
+            let d = m.decode_speedup(w as f64);
+            assert!(p >= last_p && d >= last_d, "monotone at {w}");
+            last_p = p;
+            last_d = d;
+        }
+    }
+
+    #[test]
+    fn prefill_600_vs_750_gap_about_15pct() {
+        // Paper §5.1: 600 W prefill is ~15% slower than 750 W.
+        let m = model();
+        let t600 = m.prefill_batch_time(4096, 600.0);
+        let t750 = m.prefill_batch_time(4096, 750.0);
+        let slowdown = t600 as f64 / t750 as f64;
+        assert!(
+            (1.08..=1.25).contains(&slowdown),
+            "600W/750W prefill ratio {slowdown}"
+        );
+    }
+
+    #[test]
+    fn decode_power_insensitive_above_knee() {
+        let m = model();
+        let t600 = m.decode_step_time(16, 2000.0, 600.0);
+        let t750 = m.decode_step_time(16, 2000.0, 750.0);
+        assert_eq!(t600, t750, "decode gains above 600 W should be zero");
+        let t450 = m.decode_step_time(16, 2000.0, 450.0);
+        assert!(t450 > t600, "decode slower below the knee");
+        // ... but not catastrophically (Fig 4b spans ~1.45x total)
+        assert!((t450 as f64 / t600 as f64) < 1.45);
+    }
+
+    #[test]
+    fn decode_step_scales_with_context() {
+        let m = model();
+        let short = m.decode_step_time(8, 500.0, 600.0);
+        let long = m.decode_step_time(8, 2000.0, 600.0);
+        assert!(long > short, "KV reads grow with context");
+        // ... but saturate once the stream is bandwidth-bound.
+        let capped = m.decode_step_time(8, 2500.0, 600.0);
+        let beyond = m.decode_step_time(8, 8000.0, 600.0);
+        assert_eq!(capped, beyond, "KV cost saturates past the cap");
+    }
+
+    #[test]
+    fn prefill_batch_time_scales_with_tokens() {
+        let m = model();
+        let t1 = m.prefill_batch_time(1024, 750.0);
+        let t4 = m.prefill_batch_time(4096, 750.0);
+        let ratio = (t4 - m.cfg().prefill_overhead) as f64
+            / (t1 - m.cfg().prefill_overhead) as f64;
+        assert!((ratio - 4.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn decode_step_scales_with_batch() {
+        let m = model();
+        assert!(m.decode_step_time(32, 1000.0, 600.0) > m.decode_step_time(1, 1000.0, 600.0));
+        assert_eq!(m.decode_step_time(0, 1000.0, 600.0), 0);
+    }
+
+    #[test]
+    fn coalesced_step_shows_interference() {
+        let m = model();
+        let pure_prefill = m.prefill_batch_time(512, 750.0);
+        let mixed = m.coalesced_step_time(512, 0, 16, 1000.0, 750.0);
+        assert!(mixed > pure_prefill, "decode piggyback adds interference");
+        let pure_decode = m.coalesced_step_time(0, 0, 16, 1000.0, 750.0);
+        assert_eq!(pure_decode, m.decode_step_time(16, 1000.0, 750.0));
+    }
+
+    #[test]
+    fn chunk_reread_taxes_deep_chunks() {
+        // A chunk late in a long prompt costs more than the first chunk.
+        let m = model();
+        let first = m.coalesced_step_time(512, 0, 0, 0.0, 750.0);
+        let deep = m.coalesced_step_time(512, 7680, 0, 0.0, 750.0);
+        assert!(deep > first, "re-read tax: {deep} <= {first}");
+        // One-shot prefill of the whole prompt beats the sum of chunks.
+        let oneshot = m.prefill_batch_time(8192, 750.0);
+        let chunked: u64 = (0..16)
+            .map(|i| m.coalesced_step_time(512, i * 512, 0, 0.0, 750.0))
+            .sum();
+        assert!(chunked > oneshot, "chunked {chunked} <= oneshot {oneshot}");
+    }
+
+    #[test]
+    fn kv_transfer_reasonable() {
+        let m = model();
+        // 4096 tokens * 128 KiB = 512 MiB over 64 GB/s ≈ 8.4 ms
+        let t = m.kv_transfer_time(4096);
+        assert!((7_000..10_000).contains(&t), "t={t}");
+    }
+
+    #[test]
+    fn draw_respects_cap_and_idle() {
+        let m = model();
+        assert_eq!(m.draw(750.0, 0.0, true), m.idle_w());
+        assert_eq!(m.draw(750.0, 1.0, true), 750.0);
+        // decode can't pull 750 even when allowed
+        assert!(m.draw(750.0, 1.0, false) <= 620.0 + 1e-9);
+        // cap always wins
+        assert!(m.draw(450.0, 1.0, true) <= 450.0);
+    }
+
+    #[test]
+    fn rate_at_750_matches_config() {
+        let m = model();
+        assert!((m.prefill_rate(750.0) - 9_300.0).abs() < 1e-6);
+    }
+}

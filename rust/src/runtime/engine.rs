@@ -1,0 +1,244 @@
+//! PJRT execution engine: loads AOT artifacts and runs prefill / decode.
+//!
+//! Follows the reference wiring (/opt/xla-example/load_hlo): HLO **text**
+//! -> `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `client.compile` -> `execute_b`. Hot-path design (EXPERIMENTS.md
+//! §Perf): weights are uploaded **once** as device-resident buffers, and
+//! the KV caches returned by prefill/decode stay on device — only token
+//! ids, positions and logits cross the host boundary per step. Every call
+//! passes `[*params, *data_args]` positionally, exactly as `aot.py`
+//! lowered them (multi-output modules: PJRT unpacks the root).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::manifest::{Manifest, VariantKind};
+
+/// The flat serving state travelling between prefill and decode —
+/// `concat(k_cache, v_cache, logits)` as ONE device-resident buffer, so
+/// the decode chain never moves the cache (or the weights) through the
+/// host. See aot.py's calling-convention note.
+pub struct KvCache {
+    pub state: xla::PjRtBuffer,
+    /// Batch lanes the cache was produced for (variant batch size).
+    pub batch: usize,
+}
+
+/// Prefill output for one batch call.
+pub struct PrefillOut {
+    /// Greedy next token per lane.
+    pub tokens: Vec<i64>,
+    pub kv: KvCache,
+}
+
+/// Decode-step output.
+pub struct DecodeOut {
+    pub tokens: Vec<i64>,
+    pub kv: KvCache,
+}
+
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    /// Device-resident weights, uploaded once at load.
+    params: Vec<xla::PjRtBuffer>,
+    prefill: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    decode: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    extract: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Load manifest + weights and compile every variant executable.
+    pub fn load(artifacts: impl AsRef<Path>) -> Result<Engine> {
+        let manifest = Manifest::load(&artifacts)?;
+        manifest.validate()?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt: {e}"))?;
+
+        // --- weights ------------------------------------------------
+        let wpath = manifest.dir.join(&manifest.weights_file);
+        let bytes = std::fs::read(&wpath)
+            .with_context(|| format!("reading {}", wpath.display()))?;
+        let floats: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let mut params = Vec::with_capacity(manifest.params.len());
+        for p in &manifest.params {
+            let slice = &floats[p.offset_elems..p.offset_elems + p.elems()];
+            let buf = client
+                .buffer_from_host_buffer(slice, &p.shape, None)
+                .map_err(|e| anyhow!("upload {}: {e}", p.name))?;
+            params.push(buf);
+        }
+
+        // --- executables ---------------------------------------------
+        let mut prefill = BTreeMap::new();
+        let mut decode = BTreeMap::new();
+        let mut extract = BTreeMap::new();
+        for v in &manifest.variants {
+            let path = manifest.dir.join(&v.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e}", v.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e}", v.file))?;
+            match v.kind {
+                VariantKind::Prefill => prefill.insert(v.batch, exe),
+                VariantKind::Decode => decode.insert(v.batch, exe),
+                VariantKind::Extract => extract.insert(v.batch, exe),
+            };
+        }
+        Ok(Engine {
+            manifest,
+            client,
+            params,
+            prefill,
+            decode,
+            extract,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn prefill_batches(&self) -> Vec<usize> {
+        self.prefill.keys().copied().collect()
+    }
+
+    pub fn decode_batches(&self) -> Vec<usize> {
+        self.decode.keys().copied().collect()
+    }
+
+    /// Pull logits out of a device state via the extract module and take
+    /// the per-lane argmax (the only per-step host download: B x V f32).
+    fn read_logits(&self, state: &xla::PjRtBuffer, batch: usize, vocab: usize) -> Result<Vec<i64>> {
+        let exe = self
+            .extract
+            .get(&batch)
+            .ok_or_else(|| anyhow!("no extract variant for batch {batch}"))?;
+        let logits_buf = execute_single(exe, &[state])?;
+        let logits = logits_buf.to_literal_sync().map_err(|e| anyhow!("{e}"))?;
+        Self::argmax_rows(&logits, batch, vocab)
+    }
+
+    fn argmax_rows(logits: &xla::Literal, rows: usize, cols: usize) -> Result<Vec<i64>> {
+        let flat: Vec<f32> = logits.to_vec().map_err(|e| anyhow!("{e}"))?;
+        if flat.len() != rows * cols {
+            bail!("logits size {} != {rows}x{cols}", flat.len());
+        }
+        Ok((0..rows)
+            .map(|r| {
+                let row = &flat[r * cols..(r + 1) * cols];
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i as i64)
+                    .unwrap_or(0)
+            })
+            .collect())
+    }
+
+    /// Run prefill on up to `batch` prompts (padded to the variant batch).
+    ///
+    /// `prompts` are token id sequences; each is right-padded/truncated to
+    /// `prefill_seq`. Returns the first generated token per lane plus the
+    /// KV caches (lanes beyond `prompts.len()` are padding).
+    pub fn prefill(&self, prompts: &[Vec<i64>]) -> Result<PrefillOut> {
+        let s = self.manifest.model.prefill_seq;
+        let vocab = self.manifest.model.vocab;
+        let batch = self
+            .manifest
+            .pick_batch(VariantKind::Prefill, prompts.len())
+            .ok_or_else(|| {
+                anyhow!(
+                    "no prefill variant fits {} prompts (have {:?})",
+                    prompts.len(),
+                    self.prefill_batches()
+                )
+            })?;
+        let exe = &self.prefill[&batch];
+
+        let mut tokens = vec![0i32; batch * s];
+        let mut lens = vec![1i32; batch];
+        for (i, p) in prompts.iter().enumerate() {
+            let n = p.len().min(s).max(1);
+            for (j, &t) in p.iter().take(n).enumerate() {
+                tokens[i * s + j] = t as i32;
+            }
+            lens[i] = n as i32;
+        }
+        let tokens_buf = self
+            .client
+            .buffer_from_host_buffer(&tokens, &[batch, s], None)
+            .map_err(|e| anyhow!("{e}"))?;
+        let lens_buf = self
+            .client
+            .buffer_from_host_buffer(&lens, &[batch], None)
+            .map_err(|e| anyhow!("{e}"))?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = self.params.iter().collect();
+        args.push(&tokens_buf);
+        args.push(&lens_buf);
+        let state = execute_single(exe, &args).map_err(|e| anyhow!("prefill: {e}"))?;
+        let next = self.read_logits(&state, batch, vocab)?;
+        Ok(PrefillOut {
+            tokens: next,
+            kv: KvCache { state, batch },
+        })
+    }
+
+    /// One decode step. `tokens`/`pos` must have `kv.batch` lanes (pad
+    /// unused lanes with token 0 / their last pos).
+    pub fn decode(&self, tokens: &[i64], pos: &[i64], kv: &KvCache) -> Result<DecodeOut> {
+        let batch = kv.batch;
+        let vocab = self.manifest.model.vocab;
+        if tokens.len() != batch || pos.len() != batch {
+            bail!("decode lanes {} != cache batch {batch}", tokens.len());
+        }
+        let exe = self
+            .decode
+            .get(&batch)
+            .ok_or_else(|| anyhow!("no decode variant for batch {batch}"))?;
+        let t: Vec<i32> = tokens.iter().map(|&x| x as i32).collect();
+        let p: Vec<i32> = pos.iter().map(|&x| x as i32).collect();
+        let t_buf = self
+            .client
+            .buffer_from_host_buffer(&t, &[batch], None)
+            .map_err(|e| anyhow!("{e}"))?;
+        let p_buf = self
+            .client
+            .buffer_from_host_buffer(&p, &[batch], None)
+            .map_err(|e| anyhow!("{e}"))?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = self.params.iter().collect();
+        args.push(&t_buf);
+        args.push(&p_buf);
+        args.push(&kv.state);
+        let state = execute_single(exe, &args).map_err(|e| anyhow!("decode: {e}"))?;
+        let next = self.read_logits(&state, batch, vocab)?;
+        Ok(DecodeOut {
+            tokens: next,
+            kv: KvCache { state, batch },
+        })
+    }
+}
+
+/// Execute on device buffers; the module has exactly one (array) output
+/// which stays on device.
+fn execute_single(
+    exe: &xla::PjRtLoadedExecutable,
+    args: &[&xla::PjRtBuffer],
+) -> Result<xla::PjRtBuffer> {
+    let mut out = exe.execute_b(args).map_err(|e| anyhow!("{e}"))?;
+    let replica = out.first_mut().ok_or_else(|| anyhow!("no replica outputs"))?;
+    if replica.len() != 1 {
+        bail!("expected 1 output buffer, got {}", replica.len());
+    }
+    Ok(replica.pop().unwrap())
+}

@@ -1,0 +1,248 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the rust runtime (shapes, dtypes, parameter order, variant files).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub prefill_seq: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset_elems: usize,
+}
+
+impl ParamSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VariantKind {
+    Prefill,
+    Decode,
+    /// Logits extraction: state -> f32[batch, vocab] (tiny, per step).
+    Extract,
+}
+
+#[derive(Debug, Clone)]
+pub struct VariantSpec {
+    pub kind: VariantKind,
+    pub batch: usize,
+    pub file: String,
+    /// Flat state length: 2 * cache elems + batch * vocab.
+    pub state_elems: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub seed: u64,
+    pub model: ModelSpec,
+    pub weights_file: String,
+    pub total_elems: usize,
+    pub params: Vec<ParamSpec>,
+    pub variants: Vec<VariantSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        Self::from_json(dir, &j)
+    }
+
+    fn from_json(dir: PathBuf, j: &Json) -> Result<Manifest> {
+        let field = |o: &Json, k: &str| -> Result<Json> {
+            Ok(o.get(k).ok_or_else(|| anyhow!("missing '{k}'"))?.clone())
+        };
+        let version = field(j, "format_version")?
+            .as_u64()
+            .ok_or_else(|| anyhow!("bad format_version"))?;
+        if version != 2 {
+            bail!("unsupported manifest version {version} (rebuild: make artifacts)");
+        }
+        let m = field(j, "model")?;
+        let u = |k: &str| -> Result<usize> {
+            field(&m, k)?.as_usize().ok_or_else(|| anyhow!("bad model.{k}"))
+        };
+        let model = ModelSpec {
+            vocab: u("vocab")?,
+            d_model: u("d_model")?,
+            n_layers: u("n_layers")?,
+            n_heads: u("n_heads")?,
+            head_dim: u("head_dim")?,
+            d_ff: u("d_ff")?,
+            max_seq: u("max_seq")?,
+            prefill_seq: u("prefill_seq")?,
+        };
+        let w = field(j, "weights")?;
+        let weights_file = field(&w, "file")?
+            .as_str()
+            .ok_or_else(|| anyhow!("bad weights.file"))?
+            .to_string();
+        let total_elems = field(&w, "total_elems")?
+            .as_usize()
+            .ok_or_else(|| anyhow!("bad weights.total_elems"))?;
+        let mut params = Vec::new();
+        for p in field(j, "params")?.as_arr().unwrap_or(&[]) {
+            params.push(ParamSpec {
+                name: field(p, "name")?.as_str().unwrap_or("").to_string(),
+                shape: field(p, "shape")?
+                    .as_dims()
+                    .ok_or_else(|| anyhow!("bad param shape"))?,
+                offset_elems: field(p, "offset_elems")?
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("bad offset"))?,
+            });
+        }
+        if params.is_empty() {
+            bail!("manifest has no params");
+        }
+        let mut variants = Vec::new();
+        for v in field(j, "variants")?.as_arr().unwrap_or(&[]) {
+            let kind = match field(v, "kind")?.as_str() {
+                Some("prefill") => VariantKind::Prefill,
+                Some("decode") => VariantKind::Decode,
+                Some("extract") => VariantKind::Extract,
+                other => bail!("unknown variant kind {other:?}"),
+            };
+            variants.push(VariantSpec {
+                kind,
+                batch: field(v, "batch")?
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("bad batch"))?,
+                file: field(v, "file")?
+                    .as_str()
+                    .ok_or_else(|| anyhow!("bad file"))?
+                    .to_string(),
+                state_elems: field(v, "state_elems")?
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("bad state_elems"))?,
+            });
+        }
+        if variants.is_empty() {
+            bail!("manifest has no variants");
+        }
+        let seed = field(j, "seed")?.as_u64().unwrap_or(0);
+        Ok(Manifest {
+            dir,
+            seed,
+            model,
+            weights_file,
+            total_elems,
+            params,
+            variants,
+        })
+    }
+
+    /// Consistency checks (offsets contiguous, sizes match weights.bin).
+    pub fn validate(&self) -> Result<()> {
+        let mut offset = 0;
+        for p in &self.params {
+            if p.offset_elems != offset {
+                bail!("param {} offset {} != expected {offset}", p.name, p.offset_elems);
+            }
+            offset += p.elems();
+        }
+        if offset != self.total_elems {
+            bail!("param elems {offset} != total {}", self.total_elems);
+        }
+        let wpath = self.dir.join(&self.weights_file);
+        let len = std::fs::metadata(&wpath)
+            .with_context(|| format!("weights file {}", wpath.display()))?
+            .len();
+        if len != self.total_elems as u64 * 4 {
+            bail!("weights.bin size {len} != {} f32 elems", self.total_elems);
+        }
+        Ok(())
+    }
+
+    /// The available batch sizes for a kind, ascending.
+    pub fn batches(&self, kind: VariantKind) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .variants
+            .iter()
+            .filter(|x| x.kind == kind)
+            .map(|x| x.batch)
+            .collect();
+        v.sort();
+        v
+    }
+
+    /// Smallest variant batch that fits `n` requests (None if n exceeds
+    /// the largest — caller must split).
+    pub fn pick_batch(&self, kind: VariantKind, n: usize) -> Option<usize> {
+        self.batches(kind).into_iter().find(|&b| b >= n)
+    }
+
+    pub fn variant(&self, kind: VariantKind, batch: usize) -> Option<&VariantSpec> {
+        self.variants
+            .iter()
+            .find(|v| v.kind == kind && v.batch == batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn loads_and_validates_built_artifacts() {
+        let Some(dir) = artifacts_dir() else { return };
+        let m = Manifest::load(&dir).unwrap();
+        m.validate().unwrap();
+        assert_eq!(m.model.d_model, m.model.n_heads * m.model.head_dim);
+        assert!(!m.batches(VariantKind::Prefill).is_empty());
+        assert!(!m.batches(VariantKind::Decode).is_empty());
+        // Every decode batch has a matching extract module.
+        for b in m.batches(VariantKind::Decode) {
+            assert!(m.variant(VariantKind::Extract, b).is_some(), "extract b{b}");
+        }
+    }
+
+    #[test]
+    fn pick_batch_rounds_up() {
+        let Some(dir) = artifacts_dir() else { return };
+        let m = Manifest::load(&dir).unwrap();
+        let batches = m.batches(VariantKind::Decode);
+        let largest = *batches.last().unwrap();
+        assert_eq!(m.pick_batch(VariantKind::Decode, 1), Some(batches[0]));
+        assert_eq!(m.pick_batch(VariantKind::Decode, largest), Some(largest));
+        assert_eq!(m.pick_batch(VariantKind::Decode, largest + 1), None);
+    }
+
+    #[test]
+    fn rejects_bad_manifest() {
+        let tmp = std::env::temp_dir().join(format!("rapid-mani-{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        std::fs::write(tmp.join("manifest.json"), "{\"format_version\": 99}").unwrap();
+        assert!(Manifest::load(&tmp).is_err());
+        std::fs::write(tmp.join("manifest.json"), "not json").unwrap();
+        assert!(Manifest::load(&tmp).is_err());
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+}

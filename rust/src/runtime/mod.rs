@@ -1,0 +1,17 @@
+//! PJRT runtime: load AOT artifacts (HLO text + weights + manifest) and
+//! execute the model from rust. Python never runs on this path.
+
+pub mod engine;
+pub mod manifest;
+pub mod tokenizer;
+
+pub use engine::{DecodeOut, Engine, KvCache, PrefillOut};
+pub use manifest::{Manifest, ModelSpec, VariantKind, VariantSpec};
+
+use anyhow::Result;
+
+/// Returns the PJRT platform name for the CPU client (smoke test).
+pub fn platform() -> Result<String> {
+    let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e}"))?;
+    Ok(client.platform_name())
+}

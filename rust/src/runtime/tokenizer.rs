@@ -1,0 +1,51 @@
+//! Byte-level toy tokenizer for the demo model (vocab 512: 256 raw bytes,
+//! specials, and headroom). Deterministic and reversible — enough to feed
+//! realistic prompt text through the real serving path.
+
+/// Special token ids (above the byte range).
+pub const BOS: i64 = 256;
+pub const EOS: i64 = 257;
+pub const PAD: i64 = 0;
+
+/// Encode UTF-8 text as BOS + raw bytes.
+pub fn encode(text: &str) -> Vec<i64> {
+    let mut out = Vec::with_capacity(text.len() + 1);
+    out.push(BOS);
+    out.extend(text.bytes().map(|b| b as i64));
+    out
+}
+
+/// Decode token ids back to text (specials skipped, lossy UTF-8).
+pub fn decode(tokens: &[i64]) -> String {
+    let bytes: Vec<u8> = tokens
+        .iter()
+        .filter(|&&t| (0..256).contains(&t))
+        .map(|&t| t as u8)
+        .collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip() {
+        let text = "power-aware disaggregation";
+        let toks = encode(text);
+        assert_eq!(toks[0], BOS);
+        assert_eq!(decode(&toks), text);
+    }
+
+    #[test]
+    fn specials_skipped_on_decode() {
+        assert_eq!(decode(&[BOS, b'h' as i64, b'i' as i64, EOS]), "hi");
+    }
+
+    #[test]
+    fn unicode_lossy_but_safe() {
+        let text = "héllo";
+        let toks = encode(text);
+        assert_eq!(decode(&toks), text); // utf-8 bytes survive
+    }
+}

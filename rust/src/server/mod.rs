@@ -1,0 +1,530 @@
+//! Real PJRT serving path: disaggregated prefill/decode workers over the
+//! AOT-compiled model, with power-cap pacing from the calibrated model.
+//!
+//! Threading model: PJRT wrapper types are not `Send` (raw pointers) and
+//! the CPU client is a single device, so one **executor thread** owns the
+//! [`Engine`] plus a KV-cache table, and serves `ExecJob`s over a
+//! channel; caches are referenced across threads by opaque ids. The
+//! logical "GPUs" are worker threads that batch requests, submit jobs,
+//! and apply *power pacing*: a worker capped at `w` watts stretches each
+//! execution by `speedup(max)/speedup(w)`, so the power→latency
+//! behaviour of the simulator holds on the real path too (same
+//! [`PowerModel`]).
+//!
+//! Data flow (paper §3.2): router -> prefill worker (FIFO token-budget
+//! batch) -> KV ring ([`crate::kv::KvRing`], ids only) -> decode worker
+//! (group continuous batching) -> records.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::PerfModelConfig;
+use crate::kv::KvRing;
+use crate::power::PowerModel;
+use crate::runtime::{tokenizer, Engine};
+use crate::types::{Micros, RequestId, RequestRecord, Slo, Watts};
+use crate::util::rng::Rng;
+use crate::util::stats::percentile;
+
+/// A request on the real serving path.
+#[derive(Debug, Clone)]
+pub struct ServeRequest {
+    pub id: u64,
+    pub prompt: String,
+    pub max_new_tokens: usize,
+}
+
+type KvId = u64;
+
+/// Jobs the executor thread runs (all PJRT calls live there).
+enum ExecJob {
+    Prefill {
+        prompts: Vec<Vec<i64>>,
+        reply: mpsc::Sender<Result<(Vec<i64>, KvId, Micros)>>,
+    },
+    Decode {
+        tokens: Vec<i64>,
+        pos: Vec<i64>,
+        kv: KvId,
+        reply: mpsc::Sender<Result<(Vec<i64>, Micros)>>,
+    },
+    FreeKv(KvId),
+    Shutdown,
+}
+
+/// What travels through the KV ring: a prefilled group ready to decode.
+struct DecodeGroup {
+    ids: Vec<u64>,
+    arrivals: Vec<Instant>,
+    prefill_starts: Vec<Instant>,
+    first_token: Instant,
+    prompts_len: Vec<usize>,
+    budgets: Vec<usize>,
+    last_tokens: Vec<i64>,
+    kv: KvId,
+    kv_batch: usize,
+}
+
+/// Completed request with timings + generated text.
+pub struct ServeOutcome {
+    pub record: RequestRecord,
+    pub text: String,
+}
+
+/// Per-pool power caps for the demo (pacing only; the CPU is the "GPU").
+#[derive(Debug, Clone, Copy)]
+pub struct ServeCaps {
+    pub prefill_w: Watts,
+    pub decode_w: Watts,
+}
+
+impl Default for ServeCaps {
+    fn default() -> Self {
+        ServeCaps {
+            prefill_w: 750.0,
+            decode_w: 450.0,
+        }
+    }
+}
+
+/// Pacing factor for a phase at `cap` watts.
+fn pacing(model: &PowerModel, cap: Watts, is_prefill: bool) -> f64 {
+    if is_prefill {
+        model.prefill_speedup(750.0) / model.prefill_speedup(cap)
+    } else {
+        model.decode_speedup(750.0) / model.decode_speedup(cap)
+    }
+}
+
+fn executor_loop(engine: Engine, jobs: mpsc::Receiver<ExecJob>) {
+    let mut table: HashMap<KvId, crate::runtime::KvCache> = HashMap::new();
+    let mut next_id: KvId = 1;
+    while let Ok(job) = jobs.recv() {
+        match job {
+            ExecJob::Prefill { prompts, reply } => {
+                let t0 = Instant::now();
+                let res = engine.prefill(&prompts).map(|out| {
+                    let id = next_id;
+                    next_id += 1;
+                    table.insert(id, out.kv);
+                    (out.tokens, id, t0.elapsed().as_micros() as Micros)
+                });
+                let _ = reply.send(res);
+            }
+            ExecJob::Decode {
+                tokens,
+                pos,
+                kv,
+                reply,
+            } => {
+                let t0 = Instant::now();
+                let res = match table.remove(&kv) {
+                    None => Err(anyhow!("unknown kv id {kv}")),
+                    Some(cache) => engine.decode(&tokens, &pos, &cache).map(|out| {
+                        table.insert(kv, out.kv);
+                        (out.tokens, t0.elapsed().as_micros() as Micros)
+                    }),
+                };
+                let _ = reply.send(res);
+            }
+            ExecJob::FreeKv(id) => {
+                table.remove(&id);
+            }
+            ExecJob::Shutdown => break,
+        }
+    }
+}
+
+/// Aggregate run statistics (stable across CPU noise: per-step means).
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    /// Mean paced decode-step wall time (us).
+    pub decode_step_us: f64,
+    /// Mean paced prefill-batch wall time (us).
+    pub prefill_exec_us: f64,
+    pub decode_steps: usize,
+    pub prefill_batches: usize,
+}
+
+struct Shared {
+    jobs: Mutex<mpsc::Sender<ExecJob>>,
+    ring: KvRing<DecodeGroup>,
+    prefill_queue: Mutex<VecDeque<(ServeRequest, Instant)>>,
+    outcomes: Mutex<Vec<ServeOutcome>>,
+    decode_steps_us: Mutex<Vec<f64>>,
+    prefill_execs_us: Mutex<Vec<f64>>,
+    done_submitting: AtomicBool,
+    completed: AtomicUsize,
+    total: usize,
+    model: PowerModel,
+    caps: ServeCaps,
+    prefill_seq: usize,
+    start: Instant,
+}
+
+impl Shared {
+    fn since_start(&self, t: Instant) -> Micros {
+        t.duration_since(self.start).as_micros() as Micros
+    }
+
+    fn send(&self, job: ExecJob) -> bool {
+        self.jobs.lock().unwrap().send(job).is_ok()
+    }
+
+    fn finished(&self) -> bool {
+        self.completed.load(Ordering::Acquire) >= self.total
+    }
+}
+
+fn prefill_worker(sh: Arc<Shared>, max_batch: usize) {
+    let stretch = pacing(&sh.model, sh.caps.prefill_w, true);
+    loop {
+        let batch: Vec<(ServeRequest, Instant)> = {
+            let mut q = sh.prefill_queue.lock().unwrap();
+            let n = q.len().min(max_batch);
+            q.drain(..n).collect()
+        };
+        if batch.is_empty() {
+            if sh.done_submitting.load(Ordering::Acquire) || sh.finished() {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+            continue;
+        }
+        let start = Instant::now();
+        let prompts: Vec<Vec<i64>> = batch
+            .iter()
+            .map(|(r, _)| {
+                let mut t = tokenizer::encode(&r.prompt);
+                t.truncate(sh.prefill_seq);
+                t
+            })
+            .collect();
+        let (tx, rx) = mpsc::channel();
+        if !sh.send(ExecJob::Prefill {
+            prompts: prompts.clone(),
+            reply: tx,
+        }) {
+            return;
+        }
+        let Ok(Ok((tokens, kv_id, exec_us))) = rx.recv() else { return };
+        // Power pacing: stretch wall time to the capped-GPU latency.
+        std::thread::sleep(Duration::from_micros(
+            (exec_us as f64 * (stretch - 1.0)) as u64,
+        ));
+        sh.prefill_execs_us
+            .lock()
+            .unwrap()
+            .push(exec_us as f64 * stretch);
+        let first = Instant::now();
+        let group = DecodeGroup {
+            ids: batch.iter().map(|(r, _)| r.id).collect(),
+            arrivals: batch.iter().map(|(_, a)| *a).collect(),
+            prefill_starts: batch.iter().map(|_| start).collect(),
+            first_token: first,
+            prompts_len: prompts.iter().map(|p| p.len()).collect(),
+            budgets: batch.iter().map(|(r, _)| r.max_new_tokens.max(1)).collect(),
+            kv_batch: {
+                // The engine picked the smallest variant >= batch len; the
+                // decode step must use the same lane count.
+                let mut b = 1;
+                for &cand in &[1usize, 2, 4, 8] {
+                    if cand >= batch.len() {
+                        b = cand;
+                        break;
+                    }
+                }
+                b
+            },
+            last_tokens: tokens,
+            kv: kv_id,
+        };
+        // Backpressure: spin while the ring is full (paper's prefill stall).
+        sh.ring
+            .publish_blocking(group, || std::thread::sleep(Duration::from_millis(1)));
+    }
+}
+
+fn decode_worker(sh: Arc<Shared>) {
+    let stretch = pacing(&sh.model, sh.caps.decode_w, false);
+    loop {
+        let Some(group) = sh.ring.try_consume() else {
+            if sh.finished() {
+                return;
+            }
+            let quiescent = sh.done_submitting.load(Ordering::Acquire)
+                && sh.ring.in_flight() == 0
+                && sh.prefill_queue.lock().unwrap().is_empty();
+            if quiescent {
+                // Give in-flight prefill batches a moment, then re-check.
+                std::thread::sleep(Duration::from_millis(5));
+                if sh.ring.in_flight() == 0 && sh.finished() {
+                    return;
+                }
+            }
+            std::thread::sleep(Duration::from_millis(1));
+            continue;
+        };
+        let lanes = group.ids.len();
+        let batch = group.kv_batch;
+        let mut pos: Vec<i64> = (0..batch)
+            .map(|i| *group.prompts_len.get(i).unwrap_or(&1) as i64)
+            .collect();
+        let mut toks = group.last_tokens.clone();
+        toks.resize(batch, 0);
+        let max_steps = group.budgets.iter().copied().max().unwrap_or(1);
+        let mut finish: Vec<Option<Instant>> = vec![None; lanes];
+        let mut generated: Vec<Vec<i64>> = (0..lanes).map(|i| vec![toks[i]]).collect();
+        for lane in 0..lanes {
+            if group.budgets[lane] <= 1 {
+                finish[lane] = Some(group.first_token);
+            }
+        }
+        for step in 1..max_steps {
+            let (tx, rx) = mpsc::channel();
+            if !sh.send(ExecJob::Decode {
+                tokens: toks.clone(),
+                pos: pos.clone(),
+                kv: group.kv,
+                reply: tx,
+            }) {
+                return;
+            }
+            let Ok(Ok((next, exec_us))) = rx.recv() else { return };
+            std::thread::sleep(Duration::from_micros(
+                (exec_us as f64 * (stretch - 1.0)) as u64,
+            ));
+            sh.decode_steps_us
+                .lock()
+                .unwrap()
+                .push(exec_us as f64 * stretch);
+            let now = Instant::now();
+            for lane in 0..lanes {
+                if step < group.budgets[lane] {
+                    generated[lane].push(next[lane]);
+                    if step + 1 >= group.budgets[lane] {
+                        finish[lane] = Some(now);
+                    }
+                }
+            }
+            toks = next;
+            for p in &mut pos {
+                *p += 1;
+            }
+        }
+        sh.send(ExecJob::FreeKv(group.kv));
+        let now = Instant::now();
+        let mut outcomes = sh.outcomes.lock().unwrap();
+        for lane in 0..lanes {
+            let fin = finish[lane].unwrap_or(now);
+            outcomes.push(ServeOutcome {
+                record: RequestRecord {
+                    id: RequestId(group.ids[lane]),
+                    arrival: sh.since_start(group.arrivals[lane]),
+                    prefill_start: sh.since_start(group.prefill_starts[lane]),
+                    first_token: sh.since_start(group.first_token),
+                    finish: sh.since_start(fin),
+                    input_tokens: group.prompts_len[lane] as u32,
+                    output_tokens: group.budgets[lane] as u32,
+                    slo: Slo::paper_default(),
+                },
+                text: tokenizer::decode(&generated[lane]),
+            });
+            sh.completed.fetch_add(1, Ordering::AcqRel);
+        }
+    }
+}
+
+/// Serve `requests` through a disaggregated worker topology and return
+/// completion records. `qps` drives Poisson arrivals in real time.
+pub fn serve(
+    artifacts: &str,
+    requests: Vec<ServeRequest>,
+    qps: f64,
+    prefill_workers: usize,
+    decode_workers: usize,
+    caps: ServeCaps,
+) -> Result<(Vec<ServeOutcome>, RunStats)> {
+    // PJRT types are !Send: build the engine *inside* the executor thread
+    // and hand back the manifest facts the workers need.
+    let (jobs_tx, jobs_rx) = mpsc::channel();
+    let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, usize)>>();
+    let artifacts_path = artifacts.to_string();
+    let executor = std::thread::spawn(move || {
+        match Engine::load(&artifacts_path).context("loading artifacts") {
+            Ok(engine) => {
+                let info = (
+                    engine.manifest.model.prefill_seq,
+                    *engine.prefill_batches().last().unwrap_or(&1),
+                );
+                let _ = ready_tx.send(Ok(info));
+                executor_loop(engine, jobs_rx);
+            }
+            Err(e) => {
+                let _ = ready_tx.send(Err(e));
+            }
+        }
+    });
+    let (prefill_seq, max_batch) = ready_rx
+        .recv()
+        .map_err(|_| anyhow!("executor died during engine load"))??;
+
+    let total = requests.len();
+    let sh = Arc::new(Shared {
+        jobs: Mutex::new(jobs_tx.clone()),
+        ring: KvRing::new(32),
+        prefill_queue: Mutex::new(VecDeque::new()),
+        outcomes: Mutex::new(Vec::new()),
+        decode_steps_us: Mutex::new(Vec::new()),
+        prefill_execs_us: Mutex::new(Vec::new()),
+        done_submitting: AtomicBool::new(false),
+        completed: AtomicUsize::new(0),
+        total,
+        model: PowerModel::new(PerfModelConfig::default()),
+        caps,
+        prefill_seq,
+        start: Instant::now(),
+    });
+
+    let mut handles = Vec::new();
+    for _ in 0..prefill_workers.max(1) {
+        let s = Arc::clone(&sh);
+        handles.push(std::thread::spawn(move || prefill_worker(s, max_batch)));
+    }
+    for _ in 0..decode_workers.max(1) {
+        let s = Arc::clone(&sh);
+        handles.push(std::thread::spawn(move || decode_worker(s)));
+    }
+
+    // Poisson arrivals in real time.
+    let mut rng = Rng::new(7);
+    for r in requests {
+        let gap = rng.exponential(qps.max(0.1));
+        std::thread::sleep(Duration::from_secs_f64(gap.min(0.5)));
+        sh.prefill_queue
+            .lock()
+            .unwrap()
+            .push_back((r, Instant::now()));
+    }
+    sh.done_submitting.store(true, Ordering::Release);
+
+    let deadline = Instant::now() + Duration::from_secs(600);
+    while !sh.finished() && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    let _ = jobs_tx.send(ExecJob::Shutdown);
+    let _ = executor.join();
+
+    let sh = Arc::try_unwrap(sh).map_err(|_| anyhow!("worker leaked shared state"))?;
+    let mut outcomes = sh.outcomes.into_inner().unwrap();
+    outcomes.sort_by_key(|o| o.record.id.0);
+    let dec = sh.decode_steps_us.into_inner().unwrap();
+    let pre = sh.prefill_execs_us.into_inner().unwrap();
+    let stats = RunStats {
+        decode_step_us: if dec.is_empty() { 0.0 } else { dec.iter().sum::<f64>() / dec.len() as f64 },
+        prefill_exec_us: if pre.is_empty() { 0.0 } else { pre.iter().sum::<f64>() / pre.len() as f64 },
+        decode_steps: dec.len(),
+        prefill_batches: pre.len(),
+    };
+    Ok((outcomes, stats))
+}
+
+/// Render a latency/throughput report for a finished run.
+pub fn report(outcomes: &[ServeOutcome], wall_secs: f64) -> String {
+    let ttfts: Vec<f64> = outcomes.iter().map(|o| o.record.ttft() as f64).collect();
+    let tpots: Vec<f64> = outcomes
+        .iter()
+        .filter(|o| o.record.output_tokens > 1)
+        .map(|o| o.record.tpot() as f64)
+        .collect();
+    let total_tokens: u64 = outcomes
+        .iter()
+        .map(|o| o.record.output_tokens as u64)
+        .sum();
+    let mut out = String::new();
+    out.push_str(&format!(
+        "completed {} requests in {wall_secs:.1}s ({:.2} req/s, {:.1} tok/s)\n",
+        outcomes.len(),
+        outcomes.len() as f64 / wall_secs.max(1e-9),
+        total_tokens as f64 / wall_secs.max(1e-9),
+    ));
+    if !ttfts.is_empty() {
+        out.push_str(&format!(
+            "TTFT  p50 {:>7.1} ms | p90 {:>7.1} ms | max {:>7.1} ms\n",
+            percentile(&ttfts, 50.0) / 1000.0,
+            percentile(&ttfts, 90.0) / 1000.0,
+            percentile(&ttfts, 100.0) / 1000.0,
+        ));
+    }
+    if !tpots.is_empty() {
+        out.push_str(&format!(
+            "TPOT  p50 {:>7.1} ms | p90 {:>7.1} ms | max {:>7.1} ms\n",
+            percentile(&tpots, 50.0) / 1000.0,
+            percentile(&tpots, 90.0) / 1000.0,
+            percentile(&tpots, 100.0) / 1000.0,
+        ));
+    }
+    out
+}
+
+/// CLI demo: synthesize prompts, serve them, print the report.
+pub fn serve_demo(
+    artifacts: &str,
+    n_requests: usize,
+    qps: f64,
+    prefill_workers: usize,
+    decode_workers: usize,
+) -> Result<()> {
+    let corpus = [
+        "disaggregation separates prefill from decode",
+        "the node budget is 4800 watts across eight GPUs",
+        "prefill is compute bound and loves high power caps",
+        "decode is memory bound and flattens early",
+        "queue buildup is an early indicator of stress",
+        "power moves first and GPUs move when power saturates",
+    ];
+    let requests: Vec<ServeRequest> = (0..n_requests)
+        .map(|i| ServeRequest {
+            id: i as u64,
+            prompt: corpus[i % corpus.len()].to_string(),
+            max_new_tokens: 8 + (i % 3) * 8,
+        })
+        .collect();
+    println!(
+        "serving {n_requests} requests @ {qps} qps over {prefill_workers}P/{decode_workers}D \
+         (pacing: 750 W prefill / 450 W decode)"
+    );
+    let t0 = Instant::now();
+    let (outcomes, stats) = serve(
+        artifacts,
+        requests,
+        qps,
+        prefill_workers,
+        decode_workers,
+        ServeCaps::default(),
+    )?;
+    println!("{}", report(&outcomes, t0.elapsed().as_secs_f64()));
+    println!(
+        "mean paced decode step {:.1} ms over {} steps; prefill batch {:.1} ms over {}",
+        stats.decode_step_us / 1000.0,
+        stats.decode_steps,
+        stats.prefill_exec_us / 1000.0,
+        stats.prefill_batches
+    );
+    for o in outcomes.iter().take(3) {
+        println!(
+            "  {}: ttft={}ms out={:?}...",
+            o.record.id,
+            o.record.ttft() / 1000,
+            &o.text.chars().take(24).collect::<String>()
+        );
+    }
+    Ok(())
+}

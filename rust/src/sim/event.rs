@@ -1,0 +1,166 @@
+//! Discrete-event machinery: the event heap and event types.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::types::{Micros, Request};
+
+/// A request travelling the decode pipeline (KV handle + bookkeeping).
+#[derive(Debug, Clone)]
+pub struct DecodeItem {
+    pub req: Request,
+    pub prefill_start: Micros,
+    pub first_token: Micros,
+    /// Output tokens generated so far *including* the prefill-produced
+    /// first token.
+    pub tokens_done: u32,
+}
+
+impl DecodeItem {
+    /// Live context length (prompt + generated) — drives KV-read cost.
+    pub fn ctx_tokens(&self) -> u32 {
+        self.req.input_tokens + self.tokens_done
+    }
+
+    pub fn remaining(&self) -> u32 {
+        self.req.output_tokens.saturating_sub(self.tokens_done)
+    }
+}
+
+/// Simulation events. Variants carry the minimum needed; `epoch` guards
+/// against stale completions after a GPU role change.
+#[derive(Debug)]
+pub enum Event {
+    /// Next trace arrival is due.
+    Arrival,
+    /// A prefill batch finished on `gpu`.
+    PrefillDone { gpu: usize, epoch: u64 },
+    /// One decode iteration finished on `gpu`.
+    DecodeStep { gpu: usize, epoch: u64 },
+    /// One coalesced (chunked-prefill) iteration finished on `gpu`.
+    CoalescedStep { gpu: usize, epoch: u64 },
+    /// A KV transfer landed on decode `gpu`.
+    KvArrive { gpu: usize, item: DecodeItem },
+    /// Algorithm-1 tick.
+    ControllerTick,
+    /// Pending power raises may be due.
+    PowerPoll,
+    /// Telemetry sampling.
+    Sample,
+    /// A draining GPU finished its role switch.
+    DrainDone { gpu: usize, epoch: u64 },
+}
+
+struct HeapItem {
+    at: Micros,
+    seq: u64,
+    event: Event,
+}
+
+impl PartialEq for HeapItem {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl Eq for HeapItem {}
+impl PartialOrd for HeapItem {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapItem {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first.
+        other
+            .at
+            .cmp(&self.at)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Earliest-first event queue with deterministic FIFO tie-breaking.
+#[derive(Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<HeapItem>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            seq: 0,
+        }
+    }
+
+    pub fn push(&mut self, at: Micros, event: Event) {
+        self.seq += 1;
+        self.heap.push(HeapItem {
+            at,
+            seq: self.seq,
+            event,
+        });
+    }
+
+    pub fn pop(&mut self) -> Option<(Micros, Event)> {
+        self.heap.pop().map(|i| (i.at, i.event))
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(30, Event::Arrival);
+        q.push(10, Event::ControllerTick);
+        q.push(20, Event::Sample);
+        assert_eq!(q.pop().unwrap().0, 10);
+        assert_eq!(q.pop().unwrap().0, 20);
+        assert_eq!(q.pop().unwrap().0, 30);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn ties_pop_fifo() {
+        let mut q = EventQueue::new();
+        q.push(5, Event::PrefillDone { gpu: 1, epoch: 0 });
+        q.push(5, Event::PrefillDone { gpu: 2, epoch: 0 });
+        q.push(5, Event::PrefillDone { gpu: 3, epoch: 0 });
+        let order: Vec<usize> = (0..3)
+            .map(|_| match q.pop().unwrap().1 {
+                Event::PrefillDone { gpu, .. } => gpu,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(order, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn decode_item_context() {
+        let item = DecodeItem {
+            req: Request {
+                id: crate::types::RequestId(0),
+                arrival: 0,
+                input_tokens: 500,
+                output_tokens: 10,
+                slo: crate::types::Slo::paper_default(),
+            },
+            prefill_start: 0,
+            first_token: 0,
+            tokens_done: 3,
+        };
+        assert_eq!(item.ctx_tokens(), 503);
+        assert_eq!(item.remaining(), 7);
+    }
+}

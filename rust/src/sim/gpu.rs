@@ -1,0 +1,223 @@
+//! Per-GPU simulated worker state (prefill / decode / coalesced).
+
+use std::collections::VecDeque;
+
+use crate::coordinator::batcher::ChunkProgress;
+use crate::sim::event::DecodeItem;
+use crate::types::{Micros, Request, Role};
+
+/// Chunked-prefill bookkeeping on a coalesced GPU.
+#[derive(Debug, Clone)]
+pub struct ChunkMeta {
+    pub prog: ChunkProgress,
+    /// When the first chunk of this prompt began executing.
+    pub started: Option<Micros>,
+}
+
+/// One simulated GPU worker.
+#[derive(Debug)]
+pub struct GpuSim {
+    pub role: Role,
+    /// Set while the GPU drains toward a new role.
+    pub draining_to: Option<Role>,
+    /// Bumped on every role change; in-flight events with an older epoch
+    /// are stale and ignored.
+    pub epoch: u64,
+    /// An execution (prefill batch / decode step / coalesced step) is in
+    /// flight.
+    pub busy: bool,
+
+    // --- prefill ---
+    pub pf_queue: VecDeque<Request>,
+    pub pf_queued_tokens: u64,
+    /// In-flight prefill batch: (request, prefill_start).
+    pub pf_batch: Vec<(Request, Micros)>,
+    /// Completed prefills waiting for a free ring slot (backpressure).
+    pub publish_wait: VecDeque<DecodeItem>,
+
+    // --- decode ---
+    pub dec_pending: VecDeque<DecodeItem>,
+    pub dec_active: Vec<DecodeItem>,
+    /// Duration of the decode step currently in flight.
+    pub dec_step_time: Micros,
+
+    // --- coalesced ---
+    pub co_queue: VecDeque<ChunkMeta>,
+    /// Prompts completing in the in-flight coalesced step.
+    pub co_finishing: Vec<(Request, Micros)>,
+    /// Chunk tokens being processed in the in-flight step.
+    pub co_step_chunk: u32,
+}
+
+impl GpuSim {
+    pub fn new(role: Role) -> Self {
+        GpuSim {
+            role,
+            draining_to: None,
+            epoch: 0,
+            busy: false,
+            pf_queue: VecDeque::new(),
+            pf_queued_tokens: 0,
+            pf_batch: Vec::new(),
+            publish_wait: VecDeque::new(),
+            dec_pending: VecDeque::new(),
+            dec_active: Vec::new(),
+            dec_step_time: 0,
+            co_queue: VecDeque::new(),
+            co_finishing: Vec::new(),
+            co_step_chunk: 0,
+        }
+    }
+
+    /// The role this GPU is committed to (target role while draining).
+    pub fn committed_role(&self) -> Role {
+        self.draining_to.unwrap_or(self.role)
+    }
+
+    /// May the router send new work here?
+    pub fn accepting(&self) -> bool {
+        self.draining_to.is_none()
+    }
+
+    pub fn push_prefill(&mut self, r: Request) {
+        self.pf_queued_tokens += r.input_tokens as u64;
+        self.pf_queue.push_back(r);
+    }
+
+    pub fn pop_prefill_tokens(&mut self, tokens: u64) {
+        self.pf_queued_tokens -= tokens;
+    }
+
+    /// Decode occupancy: resident + pending requests.
+    pub fn decode_load(&self) -> usize {
+        self.dec_active.len() + self.dec_pending.len()
+    }
+
+    /// Mean live context across active decode requests.
+    pub fn mean_ctx(&self) -> f64 {
+        if self.dec_active.is_empty() {
+            return 0.0;
+        }
+        self.dec_active.iter().map(|d| d.ctx_tokens() as f64).sum::<f64>()
+            / self.dec_active.len() as f64
+    }
+
+    /// Queued coalesced prompt tokens remaining.
+    pub fn co_queued_tokens(&self) -> u64 {
+        self.co_queue.iter().map(|c| c.prog.remaining() as u64).sum()
+    }
+
+    /// Has this GPU fully drained (safe to flip roles)?
+    pub fn drained(&self) -> bool {
+        !self.busy
+            && self.pf_queue.is_empty()
+            && self.pf_batch.is_empty()
+            && self.publish_wait.is_empty()
+            && self.dec_pending.is_empty()
+            && self.dec_active.is_empty()
+            && self.co_queue.is_empty()
+            && self.co_finishing.is_empty()
+    }
+
+    /// Utilization estimate for the power-draw model.
+    pub fn util(&self) -> f64 {
+        if !self.busy {
+            return 0.0;
+        }
+        match self.role {
+            Role::Prefill | Role::Coalesced => 1.0,
+            Role::Decode => {
+                // Memory-bound: utilization grows with batch occupancy.
+                0.35 + 0.65 * (self.dec_active.len() as f64 / 24.0).min(1.0)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{RequestId, Slo};
+
+    fn req(id: u64, input: u32) -> Request {
+        Request {
+            id: RequestId(id),
+            arrival: 0,
+            input_tokens: input,
+            output_tokens: 8,
+            slo: Slo::paper_default(),
+        }
+    }
+
+    #[test]
+    fn prefill_token_accounting() {
+        let mut g = GpuSim::new(Role::Prefill);
+        g.push_prefill(req(0, 1000));
+        g.push_prefill(req(1, 500));
+        assert_eq!(g.pf_queued_tokens, 1500);
+        g.pop_prefill_tokens(1000);
+        assert_eq!(g.pf_queued_tokens, 500);
+    }
+
+    #[test]
+    fn committed_role_reflects_drain_target() {
+        let mut g = GpuSim::new(Role::Decode);
+        assert_eq!(g.committed_role(), Role::Decode);
+        assert!(g.accepting());
+        g.draining_to = Some(Role::Prefill);
+        assert_eq!(g.committed_role(), Role::Prefill);
+        assert!(!g.accepting());
+    }
+
+    #[test]
+    fn drained_requires_everything_empty() {
+        let mut g = GpuSim::new(Role::Decode);
+        assert!(g.drained());
+        g.dec_active.push(DecodeItem {
+            req: req(0, 100),
+            prefill_start: 0,
+            first_token: 0,
+            tokens_done: 1,
+        });
+        assert!(!g.drained());
+        g.dec_active.clear();
+        g.busy = true;
+        assert!(!g.drained());
+    }
+
+    #[test]
+    fn util_by_role() {
+        let mut g = GpuSim::new(Role::Prefill);
+        assert_eq!(g.util(), 0.0);
+        g.busy = true;
+        assert_eq!(g.util(), 1.0);
+        let mut d = GpuSim::new(Role::Decode);
+        d.busy = true;
+        let low = d.util();
+        for i in 0..24 {
+            d.dec_active.push(DecodeItem {
+                req: req(i, 100),
+                prefill_start: 0,
+                first_token: 0,
+                tokens_done: 1,
+            });
+        }
+        assert!(d.util() > low);
+        assert!(d.util() <= 1.0);
+    }
+
+    #[test]
+    fn mean_ctx_over_active() {
+        let mut g = GpuSim::new(Role::Decode);
+        assert_eq!(g.mean_ctx(), 0.0);
+        for (i, inp) in [(0u64, 100u32), (1, 300)] {
+            g.dec_active.push(DecodeItem {
+                req: req(i, inp),
+                prefill_start: 0,
+                first_token: 0,
+                tokens_done: 10,
+            });
+        }
+        assert!((g.mean_ctx() - 210.0).abs() < 1e-9); // (110 + 310) / 2
+    }
+}

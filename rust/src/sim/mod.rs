@@ -1,0 +1,7 @@
+//! Discrete-event simulation of the GPU node (the testbed substitute).
+
+pub mod engine;
+pub mod event;
+pub mod gpu;
+
+pub use engine::{run, SimOptions};

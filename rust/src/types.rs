@@ -1,0 +1,226 @@
+//! Core domain types shared by the simulator, coordinator and runtime.
+//!
+//! Time is a `u64` microsecond count (`Micros`) everywhere so the same
+//! coordinator logic runs under the discrete-event simulator (virtual
+//! time) and the real serving path (wall time).
+
+use std::fmt;
+
+/// Microseconds since experiment start (virtual or wall).
+pub type Micros = u64;
+
+/// One second in `Micros`.
+pub const SECOND: Micros = 1_000_000;
+/// One millisecond in `Micros`.
+pub const MILLIS: Micros = 1_000;
+
+/// Watts as f64 (power values are small; precision is not a concern).
+pub type Watts = f64;
+
+/// Unique, monotonically-assigned request identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RequestId(pub u64);
+
+impl fmt::Display for RequestId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "r{}", self.0)
+    }
+}
+
+/// Index of a GPU within the node (0..n_gpus).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct GpuId(pub usize);
+
+impl fmt::Display for GpuId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "gpu{}", self.0)
+    }
+}
+
+/// Which inference phase a GPU currently serves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Role {
+    Prefill,
+    Decode,
+    /// Chunked-prefill baseline: both phases share the GPU (vLLM coalesced).
+    Coalesced,
+}
+
+impl fmt::Display for Role {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Role::Prefill => write!(f, "prefill"),
+            Role::Decode => write!(f, "decode"),
+            Role::Coalesced => write!(f, "coalesced"),
+        }
+    }
+}
+
+/// An inference request as the coordinator sees it.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    /// Arrival time at the router.
+    pub arrival: Micros,
+    /// Prompt length in tokens.
+    pub input_tokens: u32,
+    /// Number of tokens to generate (including the first token produced
+    /// by prefill).
+    pub output_tokens: u32,
+    /// SLO this request is judged against (provider tier).
+    pub slo: Slo,
+}
+
+impl Request {
+    /// KV-cache bytes this request's prompt occupies (used for transfer
+    /// latency and memory accounting).
+    pub fn kv_bytes(&self, bytes_per_token: u64) -> u64 {
+        self.input_tokens as u64 * bytes_per_token
+    }
+}
+
+/// Latency service-level objectives (paper §3.1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Slo {
+    /// Time-to-first-token target.
+    pub ttft: Micros,
+    /// Time-per-output-token target (mean over the request's decode).
+    pub tpot: Micros,
+}
+
+impl Slo {
+    pub const fn new(ttft: Micros, tpot: Micros) -> Self {
+        Slo { ttft, tpot }
+    }
+
+    /// The paper's baseline SLO: TTFT = 1 s, TPOT = 40 ms.
+    pub const fn paper_default() -> Self {
+        Slo::new(SECOND, 40 * MILLIS)
+    }
+
+    /// Uniformly scale both targets (paper Fig 7's 0.5x–2x sweep).
+    pub fn scaled(&self, factor: f64) -> Self {
+        Slo {
+            ttft: (self.ttft as f64 * factor) as Micros,
+            tpot: (self.tpot as f64 * factor) as Micros,
+        }
+    }
+}
+
+/// Completion record for one request; the unit of all paper metrics.
+#[derive(Debug, Clone)]
+pub struct RequestRecord {
+    pub id: RequestId,
+    pub arrival: Micros,
+    /// When prefill execution began (end of queueing delay).
+    pub prefill_start: Micros,
+    /// First token produced (end of prefill): TTFT = first_token - arrival.
+    pub first_token: Micros,
+    /// Last token produced.
+    pub finish: Micros,
+    pub input_tokens: u32,
+    pub output_tokens: u32,
+    pub slo: Slo,
+}
+
+impl RequestRecord {
+    pub fn ttft(&self) -> Micros {
+        self.first_token.saturating_sub(self.arrival)
+    }
+
+    /// Queueing component of TTFT (paper Fig 6 breakdown).
+    pub fn queueing_delay(&self) -> Micros {
+        self.prefill_start.saturating_sub(self.arrival)
+    }
+
+    /// Execution component of TTFT (paper Fig 6 breakdown).
+    pub fn exec_time(&self) -> Micros {
+        self.first_token.saturating_sub(self.prefill_start)
+    }
+
+    /// Mean time per output token after the first (paper §4 definition).
+    /// KV-transfer latency lands here, not in TTFT (pull model).
+    pub fn tpot(&self) -> Micros {
+        if self.output_tokens <= 1 {
+            return 0;
+        }
+        self.finish.saturating_sub(self.first_token) / (self.output_tokens as u64 - 1)
+    }
+
+    /// Goodput predicate: did the request meet *both* SLOs?
+    pub fn attained(&self) -> bool {
+        self.ttft() <= self.slo.ttft && self.tpot() <= self.slo.tpot
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(arrival: Micros, start: Micros, first: Micros, finish: Micros, out: u32) -> RequestRecord {
+        RequestRecord {
+            id: RequestId(1),
+            arrival,
+            prefill_start: start,
+            first_token: first,
+            finish,
+            input_tokens: 100,
+            output_tokens: out,
+            slo: Slo::paper_default(),
+        }
+    }
+
+    #[test]
+    fn ttft_and_breakdown() {
+        let r = rec(0, 300_000, 800_000, 5_000_000, 10);
+        assert_eq!(r.ttft(), 800_000);
+        assert_eq!(r.queueing_delay(), 300_000);
+        assert_eq!(r.exec_time(), 500_000);
+        assert_eq!(r.ttft(), r.queueing_delay() + r.exec_time());
+    }
+
+    #[test]
+    fn tpot_mean_over_remaining_tokens() {
+        // 9 tokens after the first over 4.2 s -> 466.6 ms each
+        let r = rec(0, 0, 800_000, 5_000_000, 10);
+        assert_eq!(r.tpot(), 4_200_000 / 9);
+    }
+
+    #[test]
+    fn tpot_single_token_is_zero() {
+        let r = rec(0, 0, 800_000, 800_000, 1);
+        assert_eq!(r.tpot(), 0);
+    }
+
+    #[test]
+    fn attainment_requires_both_slos() {
+        // TTFT ok (0.8s <= 1s), TPOT ok (fast decode)
+        let good = rec(0, 0, 800_000, 1_000_000, 10);
+        assert!(good.attained());
+        // TTFT violated
+        let slow_prefill = rec(0, 0, 1_200_000, 1_400_000, 10);
+        assert!(!slow_prefill.attained());
+        // TPOT violated: 9 tokens over 4.2s >> 40ms
+        let slow_decode = rec(0, 0, 800_000, 5_000_000, 10);
+        assert!(!slow_decode.attained());
+    }
+
+    #[test]
+    fn slo_scaling() {
+        let s = Slo::paper_default().scaled(0.5);
+        assert_eq!(s.ttft, 500 * MILLIS);
+        assert_eq!(s.tpot, 20 * MILLIS);
+    }
+
+    #[test]
+    fn kv_bytes_scale_with_prompt() {
+        let r = Request {
+            id: RequestId(0),
+            arrival: 0,
+            input_tokens: 4096,
+            output_tokens: 128,
+            slo: Slo::paper_default(),
+        };
+        assert_eq!(r.kv_bytes(131_072), 4096 * 131_072);
+    }
+}

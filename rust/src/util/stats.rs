@@ -1,0 +1,373 @@
+//! Statistics primitives: percentiles, histograms, rolling windows.
+//!
+//! Everything the paper's metrics need: P90 latencies (Fig 4), SLO
+//! attainment curves (Fig 5/7/8), 10 ms rolling power averages (Fig 3),
+//! and sliding recent-latency windows for the Algorithm-1 controller.
+
+use crate::types::Micros;
+
+/// Exact percentile over a sample (sorts a copy; fine at our sizes).
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    assert!((0.0..=100.0).contains(&p), "percentile out of range: {p}");
+    if samples.is_empty() {
+        return f64::NAN;
+    }
+    let mut s: Vec<f64> = samples.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (s.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        let frac = rank - lo as f64;
+        s[lo] * (1.0 - frac) + s[hi] * frac
+    }
+}
+
+pub fn mean(samples: &[f64]) -> f64 {
+    if samples.is_empty() {
+        return f64::NAN;
+    }
+    samples.iter().sum::<f64>() / samples.len() as f64
+}
+
+/// Fixed-capacity sliding window of (time, value) observations.
+///
+/// The Algorithm-1 controller reads "recent TTFT / TPOT" from these; the
+/// window evicts by age so the controller reacts to the current regime,
+/// not the whole history.
+#[derive(Debug, Clone)]
+pub struct SlidingWindow {
+    span: Micros,
+    entries: std::collections::VecDeque<(Micros, f64)>,
+}
+
+impl SlidingWindow {
+    pub fn new(span: Micros) -> Self {
+        SlidingWindow {
+            span,
+            entries: std::collections::VecDeque::new(),
+        }
+    }
+
+    pub fn push(&mut self, now: Micros, value: f64) {
+        self.entries.push_back((now, value));
+        self.evict(now);
+    }
+
+    fn evict(&mut self, now: Micros) {
+        let cutoff = now.saturating_sub(self.span);
+        while let Some(&(t, _)) = self.entries.front() {
+            if t < cutoff {
+                self.entries.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn values(&self) -> Vec<f64> {
+        self.entries.iter().map(|&(_, v)| v).collect()
+    }
+
+    pub fn percentile(&self, now: Micros, p: f64) -> Option<f64> {
+        let cutoff = now.saturating_sub(self.span);
+        let vals: Vec<f64> = self
+            .entries
+            .iter()
+            .filter(|&&(t, _)| t >= cutoff)
+            .map(|&(_, v)| v)
+            .collect();
+        if vals.is_empty() {
+            None
+        } else {
+            Some(percentile(&vals, p))
+        }
+    }
+
+    /// Fraction of in-window samples strictly above `threshold` —
+    /// O(n) with no allocation or sort. `percentile(p) > t` is exactly
+    /// `frac_above(t) > 1 - p/100`, which is all the Algorithm-1 trigger
+    /// needs (hot path: called every controller tick).
+    pub fn frac_above(&self, now: Micros, threshold: f64) -> Option<f64> {
+        let cutoff = now.saturating_sub(self.span);
+        let mut n = 0usize;
+        let mut above = 0usize;
+        for &(t, v) in &self.entries {
+            if t >= cutoff {
+                n += 1;
+                if v > threshold {
+                    above += 1;
+                }
+            }
+        }
+        if n == 0 {
+            None
+        } else {
+            Some(above as f64 / n as f64)
+        }
+    }
+
+    pub fn mean(&self, now: Micros) -> Option<f64> {
+        let cutoff = now.saturating_sub(self.span);
+        let vals: Vec<f64> = self
+            .entries
+            .iter()
+            .filter(|&&(t, _)| t >= cutoff)
+            .map(|&(_, v)| v)
+            .collect();
+        if vals.is_empty() {
+            None
+        } else {
+            Some(mean(&vals))
+        }
+    }
+}
+
+/// Log-spaced latency histogram (for cheap streaming percentiles when
+/// sample vectors would be too large).
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    /// bucket i covers [min * ratio^i, min * ratio^(i+1))
+    min: f64,
+    ratio: f64,
+    counts: Vec<u64>,
+    total: u64,
+    overflow: u64,
+}
+
+impl LatencyHistogram {
+    /// `min`..`max` with `buckets` log-spaced bins.
+    pub fn new(min: f64, max: f64, buckets: usize) -> Self {
+        assert!(min > 0.0 && max > min && buckets > 0);
+        let ratio = (max / min).powf(1.0 / buckets as f64);
+        LatencyHistogram {
+            min,
+            ratio,
+            counts: vec![0; buckets],
+            total: 0,
+            overflow: 0,
+        }
+    }
+
+    pub fn record(&mut self, value: f64) {
+        self.total += 1;
+        if value < self.min {
+            self.counts[0] += 1;
+            return;
+        }
+        let idx = ((value / self.min).ln() / self.ratio.ln()) as usize;
+        if idx >= self.counts.len() {
+            self.overflow += 1;
+        } else {
+            self.counts[idx] += 1;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Approximate quantile (bucket lower edge).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return f64::NAN;
+        }
+        let target = (q * self.total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return self.min * self.ratio.powi(i as i32);
+            }
+        }
+        self.min * self.ratio.powi(self.counts.len() as i32)
+    }
+}
+
+/// Time series with rolling-average reduction (Fig 3: 10 ms rolling power).
+#[derive(Debug, Clone, Default)]
+pub struct TimeSeries {
+    pub points: Vec<(Micros, f64)>,
+}
+
+impl TimeSeries {
+    pub fn new() -> Self {
+        TimeSeries { points: Vec::new() }
+    }
+
+    pub fn push(&mut self, t: Micros, v: f64) {
+        debug_assert!(self.points.last().map_or(true, |&(pt, _)| pt <= t));
+        self.points.push((t, v));
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Rolling mean over a trailing window, sampled at each point.
+    pub fn rolling_mean(&self, window: Micros) -> TimeSeries {
+        let mut out = TimeSeries::new();
+        let mut start = 0usize;
+        let mut sum = 0.0;
+        let mut cnt = 0usize;
+        for i in 0..self.points.len() {
+            let (t, v) = self.points[i];
+            sum += v;
+            cnt += 1;
+            while self.points[start].0 + window < t {
+                sum -= self.points[start].1;
+                cnt -= 1;
+                start += 1;
+            }
+            out.push(t, sum / cnt as f64);
+        }
+        out
+    }
+
+    /// Max value (e.g. peak node power).
+    pub fn max(&self) -> f64 {
+        self.points.iter().map(|&(_, v)| v).fold(f64::MIN, f64::max)
+    }
+
+    /// Fraction of samples strictly above a threshold (Fig 3: time above
+    /// the 4800 W line).
+    pub fn frac_above(&self, threshold: f64) -> f64 {
+        if self.points.is_empty() {
+            return 0.0;
+        }
+        self.points.iter().filter(|&&(_, v)| v > threshold).count() as f64
+            / self.points.len() as f64
+    }
+
+    /// Piecewise-constant time integral (J if values are W and t is us).
+    pub fn integral(&self) -> f64 {
+        let mut acc = 0.0;
+        for w in self.points.windows(2) {
+            let (t0, v0) = w[0];
+            let (t1, _) = w[1];
+            acc += v0 * (t1 - t0) as f64;
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_basics() {
+        let xs: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        assert!((percentile(&xs, 50.0) - 50.5).abs() < 1e-9);
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-9);
+        assert!((percentile(&xs, 100.0) - 100.0).abs() < 1e-9);
+        assert!((percentile(&xs, 90.0) - 90.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_single_and_empty() {
+        assert_eq!(percentile(&[7.0], 90.0), 7.0);
+        assert!(percentile(&[], 50.0).is_nan());
+    }
+
+    #[test]
+    fn sliding_window_evicts_by_age() {
+        let mut w = SlidingWindow::new(1000);
+        w.push(0, 1.0);
+        w.push(500, 2.0);
+        w.push(1600, 3.0); // evicts t=0 and t=500
+        assert_eq!(w.values(), vec![3.0]);
+    }
+
+    #[test]
+    fn frac_above_matches_percentile_semantics() {
+        let mut w = SlidingWindow::new(10_000);
+        for i in 0..100 {
+            w.push(i, i as f64 / 100.0); // values 0.00..0.99
+        }
+        let f = w.frac_above(99, 0.9).unwrap();
+        assert!((f - 0.09).abs() < 1e-9, "f={f}");
+        // p90 > 0.9 iff frac_above(0.9) > 0.1 — not the case here (0.09).
+        assert!(w.percentile(99, 90.0).unwrap() <= 0.9 + 1e-9);
+        assert!(w.frac_above(99, 2.0).unwrap() == 0.0);
+        assert!(SlidingWindow::new(10).frac_above(5, 0.0).is_none());
+    }
+
+    #[test]
+    fn sliding_window_percentile_respects_now() {
+        let mut w = SlidingWindow::new(1000);
+        for i in 0..10 {
+            w.push(i * 100, i as f64);
+        }
+        let p = w.percentile(900, 100.0).unwrap();
+        assert_eq!(p, 9.0);
+        // far-future `now` excludes everything
+        assert!(w.percentile(10_000, 50.0).is_none());
+    }
+
+    #[test]
+    fn histogram_quantiles_approximate() {
+        let mut h = LatencyHistogram::new(1.0, 1e6, 200);
+        for i in 1..=10_000 {
+            h.record(i as f64);
+        }
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!((p50 / 5000.0 - 1.0).abs() < 0.10, "p50={p50}");
+        assert!((p99 / 9900.0 - 1.0).abs() < 0.10, "p99={p99}");
+    }
+
+    #[test]
+    fn histogram_overflow_and_underflow() {
+        let mut h = LatencyHistogram::new(10.0, 100.0, 10);
+        h.record(1.0); // below min -> bucket 0
+        h.record(1e9); // overflow
+        assert_eq!(h.count(), 2);
+    }
+
+    #[test]
+    fn rolling_mean_smooths() {
+        let mut ts = TimeSeries::new();
+        for i in 0..100u64 {
+            ts.push(i * 1000, if i % 2 == 0 { 0.0 } else { 10.0 });
+        }
+        let smooth = ts.rolling_mean(10_000);
+        // after warmup every window holds ~half zeros, half tens
+        let tail: Vec<f64> = smooth.points[20..].iter().map(|&(_, v)| v).collect();
+        for v in tail {
+            assert!((v - 5.0).abs() <= 1.0, "v={v}");
+        }
+    }
+
+    #[test]
+    fn frac_above_counts_threshold_crossings() {
+        let mut ts = TimeSeries::new();
+        for i in 0..10u64 {
+            ts.push(i, if i < 3 { 5000.0 } else { 4000.0 });
+        }
+        assert!((ts.frac_above(4800.0) - 0.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn integral_piecewise_constant() {
+        let mut ts = TimeSeries::new();
+        ts.push(0, 100.0);
+        ts.push(10, 200.0);
+        ts.push(20, 0.0);
+        assert_eq!(ts.integral(), 100.0 * 10.0 + 200.0 * 10.0);
+    }
+}

@@ -1,0 +1,162 @@
+//! Arrival processes: Poisson (the paper's model) and a bursty variant.
+
+use crate::types::{Micros, SECOND};
+use crate::util::rng::Rng;
+
+/// Optional burst structure layered on the base process.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Burstiness {
+    /// Plain Poisson (paper §4).
+    None,
+    /// Markov-modulated Poisson: alternate calm/burst regimes. `factor`
+    /// multiplies the rate during bursts; `burst_frac` is the fraction of
+    /// time spent bursting. Models the "bursty request rates" of §3.
+    Markov { factor: f64, burst_frac: f64, mean_dwell: Micros },
+}
+
+#[derive(Debug, Clone)]
+pub struct ArrivalProcess {
+    rng: Rng,
+    /// Base rate, requests per second.
+    rate: f64,
+    burst: Burstiness,
+    /// Current regime: true while bursting.
+    bursting: bool,
+    regime_until: Micros,
+}
+
+impl ArrivalProcess {
+    pub fn poisson(rng: Rng, rate_qps: f64) -> Self {
+        assert!(rate_qps > 0.0);
+        ArrivalProcess {
+            rng,
+            rate: rate_qps,
+            burst: Burstiness::None,
+            bursting: false,
+            regime_until: 0,
+        }
+    }
+
+    pub fn bursty(rng: Rng, rate_qps: f64, factor: f64, burst_frac: f64) -> Self {
+        assert!(factor > 1.0 && (0.0..1.0).contains(&burst_frac));
+        ArrivalProcess {
+            rng,
+            rate: rate_qps,
+            burst: Burstiness::Markov {
+                factor,
+                burst_frac,
+                mean_dwell: 2 * SECOND,
+            },
+            bursting: false,
+            regime_until: 0,
+        }
+    }
+
+    fn current_rate(&mut self, now: Micros) -> f64 {
+        match self.burst {
+            Burstiness::None => self.rate,
+            Burstiness::Markov {
+                factor,
+                burst_frac,
+                mean_dwell,
+            } => {
+                if now >= self.regime_until {
+                    // Flip regimes; dwell times keep the long-run burst
+                    // fraction at `burst_frac`.
+                    self.bursting = self.rng.chance(burst_frac);
+                    let dwell = self.rng.exponential(1.0 / (mean_dwell as f64 / 1e6));
+                    self.regime_until = now + (dwell * 1e6) as Micros;
+                }
+                if self.bursting {
+                    // Keep the long-run mean rate equal to `rate`:
+                    // burst at rate*factor, calm below rate.
+                    self.rate * factor
+                } else {
+                    self.rate * (1.0 - burst_frac * factor).max(0.05)
+                        / (1.0 - burst_frac)
+                }
+            }
+        }
+    }
+
+    /// Next arrival strictly after `t`.
+    pub fn next_after(&mut self, t: Micros) -> Micros {
+        let rate = self.current_rate(t);
+        let gap = self.rng.exponential(rate);
+        t + (gap * 1e6).max(1.0) as Micros
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_mean_rate() {
+        let mut ap = ArrivalProcess::poisson(Rng::new(5), 20.0);
+        let mut t = 0;
+        let n = 20_000;
+        for _ in 0..n {
+            t = ap.next_after(t);
+        }
+        let measured = n as f64 / (t as f64 / 1e6);
+        assert!((measured / 20.0 - 1.0).abs() < 0.05, "rate={measured}");
+    }
+
+    #[test]
+    fn poisson_cv_is_one() {
+        // Coefficient of variation of exponential gaps ~ 1.
+        let mut ap = ArrivalProcess::poisson(Rng::new(6), 50.0);
+        let mut t = 0;
+        let mut gaps = Vec::new();
+        for _ in 0..20_000 {
+            let nt = ap.next_after(t);
+            gaps.push((nt - t) as f64);
+            t = nt;
+        }
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let var = gaps.iter().map(|g| (g - mean).powi(2)).sum::<f64>() / gaps.len() as f64;
+        let cv = var.sqrt() / mean;
+        assert!((cv - 1.0).abs() < 0.05, "cv={cv}");
+    }
+
+    #[test]
+    fn bursty_has_higher_variance_than_poisson() {
+        let mut calm = ArrivalProcess::poisson(Rng::new(7), 20.0);
+        let mut bursty = ArrivalProcess::bursty(Rng::new(7), 20.0, 4.0, 0.2);
+        let count_in_windows = |ap: &mut ArrivalProcess| {
+            let mut t = 0u64;
+            let mut counts = vec![0u32; 200];
+            loop {
+                t = ap.next_after(t);
+                let w = (t / SECOND) as usize;
+                if w >= counts.len() {
+                    break;
+                }
+                counts[w] += 1;
+            }
+            let mean = counts.iter().map(|&c| c as f64).sum::<f64>() / counts.len() as f64;
+            let var = counts
+                .iter()
+                .map(|&c| (c as f64 - mean).powi(2))
+                .sum::<f64>()
+                / counts.len() as f64;
+            var / mean // index of dispersion; 1 for Poisson
+        };
+        let d_calm = count_in_windows(&mut calm);
+        let d_bursty = count_in_windows(&mut bursty);
+        assert!(d_calm < 1.5, "poisson dispersion {d_calm}");
+        assert!(d_bursty > d_calm, "bursty {d_bursty} vs calm {d_calm}");
+    }
+
+    #[test]
+    fn arrivals_strictly_increase() {
+        let mut ap = ArrivalProcess::poisson(Rng::new(8), 1000.0);
+        let mut t = 0;
+        for _ in 0..1000 {
+            let nt = ap.next_after(t);
+            assert!(nt > t);
+            t = nt;
+        }
+    }
+}

@@ -1,0 +1,90 @@
+//! LongBench statistical replica (paper §4).
+//!
+//! LongBench prompts are long-context documents; the paper truncates to a
+//! maximum of 8 K input tokens. We model the published length profile as
+//! a log-normal body with a hard cap at 8 K (the cap produces the mass
+//! spike at the maximum the paper mentions as "a unique distribution of
+//! long requests"). Outputs are short summaries/answers: uniform 64–192
+//! tokens around the paper's 128-token working point.
+
+use crate::util::rng::Rng;
+use crate::workload::SizeSampler;
+
+pub const MAX_INPUT_TOKENS: u32 = 8192;
+
+#[derive(Debug, Clone)]
+pub struct LongBench {
+    rng: Rng,
+    max_input: u32,
+}
+
+impl LongBench {
+    pub fn new(rng: Rng) -> Self {
+        LongBench {
+            rng,
+            max_input: MAX_INPUT_TOKENS,
+        }
+    }
+
+    pub fn with_max_input(rng: Rng, max_input: u32) -> Self {
+        LongBench { rng, max_input }
+    }
+
+    /// Mean prompt length of the (capped) distribution, by simulation.
+    pub fn mean_input_tokens(seed: u64, n: usize) -> f64 {
+        let mut lb = LongBench::new(Rng::new(seed));
+        let total: u64 = (0..n).map(|i| lb.sample(i).0 as u64).sum();
+        total as f64 / n as f64
+    }
+}
+
+impl SizeSampler for LongBench {
+    fn sample(&mut self, _i: usize) -> (u32, u32) {
+        // Log-normal: median ~2000 tokens, sigma 0.8 -> long tail that the
+        // 8K cap folds into a spike at max (LongBench's doc-length shape).
+        let raw = self.rng.lognormal(7.6, 0.8);
+        let input = (raw as u32).clamp(64, self.max_input);
+        let output = 64 + self.rng.range_u64(0, 129) as u32; // 64..=192
+        (input, output)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inputs_within_bounds() {
+        let mut lb = LongBench::new(Rng::new(1));
+        for i in 0..10_000 {
+            let (inp, out) = lb.sample(i);
+            assert!((64..=MAX_INPUT_TOKENS).contains(&inp));
+            assert!((64..=192).contains(&out));
+        }
+    }
+
+    #[test]
+    fn long_tailed_with_cap_spike() {
+        let mut lb = LongBench::new(Rng::new(2));
+        let samples: Vec<u32> = (0..20_000).map(|i| lb.sample(i).0).collect();
+        let at_cap = samples.iter().filter(|&&x| x == MAX_INPUT_TOKENS).count();
+        // A visible but minority spike at the cap.
+        let frac = at_cap as f64 / samples.len() as f64;
+        assert!((0.01..0.30).contains(&frac), "cap spike frac={frac}");
+        let mut sorted = samples.clone();
+        sorted.sort();
+        let median = sorted[sorted.len() / 2] as f64;
+        let mean = samples.iter().map(|&x| x as f64).sum::<f64>() / samples.len() as f64;
+        assert!(mean > median, "long tail: mean {mean} > median {median}");
+        // Working point: mean ~2-3K tokens, median ~2K.
+        assert!((1500.0..3500.0).contains(&mean), "mean={mean}");
+    }
+
+    #[test]
+    fn custom_cap_respected() {
+        let mut lb = LongBench::with_max_input(Rng::new(3), 1024);
+        for i in 0..1000 {
+            assert!(lb.sample(i).0 <= 1024);
+        }
+    }
+}

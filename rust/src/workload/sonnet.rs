@@ -1,0 +1,176 @@
+//! Sonnet-style controlled workloads (paper §4, §5.2).
+//!
+//! The paper uses Sonnet to "verify the robustness of the dynamic RAPID
+//! algorithm for varying input sizes and distributions in a controlled
+//! manner". `Sonnet` emits fixed-size requests with small jitter;
+//! `MixedPhases` reproduces the Fig 8/9 trace structure: a prefill-heavy
+//! phase followed by a decode-heavy phase, with the TPOT SLO tightening
+//! from 40 ms to 20 ms in phase two.
+//!
+//! Substitution note (DESIGN.md §2): the paper's token budgets
+//! (8K/128 then 500/500 at 2.0 QPS/GPU) presume its testbed's
+//! prefill:decode capacity ratio. On our calibrated substrate the same
+//! *stress pattern* — phase 1 saturates the prefill pool, phase 2
+//! saturates the decode pool, each relieved by ~2 extra GPUs — lands at
+//! 4K/64 then 128/1280 at ~1.05 QPS/GPU. The controller sees the same
+//! signals; only the absolute token counts differ.
+
+use crate::types::{Micros, Request, RequestId, Slo, MILLIS, SECOND};
+use crate::util::rng::Rng;
+use crate::workload::{ArrivalProcess, SizeSampler, Trace};
+
+/// Fixed-size sampler with ±`jitter_frac` uniform jitter.
+#[derive(Debug, Clone)]
+pub struct Sonnet {
+    rng: Rng,
+    pub input_tokens: u32,
+    pub output_tokens: u32,
+    pub jitter_frac: f64,
+}
+
+impl Sonnet {
+    pub fn new(rng: Rng, input_tokens: u32, output_tokens: u32) -> Self {
+        Sonnet {
+            rng,
+            input_tokens,
+            output_tokens,
+            jitter_frac: 0.05,
+        }
+    }
+
+    fn jitter(&mut self, v: u32) -> u32 {
+        if self.jitter_frac == 0.0 {
+            return v;
+        }
+        let f = 1.0 + self.rng.range_f64(-self.jitter_frac, self.jitter_frac);
+        ((v as f64 * f) as u32).max(1)
+    }
+}
+
+impl SizeSampler for Sonnet {
+    fn sample(&mut self, _i: usize) -> (u32, u32) {
+        (self.jitter(self.input_tokens), self.jitter(self.output_tokens))
+    }
+}
+
+/// Parameters of the Fig 8/9 two-phase synthetic workload.
+#[derive(Debug, Clone, Copy)]
+pub struct MixedPhasesSpec {
+    pub prefill_heavy_count: usize,
+    pub decode_heavy_count: usize,
+    /// Node-level arrival rate (QPS) for both phases.
+    pub rate_qps: f64,
+    pub ttft_slo: Micros,
+    /// TPOT SLO during the prefill-heavy phase (paper: 40 ms).
+    pub tpot_slo_phase1: Micros,
+    /// TPOT SLO during the decode-heavy phase (paper: 20 ms).
+    pub tpot_slo_phase2: Micros,
+    /// (input, output) tokens of the prefill-heavy phase.
+    pub heavy_shape: (u32, u32),
+    /// (input, output) tokens of the decode-heavy phase.
+    pub light_shape: (u32, u32),
+}
+
+impl Default for MixedPhasesSpec {
+    fn default() -> Self {
+        MixedPhasesSpec {
+            prefill_heavy_count: 1000,
+            decode_heavy_count: 1000,
+            // The paper's 2.0 QPS/GPU maps to ~1.05 on this substrate
+            // (see module docs).
+            rate_qps: 8.4,
+            ttft_slo: SECOND,
+            tpot_slo_phase1: 40 * MILLIS,
+            tpot_slo_phase2: 20 * MILLIS,
+            heavy_shape: (4096, 64),
+            light_shape: (128, 1280),
+        }
+    }
+}
+
+/// Build the Fig 8/9 trace: phase 1 = 8K/128 @40ms TPOT SLO, phase 2 =
+/// 500/500 @20ms TPOT SLO, Poisson arrivals throughout.
+pub fn mixed_phases(seed: u64, spec: MixedPhasesSpec) -> Trace {
+    let mut root = Rng::new(seed);
+    let mut ap = ArrivalProcess::poisson(root.fork(0), spec.rate_qps);
+    let mut heavy = Sonnet::new(root.fork(1), spec.heavy_shape.0, spec.heavy_shape.1);
+    let mut light = Sonnet::new(root.fork(2), spec.light_shape.0, spec.light_shape.1);
+    let mut requests = Vec::with_capacity(spec.prefill_heavy_count + spec.decode_heavy_count);
+    let mut t: Micros = 0;
+    for i in 0..(spec.prefill_heavy_count + spec.decode_heavy_count) {
+        t = ap.next_after(t);
+        let phase1 = i < spec.prefill_heavy_count;
+        let (input_tokens, output_tokens) = if phase1 {
+            heavy.sample(i)
+        } else {
+            light.sample(i)
+        };
+        let slo = Slo::new(
+            spec.ttft_slo,
+            if phase1 {
+                spec.tpot_slo_phase1
+            } else {
+                spec.tpot_slo_phase2
+            },
+        );
+        requests.push(Request {
+            id: RequestId(i as u64),
+            arrival: t,
+            input_tokens,
+            output_tokens,
+            slo,
+        });
+    }
+    Trace { requests }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sonnet_sizes_near_targets() {
+        let mut s = Sonnet::new(Rng::new(1), 8192, 128);
+        for i in 0..1000 {
+            let (inp, out) = s.sample(i);
+            assert!((7700..=8700).contains(&inp), "inp={inp}");
+            assert!((121..=135).contains(&out), "out={out}");
+        }
+    }
+
+    #[test]
+    fn sonnet_zero_jitter_is_exact() {
+        let mut s = Sonnet::new(Rng::new(2), 512, 512);
+        s.jitter_frac = 0.0;
+        assert_eq!(s.sample(0), (512, 512));
+    }
+
+    #[test]
+    fn mixed_phases_shape() {
+        let trace = mixed_phases(42, MixedPhasesSpec::default());
+        assert_eq!(trace.requests.len(), 2000);
+        // Phase 1: prefill heavy
+        let p1 = &trace.requests[..1000];
+        assert!(p1.iter().all(|r| r.input_tokens > 3500 && r.output_tokens < 100));
+        assert!(p1.iter().all(|r| r.slo.tpot == 40 * MILLIS));
+        // Phase 2: decode heavy, tighter TPOT
+        let p2 = &trace.requests[1000..];
+        assert!(p2.iter().all(|r| r.input_tokens < 200 && r.output_tokens > 1000));
+        assert!(p2.iter().all(|r| r.slo.tpot == 20 * MILLIS));
+        // Arrivals monotone across the phase boundary.
+        for w in trace.requests.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+    }
+
+    #[test]
+    fn mixed_phases_deterministic_per_seed() {
+        let a = mixed_phases(7, MixedPhasesSpec::default());
+        let b = mixed_phases(7, MixedPhasesSpec::default());
+        assert_eq!(a.requests.len(), b.requests.len());
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.input_tokens, y.input_tokens);
+        }
+    }
+}

@@ -1,0 +1,157 @@
+//! Request traces: the unit of experiment input (record/replay-able).
+
+use crate::types::{Micros, Request, RequestId, Slo, SECOND};
+
+/// An ordered list of requests with non-decreasing arrival times.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub requests: Vec<Request>,
+}
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Wall-clock span from first to last arrival.
+    pub fn span(&self) -> Micros {
+        match (self.requests.first(), self.requests.last()) {
+            (Some(f), Some(l)) => l.arrival - f.arrival,
+            _ => 0,
+        }
+    }
+
+    /// Mean offered rate in requests/second.
+    pub fn offered_qps(&self) -> f64 {
+        if self.requests.len() < 2 {
+            return 0.0;
+        }
+        (self.requests.len() - 1) as f64 / (self.span() as f64 / SECOND as f64)
+    }
+
+    /// Total prompt tokens (prefill demand).
+    pub fn total_input_tokens(&self) -> u64 {
+        self.requests.iter().map(|r| r.input_tokens as u64).sum()
+    }
+
+    /// Total output tokens (decode demand).
+    pub fn total_output_tokens(&self) -> u64 {
+        self.requests.iter().map(|r| r.output_tokens as u64).sum()
+    }
+
+    /// Override every request's SLO (Fig 7's SLO-scale sweeps).
+    pub fn with_slo(mut self, slo: Slo) -> Trace {
+        for r in &mut self.requests {
+            r.slo = slo;
+        }
+        self
+    }
+
+    /// Serialize to a simple CSV (id,arrival_us,in,out,ttft_slo,tpot_slo).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("id,arrival_us,input_tokens,output_tokens,ttft_slo_us,tpot_slo_us\n");
+        for r in &self.requests {
+            out.push_str(&format!(
+                "{},{},{},{},{},{}\n",
+                r.id.0, r.arrival, r.input_tokens, r.output_tokens, r.slo.ttft, r.slo.tpot
+            ));
+        }
+        out
+    }
+
+    /// Parse the CSV produced by [`Trace::to_csv`].
+    pub fn from_csv(text: &str) -> Result<Trace, String> {
+        let mut requests = Vec::new();
+        for (i, line) in text.lines().enumerate().skip(1) {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let fields: Vec<&str> = line.split(',').collect();
+            if fields.len() != 6 {
+                return Err(format!("line {}: expected 6 fields", i + 1));
+            }
+            let parse =
+                |s: &str| s.trim().parse::<u64>().map_err(|e| format!("line {}: {e}", i + 1));
+            requests.push(Request {
+                id: RequestId(parse(fields[0])?),
+                arrival: parse(fields[1])?,
+                input_tokens: parse(fields[2])? as u32,
+                output_tokens: parse(fields[3])? as u32,
+                slo: Slo::new(parse(fields[4])?, parse(fields[5])?),
+            });
+        }
+        Ok(Trace { requests })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace3() -> Trace {
+        Trace {
+            requests: vec![
+                Request {
+                    id: RequestId(0),
+                    arrival: 0,
+                    input_tokens: 100,
+                    output_tokens: 10,
+                    slo: Slo::paper_default(),
+                },
+                Request {
+                    id: RequestId(1),
+                    arrival: SECOND,
+                    input_tokens: 200,
+                    output_tokens: 20,
+                    slo: Slo::paper_default(),
+                },
+                Request {
+                    id: RequestId(2),
+                    arrival: 2 * SECOND,
+                    input_tokens: 300,
+                    output_tokens: 30,
+                    slo: Slo::paper_default(),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn aggregates() {
+        let t = trace3();
+        assert_eq!(t.span(), 2 * SECOND);
+        assert!((t.offered_qps() - 1.0).abs() < 1e-9);
+        assert_eq!(t.total_input_tokens(), 600);
+        assert_eq!(t.total_output_tokens(), 60);
+    }
+
+    #[test]
+    fn csv_round_trip() {
+        let t = trace3();
+        let csv = t.to_csv();
+        let back = Trace::from_csv(&csv).unwrap();
+        assert_eq!(back.len(), 3);
+        for (a, b) in t.requests.iter().zip(&back.requests) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.arrival, b.arrival);
+            assert_eq!(a.input_tokens, b.input_tokens);
+            assert_eq!(a.slo.tpot, b.slo.tpot);
+        }
+    }
+
+    #[test]
+    fn from_csv_rejects_malformed() {
+        assert!(Trace::from_csv("header\n1,2,3\n").is_err());
+        assert!(Trace::from_csv("header\na,b,c,d,e,f\n").is_err());
+    }
+
+    #[test]
+    fn with_slo_overrides_all() {
+        let t = trace3().with_slo(Slo::new(1, 2));
+        assert!(t.requests.iter().all(|r| r.slo.ttft == 1 && r.slo.tpot == 2));
+    }
+}

@@ -1,0 +1,35 @@
+//! The shipped example configs must parse and validate.
+
+use rapid::config::ClusterConfig;
+
+#[test]
+fn shipped_configs_parse_and_validate() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/configs");
+    let mut count = 0;
+    for entry in std::fs::read_dir(dir).expect("configs/ present") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("toml") {
+            continue;
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let cfg = ClusterConfig::from_toml(&text)
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        cfg.validate().unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        count += 1;
+    }
+    assert!(count >= 3, "expected the shipped example configs");
+}
+
+#[test]
+fn custom_topology_config_resolves() {
+    let text = std::fs::read_to_string(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/configs/custom-6p2d.toml"
+    ))
+    .unwrap();
+    let cfg = ClusterConfig::from_toml(&text).unwrap();
+    assert_eq!(cfg.name, "6P-550W/2D-750W");
+    assert_eq!(cfg.prefill_gpus(), 6);
+    assert_eq!(cfg.total_initial_caps(), 6.0 * 550.0 + 2.0 * 750.0);
+    assert!(cfg.total_initial_caps() <= cfg.node_budget_w);
+}

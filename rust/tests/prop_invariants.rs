@@ -1,0 +1,239 @@
+//! Property tests on coordinator/power/simulator invariants, using the
+//! in-repo property framework (`rapid::util::check`). Each property runs
+//! across randomized workloads, configurations and seeds.
+
+use rapid::config::{presets, ClusterConfig, ControlPolicy, Topology};
+use rapid::power::PowerManager;
+use rapid::sim::{self, SimOptions};
+use rapid::types::{GpuId, Slo, MILLIS, SECOND};
+use rapid::util::check::{ensure, property, CaseResult, Gen};
+use rapid::workload::{build_trace, sonnet::Sonnet, ArrivalProcess, Trace};
+
+fn random_config(g: &mut Gen) -> ClusterConfig {
+    let mut cfg = match *g.choice(&[0, 1, 2, 3, 4]) {
+        0 => presets::p4d4(600.0),
+        1 => presets::p5d3_600(),
+        2 => presets::p4_750_d4_450(),
+        3 => presets::rapid_600(),
+        _ => presets::dyn_gpu_600(),
+    };
+    // Jitter the controller knobs inside legal ranges.
+    cfg.controller.queue_threshold = g.usize_range(2, 12);
+    cfg.controller.cooldown = g.u64_range(500, 4000) * MILLIS;
+    cfg.batch.ring_slots = g.usize_range(4, 64);
+    cfg
+}
+
+fn random_trace(g: &mut Gen, n: usize) -> Trace {
+    let qps = g.f64_range(2.0, 24.0);
+    let input = g.u64_range(128, 6000) as u32;
+    let output = g.u64_range(4, 300) as u32;
+    let seed = g.u64_range(0, 1 << 32);
+    let mut ap = ArrivalProcess::poisson(rapid::util::rng::Rng::new(seed), qps);
+    let mut sizes = Sonnet::new(rapid::util::rng::Rng::new(seed ^ 7), input, output);
+    build_trace(n, &mut ap, &mut sizes, Slo::paper_default())
+}
+
+#[test]
+fn prop_every_request_gets_exactly_one_record() {
+    property("request conservation", 40, |g| {
+        let cfg = random_config(g);
+        let trace = random_trace(g, 120);
+        let res = sim::run(&cfg, &trace, &SimOptions::default());
+        ensure(
+            res.records.len() == trace.len(),
+            format!("{} records for {} requests", res.records.len(), trace.len()),
+        )?;
+        let mut ids: Vec<u64> = res.records.iter().map(|r| r.id.0).collect();
+        ids.sort();
+        ids.dedup();
+        ensure(ids.len() == trace.len(), "duplicate or missing record ids")
+    });
+}
+
+#[test]
+fn prop_records_causally_ordered() {
+    property("causal ordering", 30, |g| {
+        let cfg = random_config(g);
+        let trace = random_trace(g, 100);
+        let res = sim::run(&cfg, &trace, &SimOptions::default());
+        for r in &res.records {
+            ensure(r.arrival <= r.prefill_start, format!("{r:?}"))?;
+            ensure(r.prefill_start <= r.first_token, format!("{r:?}"))?;
+            ensure(r.first_token <= r.finish, format!("{r:?}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_power_draw_never_exceeds_enforced_budget() {
+    property("budget safety", 30, |g| {
+        let mut cfg = random_config(g);
+        cfg.enforce_budget = true;
+        let trace = random_trace(g, 150);
+        let res = sim::run(&cfg, &trace, &SimOptions::default());
+        ensure(
+            res.node_power.max() <= cfg.node_budget_w + 10.0,
+            format!("peak {} > budget {}", res.node_power.max(), cfg.node_budget_w),
+        )
+    });
+}
+
+#[test]
+fn prop_roles_always_cover_both_phases() {
+    property("min one GPU per phase", 25, |g| {
+        let mut cfg = random_config(g);
+        cfg.control = if g.bool() {
+            ControlPolicy::DynPowerGpu
+        } else {
+            ControlPolicy::DynGpu
+        };
+        let trace = random_trace(g, 200);
+        let res = sim::run(&cfg, &trace, &SimOptions::default());
+        for &(t, p, d) in &res.role_trace {
+            ensure(
+                p >= 1 && d >= 1 && p + d == cfg.n_gpus,
+                format!("at t={t}: {p}P {d}D of {}", cfg.n_gpus),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_caps_stay_within_limits() {
+    property("cap limits", 25, |g| {
+        let cfg = random_config(g);
+        let trace = random_trace(g, 150);
+        let res = sim::run(&cfg, &trace, &SimOptions::default());
+        let (lo, hi) = (cfg.controller.min_gpu_w - 1.0, cfg.controller.max_gpu_w + 1.0);
+        for (t, caps) in &res.cap_trace {
+            for &c in caps {
+                ensure((lo..=hi).contains(&c), format!("cap {c} at t={t}"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_decision_spacing_respects_cooldown() {
+    property("cooldown hysteresis", 20, |g| {
+        let mut cfg = presets::rapid_600();
+        cfg.controller.cooldown = g.u64_range(1000, 5000) * MILLIS;
+        cfg.controller.queue_threshold = 3;
+        let trace = random_trace(g, 250);
+        let res = sim::run(&cfg, &trace, &SimOptions::default());
+        for w in res.decisions.windows(2) {
+            let gap = w[1].0 - w[0].0;
+            ensure(
+                gap + MILLIS >= cfg.controller.cooldown,
+                format!("decisions {} us apart < cooldown {}", gap, cfg.controller.cooldown),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_goodput_monotone_in_slo_relaxation() {
+    property("slo monotonicity", 15, |g| {
+        let cfg = presets::p4d4(600.0);
+        let base = random_trace(g, 150);
+        let strict = sim::run(
+            &cfg,
+            &base.clone().with_slo(Slo::new(500 * MILLIS, 15 * MILLIS)),
+            &SimOptions::default(),
+        );
+        let relaxed = sim::run(
+            &cfg,
+            &base.with_slo(Slo::new(4 * SECOND, 200 * MILLIS)),
+            &SimOptions::default(),
+        );
+        ensure(
+            relaxed.attainment() >= strict.attainment() - 1e-9,
+            format!("{} < {}", relaxed.attainment(), strict.attainment()),
+        )
+    });
+}
+
+#[test]
+fn prop_power_manager_never_double_spends() {
+    property("manager budget", 60, |g| {
+        let n = g.usize_range(2, 10);
+        let budget = g.f64_range(400.0 * n as f64, 750.0 * n as f64);
+        let init = (budget / n as f64).min(750.0).max(400.0);
+        let mut m = PowerManager::new(&vec![init; n], budget, true, 400.0, 750.0);
+        let mut now = 0u64;
+        for _ in 0..30 {
+            now += g.u64_range(1, 500) * MILLIS;
+            m.poll(now);
+            let op = g.usize_range(0, 3);
+            match op {
+                0 => {
+                    let gpu = GpuId(g.usize_range(0, n));
+                    let cap = g.f64_range(400.0, 750.0);
+                    let _ = m.set_cap(now, gpu, cap);
+                }
+                1 => {
+                    let split = g.usize_range(1, n);
+                    let sources: Vec<GpuId> = (0..split).map(GpuId).collect();
+                    let sinks: Vec<GpuId> = (split..n).map(GpuId).collect();
+                    if !sinks.is_empty() {
+                        let _ = m.move_power(now, &sources, &sinks, g.f64_range(10.0, 400.0), 750.0);
+                    }
+                }
+                _ => {
+                    m.distribute_uniform(now);
+                }
+            }
+            ensure(m.budget_ok(), format!("budget violated after op {op} at {now}"))?;
+        }
+        // Let everything settle; still within budget.
+        m.poll(now + 10 * SECOND);
+        ensure(m.budget_ok(), "budget violated after final settle")
+    });
+}
+
+#[test]
+fn prop_coalesced_and_disaggregated_complete_same_workload() {
+    property("topology completeness", 15, |g| {
+        let trace = random_trace(g, 80);
+        for topo in [Topology::Coalesced, Topology::Disaggregated { prefill: 4, decode: 4 }] {
+            let mut cfg = presets::p4d4(600.0);
+            if topo == Topology::Coalesced {
+                cfg = presets::coalesced(600.0);
+            }
+            let res = sim::run(&cfg, &trace, &SimOptions::default());
+            ensure(
+                res.records.len() == trace.len(),
+                format!("{:?} lost requests", cfg.topology),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_higher_rate_never_improves_tail_latency() {
+    property("load monotonicity (p90 ttft)", 12, |g| {
+        let cfg = presets::p4d4(600.0);
+        let seed = g.u64_range(0, 1 << 30);
+        let mk = |qps: f64| {
+            let mut ap = ArrivalProcess::poisson(rapid::util::rng::Rng::new(seed), qps);
+            let mut sizes = Sonnet::new(rapid::util::rng::Rng::new(seed ^ 3), 2048, 64);
+            build_trace(200, &mut ap, &mut sizes, Slo::paper_default())
+        };
+        let low = sim::run(&cfg, &mk(4.0), &SimOptions::default());
+        let high = sim::run(&cfg, &mk(30.0), &SimOptions::default());
+        ensure(
+            high.ttft_percentile(90.0) >= low.ttft_percentile(90.0) * 0.8,
+            format!(
+                "p90 ttft high={} low={}",
+                high.ttft_percentile(90.0),
+                low.ttft_percentile(90.0)
+            ),
+        )
+    });
+}

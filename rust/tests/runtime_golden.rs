@@ -1,0 +1,50 @@
+//! Cross-language golden test: the rust PJRT runtime must reproduce the
+//! exact greedy continuation python/jax computed at export time
+//! (artifacts/golden.json). This pins L1 (Pallas), L2 (JAX), the AOT
+//! bridge and the rust execution path to each other bit-for-bit at the
+//! argmax level.
+
+use rapid::runtime::Engine;
+use rapid::util::json::Json;
+
+#[test]
+fn rust_reproduces_python_greedy_tokens() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    let golden_path = std::path::Path::new(dir).join("golden.json");
+    if !golden_path.exists() {
+        eprintln!("golden.json missing; skipping");
+        return;
+    }
+    let golden = Json::parse(&std::fs::read_to_string(&golden_path).unwrap()).unwrap();
+    let prompt: Vec<i64> = golden
+        .get("prompt_tokens")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_u64().unwrap() as i64)
+        .collect();
+    let expect: Vec<i64> = golden
+        .get("greedy")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_u64().unwrap() as i64)
+        .collect();
+
+    let eng = Engine::load(dir).expect("engine");
+    let out = eng.prefill(&[prompt.clone()]).expect("prefill");
+    let mut got = vec![out.tokens[0]];
+    let mut kv = out.kv;
+    let mut tok = out.tokens[0];
+    let mut pos = prompt.len() as i64;
+    for _ in 1..expect.len() {
+        let step = eng.decode(&[tok], &[pos], &kv).expect("decode");
+        kv = step.kv;
+        tok = step.tokens[0];
+        got.push(tok);
+        pos += 1;
+    }
+    assert_eq!(got, expect, "rust greedy tokens diverge from python");
+}
