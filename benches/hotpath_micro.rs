@@ -33,6 +33,7 @@ fn main() {
     let loads: Vec<WorkerLoad> = (0..8)
         .map(|i| WorkerLoad {
             gpu: GpuId(i),
+            node: 0,
             queued_tokens: (i as u64 * 37) % 5000,
             requests: i % 5,
             accepting: i != 3,

@@ -5,17 +5,26 @@
 
 use std::collections::BTreeMap;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown flag '--{0}' (see --help)")]
     UnknownFlag(String),
-    #[error("flag '--{0}' needs a value")]
     MissingValue(String),
-    #[error("invalid value for '--{flag}': {msg}")]
     BadValue { flag: String, msg: String },
-    #[error("{0}")]
     Usage(String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::UnknownFlag(n) => write!(f, "unknown flag '--{n}' (see --help)"),
+            CliError::MissingValue(n) => write!(f, "flag '--{n}' needs a value"),
+            CliError::BadValue { flag, msg } => write!(f, "invalid value for '--{flag}': {msg}"),
+            CliError::Usage(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 /// One flag specification.
 #[derive(Debug, Clone)]

@@ -1,0 +1,651 @@
+//! The cluster core: a discrete-event simulation of one or more GPU
+//! nodes under a pluggable control policy.
+//!
+//! This layer owns what used to be entangled inside the `sim::engine`
+//! monolith:
+//!
+//! * **topology** — `n_nodes` identical nodes of `n_gpus` each, with the
+//!   per-node prefill/decode split of [`crate::config::Topology`];
+//! * **routing** — central least-loaded dispatch across all nodes, with
+//!   KV locality (same-node decode preferred; cross-node transfers pay
+//!   the slower RDMA link);
+//! * **drain/epoch lifecycle** — role switches drain a GPU, bump its
+//!   epoch so stale completions are dropped, and re-route queued work;
+//! * **the KV ring** — per-node ring-slot accounting between prefill and
+//!   decode (backpressure, paper §3.2);
+//! * **hierarchical power** — [`crate::power::PowerManager`] enforcing
+//!   per-node budgets under a cluster-wide cap.
+//!
+//! Per-role step behavior lives in [`crate::sim::worker`]; control lives
+//! behind [`policy::Policy`]. The public entry point remains
+//! [`crate::sim::run`].
+
+pub mod policy;
+
+use crate::config::ClusterConfig;
+use crate::coordinator::router::{self, WorkerLoad};
+use crate::coordinator::{Action, Snapshot};
+use crate::metrics::RunResult;
+use crate::power::{PowerManager, PowerModel};
+use crate::sim::engine::SimOptions;
+use crate::sim::event::{DecodeItem, Event, EventQueue};
+use crate::sim::gpu::GpuSim;
+use crate::sim::worker;
+use crate::types::{GpuId, Micros, Request, RequestRecord, Role, SECOND};
+use crate::util::stats::TimeSeries;
+use crate::workload::Trace;
+
+use policy::Policy;
+
+/// The cluster simulation state. Fields are `pub(crate)` so the role
+/// behaviors in `sim::worker` can operate on it directly.
+pub struct Cluster {
+    pub(crate) cfg: ClusterConfig,
+    pub(crate) model: PowerModel,
+    pub(crate) power: PowerManager,
+    pub(crate) policy: Box<dyn Policy>,
+    pub(crate) gpus: Vec<GpuSim>,
+    pub(crate) events: EventQueue,
+    pub(crate) now: Micros,
+    pub(crate) trace: Vec<Request>,
+    pub(crate) next_arrival: usize,
+    pub(crate) records: Vec<RequestRecord>,
+    /// KV ring occupancy per node (slots in flight between prefill and
+    /// decode on that node's ring).
+    pub(crate) ring_used: Vec<usize>,
+    pub(crate) opts: SimOptions,
+    // --- result accumulation ---
+    cluster_power: TimeSeries,
+    node_power: Vec<TimeSeries>,
+    cap_trace: Vec<(Micros, Vec<f64>)>,
+    role_trace: Vec<(Micros, usize, usize)>,
+    decisions: Vec<(Micros, String)>,
+    provisioned_integral: f64,
+    last_sample_at: Micros,
+    hard_stop: Micros,
+    /// Telemetry-only RNG: models sub-sample-interval power microbursts
+    /// (kernel gaps, transfer stalls) that a 10 ms meter sees on real
+    /// hardware. Never feeds back into scheduling decisions' latencies.
+    sample_rng: crate::util::rng::Rng,
+}
+
+impl Cluster {
+    pub fn new(cfg: ClusterConfig, trace: Trace, opts: SimOptions) -> Self {
+        let model = PowerModel::new(cfg.perf.clone());
+        let total = cfg.total_gpus();
+        let caps: Vec<f64> = (0..total)
+            .map(|i| match cfg.initial_role(i) {
+                Role::Prefill | Role::Coalesced => cfg.prefill_cap_w,
+                Role::Decode => cfg.decode_cap_w,
+            })
+            .collect();
+        let node_of: Vec<usize> = (0..total).map(|i| cfg.node_of(i)).collect();
+        let power = PowerManager::with_nodes(
+            &caps,
+            node_of,
+            vec![cfg.node_budget_w; cfg.n_nodes],
+            cfg.cluster_budget(),
+            cfg.enforce_budget,
+            cfg.controller.min_gpu_w,
+            cfg.controller.max_gpu_w,
+        );
+        let gpus: Vec<GpuSim> = (0..total).map(|i| GpuSim::new(cfg.initial_role(i))).collect();
+        let policy = policy::make_policy(&cfg);
+        let hard_stop = trace
+            .requests
+            .last()
+            .map(|r| r.arrival)
+            .unwrap_or(0)
+            + opts.drain_grace;
+        Cluster {
+            model,
+            power,
+            policy,
+            gpus,
+            events: EventQueue::new(),
+            now: 0,
+            trace: trace.requests,
+            next_arrival: 0,
+            records: Vec::new(),
+            ring_used: vec![0; cfg.n_nodes],
+            cluster_power: TimeSeries::new(),
+            node_power: (0..cfg.n_nodes).map(|_| TimeSeries::new()).collect(),
+            cap_trace: Vec::new(),
+            role_trace: Vec::new(),
+            decisions: Vec::new(),
+            provisioned_integral: 0.0,
+            last_sample_at: 0,
+            opts,
+            cfg,
+            hard_stop,
+            sample_rng: crate::util::rng::Rng::new(0xF16_3),
+        }
+    }
+
+    pub fn run(mut self) -> RunResult {
+        if !self.trace.is_empty() {
+            self.events.push(self.trace[0].arrival, Event::Arrival);
+        }
+        self.events.push(self.cfg.controller.tick, Event::ControllerTick);
+        self.events.push(0, Event::Sample);
+        self.record_roles();
+
+        let total = self.trace.len();
+        while let Some((at, ev)) = self.events.pop() {
+            debug_assert!(at >= self.now, "time went backwards");
+            self.now = at;
+            if self.records.len() >= total || self.now > self.hard_stop {
+                break;
+            }
+            self.handle(ev);
+        }
+        self.finish()
+    }
+
+    // ------------------------------------------------------------------
+    // topology helpers
+    // ------------------------------------------------------------------
+
+    /// Node hosting cluster-global GPU `gi`.
+    pub(crate) fn node_of(&self, gi: usize) -> usize {
+        gi / self.cfg.n_gpus
+    }
+
+    /// Free KV ring slots on `node`.
+    pub(crate) fn ring_free(&self, node: usize) -> usize {
+        self.cfg.batch.ring_slots.saturating_sub(self.ring_used[node])
+    }
+
+    /// Router view of every prefill worker.
+    pub(crate) fn prefill_loads(&self) -> Vec<WorkerLoad> {
+        self.gpus
+            .iter()
+            .enumerate()
+            .filter(|(_, g)| g.role == Role::Prefill)
+            .map(|(i, g)| WorkerLoad {
+                gpu: GpuId(i),
+                node: self.node_of(i),
+                queued_tokens: g.pf_queued_tokens,
+                requests: g.pf_queue.len(),
+                accepting: g.accepting(),
+            })
+            .collect()
+    }
+
+    /// Router view of every decode worker, optionally excluding one GPU
+    /// (drain re-routing must not pick the drainer itself).
+    pub(crate) fn decode_loads_excluding(&self, exclude: Option<usize>) -> Vec<WorkerLoad> {
+        self.gpus
+            .iter()
+            .enumerate()
+            .filter(|(i, g)| g.role == Role::Decode && Some(*i) != exclude)
+            .map(|(i, g)| WorkerLoad {
+                gpu: GpuId(i),
+                node: self.node_of(i),
+                queued_tokens: 0,
+                requests: g.decode_load(),
+                accepting: g.accepting(),
+            })
+            .collect()
+    }
+
+    /// Append a completion record.
+    pub(crate) fn push_record(
+        &mut self,
+        req: &Request,
+        prefill_start: Micros,
+        first_token: Micros,
+        finish: Micros,
+    ) {
+        self.records.push(RequestRecord {
+            id: req.id,
+            arrival: req.arrival,
+            prefill_start,
+            first_token,
+            finish,
+            input_tokens: req.input_tokens,
+            output_tokens: req.output_tokens,
+            slo: req.slo,
+        });
+    }
+
+    // ------------------------------------------------------------------
+    // event dispatch
+    // ------------------------------------------------------------------
+
+    fn handle(&mut self, ev: Event) {
+        match ev {
+            Event::Arrival => self.on_arrival(),
+            Event::StepDone { gpu, epoch } => {
+                let role = self.gpus[gpu].role;
+                worker::behavior(role).on_step_done(self, gpu, epoch);
+            }
+            Event::KvArrive { gpu, src_node, item } => self.on_kv_arrive(gpu, src_node, item),
+            Event::ControllerTick => self.on_tick(),
+            Event::PowerPoll => self.on_power_poll(),
+            Event::Sample => self.on_sample(),
+            Event::DrainDone { gpu, epoch } => self.on_drain_done(gpu, epoch),
+        }
+    }
+
+    fn on_arrival(&mut self) {
+        let req = self.trace[self.next_arrival].clone();
+        self.next_arrival += 1;
+        if self.next_arrival < self.trace.len() {
+            self.events
+                .push(self.trace[self.next_arrival].arrival, Event::Arrival);
+        }
+        match self.cfg.topology {
+            crate::config::Topology::Coalesced => self.route_coalesced(req),
+            crate::config::Topology::Disaggregated { .. } => self.route_prefill(req),
+        }
+    }
+
+    /// Centrally route a prompt to the least-loaded prefill worker of any
+    /// node (paper §3.2's central scheduler, now cluster-wide).
+    pub(crate) fn route_prefill(&mut self, req: Request) {
+        let loads = self.prefill_loads();
+        let Some(gpu) = router::pick_prefill(&loads) else {
+            // No accepting prefill GPU (all draining): park on the one with
+            // the committed prefill role; it will pick the work up after
+            // the drain. This cannot happen with >= 1 GPU per phase.
+            let fallback = self
+                .gpus
+                .iter()
+                .position(|g| g.committed_role() == Role::Prefill)
+                .expect("at least one prefill-committed GPU");
+            self.gpus[fallback].push_prefill(req);
+            return;
+        };
+        self.gpus[gpu.0].push_prefill(req);
+        self.kick_prefill(gpu.0);
+    }
+
+    fn route_coalesced(&mut self, req: Request) {
+        let loads: Vec<WorkerLoad> = self
+            .gpus
+            .iter()
+            .enumerate()
+            .map(|(i, g)| WorkerLoad {
+                gpu: GpuId(i),
+                node: self.node_of(i),
+                queued_tokens: g.co_queued_tokens(),
+                requests: g.co_queue.len() + g.dec_active.len(),
+                accepting: g.accepting(),
+            })
+            .collect();
+        let gpu = router::pick_prefill(&loads).expect("coalesced pool nonempty");
+        self.gpus[gpu.0].co_queue.push_back(crate::sim::gpu::ChunkMeta {
+            prog: crate::coordinator::batcher::ChunkProgress::new(req),
+            started: None,
+        });
+        self.kick_coalesced(gpu.0);
+    }
+
+    // ------------------------------------------------------------------
+    // policy tick + action execution
+    // ------------------------------------------------------------------
+
+    fn on_tick(&mut self) {
+        self.events
+            .push(self.now + self.cfg.controller.tick, Event::ControllerTick);
+        // Project queue pressure into the TTFT window: queue buildup must
+        // trigger *before* completions report violations (paper §3.3:
+        // "queue buildup as an early indicator of stress"). The projection
+        // is head wait + expected drain time of the whole backlog, so a
+        // deep queue keeps the signal high even right after a power boost
+        // clears the head.
+        if self.policy.is_dynamic() {
+            let mut samples: Vec<(f64, u64)> = Vec::new();
+            for (i, g) in self.gpus.iter().enumerate() {
+                let (head, backlog_tokens) = match g.role {
+                    Role::Coalesced => (
+                        g.co_queue.front().map(|c| &c.prog.request),
+                        g.co_queued_tokens(),
+                    ),
+                    _ => (g.pf_queue.front(), g.pf_queued_tokens),
+                };
+                if let Some(req) = head {
+                    let age = self.now.saturating_sub(req.arrival);
+                    let cap = self.power.effective(GpuId(i), self.now);
+                    let drain =
+                        (backlog_tokens as f64 / self.model.prefill_rate(cap) * 1e6) as Micros;
+                    let projected = age + drain;
+                    samples.push((projected as f64, req.slo.ttft));
+                }
+            }
+            for (projected, slo) in samples {
+                self.policy.observe_ttft(self.now, projected / slo as f64);
+            }
+        }
+        let snap = self.snapshot();
+        if std::env::var("RAPID_DEBUG_TICKS").is_ok() {
+            eprintln!(
+                "tick t={:.2} qP={} qD={} p_sat={} d_sat={} P={} D={}",
+                self.now as f64 / 1e6,
+                snap.prefill_queue,
+                snap.decode_queue,
+                snap.prefill_power_saturated,
+                snap.decode_power_saturated,
+                snap.prefill_gpus,
+                snap.decode_gpus
+            );
+        }
+        if let Some(action) = self.policy.decide(&snap) {
+            self.execute(action);
+        }
+    }
+
+    fn pool(&self, role: Role) -> Vec<GpuId> {
+        self.gpus
+            .iter()
+            .enumerate()
+            .filter(|(_, g)| g.role == role && g.accepting())
+            .map(|(i, _)| GpuId(i))
+            .collect()
+    }
+
+    fn snapshot(&self) -> Snapshot {
+        let c = &self.cfg.controller;
+        let prefill_pool = self.pool(Role::Prefill);
+        let decode_pool = self.pool(Role::Decode);
+        let prefill_queue: usize = self.gpus.iter().map(|g| g.pf_queue.len()).sum::<usize>()
+            + self.gpus.iter().map(|g| g.co_queue.len()).sum::<usize>();
+        let decode_queue: usize = self.gpus.iter().map(|g| g.dec_pending.len()).sum();
+        // MovePower(D->P) is exhausted when prefill caps hit MAX or decode
+        // caps hit MIN.
+        let prefill_power_saturated = prefill_pool
+            .iter()
+            .all(|&g| self.power.target(g) >= c.max_gpu_w - 1.0)
+            || decode_pool
+                .iter()
+                .all(|&g| self.power.target(g) <= c.min_gpu_w + 1.0)
+            || prefill_pool.is_empty()
+            || decode_pool.is_empty();
+        // MovePower(P->D) is exhausted when decode caps hit their ceiling
+        // (decode gains nothing above the knee) or prefill caps hit MIN.
+        let decode_power_saturated = decode_pool
+            .iter()
+            .all(|&g| self.power.target(g) >= c.decode_ceiling_w - 1.0)
+            || prefill_pool
+                .iter()
+                .all(|&g| self.power.target(g) <= c.min_gpu_w + 1.0)
+            || prefill_pool.is_empty()
+            || decode_pool.is_empty();
+        Snapshot {
+            now: self.now,
+            prefill_queue,
+            decode_queue,
+            prefill_gpus: self
+                .gpus
+                .iter()
+                .filter(|g| g.committed_role() == Role::Prefill)
+                .count(),
+            decode_gpus: self
+                .gpus
+                .iter()
+                .filter(|g| g.committed_role() == Role::Decode)
+                .count(),
+            prefill_power_saturated,
+            decode_power_saturated,
+        }
+    }
+
+    fn execute(&mut self, action: Action) {
+        match action {
+            Action::MovePower { from } => {
+                let to = if from == Role::Decode {
+                    Role::Prefill
+                } else {
+                    Role::Decode
+                };
+                let sources = self.pool(from);
+                let sinks = self.pool(to);
+                if sources.is_empty() || sinks.is_empty() {
+                    return;
+                }
+                let ceiling = if to == Role::Decode {
+                    self.cfg.controller.decode_ceiling_w
+                } else {
+                    self.cfg.controller.max_gpu_w
+                };
+                let total = self.cfg.controller.power_step_w * sources.len() as f64;
+                match self.power.move_power(self.now, &sources, &sinks, total, ceiling) {
+                    Ok(mv) => {
+                        self.decisions.push((
+                            self.now,
+                            format!("MovePower {from}->{to}: {:?}", mv.raised),
+                        ));
+                        self.events.push(mv.effective_at, Event::PowerPoll);
+                    }
+                    Err(e) => {
+                        self.decisions
+                            .push((self.now, format!("MovePower {from}->{to} failed: {e}")));
+                    }
+                }
+            }
+            Action::MoveGpu { from } => {
+                let to = if from == Role::Decode {
+                    Role::Prefill
+                } else {
+                    Role::Decode
+                };
+                // Donor: least-loaded accepting GPU of the source role,
+                // keeping >= 1 GPU in the source pool (cluster-wide).
+                let pool = self.pool(from);
+                if pool.len() <= 1 {
+                    return;
+                }
+                let donor = *pool
+                    .iter()
+                    .min_by_key(|&&g| {
+                        let gpu = &self.gpus[g.0];
+                        match from {
+                            Role::Prefill => gpu.pf_queued_tokens as usize,
+                            _ => gpu.decode_load(),
+                        }
+                    })
+                    .unwrap();
+                self.decisions
+                    .push((self.now, format!("MoveGpu {donor} {from}->{to}")));
+                self.begin_drain(donor.0, to);
+                // Paper line 14: uniform power across all GPUs after a
+                // role change.
+                let settle = self.power.distribute_uniform(self.now);
+                self.events.push(settle, Event::PowerPoll);
+                self.record_roles();
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // drain / epoch lifecycle
+    // ------------------------------------------------------------------
+
+    fn begin_drain(&mut self, gi: usize, to: Role) {
+        {
+            let g = &mut self.gpus[gi];
+            if g.draining_to.is_some() {
+                return;
+            }
+            g.draining_to = Some(to);
+        }
+        // Re-route queued (not yet running) work to peers.
+        let queued: Vec<Request> = {
+            let g = &mut self.gpus[gi];
+            let drained: Vec<Request> = g.pf_queue.drain(..).collect();
+            g.pf_queued_tokens = 0;
+            drained
+        };
+        for r in queued {
+            self.route_prefill(r);
+        }
+        let pending: Vec<DecodeItem> = self.gpus[gi].dec_pending.drain(..).collect();
+        let src_node = self.node_of(gi);
+        for item in pending {
+            // Send to the least-loaded other decode GPU, preferring the
+            // same node (KV re-transfer is charged: the cache must move
+            // with the request, and cross-node hops pay the slower link).
+            let loads = self.decode_loads_excluding(Some(gi));
+            if let Some(target) = router::pick_decode_prefer_node(&loads, src_node) {
+                let same_node = self.node_of(target.0) == src_node;
+                let t = self
+                    .model
+                    .kv_transfer_time_between(item.req.input_tokens, same_node);
+                self.events.push(
+                    self.now + t,
+                    Event::KvArrive { gpu: target.0, src_node, item },
+                );
+                self.ring_used[src_node] += 1; // re-transfer occupies a slot
+            } else {
+                // No other decode GPU: keep it; it finishes before the flip.
+                self.gpus[gi].dec_pending.push_back(item);
+            }
+        }
+        self.maybe_finish_drain(gi);
+    }
+
+    pub(crate) fn maybe_finish_drain(&mut self, gi: usize) {
+        let g = &self.gpus[gi];
+        if g.draining_to.is_some() && g.drained() {
+            let epoch = g.epoch;
+            self.events.push(
+                self.now + self.cfg.controller.gpu_move_overhead,
+                Event::DrainDone { gpu: gi, epoch },
+            );
+        }
+    }
+
+    fn on_drain_done(&mut self, gi: usize, epoch: u64) {
+        let g = &mut self.gpus[gi];
+        if g.epoch != epoch || g.draining_to.is_none() {
+            return;
+        }
+        g.role = g.draining_to.take().unwrap();
+        g.epoch += 1;
+        g.busy = false;
+        self.record_roles();
+        let role = self.gpus[gi].role;
+        worker::behavior(role).kick(self, gi);
+        // Rebalance: peers may hold queued work this GPU could take; the
+        // router only balances new arrivals, so steal half the longest
+        // peer queue (cheap work-stealing on role flips).
+        if role == Role::Prefill {
+            self.steal_prefill_work(gi);
+        }
+    }
+
+    fn steal_prefill_work(&mut self, gi: usize) {
+        let Some(victim) = (0..self.gpus.len())
+            .filter(|&i| i != gi && self.gpus[i].role == Role::Prefill)
+            .max_by_key(|&i| self.gpus[i].pf_queued_tokens)
+        else {
+            return;
+        };
+        let steal_n = self.gpus[victim].pf_queue.len() / 2;
+        for _ in 0..steal_n {
+            if let Some(r) = self.gpus[victim].pf_queue.pop_back() {
+                self.gpus[victim].pf_queued_tokens -= r.input_tokens as u64;
+                self.gpus[gi].push_prefill(r);
+            }
+        }
+        self.kick_prefill(gi);
+    }
+
+    // ------------------------------------------------------------------
+    // power + telemetry
+    // ------------------------------------------------------------------
+
+    fn on_power_poll(&mut self) {
+        let applied = self.power.poll(self.now);
+        if !applied.is_empty() {
+            self.cap_trace.push((self.now, self.power.targets()));
+        }
+        if let Some(at) = self.power.next_pending_at() {
+            self.events.push(at, Event::PowerPoll);
+        }
+    }
+
+    fn on_sample(&mut self) {
+        let dt = (self.now - self.last_sample_at) as f64;
+        self.last_sample_at = self.now;
+        let mut per_node = vec![0.0; self.cfg.n_nodes];
+        for (i, g) in self.gpus.iter().enumerate() {
+            let cap = self.power.effective(GpuId(i), self.now);
+            let is_prefill_like = matches!(g.role, Role::Prefill | Role::Coalesced);
+            let mut mean_draw = self.model.draw(cap, g.util(), is_prefill_like);
+            // Host-side iteration gaps (scheduling, sampling,
+            // detokenization) idle the GPU between iterations; a 10 ms
+            // meter catches them as deep dips (paper Fig 3's burstiness).
+            if g.busy && self.sample_rng.chance(0.12) {
+                mean_draw = self.model.idle_w() + 0.18 * (mean_draw - self.model.idle_w());
+            }
+            // Microburst variation around the mean draw (per-kernel power
+            // phases under a 10 ms meter).
+            let jitter = 1.0 + 0.08 * self.sample_rng.normal();
+            per_node[self.node_of(i)] +=
+                (mean_draw * jitter).clamp(self.model.idle_w(), cap);
+        }
+        let total: f64 = per_node.iter().sum();
+        for (nd, w) in per_node.into_iter().enumerate() {
+            self.node_power[nd].push(self.now, w);
+        }
+        self.cluster_power.push(self.now, total);
+        self.provisioned_integral += self.power.targets().iter().sum::<f64>() * dt;
+        self.cap_trace.push((self.now, self.power.targets()));
+        self.events
+            .push(self.now + self.opts.sample_period, Event::Sample);
+    }
+
+    fn record_roles(&mut self) {
+        let p = self
+            .gpus
+            .iter()
+            .filter(|g| g.committed_role() == Role::Prefill)
+            .count();
+        let d = self
+            .gpus
+            .iter()
+            .filter(|g| g.committed_role() == Role::Decode)
+            .count();
+        self.role_trace.push((self.now, p, d));
+    }
+
+    fn finish(mut self) -> RunResult {
+        let duration = self.now.max(1);
+        let mean_provisioned_w = if duration > 0 {
+            self.provisioned_integral / duration as f64
+        } else {
+            0.0
+        };
+        // Unfinished requests are recorded as violations (never completed):
+        // give them "infinite" latency records so attainment counts them.
+        let completed: std::collections::HashSet<u64> =
+            self.records.iter().map(|r| r.id.0).collect();
+        for req in &self.trace[..self.next_arrival] {
+            if !completed.contains(&req.id.0) {
+                self.records.push(RequestRecord {
+                    id: req.id,
+                    arrival: req.arrival,
+                    prefill_start: self.now,
+                    first_token: self.now + 3600 * SECOND,
+                    finish: self.now + 7200 * SECOND,
+                    input_tokens: req.input_tokens,
+                    output_tokens: req.output_tokens,
+                    slo: req.slo,
+                });
+            }
+        }
+        RunResult {
+            config_name: self.cfg.name.clone(),
+            records: self.records,
+            node_power: self.cluster_power,
+            node_power_by_node: self.node_power,
+            cap_trace: self.cap_trace,
+            role_trace: self.role_trace,
+            decisions: self.decisions,
+            duration,
+            mean_provisioned_w,
+        }
+    }
+}

@@ -1,0 +1,249 @@
+//! Pluggable control policies for the cluster core.
+//!
+//! The event loop used to hard-code Algorithm 1; now it drives a
+//! [`Policy`] trait object, so controllers are swappable without touching
+//! the simulator:
+//!
+//! * [`StaticPolicy`] — user-fixed roles and caps, never acts;
+//! * [`RapidDynamic`] — the paper's Algorithm 1
+//!   ([`crate::coordinator::Controller`]), covering the DynPower, DynGpu
+//!   and full-RAPID variants;
+//! * [`PowerOnly`] — an ablation: pure latency-driven power shifting with
+//!   none of Algorithm 1's arbitration (no queue-pressure gate, no
+//!   both-hot veto, no saturation-triggered GPU escalation). Comparing it
+//!   to DynPower isolates what those extra signals contribute.
+
+use crate::config::{ClusterConfig, ControlPolicy, ControllerConfig};
+use crate::coordinator::{Action, Controller, Snapshot};
+use crate::types::{Micros, Role};
+use crate::util::stats::SlidingWindow;
+
+/// A cluster controller: consumes SLO-normalized latency observations and
+/// emits at most one [`Action`] per tick. The cluster core executes
+/// actions; policies stay side-effect free.
+pub trait Policy: std::fmt::Debug + Send {
+    /// Name for decision traces.
+    fn name(&self) -> &'static str;
+    /// Should the cluster bother computing/feeding observations?
+    fn is_dynamic(&self) -> bool;
+    /// Record a completed-or-projected TTFT observation (ratio to SLO).
+    fn observe_ttft(&mut self, _now: Micros, _ratio: f64) {}
+    /// Record a decode step's per-token latency ratio to the SLO.
+    fn observe_tpot(&mut self, _now: Micros, _ratio: f64) {}
+    /// One decision tick.
+    fn decide(&mut self, snap: &Snapshot) -> Option<Action>;
+}
+
+/// Build the policy a configuration asks for.
+pub fn make_policy(cfg: &ClusterConfig) -> Box<dyn Policy> {
+    match cfg.control {
+        ControlPolicy::Static => Box::new(StaticPolicy),
+        ControlPolicy::PowerOnly => Box::new(PowerOnly::new(cfg.controller.clone())),
+        ControlPolicy::DynPower | ControlPolicy::DynGpu | ControlPolicy::DynPowerGpu => {
+            Box::new(RapidDynamic::new(cfg.controller.clone(), cfg.control))
+        }
+    }
+}
+
+/// Fixed allocation: observes nothing, decides nothing.
+#[derive(Debug, Default)]
+pub struct StaticPolicy;
+
+impl Policy for StaticPolicy {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+    fn is_dynamic(&self) -> bool {
+        false
+    }
+    fn decide(&mut self, _snap: &Snapshot) -> Option<Action> {
+        None
+    }
+}
+
+/// Algorithm 1 (paper §3.3) behind the [`Policy`] interface.
+#[derive(Debug)]
+pub struct RapidDynamic {
+    controller: Controller,
+}
+
+impl RapidDynamic {
+    pub fn new(cfg: ControllerConfig, policy: ControlPolicy) -> Self {
+        RapidDynamic {
+            controller: Controller::new(cfg, policy),
+        }
+    }
+
+    /// The wrapped controller (tests / traces).
+    pub fn controller(&self) -> &Controller {
+        &self.controller
+    }
+}
+
+impl Policy for RapidDynamic {
+    fn name(&self) -> &'static str {
+        "rapid-dynamic"
+    }
+    fn is_dynamic(&self) -> bool {
+        true
+    }
+    fn observe_ttft(&mut self, now: Micros, ratio: f64) {
+        self.controller.observe_ttft(now, ratio);
+    }
+    fn observe_tpot(&mut self, now: Micros, ratio: f64) {
+        self.controller.observe_tpot(now, ratio);
+    }
+    fn decide(&mut self, snap: &Snapshot) -> Option<Action> {
+        self.controller.decide(snap)
+    }
+}
+
+/// Ablation policy: move power toward whichever phase's latency window is
+/// hot, full stop. No queue threshold, no both-hot veto, no GPU moves —
+/// when both windows are hot it thrashes power toward TTFT (prefill),
+/// which is exactly the failure mode Algorithm 1's arbitration avoids.
+#[derive(Debug)]
+pub struct PowerOnly {
+    cfg: ControllerConfig,
+    ttft: SlidingWindow,
+    tpot: SlidingWindow,
+    last_move: Option<Micros>,
+}
+
+impl PowerOnly {
+    pub fn new(cfg: ControllerConfig) -> Self {
+        PowerOnly {
+            ttft: SlidingWindow::new(cfg.metric_window),
+            tpot: SlidingWindow::new(cfg.metric_window),
+            cfg,
+            last_move: None,
+        }
+    }
+
+    fn cooled_down(&self, now: Micros) -> bool {
+        self.last_move
+            .map_or(true, |t| now.saturating_sub(t) >= self.cfg.cooldown)
+    }
+}
+
+impl Policy for PowerOnly {
+    fn name(&self) -> &'static str {
+        "power-only"
+    }
+    fn is_dynamic(&self) -> bool {
+        true
+    }
+    fn observe_ttft(&mut self, now: Micros, ratio: f64) {
+        self.ttft.push(now, ratio);
+    }
+    fn observe_tpot(&mut self, now: Micros, ratio: f64) {
+        self.tpot.push(now, ratio);
+    }
+    fn decide(&mut self, snap: &Snapshot) -> Option<Action> {
+        if !self.cooled_down(snap.now) {
+            return None;
+        }
+        let viol_frac = (100.0 - self.cfg.trigger_percentile) / 100.0;
+        let ttft_hot = self
+            .ttft
+            .frac_above(snap.now, 1.0)
+            .map_or(false, |f| f > viol_frac);
+        let tpot_hot = self
+            .tpot
+            .frac_above(snap.now, 1.0)
+            .map_or(false, |f| f > viol_frac);
+        let action = if ttft_hot {
+            Some(Action::MovePower { from: Role::Decode })
+        } else if tpot_hot {
+            Some(Action::MovePower { from: Role::Prefill })
+        } else {
+            None
+        };
+        if action.is_some() {
+            self.last_move = Some(snap.now);
+        }
+        action
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::types::SECOND;
+
+    fn snap(now: Micros) -> Snapshot {
+        Snapshot {
+            now,
+            prefill_queue: 0,
+            decode_queue: 0,
+            prefill_gpus: 4,
+            decode_gpus: 4,
+            prefill_power_saturated: false,
+            decode_power_saturated: false,
+        }
+    }
+
+    #[test]
+    fn factory_maps_control_policy() {
+        assert_eq!(make_policy(&presets::p4d4(600.0)).name(), "static");
+        assert_eq!(make_policy(&presets::rapid_600()).name(), "rapid-dynamic");
+        assert_eq!(make_policy(&presets::dyn_power_600()).name(), "rapid-dynamic");
+        assert_eq!(make_policy(&presets::power_only_600()).name(), "power-only");
+        assert!(!make_policy(&presets::p4d4(600.0)).is_dynamic());
+        assert!(make_policy(&presets::power_only_600()).is_dynamic());
+    }
+
+    #[test]
+    fn static_policy_never_acts() {
+        let mut p = StaticPolicy;
+        assert_eq!(p.decide(&snap(10 * SECOND)), None);
+    }
+
+    #[test]
+    fn power_only_ignores_queue_threshold() {
+        // Algorithm 1 refuses to act on TTFT violations without queue
+        // backlog; the ablation acts anyway — that is its point.
+        let mut p = PowerOnly::new(ControllerConfig::default());
+        let now = 10 * SECOND;
+        for i in 0..10 {
+            p.observe_ttft(now - i, 1.6);
+            p.observe_tpot(now - i, 0.4);
+        }
+        let s = snap(now); // prefill_queue == 0
+        assert_eq!(p.decide(&s), Some(Action::MovePower { from: Role::Decode }));
+    }
+
+    #[test]
+    fn power_only_never_moves_gpus_and_respects_cooldown() {
+        let mut p = PowerOnly::new(ControllerConfig::default());
+        let now = 10 * SECOND;
+        for i in 0..10 {
+            p.observe_ttft(now - i, 1.6);
+        }
+        let first = p.decide(&snap(now));
+        assert!(matches!(first, Some(Action::MovePower { .. })));
+        for i in 0..10 {
+            p.observe_ttft(now + 1 - i, 1.6);
+        }
+        assert_eq!(p.decide(&snap(now + 1)), None, "cooldown must hold");
+        let later = now + ControllerConfig::default().cooldown;
+        for i in 0..10 {
+            p.observe_ttft(later - i, 1.6);
+        }
+        assert!(p.decide(&snap(later)).is_some());
+    }
+
+    #[test]
+    fn rapid_dynamic_delegates_to_algorithm_1() {
+        let mut p = RapidDynamic::new(ControllerConfig::default(), ControlPolicy::DynPowerGpu);
+        let now = 10 * SECOND;
+        for i in 0..10 {
+            p.observe_ttft(now - i, 1.6);
+            p.observe_tpot(now - i, 0.4);
+        }
+        let mut s = snap(now);
+        s.prefill_queue = 20;
+        assert_eq!(p.decide(&s), Some(Action::MovePower { from: Role::Decode }));
+    }
+}

@@ -29,11 +29,18 @@ pub enum ControlPolicy {
     DynGpu,
     /// Full RAPID: power first, GPU reallocation when power saturates.
     DynPowerGpu,
+    /// Ablation: latency-driven power shifting with none of Algorithm 1's
+    /// arbitration (no queue-pressure gate, no both-hot veto, no GPU
+    /// escalation). Isolates what the paper's extra signals contribute.
+    PowerOnly,
 }
 
 impl ControlPolicy {
     pub fn moves_power(&self) -> bool {
-        matches!(self, ControlPolicy::DynPower | ControlPolicy::DynPowerGpu)
+        matches!(
+            self,
+            ControlPolicy::DynPower | ControlPolicy::DynPowerGpu | ControlPolicy::PowerOnly
+        )
     }
     pub fn moves_gpus(&self) -> bool {
         matches!(self, ControlPolicy::DynGpu | ControlPolicy::DynPowerGpu)
@@ -125,6 +132,9 @@ pub struct PerfModelConfig {
     pub kv_bytes_per_token: u64,
     /// Intra-node interconnect bandwidth per link (bytes/s), XGMI-class.
     pub xgmi_bw: f64,
+    /// Cross-node interconnect bandwidth (bytes/s), RDMA-NIC-class; KV
+    /// transfers between nodes pay this slower link instead of XGMI.
+    pub inter_node_bw: f64,
     /// Chunked-prefill token budget per coalesced iteration.
     pub chunk_tokens: u32,
     /// Cross-chunk attention re-read cost: each chunk re-touches this
@@ -149,6 +159,7 @@ impl Default for PerfModelConfig {
             idle_w: 140.0,
             kv_bytes_per_token: 131_072,
             xgmi_bw: 64e9,
+            inter_node_bw: 25e9,
             chunk_tokens: 512,
             chunk_reread_frac: 0.15,
         }
@@ -183,8 +194,15 @@ impl Default for BatchConfig {
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClusterConfig {
     pub name: String,
+    /// GPUs **per node**; the cluster has `n_nodes * n_gpus` total.
     pub n_gpus: usize,
-    /// Total GPU power budget for the node (W). Fig 5 uses 4800 and 6000.
+    /// Number of identical nodes in the cluster (1 = the paper's testbed).
+    pub n_nodes: usize,
+    /// Optional cluster-wide budget (W). `None` means the trivial
+    /// `n_nodes * node_budget_w`; a smaller value makes the cluster cap
+    /// bind before any node cap (facility-level constraint).
+    pub cluster_budget_w: Option<Watts>,
+    /// Total GPU power budget for one node (W). Fig 5 uses 4800 and 6000.
     pub node_budget_w: Watts,
     /// If false, caps are set to gpu max and the budget line is only
     /// reported, not enforced (Fig 3's uncapped run).
@@ -205,14 +223,36 @@ impl Default for ClusterConfig {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("config: {0}")]
     Invalid(String),
-    #[error("unknown preset '{0}'")]
     UnknownPreset(String),
-    #[error(transparent)]
-    Toml(#[from] crate::config::toml::TomlError),
+    Toml(crate::config::toml::TomlError),
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Invalid(m) => write!(f, "config: {m}"),
+            ConfigError::UnknownPreset(p) => write!(f, "unknown preset '{p}'"),
+            ConfigError::Toml(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ConfigError::Toml(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<crate::config::toml::TomlError> for ConfigError {
+    fn from(e: crate::config::toml::TomlError) -> Self {
+        ConfigError::Toml(e)
+    }
 }
 
 impl ClusterConfig {
@@ -221,6 +261,14 @@ impl ClusterConfig {
         let err = |m: String| Err(ConfigError::Invalid(m));
         if self.n_gpus == 0 {
             return err("n_gpus must be > 0".into());
+        }
+        if self.n_nodes == 0 {
+            return err("n_nodes must be > 0".into());
+        }
+        if let Some(cb) = self.cluster_budget_w {
+            if cb <= 0.0 {
+                return err(format!("cluster budget {cb} W must be positive"));
+            }
         }
         if let Topology::Disaggregated { prefill, decode } = self.topology {
             if prefill + decode != self.n_gpus {
@@ -246,11 +294,32 @@ impl ClusterConfig {
             }
         }
         if self.enforce_budget {
-            let total = self.total_initial_caps();
-            if total > self.node_budget_w + 1e-6 {
+            let per_node = self.total_initial_caps();
+            if per_node > self.node_budget_w + 1e-6 {
                 return err(format!(
-                    "initial caps sum to {total} W > budget {} W",
+                    "initial caps sum to {per_node} W per node > node budget {} W",
                     self.node_budget_w
+                ));
+            }
+            let floor = c.min_gpu_w * self.n_gpus as f64;
+            if floor > self.node_budget_w + 1e-6 {
+                return err(format!(
+                    "node budget {} W below the cap floor {} W ({} GPUs x min {} W)",
+                    self.node_budget_w, floor, self.n_gpus, c.min_gpu_w
+                ));
+            }
+            let cluster_total = per_node * self.n_nodes as f64;
+            if cluster_total > self.cluster_budget() + 1e-6 {
+                return err(format!(
+                    "initial caps sum to {cluster_total} W > cluster budget {} W",
+                    self.cluster_budget()
+                ));
+            }
+            let cluster_floor = floor * self.n_nodes as f64;
+            if cluster_floor > self.cluster_budget() + 1e-6 {
+                return err(format!(
+                    "cluster budget {} W below the cap floor {cluster_floor} W",
+                    self.cluster_budget()
                 ));
             }
         }
@@ -260,7 +329,7 @@ impl ClusterConfig {
         Ok(())
     }
 
-    /// Sum of the configured per-GPU caps.
+    /// Sum of the configured per-GPU caps **per node**.
     pub fn total_initial_caps(&self) -> Watts {
         match self.topology {
             Topology::Coalesced => self.prefill_cap_w * self.n_gpus as f64,
@@ -270,7 +339,39 @@ impl ClusterConfig {
         }
     }
 
-    /// Number of GPUs initially serving prefill (coalesced counts all).
+    /// GPUs across all nodes.
+    pub fn total_gpus(&self) -> usize {
+        self.n_nodes * self.n_gpus
+    }
+
+    /// Effective cluster-wide budget (W).
+    pub fn cluster_budget(&self) -> Watts {
+        self.cluster_budget_w
+            .unwrap_or(self.node_budget_w * self.n_nodes as f64)
+    }
+
+    /// Node index of a cluster-global GPU index.
+    pub fn node_of(&self, gpu: usize) -> usize {
+        gpu / self.n_gpus
+    }
+
+    /// Initial role of a cluster-global GPU index: each node gets the
+    /// same per-node split.
+    pub fn initial_role(&self, gpu: usize) -> crate::types::Role {
+        match self.topology {
+            Topology::Coalesced => crate::types::Role::Coalesced,
+            Topology::Disaggregated { prefill, .. } => {
+                if gpu % self.n_gpus < prefill {
+                    crate::types::Role::Prefill
+                } else {
+                    crate::types::Role::Decode
+                }
+            }
+        }
+    }
+
+    /// Number of GPUs initially serving prefill **per node** (coalesced
+    /// counts all).
     pub fn prefill_gpus(&self) -> usize {
         match self.topology {
             Topology::Coalesced => self.n_gpus,
@@ -302,8 +403,14 @@ fn apply_overrides(cfg: &mut ClusterConfig, doc: &Document) -> Result<(), Config
     if let Some(n) = doc.get_i64("cluster.n_gpus") {
         cfg.n_gpus = n as usize;
     }
+    if let Some(n) = doc.get_i64("cluster.n_nodes") {
+        cfg.n_nodes = n as usize;
+    }
     if let Some(w) = get_watts(doc, "power.budget_w") {
         cfg.node_budget_w = w;
+    }
+    if let Some(w) = get_watts(doc, "power.cluster_budget_w") {
+        cfg.cluster_budget_w = Some(w);
     }
     if let Some(b) = doc.get_bool("power.enforce_budget") {
         cfg.enforce_budget = b;
@@ -345,6 +452,7 @@ fn apply_overrides(cfg: &mut ClusterConfig, doc: &Document) -> Result<(), Config
             "dyn-power" => ControlPolicy::DynPower,
             "dyn-gpu" => ControlPolicy::DynGpu,
             "rapid" | "dyn-power-gpu" => ControlPolicy::DynPowerGpu,
+            "power-only" => ControlPolicy::PowerOnly,
             other => {
                 return Err(ConfigError::Invalid(format!("unknown policy '{other}'")))
             }
@@ -391,6 +499,9 @@ fn apply_overrides(cfg: &mut ClusterConfig, doc: &Document) -> Result<(), Config
     if let Some(v) = doc.get_f64("perf.xgmi_bw_gbps") {
         p.xgmi_bw = v * 1e9;
     }
+    if let Some(v) = doc.get_f64("perf.inter_node_bw_gbps") {
+        p.inter_node_bw = v * 1e9;
+    }
     if let Some(v) = doc.get_i64("perf.chunk_tokens") {
         p.chunk_tokens = v as u32;
     }
@@ -418,6 +529,8 @@ pub mod presets {
         ClusterConfig {
             name: name.to_string(),
             n_gpus: 8,
+            n_nodes: 1,
+            cluster_budget_w: None,
             node_budget_w: 4800.0,
             enforce_budget: true,
             topology: Topology::Disaggregated { prefill: 4, decode: 4 },
@@ -494,6 +607,24 @@ pub mod presets {
         c
     }
 
+    /// PowerOnly-600W: the ablation policy — latency-driven power
+    /// shifting with none of Algorithm 1's arbitration.
+    pub fn power_only_600() -> ClusterConfig {
+        let mut c = base("PowerOnly-600W");
+        c.control = ControlPolicy::PowerOnly;
+        c
+    }
+
+    /// Scale any preset out to `nodes` identical nodes (used by
+    /// `rapid sweep --nodes N` and the multi-node tests).
+    pub fn scaled_to_nodes(mut cfg: ClusterConfig, nodes: usize) -> ClusterConfig {
+        cfg.n_nodes = nodes;
+        if nodes > 1 {
+            cfg.name = format!("{}x{nodes}nodes", cfg.name);
+        }
+        cfg
+    }
+
     /// Uncapped node (Fig 3): caps at hardware max, budget reported only.
     pub fn uncapped_coalesced() -> ClusterConfig {
         let mut c = coalesced(750.0);
@@ -515,6 +646,7 @@ pub mod presets {
             "dyn-power-600" => dyn_power_600(),
             "dyn-gpu-600" => dyn_gpu_600(),
             "rapid-600" => rapid_600(),
+            "power-only-600" => power_only_600(),
             "uncapped" => uncapped_coalesced(),
             other => return Err(ConfigError::UnknownPreset(other.to_string())),
         };
@@ -533,6 +665,7 @@ pub mod presets {
         "dyn-power-600",
         "dyn-gpu-600",
         "rapid-600",
+        "power-only-600",
         "uncapped",
     ];
 }
@@ -651,5 +784,71 @@ prefill_gpus = 6
         assert!(ControlPolicy::DynGpu.moves_gpus());
         assert!(ControlPolicy::DynPowerGpu.moves_power());
         assert!(ControlPolicy::DynPowerGpu.moves_gpus());
+        assert!(ControlPolicy::PowerOnly.moves_power());
+        assert!(!ControlPolicy::PowerOnly.moves_gpus());
+        assert!(ControlPolicy::PowerOnly.is_dynamic());
+    }
+
+    #[test]
+    fn multi_node_defaults_and_totals() {
+        let cfg = presets::p4d4(600.0);
+        assert_eq!(cfg.n_nodes, 1);
+        assert_eq!(cfg.total_gpus(), 8);
+        assert_eq!(cfg.cluster_budget(), cfg.node_budget_w);
+        let two = presets::scaled_to_nodes(presets::p4d4(600.0), 2);
+        assert_eq!(two.total_gpus(), 16);
+        assert_eq!(two.cluster_budget(), 9600.0);
+        assert_eq!(two.node_of(0), 0);
+        assert_eq!(two.node_of(7), 0);
+        assert_eq!(two.node_of(8), 1);
+        assert_eq!(two.initial_role(3), crate::types::Role::Prefill);
+        assert_eq!(two.initial_role(4), crate::types::Role::Decode);
+        assert_eq!(two.initial_role(11), crate::types::Role::Prefill);
+        assert_eq!(two.initial_role(15), crate::types::Role::Decode);
+        two.validate().unwrap();
+    }
+
+    #[test]
+    fn multi_node_toml_round_trip() {
+        let cfg = ClusterConfig::from_toml(
+            r#"
+preset = "4p4d-600"
+name = "two-node"
+[cluster]
+n_nodes = 2
+[power]
+cluster_budget_w = 9600
+[perf]
+inter_node_bw_gbps = 20
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.n_nodes, 2);
+        assert_eq!(cfg.cluster_budget(), 9600.0);
+        assert_eq!(cfg.perf.inter_node_bw, 20e9);
+        assert_eq!(cfg.total_gpus(), 16);
+    }
+
+    #[test]
+    fn cluster_budget_tighter_than_caps_rejected() {
+        let mut cfg = presets::scaled_to_nodes(presets::p4d4(600.0), 2);
+        cfg.cluster_budget_w = Some(9000.0); // 2 * 8 * 600 = 9600 committed
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn node_budget_below_cap_floor_rejected() {
+        let mut cfg = presets::p4d4(600.0);
+        // 8 GPUs x 400 W min = 3200 W floor; a 3000 W budget cannot host it.
+        cfg.node_budget_w = 3000.0;
+        cfg.prefill_cap_w = 400.0;
+        cfg.decode_cap_w = 400.0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn power_only_policy_parses() {
+        let cfg = ClusterConfig::from_toml("[control]\npolicy = \"power-only\"").unwrap();
+        assert_eq!(cfg.control, ControlPolicy::PowerOnly);
     }
 }

@@ -12,6 +12,8 @@ use crate::types::GpuId;
 #[derive(Debug, Clone, Copy)]
 pub struct WorkerLoad {
     pub gpu: GpuId,
+    /// Node hosting this worker (cross-node KV transfers are slower).
+    pub node: usize,
     /// Queued prompt tokens (prefill) — the unit of prefill backlog.
     pub queued_tokens: u64,
     /// Queued + active requests — the unit of decode occupancy.
@@ -38,6 +40,30 @@ pub fn pick_decode(loads: &[WorkerLoad]) -> Option<GpuId> {
         .map(|l| l.gpu)
 }
 
+/// Extra resident requests we tolerate on a same-node decode worker
+/// before paying a cross-node KV transfer instead (locality bias).
+pub const LOCALITY_SLACK_REQS: usize = 4;
+
+/// Pick a decode worker preferring `node` (where the KV cache already
+/// lives): take the least-loaded local worker unless a remote worker is
+/// more than `LOCALITY_SLACK_REQS` requests lighter.
+pub fn pick_decode_prefer_node(loads: &[WorkerLoad], node: usize) -> Option<GpuId> {
+    let global = pick_decode(loads)?;
+    let global_load = loads
+        .iter()
+        .find(|l| l.gpu == global)
+        .map(|l| l.requests)
+        .unwrap_or(0);
+    let local = loads
+        .iter()
+        .filter(|l| l.accepting && l.node == node)
+        .min_by_key(|l| (l.requests, l.queued_tokens, l.gpu.0));
+    match local {
+        Some(l) if l.requests <= global_load + LOCALITY_SLACK_REQS => Some(l.gpu),
+        _ => Some(global),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -45,6 +71,7 @@ mod tests {
     fn load(gpu: usize, tokens: u64, reqs: usize, accepting: bool) -> WorkerLoad {
         WorkerLoad {
             gpu: GpuId(gpu),
+            node: gpu / 8,
             queued_tokens: tokens,
             requests: reqs,
             accepting,
@@ -83,5 +110,28 @@ mod tests {
     fn empty_pool_is_none() {
         assert_eq!(pick_prefill(&[]), None);
         assert_eq!(pick_decode(&[]), None);
+        assert_eq!(pick_decode_prefer_node(&[], 0), None);
+    }
+
+    #[test]
+    fn locality_keeps_kv_on_node_when_loads_close() {
+        // gpu 1 is on node 0 (local, slightly busier), gpu 9 on node 1.
+        let loads = [load(1, 0, 3, true), load(9, 0, 1, true)];
+        assert_eq!(pick_decode_prefer_node(&loads, 0), Some(GpuId(1)));
+        // Without a local candidate it falls back to the global pick.
+        assert_eq!(pick_decode_prefer_node(&loads, 2), Some(GpuId(9)));
+    }
+
+    #[test]
+    fn locality_yields_to_big_imbalance() {
+        // Local worker is far busier than the remote one: pay the link.
+        let loads = [load(1, 0, 30, true), load(9, 0, 1, true)];
+        assert_eq!(pick_decode_prefer_node(&loads, 0), Some(GpuId(9)));
+    }
+
+    #[test]
+    fn locality_skips_draining_local_workers() {
+        let loads = [load(1, 0, 0, false), load(9, 0, 5, true)];
+        assert_eq!(pick_decode_prefer_node(&loads, 0), Some(GpuId(9)));
     }
 }

@@ -4,7 +4,7 @@
 //! dominate, especially at high request rates.
 
 use crate::config::{presets, ClusterConfig};
-use crate::experiments::{rate_sweep, RatePoint, ShapeCheck};
+use crate::experiments::{parallel_rate_sweeps, RatePoint, ShapeCheck};
 use crate::types::Slo;
 
 pub struct Fig1 {
@@ -20,13 +20,7 @@ pub fn run(seed: u64, n: usize) -> Fig1 {
         presets::p4_750_d4_450(), // "[4P4D]-RAPID" in the figure
     ];
     Fig1 {
-        curves: configs
-            .into_iter()
-            .map(|cfg| {
-                let pts = rate_sweep(&cfg, RATES, seed, n, Slo::paper_default());
-                (cfg, pts)
-            })
-            .collect(),
+        curves: parallel_rate_sweeps(configs, RATES, seed, n, Slo::paper_default()),
     }
 }
 

@@ -9,7 +9,7 @@
 //!     allocation.
 
 use crate::config::{presets, ClusterConfig};
-use crate::experiments::{crossing_rate, rate_sweep, RatePoint, ShapeCheck};
+use crate::experiments::{crossing_rate, parallel_rate_sweeps, RatePoint, ShapeCheck};
 use crate::types::{Slo, MILLIS, SECOND};
 
 pub struct Fig5 {
@@ -44,13 +44,7 @@ pub fn run(part_b: bool, seed: u64, n: usize) -> Fig5 {
         Slo::paper_default()
     };
     let configs = if part_b { configs_5b() } else { configs_5a() };
-    let curves = configs
-        .into_iter()
-        .map(|cfg| {
-            let pts = rate_sweep(&cfg, RATES, seed, n, slo);
-            (cfg, pts)
-        })
-        .collect();
+    let curves = parallel_rate_sweeps(configs, RATES, seed, n, slo);
     Fig5 { slo, curves }
 }
 

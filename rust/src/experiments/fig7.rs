@@ -5,7 +5,7 @@
 //! beat the same-budget uniform configs throughout.
 
 use crate::config::{presets, ClusterConfig};
-use crate::experiments::{longbench_trace, run_config, ShapeCheck};
+use crate::experiments::{longbench_trace, parallel_map, run_config, ShapeCheck};
 use crate::types::Slo;
 
 pub const SCALES: &[f64] = &[2.0, 1.5, 1.25, 1.0, 0.75, 0.5];
@@ -26,22 +26,28 @@ fn configs() -> Vec<ClusterConfig> {
 }
 
 pub fn run(seed: u64, n: usize) -> Fig7 {
+    // One flat (rate, config, scale) job list fanned across cores.
+    let cfgs = configs();
+    let jobs: Vec<(f64, usize, f64)> = RATES
+        .iter()
+        .flat_map(|&rate| {
+            (0..cfgs.len()).flat_map(move |ci| SCALES.iter().map(move |&s| (rate, ci, s)))
+        })
+        .collect();
+    let atts = parallel_map(&jobs, |&(rate, ci, s)| {
+        let cfg = &cfgs[ci];
+        let slo = Slo::paper_default().scaled(s);
+        let trace = longbench_trace(seed, rate * cfg.total_gpus() as f64, n, slo);
+        run_config(cfg, &trace).attainment()
+    });
+    let mut it = atts.into_iter();
     let grids = RATES
         .iter()
-        .map(|&rate| {
-            configs()
-                .into_iter()
+        .map(|_| {
+            cfgs.iter()
                 .map(|cfg| {
-                    let atts = SCALES
-                        .iter()
-                        .map(|&s| {
-                            let slo = Slo::paper_default().scaled(s);
-                            let trace =
-                                longbench_trace(seed, rate * cfg.n_gpus as f64, n, slo);
-                            run_config(&cfg, &trace).attainment()
-                        })
-                        .collect();
-                    (cfg.clone(), atts)
+                    let row: Vec<f64> = SCALES.iter().map(|_| it.next().unwrap()).collect();
+                    (cfg.clone(), row)
                 })
                 .collect()
         })

@@ -10,7 +10,7 @@
 //! Plus the headline: RAPID ~2x the static uniform attainment at peak.
 
 use crate::config::{presets, ClusterConfig};
-use crate::experiments::{run_config, ShapeCheck};
+use crate::experiments::{parallel_map, run_config, ShapeCheck};
 use crate::metrics::RunResult;
 use crate::workload::sonnet::{mixed_phases, MixedPhasesSpec};
 
@@ -40,13 +40,9 @@ pub fn run(seed: u64, qps_per_gpu: f64, requests_per_phase: usize) -> Fig8 {
     // The paper runs this figure at its testbed's peak-load point; the
     // substrate-equivalent default is MixedPhasesSpec::default().rate_qps.
     let trace = mixed_phases(seed, spec);
-    let rows = configs()
-        .into_iter()
-        .map(|cfg| {
-            let res = run_config(&cfg, &trace);
-            (cfg, res)
-        })
-        .collect();
+    let cfgs = configs();
+    let results = parallel_map(&cfgs, |cfg| run_config(cfg, &trace));
+    let rows = cfgs.into_iter().zip(results).collect();
     Fig8 {
         qps_per_gpu,
         rows,

@@ -9,7 +9,7 @@
 //!   ⑤ decode-heavy steady state: most GPUs on decode, uniform caps.
 
 use crate::config::{presets, ClusterConfig};
-use crate::experiments::{run_config, ShapeCheck};
+use crate::experiments::{parallel_map, run_config, ShapeCheck};
 use crate::metrics::RunResult;
 use crate::types::{Micros, SECOND};
 use crate::workload::sonnet::{mixed_phases, MixedPhasesSpec};
@@ -31,16 +31,20 @@ pub fn run(seed: u64, requests_per_phase: usize) -> Fig9 {
     };
     let trace = mixed_phases(seed, spec);
     let phase_boundary = trace.requests[requests_per_phase].arrival;
-    let run_one = |cfg: ClusterConfig| {
-        let res = run_config(&cfg, &trace);
-        (cfg, res)
-    };
+    let cfgs = [
+        presets::dyn_power_600(),
+        presets::dyn_gpu_600(),
+        presets::rapid_600(),
+    ];
+    let mut results = parallel_map(&cfgs, |cfg| run_config(cfg, &trace)).into_iter();
+    let mut cfgs = cfgs.into_iter();
+    let mut take = || (cfgs.next().unwrap(), results.next().unwrap());
     Fig9 {
         spec,
         phase_boundary,
-        dyn_power: run_one(presets::dyn_power_600()),
-        dyn_gpu: run_one(presets::dyn_gpu_600()),
-        rapid: run_one(presets::rapid_600()),
+        dyn_power: take(),
+        dyn_gpu: take(),
+        rapid: take(),
     }
 }
 

@@ -19,11 +19,20 @@
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum RingError {
-    #[error("ring full: all {0} slots in flight")]
     RingFull(usize),
 }
+
+impl std::fmt::Display for RingError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RingError::RingFull(n) => write!(f, "ring full: all {n} slots in flight"),
+        }
+    }
+}
+
+impl std::error::Error for RingError {}
 
 /// `try_publish` hands the payload back on failure so callers can retry.
 pub type PublishRejected<T> = (RingError, T);

@@ -6,13 +6,16 @@
 
 pub mod bench;
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod experiments;
 pub mod kv;
 pub mod metrics;
 pub mod power;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
+#[cfg(feature = "pjrt")]
 pub mod server;
 pub mod sim;
 pub mod types;

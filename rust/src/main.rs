@@ -123,13 +123,13 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
                     rapid::workload::sonnet::MixedPhasesSpec {
                         prefill_heavy_count: n / 2,
                         decode_heavy_count: n / 2,
-                        rate_qps: a.f64_or("qps", 1.5)? * cfg.n_gpus as f64,
+                        rate_qps: a.f64_or("qps", 1.5)? * cfg.total_gpus() as f64,
                         ..Default::default()
                     },
                 ),
                 _ => exp::longbench_trace(
                     seed,
-                    a.f64_or("qps", 1.5)? * cfg.n_gpus as f64,
+                    a.f64_or("qps", 1.5)? * cfg.total_gpus() as f64,
                     n,
                     slo,
                 ),
@@ -140,14 +140,27 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
         "sweep" => {
             let cmd = common(Command::new(
                 "sweep",
-                "static design-space search: GPUs x power splits (paper §5.1)",
+                "static design-space search: GPUs x power splits (paper §5.1), fanned across cores",
             ))
-            .opt("qps", "1.5", "per-GPU request rate");
+            .opt("qps", "1.5", "per-GPU request rate")
+            .opt("nodes", "0", "number of identical nodes (0 = take from --config, else 1)")
+            .opt("config", "", "TOML config file to use as the sweep base")
+            .opt("threads", "0", "worker threads (0 = all cores; RAPID_SWEEP_THREADS overrides)");
             let a = parse_or_help(&cmd, rest)?;
+            let threads = a.usize_or("threads", 0)?;
+            if threads > 0 {
+                std::env::set_var("RAPID_SWEEP_THREADS", threads.to_string());
+            }
+            let base = match a.get("config").unwrap_or("") {
+                "" => None,
+                path => Some(ClusterConfig::from_toml(&std::fs::read_to_string(path)?)?),
+            };
             run_sweep(
                 a.u64_or("seed", 42)?,
                 a.f64_or("qps", 1.5)?,
                 a.usize_or("requests", 1200)?,
+                a.usize_or("nodes", 0)?,
+                base,
             );
         }
         "presets" => {
@@ -160,6 +173,7 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
                 );
             }
         }
+        #[cfg(feature = "pjrt")]
         "serve" => {
             let cmd = Command::new("serve", "real PJRT serving demo")
                 .opt("artifacts", "artifacts", "artifact directory")
@@ -175,6 +189,15 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
                 a.usize_or("prefill-gpus", 2)?,
                 a.usize_or("decode-gpus", 2)?,
             )?;
+        }
+        #[cfg(not(feature = "pjrt"))]
+        "serve" => {
+            return Err(
+                "the real-model serving path is gated behind the `pjrt` feature, \
+                 which needs the `xla` and `anyhow` crates added to Cargo.toml \
+                 first (they are not vendored); see DESIGN.md §7"
+                    .into(),
+            );
         }
         "help" | "--help" | "-h" => {
             println!("rapid — power-aware disaggregated inference (paper reproduction)");
@@ -231,43 +254,87 @@ fn print_result(cfg: &ClusterConfig, res: &rapid::metrics::RunResult) {
     println!("  decisions:       {}", res.decisions.len());
 }
 
-fn run_sweep(seed: u64, qps: f64, n: usize) {
-    println!("static design-space sweep @{qps} QPS/GPU (LongBench, 4800 W budget)");
-    println!("{:<8}{:<12}{:<12}{:>12}{:>10}", "P/D", "prefill W", "decode W", "attainment", "goodput");
-    let mut best: Option<(String, f64)> = None;
-    for p in 2..=6usize {
-        let d = 8 - p;
-        // Power splits in 25 W steps that fit the budget exactly.
+fn run_sweep(seed: u64, qps: f64, n: usize, nodes: usize, base: Option<ClusterConfig>) {
+    let base = base.unwrap_or_else(|| presets::p4d4(600.0));
+    // `--nodes 0` (the default) keeps the base config's node count, so a
+    // multi-node TOML passed via --config is not silently flattened.
+    let nodes = if nodes == 0 { base.n_nodes } else { nodes };
+    let node_budget = base.node_budget_w;
+    let per_node = base.n_gpus;
+    println!(
+        "static design-space sweep @{qps} QPS/GPU (LongBench, {nodes} node(s) x {:.0} W, {} threads)",
+        node_budget,
+        exp::sweep_threads()
+    );
+    // Build every sweep point first, then fan them across cores: each
+    // point is an independent deterministic simulation.
+    let mut points: Vec<ClusterConfig> = Vec::new();
+    for p in 2..=per_node.saturating_sub(2) {
+        let d = per_node - p;
+        // Power splits in 25 W steps that fit the node budget exactly.
         let mut pw = 400.0;
         while pw <= 750.0 {
-            let dw = (4800.0 - pw * p as f64) / d as f64;
+            let dw = (node_budget - pw * p as f64) / d as f64;
             if (400.0..=750.0).contains(&dw) {
-                let mut cfg = presets::p4d4(600.0);
+                let mut cfg = base.clone();
                 cfg.name = format!("{p}P-{pw:.0}W/{d}D-{dw:.0}W");
                 cfg.topology = rapid::config::Topology::Disaggregated { prefill: p, decode: d };
                 cfg.prefill_cap_w = pw;
                 cfg.decode_cap_w = dw;
+                cfg = presets::scaled_to_nodes(cfg, nodes);
                 if cfg.validate().is_ok() {
-                    let trace = exp::longbench_trace(seed, qps * 8.0, n, Slo::paper_default());
-                    let res = sim::run(&cfg, &trace, &SimOptions::default());
-                    println!(
-                        "{:<8}{:<12.0}{:<12.0}{:>11.1}%{:>10.2}",
-                        format!("{p}P{d}D"),
-                        pw,
-                        dw,
-                        res.attainment() * 100.0,
-                        res.goodput_qps()
-                    );
-                    let score = res.attainment();
-                    if best.as_ref().map_or(true, |(_, s)| score > *s) {
-                        best = Some((cfg.name.clone(), score));
-                    }
+                    points.push(cfg);
                 }
             }
             pw += 25.0;
         }
     }
+    let t0 = std::time::Instant::now();
+    let results = exp::parallel_map(&points, |cfg| {
+        let trace = exp::longbench_trace(
+            seed,
+            qps * cfg.total_gpus() as f64,
+            n,
+            Slo::paper_default(),
+        );
+        sim::run(cfg, &trace, &SimOptions::default())
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "{:<8}{:<12}{:<12}{:>12}{:>10}{:>14}",
+        "P/D", "prefill W", "decode W", "attainment", "goodput", "peak node W"
+    );
+    let mut best: Option<(String, f64)> = None;
+    for (cfg, res) in points.iter().zip(&results) {
+        let peak_node = res
+            .node_power_by_node
+            .iter()
+            .map(|ts| ts.max())
+            .fold(f64::MIN, f64::max);
+        let (p, d) = match cfg.topology {
+            rapid::config::Topology::Disaggregated { prefill, decode } => (prefill, decode),
+            rapid::config::Topology::Coalesced => (cfg.n_gpus, 0),
+        };
+        println!(
+            "{:<8}{:<12.0}{:<12.0}{:>11.1}%{:>10.2}{:>14.0}",
+            format!("{p}P{d}D"),
+            cfg.prefill_cap_w,
+            cfg.decode_cap_w,
+            res.attainment() * 100.0,
+            res.goodput_qps(),
+            peak_node
+        );
+        let score = res.attainment();
+        if best.as_ref().map_or(true, |(_, s)| score > *s) {
+            best = Some((cfg.name.clone(), score));
+        }
+    }
+    println!(
+        "\n{} sweep points in {wall:.1}s ({:.1} points/s)",
+        points.len(),
+        points.len() as f64 / wall.max(1e-9)
+    );
     if let Some((name, score)) = best {
-        println!("\nbest static configuration: {name} (attainment {:.1}%)", score * 100.0);
+        println!("best static configuration: {name} (attainment {:.1}%)", score * 100.0);
     }
 }

@@ -8,8 +8,12 @@ use crate::util::stats::{percentile, TimeSeries};
 pub struct RunResult {
     pub config_name: String,
     pub records: Vec<RequestRecord>,
-    /// Node total GPU power draw over time.
+    /// Cluster-total GPU power draw over time (for a single-node run this
+    /// is the node's series, the paper's Fig 3 view).
     pub node_power: TimeSeries,
+    /// Per-node power draw over time (multi-node runs; one entry per
+    /// node, summing to `node_power`).
+    pub node_power_by_node: Vec<TimeSeries>,
     /// Per-GPU cap targets over time (Fig 9a): (t, caps per gpu).
     pub cap_trace: Vec<(Micros, Vec<Watts>)>,
     /// (t, prefill_gpus, decode_gpus) role changes (Fig 9b).

@@ -1,23 +1,48 @@
-//! Node power manager: budget enforcement + source-before-sink shifting.
+//! Cluster power manager: hierarchical budget enforcement + the paper's
+//! source-before-sink shifting protocol.
 //!
-//! Owns every GPU's `CapState` and guarantees the paper's §2.2 safety
-//! protocol: total *allowed* GPU power never exceeds the node budget, and
-//! when power moves between pools the source caps are lowered and given
-//! time to settle before the sink caps rise. Raises are queued as pending
+//! Owns every GPU's `CapState` and guarantees the §2.2 safety protocol at
+//! two levels: the total *allowed* power of each node never exceeds that
+//! node's budget, and the cluster-wide total never exceeds the cluster
+//! budget (which may bind first — a facility-level constraint). When
+//! power moves between pools the source caps are lowered and given time
+//! to settle before the sink caps rise. Raises are queued as pending
 //! operations released by `poll(now)`.
+//!
+//! The single-node constructor (`new`) is the paper's testbed: one node
+//! whose budget is also the cluster budget.
 
 use crate::power::capper::{CapState, RampProfile};
 use crate::types::{GpuId, Micros, Watts};
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum PowerError {
-    #[error("cap change would exceed node budget: {total:.0} W > {budget:.0} W")]
     BudgetExceeded { total: Watts, budget: Watts },
-    #[error("cap {cap:.0} W outside limits [{min:.0}, {max:.0}]")]
+    NodeBudgetExceeded { node: usize, total: Watts, budget: Watts },
     OutOfLimits { cap: Watts, min: Watts, max: Watts },
-    #[error("no gpus in {0} pool")]
     EmptyPool(&'static str),
 }
+
+impl std::fmt::Display for PowerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PowerError::BudgetExceeded { total, budget } => write!(
+                f,
+                "cap change would exceed cluster budget: {total:.0} W > {budget:.0} W"
+            ),
+            PowerError::NodeBudgetExceeded { node, total, budget } => write!(
+                f,
+                "cap change would exceed node {node} budget: {total:.0} W > {budget:.0} W"
+            ),
+            PowerError::OutOfLimits { cap, min, max } => {
+                write!(f, "cap {cap:.0} W outside limits [{min:.0}, {max:.0}]")
+            }
+            PowerError::EmptyPool(which) => write!(f, "no gpus in {which} pool"),
+        }
+    }
+}
+
+impl std::error::Error for PowerError {}
 
 /// A deferred cap raise, released once the paired lowers have settled.
 #[derive(Debug, Clone)]
@@ -39,15 +64,22 @@ pub struct PowerMove {
 #[derive(Debug)]
 pub struct PowerManager {
     caps: Vec<CapState>,
+    /// Node index of each GPU (same length as `caps`).
+    node_of: Vec<usize>,
+    /// Per-node power budgets (W).
+    node_budgets: Vec<Watts>,
+    /// Cluster-wide budget (W); binds when tighter than the node sum.
+    cluster_budget: Watts,
     pending: Vec<PendingRaise>,
     profile: RampProfile,
-    budget: Watts,
     enforce: bool,
     min_w: Watts,
     max_w: Watts,
 }
 
 impl PowerManager {
+    /// Single-node manager: node budget == cluster budget (the paper's
+    /// testbed shape).
     pub fn new(
         initial_caps: &[Watts],
         budget: Watts,
@@ -55,11 +87,37 @@ impl PowerManager {
         min_w: Watts,
         max_w: Watts,
     ) -> Self {
+        PowerManager::with_nodes(
+            initial_caps,
+            vec![0; initial_caps.len()],
+            vec![budget],
+            budget,
+            enforce,
+            min_w,
+            max_w,
+        )
+    }
+
+    /// Hierarchical manager: `node_of[i]` is GPU i's node; each node has
+    /// its own budget; `cluster_budget` caps the whole fleet.
+    pub fn with_nodes(
+        initial_caps: &[Watts],
+        node_of: Vec<usize>,
+        node_budgets: Vec<Watts>,
+        cluster_budget: Watts,
+        enforce: bool,
+        min_w: Watts,
+        max_w: Watts,
+    ) -> Self {
+        assert_eq!(initial_caps.len(), node_of.len());
+        assert!(node_of.iter().all(|&n| n < node_budgets.len()));
         PowerManager {
             caps: initial_caps.iter().map(|&w| CapState::new(w)).collect(),
+            node_of,
+            node_budgets,
+            cluster_budget,
             pending: Vec::new(),
             profile: RampProfile::default(),
-            budget,
             enforce,
             min_w,
             max_w,
@@ -70,8 +128,21 @@ impl PowerManager {
         self.caps.len()
     }
 
+    pub fn n_nodes(&self) -> usize {
+        self.node_budgets.len()
+    }
+
+    /// Cluster-wide budget (W).
     pub fn budget(&self) -> Watts {
-        self.budget
+        self.cluster_budget
+    }
+
+    pub fn node_budget(&self, node: usize) -> Watts {
+        self.node_budgets[node]
+    }
+
+    pub fn node_of(&self, gpu: GpuId) -> usize {
+        self.node_of[gpu.0]
     }
 
     pub fn profile(&self) -> &RampProfile {
@@ -88,13 +159,28 @@ impl PowerManager {
         self.caps[gpu.0].effective(now)
     }
 
-    /// Sum of target caps plus any pending raises (the committed power).
-    pub fn committed_total(&self) -> Watts {
+    /// Per-GPU committed cap: target plus any pending raise.
+    fn committed_caps(&self) -> Vec<Watts> {
         let mut per_gpu: Vec<Watts> = self.caps.iter().map(|c| c.target()).collect();
         for p in &self.pending {
             per_gpu[p.gpu.0] = per_gpu[p.gpu.0].max(p.cap);
         }
-        per_gpu.iter().sum()
+        per_gpu
+    }
+
+    /// Sum of target caps plus any pending raises (the committed power).
+    pub fn committed_total(&self) -> Watts {
+        self.committed_caps().iter().sum()
+    }
+
+    /// Committed power of one node.
+    pub fn committed_node_total(&self, node: usize) -> Watts {
+        self.committed_caps()
+            .iter()
+            .zip(&self.node_of)
+            .filter(|(_, &n)| n == node)
+            .map(|(c, _)| c)
+            .sum()
     }
 
     fn check_limits(&self, cap: Watts) -> Result<(), PowerError> {
@@ -108,26 +194,39 @@ impl PowerManager {
         Ok(())
     }
 
-    /// Immediately retarget one GPU's cap (budget-checked).
+    /// Immediately retarget one GPU's cap (checked against both budget
+    /// levels).
     pub fn set_cap(&mut self, now: Micros, gpu: GpuId, cap: Watts) -> Result<Micros, PowerError> {
         self.check_limits(cap)?;
         if self.enforce {
-            let delta = cap - self.caps[gpu.0].target();
-            let total = self.committed_total() + delta.max(0.0);
-            if delta > 0.0 && total > self.budget + 1e-6 {
-                return Err(PowerError::BudgetExceeded {
-                    total,
-                    budget: self.budget,
-                });
+            let delta = (cap - self.caps[gpu.0].target()).max(0.0);
+            if delta > 0.0 {
+                let total = self.committed_total() + delta;
+                if total > self.cluster_budget + 1e-6 {
+                    return Err(PowerError::BudgetExceeded {
+                        total,
+                        budget: self.cluster_budget,
+                    });
+                }
+                let node = self.node_of[gpu.0];
+                let node_total = self.committed_node_total(node) + delta;
+                if node_total > self.node_budgets[node] + 1e-6 {
+                    return Err(PowerError::NodeBudgetExceeded {
+                        node,
+                        total: node_total,
+                        budget: self.node_budgets[node],
+                    });
+                }
             }
         }
         Ok(self.caps[gpu.0].set_target(now, cap, &self.profile))
     }
 
     /// Move `total_w` watts from `sources` to `sinks` (split evenly inside
-    /// each pool, clamped to limits). Sources lower now; sinks raise after
-    /// every source's settle deadline. Returns what actually moved — the
-    /// clamps can reduce it (the controller's POWERLIMITSREACHED signal).
+    /// each pool, clamped to limits and to both budget levels). Sources
+    /// lower now; sinks raise after every source's settle deadline.
+    /// Returns what actually moved — the clamps can reduce it (the
+    /// controller's POWERLIMITSREACHED signal).
     pub fn move_power(
         &mut self,
         now: Micros,
@@ -182,28 +281,55 @@ impl PowerManager {
         // Scale the lowers down if sinks can't absorb everything.
         let scale = moved / takeable;
         let mut settle_deadline = now;
-        let mut lowered = Vec::new();
-        for (g, _) in &mut lowers {
+        // (gpu, new target, watts given up) — the third field drives the
+        // rollback below when budget clamps strand part of the move.
+        let mut lowered_full: Vec<(GpuId, Watts, Watts)> = Vec::new();
+        for (g, _) in &lowers {
             let cur = self.caps[g.0].target();
             let reduce = (cur - ((cur - per_source).max(self.min_w))) * scale;
             let new = cur - reduce;
             let d = self.caps[g.0].set_target(now, new, &self.profile);
             settle_deadline = settle_deadline.max(d);
-            lowered.push((*g, new));
+            lowered_full.push((*g, new, reduce));
         }
-        // Queue the raises for after the sources settle.
+        // Queue the raises for after the sources settle, clamped by the
+        // sink's cap room and by whatever node/cluster headroom is left
+        // now that the lowers are committed.
         let per_sink_room: Vec<Watts> = sinks
             .iter()
             .map(|&g| (ceiling - committed_cap(self, g)).max(0.0))
             .collect();
         let room_total: f64 = per_sink_room.iter().sum();
+        let mut node_room: Vec<Watts> = (0..self.node_budgets.len())
+            .map(|nd| {
+                if self.enforce {
+                    (self.node_budgets[nd] - self.committed_node_total(nd)).max(0.0)
+                } else {
+                    f64::INFINITY
+                }
+            })
+            .collect();
+        let mut cluster_room = if self.enforce {
+            (self.cluster_budget - self.committed_total()).max(0.0)
+        } else {
+            f64::INFINITY
+        };
         let mut raised = Vec::new();
+        let mut granted_total = 0.0;
         for (&g, &room) in sinks.iter().zip(&per_sink_room) {
             if room <= 0.0 {
                 continue;
             }
             let share = moved * room / room_total;
-            let cap = committed_cap(self, g) + share;
+            let nd = self.node_of[g.0];
+            let grant = share.min(node_room[nd]).min(cluster_room);
+            if grant <= 0.0 {
+                continue;
+            }
+            node_room[nd] -= grant;
+            cluster_room -= grant;
+            granted_total += grant;
+            let cap = committed_cap(self, g) + grant;
             self.pending.push(PendingRaise {
                 gpu: g,
                 cap,
@@ -211,6 +337,36 @@ impl PowerManager {
             });
             raised.push((g, cap));
         }
+        // Budget clamps (a full sink node, or the cluster cap) can strand
+        // part of the move: the sources were lowered by `moved` but only
+        // `granted_total` was re-granted. Hand the stranded watts back to
+        // the sources — otherwise every blocked MovePower retry ratchets
+        // the donor pool toward the floor while the sinks gain nothing.
+        // Restores are clamped by the same headrooms, so grants that
+        // consumed a shared node's freed room stay legal.
+        let excess = moved - granted_total;
+        if excess > 1e-9 {
+            for i in 0..lowered_full.len() {
+                let (g, _, gave) = lowered_full[i];
+                let mut restore = excess * gave / moved;
+                if self.enforce {
+                    let nd = self.node_of[g.0];
+                    let node_head =
+                        (self.node_budgets[nd] - self.committed_node_total(nd)).max(0.0);
+                    let cluster_head =
+                        (self.cluster_budget - self.committed_total()).max(0.0);
+                    restore = restore.min(node_head).min(cluster_head);
+                }
+                if restore <= 0.0 {
+                    continue;
+                }
+                let cap = (self.caps[g.0].target() + restore).min(self.max_w);
+                let d = self.caps[g.0].set_target(now, cap, &self.profile);
+                settle_deadline = settle_deadline.max(d);
+                lowered_full[i].1 = cap;
+            }
+        }
+        let lowered = lowered_full.into_iter().map(|(g, new, _)| (g, new)).collect();
         Ok(PowerMove {
             lowered,
             raised,
@@ -218,25 +374,36 @@ impl PowerManager {
         })
     }
 
-    /// Set every GPU to `budget / n` (paper: DISTRIBUTEUNIFORMPOWER after a
-    /// role move). Lower-first/raise-later sequencing applies here too.
+    /// Set every GPU to its node's uniform share (paper:
+    /// DISTRIBUTEUNIFORMPOWER after a role move), additionally limited by
+    /// the cluster-wide per-GPU share when the cluster budget binds.
+    /// Lower-first/raise-later sequencing applies here too.
     pub fn distribute_uniform(&mut self, now: Micros) -> Micros {
-        let uniform = (self.budget / self.caps.len() as f64).clamp(self.min_w, self.max_w);
+        let per_gpu_cluster = self.cluster_budget / self.caps.len() as f64;
+        let node_count = |nd: usize| self.node_of.iter().filter(|&&n| n == nd).count();
+        let uniform_of: Vec<Watts> = (0..self.caps.len())
+            .map(|i| {
+                let nd = self.node_of[i];
+                (self.node_budgets[nd] / node_count(nd) as f64)
+                    .min(per_gpu_cluster)
+                    .clamp(self.min_w, self.max_w)
+            })
+            .collect();
         self.pending.clear();
         let mut settle = now;
         // Phase 1: all lowers immediately.
         for i in 0..self.caps.len() {
-            if self.caps[i].target() > uniform {
-                let d = self.caps[i].set_target(now, uniform, &self.profile);
+            if self.caps[i].target() > uniform_of[i] {
+                let d = self.caps[i].set_target(now, uniform_of[i], &self.profile);
                 settle = settle.max(d);
             }
         }
         // Phase 2: raises queued after the lowers settle.
         for i in 0..self.caps.len() {
-            if self.caps[i].target() < uniform {
+            if self.caps[i].target() < uniform_of[i] {
                 self.pending.push(PendingRaise {
                     gpu: GpuId(i),
-                    cap: uniform,
+                    cap: uniform_of[i],
                     at: settle,
                 });
             }
@@ -268,9 +435,17 @@ impl PowerManager {
         self.pending.iter().map(|p| p.at).min()
     }
 
-    /// Budget invariant on committed power (property-tested).
+    /// Budget invariant on committed power at both levels
+    /// (property-tested).
     pub fn budget_ok(&self) -> bool {
-        !self.enforce || self.committed_total() <= self.budget + 1e-6
+        if !self.enforce {
+            return true;
+        }
+        if self.committed_total() > self.cluster_budget + 1e-6 {
+            return false;
+        }
+        (0..self.node_budgets.len())
+            .all(|nd| self.committed_node_total(nd) <= self.node_budgets[nd] + 1e-6)
     }
 
     /// All target caps (Fig 9a trace).
@@ -286,6 +461,19 @@ mod tests {
 
     fn manager_4p4d() -> PowerManager {
         PowerManager::new(&[600.0; 8], 4800.0, true, 400.0, 750.0)
+    }
+
+    /// Two 4-GPU nodes, 2400 W each, with a cluster cap that may bind.
+    fn manager_two_nodes(cluster_budget: Watts) -> PowerManager {
+        PowerManager::with_nodes(
+            &[500.0; 8],
+            vec![0, 0, 0, 0, 1, 1, 1, 1],
+            vec![2400.0, 2400.0],
+            cluster_budget,
+            true,
+            400.0,
+            750.0,
+        )
     }
 
     #[test]
@@ -370,6 +558,20 @@ mod tests {
     }
 
     #[test]
+    fn move_power_zero_when_sources_at_floor() {
+        // The saturated-pool case in the donor direction: every source
+        // already sits at MIN_P, so nothing can be taken.
+        let mut m = PowerManager::new(&[400.0, 400.0, 500.0, 500.0], 1800.0, true, 400.0, 750.0);
+        let mv = m
+            .move_power(0, &[GpuId(0), GpuId(1)], &[GpuId(2), GpuId(3)], 100.0, 750.0)
+            .unwrap();
+        assert!(mv.lowered.is_empty() && mv.raised.is_empty(), "{mv:?}");
+        assert_eq!(m.target(GpuId(0)), 400.0);
+        assert_eq!(m.target(GpuId(2)), 500.0);
+        assert!(m.budget_ok());
+    }
+
+    #[test]
     fn distribute_uniform_converges_to_budget_share() {
         let mut m = PowerManager::new(
             &[750.0, 750.0, 750.0, 750.0, 450.0, 450.0, 450.0, 450.0],
@@ -418,5 +620,127 @@ mod tests {
             .move_power(0, &[GpuId(4)], &[GpuId(0)], 50.0, 750.0)
             .unwrap();
         assert_eq!(m.next_pending_at(), Some(mv.effective_at));
+    }
+
+    // ------------------------------------------------------------------
+    // hierarchical-budget edge cases
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn node_budget_below_cap_floor_rejects_every_raise() {
+        // 4 GPUs at the 400 W floor under a 1500 W node budget: already
+        // oversubscribed (1600 committed). The manager must flag it and
+        // refuse to make it worse.
+        let mut m = PowerManager::new(&[400.0; 4], 1500.0, true, 400.0, 750.0);
+        assert!(!m.budget_ok(), "floor above budget must be flagged");
+        assert!(m.set_cap(0, GpuId(0), 450.0).is_err());
+        // distribute_uniform clamps to the floor but cannot repair it.
+        let settle = m.distribute_uniform(0);
+        m.poll(settle);
+        for i in 0..4 {
+            assert_eq!(m.target(GpuId(i)), 400.0);
+        }
+        assert!(!m.budget_ok());
+    }
+
+    #[test]
+    fn per_node_budget_binds_inside_cluster_headroom() {
+        // Cluster has room (4800 total vs 4000 committed) but node 0 is
+        // full: a raise on node 0 must fail citing the node budget.
+        let mut m = PowerManager::with_nodes(
+            &[600.0, 600.0, 600.0, 600.0, 400.0, 400.0, 400.0, 400.0],
+            vec![0, 0, 0, 0, 1, 1, 1, 1],
+            vec![2400.0, 2400.0],
+            4800.0,
+            true,
+            400.0,
+            750.0,
+        );
+        let err = m.set_cap(0, GpuId(0), 650.0).unwrap_err();
+        assert!(matches!(err, PowerError::NodeBudgetExceeded { node: 0, .. }), "{err}");
+        // The same watts fit on node 1.
+        m.set_cap(0, GpuId(4), 450.0).unwrap();
+        assert!(m.budget_ok());
+    }
+
+    #[test]
+    fn cluster_cap_binds_before_any_node_cap() {
+        // Node budgets allow 2400 W each (4800 total) but the facility
+        // grants only 4100 W: raises stop at the cluster line even though
+        // both nodes individually have headroom.
+        let mut m = manager_two_nodes(4100.0);
+        assert_eq!(m.committed_total(), 4000.0);
+        // 150 W raise would fit node 0 (2000 -> 2150 < 2400) but not the
+        // cluster (4000 -> 4150 > 4100).
+        let err = m.set_cap(0, GpuId(0), 650.0).unwrap_err();
+        assert!(matches!(err, PowerError::BudgetExceeded { .. }), "{err}");
+        // A 100 W raise exactly consumes the cluster headroom.
+        m.set_cap(0, GpuId(0), 600.0).unwrap();
+        assert!(m.budget_ok());
+        assert!((m.committed_total() - 4100.0).abs() < 1e-6);
+        // No further raise anywhere, on either node.
+        assert!(m.set_cap(1, GpuId(4), 450.0).is_err());
+    }
+
+    #[test]
+    fn move_power_respects_cluster_cap_across_nodes() {
+        // Moving power from node 0 sources to node 1 sinks keeps both
+        // node totals and the cluster total legal at every step.
+        let mut m = manager_two_nodes(4100.0);
+        let mv = m
+            .move_power(0, &[GpuId(0), GpuId(1)], &[GpuId(4), GpuId(5)], 150.0, 750.0)
+            .unwrap();
+        assert!(!mv.lowered.is_empty());
+        m.poll(mv.effective_at);
+        assert!(m.budget_ok(), "cluster/node budgets violated after cross-node move");
+        assert!(m.committed_node_total(0) <= 2400.0 + 1e-6);
+        assert!(m.committed_node_total(1) <= 2400.0 + 1e-6);
+        assert!(m.committed_total() <= 4100.0 + 1e-6);
+    }
+
+    #[test]
+    fn move_power_against_saturated_sink_node() {
+        // Node 1 is at its node budget: raises on it are capped at zero
+        // even though the sinks' per-GPU cap room says otherwise.
+        let mut m = PowerManager::with_nodes(
+            &[450.0, 450.0, 600.0, 600.0],
+            vec![0, 0, 1, 1],
+            vec![1800.0, 1200.0],
+            3000.0,
+            true,
+            400.0,
+            750.0,
+        );
+        assert_eq!(m.committed_node_total(1), 1200.0);
+        let mv = m
+            .move_power(0, &[GpuId(0), GpuId(1)], &[GpuId(2), GpuId(3)], 100.0, 750.0)
+            .unwrap();
+        m.poll(mv.effective_at);
+        assert!(m.committed_node_total(1) <= 1200.0 + 1e-6, "node 1 overfilled");
+        assert!(m.budget_ok());
+        // The stranded watts must be handed back to the sources, not
+        // destroyed — otherwise blocked retries ratchet donors to the floor.
+        assert!(mv.raised.is_empty(), "sink node full: {mv:?}");
+        for i in 0..2 {
+            assert!(
+                (m.target(GpuId(i)) - 450.0).abs() < 1e-6,
+                "source {i} not restored: {}",
+                m.target(GpuId(i))
+            );
+        }
+    }
+
+    #[test]
+    fn distribute_uniform_respects_binding_cluster_budget() {
+        // Cluster budget 4000 < node sum 4800: uniform share is the
+        // cluster-limited 500 W, not the node share of 600 W.
+        let mut m = manager_two_nodes(4000.0);
+        m.set_cap(0, GpuId(0), 400.0).unwrap();
+        let settle = m.distribute_uniform(SECOND);
+        m.poll(settle);
+        for i in 0..8 {
+            assert!((m.target(GpuId(i)) - 500.0).abs() < 1e-6, "gpu {i}");
+        }
+        assert!(m.budget_ok());
     }
 }

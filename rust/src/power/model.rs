@@ -130,6 +130,22 @@ impl PowerModel {
         ((bytes as f64 / self.cfg.xgmi_bw) * 1e6) as Micros
     }
 
+    /// KV-cache transfer time between nodes (RDMA-class link, slower than
+    /// XGMI — the locality cost cross-node routing weighs).
+    pub fn kv_transfer_time_cross_node(&self, tokens: u32) -> Micros {
+        let bytes = tokens as u64 * self.cfg.kv_bytes_per_token;
+        ((bytes as f64 / self.cfg.inter_node_bw) * 1e6) as Micros
+    }
+
+    /// Transfer time picking the right link for the hop.
+    pub fn kv_transfer_time_between(&self, tokens: u32, same_node: bool) -> Micros {
+        if same_node {
+            self.kv_transfer_time(tokens)
+        } else {
+            self.kv_transfer_time_cross_node(tokens)
+        }
+    }
+
     /// Instantaneous power draw of a GPU at `cap` with `util` in [0,1].
     /// Prefill saturates its cap; decode tops out near its knee (it cannot
     /// pull much more power even uncapped — memory-bound).
@@ -270,6 +286,18 @@ mod tests {
         // 4096 tokens * 128 KiB = 512 MiB over 64 GB/s ≈ 8.4 ms
         let t = m.kv_transfer_time(4096);
         assert!((7_000..10_000).contains(&t), "t={t}");
+    }
+
+    #[test]
+    fn cross_node_transfer_slower_than_xgmi() {
+        let m = model();
+        let local = m.kv_transfer_time_between(4096, true);
+        let remote = m.kv_transfer_time_between(4096, false);
+        assert_eq!(local, m.kv_transfer_time(4096));
+        assert!(
+            remote > local * 2,
+            "RDMA hop must clearly exceed XGMI: {remote} vs {local}"
+        );
     }
 
     #[test]

@@ -1,5 +1,4 @@
-//! The discrete-event simulator: an 8-GPU MI300X-class node under the
-//! RAPID coordinator.
+//! Simulation entry point: run a trace through a cluster configuration.
 //!
 //! This is the substitution substrate for the paper's physical testbed
 //! (see DESIGN.md §2): simulated GPUs execute the calibrated latency
@@ -7,20 +6,16 @@
 //! dynamics, and the *actual paper logic* — router, batcher, Algorithm 1
 //! controller — runs unmodified on top, exactly as it does on the real
 //! PJRT serving path.
+//!
+//! The discrete-event core itself lives in [`crate::cluster`] (topology,
+//! routing, drain/epoch lifecycle, KV ring, pluggable policies) with the
+//! per-role step logic in [`crate::sim::worker`]; this module only holds
+//! the options type and the `run` façade, plus the engine-level
+//! regression tests.
 
-use std::collections::VecDeque;
-
-use crate::config::{ClusterConfig, Topology};
-use crate::coordinator::batcher::{self, ChunkProgress};
-use crate::coordinator::router::{self, WorkerLoad};
-use crate::coordinator::{Action, Controller, Snapshot};
+use crate::config::ClusterConfig;
 use crate::metrics::RunResult;
-use crate::power::{PowerManager, PowerModel};
-use crate::sim::event::{DecodeItem, Event, EventQueue};
-use crate::sim::gpu::{ChunkMeta, GpuSim};
-use crate::types::{
-    GpuId, Micros, Request, RequestRecord, Role, SECOND,
-};
+use crate::types::{Micros, SECOND};
 use crate::workload::Trace;
 
 /// Tunables that are about the *simulation*, not the system under test.
@@ -46,908 +41,14 @@ impl Default for SimOptions {
 
 /// Run one experiment: a trace through a cluster configuration.
 pub fn run(cfg: &ClusterConfig, trace: &Trace, opts: &SimOptions) -> RunResult {
-    Sim::new(cfg.clone(), trace.clone(), opts.clone()).run()
-}
-
-struct Sim {
-    cfg: ClusterConfig,
-    model: PowerModel,
-    power: PowerManager,
-    controller: Controller,
-    gpus: Vec<GpuSim>,
-    events: EventQueue,
-    now: Micros,
-    trace: Vec<Request>,
-    next_arrival: usize,
-    records: Vec<RequestRecord>,
-    /// KV ring occupancy (slots in flight between prefill and decode).
-    ring_used: usize,
-    opts: SimOptions,
-    // --- result accumulation ---
-    node_power: crate::util::stats::TimeSeries,
-    cap_trace: Vec<(Micros, Vec<f64>)>,
-    role_trace: Vec<(Micros, usize, usize)>,
-    decisions: Vec<(Micros, String)>,
-    provisioned_integral: f64,
-    last_sample_at: Micros,
-    hard_stop: Micros,
-    /// Telemetry-only RNG: models sub-sample-interval power microbursts
-    /// (kernel gaps, transfer stalls) that a 10 ms meter sees on real
-    /// hardware. Never feeds back into scheduling decisions' latencies.
-    sample_rng: crate::util::rng::Rng,
-}
-
-impl Sim {
-    fn new(cfg: ClusterConfig, trace: Trace, opts: SimOptions) -> Self {
-        let model = PowerModel::new(cfg.perf.clone());
-        let caps: Vec<f64> = (0..cfg.n_gpus)
-            .map(|i| match cfg.topology {
-                Topology::Coalesced => cfg.prefill_cap_w,
-                Topology::Disaggregated { prefill, .. } => {
-                    if i < prefill {
-                        cfg.prefill_cap_w
-                    } else {
-                        cfg.decode_cap_w
-                    }
-                }
-            })
-            .collect();
-        let power = PowerManager::new(
-            &caps,
-            cfg.node_budget_w,
-            cfg.enforce_budget,
-            cfg.controller.min_gpu_w,
-            cfg.controller.max_gpu_w,
-        );
-        let gpus: Vec<GpuSim> = (0..cfg.n_gpus)
-            .map(|i| {
-                GpuSim::new(match cfg.topology {
-                    Topology::Coalesced => Role::Coalesced,
-                    Topology::Disaggregated { prefill, .. } => {
-                        if i < prefill {
-                            Role::Prefill
-                        } else {
-                            Role::Decode
-                        }
-                    }
-                })
-            })
-            .collect();
-        let controller = Controller::new(cfg.controller.clone(), cfg.control);
-        let hard_stop = trace
-            .requests
-            .last()
-            .map(|r| r.arrival)
-            .unwrap_or(0)
-            + opts.drain_grace;
-        Sim {
-            model,
-            power,
-            controller,
-            gpus,
-            events: EventQueue::new(),
-            now: 0,
-            trace: trace.requests,
-            next_arrival: 0,
-            records: Vec::new(),
-            ring_used: 0,
-            node_power: crate::util::stats::TimeSeries::new(),
-            cap_trace: Vec::new(),
-            role_trace: Vec::new(),
-            decisions: Vec::new(),
-            provisioned_integral: 0.0,
-            last_sample_at: 0,
-            opts,
-            cfg,
-            hard_stop,
-            sample_rng: crate::util::rng::Rng::new(0xF16_3),
-        }
-    }
-
-    fn run(mut self) -> RunResult {
-        if !self.trace.is_empty() {
-            self.events.push(self.trace[0].arrival, Event::Arrival);
-        }
-        self.events.push(self.cfg.controller.tick, Event::ControllerTick);
-        self.events.push(0, Event::Sample);
-        self.record_roles();
-
-        let total = self.trace.len();
-        while let Some((at, ev)) = self.events.pop() {
-            debug_assert!(at >= self.now, "time went backwards");
-            self.now = at;
-            if self.records.len() >= total || self.now > self.hard_stop {
-                break;
-            }
-            self.handle(ev);
-        }
-        self.finish(total)
-    }
-
-    // ------------------------------------------------------------------
-    // event dispatch
-    // ------------------------------------------------------------------
-
-    fn handle(&mut self, ev: Event) {
-        match ev {
-            Event::Arrival => self.on_arrival(),
-            Event::PrefillDone { gpu, epoch } => self.on_prefill_done(gpu, epoch),
-            Event::DecodeStep { gpu, epoch } => self.on_decode_step(gpu, epoch),
-            Event::CoalescedStep { gpu, epoch } => self.on_coalesced_step(gpu, epoch),
-            Event::KvArrive { gpu, item } => self.on_kv_arrive(gpu, item),
-            Event::ControllerTick => self.on_tick(),
-            Event::PowerPoll => self.on_power_poll(),
-            Event::Sample => self.on_sample(),
-            Event::DrainDone { gpu, epoch } => self.on_drain_done(gpu, epoch),
-        }
-    }
-
-    fn on_arrival(&mut self) {
-        let req = self.trace[self.next_arrival].clone();
-        self.next_arrival += 1;
-        if self.next_arrival < self.trace.len() {
-            self.events
-                .push(self.trace[self.next_arrival].arrival, Event::Arrival);
-        }
-        match self.cfg.topology {
-            Topology::Coalesced => self.route_coalesced(req),
-            Topology::Disaggregated { .. } => self.route_prefill(req),
-        }
-    }
-
-    fn route_prefill(&mut self, req: Request) {
-        let loads: Vec<WorkerLoad> = self
-            .gpus
-            .iter()
-            .enumerate()
-            .filter(|(_, g)| g.role == Role::Prefill)
-            .map(|(i, g)| WorkerLoad {
-                gpu: GpuId(i),
-                queued_tokens: g.pf_queued_tokens,
-                requests: g.pf_queue.len(),
-                accepting: g.accepting(),
-            })
-            .collect();
-        let Some(gpu) = router::pick_prefill(&loads) else {
-            // No accepting prefill GPU (all draining): park on the one with
-            // the committed prefill role; it will pick the work up after
-            // the drain. This cannot happen with >= 1 GPU per phase.
-            let fallback = self
-                .gpus
-                .iter()
-                .position(|g| g.committed_role() == Role::Prefill)
-                .expect("at least one prefill-committed GPU");
-            self.gpus[fallback].push_prefill(req);
-            return;
-        };
-        self.gpus[gpu.0].push_prefill(req);
-        self.kick_prefill(gpu.0);
-    }
-
-    fn route_coalesced(&mut self, req: Request) {
-        let loads: Vec<WorkerLoad> = self
-            .gpus
-            .iter()
-            .enumerate()
-            .map(|(i, g)| WorkerLoad {
-                gpu: GpuId(i),
-                queued_tokens: g.co_queued_tokens(),
-                requests: g.co_queue.len() + g.dec_active.len(),
-                accepting: g.accepting(),
-            })
-            .collect();
-        let gpu = router::pick_prefill(&loads).expect("coalesced pool nonempty");
-        self.gpus[gpu.0].co_queue.push_back(ChunkMeta {
-            prog: ChunkProgress::new(req),
-            started: None,
-        });
-        self.kick_coalesced(gpu.0);
-    }
-
-    // ------------------------------------------------------------------
-    // prefill pool
-    // ------------------------------------------------------------------
-
-    fn kick_prefill(&mut self, gi: usize) {
-        let ring_free = self.cfg.batch.ring_slots.saturating_sub(self.ring_used);
-        let g = &mut self.gpus[gi];
-        if g.busy || g.role != Role::Prefill || g.pf_queue.is_empty() {
-            return;
-        }
-        // Backpressure: wait for ring slots before starting a new batch
-        // (the paper's prefill stall when decode cannot drain).
-        if !g.publish_wait.is_empty() || ring_free == 0 {
-            return;
-        }
-        let batch = batcher::form_prefill_batch(&mut g.pf_queue, &self.cfg.batch);
-        if batch.requests.is_empty() {
-            return;
-        }
-        g.pop_prefill_tokens(batch.total_tokens as u64);
-        g.pf_batch = batch
-            .requests
-            .into_iter()
-            .map(|r| (r, self.now))
-            .collect();
-        g.busy = true;
-        let power = self.power.effective(GpuId(gi), self.now);
-        let t = self.model.prefill_batch_time(batch.total_tokens, power);
-        let epoch = g.epoch;
-        self.events.push(self.now + t, Event::PrefillDone { gpu: gi, epoch });
-    }
-
-    fn on_prefill_done(&mut self, gi: usize, epoch: u64) {
-        if self.gpus[gi].epoch != epoch {
-            return; // stale (role changed mid-flight)
-        }
-        self.gpus[gi].busy = false;
-        let batch = std::mem::take(&mut self.gpus[gi].pf_batch);
-        let dynamic = self.cfg.control.is_dynamic();
-        for (req, prefill_start) in batch {
-            if dynamic {
-                let ratio = (self.now - req.arrival) as f64 / req.slo.ttft as f64;
-                self.controller.observe_ttft(self.now, ratio);
-            }
-            if req.output_tokens <= 1 {
-                // Single-token request: done at prefill.
-                self.records.push(RequestRecord {
-                    id: req.id,
-                    arrival: req.arrival,
-                    prefill_start,
-                    first_token: self.now,
-                    finish: self.now,
-                    input_tokens: req.input_tokens,
-                    output_tokens: req.output_tokens,
-                    slo: req.slo,
-                });
-                continue;
-            }
-            let item = DecodeItem {
-                req,
-                prefill_start,
-                first_token: self.now,
-                tokens_done: 1,
-            };
-            self.gpus[gi].publish_wait.push_back(item);
-        }
-        self.try_publish(gi);
-        // Drain handling: if this GPU is switching roles and is now empty,
-        // the switch can proceed.
-        self.maybe_finish_drain(gi);
-        self.kick_prefill(gi);
-    }
-
-    /// Push completed prefills into the KV ring as capacity allows.
-    fn try_publish(&mut self, gi: usize) {
-        while self.ring_used < self.cfg.batch.ring_slots {
-            let Some(item) = self.gpus[gi].publish_wait.pop_front() else {
-                break;
-            };
-            let loads: Vec<WorkerLoad> = self
-                .gpus
-                .iter()
-                .enumerate()
-                .filter(|(_, g)| g.role == Role::Decode)
-                .map(|(i, g)| WorkerLoad {
-                    gpu: GpuId(i),
-                    queued_tokens: 0,
-                    requests: g.decode_load(),
-                    accepting: g.accepting(),
-                })
-                .collect();
-            let target = router::pick_decode(&loads)
-                .or_else(|| {
-                    self.gpus
-                        .iter()
-                        .position(|g| g.committed_role() == Role::Decode)
-                        .map(GpuId)
-                })
-                .expect("at least one decode-committed GPU");
-            self.ring_used += 1;
-            let t = self.model.kv_transfer_time(item.req.input_tokens);
-            self.events
-                .push(self.now + t, Event::KvArrive { gpu: target.0, item });
-        }
-    }
-
-    // ------------------------------------------------------------------
-    // decode pool
-    // ------------------------------------------------------------------
-
-    fn on_kv_arrive(&mut self, gi: usize, item: DecodeItem) {
-        self.ring_used = self.ring_used.saturating_sub(1);
-        self.gpus[gi].dec_pending.push_back(item);
-        // A slot freed: stalled prefill GPUs may publish now.
-        for i in 0..self.gpus.len() {
-            if !self.gpus[i].publish_wait.is_empty() {
-                self.try_publish(i);
-                self.kick_prefill(i);
-            }
-        }
-        self.kick_decode(gi);
-    }
-
-    fn kick_decode(&mut self, gi: usize) {
-        let g = &mut self.gpus[gi];
-        if g.busy || g.role != Role::Decode {
-            return;
-        }
-        // Admissions at step boundaries (continuous batching). Draining
-        // GPUs stop admitting.
-        if g.accepting() {
-            let n = batcher::decode_admissions(
-                g.dec_active.len(),
-                g.dec_pending.len(),
-                &self.cfg.batch,
-            );
-            for _ in 0..n {
-                let item = g.dec_pending.pop_front().unwrap();
-                g.dec_active.push(item);
-            }
-        }
-        if g.dec_active.is_empty() {
-            return;
-        }
-        g.busy = true;
-        let batch = g.dec_active.len();
-        let ctx = g.mean_ctx();
-        let power = self.power.effective(GpuId(gi), self.now);
-        let t = self.model.decode_step_time(batch, ctx, power);
-        self.gpus[gi].dec_step_time = t;
-        let epoch = self.gpus[gi].epoch;
-        self.events.push(self.now + t, Event::DecodeStep { gpu: gi, epoch });
-    }
-
-    fn on_decode_step(&mut self, gi: usize, epoch: u64) {
-        if self.gpus[gi].epoch != epoch {
-            return;
-        }
-        let step = self.gpus[gi].dec_step_time;
-        self.gpus[gi].busy = false;
-        let mut ratio_sum = 0.0;
-        let mut finished: Vec<DecodeItem> = Vec::new();
-        {
-            let g = &mut self.gpus[gi];
-            let mut idx = 0;
-            while idx < g.dec_active.len() {
-                g.dec_active[idx].tokens_done += 1;
-                ratio_sum += step as f64 / g.dec_active[idx].req.slo.tpot as f64;
-                if g.dec_active[idx].remaining() == 0 {
-                    finished.push(g.dec_active.swap_remove(idx));
-                } else {
-                    idx += 1;
-                }
-            }
-            if self.cfg.control.is_dynamic()
-                && (!g.dec_active.is_empty() || !finished.is_empty())
-            {
-                let n = g.dec_active.len() + finished.len();
-                // One TPOT sample per step: the batch-mean SLO ratio.
-                let ratio = ratio_sum / n as f64;
-                self.controller.observe_tpot(self.now, ratio);
-            }
-        }
-        for item in finished {
-            self.records.push(RequestRecord {
-                id: item.req.id,
-                arrival: item.req.arrival,
-                prefill_start: item.prefill_start,
-                first_token: item.first_token,
-                finish: self.now,
-                input_tokens: item.req.input_tokens,
-                output_tokens: item.req.output_tokens,
-                slo: item.req.slo,
-            });
-        }
-        self.maybe_finish_drain(gi);
-        self.kick_decode(gi);
-    }
-
-    // ------------------------------------------------------------------
-    // coalesced pool (chunked prefill baseline)
-    // ------------------------------------------------------------------
-
-    fn kick_coalesced(&mut self, gi: usize) {
-        let chunk_budget = self.cfg.perf.chunk_tokens;
-        let g = &mut self.gpus[gi];
-        if g.busy || g.role != Role::Coalesced {
-            return;
-        }
-        if g.co_queue.is_empty() && g.dec_active.is_empty() && g.dec_pending.is_empty() {
-            return;
-        }
-        // Admit locally-finished prefills (they sit in dec_pending).
-        let n = batcher::decode_admissions(
-            g.dec_active.len(),
-            g.dec_pending.len(),
-            &self.cfg.batch,
-        );
-        for _ in 0..n {
-            let item = g.dec_pending.pop_front().unwrap();
-            g.dec_active.push(item);
-        }
-        // Take the next prefill chunk (if any prompt is queued).
-        let mut done_before = 0u32;
-        if let Some(head) = g.co_queue.front_mut() {
-            if head.started.is_none() {
-                head.started = Some(self.now);
-            }
-            done_before = head.prog.done_tokens;
-        }
-        let mut queue = std::mem::take(&mut g.co_queue);
-        // Mark start times for any prompt the chunk reaches.
-        let (used, finished_reqs) = {
-            let mut progs: VecDeque<ChunkProgress> =
-                queue.iter().map(|c| c.prog.clone()).collect();
-            let r = batcher::take_chunk(&mut progs, chunk_budget);
-            // Write back progress into the metas that remain.
-            let consumed = queue.len() - progs.len();
-            let finished_meta: Vec<ChunkMeta> = queue.drain(..consumed).collect();
-            for (meta, prog) in queue.iter_mut().zip(progs.iter()) {
-                meta.prog = prog.clone();
-                if meta.prog.done_tokens > 0 && meta.started.is_none() {
-                    meta.started = Some(self.now);
-                }
-            }
-            let mut finished = Vec::new();
-            for meta in finished_meta {
-                finished.push((meta.prog.request.clone(), meta.started.unwrap_or(self.now)));
-            }
-            (r.0, finished)
-        };
-        g.co_queue = queue;
-        g.co_finishing = finished_reqs;
-        g.co_step_chunk = used;
-        if used == 0 && g.dec_active.is_empty() {
-            return; // nothing to do this iteration
-        }
-        g.busy = true;
-        let batch = g.dec_active.len();
-        let ctx = g.mean_ctx();
-        let power = self.power.effective(GpuId(gi), self.now);
-        let t = self
-            .model
-            .coalesced_step_time(used, done_before, batch, ctx, power);
-        self.gpus[gi].dec_step_time = t;
-        let epoch = self.gpus[gi].epoch;
-        self.events
-            .push(self.now + t, Event::CoalescedStep { gpu: gi, epoch });
-    }
-
-    fn on_coalesced_step(&mut self, gi: usize, epoch: u64) {
-        if self.gpus[gi].epoch != epoch {
-            return;
-        }
-        let step = self.gpus[gi].dec_step_time;
-        self.gpus[gi].busy = false;
-        // Prefill completions: first token now; join local decode.
-        let finishing = std::mem::take(&mut self.gpus[gi].co_finishing);
-        let dynamic = self.cfg.control.is_dynamic();
-        for (req, started) in finishing {
-            if dynamic {
-                let ratio = (self.now - req.arrival) as f64 / req.slo.ttft as f64;
-                self.controller.observe_ttft(self.now, ratio);
-            }
-            if req.output_tokens <= 1 {
-                self.records.push(RequestRecord {
-                    id: req.id,
-                    arrival: req.arrival,
-                    prefill_start: started,
-                    first_token: self.now,
-                    finish: self.now,
-                    input_tokens: req.input_tokens,
-                    output_tokens: req.output_tokens,
-                    slo: req.slo,
-                });
-                continue;
-            }
-            self.gpus[gi].dec_pending.push_back(DecodeItem {
-                req,
-                prefill_start: started,
-                first_token: self.now,
-                tokens_done: 1,
-            });
-        }
-        // Decode completions.
-        let mut ratio_sum = 0.0;
-        let mut finished: Vec<DecodeItem> = Vec::new();
-        {
-            let g = &mut self.gpus[gi];
-            let mut idx = 0;
-            while idx < g.dec_active.len() {
-                g.dec_active[idx].tokens_done += 1;
-                ratio_sum += step as f64 / g.dec_active[idx].req.slo.tpot as f64;
-                if g.dec_active[idx].remaining() == 0 {
-                    finished.push(g.dec_active.swap_remove(idx));
-                } else {
-                    idx += 1;
-                }
-            }
-            let n = g.dec_active.len() + finished.len();
-            if n > 0 && self.cfg.control.is_dynamic() {
-                self.controller.observe_tpot(self.now, ratio_sum / n as f64);
-            }
-        }
-        for item in finished {
-            self.records.push(RequestRecord {
-                id: item.req.id,
-                arrival: item.req.arrival,
-                prefill_start: item.prefill_start,
-                first_token: item.first_token,
-                finish: self.now,
-                input_tokens: item.req.input_tokens,
-                output_tokens: item.req.output_tokens,
-                slo: item.req.slo,
-            });
-        }
-        self.kick_coalesced(gi);
-    }
-
-    // ------------------------------------------------------------------
-    // controller + power
-    // ------------------------------------------------------------------
-
-    fn on_tick(&mut self) {
-        self.events
-            .push(self.now + self.cfg.controller.tick, Event::ControllerTick);
-        // Project queue pressure into the TTFT window: queue buildup must
-        // trigger *before* completions report violations (paper §3.3:
-        // "queue buildup as an early indicator of stress"). The projection
-        // is head wait + expected drain time of the whole backlog, so a
-        // deep queue keeps the signal high even right after a power boost
-        // clears the head.
-        for (i, g) in self.gpus.iter().enumerate() {
-            if !self.cfg.control.is_dynamic() {
-                break;
-            }
-            let (head, backlog_tokens) = match g.role {
-                Role::Coalesced => (
-                    g.co_queue.front().map(|c| &c.prog.request),
-                    g.co_queued_tokens(),
-                ),
-                _ => (g.pf_queue.front(), g.pf_queued_tokens),
-            };
-            if let Some(req) = head {
-                let age = self.now.saturating_sub(req.arrival);
-                let cap = self.power.effective(GpuId(i), self.now);
-                let drain =
-                    (backlog_tokens as f64 / self.model.prefill_rate(cap) * 1e6) as Micros;
-                let projected = age + drain;
-                self.controller
-                    .observe_ttft(self.now, projected as f64 / req.slo.ttft as f64);
-            }
-        }
-        let snap = self.snapshot();
-        if std::env::var("RAPID_DEBUG_TICKS").is_ok() {
-            eprintln!(
-                "tick t={:.2} qP={} qD={} p_sat={} d_sat={} P={} D={}",
-                self.now as f64 / 1e6,
-                snap.prefill_queue,
-                snap.decode_queue,
-                snap.prefill_power_saturated,
-                snap.decode_power_saturated,
-                snap.prefill_gpus,
-                snap.decode_gpus
-            );
-        }
-        if let Some(action) = self.controller.decide(&snap) {
-            self.execute(action);
-        }
-    }
-
-    fn pool(&self, role: Role) -> Vec<GpuId> {
-        self.gpus
-            .iter()
-            .enumerate()
-            .filter(|(_, g)| g.role == role && g.accepting())
-            .map(|(i, _)| GpuId(i))
-            .collect()
-    }
-
-    fn snapshot(&self) -> Snapshot {
-        let c = &self.cfg.controller;
-        let prefill_pool = self.pool(Role::Prefill);
-        let decode_pool = self.pool(Role::Decode);
-        let prefill_queue: usize = self.gpus.iter().map(|g| g.pf_queue.len()).sum::<usize>()
-            + self.gpus.iter().map(|g| g.co_queue.len()).sum::<usize>();
-        let decode_queue: usize = self.gpus.iter().map(|g| g.dec_pending.len()).sum();
-        // MovePower(D->P) is exhausted when prefill caps hit MAX or decode
-        // caps hit MIN.
-        let prefill_power_saturated = prefill_pool
-            .iter()
-            .all(|&g| self.power.target(g) >= c.max_gpu_w - 1.0)
-            || decode_pool
-                .iter()
-                .all(|&g| self.power.target(g) <= c.min_gpu_w + 1.0)
-            || prefill_pool.is_empty()
-            || decode_pool.is_empty();
-        // MovePower(P->D) is exhausted when decode caps hit their ceiling
-        // (decode gains nothing above the knee) or prefill caps hit MIN.
-        let decode_power_saturated = decode_pool
-            .iter()
-            .all(|&g| self.power.target(g) >= c.decode_ceiling_w - 1.0)
-            || prefill_pool
-                .iter()
-                .all(|&g| self.power.target(g) <= c.min_gpu_w + 1.0)
-            || prefill_pool.is_empty()
-            || decode_pool.is_empty();
-        Snapshot {
-            now: self.now,
-            prefill_queue,
-            decode_queue,
-            prefill_gpus: self
-                .gpus
-                .iter()
-                .filter(|g| g.committed_role() == Role::Prefill)
-                .count(),
-            decode_gpus: self
-                .gpus
-                .iter()
-                .filter(|g| g.committed_role() == Role::Decode)
-                .count(),
-            prefill_power_saturated,
-            decode_power_saturated,
-        }
-    }
-
-    fn execute(&mut self, action: Action) {
-        match action {
-            Action::MovePower { from } => {
-                let to = if from == Role::Decode {
-                    Role::Prefill
-                } else {
-                    Role::Decode
-                };
-                let sources = self.pool(from);
-                let sinks = self.pool(to);
-                if sources.is_empty() || sinks.is_empty() {
-                    return;
-                }
-                let ceiling = if to == Role::Decode {
-                    self.cfg.controller.decode_ceiling_w
-                } else {
-                    self.cfg.controller.max_gpu_w
-                };
-                let total = self.cfg.controller.power_step_w * sources.len() as f64;
-                match self.power.move_power(self.now, &sources, &sinks, total, ceiling) {
-                    Ok(mv) => {
-                        self.decisions.push((
-                            self.now,
-                            format!("MovePower {from}->{to}: {:?}", mv.raised),
-                        ));
-                        self.events.push(mv.effective_at, Event::PowerPoll);
-                    }
-                    Err(e) => {
-                        self.decisions
-                            .push((self.now, format!("MovePower {from}->{to} failed: {e}")));
-                    }
-                }
-            }
-            Action::MoveGpu { from } => {
-                let to = if from == Role::Decode {
-                    Role::Prefill
-                } else {
-                    Role::Decode
-                };
-                // Donor: least-loaded accepting GPU of the source role,
-                // keeping >= 1 GPU in the source pool.
-                let pool = self.pool(from);
-                if pool.len() <= 1 {
-                    return;
-                }
-                let donor = *pool
-                    .iter()
-                    .min_by_key(|&&g| {
-                        let gpu = &self.gpus[g.0];
-                        match from {
-                            Role::Prefill => gpu.pf_queued_tokens as usize,
-                            _ => gpu.decode_load(),
-                        }
-                    })
-                    .unwrap();
-                self.decisions
-                    .push((self.now, format!("MoveGpu {donor} {from}->{to}")));
-                self.begin_drain(donor.0, to);
-                // Paper line 14: uniform power across all GPUs after a
-                // role change.
-                let settle = self.power.distribute_uniform(self.now);
-                self.events.push(settle, Event::PowerPoll);
-                self.record_roles();
-            }
-        }
-    }
-
-    fn begin_drain(&mut self, gi: usize, to: Role) {
-        {
-            let g = &mut self.gpus[gi];
-            if g.draining_to.is_some() {
-                return;
-            }
-            g.draining_to = Some(to);
-        }
-        // Re-route queued (not yet running) work to peers.
-        let queued: Vec<Request> = {
-            let g = &mut self.gpus[gi];
-            let drained: Vec<Request> = g.pf_queue.drain(..).collect();
-            g.pf_queued_tokens = 0;
-            drained
-        };
-        for r in queued {
-            self.route_prefill(r);
-        }
-        let pending: Vec<DecodeItem> = self.gpus[gi].dec_pending.drain(..).collect();
-        for item in pending {
-            // Send to the least-loaded other decode GPU (KV re-transfer
-            // is charged: the cache must move with the request).
-            let loads: Vec<WorkerLoad> = self
-                .gpus
-                .iter()
-                .enumerate()
-                .filter(|(i, g)| *i != gi && g.role == Role::Decode)
-                .map(|(i, g)| WorkerLoad {
-                    gpu: GpuId(i),
-                    queued_tokens: 0,
-                    requests: g.decode_load(),
-                    accepting: g.accepting(),
-                })
-                .collect();
-            if let Some(target) = router::pick_decode(&loads) {
-                let t = self.model.kv_transfer_time(item.req.input_tokens);
-                self.events
-                    .push(self.now + t, Event::KvArrive { gpu: target.0, item });
-                self.ring_used += 1; // re-transfer occupies a slot
-            } else {
-                // No other decode GPU: keep it; it finishes before the flip.
-                self.gpus[gi].dec_pending.push_back(item);
-            }
-        }
-        self.maybe_finish_drain(gi);
-    }
-
-    fn maybe_finish_drain(&mut self, gi: usize) {
-        let g = &self.gpus[gi];
-        if g.draining_to.is_some() && g.drained() {
-            let epoch = g.epoch;
-            self.events.push(
-                self.now + self.cfg.controller.gpu_move_overhead,
-                Event::DrainDone { gpu: gi, epoch },
-            );
-        }
-    }
-
-    fn on_drain_done(&mut self, gi: usize, epoch: u64) {
-        let g = &mut self.gpus[gi];
-        if g.epoch != epoch || g.draining_to.is_none() {
-            return;
-        }
-        g.role = g.draining_to.take().unwrap();
-        g.epoch += 1;
-        g.busy = false;
-        self.record_roles();
-        match self.gpus[gi].role {
-            Role::Prefill => self.kick_prefill(gi),
-            Role::Decode => self.kick_decode(gi),
-            Role::Coalesced => self.kick_coalesced(gi),
-        }
-        // Rebalance: peers may hold queued work this GPU could take; the
-        // router only balances new arrivals, so steal half the longest
-        // peer queue (cheap work-stealing on role flips).
-        if self.gpus[gi].role == Role::Prefill {
-            self.steal_prefill_work(gi);
-        }
-    }
-
-    fn steal_prefill_work(&mut self, gi: usize) {
-        let Some(victim) = (0..self.gpus.len())
-            .filter(|&i| i != gi && self.gpus[i].role == Role::Prefill)
-            .max_by_key(|&i| self.gpus[i].pf_queued_tokens)
-        else {
-            return;
-        };
-        let steal_n = self.gpus[victim].pf_queue.len() / 2;
-        for _ in 0..steal_n {
-            if let Some(r) = self.gpus[victim].pf_queue.pop_back() {
-                self.gpus[victim].pf_queued_tokens -= r.input_tokens as u64;
-                self.gpus[gi].push_prefill(r);
-            }
-        }
-        self.kick_prefill(gi);
-    }
-
-    fn on_power_poll(&mut self) {
-        let applied = self.power.poll(self.now);
-        if !applied.is_empty() {
-            self.cap_trace.push((self.now, self.power.targets()));
-        }
-        if let Some(at) = self.power.next_pending_at() {
-            self.events.push(at, Event::PowerPoll);
-        }
-    }
-
-    fn on_sample(&mut self) {
-        let dt = (self.now - self.last_sample_at) as f64;
-        self.last_sample_at = self.now;
-        let mut node = 0.0;
-        for (i, g) in self.gpus.iter().enumerate() {
-            let cap = self.power.effective(GpuId(i), self.now);
-            let is_prefill_like = matches!(g.role, Role::Prefill | Role::Coalesced);
-            let mut mean_draw = self.model.draw(cap, g.util(), is_prefill_like);
-            // Host-side iteration gaps (scheduling, sampling,
-            // detokenization) idle the GPU between iterations; a 10 ms
-            // meter catches them as deep dips (paper Fig 3's burstiness).
-            if g.busy && self.sample_rng.chance(0.12) {
-                mean_draw = self.model.idle_w() + 0.18 * (mean_draw - self.model.idle_w());
-            }
-            // Microburst variation around the mean draw (per-kernel power
-            // phases under a 10 ms meter).
-            let jitter = 1.0 + 0.08 * self.sample_rng.normal();
-            node += (mean_draw * jitter).clamp(self.model.idle_w(), cap);
-        }
-        self.node_power.push(self.now, node);
-        self.provisioned_integral += self.power.targets().iter().sum::<f64>() * dt;
-        self.cap_trace.push((self.now, self.power.targets()));
-        self.events
-            .push(self.now + self.opts.sample_period, Event::Sample);
-    }
-
-    fn record_roles(&mut self) {
-        let p = self
-            .gpus
-            .iter()
-            .filter(|g| g.committed_role() == Role::Prefill)
-            .count();
-        let d = self
-            .gpus
-            .iter()
-            .filter(|g| g.committed_role() == Role::Decode)
-            .count();
-        self.role_trace.push((self.now, p, d));
-    }
-
-    fn finish(mut self, total_submitted: usize) -> RunResult {
-        let duration = self.now.max(1);
-        let mean_provisioned_w = if duration > 0 {
-            self.provisioned_integral / duration as f64
-        } else {
-            0.0
-        };
-        // Unfinished requests are recorded as violations (never completed):
-        // give them "infinite" latency records so attainment counts them.
-        let completed: std::collections::HashSet<u64> =
-            self.records.iter().map(|r| r.id.0).collect();
-        for req in &self.trace[..self.next_arrival] {
-            if !completed.contains(&req.id.0) {
-                self.records.push(RequestRecord {
-                    id: req.id,
-                    arrival: req.arrival,
-                    prefill_start: self.now,
-                    first_token: self.now + 3600 * SECOND,
-                    finish: self.now + 7200 * SECOND,
-                    input_tokens: req.input_tokens,
-                    output_tokens: req.output_tokens,
-                    slo: req.slo,
-                });
-            }
-        }
-        let _ = total_submitted;
-        RunResult {
-            config_name: self.cfg.name.clone(),
-            records: self.records,
-            node_power: self.node_power,
-            cap_trace: self.cap_trace,
-            role_trace: self.role_trace,
-            decisions: self.decisions,
-            duration,
-            mean_provisioned_w,
-        }
-    }
+    crate::cluster::Cluster::new(cfg.clone(), trace.clone(), opts.clone()).run()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::presets;
-    use crate::types::{RequestId, Slo, MILLIS};
+    use crate::types::{Request, RequestId, Slo, MILLIS};
     use crate::util::rng::Rng;
     use crate::workload::{build_trace, sonnet::Sonnet, ArrivalProcess};
 
@@ -1048,6 +149,24 @@ mod tests {
         let trace = small_trace(200, 20.0, 6000, 16);
         let r = run(&cfg, &trace, &SimOptions::default());
         assert!(r.decisions.is_empty());
+    }
+
+    #[test]
+    fn power_only_policy_shifts_power_without_gpu_moves() {
+        let cfg = presets::power_only_600();
+        // Prefill-heavy overload: the ablation policy must move power
+        // toward prefill but never reassign GPUs.
+        let trace = small_trace(400, 20.0, 6000, 16);
+        let r = run(&cfg, &trace, &SimOptions::default());
+        assert!(
+            r.decisions.iter().any(|(_, d)| d.contains("MovePower")),
+            "power-only should act under pressure: {:?}",
+            &r.decisions[..r.decisions.len().min(5)]
+        );
+        assert!(
+            r.decisions.iter().all(|(_, d)| !d.contains("MoveGpu")),
+            "power-only must never move GPUs"
+        );
     }
 
     #[test]

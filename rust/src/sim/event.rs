@@ -33,15 +33,14 @@ impl DecodeItem {
 pub enum Event {
     /// Next trace arrival is due.
     Arrival,
-    /// A prefill batch finished on `gpu`.
-    PrefillDone { gpu: usize, epoch: u64 },
-    /// One decode iteration finished on `gpu`.
-    DecodeStep { gpu: usize, epoch: u64 },
-    /// One coalesced (chunked-prefill) iteration finished on `gpu`.
-    CoalescedStep { gpu: usize, epoch: u64 },
-    /// A KV transfer landed on decode `gpu`.
-    KvArrive { gpu: usize, item: DecodeItem },
-    /// Algorithm-1 tick.
+    /// The in-flight work unit on `gpu` finished (a prefill batch, a
+    /// decode iteration or a coalesced chunked-prefill iteration — the
+    /// GPU's current role behavior interprets it; see `sim::worker`).
+    StepDone { gpu: usize, epoch: u64 },
+    /// A KV transfer landed on decode `gpu`; `src_node` owns the ring
+    /// slot being released.
+    KvArrive { gpu: usize, src_node: usize, item: DecodeItem },
+    /// Controller (policy) tick.
     ControllerTick,
     /// Pending power raises may be due.
     PowerPoll,
@@ -134,12 +133,12 @@ mod tests {
     #[test]
     fn ties_pop_fifo() {
         let mut q = EventQueue::new();
-        q.push(5, Event::PrefillDone { gpu: 1, epoch: 0 });
-        q.push(5, Event::PrefillDone { gpu: 2, epoch: 0 });
-        q.push(5, Event::PrefillDone { gpu: 3, epoch: 0 });
+        q.push(5, Event::StepDone { gpu: 1, epoch: 0 });
+        q.push(5, Event::StepDone { gpu: 2, epoch: 0 });
+        q.push(5, Event::StepDone { gpu: 3, epoch: 0 });
         let order: Vec<usize> = (0..3)
             .map(|_| match q.pop().unwrap().1 {
-                Event::PrefillDone { gpu, .. } => gpu,
+                Event::StepDone { gpu, .. } => gpu,
                 _ => unreachable!(),
             })
             .collect();

@@ -1,7 +1,11 @@
-//! Discrete-event simulation of the GPU node (the testbed substitute).
+//! Discrete-event simulation of the GPU cluster (the testbed
+//! substitute). The event-loop core lives in [`crate::cluster`]; this
+//! module holds the per-GPU state, role behaviors, event machinery and
+//! the `run` façade.
 
 pub mod engine;
 pub mod event;
 pub mod gpu;
+pub mod worker;
 
 pub use engine::{run, SimOptions};

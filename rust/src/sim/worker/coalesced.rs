@@ -1,0 +1,156 @@
+//! Coalesced worker behavior: Sarathi-style chunked prefill co-scheduled
+//! with the resident decode batch — the vLLM baseline the paper
+//! disaggregates away from.
+
+use std::collections::VecDeque;
+
+use crate::cluster::Cluster;
+use crate::coordinator::batcher::{self, ChunkProgress};
+use crate::sim::event::{DecodeItem, Event};
+use crate::sim::gpu::ChunkMeta;
+use crate::sim::worker::RoleBehavior;
+use crate::types::{GpuId, Role};
+
+pub struct CoalescedBehavior;
+
+impl RoleBehavior for CoalescedBehavior {
+    fn role(&self) -> Role {
+        Role::Coalesced
+    }
+
+    fn kick(&self, cl: &mut Cluster, gi: usize) {
+        cl.kick_coalesced(gi);
+    }
+
+    fn on_step_done(&self, cl: &mut Cluster, gi: usize, epoch: u64) {
+        cl.on_coalesced_step(gi, epoch);
+    }
+}
+
+impl Cluster {
+    pub(crate) fn kick_coalesced(&mut self, gi: usize) {
+        let chunk_budget = self.cfg.perf.chunk_tokens;
+        let g = &mut self.gpus[gi];
+        if g.busy || g.role != Role::Coalesced {
+            return;
+        }
+        if g.co_queue.is_empty() && g.dec_active.is_empty() && g.dec_pending.is_empty() {
+            return;
+        }
+        // Admit locally-finished prefills (they sit in dec_pending).
+        let n = batcher::decode_admissions(
+            g.dec_active.len(),
+            g.dec_pending.len(),
+            &self.cfg.batch,
+        );
+        for _ in 0..n {
+            let item = g.dec_pending.pop_front().unwrap();
+            g.dec_active.push(item);
+        }
+        // Take the next prefill chunk (if any prompt is queued).
+        let mut done_before = 0u32;
+        if let Some(head) = g.co_queue.front_mut() {
+            if head.started.is_none() {
+                head.started = Some(self.now);
+            }
+            done_before = head.prog.done_tokens;
+        }
+        let mut queue = std::mem::take(&mut g.co_queue);
+        // Mark start times for any prompt the chunk reaches.
+        let (used, finished_reqs) = {
+            let mut progs: VecDeque<ChunkProgress> =
+                queue.iter().map(|c| c.prog.clone()).collect();
+            let r = batcher::take_chunk(&mut progs, chunk_budget);
+            // Write back progress into the metas that remain.
+            let consumed = queue.len() - progs.len();
+            let finished_meta: Vec<ChunkMeta> = queue.drain(..consumed).collect();
+            for (meta, prog) in queue.iter_mut().zip(progs.iter()) {
+                meta.prog = prog.clone();
+                if meta.prog.done_tokens > 0 && meta.started.is_none() {
+                    meta.started = Some(self.now);
+                }
+            }
+            let mut finished = Vec::new();
+            for meta in finished_meta {
+                finished.push((meta.prog.request.clone(), meta.started.unwrap_or(self.now)));
+            }
+            (r.0, finished)
+        };
+        g.co_queue = queue;
+        g.co_finishing = finished_reqs;
+        g.co_step_chunk = used;
+        if used == 0 && g.dec_active.is_empty() {
+            return; // nothing to do this iteration
+        }
+        g.busy = true;
+        let batch = g.dec_active.len();
+        let ctx = g.mean_ctx();
+        let power = self.power.effective(GpuId(gi), self.now);
+        let t = self
+            .model
+            .coalesced_step_time(used, done_before, batch, ctx, power);
+        self.gpus[gi].dec_step_time = t;
+        let epoch = self.gpus[gi].epoch;
+        self.events
+            .push(self.now + t, Event::StepDone { gpu: gi, epoch });
+    }
+
+    pub(crate) fn on_coalesced_step(&mut self, gi: usize, epoch: u64) {
+        if self.gpus[gi].epoch != epoch {
+            return;
+        }
+        let step = self.gpus[gi].dec_step_time;
+        self.gpus[gi].busy = false;
+        // Prefill completions: first token now; join local decode.
+        let finishing = std::mem::take(&mut self.gpus[gi].co_finishing);
+        let dynamic = self.policy.is_dynamic();
+        for (req, started) in finishing {
+            if dynamic {
+                let ratio = (self.now - req.arrival) as f64 / req.slo.ttft as f64;
+                self.policy.observe_ttft(self.now, ratio);
+            }
+            if req.output_tokens <= 1 {
+                let now = self.now;
+                self.push_record(&req, started, now, now);
+                continue;
+            }
+            self.gpus[gi].dec_pending.push_back(DecodeItem {
+                req,
+                prefill_start: started,
+                first_token: self.now,
+                tokens_done: 1,
+            });
+        }
+        // Decode completions.
+        let mut ratio_sum = 0.0;
+        let mut finished: Vec<DecodeItem> = Vec::new();
+        let mut tpot_sample = None;
+        {
+            let g = &mut self.gpus[gi];
+            let mut idx = 0;
+            while idx < g.dec_active.len() {
+                g.dec_active[idx].tokens_done += 1;
+                ratio_sum += step as f64 / g.dec_active[idx].req.slo.tpot as f64;
+                if g.dec_active[idx].remaining() == 0 {
+                    finished.push(g.dec_active.swap_remove(idx));
+                } else {
+                    idx += 1;
+                }
+            }
+            let n = g.dec_active.len() + finished.len();
+            if n > 0 {
+                tpot_sample = Some(ratio_sum / n as f64);
+            }
+        }
+        if dynamic {
+            if let Some(ratio) = tpot_sample {
+                self.policy.observe_tpot(self.now, ratio);
+            }
+        }
+        for item in finished {
+            let now = self.now;
+            self.push_record(&item.req, item.prefill_start, item.first_token, now);
+        }
+        self.kick_coalesced(gi);
+    }
+}

@@ -1,0 +1,112 @@
+//! Decode worker behavior: continuous batching with admissions at step
+//! boundaries, plus KV-arrival ingestion (paper §3.2).
+
+use crate::cluster::Cluster;
+use crate::coordinator::batcher;
+use crate::sim::event::{DecodeItem, Event};
+use crate::sim::worker::RoleBehavior;
+use crate::types::{GpuId, Role};
+
+pub struct DecodeBehavior;
+
+impl RoleBehavior for DecodeBehavior {
+    fn role(&self) -> Role {
+        Role::Decode
+    }
+
+    fn kick(&self, cl: &mut Cluster, gi: usize) {
+        cl.kick_decode(gi);
+    }
+
+    fn on_step_done(&self, cl: &mut Cluster, gi: usize, epoch: u64) {
+        cl.on_decode_step(gi, epoch);
+    }
+}
+
+impl Cluster {
+    /// A KV transfer landed: ingest, release the producing node's ring
+    /// slot, and let stalled prefill GPUs publish again.
+    pub(crate) fn on_kv_arrive(&mut self, gi: usize, src_node: usize, item: DecodeItem) {
+        self.ring_used[src_node] = self.ring_used[src_node].saturating_sub(1);
+        self.gpus[gi].dec_pending.push_back(item);
+        // A slot freed: stalled prefill GPUs may publish now.
+        for i in 0..self.gpus.len() {
+            if !self.gpus[i].publish_wait.is_empty() {
+                self.try_publish(i);
+                self.kick_prefill(i);
+            }
+        }
+        self.kick_decode(gi);
+    }
+
+    pub(crate) fn kick_decode(&mut self, gi: usize) {
+        let g = &mut self.gpus[gi];
+        if g.busy || g.role != Role::Decode {
+            return;
+        }
+        // Admissions at step boundaries (continuous batching). Draining
+        // GPUs stop admitting.
+        if g.accepting() {
+            let n = batcher::decode_admissions(
+                g.dec_active.len(),
+                g.dec_pending.len(),
+                &self.cfg.batch,
+            );
+            for _ in 0..n {
+                let item = g.dec_pending.pop_front().unwrap();
+                g.dec_active.push(item);
+            }
+        }
+        if g.dec_active.is_empty() {
+            return;
+        }
+        g.busy = true;
+        let batch = g.dec_active.len();
+        let ctx = g.mean_ctx();
+        let power = self.power.effective(GpuId(gi), self.now);
+        let t = self.model.decode_step_time(batch, ctx, power);
+        self.gpus[gi].dec_step_time = t;
+        let epoch = self.gpus[gi].epoch;
+        self.events.push(self.now + t, Event::StepDone { gpu: gi, epoch });
+    }
+
+    pub(crate) fn on_decode_step(&mut self, gi: usize, epoch: u64) {
+        if self.gpus[gi].epoch != epoch {
+            return;
+        }
+        let step = self.gpus[gi].dec_step_time;
+        self.gpus[gi].busy = false;
+        let mut ratio_sum = 0.0;
+        let mut finished: Vec<DecodeItem> = Vec::new();
+        let mut tpot_sample = None;
+        {
+            let g = &mut self.gpus[gi];
+            let mut idx = 0;
+            while idx < g.dec_active.len() {
+                g.dec_active[idx].tokens_done += 1;
+                ratio_sum += step as f64 / g.dec_active[idx].req.slo.tpot as f64;
+                if g.dec_active[idx].remaining() == 0 {
+                    finished.push(g.dec_active.swap_remove(idx));
+                } else {
+                    idx += 1;
+                }
+            }
+            let n = g.dec_active.len() + finished.len();
+            if n > 0 {
+                // One TPOT sample per step: the batch-mean SLO ratio.
+                tpot_sample = Some(ratio_sum / n as f64);
+            }
+        }
+        if self.policy.is_dynamic() {
+            if let Some(ratio) = tpot_sample {
+                self.policy.observe_tpot(self.now, ratio);
+            }
+        }
+        for item in finished {
+            let now = self.now;
+            self.push_record(&item.req, item.prefill_start, item.first_token, now);
+        }
+        self.maybe_finish_drain(gi);
+        self.kick_decode(gi);
+    }
+}

@@ -1,0 +1,58 @@
+//! Per-role worker behavior over [`GpuSim`](crate::sim::gpu::GpuSim).
+//!
+//! The prefill / decode / coalesced step logic that used to be inlined in
+//! the `sim::engine` monolith (`kick_*` / `on_*`) now lives behind the
+//! [`RoleBehavior`] trait, one implementation per [`Role`]:
+//!
+//! * [`prefill::PrefillBehavior`] — FIFO batch formation under the token
+//!   budget, ring-slot backpressure, publish into the KV ring;
+//! * [`decode::DecodeBehavior`] — continuous batching with admissions at
+//!   step boundaries;
+//! * [`coalesced::CoalescedBehavior`] — Sarathi-style chunked prefill
+//!   co-scheduled with the resident decode batch (the vLLM baseline).
+//!
+//! The cluster core dispatches `StepDone` events through
+//! [`behavior`]; role switches are epoch-guarded, so a completion that
+//! raced a role change is dropped inside `on_step_done`.
+
+pub mod coalesced;
+pub mod decode;
+pub mod prefill;
+
+use crate::cluster::Cluster;
+use crate::types::Role;
+
+/// One role's step behavior. Implementations are stateless unit structs:
+/// all state lives in the [`GpuSim`](crate::sim::gpu::GpuSim) entries of
+/// the cluster, which is what makes role flips cheap.
+pub trait RoleBehavior: Sync {
+    /// The role this behavior drives.
+    fn role(&self) -> Role;
+    /// Try to start the next unit of work on GPU `gi` (no-op if busy,
+    /// mid-drain into another role, or out of work).
+    fn kick(&self, cl: &mut Cluster, gi: usize);
+    /// Handle completion of the in-flight unit on GPU `gi`. Stale
+    /// completions (epoch mismatch after a role change) are dropped.
+    fn on_step_done(&self, cl: &mut Cluster, gi: usize, epoch: u64);
+}
+
+/// The behavior driving `role`.
+pub fn behavior(role: Role) -> &'static dyn RoleBehavior {
+    match role {
+        Role::Prefill => &prefill::PrefillBehavior,
+        Role::Decode => &decode::DecodeBehavior,
+        Role::Coalesced => &coalesced::CoalescedBehavior,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn behavior_matches_role() {
+        for role in [Role::Prefill, Role::Decode, Role::Coalesced] {
+            assert_eq!(behavior(role).role(), role);
+        }
+    }
+}

@@ -1,0 +1,117 @@
+//! Prefill worker behavior: FIFO batch formation under the token budget,
+//! KV-ring backpressure, and publish into the decode pool (paper §3.2).
+
+use crate::cluster::Cluster;
+use crate::coordinator::{batcher, router};
+use crate::sim::event::{DecodeItem, Event};
+use crate::sim::worker::RoleBehavior;
+use crate::types::{GpuId, Role};
+
+pub struct PrefillBehavior;
+
+impl RoleBehavior for PrefillBehavior {
+    fn role(&self) -> Role {
+        Role::Prefill
+    }
+
+    fn kick(&self, cl: &mut Cluster, gi: usize) {
+        cl.kick_prefill(gi);
+    }
+
+    fn on_step_done(&self, cl: &mut Cluster, gi: usize, epoch: u64) {
+        cl.on_prefill_done(gi, epoch);
+    }
+}
+
+impl Cluster {
+    pub(crate) fn kick_prefill(&mut self, gi: usize) {
+        let ring_free = self.ring_free(self.node_of(gi));
+        let g = &mut self.gpus[gi];
+        if g.busy || g.role != Role::Prefill || g.pf_queue.is_empty() {
+            return;
+        }
+        // Backpressure: wait for ring slots before starting a new batch
+        // (the paper's prefill stall when decode cannot drain).
+        if !g.publish_wait.is_empty() || ring_free == 0 {
+            return;
+        }
+        let batch = batcher::form_prefill_batch(&mut g.pf_queue, &self.cfg.batch);
+        if batch.requests.is_empty() {
+            return;
+        }
+        g.pop_prefill_tokens(batch.total_tokens as u64);
+        g.pf_batch = batch
+            .requests
+            .into_iter()
+            .map(|r| (r, self.now))
+            .collect();
+        g.busy = true;
+        let power = self.power.effective(GpuId(gi), self.now);
+        let t = self.model.prefill_batch_time(batch.total_tokens, power);
+        let epoch = g.epoch;
+        self.events.push(self.now + t, Event::StepDone { gpu: gi, epoch });
+    }
+
+    pub(crate) fn on_prefill_done(&mut self, gi: usize, epoch: u64) {
+        if self.gpus[gi].epoch != epoch {
+            return; // stale (role changed mid-flight)
+        }
+        self.gpus[gi].busy = false;
+        let batch = std::mem::take(&mut self.gpus[gi].pf_batch);
+        let dynamic = self.policy.is_dynamic();
+        for (req, prefill_start) in batch {
+            if dynamic {
+                let ratio = (self.now - req.arrival) as f64 / req.slo.ttft as f64;
+                self.policy.observe_ttft(self.now, ratio);
+            }
+            if req.output_tokens <= 1 {
+                // Single-token request: done at prefill.
+                let now = self.now;
+                self.push_record(&req, prefill_start, now, now);
+                continue;
+            }
+            let item = DecodeItem {
+                req,
+                prefill_start,
+                first_token: self.now,
+                tokens_done: 1,
+            };
+            self.gpus[gi].publish_wait.push_back(item);
+        }
+        self.try_publish(gi);
+        // Drain handling: if this GPU is switching roles and is now empty,
+        // the switch can proceed.
+        self.maybe_finish_drain(gi);
+        self.kick_prefill(gi);
+    }
+
+    /// Push completed prefills into the KV ring as capacity allows,
+    /// routing each to a decode worker with same-node preference (a
+    /// cross-node target pays the slower RDMA hop).
+    pub(crate) fn try_publish(&mut self, gi: usize) {
+        let src_node = self.node_of(gi);
+        while self.ring_used[src_node] < self.cfg.batch.ring_slots {
+            let Some(item) = self.gpus[gi].publish_wait.pop_front() else {
+                break;
+            };
+            let loads = self.decode_loads_excluding(None);
+            let target = router::pick_decode_prefer_node(&loads, src_node)
+                .or_else(|| {
+                    self.gpus
+                        .iter()
+                        .position(|g| g.committed_role() == Role::Decode)
+                        .map(GpuId)
+                })
+                .expect("at least one decode-committed GPU");
+            self.ring_used[src_node] += 1;
+            let same_node = self.node_of(target.0) == src_node;
+            let t = self
+                .model
+                .kv_transfer_time_between(item.req.input_tokens, same_node);
+            self.events.push(
+                self.now + t,
+                Event::KvArrive { gpu: target.0, src_node, item },
+            );
+        }
+    }
+}

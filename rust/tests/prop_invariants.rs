@@ -2,10 +2,11 @@
 //! in-repo property framework (`rapid::util::check`). Each property runs
 //! across randomized workloads, configurations and seeds.
 
-use rapid::config::{presets, ClusterConfig, ControlPolicy, Topology};
+use rapid::config::{presets, ClusterConfig, ControlPolicy, ControllerConfig, Topology};
+use rapid::coordinator::{Action, Controller, Snapshot};
 use rapid::power::PowerManager;
 use rapid::sim::{self, SimOptions};
-use rapid::types::{GpuId, Slo, MILLIS, SECOND};
+use rapid::types::{GpuId, Micros, Slo, MILLIS, SECOND};
 use rapid::util::check::{ensure, property, CaseResult, Gen};
 use rapid::workload::{build_trace, sonnet::Sonnet, ArrivalProcess, Trace};
 
@@ -212,6 +213,114 @@ fn prop_coalesced_and_disaggregated_complete_same_workload() {
             )?;
         }
         Ok(())
+    });
+}
+
+#[test]
+fn prop_alternating_pressure_never_oscillates_within_cooldown() {
+    // Paper §3.3's oscillation guard: even under worst-case alternating
+    // TTFT/TPOT pressure, the controller must never emit two consecutive
+    // *opposing* actions inside one cooldown window. (The implementation
+    // guarantees the stronger property — any two consecutive actions are
+    // at least `cooldown` apart — which we also check.)
+    property("cooldown oscillation guard", 40, |g| {
+        let mut cfg = ControllerConfig::default();
+        cfg.cooldown = g.u64_range(500, 6000) * MILLIS;
+        cfg.gpu_cooldown = cfg.cooldown.max(g.u64_range(500, 8000) * MILLIS);
+        cfg.queue_threshold = g.usize_range(0, 6);
+        let policy = *g.choice(&[
+            ControlPolicy::DynPower,
+            ControlPolicy::DynGpu,
+            ControlPolicy::DynPowerGpu,
+        ]);
+        let mut c = Controller::new(cfg.clone(), policy);
+        // Flip the pressure direction every `flip_every` ticks — chosen so
+        // several flips land inside a single cooldown window.
+        let tick = cfg.tick;
+        let flip_every = g.usize_range(1, 5);
+        let saturate = g.bool();
+        let mut actions: Vec<(Micros, Action)> = Vec::new();
+        for step in 1..=300usize {
+            let now = step as Micros * tick;
+            let ttft_phase = (step / flip_every) % 2 == 0;
+            for i in 0..4 {
+                let jitter = i as Micros;
+                if ttft_phase {
+                    c.observe_ttft(now - jitter, 1.7);
+                    c.observe_tpot(now - jitter, 0.3);
+                } else {
+                    c.observe_ttft(now - jitter, 0.3);
+                    c.observe_tpot(now - jitter, 1.7);
+                }
+            }
+            let snap = Snapshot {
+                now,
+                prefill_queue: 50, // always above the queue threshold
+                decode_queue: 10,
+                prefill_gpus: 4,
+                decode_gpus: 4,
+                prefill_power_saturated: saturate,
+                decode_power_saturated: saturate,
+            };
+            if let Some(a) = c.decide(&snap) {
+                actions.push((now, a));
+            }
+        }
+        let donor = |a: &Action| match a {
+            Action::MovePower { from } | Action::MoveGpu { from } => *from,
+        };
+        for w in actions.windows(2) {
+            let (t0, a0) = (w[0].0, &w[0].1);
+            let (t1, a1) = (w[1].0, &w[1].1);
+            let gap = t1 - t0;
+            ensure(
+                gap + MILLIS >= cfg.cooldown,
+                format!("consecutive actions {gap} us apart < cooldown {}", cfg.cooldown),
+            )?;
+            if donor(a0) != donor(a1) {
+                ensure(
+                    gap + MILLIS >= cfg.cooldown,
+                    format!(
+                        "opposing actions ({a0:?} then {a1:?}) only {gap} us apart \
+                         inside one cooldown window ({})",
+                        cfg.cooldown
+                    ),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_multi_node_budgets_hold_at_both_levels() {
+    property("hierarchical budget safety", 10, |g| {
+        let nodes = g.usize_range(2, 4);
+        let mut cfg = presets::scaled_to_nodes(presets::rapid_600(), nodes);
+        // Start below the per-node budget, then shave the cluster budget
+        // into [committed, node-sum) so the cluster cap genuinely binds.
+        cfg.prefill_cap_w = 500.0;
+        cfg.decode_cap_w = 500.0;
+        let node_sum = cfg.node_budget_w * nodes as f64;
+        let committed = cfg.total_initial_caps() * nodes as f64;
+        cfg.cluster_budget_w = Some(g.f64_range(committed, node_sum));
+        cfg.validate().map_err(|e| e.to_string())?;
+        let trace = random_trace(g, 150);
+        let res = sim::run(&cfg, &trace, &SimOptions::default());
+        for (nd, series) in res.node_power_by_node.iter().enumerate() {
+            ensure(
+                series.max() <= cfg.node_budget_w + 10.0,
+                format!("node {nd} peak {} > {}", series.max(), cfg.node_budget_w),
+            )?;
+        }
+        ensure(
+            res.node_power.max() <= cfg.cluster_budget() + 10.0,
+            format!(
+                "cluster peak {} > cluster budget {}",
+                res.node_power.max(),
+                cfg.cluster_budget()
+            ),
+        )
     });
 }
 

@@ -4,6 +4,8 @@
 //! bridge and the rust execution path to each other bit-for-bit at the
 //! argmax level.
 
+#![cfg(feature = "pjrt")]
+
 use rapid::runtime::Engine;
 use rapid::util::json::Json;
 

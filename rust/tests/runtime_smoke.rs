@@ -1,6 +1,7 @@
 //! Integration: load real artifacts, run prefill + decode chain on PJRT.
 //! Requires `make artifacts`; tests are skipped (pass trivially) if the
 //! artifact directory is absent so `cargo test` works pre-build.
+#![cfg(feature = "pjrt")]
 
 use rapid::runtime::{tokenizer, Engine};
 
