@@ -1,20 +1,26 @@
-//! Parallel sweep runner speedup: a 4-point Fig-5-style rate sweep run
-//! serially (RAPID_SWEEP_THREADS=1) vs fanned across all cores, with a
-//! bit-identical-results check (each sweep point derives everything from
+//! Parallel sweep runner speedup: a 4-point Fig-5-style rate Study run
+//! serially (explicit `threads = 1`) vs fanned across all cores, with a
+//! bit-identical-results check (each Study cell derives everything from
 //! its seed, so thread count must not change a single number).
 //!
 //! `cargo bench --bench sweep_parallel`
 //! Acceptance: >= 2x wall-clock speedup on a multi-core runner.
 
 use rapid::config::presets;
-use rapid::experiments::{rate_sweep, sweep_threads, RatePoint};
-use rapid::types::Slo;
+use rapid::experiments::sweep_threads;
+use rapid::scenario::{Axis, Scenario, Study, StudyResult};
 
 const RATES: &[f64] = &[0.75, 1.25, 1.75, 2.25];
 
-fn run_once(n: usize) -> Vec<RatePoint> {
-    let cfg = presets::p4_750_d4_450();
-    rate_sweep(&cfg, RATES, 42, n, Slo::paper_default())
+fn run_once(n: usize, threads: Option<usize>) -> StudyResult {
+    Study::new(
+        Scenario::new("sweep-parallel", presets::p4_750_d4_450())
+            .seed(42)
+            .requests(n)
+            .axis(Axis::RatePerGpu(RATES.to_vec())),
+    )
+    .run(threads)
+    .expect("bench scenario")
 }
 
 fn main() {
@@ -23,21 +29,19 @@ fn main() {
         .and_then(|s| s.parse().ok())
         .unwrap_or(1500);
 
-    std::env::set_var("RAPID_SWEEP_THREADS", "1");
     let t0 = std::time::Instant::now();
-    let serial = run_once(n);
+    let serial = run_once(n, Some(1));
     let t_serial = t0.elapsed().as_secs_f64();
 
-    std::env::remove_var("RAPID_SWEEP_THREADS");
     let cores = sweep_threads();
     let t1 = std::time::Instant::now();
-    let parallel = run_once(n);
+    let parallel = run_once(n, None);
     let t_parallel = t1.elapsed().as_secs_f64();
 
-    for (a, b) in serial.iter().zip(&parallel) {
-        assert_eq!(a.qps_per_gpu, b.qps_per_gpu);
-        assert_eq!(a.attainment, b.attainment, "thread count changed results!");
-        assert_eq!(a.goodput_qps, b.goodput_qps);
+    for (a, b) in serial.cells.iter().zip(&parallel.cells) {
+        assert_eq!(a.rate_per_gpu, b.rate_per_gpu);
+        assert_eq!(a.attainment(), b.attainment(), "thread count changed results!");
+        assert_eq!(a.goodput_qps(), b.goodput_qps());
     }
 
     let speedup = t_serial / t_parallel.max(1e-9);

@@ -36,6 +36,17 @@ pub enum ControlPolicy {
 }
 
 impl ControlPolicy {
+    /// Canonical config-file name (`control.policy`, scenario axes).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ControlPolicy::Static => "static",
+            ControlPolicy::DynPower => "dyn-power",
+            ControlPolicy::DynGpu => "dyn-gpu",
+            ControlPolicy::DynPowerGpu => "rapid",
+            ControlPolicy::PowerOnly => "power-only",
+        }
+    }
+
     pub fn moves_power(&self) -> bool {
         matches!(
             self,
@@ -47,6 +58,20 @@ impl ControlPolicy {
     }
     pub fn is_dynamic(&self) -> bool {
         !matches!(self, ControlPolicy::Static)
+    }
+}
+
+impl std::str::FromStr for ControlPolicy {
+    type Err = String;
+    fn from_str(s: &str) -> Result<ControlPolicy, String> {
+        match s {
+            "static" => Ok(ControlPolicy::Static),
+            "dyn-power" => Ok(ControlPolicy::DynPower),
+            "dyn-gpu" => Ok(ControlPolicy::DynGpu),
+            "rapid" | "dyn-power-gpu" => Ok(ControlPolicy::DynPowerGpu),
+            "power-only" => Ok(ControlPolicy::PowerOnly),
+            other => Err(format!("unknown policy '{other}'")),
+        }
     }
 }
 
@@ -447,16 +472,7 @@ fn apply_overrides(cfg: &mut ClusterConfig, doc: &Document) -> Result<(), Config
         (None, _) => {}
     }
     if let Some(policy) = doc.get_str("control.policy") {
-        cfg.control = match policy {
-            "static" => ControlPolicy::Static,
-            "dyn-power" => ControlPolicy::DynPower,
-            "dyn-gpu" => ControlPolicy::DynGpu,
-            "rapid" | "dyn-power-gpu" => ControlPolicy::DynPowerGpu,
-            "power-only" => ControlPolicy::PowerOnly,
-            other => {
-                return Err(ConfigError::Invalid(format!("unknown policy '{other}'")))
-            }
-        };
+        cfg.control = policy.parse().map_err(ConfigError::Invalid)?;
     }
     let c = &mut cfg.controller;
     if let Some(w) = get_watts(doc, "controller.min_gpu_w") {
@@ -543,23 +559,26 @@ pub mod presets {
         }
     }
 
+    /// Reparametrize any config to a uniform per-GPU cap `w` with the
+    /// node budget tracking it (`w × n_gpus`) — the §5.1 budget-sweep
+    /// axis shared by the presets and `scenario::Axis::PowerW`.
+    pub fn uniform_power(mut cfg: ClusterConfig, w: Watts) -> ClusterConfig {
+        cfg.prefill_cap_w = w;
+        cfg.decode_cap_w = w;
+        cfg.node_budget_w = w * cfg.n_gpus as f64;
+        cfg
+    }
+
     /// Coalesced-`{w}`W: vLLM chunked-prefill baseline, uniform caps.
     pub fn coalesced(w: Watts) -> ClusterConfig {
         let mut c = base(&format!("Coalesced-{}W", w as u32));
         c.topology = Topology::Coalesced;
-        c.prefill_cap_w = w;
-        c.decode_cap_w = w;
-        c.node_budget_w = w * 8.0;
-        c
+        uniform_power(c, w)
     }
 
     /// 4P4D-`{w}`W: uniform-power disaggregation.
     pub fn p4d4(w: Watts) -> ClusterConfig {
-        let mut c = base(&format!("4P4D-{}W", w as u32));
-        c.prefill_cap_w = w;
-        c.decode_cap_w = w;
-        c.node_budget_w = w * 8.0;
-        c
+        uniform_power(base(&format!("4P4D-{}W", w as u32)), w)
     }
 
     /// 5P3D-600W: shifting a GPU instead of power.

@@ -135,6 +135,10 @@ impl Document {
         self.get(path).and_then(Value::as_bool)
     }
 
+    pub fn get_array(&self, path: &str) -> Option<&[Value]> {
+        self.get(path).and_then(Value::as_array)
+    }
+
     /// All keys under a section prefix (for unknown-key validation).
     pub fn keys_under<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = &'a str> + 'a {
         self.entries.keys().filter_map(move |k| {
@@ -305,6 +309,10 @@ settle_ms = 300
         assert_eq!(a.len(), 4);
         assert_eq!(a[0].as_f64(), Some(750.0));
         assert_eq!(a[2].as_f64(), Some(450.5));
+        // Path-based accessor used by the scenario loader.
+        let doc = Document::parse("[axes]\nrate = [0.5, 1.0]").unwrap();
+        assert_eq!(doc.get_array("axes.rate").unwrap().len(), 2);
+        assert!(doc.get_array("axes.missing").is_none());
     }
 
     #[test]

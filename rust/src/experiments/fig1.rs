@@ -4,8 +4,8 @@
 //! dominate, especially at high request rates.
 
 use crate::config::{presets, ClusterConfig};
-use crate::experiments::{parallel_rate_sweeps, RatePoint, ShapeCheck};
-use crate::types::Slo;
+use crate::experiments::{RatePoint, ShapeCheck};
+use crate::scenario::{Axis, Scenario, Study};
 
 pub struct Fig1 {
     pub curves: Vec<(ClusterConfig, Vec<RatePoint>)>,
@@ -13,14 +13,24 @@ pub struct Fig1 {
 
 pub const RATES: &[f64] = &[0.25, 0.5, 0.75, 1.0, 1.25, 1.5, 1.75, 2.0];
 
+/// The declarative form of this figure: three config curves × the
+/// rate axis, LongBench at the paper SLO.
+pub fn scenario(seed: u64, n: usize) -> Scenario {
+    Scenario::new("fig1", presets::p4d4(600.0))
+        .seed(seed)
+        .requests(n)
+        .axis(Axis::Config(vec![
+            presets::p4d4(600.0),
+            presets::p5d3_600(),
+            presets::p4_750_d4_450(), // "[4P4D]-RAPID" in the figure
+        ]))
+        .axis(Axis::RatePerGpu(RATES.to_vec()))
+}
+
 pub fn run(seed: u64, n: usize) -> Fig1 {
-    let configs = vec![
-        presets::p4d4(600.0),
-        presets::p5d3_600(),
-        presets::p4_750_d4_450(), // "[4P4D]-RAPID" in the figure
-    ];
+    let study = Study::new(scenario(seed, n)).run(None).expect("fig1 scenario");
     Fig1 {
-        curves: parallel_rate_sweeps(configs, RATES, seed, n, Slo::paper_default()),
+        curves: study.rate_curves(),
     }
 }
 

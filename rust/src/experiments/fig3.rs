@@ -5,9 +5,9 @@
 //! under the 6000 W hardware limit) — power must be actively managed.
 
 use crate::config::presets;
-use crate::experiments::{longbench_trace, ShapeCheck};
-use crate::sim::{self, SimOptions};
-use crate::types::{Slo, MILLIS};
+use crate::experiments::ShapeCheck;
+use crate::scenario::{Scenario, Study};
+use crate::types::MILLIS;
 use crate::util::stats::TimeSeries;
 
 pub struct Fig3 {
@@ -19,14 +19,19 @@ pub struct Fig3 {
     pub peak_w: f64,
 }
 
+/// Single-cell scenario: the uncapped coalesced node at 1.5 QPS/GPU
+/// with the paper's 10 ms telemetry.
+pub fn scenario(seed: u64, n: usize) -> Scenario {
+    Scenario::new("fig3", presets::uncapped_coalesced())
+        .seed(seed)
+        .requests(n)
+        .rate(1.5)
+        .sample_period(10 * MILLIS)
+}
+
 pub fn run(seed: u64, n: usize) -> Fig3 {
-    let cfg = presets::uncapped_coalesced();
-    let trace = longbench_trace(seed, 1.5 * cfg.n_gpus as f64, n, Slo::paper_default());
-    let opts = SimOptions {
-        sample_period: 10 * MILLIS, // the paper's 10 ms telemetry
-        ..Default::default()
-    };
-    let result = sim::run(&cfg, &trace, &opts);
+    let study = Study::new(scenario(seed, n)).run(None).expect("fig3 scenario");
+    let result = study.cells[0].result().expect("sim cell");
     let rolling = result.node_power.rolling_mean(10 * MILLIS);
     let frac_above_budget = rolling.frac_above(4800.0);
     let peak_w = rolling.max();

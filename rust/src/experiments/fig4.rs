@@ -7,11 +7,15 @@
 //! ("performance results are relative to the P90 latencies of the 400 W
 //! configuration"), so (a) plots the speedup curves the scheduler
 //! exploits: prefill keeps gaining to ~700 W, decode flattens at ~600 W.
+//!
+//! Parts (a)/(b) are batch × power microbench grids declared through
+//! the Scenario/Study API (analytic power-model cells, no simulation);
+//! part (c) is a single cap-ramp transient, not a sweep.
 
-use crate::config::PerfModelConfig;
-use crate::power::capper::{CapState, RampProfile};
-use crate::power::PowerModel;
+use crate::config::presets;
 use crate::experiments::ShapeCheck;
+use crate::power::capper::{CapState, RampProfile};
+use crate::scenario::{Axis, Scenario, Study, StudyResult, WorkloadSpec};
 use crate::types::{Micros, MILLIS};
 
 pub const POWERS: &[f64] = &[400.0, 450.0, 500.0, 550.0, 600.0, 650.0, 700.0, 750.0];
@@ -30,30 +34,41 @@ pub struct Fig4 {
     pub settle_time: Micros,
 }
 
+/// Fig 4(a): prefill latency over the batch × power grid.
+pub fn scenario_prefill() -> Scenario {
+    Scenario::new("fig4a", presets::p4d4(600.0))
+        .workload(WorkloadSpec::PrefillMicrobench {
+            input_tokens: INPUT_TOKENS,
+        })
+        .axis(Axis::Batch(PREFILL_BATCHES.to_vec()))
+        .axis(Axis::PowerW(POWERS.to_vec()))
+}
+
+/// Fig 4(b): decode step latency over the batch × power grid.
+pub fn scenario_decode() -> Scenario {
+    Scenario::new("fig4b", presets::p4d4(600.0))
+        .workload(WorkloadSpec::DecodeMicrobench {
+            context_tokens: INPUT_TOKENS as f64,
+        })
+        .axis(Axis::Batch(DECODE_BATCHES.to_vec()))
+        .axis(Axis::PowerW(POWERS.to_vec()))
+}
+
+/// [batch][power] speedups vs the 400 W column (POWERS[0]).
+fn speedups(study: &StudyResult) -> Vec<Vec<f64>> {
+    study
+        .cells
+        .chunks(POWERS.len())
+        .map(|row| {
+            let t400 = row[0].value();
+            row.iter().map(|c| t400 / c.value()).collect()
+        })
+        .collect()
+}
+
 pub fn run() -> Fig4 {
-    let model = PowerModel::new(PerfModelConfig::default());
-    let prefill_speedup = PREFILL_BATCHES
-        .iter()
-        .map(|&b| {
-            let t400 = model.prefill_batch_time(INPUT_TOKENS * b as u32, 400.0);
-            POWERS
-                .iter()
-                .map(|&w| {
-                    t400 as f64 / model.prefill_batch_time(INPUT_TOKENS * b as u32, w) as f64
-                })
-                .collect()
-        })
-        .collect();
-    let decode_speedup = DECODE_BATCHES
-        .iter()
-        .map(|&b| {
-            let t400 = model.decode_step_time(b, INPUT_TOKENS as f64, 400.0);
-            POWERS
-                .iter()
-                .map(|&w| t400 as f64 / model.decode_step_time(b, INPUT_TOKENS as f64, w) as f64)
-                .collect()
-        })
-        .collect();
+    let prefill = Study::new(scenario_prefill()).run(None).expect("fig4a");
+    let decode = Study::new(scenario_decode()).run(None).expect("fig4b");
     // Fig 4c: 47% cut (750 -> ~400 W).
     let mut cap = CapState::new(750.0);
     let profile = RampProfile::default();
@@ -71,8 +86,8 @@ pub fn run() -> Fig4 {
         t += MILLIS;
     }
     Fig4 {
-        prefill_speedup,
-        decode_speedup,
+        prefill_speedup: speedups(&prefill),
+        decode_speedup: speedups(&decode),
         step_response,
         settle_time,
     }

@@ -9,7 +9,8 @@
 //!     allocation.
 
 use crate::config::{presets, ClusterConfig};
-use crate::experiments::{crossing_rate, parallel_rate_sweeps, RatePoint, ShapeCheck};
+use crate::experiments::{crossing_rate, RatePoint, ShapeCheck};
+use crate::scenario::{Axis, Scenario, Study};
 use crate::types::{Slo, MILLIS, SECOND};
 
 pub struct Fig5 {
@@ -37,15 +38,31 @@ fn configs_5b() -> Vec<ClusterConfig> {
     v
 }
 
-pub fn run(part_b: bool, seed: u64, n: usize) -> Fig5 {
+/// The declarative form: the part's config list × the rate axis under
+/// the part's SLO.
+pub fn scenario(part_b: bool, seed: u64, n: usize) -> Scenario {
     let slo = if part_b {
         Slo::new(SECOND, 25 * MILLIS)
     } else {
         Slo::paper_default()
     };
     let configs = if part_b { configs_5b() } else { configs_5a() };
-    let curves = parallel_rate_sweeps(configs, RATES, seed, n, slo);
-    Fig5 { slo, curves }
+    Scenario::new(if part_b { "fig5b" } else { "fig5a" }, presets::p4d4(600.0))
+        .seed(seed)
+        .requests(n)
+        .slo(slo)
+        .axis(Axis::Config(configs))
+        .axis(Axis::RatePerGpu(RATES.to_vec()))
+}
+
+pub fn run(part_b: bool, seed: u64, n: usize) -> Fig5 {
+    let s = scenario(part_b, seed, n);
+    let slo = s.slo;
+    let study = Study::new(s).run(None).expect("fig5 scenario");
+    Fig5 {
+        slo,
+        curves: study.rate_curves(),
+    }
 }
 
 impl Fig5 {

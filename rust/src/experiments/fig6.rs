@@ -6,8 +6,9 @@
 //! blows up.
 
 use crate::config::presets;
-use crate::experiments::{longbench_trace, run_config, ShapeCheck};
-use crate::types::{Micros, Slo, SECOND};
+use crate::experiments::ShapeCheck;
+use crate::scenario::{Axis, Scenario, Study};
+use crate::types::{Micros, SECOND};
 
 pub struct Fig6 {
     /// Per-time-bucket (t, mean queueing delay, mean exec time), uniform.
@@ -56,10 +57,22 @@ fn uncongested_exec(records: &[crate::types::RequestRecord]) -> f64 {
     xs.iter().sum::<f64>() / xs.len() as f64
 }
 
+/// Two config cells (uniform vs non-uniform) at the figure's one rate.
+pub fn scenario(seed: u64, n: usize) -> Scenario {
+    Scenario::new("fig6", presets::p4d4(600.0))
+        .seed(seed)
+        .requests(n)
+        .axis(Axis::Config(vec![
+            presets::p4d4(600.0),
+            presets::p4_750_d4_450(),
+        ]))
+        .axis(Axis::RatePerGpu(vec![1.5]))
+}
+
 pub fn run(seed: u64, n: usize) -> Fig6 {
-    let trace = longbench_trace(seed, 1.5 * 8.0, n, Slo::paper_default());
-    let uni = run_config(&presets::p4d4(600.0), &trace);
-    let non = run_config(&presets::p4_750_d4_450(), &trace);
+    let study = Study::new(scenario(seed, n)).run(None).expect("fig6 scenario");
+    let uni = study.cells[0].result().expect("sim cell");
+    let non = study.cells[1].result().expect("sim cell");
     let (qu, _eu) = uni.ttft_breakdown();
     let (qn, _en) = non.ttft_breakdown();
     Fig6 {

@@ -5,8 +5,8 @@
 //! beat the same-budget uniform configs throughout.
 
 use crate::config::{presets, ClusterConfig};
-use crate::experiments::{longbench_trace, parallel_map, run_config, ShapeCheck};
-use crate::types::Slo;
+use crate::experiments::ShapeCheck;
+use crate::scenario::{Axis, Scenario, Study};
 
 pub const SCALES: &[f64] = &[2.0, 1.5, 1.25, 1.0, 0.75, 0.5];
 pub const RATES: &[f64] = &[1.25, 1.375, 1.5];
@@ -25,22 +25,21 @@ fn configs() -> Vec<ClusterConfig> {
     ]
 }
 
+/// Three axes — rate × config × SLO scale — one flat grid fanned
+/// across cores (no barrier between curves).
+pub fn scenario(seed: u64, n: usize) -> Scenario {
+    Scenario::new("fig7", presets::p4d4(600.0))
+        .seed(seed)
+        .requests(n)
+        .axis(Axis::RatePerGpu(RATES.to_vec()))
+        .axis(Axis::Config(configs()))
+        .axis(Axis::SloScale(SCALES.to_vec()))
+}
+
 pub fn run(seed: u64, n: usize) -> Fig7 {
-    // One flat (rate, config, scale) job list fanned across cores.
+    let study = Study::new(scenario(seed, n)).run(None).expect("fig7 scenario");
     let cfgs = configs();
-    let jobs: Vec<(f64, usize, f64)> = RATES
-        .iter()
-        .flat_map(|&rate| {
-            (0..cfgs.len()).flat_map(move |ci| SCALES.iter().map(move |&s| (rate, ci, s)))
-        })
-        .collect();
-    let atts = parallel_map(&jobs, |&(rate, ci, s)| {
-        let cfg = &cfgs[ci];
-        let slo = Slo::paper_default().scaled(s);
-        let trace = longbench_trace(seed, rate * cfg.total_gpus() as f64, n, slo);
-        run_config(cfg, &trace).attainment()
-    });
-    let mut it = atts.into_iter();
+    let mut it = study.cells.iter().map(crate::scenario::Cell::attainment);
     let grids = RATES
         .iter()
         .map(|_| {

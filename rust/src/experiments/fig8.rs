@@ -10,9 +10,9 @@
 //! Plus the headline: RAPID ~2x the static uniform attainment at peak.
 
 use crate::config::{presets, ClusterConfig};
-use crate::experiments::{parallel_map, run_config, ShapeCheck};
+use crate::experiments::ShapeCheck;
 use crate::metrics::RunResult;
-use crate::workload::sonnet::{mixed_phases, MixedPhasesSpec};
+use crate::scenario::{Axis, Scenario, Study, WorkloadSpec};
 
 pub struct Fig8 {
     pub qps_per_gpu: f64,
@@ -30,23 +30,32 @@ fn configs() -> Vec<ClusterConfig> {
     ]
 }
 
+/// Six config cells over the mixed two-phase trace at one rate.
+///
+/// The paper runs this figure at its testbed's peak-load point; the
+/// substrate-equivalent default is `MixedPhasesSpec::default().rate_qps`.
+pub fn scenario(seed: u64, qps_per_gpu: f64, requests_per_phase: usize) -> Scenario {
+    Scenario::new("fig8", presets::p4d4(600.0))
+        .seed(seed)
+        .requests(2 * requests_per_phase)
+        .workload(WorkloadSpec::MixedPhases)
+        .rate(qps_per_gpu)
+        .axis(Axis::Config(configs()))
+}
+
 pub fn run(seed: u64, qps_per_gpu: f64, requests_per_phase: usize) -> Fig8 {
-    let spec = MixedPhasesSpec {
-        prefill_heavy_count: requests_per_phase,
-        decode_heavy_count: requests_per_phase,
-        rate_qps: qps_per_gpu * 8.0,
-        ..Default::default()
-    };
-    // The paper runs this figure at its testbed's peak-load point; the
-    // substrate-equivalent default is MixedPhasesSpec::default().rate_qps.
-    let trace = mixed_phases(seed, spec);
-    let cfgs = configs();
-    let results = parallel_map(&cfgs, |cfg| run_config(cfg, &trace));
-    let rows = cfgs.into_iter().zip(results).collect();
-    Fig8 {
-        qps_per_gpu,
-        rows,
-    }
+    let study = Study::new(scenario(seed, qps_per_gpu, requests_per_phase))
+        .run(None)
+        .expect("fig8 scenario");
+    let rows = study
+        .cells
+        .into_iter()
+        .map(|c| {
+            let cfg = c.config.clone();
+            (cfg, c.into_result().expect("sim cell"))
+        })
+        .collect();
+    Fig8 { qps_per_gpu, rows }
 }
 
 impl Fig8 {

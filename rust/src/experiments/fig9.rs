@@ -9,10 +9,11 @@
 //!   ⑤ decode-heavy steady state: most GPUs on decode, uniform caps.
 
 use crate::config::{presets, ClusterConfig};
-use crate::experiments::{parallel_map, run_config, ShapeCheck};
+use crate::experiments::ShapeCheck;
 use crate::metrics::RunResult;
+use crate::scenario::{mixed_phases_trace, Axis, Scenario, Study, WorkloadSpec};
 use crate::types::{Micros, SECOND};
-use crate::workload::sonnet::{mixed_phases, MixedPhasesSpec};
+use crate::workload::sonnet::MixedPhasesSpec;
 
 pub struct Fig9 {
     pub spec: MixedPhasesSpec,
@@ -23,22 +24,45 @@ pub struct Fig9 {
     pub rapid: (ClusterConfig, RunResult),
 }
 
+/// The three dynamic schemes over the default mixed trace.
+pub fn scenario(seed: u64, requests_per_phase: usize) -> Scenario {
+    // The default spec's substrate peak-load rate, expressed per GPU so
+    // the cell reconstructs the identical node-level rate.
+    let rate_per_gpu = MixedPhasesSpec::default().rate_qps / 8.0;
+    Scenario::new("fig9", presets::p4d4(600.0))
+        .seed(seed)
+        .requests(2 * requests_per_phase)
+        .workload(WorkloadSpec::MixedPhases)
+        .rate(rate_per_gpu)
+        .axis(Axis::Config(vec![
+            presets::dyn_power_600(),
+            presets::dyn_gpu_600(),
+            presets::rapid_600(),
+        ]))
+}
+
 pub fn run(seed: u64, requests_per_phase: usize) -> Fig9 {
     let spec = MixedPhasesSpec {
         prefill_heavy_count: requests_per_phase,
         decode_heavy_count: requests_per_phase,
         ..Default::default()
     };
-    let trace = mixed_phases(seed, spec);
+    let study = Study::new(scenario(seed, requests_per_phase))
+        .run(None)
+        .expect("fig9 scenario");
+    // The same deterministic trace every cell ran (seed + spec derive it).
+    let trace = mixed_phases_trace(seed, 2 * requests_per_phase, spec.rate_qps);
     let phase_boundary = trace.requests[requests_per_phase].arrival;
-    let cfgs = [
-        presets::dyn_power_600(),
-        presets::dyn_gpu_600(),
-        presets::rapid_600(),
-    ];
-    let mut results = parallel_map(&cfgs, |cfg| run_config(cfg, &trace)).into_iter();
-    let mut cfgs = cfgs.into_iter();
-    let mut take = || (cfgs.next().unwrap(), results.next().unwrap());
+    let mut results = study
+        .cells
+        .into_iter()
+        .map(|c| {
+            let cfg = c.config.clone();
+            (cfg, c.into_result().expect("sim cell"))
+        })
+        .collect::<Vec<_>>()
+        .into_iter();
+    let mut take = || results.next().unwrap();
     Fig9 {
         spec,
         phase_boundary,

@@ -1,11 +1,15 @@
 //! Experiment drivers: one module per paper figure/table.
 //!
-//! Each driver builds the paper's workload, runs the relevant cluster
-//! configurations through the simulator, renders the same rows/series the
-//! paper reports, and checks the paper-shape assertions (who wins, by
-//! roughly what factor, where crossovers fall) listed in DESIGN.md §6.
-//! The `benches/` targets and the `rapid fig*` CLI subcommands both call
-//! into here.
+//! Each driver is now a thin declaration over the [`crate::scenario`]
+//! API: it states its `Scenario` (workload + SLO + sweep axes), runs it
+//! through a `Study` (which fans every grid cell over `parallel_map`),
+//! and keeps only the figure-specific `render()` tables and
+//! paper-shape `checks()` (DESIGN.md §6). The `benches/` targets, the
+//! `rapid fig*` subcommands and `rapid study` all share that one
+//! experiment surface.
+//!
+//! The names re-exported below used to be defined here; they live in
+//! `scenario` / `util::par` now so lower layers can use them too.
 
 pub mod fig1;
 pub mod fig3;
@@ -16,294 +20,11 @@ pub mod fig7;
 pub mod fig8;
 pub mod fig9;
 
-use crate::config::ClusterConfig;
-use crate::metrics::RunResult;
-use crate::sim::{self, SimOptions};
-use crate::types::Slo;
-use crate::util::rng::Rng;
-use crate::workload::{build_trace, longbench::LongBench, ArrivalProcess, Trace};
-
-/// One shape assertion: description + pass/fail + the measured detail.
-#[derive(Debug, Clone)]
-pub struct ShapeCheck {
-    pub what: String,
-    pub pass: bool,
-    pub detail: String,
-}
-
-impl ShapeCheck {
-    pub fn new(what: impl Into<String>, pass: bool, detail: impl Into<String>) -> Self {
-        ShapeCheck {
-            what: what.into(),
-            pass,
-            detail: detail.into(),
-        }
-    }
-}
-
-/// Render checks as a PASS/FAIL block.
-pub fn render_checks(checks: &[ShapeCheck]) -> String {
-    let mut out = String::new();
-    for c in checks {
-        out.push_str(&format!(
-            "  [{}] {} ({})\n",
-            if c.pass { "PASS" } else { "FAIL" },
-            c.what,
-            c.detail
-        ));
-    }
-    out
-}
+pub use crate::scenario::{
+    crossing_rate, longbench_trace, render_checks, sustainable_rate, RatePoint, ShapeCheck,
+};
+pub use crate::util::par::{parallel_map, parallel_map_threads, sweep_threads, sweep_threads_with};
 
 /// Default request count per simulated run. Large enough for stable
 /// percentiles, small enough that full sweeps run in seconds.
 pub const DEFAULT_REQUESTS: usize = 1200;
-
-/// Worker threads for sweep fan-out: `RAPID_SWEEP_THREADS` overrides;
-/// default is the machine's parallelism. `1` forces serial execution
-/// (useful for timing baselines — see `benches/sweep_parallel.rs`).
-pub fn sweep_threads() -> usize {
-    std::env::var("RAPID_SWEEP_THREADS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .filter(|&n| n >= 1)
-        .unwrap_or_else(|| {
-            std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(1)
-        })
-}
-
-/// Fan `f` over `items` across worker threads (work-stealing via a
-/// shared atomic cursor), preserving input order in the output.
-///
-/// This is the sweep runner every figure driver, bench and the
-/// `rapid sweep` CLI go through: each sweep point is an independent
-/// deterministic simulation (seeded RNGs, no shared state), so results
-/// are bit-identical to a serial run regardless of thread count.
-/// Implemented on `std::thread::scope` — no external dependency.
-pub fn parallel_map<T, R, F>(items: &[T], f: F) -> Vec<R>
-where
-    T: Sync,
-    R: Send,
-    F: Fn(&T) -> R + Sync,
-{
-    let threads = sweep_threads().min(items.len().max(1));
-    if threads <= 1 || items.len() <= 1 {
-        return items.iter().map(&f).collect();
-    }
-    let next = std::sync::atomic::AtomicUsize::new(0);
-    let done: std::sync::Mutex<Vec<(usize, R)>> =
-        std::sync::Mutex::new(Vec::with_capacity(items.len()));
-    std::thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                if i >= items.len() {
-                    break;
-                }
-                let r = f(&items[i]);
-                done.lock().unwrap().push((i, r));
-            });
-        }
-    });
-    let mut out = done.into_inner().unwrap();
-    out.sort_by_key(|&(i, _)| i);
-    out.into_iter().map(|(_, r)| r).collect()
-}
-
-/// Build a LongBench trace at a node-level rate (QPS across all GPUs).
-pub fn longbench_trace(seed: u64, node_qps: f64, n: usize, slo: Slo) -> Trace {
-    let mut root = Rng::new(seed);
-    let mut ap = ArrivalProcess::poisson(root.fork(1), node_qps);
-    let mut sizes = LongBench::new(root.fork(2));
-    build_trace(n, &mut ap, &mut sizes, slo)
-}
-
-/// Run one configuration over a trace with default sim options.
-pub fn run_config(cfg: &ClusterConfig, trace: &Trace) -> RunResult {
-    cfg.validate().expect("config invalid");
-    sim::run(cfg, trace, &SimOptions::default())
-}
-
-/// A point on an attainment-vs-rate curve.
-#[derive(Debug, Clone)]
-pub struct RatePoint {
-    pub qps_per_gpu: f64,
-    pub attainment: f64,
-    pub goodput_qps: f64,
-    pub qps_per_kw: f64,
-}
-
-/// Sweep a config across per-GPU request rates (LongBench), fanning the
-/// points over worker threads.
-pub fn rate_sweep(
-    cfg: &ClusterConfig,
-    rates_per_gpu: &[f64],
-    seed: u64,
-    n: usize,
-    slo: Slo,
-) -> Vec<RatePoint> {
-    parallel_map(rates_per_gpu, |&r| {
-        let trace = longbench_trace(seed, r * cfg.total_gpus() as f64, n, slo);
-        let res = run_config(cfg, &trace);
-        RatePoint {
-            qps_per_gpu: r,
-            attainment: res.attainment(),
-            goodput_qps: res.goodput_qps(),
-            qps_per_kw: res.qps_per_kw(),
-        }
-    })
-}
-
-/// Sweep many configs x rates in one flat parallel fan-out (used by the
-/// multi-curve figure drivers: no barrier between curves, every
-/// (config, rate) point is an independent work unit).
-pub fn parallel_rate_sweeps(
-    configs: Vec<ClusterConfig>,
-    rates_per_gpu: &[f64],
-    seed: u64,
-    n: usize,
-    slo: Slo,
-) -> Vec<(ClusterConfig, Vec<RatePoint>)> {
-    let jobs: Vec<(usize, f64)> = (0..configs.len())
-        .flat_map(|ci| rates_per_gpu.iter().map(move |&r| (ci, r)))
-        .collect();
-    let points = parallel_map(&jobs, |&(ci, r)| {
-        let cfg = &configs[ci];
-        let trace = longbench_trace(seed, r * cfg.total_gpus() as f64, n, slo);
-        let res = run_config(cfg, &trace);
-        RatePoint {
-            qps_per_gpu: r,
-            attainment: res.attainment(),
-            goodput_qps: res.goodput_qps(),
-            qps_per_kw: res.qps_per_kw(),
-        }
-    });
-    let per_cfg = rates_per_gpu.len();
-    configs
-        .into_iter()
-        .enumerate()
-        .map(|(ci, cfg)| {
-            let pts = points[ci * per_cfg..(ci + 1) * per_cfg].to_vec();
-            (cfg, pts)
-        })
-        .collect()
-}
-
-/// Highest swept rate whose attainment still meets `threshold`
-/// (the paper's "sustainable rate at 80% SLO attainment").
-pub fn sustainable_rate(points: &[RatePoint], threshold: f64) -> f64 {
-    points
-        .iter()
-        .filter(|p| p.attainment >= threshold)
-        .map(|p| p.qps_per_gpu)
-        .fold(0.0, f64::max)
-}
-
-/// Linear-interpolated rate at which attainment crosses `threshold`
-/// (finer than `sustainable_rate` for factor comparisons).
-pub fn crossing_rate(points: &[RatePoint], threshold: f64) -> f64 {
-    let mut prev: Option<&RatePoint> = None;
-    for p in points {
-        if let Some(q) = prev {
-            if q.attainment >= threshold && p.attainment < threshold {
-                let frac = (q.attainment - threshold) / (q.attainment - p.attainment);
-                return q.qps_per_gpu + frac * (p.qps_per_gpu - q.qps_per_gpu);
-            }
-        }
-        prev = Some(p);
-    }
-    sustainable_rate(points, threshold)
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    fn pt(q: f64, a: f64) -> RatePoint {
-        RatePoint {
-            qps_per_gpu: q,
-            attainment: a,
-            goodput_qps: 0.0,
-            qps_per_kw: 0.0,
-        }
-    }
-
-    #[test]
-    fn sustainable_rate_picks_last_above_threshold() {
-        let pts = vec![pt(0.5, 0.99), pt(1.0, 0.92), pt(1.5, 0.70), pt(2.0, 0.30)];
-        assert_eq!(sustainable_rate(&pts, 0.8), 1.0);
-        assert_eq!(sustainable_rate(&pts, 0.95), 0.5);
-        assert_eq!(sustainable_rate(&pts, 0.2), 2.0);
-    }
-
-    #[test]
-    fn crossing_rate_interpolates() {
-        let pts = vec![pt(1.0, 0.9), pt(2.0, 0.7)];
-        let x = crossing_rate(&pts, 0.8);
-        assert!((x - 1.5).abs() < 1e-9, "x={x}");
-    }
-
-    #[test]
-    fn longbench_trace_matches_rate() {
-        let t = longbench_trace(1, 12.0, 600, Slo::paper_default());
-        assert_eq!(t.len(), 600);
-        assert!((t.offered_qps() / 12.0 - 1.0).abs() < 0.2);
-    }
-
-    #[test]
-    fn parallel_map_preserves_order_and_coverage() {
-        let items: Vec<u64> = (0..57).collect();
-        let out = parallel_map(&items, |&x| x * 3);
-        assert_eq!(out, items.iter().map(|&x| x * 3).collect::<Vec<_>>());
-        let empty: Vec<u64> = Vec::new();
-        assert!(parallel_map(&empty, |&x: &u64| x).is_empty());
-        assert_eq!(parallel_map(&[9u64], |&x| x + 1), vec![10]);
-    }
-
-    #[test]
-    fn parallel_sweep_matches_serial_results() {
-        // Determinism across thread counts: each point derives its trace
-        // from (seed, rate) alone, so the fan-out must be bit-identical
-        // to a serial pass.
-        let cfg = crate::config::presets::p4d4(600.0);
-        let rates = [0.5, 1.0];
-        let par = rate_sweep(&cfg, &rates, 7, 60, Slo::paper_default());
-        let ser: Vec<RatePoint> = rates
-            .iter()
-            .map(|&r| {
-                let trace = longbench_trace(7, r * cfg.total_gpus() as f64, 60, Slo::paper_default());
-                let res = run_config(&cfg, &trace);
-                RatePoint {
-                    qps_per_gpu: r,
-                    attainment: res.attainment(),
-                    goodput_qps: res.goodput_qps(),
-                    qps_per_kw: res.qps_per_kw(),
-                }
-            })
-            .collect();
-        for (a, b) in par.iter().zip(&ser) {
-            assert_eq!(a.qps_per_gpu, b.qps_per_gpu);
-            assert_eq!(a.attainment, b.attainment);
-            assert_eq!(a.goodput_qps, b.goodput_qps);
-        }
-    }
-
-    #[test]
-    fn parallel_rate_sweeps_groups_by_config() {
-        let configs = vec![
-            crate::config::presets::p4d4(600.0),
-            crate::config::presets::p5d3_600(),
-        ];
-        let rates = [0.5, 1.0, 1.5];
-        let curves = parallel_rate_sweeps(configs, &rates, 3, 40, Slo::paper_default());
-        assert_eq!(curves.len(), 2);
-        for (_, pts) in &curves {
-            assert_eq!(pts.len(), rates.len());
-            for (p, &r) in pts.iter().zip(rates.iter()) {
-                assert_eq!(p.qps_per_gpu, r);
-            }
-        }
-    }
-}

@@ -15,6 +15,7 @@ pub mod metrics;
 pub mod power;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod scenario;
 #[cfg(feature = "pjrt")]
 pub mod server;
 pub mod sim;

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   fig1 | fig3 | fig4 | fig5 | fig6 | fig7 | fig8 | fig9
 //!       regenerate a paper figure (table + shape checks)
+//!   study    run a declarative scenario file (scenarios/*.toml)
 //!   sim      run one configuration over a workload, print metrics
 //!   sweep    static design-space search (the paper's §5.1 exploration)
 //!   serve    real PJRT serving demo (requires `make artifacts`)
@@ -11,6 +12,7 @@
 use rapid::cli::Command;
 use rapid::config::{presets, ClusterConfig};
 use rapid::experiments::{self as exp, render_checks};
+use rapid::scenario::{emit, Scenario, Study};
 use rapid::sim::{self, SimOptions};
 use rapid::types::{Slo, MILLIS, SECOND};
 
@@ -137,6 +139,28 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
             let res = sim::run(&cfg, &trace, &SimOptions::default());
             print_result(&cfg, &res);
         }
+        "study" => {
+            let cmd = Command::new(
+                "study",
+                "run a declarative scenario file (see scenarios/*.toml)",
+            )
+            .opt("format", "text", "output format: text | json | csv")
+            .opt("threads", "0", "worker threads (0 = default; wins over RAPID_SWEEP_THREADS)")
+            .opt("requests", "0", "override the scenario's requests/cell (0 = keep)");
+            let a = parse_or_help(&cmd, rest)?;
+            let Some(path) = a.positional.first() else {
+                return Err("usage: rapid study <scenario.toml> [--format f] [--threads t]".into());
+            };
+            let format = a.get("format").unwrap().parse::<emit::Format>()?;
+            let mut scenario = Scenario::from_toml_file(path)?;
+            let requests = a.usize_or("requests", 0)?;
+            if requests > 0 {
+                scenario.requests = requests;
+            }
+            let threads = Some(a.usize_or("threads", 0)?).filter(|&t| t >= 1);
+            let study = Study::new(scenario).run(threads)?;
+            print!("{}", emit::emit(&study, format));
+        }
         "sweep" => {
             let cmd = common(Command::new(
                 "sweep",
@@ -145,12 +169,9 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
             .opt("qps", "1.5", "per-GPU request rate")
             .opt("nodes", "0", "number of identical nodes (0 = take from --config, else 1)")
             .opt("config", "", "TOML config file to use as the sweep base")
-            .opt("threads", "0", "worker threads (0 = all cores; RAPID_SWEEP_THREADS overrides)");
+            .opt("threads", "0", "worker threads (0 = all cores; wins over RAPID_SWEEP_THREADS)");
             let a = parse_or_help(&cmd, rest)?;
-            let threads = a.usize_or("threads", 0)?;
-            if threads > 0 {
-                std::env::set_var("RAPID_SWEEP_THREADS", threads.to_string());
-            }
+            let threads = Some(a.usize_or("threads", 0)?).filter(|&t| t >= 1);
             let base = match a.get("config").unwrap_or("") {
                 "" => None,
                 path => Some(ClusterConfig::from_toml(&std::fs::read_to_string(path)?)?),
@@ -160,6 +181,7 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
                 a.f64_or("qps", 1.5)?,
                 a.usize_or("requests", 1200)?,
                 a.usize_or("nodes", 0)?,
+                threads,
                 base,
             );
         }
@@ -201,7 +223,9 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
         }
         "help" | "--help" | "-h" => {
             println!("rapid — power-aware disaggregated inference (paper reproduction)");
-            println!("subcommands: fig1 fig3 fig4 fig5 fig6 fig7 fig8 fig9 sim sweep serve presets");
+            println!(
+                "subcommands: fig1 fig3 fig4 fig5 fig6 fig7 fig8 fig9 study sim sweep serve presets"
+            );
             println!("run `rapid <subcommand> --help` for flags");
         }
         other => {
@@ -254,7 +278,14 @@ fn print_result(cfg: &ClusterConfig, res: &rapid::metrics::RunResult) {
     println!("  decisions:       {}", res.decisions.len());
 }
 
-fn run_sweep(seed: u64, qps: f64, n: usize, nodes: usize, base: Option<ClusterConfig>) {
+fn run_sweep(
+    seed: u64,
+    qps: f64,
+    n: usize,
+    nodes: usize,
+    threads: Option<usize>,
+    base: Option<ClusterConfig>,
+) {
     let base = base.unwrap_or_else(|| presets::p4d4(600.0));
     // `--nodes 0` (the default) keeps the base config's node count, so a
     // multi-node TOML passed via --config is not silently flattened.
@@ -264,7 +295,7 @@ fn run_sweep(seed: u64, qps: f64, n: usize, nodes: usize, base: Option<ClusterCo
     println!(
         "static design-space sweep @{qps} QPS/GPU (LongBench, {nodes} node(s) x {:.0} W, {} threads)",
         node_budget,
-        exp::sweep_threads()
+        exp::sweep_threads_with(threads)
     );
     // Build every sweep point first, then fan them across cores: each
     // point is an independent deterministic simulation.
@@ -290,7 +321,7 @@ fn run_sweep(seed: u64, qps: f64, n: usize, nodes: usize, base: Option<ClusterCo
         }
     }
     let t0 = std::time::Instant::now();
-    let results = exp::parallel_map(&points, |cfg| {
+    let results = exp::parallel_map_threads(&points, threads, |cfg| {
         let trace = exp::longbench_trace(
             seed,
             qps * cfg.total_gpus() as f64,

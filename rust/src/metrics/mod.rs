@@ -83,6 +83,24 @@ impl RunResult {
         (q / n, e / n)
     }
 
+    /// Flat aggregate view of this run — the per-cell payload every
+    /// study emitter (text/JSON/CSV) renders.
+    pub fn summary(&self) -> Summary {
+        Summary {
+            requests: self.records.len(),
+            attainment: self.attainment(),
+            goodput_qps: self.goodput_qps(),
+            qps_per_kw: self.qps_per_kw(),
+            ttft_p50_ms: self.ttft_percentile(50.0) / 1000.0,
+            ttft_p90_ms: self.ttft_percentile(90.0) / 1000.0,
+            tpot_p50_ms: self.tpot_percentile(50.0) / 1000.0,
+            tpot_p90_ms: self.tpot_percentile(90.0) / 1000.0,
+            mean_provisioned_w: self.mean_provisioned_w,
+            peak_node_w: self.node_power.max(),
+            duration_s: self.duration as f64 / SECOND as f64,
+        }
+    }
+
     /// Attainment over completion-time buckets (Fig 6/9 time axes).
     pub fn attainment_over_time(&self, bucket: Micros) -> Vec<(Micros, f64)> {
         if self.records.is_empty() {
@@ -104,6 +122,23 @@ impl RunResult {
             .map(|b| (b as Micros * bucket, hit[b] as f64 / tot[b] as f64))
             .collect()
     }
+}
+
+/// Flat per-run aggregates (ms-scale latencies, W-scale power) shared
+/// by every study emitter.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub requests: usize,
+    pub attainment: f64,
+    pub goodput_qps: f64,
+    pub qps_per_kw: f64,
+    pub ttft_p50_ms: f64,
+    pub ttft_p90_ms: f64,
+    pub tpot_p50_ms: f64,
+    pub tpot_p90_ms: f64,
+    pub mean_provisioned_w: f64,
+    pub peak_node_w: f64,
+    pub duration_s: f64,
 }
 
 #[cfg(test)]
@@ -180,6 +215,25 @@ mod tests {
         assert_eq!(buckets.len(), 2);
         assert!((buckets[0].1 - 1.0).abs() < 1e-9);
         assert!(buckets[1].1 < 1.0);
+    }
+
+    #[test]
+    fn summary_mirrors_accessors() {
+        let r = result_with(
+            vec![
+                record(0, 0, 500 * MILLIS, SECOND, 20),
+                record(1, 0, 2 * SECOND, 3 * SECOND, 20),
+            ],
+            10 * SECOND,
+        );
+        let s = r.summary();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.attainment, r.attainment());
+        assert_eq!(s.goodput_qps, r.goodput_qps());
+        assert_eq!(s.qps_per_kw, r.qps_per_kw());
+        assert_eq!(s.ttft_p90_ms, r.ttft_percentile(90.0) / 1000.0);
+        assert_eq!(s.mean_provisioned_w, 4800.0);
+        assert_eq!(s.duration_s, 10.0);
     }
 
     #[test]

@@ -1,0 +1,435 @@
+//! Pluggable study renderers: text tables, JSON, CSV.
+//!
+//! The emitter contract (DESIGN.md §9): every emitter consumes the same
+//! [`StudyResult`] and exposes the same per-cell values — the
+//! `metrics::Summary` aggregates for sim cells, the scalar for
+//! microbench cells — so the attainment/goodput a text table shows is
+//! byte-for-byte the number the JSON and CSV carry (modulo the text
+//! table's fixed-width rounding). JSON goes through `util::json::Json`,
+//! so the output is parseable by the same parser the crate ships.
+
+use super::{Cell, CellOut, StudyResult};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Output format of the `rapid study` subcommand.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Format {
+    Text,
+    Json,
+    Csv,
+}
+
+impl std::str::FromStr for Format {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Format, String> {
+        match s {
+            "text" => Ok(Format::Text),
+            "json" => Ok(Format::Json),
+            "csv" => Ok(Format::Csv),
+            other => Err(format!("unknown format '{other}' (text | json | csv)")),
+        }
+    }
+}
+
+/// A study renderer. Implementations must not reorder cells.
+pub trait Emitter {
+    fn emit(&self, study: &StudyResult) -> String;
+}
+
+/// Render `study` in `format`.
+pub fn emit(study: &StudyResult, format: Format) -> String {
+    emitter(format).emit(study)
+}
+
+/// The emitter registered for a format.
+pub fn emitter(format: Format) -> &'static dyn Emitter {
+    match format {
+        Format::Text => &TextEmitter,
+        Format::Json => &JsonEmitter,
+        Format::Csv => &CsvEmitter,
+    }
+}
+
+fn all_scalar(study: &StudyResult) -> bool {
+    study
+        .cells
+        .iter()
+        .all(|c| matches!(c.out, CellOut::Scalar(_)))
+}
+
+// ---------------------------------------------------------------------------
+// Text
+// ---------------------------------------------------------------------------
+
+pub struct TextEmitter;
+
+/// Named per-cell metric with its table formatting.
+struct Metric {
+    name: &'static str,
+    value: fn(&Cell) -> f64,
+    fmt: fn(f64) -> String,
+}
+
+fn text_metrics(study: &StudyResult) -> Vec<Metric> {
+    if all_scalar(study) {
+        vec![Metric {
+            name: "value (us)",
+            value: Cell::value,
+            fmt: |v| format!("{v:.0}"),
+        }]
+    } else {
+        vec![
+            Metric {
+                name: "attainment",
+                value: Cell::attainment,
+                fmt: |v| format!("{v:.4}"),
+            },
+            Metric {
+                name: "goodput_qps",
+                value: Cell::goodput_qps,
+                fmt: |v| format!("{v:.3}"),
+            },
+        ]
+    }
+}
+
+impl Emitter for TextEmitter {
+    fn emit(&self, study: &StudyResult) -> String {
+        let s = &study.scenario;
+        let axis_desc = if s.axes.is_empty() {
+            "no axes".to_string()
+        } else {
+            s.axes
+                .iter()
+                .map(|a| format!("{}[{}]", a.key(), a.len()))
+                .collect::<Vec<_>>()
+                .join(" x ")
+        };
+        let mut out = format!(
+            "study {} — {} cells ({axis_desc}), workload {}, seed {}, {} requests/cell\n",
+            s.name,
+            study.cells.len(),
+            s.workload.kind(),
+            s.seed,
+            s.requests
+        );
+        let n_cols = s.axes.last().map_or(1, super::Axis::len);
+        let col_labels: Vec<String> = match s.axes.last() {
+            Some(axis) => (0..axis.len()).map(|i| axis.label(i)).collect(),
+            None => vec!["value".to_string()],
+        };
+        let row_label = |cell: &Cell| -> String {
+            let n = cell.coords.len().saturating_sub(1);
+            if n == 0 {
+                s.name.clone()
+            } else {
+                cell.coords[..n]
+                    .iter()
+                    .map(|(_, v)| v.clone())
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            }
+        };
+        let label_w = study
+            .cells
+            .iter()
+            .map(|c| row_label(c).len())
+            .max()
+            .unwrap_or(8)
+            .max(8)
+            + 2;
+        let col_w = col_labels.iter().map(String::len).max().unwrap_or(7).max(9) + 2;
+        for metric in text_metrics(study) {
+            out.push_str(&format!("\n[{}]\n{:<label_w$}", metric.name, ""));
+            for l in &col_labels {
+                out.push_str(&format!("{l:>col_w$}"));
+            }
+            out.push('\n');
+            for row in study.cells.chunks(n_cols) {
+                out.push_str(&format!("{:<label_w$}", row_label(&row[0])));
+                for cell in row {
+                    out.push_str(&format!("{:>col_w$}", (metric.fmt)((metric.value)(cell))));
+                }
+                out.push('\n');
+            }
+        }
+        let (passed, total) = study.checks_passed();
+        if total > 0 {
+            out.push_str(&format!("\ncell checks: {passed}/{total} passed\n"));
+            for cell in &study.cells {
+                for c in cell.checks.iter().filter(|c| !c.pass) {
+                    out.push_str(&format!(
+                        "  [FAIL] {:?} {} ({})\n",
+                        cell.coords, c.what, c.detail
+                    ));
+                }
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON
+// ---------------------------------------------------------------------------
+
+pub struct JsonEmitter;
+
+/// JSON numbers must be finite; NaN/inf (e.g. percentiles of an empty
+/// record set) map to null.
+fn num(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+fn cell_json(cell: &Cell) -> Json {
+    let mut obj = BTreeMap::new();
+    let coords: BTreeMap<String, Json> = cell
+        .coords
+        .iter()
+        .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+        .collect();
+    obj.insert("coords".into(), Json::Obj(coords));
+    obj.insert("config".into(), Json::Str(cell.config.name.clone()));
+    obj.insert("rate_per_gpu".into(), num(cell.rate_per_gpu));
+    match &cell.out {
+        CellOut::Scalar(v) => {
+            obj.insert("value_us".into(), num(*v));
+        }
+        CellOut::Sim(r) => {
+            let s = r.summary();
+            let mut m = BTreeMap::new();
+            m.insert("requests".into(), Json::Num(s.requests as f64));
+            m.insert("attainment".into(), num(s.attainment));
+            m.insert("goodput_qps".into(), num(s.goodput_qps));
+            m.insert("qps_per_kw".into(), num(s.qps_per_kw));
+            m.insert("ttft_p50_ms".into(), num(s.ttft_p50_ms));
+            m.insert("ttft_p90_ms".into(), num(s.ttft_p90_ms));
+            m.insert("tpot_p50_ms".into(), num(s.tpot_p50_ms));
+            m.insert("tpot_p90_ms".into(), num(s.tpot_p90_ms));
+            m.insert("mean_provisioned_w".into(), num(s.mean_provisioned_w));
+            m.insert("peak_node_w".into(), num(s.peak_node_w));
+            m.insert("duration_s".into(), num(s.duration_s));
+            obj.insert("metrics".into(), Json::Obj(m));
+        }
+    }
+    let checks: Vec<Json> = cell
+        .checks
+        .iter()
+        .map(|c| {
+            let mut m = BTreeMap::new();
+            m.insert("what".into(), Json::Str(c.what.clone()));
+            m.insert("pass".into(), Json::Bool(c.pass));
+            m.insert("detail".into(), Json::Str(c.detail.clone()));
+            Json::Obj(m)
+        })
+        .collect();
+    obj.insert("checks".into(), Json::Arr(checks));
+    Json::Obj(obj)
+}
+
+impl Emitter for JsonEmitter {
+    fn emit(&self, study: &StudyResult) -> String {
+        let s = &study.scenario;
+        let mut obj = BTreeMap::new();
+        obj.insert("scenario".into(), Json::Str(s.name.clone()));
+        obj.insert("seed".into(), Json::Num(s.seed as f64));
+        obj.insert("requests".into(), Json::Num(s.requests as f64));
+        obj.insert("workload".into(), Json::Str(s.workload.kind().into()));
+        let axes: Vec<Json> = s
+            .axes
+            .iter()
+            .map(|a| {
+                let mut m = BTreeMap::new();
+                m.insert("key".into(), Json::Str(a.key().into()));
+                m.insert(
+                    "values".into(),
+                    Json::Arr((0..a.len()).map(|i| Json::Str(a.label(i))).collect()),
+                );
+                Json::Obj(m)
+            })
+            .collect();
+        obj.insert("axes".into(), Json::Arr(axes));
+        obj.insert(
+            "cells".into(),
+            Json::Arr(study.cells.iter().map(cell_json).collect()),
+        );
+        let mut out = Json::Obj(obj).to_string();
+        out.push('\n');
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CSV
+// ---------------------------------------------------------------------------
+
+pub struct CsvEmitter;
+
+fn csv_field(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+impl Emitter for CsvEmitter {
+    fn emit(&self, study: &StudyResult) -> String {
+        let axis_keys: Vec<&str> = study.scenario.axes.iter().map(super::Axis::key).collect();
+        let scalar = all_scalar(study);
+        let mut out = String::new();
+        for k in &axis_keys {
+            out.push_str(k);
+            out.push(',');
+        }
+        // `config_name`, not `config`: a Config axis already contributes
+        // a `config` coordinate column.
+        if scalar {
+            out.push_str("config_name,value_us\n");
+        } else {
+            out.push_str(
+                "config_name,attainment,goodput_qps,qps_per_kw,ttft_p90_ms,tpot_p90_ms,\
+                 mean_provisioned_w\n",
+            );
+        }
+        for cell in &study.cells {
+            for (_, v) in &cell.coords {
+                out.push_str(&csv_field(v));
+                out.push(',');
+            }
+            out.push_str(&csv_field(&cell.config.name));
+            match &cell.out {
+                CellOut::Scalar(v) => out.push_str(&format!(",{v}")),
+                CellOut::Sim(r) => {
+                    let s = r.summary();
+                    out.push_str(&format!(
+                        ",{},{},{},{},{},{}",
+                        s.attainment,
+                        s.goodput_qps,
+                        s.qps_per_kw,
+                        s.ttft_p90_ms,
+                        s.tpot_p90_ms,
+                        s.mean_provisioned_w
+                    ));
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::scenario::{Axis, Scenario, Study, WorkloadSpec};
+
+    fn small_study() -> StudyResult {
+        Study::new(
+            Scenario::new("emit-test", presets::p4d4(600.0))
+                .requests(40)
+                .seed(9)
+                .axis(Axis::Config(vec![
+                    presets::p4d4(600.0),
+                    presets::p4_750_d4_450(),
+                ]))
+                .axis(Axis::RatePerGpu(vec![0.5, 1.5])),
+        )
+        .run(Some(1))
+        .unwrap()
+    }
+
+    #[test]
+    fn json_parses_and_matches_cells() {
+        let study = small_study();
+        let text = emit(&study, Format::Json);
+        let v = Json::parse(text.trim()).unwrap();
+        assert_eq!(v.get("scenario").unwrap().as_str(), Some("emit-test"));
+        let cells = v.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells.len(), study.cells.len());
+        for (jc, cell) in cells.iter().zip(&study.cells) {
+            let m = jc.get("metrics").unwrap();
+            assert_eq!(
+                m.get("attainment").unwrap().as_f64(),
+                Some(cell.attainment())
+            );
+            assert_eq!(
+                m.get("goodput_qps").unwrap().as_f64(),
+                Some(cell.goodput_qps())
+            );
+        }
+        let axes = v.get("axes").unwrap().as_arr().unwrap();
+        assert_eq!(axes.len(), 2);
+        assert_eq!(axes[0].get("key").unwrap().as_str(), Some("config"));
+    }
+
+    #[test]
+    fn csv_has_header_plus_one_row_per_cell() {
+        let study = small_study();
+        let text = emit(&study, Format::Csv);
+        let lines: Vec<&str> = text.trim_end().lines().collect();
+        assert_eq!(lines.len(), 1 + study.cells.len());
+        assert!(lines[0].starts_with("config,rate_per_gpu,config_name,attainment"));
+        for (line, cell) in lines[1..].iter().zip(&study.cells) {
+            assert!(line.contains(&format!(",{},", cell.attainment())), "{line}");
+        }
+    }
+
+    #[test]
+    fn text_tables_cover_all_cells() {
+        let study = small_study();
+        let text = emit(&study, Format::Text);
+        assert!(text.contains("[attainment]"));
+        assert!(text.contains("[goodput_qps]"));
+        assert!(text.contains("4P4D-600W"));
+        assert!(text.contains("4P-750W/4D-450W"));
+        assert!(text.contains("cell checks:"));
+        for cell in &study.cells {
+            let rounded = format!("{:.4}", cell.attainment());
+            assert!(text.contains(&rounded), "missing {rounded}");
+        }
+    }
+
+    #[test]
+    fn scalar_studies_emit_value_column() {
+        let study = Study::new(
+            Scenario::new("micro", presets::p4d4(600.0))
+                .workload(WorkloadSpec::DecodeMicrobench {
+                    context_tokens: 4096.0,
+                })
+                .axis(Axis::Batch(vec![8, 64]))
+                .axis(Axis::PowerW(vec![400.0, 600.0])),
+        )
+        .run(Some(1))
+        .unwrap();
+        let csv = emit(&study, Format::Csv);
+        assert!(csv.lines().next().unwrap().ends_with("config_name,value_us"));
+        let json = emit(&study, Format::Json);
+        let v = Json::parse(json.trim()).unwrap();
+        let cells = v.get("cells").unwrap().as_arr().unwrap();
+        assert!(cells[0].get("value_us").unwrap().as_f64().unwrap() > 0.0);
+        let text = emit(&study, Format::Text);
+        assert!(text.contains("[value (us)]"));
+    }
+
+    #[test]
+    fn csv_field_quoting() {
+        assert_eq!(csv_field("plain"), "plain");
+        assert_eq!(csv_field("a,b"), "\"a,b\"");
+        assert_eq!(csv_field("say \"hi\""), "\"say \"\"hi\"\"\"");
+    }
+
+    #[test]
+    fn format_parses() {
+        assert_eq!("json".parse::<Format>().unwrap(), Format::Json);
+        assert_eq!("csv".parse::<Format>().unwrap(), Format::Csv);
+        assert_eq!("text".parse::<Format>().unwrap(), Format::Text);
+        assert!("yaml".parse::<Format>().is_err());
+    }
+}

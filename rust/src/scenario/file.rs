@@ -1,0 +1,303 @@
+//! Scenario files: declare a whole study as TOML (`scenarios/*.toml`).
+//!
+//! ```toml
+//! name = "rate-budget-grid"
+//! seed = 42
+//! requests = 400
+//! rate_per_gpu = 1.5          # used when no rate axis is declared
+//!
+//! [workload]
+//! kind = "longbench"          # longbench | mixed | sonnet
+//! # input_tokens = 3000       # sonnet only
+//! # output_tokens = 96        # sonnet only
+//! # burst_frac = 0.2          # dwell fraction for burst_factor axes
+//!
+//! [slo]
+//! ttft_ms = 1000
+//! tpot_ms = 40
+//!
+//! [base]
+//! preset = "4p4d-600"
+//!
+//! [axes]
+//! power_w = [500, 600, 750]
+//! rate_per_gpu = [0.5, 1.0, 1.5, 2.0]
+//! # preset = ["4p4d-600", "rapid-600"]      -> config axis
+//! # policy = ["static", "rapid"]
+//! # n_nodes = [1, 2]
+//! # prefill_gpus = [2, 4, 6]
+//! # burst_factor = [1.0, 4.0]
+//! # slo_scale = [2.0, 1.0, 0.5]
+//! ```
+//!
+//! TOML tables are unordered, so axes expand in a fixed canonical
+//! order regardless of file order (outermost → innermost): `preset`,
+//! `policy`, `n_nodes`, `prefill_gpus`, `power_w`, `batch`,
+//! `burst_factor`, `slo_scale`, `rate_per_gpu`. The last declared axis
+//! becomes the column axis of the text tables.
+
+use super::{Axis, Scenario, ScenarioError, WorkloadSpec};
+use crate::config::toml::{Document, Value};
+use crate::config::{presets, ControlPolicy};
+use crate::types::{Slo, MILLIS};
+
+/// Canonical axis expansion order for TOML-declared scenarios.
+const AXIS_ORDER: &[&str] = &[
+    "preset",
+    "policy",
+    "n_nodes",
+    "prefill_gpus",
+    "power_w",
+    "batch",
+    "burst_factor",
+    "slo_scale",
+    "rate_per_gpu",
+];
+
+impl Scenario {
+    /// Parse a scenario from TOML text.
+    pub fn from_toml(text: &str) -> Result<Scenario, ScenarioError> {
+        let doc = Document::parse(text).map_err(|e| ScenarioError(e.to_string()))?;
+        let base = match doc.get_str("base.preset") {
+            Some(name) => presets::by_name(name).map_err(|e| ScenarioError(e.to_string()))?,
+            None => presets::p4d4(600.0),
+        };
+        let mut s = Scenario::new(doc.get_str("name").unwrap_or("study"), base);
+        if let Some(seed) = doc.get_i64("seed") {
+            s.seed = seed as u64;
+        }
+        if let Some(n) = doc.get_i64("requests") {
+            if n <= 0 {
+                return Err(ScenarioError(format!("requests {n} must be > 0")));
+            }
+            s.requests = n as usize;
+        }
+        if let Some(r) = doc.get_f64("rate_per_gpu") {
+            s.rate_per_gpu = r;
+        }
+        if let Some(ms) = doc.get_f64("sim.sample_period_ms") {
+            s.sample_period = Some((ms * MILLIS as f64) as crate::types::Micros);
+        }
+        s.workload = parse_workload(&doc)?;
+        if let Some(f) = doc.get_f64("workload.burst_frac") {
+            s.burst_frac = f;
+        }
+        let mut slo = Slo::paper_default();
+        if let Some(ms) = doc.get_f64("slo.ttft_ms") {
+            slo.ttft = (ms * MILLIS as f64) as crate::types::Micros;
+        }
+        if let Some(ms) = doc.get_f64("slo.tpot_ms") {
+            slo.tpot = (ms * MILLIS as f64) as crate::types::Micros;
+        }
+        s.slo = slo;
+        for key in doc.keys_under("axes") {
+            let short = key.strip_prefix("axes.").unwrap_or(key);
+            if !AXIS_ORDER.contains(&short) {
+                return Err(ScenarioError(format!(
+                    "unknown axis '{short}' (known: {})",
+                    AXIS_ORDER.join(", ")
+                )));
+            }
+        }
+        for &name in AXIS_ORDER {
+            if let Some(values) = doc.get_array(&format!("axes.{name}")) {
+                s.axes.push(parse_axis(name, values)?);
+            } else if doc.get(&format!("axes.{name}")).is_some() {
+                return Err(ScenarioError(format!("axis '{name}' must be an array")));
+            }
+        }
+        s.validate()?;
+        Ok(s)
+    }
+
+    /// Load a scenario from a TOML file on disk.
+    pub fn from_toml_file(path: &str) -> Result<Scenario, ScenarioError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| ScenarioError(format!("{path}: {e}")))?;
+        Scenario::from_toml(&text).map_err(|e| ScenarioError(format!("{path}: {}", e.0)))
+    }
+}
+
+fn parse_workload(doc: &Document) -> Result<WorkloadSpec, ScenarioError> {
+    match doc.get_str("workload.kind").unwrap_or("longbench") {
+        "longbench" => Ok(WorkloadSpec::LongBench),
+        "mixed" => Ok(WorkloadSpec::MixedPhases),
+        "sonnet" => {
+            let input = doc
+                .get_i64("workload.input_tokens")
+                .ok_or_else(|| ScenarioError("sonnet workload needs input_tokens".into()))?;
+            let output = doc
+                .get_i64("workload.output_tokens")
+                .ok_or_else(|| ScenarioError("sonnet workload needs output_tokens".into()))?;
+            Ok(WorkloadSpec::Sonnet {
+                input_tokens: input as u32,
+                output_tokens: output as u32,
+            })
+        }
+        other => Err(ScenarioError(format!(
+            "unknown workload kind '{other}' (longbench | mixed | sonnet)"
+        ))),
+    }
+}
+
+fn floats(name: &str, values: &[Value]) -> Result<Vec<f64>, ScenarioError> {
+    values
+        .iter()
+        .map(|v| {
+            v.as_f64()
+                .ok_or_else(|| ScenarioError(format!("axis '{name}' needs numeric values")))
+        })
+        .collect()
+}
+
+fn ints(name: &str, values: &[Value]) -> Result<Vec<usize>, ScenarioError> {
+    values
+        .iter()
+        .map(|v| {
+            v.as_i64()
+                .filter(|&i| i > 0)
+                .map(|i| i as usize)
+                .ok_or_else(|| ScenarioError(format!("axis '{name}' needs positive integers")))
+        })
+        .collect()
+}
+
+fn parse_axis(name: &str, values: &[Value]) -> Result<Axis, ScenarioError> {
+    match name {
+        "preset" => {
+            let cfgs = values
+                .iter()
+                .map(|v| {
+                    let p = v.as_str().ok_or_else(|| {
+                        ScenarioError("axis 'preset' needs preset-name strings".into())
+                    })?;
+                    presets::by_name(p).map_err(|e| ScenarioError(e.to_string()))
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            Ok(Axis::Config(cfgs))
+        }
+        "policy" => {
+            let policies = values
+                .iter()
+                .map(|v| {
+                    v.as_str()
+                        .ok_or_else(|| ScenarioError("axis 'policy' needs strings".into()))?
+                        .parse::<ControlPolicy>()
+                        .map_err(ScenarioError)
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            Ok(Axis::Policy(policies))
+        }
+        "n_nodes" => Ok(Axis::NNodes(ints(name, values)?)),
+        "prefill_gpus" => Ok(Axis::PrefillGpus(ints(name, values)?)),
+        "batch" => Ok(Axis::Batch(ints(name, values)?)),
+        "power_w" => Ok(Axis::PowerW(floats(name, values)?)),
+        "burst_factor" => Ok(Axis::BurstFactor(floats(name, values)?)),
+        "slo_scale" => Ok(Axis::SloScale(floats(name, values)?)),
+        "rate_per_gpu" => Ok(Axis::RatePerGpu(floats(name, values)?)),
+        other => Err(ScenarioError(format!("unknown axis '{other}'"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::SECOND;
+
+    #[test]
+    fn full_scenario_round_trip() {
+        let s = Scenario::from_toml(
+            r#"
+name = "grid"
+seed = 7
+requests = 200
+rate_per_gpu = 1.25
+
+[workload]
+kind = "longbench"
+burst_frac = 0.3
+
+[slo]
+ttft_ms = 500
+tpot_ms = 25
+
+[base]
+preset = "rapid-600"
+
+[axes]
+power_w = [500, 600]
+rate_per_gpu = [0.5, 1.0, 1.5]
+"#,
+        )
+        .unwrap();
+        assert_eq!(s.name, "grid");
+        assert_eq!(s.seed, 7);
+        assert_eq!(s.requests, 200);
+        assert_eq!(s.burst_frac, 0.3);
+        assert_eq!(s.slo.ttft, SECOND / 2);
+        assert_eq!(s.base.name, "DynGPU-DynPower");
+        assert_eq!(s.axes.len(), 2);
+        assert_eq!(s.axes[0].key(), "power_w");
+        assert_eq!(s.axes[1].key(), "rate_per_gpu");
+        assert_eq!(s.n_cells(), 6);
+    }
+
+    #[test]
+    fn defaults_when_sparse() {
+        let s = Scenario::from_toml("name = \"tiny\"").unwrap();
+        assert_eq!(s.seed, 42);
+        assert_eq!(s.requests, 1200);
+        assert_eq!(s.workload, WorkloadSpec::LongBench);
+        assert_eq!(s.n_cells(), 1);
+    }
+
+    #[test]
+    fn preset_and_policy_axes() {
+        let s = Scenario::from_toml(
+            r#"
+[axes]
+preset = ["4p4d-600", "5p3d-600"]
+policy = ["static", "rapid"]
+rate_per_gpu = [1.0]
+"#,
+        )
+        .unwrap();
+        assert_eq!(s.axes.len(), 3);
+        assert_eq!(s.axes[0].key(), "config");
+        assert_eq!(s.axes[1].key(), "policy");
+        assert_eq!(s.n_cells(), 4);
+    }
+
+    #[test]
+    fn sonnet_workload_requires_shape() {
+        assert!(Scenario::from_toml("[workload]\nkind = \"sonnet\"").is_err());
+        let s = Scenario::from_toml(
+            "[workload]\nkind = \"sonnet\"\ninput_tokens = 3000\noutput_tokens = 96",
+        )
+        .unwrap();
+        assert_eq!(
+            s.workload,
+            WorkloadSpec::Sonnet {
+                input_tokens: 3000,
+                output_tokens: 96
+            }
+        );
+    }
+
+    #[test]
+    fn bad_inputs_rejected() {
+        assert!(Scenario::from_toml("requests = -1").is_err());
+        assert!(Scenario::from_toml("[axes]\nrate_per_gpu = [0.0]").is_err());
+        assert!(Scenario::from_toml("[axes]\nwarp_speed = [9]").is_err());
+        assert!(Scenario::from_toml("[axes]\nrate_per_gpu = 2").is_err());
+        assert!(Scenario::from_toml("[axes]\npolicy = [\"yolo\"]").is_err());
+        assert!(Scenario::from_toml("[axes]\npreset = [\"nope\"]").is_err());
+        assert!(Scenario::from_toml("[workload]\nkind = \"tweets\"").is_err());
+        assert!(Scenario::from_toml("[base]\npreset = \"nope\"").is_err());
+        // mixed + burst_factor is a structural conflict
+        assert!(Scenario::from_toml(
+            "[workload]\nkind = \"mixed\"\n[axes]\nburst_factor = [2.0]"
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,931 @@
+//! Declarative experiment surface: `Scenario` → `Study` → `StudyResult`.
+//!
+//! Every paper figure, design-space sweep and "what if" question is the
+//! same shape: a workload + SLO + a grid of swept parameters, each cell
+//! an independent deterministic simulation. A [`Scenario`] declares that
+//! shape (base config, workload spec, one or more [`Axis`]es); a
+//! [`Study`] expands the axis grid and fans every cell through
+//! `util::par::parallel_map_threads` (bit-identical at any thread
+//! count); the [`StudyResult`] holds typed [`Cell`]s — `RunResult`
+//! aggregates plus per-cell invariant [`ShapeCheck`]s — consumed by the
+//! figure drivers, the pluggable [`emit`] renderers (text/JSON/CSV) and
+//! the `rapid study` CLI. Scenario TOML files (`scenarios/*.toml`) load
+//! through [`file`], turning new experiments into data instead of code.
+
+pub mod emit;
+pub mod file;
+
+use crate::config::{presets, ClusterConfig, ControlPolicy, Topology};
+use crate::metrics::RunResult;
+use crate::power::PowerModel;
+use crate::sim::{self, SimOptions};
+use crate::types::{Micros, Slo};
+use crate::util::par::parallel_map_threads;
+use crate::util::rng::Rng;
+use crate::workload::sonnet::{mixed_phases, MixedPhasesSpec, Sonnet};
+use crate::workload::{build_trace, longbench::LongBench, ArrivalProcess, Trace};
+
+// ---------------------------------------------------------------------------
+// Shape checks (shared with the figure drivers; re-exported by
+// `experiments`).
+// ---------------------------------------------------------------------------
+
+/// One shape assertion: description + pass/fail + the measured detail.
+#[derive(Debug, Clone)]
+pub struct ShapeCheck {
+    pub what: String,
+    pub pass: bool,
+    pub detail: String,
+}
+
+impl ShapeCheck {
+    pub fn new(what: impl Into<String>, pass: bool, detail: impl Into<String>) -> Self {
+        ShapeCheck {
+            what: what.into(),
+            pass,
+            detail: detail.into(),
+        }
+    }
+}
+
+/// Render checks as a PASS/FAIL block.
+pub fn render_checks(checks: &[ShapeCheck]) -> String {
+    let mut out = String::new();
+    for c in checks {
+        out.push_str(&format!(
+            "  [{}] {} ({})\n",
+            if c.pass { "PASS" } else { "FAIL" },
+            c.what,
+            c.detail
+        ));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rate-curve analysis helpers (shared across figures).
+// ---------------------------------------------------------------------------
+
+/// A point on an attainment-vs-rate curve.
+#[derive(Debug, Clone)]
+pub struct RatePoint {
+    pub qps_per_gpu: f64,
+    pub attainment: f64,
+    pub goodput_qps: f64,
+    pub qps_per_kw: f64,
+}
+
+/// Highest swept rate whose attainment still meets `threshold`
+/// (the paper's "sustainable rate at 80% SLO attainment").
+pub fn sustainable_rate(points: &[RatePoint], threshold: f64) -> f64 {
+    points
+        .iter()
+        .filter(|p| p.attainment >= threshold)
+        .map(|p| p.qps_per_gpu)
+        .fold(0.0, f64::max)
+}
+
+/// Linear-interpolated rate at which attainment crosses `threshold`
+/// (finer than `sustainable_rate` for factor comparisons).
+pub fn crossing_rate(points: &[RatePoint], threshold: f64) -> f64 {
+    let mut prev: Option<&RatePoint> = None;
+    for p in points {
+        if let Some(q) = prev {
+            if q.attainment >= threshold && p.attainment < threshold {
+                let frac = (q.attainment - threshold) / (q.attainment - p.attainment);
+                return q.qps_per_gpu + frac * (p.qps_per_gpu - q.qps_per_gpu);
+            }
+        }
+        prev = Some(p);
+    }
+    sustainable_rate(points, threshold)
+}
+
+// ---------------------------------------------------------------------------
+// Trace builders (the canonical seed→trace conventions every cell uses).
+// ---------------------------------------------------------------------------
+
+/// Build a LongBench trace at a node-level rate (QPS across all GPUs).
+pub fn longbench_trace(seed: u64, node_qps: f64, n: usize, slo: Slo) -> Trace {
+    longbench_trace_bursty(seed, node_qps, n, slo, 1.0, 0.0)
+}
+
+/// LongBench trace with optional Markov-modulated bursts: `factor <= 1`
+/// keeps plain Poisson arrivals; the RNG fork structure is identical in
+/// both cases so the Poisson path stays bit-stable.
+pub fn longbench_trace_bursty(
+    seed: u64,
+    node_qps: f64,
+    n: usize,
+    slo: Slo,
+    factor: f64,
+    burst_frac: f64,
+) -> Trace {
+    let mut root = Rng::new(seed);
+    let mut ap = if factor > 1.0 {
+        ArrivalProcess::bursty(root.fork(1), node_qps, factor, burst_frac)
+    } else {
+        ArrivalProcess::poisson(root.fork(1), node_qps)
+    };
+    let mut sizes = LongBench::new(root.fork(2));
+    build_trace(n, &mut ap, &mut sizes, slo)
+}
+
+/// Fixed-shape Sonnet trace (controlled workloads), optionally bursty.
+pub fn sonnet_trace(
+    seed: u64,
+    node_qps: f64,
+    n: usize,
+    slo: Slo,
+    input_tokens: u32,
+    output_tokens: u32,
+    factor: f64,
+    burst_frac: f64,
+) -> Trace {
+    let mut root = Rng::new(seed);
+    let mut ap = if factor > 1.0 {
+        ArrivalProcess::bursty(root.fork(1), node_qps, factor, burst_frac)
+    } else {
+        ArrivalProcess::poisson(root.fork(1), node_qps)
+    };
+    let mut sizes = Sonnet::new(root.fork(2), input_tokens, output_tokens);
+    build_trace(n, &mut ap, &mut sizes, slo)
+}
+
+/// The Fig 8/9 two-phase mixed Sonnet trace: `n / 2` prefill-heavy then
+/// `n - n / 2` decode-heavy requests at a node-level rate.
+pub fn mixed_phases_trace(seed: u64, n: usize, node_qps: f64) -> Trace {
+    mixed_phases(
+        seed,
+        MixedPhasesSpec {
+            prefill_heavy_count: n / 2,
+            decode_heavy_count: n - n / 2,
+            rate_qps: node_qps,
+            ..Default::default()
+        },
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Scenario declaration.
+// ---------------------------------------------------------------------------
+
+/// What each grid cell runs.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkloadSpec {
+    /// Long-tailed prompts capped at 8K tokens (paper §4), Poisson or
+    /// bursty arrivals.
+    LongBench,
+    /// Fixed-shape requests with small jitter (controlled experiments).
+    Sonnet {
+        input_tokens: u32,
+        output_tokens: u32,
+    },
+    /// The Fig 8/9 two-phase trace (prefill-heavy then decode-heavy,
+    /// TPOT SLO tightening at the boundary). Request count splits in two.
+    MixedPhases,
+    /// Analytic power-model probe: prefill batch latency at the cell's
+    /// power/batch (Fig 4a). Produces a scalar cell, no simulation.
+    PrefillMicrobench { input_tokens: u32 },
+    /// Analytic power-model probe: decode step latency (Fig 4b).
+    DecodeMicrobench { context_tokens: f64 },
+}
+
+impl WorkloadSpec {
+    fn is_micro(&self) -> bool {
+        matches!(
+            self,
+            WorkloadSpec::PrefillMicrobench { .. } | WorkloadSpec::DecodeMicrobench { .. }
+        )
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            WorkloadSpec::LongBench => "longbench",
+            WorkloadSpec::Sonnet { .. } => "sonnet",
+            WorkloadSpec::MixedPhases => "mixed",
+            WorkloadSpec::PrefillMicrobench { .. } => "prefill-microbench",
+            WorkloadSpec::DecodeMicrobench { .. } => "decode-microbench",
+        }
+    }
+}
+
+/// One sweep dimension. A scenario's grid is the cartesian product of
+/// its axes, expanded in declaration order with the **last axis
+/// innermost** (it becomes the column axis of the text tables).
+#[derive(Debug, Clone)]
+pub enum Axis {
+    /// Cluster configurations — the "curves" of most figures.
+    Config(Vec<ClusterConfig>),
+    /// Per-GPU request rate (QPS/GPU); node rate = rate × total GPUs.
+    RatePerGpu(Vec<f64>),
+    /// Uniform per-GPU power `w`: caps = `w`, node budget = `w × n_gpus`
+    /// (the §5.1 budget parametrization, `presets::uniform_power`). For
+    /// microbench workloads this is the model's power-cap argument.
+    PowerW(Vec<f64>),
+    /// Identical-node cluster sizes.
+    NNodes(Vec<usize>),
+    /// Controller policy overrides.
+    Policy(Vec<ControlPolicy>),
+    /// Uniform SLO scale factors applied to the scenario SLO (Fig 7).
+    SloScale(Vec<f64>),
+    /// Markov-modulated burst factor; `1.0` = plain Poisson.
+    BurstFactor(Vec<f64>),
+    /// Prefill/decode split override: prefill GPUs out of `n_gpus`.
+    PrefillGpus(Vec<usize>),
+    /// Batch size (microbench workloads).
+    Batch(Vec<usize>),
+}
+
+impl Axis {
+    /// Stable key, used for coords, TOML axes and emitter columns.
+    pub fn key(&self) -> &'static str {
+        match self {
+            Axis::Config(_) => "config",
+            Axis::RatePerGpu(_) => "rate_per_gpu",
+            Axis::PowerW(_) => "power_w",
+            Axis::NNodes(_) => "n_nodes",
+            Axis::Policy(_) => "policy",
+            Axis::SloScale(_) => "slo_scale",
+            Axis::BurstFactor(_) => "burst_factor",
+            Axis::PrefillGpus(_) => "prefill_gpus",
+            Axis::Batch(_) => "batch",
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Axis::Config(v) => v.len(),
+            Axis::RatePerGpu(v) | Axis::PowerW(v) | Axis::SloScale(v) | Axis::BurstFactor(v) => {
+                v.len()
+            }
+            Axis::NNodes(v) | Axis::PrefillGpus(v) | Axis::Batch(v) => v.len(),
+            Axis::Policy(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Human label of the i-th value (table headers, coords).
+    pub fn label(&self, i: usize) -> String {
+        match self {
+            Axis::Config(v) => v[i].name.clone(),
+            Axis::RatePerGpu(v) | Axis::PowerW(v) | Axis::SloScale(v) | Axis::BurstFactor(v) => {
+                format!("{}", v[i])
+            }
+            Axis::NNodes(v) | Axis::PrefillGpus(v) | Axis::Batch(v) => format!("{}", v[i]),
+            Axis::Policy(v) => v[i].name().to_string(),
+        }
+    }
+}
+
+/// A declarative experiment: workload + SLO + base config + sweep axes.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: String,
+    pub seed: u64,
+    /// Requests per cell (mixed workloads split this across phases).
+    pub requests: usize,
+    /// Starting configuration; a `Config` axis replaces it per cell.
+    pub base: ClusterConfig,
+    pub workload: WorkloadSpec,
+    /// Baseline SLO; an `SloScale` axis scales it per cell.
+    pub slo: Slo,
+    /// Per-GPU rate used when no `RatePerGpu` axis is declared.
+    pub rate_per_gpu: f64,
+    /// Long-run fraction of time bursting when a `BurstFactor` axis is
+    /// active (paper-style Markov modulation).
+    pub burst_frac: f64,
+    /// Telemetry sampling period override (Fig 3 wants 10 ms).
+    pub sample_period: Option<Micros>,
+    pub axes: Vec<Axis>,
+}
+
+#[derive(Debug)]
+pub struct ScenarioError(pub String);
+
+impl std::fmt::Display for ScenarioError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "scenario: {}", self.0)
+    }
+}
+
+impl std::error::Error for ScenarioError {}
+
+impl Scenario {
+    pub fn new(name: impl Into<String>, base: ClusterConfig) -> Self {
+        Scenario {
+            name: name.into(),
+            seed: 42,
+            requests: 1200,
+            base,
+            workload: WorkloadSpec::LongBench,
+            slo: Slo::paper_default(),
+            rate_per_gpu: 1.5,
+            burst_frac: 0.2,
+            sample_period: None,
+            axes: Vec::new(),
+        }
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn requests(mut self, n: usize) -> Self {
+        self.requests = n;
+        self
+    }
+
+    pub fn workload(mut self, w: WorkloadSpec) -> Self {
+        self.workload = w;
+        self
+    }
+
+    pub fn slo(mut self, slo: Slo) -> Self {
+        self.slo = slo;
+        self
+    }
+
+    pub fn rate(mut self, rate_per_gpu: f64) -> Self {
+        self.rate_per_gpu = rate_per_gpu;
+        self
+    }
+
+    pub fn sample_period(mut self, period: Micros) -> Self {
+        self.sample_period = Some(period);
+        self
+    }
+
+    pub fn axis(mut self, axis: Axis) -> Self {
+        self.axes.push(axis);
+        self
+    }
+
+    /// Total grid size (product of axis lengths; 1 with no axes).
+    pub fn n_cells(&self) -> usize {
+        self.axes.iter().map(Axis::len).product()
+    }
+
+    /// Structural validation, run before any cell executes.
+    pub fn validate(&self) -> Result<(), ScenarioError> {
+        let err = |m: String| Err(ScenarioError(m));
+        if self.requests == 0 {
+            return err("requests must be > 0".into());
+        }
+        if self.rate_per_gpu <= 0.0 {
+            return err(format!("rate_per_gpu {} must be > 0", self.rate_per_gpu));
+        }
+        let mut seen = Vec::new();
+        for axis in &self.axes {
+            if axis.is_empty() {
+                return err(format!("axis '{}' has no values", axis.key()));
+            }
+            if seen.contains(&axis.key()) {
+                return err(format!("duplicate axis '{}'", axis.key()));
+            }
+            seen.push(axis.key());
+            match axis {
+                Axis::RatePerGpu(v) if v.iter().any(|&r| r <= 0.0) => {
+                    return err("rate_per_gpu values must be > 0".into());
+                }
+                Axis::Batch(v) if v.iter().any(|&b| b == 0) => {
+                    return err("batch values must be >= 1".into());
+                }
+                _ => {}
+            }
+        }
+        let has = |k: &str| seen.contains(&k);
+        if has("burst_factor") {
+            if self.workload == WorkloadSpec::MixedPhases {
+                return err("burst_factor axis is not supported with the mixed workload".into());
+            }
+            if !(0.0..1.0).contains(&self.burst_frac) {
+                return err(format!("burst_frac {} must be in [0, 1)", self.burst_frac));
+            }
+            if let Some(Axis::BurstFactor(v)) = self.axes.iter().find(|a| a.key() == "burst_factor")
+            {
+                if v.iter().any(|&f| f < 1.0) {
+                    return err("burst factors must be >= 1 (1 = plain Poisson)".into());
+                }
+            }
+        }
+        if has("batch") && !self.workload.is_micro() {
+            return err("batch axis only applies to microbench workloads".into());
+        }
+        if self.workload.is_micro() {
+            for k in ["rate_per_gpu", "slo_scale", "burst_factor", "n_nodes"] {
+                if has(k) {
+                    return err(format!("{k} axis does not apply to microbench workloads"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Grid expansion.
+// ---------------------------------------------------------------------------
+
+/// A fully-resolved grid point, ready to run.
+#[derive(Debug, Clone)]
+pub struct CellSpec {
+    /// (axis key, value label) pairs in axis order.
+    pub coords: Vec<(String, String)>,
+    pub config: ClusterConfig,
+    pub rate_per_gpu: f64,
+    pub slo: Slo,
+    /// `1.0` = plain Poisson arrivals.
+    pub burst_factor: f64,
+    /// Model power cap for microbench cells (from a `PowerW` axis).
+    pub power_w: Option<f64>,
+    /// Batch size for microbench cells.
+    pub batch: usize,
+}
+
+fn index_tuples(axes: &[Axis]) -> Vec<Vec<usize>> {
+    let mut tuples = vec![Vec::new()];
+    for axis in axes {
+        let mut next = Vec::with_capacity(tuples.len() * axis.len());
+        for t in &tuples {
+            for i in 0..axis.len() {
+                let mut t2 = t.clone();
+                t2.push(i);
+                next.push(t2);
+            }
+        }
+        tuples = next;
+    }
+    tuples
+}
+
+fn resolve_cell(scenario: &Scenario, tuple: &[usize]) -> Result<CellSpec, ScenarioError> {
+    let mut spec = CellSpec {
+        coords: Vec::with_capacity(tuple.len()),
+        config: scenario.base.clone(),
+        rate_per_gpu: scenario.rate_per_gpu,
+        slo: scenario.slo,
+        burst_factor: 1.0,
+        power_w: None,
+        batch: 1,
+    };
+    for (axis, &i) in scenario.axes.iter().zip(tuple) {
+        spec.coords.push((axis.key().to_string(), axis.label(i)));
+        match axis {
+            Axis::Config(v) => spec.config = v[i].clone(),
+            Axis::RatePerGpu(v) => spec.rate_per_gpu = v[i],
+            Axis::PowerW(v) => {
+                spec.config = presets::uniform_power(spec.config, v[i]);
+                // Caps changed; keep the reported name truthful.
+                spec.config.name = format!("{}@{:.0}W", spec.config.name, v[i]);
+                spec.power_w = Some(v[i]);
+            }
+            Axis::NNodes(v) => spec.config = presets::scaled_to_nodes(spec.config, v[i]),
+            Axis::Policy(v) => spec.config.control = v[i],
+            Axis::SloScale(v) => spec.slo = scenario.slo.scaled(v[i]),
+            Axis::BurstFactor(v) => spec.burst_factor = v[i],
+            Axis::PrefillGpus(v) => {
+                let p = v[i];
+                if p == 0 || p >= spec.config.n_gpus {
+                    return Err(ScenarioError(format!(
+                        "prefill_gpus {p} must be in 1..{}",
+                        spec.config.n_gpus
+                    )));
+                }
+                spec.config.topology = Topology::Disaggregated {
+                    prefill: p,
+                    decode: spec.config.n_gpus - p,
+                };
+            }
+            Axis::Batch(v) => spec.batch = v[i],
+        }
+    }
+    spec.config
+        .validate()
+        .map_err(|e| ScenarioError(format!("cell {:?}: {e}", spec.coords)))?;
+    Ok(spec)
+}
+
+// ---------------------------------------------------------------------------
+// Study runner.
+// ---------------------------------------------------------------------------
+
+/// Expands a [`Scenario`]'s grid and runs every cell in parallel.
+pub struct Study {
+    pub scenario: Scenario,
+}
+
+impl Study {
+    pub fn new(scenario: Scenario) -> Self {
+        Study { scenario }
+    }
+
+    /// Expand the axis grid into fully-resolved cell specs (validated,
+    /// in grid order: first axis outermost, last innermost).
+    pub fn cells(&self) -> Result<Vec<CellSpec>, ScenarioError> {
+        self.scenario.validate()?;
+        index_tuples(&self.scenario.axes)
+            .iter()
+            .map(|t| resolve_cell(&self.scenario, t))
+            .collect()
+    }
+
+    /// Run the study. `threads` overrides the worker count (wins over
+    /// `RAPID_SWEEP_THREADS`); results are bit-identical regardless.
+    pub fn run(&self, threads: Option<usize>) -> Result<StudyResult, ScenarioError> {
+        let specs = self.cells()?;
+        let cells = parallel_map_threads(&specs, threads, |spec| run_cell(&self.scenario, spec));
+        Ok(StudyResult {
+            scenario: self.scenario.clone(),
+            cells,
+        })
+    }
+}
+
+/// One evaluated grid point.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    /// (axis key, value label) pairs in axis order.
+    pub coords: Vec<(String, String)>,
+    pub config: ClusterConfig,
+    pub rate_per_gpu: f64,
+    pub slo: Slo,
+    pub out: CellOut,
+    /// Per-cell invariant checks (completion, budget conformance).
+    pub checks: Vec<ShapeCheck>,
+}
+
+#[derive(Debug, Clone)]
+pub enum CellOut {
+    /// Full simulation output.
+    Sim(RunResult),
+    /// Analytic microbench value (latency in microseconds).
+    Scalar(f64),
+}
+
+impl Cell {
+    pub fn result(&self) -> Option<&RunResult> {
+        match &self.out {
+            CellOut::Sim(r) => Some(r),
+            CellOut::Scalar(_) => None,
+        }
+    }
+
+    pub fn into_result(self) -> Option<RunResult> {
+        match self.out {
+            CellOut::Sim(r) => Some(r),
+            CellOut::Scalar(_) => None,
+        }
+    }
+
+    /// Headline value: attainment for sim cells, the scalar otherwise.
+    pub fn value(&self) -> f64 {
+        match &self.out {
+            CellOut::Sim(r) => r.attainment(),
+            CellOut::Scalar(v) => *v,
+        }
+    }
+
+    pub fn attainment(&self) -> f64 {
+        self.result().map_or(0.0, RunResult::attainment)
+    }
+
+    pub fn goodput_qps(&self) -> f64 {
+        self.result().map_or(0.0, RunResult::goodput_qps)
+    }
+
+    pub fn qps_per_kw(&self) -> f64 {
+        self.result().map_or(0.0, RunResult::qps_per_kw)
+    }
+
+    pub fn rate_point(&self) -> RatePoint {
+        RatePoint {
+            qps_per_gpu: self.rate_per_gpu,
+            attainment: self.attainment(),
+            goodput_qps: self.goodput_qps(),
+            qps_per_kw: self.qps_per_kw(),
+        }
+    }
+}
+
+/// Typed grid of evaluated cells, in grid order.
+#[derive(Debug, Clone)]
+pub struct StudyResult {
+    pub scenario: Scenario,
+    pub cells: Vec<Cell>,
+}
+
+impl StudyResult {
+    /// (passed, total) across every cell's invariant checks.
+    pub fn checks_passed(&self) -> (usize, usize) {
+        let total: usize = self.cells.iter().map(|c| c.checks.len()).sum();
+        let passed = self
+            .cells
+            .iter()
+            .flat_map(|c| &c.checks)
+            .filter(|c| c.pass)
+            .count();
+        (passed, total)
+    }
+
+    /// View a `[Config, RatePerGpu]` study as per-config rate curves
+    /// (the shape most figures plot).
+    pub fn rate_curves(&self) -> Vec<(ClusterConfig, Vec<RatePoint>)> {
+        let [Axis::Config(cfgs), Axis::RatePerGpu(rates)] = &self.scenario.axes[..] else {
+            panic!("rate_curves() needs exactly [Config, RatePerGpu] axes");
+        };
+        let nr = rates.len();
+        cfgs.iter()
+            .enumerate()
+            .map(|(ci, cfg)| {
+                let pts = self.cells[ci * nr..(ci + 1) * nr]
+                    .iter()
+                    .map(Cell::rate_point)
+                    .collect();
+                (cfg.clone(), pts)
+            })
+            .collect()
+    }
+}
+
+fn build_cell_trace(scenario: &Scenario, spec: &CellSpec) -> Trace {
+    let node_qps = spec.rate_per_gpu * spec.config.total_gpus() as f64;
+    match &scenario.workload {
+        WorkloadSpec::LongBench => longbench_trace_bursty(
+            scenario.seed,
+            node_qps,
+            scenario.requests,
+            spec.slo,
+            spec.burst_factor,
+            scenario.burst_frac,
+        ),
+        WorkloadSpec::Sonnet {
+            input_tokens,
+            output_tokens,
+        } => sonnet_trace(
+            scenario.seed,
+            node_qps,
+            scenario.requests,
+            spec.slo,
+            *input_tokens,
+            *output_tokens,
+            spec.burst_factor,
+            scenario.burst_frac,
+        ),
+        WorkloadSpec::MixedPhases => mixed_phases_trace(scenario.seed, scenario.requests, node_qps),
+        WorkloadSpec::PrefillMicrobench { .. } | WorkloadSpec::DecodeMicrobench { .. } => {
+            unreachable!("microbench cells do not build traces")
+        }
+    }
+}
+
+fn cell_checks(config: &ClusterConfig, n_requests: usize, res: &RunResult) -> Vec<ShapeCheck> {
+    let mut checks = vec![
+        ShapeCheck::new(
+            "all requests completed or accounted",
+            res.records.len() == n_requests,
+            format!("{}/{n_requests} records", res.records.len()),
+        ),
+        ShapeCheck::new(
+            "attainment within [0, 1]",
+            (0.0..=1.0).contains(&res.attainment()),
+            format!("{:.4}", res.attainment()),
+        ),
+    ];
+    if config.enforce_budget {
+        let budget = config.cluster_budget();
+        checks.push(ShapeCheck::new(
+            "provisioned power within cluster budget",
+            res.mean_provisioned_w <= budget + 1e-6,
+            format!("{:.0} W <= {:.0} W", res.mean_provisioned_w, budget),
+        ));
+    }
+    checks
+}
+
+fn run_cell(scenario: &Scenario, spec: &CellSpec) -> Cell {
+    let (out, checks) = match &scenario.workload {
+        WorkloadSpec::PrefillMicrobench { input_tokens } => {
+            let model = PowerModel::new(spec.config.perf.clone());
+            let w = spec.power_w.unwrap_or(spec.config.prefill_cap_w);
+            let t = model.prefill_batch_time(input_tokens * spec.batch as u32, w);
+            (CellOut::Scalar(t as f64), Vec::new())
+        }
+        WorkloadSpec::DecodeMicrobench { context_tokens } => {
+            let model = PowerModel::new(spec.config.perf.clone());
+            let w = spec.power_w.unwrap_or(spec.config.decode_cap_w);
+            let t = model.decode_step_time(spec.batch, *context_tokens, w);
+            (CellOut::Scalar(t as f64), Vec::new())
+        }
+        _ => {
+            let trace = build_cell_trace(scenario, spec);
+            let n_requests = trace.len();
+            let mut opts = SimOptions::default();
+            if let Some(p) = scenario.sample_period {
+                opts.sample_period = p;
+            }
+            let res = sim::run(&spec.config, &trace, &opts);
+            let checks = cell_checks(&spec.config, n_requests, &res);
+            (CellOut::Sim(res), checks)
+        }
+    };
+    Cell {
+        coords: spec.coords.clone(),
+        config: spec.config.clone(),
+        rate_per_gpu: spec.rate_per_gpu,
+        slo: spec.slo,
+        out,
+        checks,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{MILLIS, SECOND};
+
+    fn pt(q: f64, a: f64) -> RatePoint {
+        RatePoint {
+            qps_per_gpu: q,
+            attainment: a,
+            goodput_qps: 0.0,
+            qps_per_kw: 0.0,
+        }
+    }
+
+    #[test]
+    fn sustainable_rate_picks_last_above_threshold() {
+        let pts = vec![pt(0.5, 0.99), pt(1.0, 0.92), pt(1.5, 0.70), pt(2.0, 0.30)];
+        assert_eq!(sustainable_rate(&pts, 0.8), 1.0);
+        assert_eq!(sustainable_rate(&pts, 0.95), 0.5);
+        assert_eq!(sustainable_rate(&pts, 0.2), 2.0);
+    }
+
+    #[test]
+    fn crossing_rate_interpolates() {
+        let pts = vec![pt(1.0, 0.9), pt(2.0, 0.7)];
+        let x = crossing_rate(&pts, 0.8);
+        assert!((x - 1.5).abs() < 1e-9, "x={x}");
+    }
+
+    #[test]
+    fn longbench_trace_matches_rate() {
+        let t = longbench_trace(1, 12.0, 600, Slo::paper_default());
+        assert_eq!(t.len(), 600);
+        assert!((t.offered_qps() / 12.0 - 1.0).abs() < 0.2);
+    }
+
+    #[test]
+    fn grid_expands_last_axis_innermost() {
+        let s = Scenario::new("t", presets::p4d4(600.0))
+            .axis(Axis::PowerW(vec![500.0, 600.0]))
+            .axis(Axis::RatePerGpu(vec![0.5, 1.0, 1.5]));
+        let cells = Study::new(s).cells().unwrap();
+        assert_eq!(cells.len(), 6);
+        // power outermost, rate innermost
+        assert_eq!(cells[0].coords[0].1, "500");
+        assert_eq!(cells[0].coords[1].1, "0.5");
+        assert_eq!(cells[1].coords[1].1, "1");
+        assert_eq!(cells[3].coords[0].1, "600");
+        assert_eq!(cells[3].coords[1].1, "0.5");
+        // power axis reparametrizes the config like presets::p4d4(w),
+        // and the reported name tracks the override
+        assert_eq!(cells[0].config.prefill_cap_w, 500.0);
+        assert_eq!(cells[0].config.node_budget_w, 4000.0);
+        assert_eq!(cells[0].config.name, "4P4D-600W@500W");
+    }
+
+    #[test]
+    fn no_axes_is_one_base_cell() {
+        let s = Scenario::new("t", presets::p4d4(600.0));
+        assert_eq!(s.n_cells(), 1);
+        let cells = Study::new(s).cells().unwrap();
+        assert_eq!(cells.len(), 1);
+        assert!(cells[0].coords.is_empty());
+    }
+
+    #[test]
+    fn axis_overrides_apply_in_order() {
+        let s = Scenario::new("t", presets::p4d4(600.0))
+            .axis(Axis::Policy(vec![ControlPolicy::DynPowerGpu]))
+            .axis(Axis::PrefillGpus(vec![6]))
+            .axis(Axis::SloScale(vec![0.5]));
+        let cells = Study::new(s).cells().unwrap();
+        assert_eq!(cells.len(), 1);
+        let c = &cells[0];
+        assert_eq!(c.config.control, ControlPolicy::DynPowerGpu);
+        assert_eq!(
+            c.config.topology,
+            Topology::Disaggregated {
+                prefill: 6,
+                decode: 2
+            }
+        );
+        assert_eq!(c.slo.ttft, SECOND / 2);
+        assert_eq!(c.slo.tpot, 20 * MILLIS);
+    }
+
+    #[test]
+    fn invalid_scenarios_rejected() {
+        let dup = Scenario::new("t", presets::p4d4(600.0))
+            .axis(Axis::RatePerGpu(vec![1.0]))
+            .axis(Axis::RatePerGpu(vec![2.0]));
+        assert!(dup.validate().is_err());
+        let burst_mixed = Scenario::new("t", presets::p4d4(600.0))
+            .workload(WorkloadSpec::MixedPhases)
+            .axis(Axis::BurstFactor(vec![4.0]));
+        assert!(burst_mixed.validate().is_err());
+        let batch_sim =
+            Scenario::new("t", presets::p4d4(600.0)).axis(Axis::Batch(vec![1, 2]));
+        assert!(batch_sim.validate().is_err());
+        let empty_axis =
+            Scenario::new("t", presets::p4d4(600.0)).axis(Axis::RatePerGpu(Vec::new()));
+        assert!(empty_axis.validate().is_err());
+        let zero_rate =
+            Scenario::new("t", presets::p4d4(600.0)).axis(Axis::RatePerGpu(vec![0.5, 0.0]));
+        assert!(zero_rate.validate().is_err());
+        let bad_split =
+            Scenario::new("t", presets::p4d4(600.0)).axis(Axis::PrefillGpus(vec![8]));
+        assert!(Study::new(bad_split).cells().is_err());
+    }
+
+    #[test]
+    fn microbench_cells_match_direct_model_calls() {
+        let s = Scenario::new("fig4a", presets::p4d4(600.0))
+            .workload(WorkloadSpec::PrefillMicrobench { input_tokens: 4096 })
+            .axis(Axis::Batch(vec![1, 2]))
+            .axis(Axis::PowerW(vec![400.0, 750.0]));
+        let study = Study::new(s).run(Some(1)).unwrap();
+        assert_eq!(study.cells.len(), 4);
+        let model = PowerModel::new(crate::config::PerfModelConfig::default());
+        for (cell, (b, w)) in study
+            .cells
+            .iter()
+            .zip([(1u32, 400.0), (1, 750.0), (2, 400.0), (2, 750.0)])
+        {
+            let expect = model.prefill_batch_time(4096 * b, w) as f64;
+            assert_eq!(cell.value(), expect);
+            assert!(cell.result().is_none());
+        }
+    }
+
+    #[test]
+    fn study_results_bit_identical_across_thread_counts() {
+        let s = Scenario::new("t", presets::p4d4(600.0))
+            .requests(60)
+            .seed(7)
+            .axis(Axis::RatePerGpu(vec![0.5, 1.0]));
+        let serial = Study::new(s.clone()).run(Some(1)).unwrap();
+        let par = Study::new(s).run(Some(4)).unwrap();
+        for (a, b) in serial.cells.iter().zip(&par.cells) {
+            assert_eq!(a.rate_per_gpu, b.rate_per_gpu);
+            assert_eq!(a.attainment(), b.attainment());
+            assert_eq!(a.goodput_qps(), b.goodput_qps());
+        }
+    }
+
+    #[test]
+    fn rate_curves_group_by_config() {
+        let configs = vec![presets::p4d4(600.0), presets::p5d3_600()];
+        let rates = vec![0.5, 1.0, 1.5];
+        let s = Scenario::new("t", presets::p4d4(600.0))
+            .requests(40)
+            .seed(3)
+            .axis(Axis::Config(configs))
+            .axis(Axis::RatePerGpu(rates.clone()));
+        let curves = Study::new(s).run(None).unwrap().rate_curves();
+        assert_eq!(curves.len(), 2);
+        for (_, pts) in &curves {
+            assert_eq!(pts.len(), rates.len());
+            for (p, &r) in pts.iter().zip(rates.iter()) {
+                assert_eq!(p.qps_per_gpu, r);
+            }
+        }
+    }
+
+    #[test]
+    fn sim_cells_carry_invariant_checks() {
+        let s = Scenario::new("t", presets::p4d4(600.0)).requests(40).seed(5);
+        let study = Study::new(s).run(Some(1)).unwrap();
+        let cell = &study.cells[0];
+        assert!(!cell.checks.is_empty());
+        assert!(cell.checks.iter().all(|c| c.pass), "{:?}", cell.checks);
+        let (passed, total) = study.checks_passed();
+        assert_eq!(passed, total);
+    }
+
+    #[test]
+    fn bursty_axis_changes_the_trace_but_not_the_grid() {
+        let s = Scenario::new("t", presets::p4d4(600.0))
+            .requests(50)
+            .axis(Axis::BurstFactor(vec![1.0, 4.0]));
+        let cells = Study::new(s).cells().unwrap();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].burst_factor, 1.0);
+        assert_eq!(cells[1].burst_factor, 4.0);
+    }
+}

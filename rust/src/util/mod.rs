@@ -1,6 +1,8 @@
-//! Shared substrates: PRNG, statistics, JSON, property testing.
+//! Shared substrates: PRNG, statistics, JSON, parallel fan-out,
+//! property testing.
 
 pub mod check;
 pub mod json;
+pub mod par;
 pub mod rng;
 pub mod stats;

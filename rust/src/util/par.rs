@@ -1,0 +1,112 @@
+//! Work-stealing fan-out for independent sweep points.
+//!
+//! Moved here from `experiments` so the `scenario` layer (and anything
+//! else below the experiment drivers) can fan work without a layering
+//! cycle; `experiments` re-exports these names for compatibility.
+
+/// Worker threads for sweep fan-out with an explicit override: a
+/// caller-supplied count (e.g. a `--threads` CLI flag) always wins,
+/// then the `RAPID_SWEEP_THREADS` env var, then the machine's
+/// parallelism. `1` forces serial execution (useful for timing
+/// baselines — see `benches/sweep_parallel.rs`).
+pub fn sweep_threads_with(explicit: Option<usize>) -> usize {
+    explicit
+        .filter(|&n| n >= 1)
+        .or_else(|| {
+            std::env::var("RAPID_SWEEP_THREADS")
+                .ok()
+                .and_then(|s| s.parse().ok())
+                .filter(|&n| n >= 1)
+        })
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        })
+}
+
+/// Default worker-thread count (no explicit override).
+pub fn sweep_threads() -> usize {
+    sweep_threads_with(None)
+}
+
+/// Fan `f` over `items` across worker threads (work-stealing via a
+/// shared atomic cursor), preserving input order in the output.
+///
+/// This is the sweep runner every Study cell, figure driver, bench and
+/// the `rapid sweep`/`rapid study` CLI go through: each point is an
+/// independent deterministic simulation (seeded RNGs, no shared state),
+/// so results are bit-identical to a serial run regardless of thread
+/// count. Implemented on `std::thread::scope` — no external dependency.
+pub fn parallel_map_threads<T, R, F>(items: &[T], threads: Option<usize>, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let threads = sweep_threads_with(threads).min(items.len().max(1));
+    if threads <= 1 || items.len() <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let done: std::sync::Mutex<Vec<(usize, R)>> =
+        std::sync::Mutex::new(Vec::with_capacity(items.len()));
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(&items[i]);
+                done.lock().unwrap().push((i, r));
+            });
+        }
+    });
+    let mut out = done.into_inner().unwrap();
+    out.sort_by_key(|&(i, _)| i);
+    out.into_iter().map(|(_, r)| r).collect()
+}
+
+/// [`parallel_map_threads`] with the default thread count.
+pub fn parallel_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    parallel_map_threads(items, None, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_map_preserves_order_and_coverage() {
+        let items: Vec<u64> = (0..57).collect();
+        let out = parallel_map(&items, |&x| x * 3);
+        assert_eq!(out, items.iter().map(|&x| x * 3).collect::<Vec<_>>());
+        let empty: Vec<u64> = Vec::new();
+        assert!(parallel_map(&empty, |&x: &u64| x).is_empty());
+        assert_eq!(parallel_map(&[9u64], |&x| x + 1), vec![10]);
+    }
+
+    #[test]
+    fn explicit_thread_count_wins_over_env() {
+        // The env var may or may not be set in this process; an explicit
+        // count must win either way, and results never depend on it.
+        assert_eq!(sweep_threads_with(Some(2)), 2);
+        assert_eq!(sweep_threads_with(Some(1)), 1);
+        // 0 is "no override", falling through to env/default.
+        assert!(sweep_threads_with(Some(0).filter(|&n| n >= 1)) >= 1);
+    }
+
+    #[test]
+    fn results_identical_across_thread_counts() {
+        let items: Vec<u64> = (0..40).collect();
+        let serial = parallel_map_threads(&items, Some(1), |&x| x * x + 1);
+        let par = parallel_map_threads(&items, Some(8), |&x| x * x + 1);
+        assert_eq!(serial, par);
+    }
+}

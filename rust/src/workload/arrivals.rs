@@ -150,6 +150,102 @@ mod tests {
     }
 
     #[test]
+    fn bursty_mean_rate_matches_rate_qps_over_long_horizon() {
+        // The calm-regime rate is derated so the long-run mean stays at
+        // `rate_qps` despite the 4x bursts: 0.2*4r + 0.8*0.25r = r.
+        let mut ap = ArrivalProcess::bursty(Rng::new(11), 25.0, 4.0, 0.2);
+        let mut t = 0;
+        let n = 100_000;
+        for _ in 0..n {
+            t = ap.next_after(t);
+        }
+        let measured = n as f64 / (t as f64 / 1e6);
+        assert!(
+            (measured / 25.0 - 1.0).abs() < 0.1,
+            "long-run rate {measured} vs 25.0"
+        );
+    }
+
+    #[test]
+    fn bursty_regime_dwell_times_match_spec() {
+        // Drive the process and reconstruct regime segments from the
+        // internal state: dwell durations are exponential with mean
+        // `mean_dwell` (2 s), and the burst-time fraction converges to
+        // `burst_frac`.
+        let burst_frac = 0.3;
+        let mut ap = ArrivalProcess::bursty(Rng::new(13), 50.0, 3.0, burst_frac);
+        let Burstiness::Markov { mean_dwell, .. } = ap.burst else {
+            panic!("bursty process must be Markov-modulated");
+        };
+        let mut t = 0;
+        let mut segments: Vec<(bool, f64)> = Vec::new(); // (bursting, dwell us)
+        let mut seg_start = 0u64;
+        let mut seg_until = 0u64;
+        let mut seg_bursting = false;
+        let mut first = true;
+        while segments.len() < 4000 {
+            t = ap.next_after(t);
+            if ap.regime_until != seg_until {
+                if !first {
+                    segments.push((seg_bursting, (seg_until - seg_start) as f64));
+                }
+                first = false;
+                seg_start = seg_until;
+                seg_until = ap.regime_until;
+                seg_bursting = ap.bursting;
+            }
+        }
+        let mean = segments.iter().map(|&(_, d)| d).sum::<f64>() / segments.len() as f64;
+        assert!(
+            (mean / mean_dwell as f64 - 1.0).abs() < 0.1,
+            "mean dwell {mean} vs {mean_dwell}"
+        );
+        // Exponential dwell: CV ~ 1.
+        let var = segments
+            .iter()
+            .map(|&(_, d)| (d - mean).powi(2))
+            .sum::<f64>()
+            / segments.len() as f64;
+        let cv = var.sqrt() / mean;
+        assert!((cv - 1.0).abs() < 0.15, "dwell cv={cv}");
+        // Time-weighted burst fraction ~ burst_frac (regime draws are
+        // iid Bernoulli(burst_frac) with iid dwells).
+        let burst_time: f64 = segments.iter().filter(|&&(b, _)| b).map(|&(_, d)| d).sum();
+        let total_time: f64 = segments.iter().map(|&(_, d)| d).sum();
+        let frac = burst_time / total_time;
+        assert!(
+            (frac - burst_frac).abs() < 0.05,
+            "burst fraction {frac} vs {burst_frac}"
+        );
+    }
+
+    #[test]
+    fn bursty_burst_rate_exceeds_calm_rate() {
+        // Within a single regime the process is Poisson at the regime
+        // rate; gaps drawn while bursting must be ~factor x shorter.
+        let mut ap = ArrivalProcess::bursty(Rng::new(17), 20.0, 4.0, 0.2);
+        let mut t = 0;
+        let (mut burst_gaps, mut calm_gaps) = (Vec::new(), Vec::new());
+        for _ in 0..200_000 {
+            let nt = ap.next_after(t);
+            // Classify by the regime that produced the gap: next_after
+            // resolves the regime at `t` before drawing.
+            if ap.bursting {
+                burst_gaps.push((nt - t) as f64);
+            } else {
+                calm_gaps.push((nt - t) as f64);
+            }
+            t = nt;
+        }
+        assert!(burst_gaps.len() > 1000 && calm_gaps.len() > 1000);
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        let ratio = mean(&calm_gaps) / mean(&burst_gaps);
+        // burst rate = 4r, calm rate = 0.25r -> gap ratio ~ 16 (allow
+        // slack for regime-boundary gaps attributed to the wrong side).
+        assert!(ratio > 8.0, "calm/burst gap ratio {ratio}");
+    }
+
+    #[test]
     fn arrivals_strictly_increase() {
         let mut ap = ArrivalProcess::poisson(Rng::new(8), 1000.0);
         let mut t = 0;

@@ -1,0 +1,141 @@
+//! Golden tests for the declarative Scenario/Study API: a two-axis
+//! (rate × budget) Study must reproduce the equivalent hand-rolled
+//! loop bit-for-bit, at 1 thread and at N threads; the emitters must
+//! agree with each other; and the shipped scenario files must load and
+//! run.
+
+use rapid::config::presets;
+use rapid::scenario::{emit, longbench_trace, Axis, Scenario, Study};
+use rapid::sim::{self, SimOptions};
+use rapid::types::Slo;
+use rapid::util::json::Json;
+
+const SEED: u64 = 11;
+const REQUESTS: usize = 80;
+const RATES: &[f64] = &[0.75, 1.5];
+const BUDGETS: &[f64] = &[500.0, 600.0];
+
+fn golden_scenario() -> Scenario {
+    Scenario::new("golden", presets::p4d4(600.0))
+        .seed(SEED)
+        .requests(REQUESTS)
+        .axis(Axis::PowerW(BUDGETS.to_vec()))
+        .axis(Axis::RatePerGpu(RATES.to_vec()))
+}
+
+/// The loop the Study replaces: `presets::p4d4(w)` per budget, a
+/// LongBench trace per (budget, rate), one sim per cell.
+fn hand_rolled() -> Vec<(f64, f64, f64)> {
+    let mut out = Vec::new();
+    for &w in BUDGETS {
+        let cfg = presets::p4d4(w);
+        for &r in RATES {
+            let trace = longbench_trace(
+                SEED,
+                r * cfg.total_gpus() as f64,
+                REQUESTS,
+                Slo::paper_default(),
+            );
+            let res = sim::run(&cfg, &trace, &SimOptions::default());
+            out.push((res.attainment(), res.goodput_qps(), res.qps_per_kw()));
+        }
+    }
+    out
+}
+
+#[test]
+fn two_axis_study_matches_hand_rolled_loop_bit_identical() {
+    let expected = hand_rolled();
+    let serial = Study::new(golden_scenario()).run(Some(1)).unwrap();
+    let fanned = Study::new(golden_scenario()).run(Some(4)).unwrap();
+    for (label, study) in [("1 thread", &serial), ("4 threads", &fanned)] {
+        assert_eq!(study.cells.len(), expected.len(), "{label}");
+        for (cell, &(att, goodput, qpkw)) in study.cells.iter().zip(&expected) {
+            // Bitwise equality: the Study must not perturb a single ulp.
+            assert_eq!(cell.attainment(), att, "{label} {:?}", cell.coords);
+            assert_eq!(cell.goodput_qps(), goodput, "{label} {:?}", cell.coords);
+            assert_eq!(cell.qps_per_kw(), qpkw, "{label} {:?}", cell.coords);
+        }
+    }
+    // And the two runs agree with each other cell-by-cell.
+    for (a, b) in serial.cells.iter().zip(&fanned.cells) {
+        assert_eq!(a.attainment(), b.attainment());
+        assert_eq!(a.goodput_qps(), b.goodput_qps());
+    }
+}
+
+#[test]
+fn emitters_agree_on_attainment_and_goodput() {
+    let study = Study::new(golden_scenario()).run(Some(2)).unwrap();
+
+    // JSON parses with the crate's own parser and carries the exact
+    // cell values.
+    let json_text = emit::emit(&study, emit::Format::Json);
+    let v = Json::parse(json_text.trim()).unwrap();
+    let cells = v.get("cells").unwrap().as_arr().unwrap();
+    assert_eq!(cells.len(), study.cells.len());
+    for (jc, cell) in cells.iter().zip(&study.cells) {
+        let m = jc.get("metrics").unwrap();
+        assert_eq!(
+            m.get("attainment").unwrap().as_f64(),
+            Some(cell.attainment())
+        );
+        assert_eq!(
+            m.get("goodput_qps").unwrap().as_f64(),
+            Some(cell.goodput_qps())
+        );
+    }
+
+    // CSV: header + one row per cell, same values.
+    let csv = emit::emit(&study, emit::Format::Csv);
+    let lines: Vec<&str> = csv.trim_end().lines().collect();
+    assert_eq!(lines.len(), 1 + study.cells.len());
+    for (line, cell) in lines[1..].iter().zip(&study.cells) {
+        let fields: Vec<&str> = line.split(',').collect();
+        // power_w, rate_per_gpu, config, attainment, goodput, ...
+        assert_eq!(fields[3].parse::<f64>().unwrap(), cell.attainment());
+        assert_eq!(fields[4].parse::<f64>().unwrap(), cell.goodput_qps());
+    }
+
+    // Text: shows every cell's attainment at the emitters' rounding.
+    let text = emit::emit(&study, emit::Format::Text);
+    for cell in &study.cells {
+        assert!(text.contains(&format!("{:.4}", cell.attainment())));
+    }
+}
+
+#[test]
+fn shipped_scenarios_load_and_run() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/scenarios");
+    let mut count = 0;
+    for entry in std::fs::read_dir(dir).expect("scenarios/ present") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("toml") {
+            continue;
+        }
+        let mut s = Scenario::from_toml_file(path.to_str().unwrap())
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        assert!(s.n_cells() >= 1);
+        // Shrink for test speed; the grid shape is what we exercise.
+        s.requests = 30;
+        let study = Study::new(s).run(Some(2)).unwrap();
+        assert_eq!(study.cells.len(), study.scenario.n_cells());
+        let json = emit::emit(&study, emit::Format::Json);
+        Json::parse(json.trim()).unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        count += 1;
+    }
+    assert!(count >= 2, "expected the shipped scenario files");
+}
+
+#[test]
+fn study_cell_checks_pass_on_shipped_grid() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/scenarios/rate-budget-grid.toml");
+    let mut s = Scenario::from_toml_file(path).unwrap();
+    s.requests = 40;
+    let study = Study::new(s).run(None).unwrap();
+    let (passed, total) = study.checks_passed();
+    assert_eq!(passed, total, "per-cell invariant checks must pass");
+    // Budget axis really reparametrizes the config per cell.
+    assert_eq!(study.cells[0].config.node_budget_w, 4000.0);
+    assert_eq!(study.cells.last().unwrap().config.node_budget_w, 6000.0);
+}
