@@ -22,6 +22,9 @@ fn main() {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(800);
+    let t0 = std::time::Instant::now();
+    let mut checks_passed = 0usize;
+    let mut checks_total = 0usize;
 
     // ------------------------------------------------------------------
     // 1. Cooldown hysteresis
@@ -56,9 +59,12 @@ fn main() {
     }
     let no_cd = flips_by_cooldown[0].1;
     let paper_cd = flips_by_cooldown[3].1;
+    let cooldown_ok = no_cd >= paper_cd;
+    checks_total += 1;
+    checks_passed += cooldown_ok as usize;
     println!(
         "  [{}] cooldown damps role churn (no-cooldown {} flips >= 2s-cooldown {})\n",
-        if no_cd >= paper_cd { "PASS" } else { "FAIL" },
+        if cooldown_ok { "PASS" } else { "FAIL" },
         no_cd,
         paper_cd
     );
@@ -84,9 +90,12 @@ fn main() {
     }
     let tiny = atts[0].1;
     let paper32 = atts.iter().find(|(s, _)| *s == 32).unwrap().1;
+    let ring_ok = tiny <= paper32 + 0.02;
+    checks_total += 1;
+    checks_passed += ring_ok as usize;
     println!(
         "  [{}] starved ring (1 slot) hurts vs the paper's 32 ({:.1}% <= {:.1}%)\n",
-        if tiny <= paper32 + 0.02 { "PASS" } else { "FAIL" },
+        if ring_ok { "PASS" } else { "FAIL" },
         tiny * 100.0,
         paper32 * 100.0
     );
@@ -135,10 +144,19 @@ fn main() {
         rows.push((label, stat.attainment(), rapid.attainment()));
     }
     let bursty_gain = rows[1].2 - rows[1].1;
+    let bursty_ok = bursty_gain > -0.02;
+    checks_total += 1;
+    checks_passed += bursty_ok as usize;
     println!(
         "  [{}] RAPID holds its edge under bursty arrivals (gain {:+.1} pts)\n",
-        if bursty_gain > -0.02 { "PASS" } else { "FAIL" },
+        if bursty_ok { "PASS" } else { "FAIL" },
         bursty_gain * 100.0
     );
     let _ = SECOND;
+    rapid::bench::write_figure_report(
+        "ablations",
+        t0.elapsed().as_secs_f64(),
+        checks_passed,
+        checks_total,
+    );
 }

@@ -17,11 +17,5 @@ fn main() {
     println!("{}", fb.render());
     checks.extend(fb.checks());
     println!("{}", rapid::experiments::render_checks(&checks));
-    let failed = checks.iter().filter(|c| !c.pass).count();
-    println!(
-        "fig5_slo: {}/{} shape checks passed in {:.1}s",
-        checks.len() - failed,
-        checks.len(),
-        t0.elapsed().as_secs_f64()
-    );
+    rapid::bench::finish_figure_bench("fig5_slo", t0, &checks);
 }

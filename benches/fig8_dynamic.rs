@@ -14,11 +14,5 @@ fn main() {
     println!("{}", f.render());
     let checks = f.checks();
     println!("{}", rapid::experiments::render_checks(&checks));
-    let failed = checks.iter().filter(|c| !c.pass).count();
-    println!(
-        "fig8_dynamic: {}/{} shape checks passed in {:.1}s",
-        checks.len() - failed,
-        checks.len(),
-        t0.elapsed().as_secs_f64()
-    );
+    rapid::bench::finish_figure_bench("fig8_dynamic", t0, &checks);
 }

@@ -14,11 +14,5 @@ fn main() {
     println!("{}", f.render());
     let checks = f.checks();
     println!("{}", rapid::experiments::render_checks(&checks));
-    let failed = checks.iter().filter(|c| !c.pass).count();
-    println!(
-        "fig9_timeline: {}/{} shape checks passed in {:.1}s",
-        checks.len() - failed,
-        checks.len(),
-        t0.elapsed().as_secs_f64()
-    );
+    rapid::bench::finish_figure_bench("fig9_timeline", t0, &checks);
 }

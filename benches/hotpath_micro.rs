@@ -1,108 +1,41 @@
-//! Hot-path microbenchmarks (the §Perf targets in EXPERIMENTS.md):
+//! Hot-path microbenchmarks (DESIGN.md §10) — a thin wrapper over the
+//! in-process suite `rapid bench` runs, so this target, the CLI and the
+//! CI perf gate all measure the same cases:
 //!   * KV ring publish/consume round-trip,
-//!   * router pick over an 8-GPU load table,
+//!   * router picks over an 8-GPU load table,
 //!   * prefill batch formation,
 //!   * controller decide() tick,
+//!   * the streaming stats the per-tick paths lean on,
 //!   * whole-sim throughput in simulated events/sec.
 //!
-//! `cargo bench --bench hotpath_micro`
+//! `cargo bench --bench hotpath_micro [-- --filter F] [-- --json out.json]`
 
-use std::collections::VecDeque;
-
-use rapid::bench::{bench, per_second};
-use rapid::config::{presets, BatchConfig, ControlPolicy, ControllerConfig};
-use rapid::coordinator::batcher::form_prefill_batch;
-use rapid::coordinator::router::{pick_prefill, WorkerLoad};
-use rapid::coordinator::{Controller, Snapshot};
-use rapid::kv::KvRing;
-use rapid::sim::{self, SimOptions};
-use rapid::types::{GpuId, Request, RequestId, Slo, SECOND};
-use rapid::util::rng::Rng;
-use rapid::workload::{build_trace, sonnet::Sonnet, ArrivalProcess};
+use rapid::bench::hotpath::{run_suite, SuiteConfig, WHOLE_SIM};
+use rapid::bench::{arg_value, json_arg};
 
 fn main() {
-    // --- KV ring round trip ------------------------------------------
-    let ring: KvRing<u64> = KvRing::new(32);
-    let t = bench("kv_ring/publish+consume", 300, 2_000_000, || {
-        ring.try_publish(1).unwrap();
-        std::hint::black_box(ring.try_consume());
-    });
-    println!("{}   ({:.1} M ops/s)", t.report(), per_second(&t, 1) / 1e6);
-
-    // --- router -------------------------------------------------------
-    let loads: Vec<WorkerLoad> = (0..8)
-        .map(|i| WorkerLoad {
-            gpu: GpuId(i),
-            node: 0,
-            queued_tokens: (i as u64 * 37) % 5000,
-            requests: i % 5,
-            accepting: i != 3,
-        })
-        .collect();
-    let t = bench("router/pick_prefill(8 gpus)", 300, 5_000_000, || {
-        std::hint::black_box(pick_prefill(std::hint::black_box(&loads)));
-    });
-    println!("{}   ({:.1} M picks/s)", t.report(), per_second(&t, 1) / 1e6);
-
-    // --- batch formation ----------------------------------------------
-    let cfg = BatchConfig::default();
-    let mk_queue = || -> VecDeque<Request> {
-        (0..64)
-            .map(|i| Request {
-                id: RequestId(i),
-                arrival: 0,
-                input_tokens: 500 + (i as u32 * 131) % 3000,
-                output_tokens: 64,
-                slo: Slo::paper_default(),
-            })
-            .collect()
+    let cfg = SuiteConfig {
+        filter: arg_value("filter"),
+        sim_requests: std::env::var("RAPID_BENCH_REQUESTS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(400),
+        ..SuiteConfig::default()
     };
-    let mut q = mk_queue();
-    let t = bench("batcher/form_prefill_batch", 300, 2_000_000, || {
-        if q.len() < 8 {
-            q = mk_queue();
-        }
-        std::hint::black_box(form_prefill_batch(&mut q, &cfg));
-    });
-    println!("{}", t.report());
-
-    // --- controller tick -----------------------------------------------
-    let mut ctl = Controller::new(ControllerConfig::default(), ControlPolicy::DynPowerGpu);
-    for i in 0..64 {
-        ctl.observe_ttft(i * 1000, 1.2);
-        ctl.observe_tpot(i * 1000, 0.5);
+    let report = run_suite(&cfg);
+    for t in &report.entries {
+        println!("{}", t.report());
     }
-    let snap = Snapshot {
-        now: 10 * SECOND,
-        prefill_queue: 12,
-        decode_queue: 0,
-        prefill_gpus: 4,
-        decode_gpus: 4,
-        prefill_power_saturated: false,
-        decode_power_saturated: false,
-    };
-    let t = bench("controller/decide", 300, 2_000_000, || {
-        let mut s = snap.clone();
-        s.now += 1;
-        std::hint::black_box(ctl.decide(&s));
-    });
-    println!("{}", t.report());
-
-    // --- end-to-end sim throughput -------------------------------------
-    let cfg = presets::rapid_600();
-    let mut ap = ArrivalProcess::poisson(Rng::new(1), 10.0);
-    let mut sizes = Sonnet::new(Rng::new(2), 2048, 64);
-    let trace = build_trace(400, &mut ap, &mut sizes, Slo::paper_default());
-    // Rough event estimate: decode steps dominate; measure wall per run.
-    let t = bench("sim/run(400 reqs, rapid-600)", 1500, 50, || {
-        std::hint::black_box(sim::run(&cfg, &trace, &SimOptions::default()));
-    });
-    let res = sim::run(&cfg, &trace, &SimOptions::default());
-    // Count a proxy for events: records + power samples + decisions.
-    let evts = res.records.len() * 70; // ~64 decode steps + overhead per req
-    println!(
-        "{}   (~{:.2} M simulated events/s)",
-        t.report(),
-        evts as f64 / (t.mean_us / 1e6) / 1e6
-    );
+    if let Some(t) = report.entry(WHOLE_SIM) {
+        println!(
+            "\n{}: {:.2} M simulated events/s ({} events/run)",
+            WHOLE_SIM,
+            t.per_sec() / 1e6,
+            t.batch
+        );
+    }
+    if let Some(path) = json_arg() {
+        report.write(&path).expect("write bench json");
+        println!("wrote {path}");
+    }
 }

@@ -1,0 +1,61 @@
+//! Study throughput at scale: run the 8-node, high-rate, bursty
+//! `scenarios/stress-grid.toml` and report cells/sec plus aggregate
+//! simulated events/sec — the "does the DES core keep up when the grid
+//! gets big" number the ROADMAP's scenario-diversity goal depends on.
+//!
+//! `cargo bench --bench study_throughput [-- --json out.json]`
+//! `RAPID_BENCH_REQUESTS=300` shrinks the per-cell trace for CI.
+
+use rapid::bench::{json_arg, BenchReport, Timing};
+use rapid::scenario::{Scenario, Study};
+
+fn main() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/scenarios/stress-grid.toml");
+    let mut scenario = Scenario::from_toml_file(path).expect("stress-grid scenario");
+    if let Some(n) = std::env::var("RAPID_BENCH_REQUESTS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+    {
+        scenario.requests = n;
+    }
+    let requests = scenario.requests;
+
+    let t0 = std::time::Instant::now();
+    let study = Study::new(scenario).run(None).expect("stress-grid study");
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+
+    let cells = study.cells.len();
+    let events: u64 = study
+        .cells
+        .iter()
+        .filter_map(|c| c.result())
+        .map(|r| r.sim_events)
+        .sum();
+    let (passed, total) = study.checks_passed();
+    let cells_per_s = cells as f64 / wall;
+    let events_per_s = events as f64 / wall;
+    println!(
+        "study_throughput: {cells} cells x {requests} reqs in {wall:.2}s \
+         ({cells_per_s:.2} cells/s, {:.2} M simulated events/s)",
+        events_per_s / 1e6
+    );
+    println!(
+        "  [{}] per-cell invariant checks: {passed}/{total} passed",
+        if passed == total { "PASS" } else { "FAIL" }
+    );
+
+    if let Some(out) = json_arg() {
+        let mut report = BenchReport::new("study_throughput");
+        let mut t = Timing::single("study/stress_grid", wall * 1e6);
+        t.batch = events as usize; // per_sec == simulated events/s
+        report.entries.push(t);
+        report.meta.insert("cells".into(), cells.to_string());
+        report.meta.insert("requests_per_cell".into(), requests.to_string());
+        report.meta.insert("cells_per_s".into(), format!("{cells_per_s:.3}"));
+        report.meta.insert("checks_passed".into(), passed.to_string());
+        report.meta.insert("checks_total".into(), total.to_string());
+        report.write(&out).expect("write bench json");
+        println!("wrote {out}");
+    }
+}

@@ -55,4 +55,17 @@ fn main() {
         "  [{}] parallel sweep >= {expected}x over serial on this {cores}-core runner",
         if speedup >= expected { "PASS" } else { "FAIL" }
     );
+    if let Some(path) = rapid::bench::json_arg() {
+        let mut report = rapid::bench::BenchReport::new("sweep_parallel");
+        report
+            .entries
+            .push(rapid::bench::Timing::single("sweep/serial", t_serial * 1e6));
+        report
+            .entries
+            .push(rapid::bench::Timing::single("sweep/parallel", t_parallel * 1e6));
+        report.meta.insert("speedup".into(), format!("{speedup:.3}"));
+        report.meta.insert("threads".into(), cores.to_string());
+        report.write(&path).expect("write bench json");
+        println!("wrote {path}");
+    }
 }

@@ -1,0 +1,236 @@
+//! The hot-path performance suite — the cases `rapid bench` runs
+//! in-process and the CI `perf-gate` job regresses against
+//! `benches/baseline.json` (DESIGN.md §10).
+//!
+//! Cases cover exactly the paths the DES core exercises per event:
+//! KV-ring slot traffic, router picks, prefill batch formation, the
+//! Algorithm-1 decide tick, the streaming stats the controller reads,
+//! the sort-based exact percentile those paths avoid, and a whole-sim
+//! run reported in simulated events per second.
+
+use std::collections::VecDeque;
+
+use crate::bench::{bench, bench_batch, BenchReport, Timing};
+use crate::config::{presets, BatchConfig, ControlPolicy, ControllerConfig};
+use crate::coordinator::batcher::form_prefill_batch_into;
+use crate::coordinator::router::{pick_decode_prefer_node, pick_prefill, WorkerLoad};
+use crate::coordinator::{Controller, Snapshot};
+use crate::kv::KvRing;
+use crate::sim::{self, SimOptions};
+use crate::types::{GpuId, Request, RequestId, Slo, SECOND};
+use crate::util::rng::Rng;
+use crate::util::stats::{percentile, LatencyHistogram, SlidingWindow};
+use crate::workload::{build_trace, sonnet::Sonnet, ArrivalProcess};
+
+/// Name of the whole-sim case (`per_sec` = simulated events/second) —
+/// the headline number `BENCH_hotpath.json` tracks across PRs.
+pub const WHOLE_SIM: &str = "sim/whole_run";
+
+/// Suite knobs. Defaults match what CI gates on; tests shrink the
+/// budgets to keep the suite exercisable in debug builds.
+#[derive(Debug, Clone)]
+pub struct SuiteConfig {
+    /// Only run cases whose name contains this substring.
+    pub filter: Option<String>,
+    /// Per-case timing budget (the whole-sim case gets 5x).
+    pub target_ms: u64,
+    /// Iteration cap per case.
+    pub max_iters: usize,
+    /// Requests in the whole-sim case's trace.
+    pub sim_requests: usize,
+}
+
+impl Default for SuiteConfig {
+    fn default() -> Self {
+        SuiteConfig {
+            filter: None,
+            target_ms: 300,
+            max_iters: 5_000_000,
+            sim_requests: 400,
+        }
+    }
+}
+
+impl SuiteConfig {
+    /// Does the active filter select this case? Also used by the gate to
+    /// avoid flagging intentionally-filtered-out baseline cases.
+    pub fn wants(&self, name: &str) -> bool {
+        self.filter.as_deref().map_or(true, |f| name.contains(f))
+    }
+}
+
+/// Run the suite (honoring the filter) and collect a [`BenchReport`].
+pub fn run_suite(cfg: &SuiteConfig) -> BenchReport {
+    let mut report = BenchReport::new("hotpath");
+    report
+        .meta
+        .insert("target_ms".into(), cfg.target_ms.to_string());
+    report
+        .meta
+        .insert("sim_requests".into(), cfg.sim_requests.to_string());
+    let mut push = |t: Timing| report.entries.push(t);
+
+    // --- KV ring round trip ------------------------------------------
+    if cfg.wants("kv_ring/publish_consume") {
+        let ring: KvRing<u64> = KvRing::new(32);
+        push(bench("kv_ring/publish_consume", cfg.target_ms, cfg.max_iters, || {
+            ring.try_publish(1).unwrap();
+            std::hint::black_box(ring.try_consume());
+        }));
+    }
+
+    // --- router -------------------------------------------------------
+    let loads: Vec<WorkerLoad> = (0..8)
+        .map(|i| WorkerLoad {
+            gpu: GpuId(i),
+            node: i / 4,
+            queued_tokens: (i as u64 * 37) % 5000,
+            requests: i % 5,
+            accepting: i != 3,
+        })
+        .collect();
+    if cfg.wants("router/pick_prefill_8") {
+        push(bench("router/pick_prefill_8", cfg.target_ms, cfg.max_iters, || {
+            std::hint::black_box(pick_prefill(std::hint::black_box(&loads)));
+        }));
+    }
+    if cfg.wants("router/pick_decode_prefer_node_8") {
+        push(bench(
+            "router/pick_decode_prefer_node_8",
+            cfg.target_ms,
+            cfg.max_iters,
+            || {
+                std::hint::black_box(pick_decode_prefer_node(std::hint::black_box(&loads), 1));
+            },
+        ));
+    }
+
+    // --- batch formation ----------------------------------------------
+    if cfg.wants("batcher/form_prefill_batch") {
+        let bcfg = BatchConfig::default();
+        let mk_queue = || -> VecDeque<Request> {
+            (0..64)
+                .map(|i| Request {
+                    id: RequestId(i),
+                    arrival: 0,
+                    input_tokens: 500 + (i as u32 * 131) % 3000,
+                    output_tokens: 64,
+                    slo: Slo::paper_default(),
+                })
+                .collect()
+        };
+        let mut q = mk_queue();
+        // The zero-allocation `_into` form with a reused scratch buffer —
+        // exactly how `kick_prefill` forms batches.
+        let mut scratch = Vec::new();
+        push(bench("batcher/form_prefill_batch", cfg.target_ms, cfg.max_iters, || {
+            if q.len() < 8 {
+                q = mk_queue();
+            }
+            std::hint::black_box(form_prefill_batch_into(&mut q, &bcfg, &mut scratch));
+        }));
+    }
+
+    // --- controller tick -----------------------------------------------
+    if cfg.wants("controller/decide") {
+        let mut ctl = Controller::new(ControllerConfig::default(), ControlPolicy::DynPowerGpu);
+        for i in 0..64 {
+            ctl.observe_ttft(i * 1000, 1.2);
+            ctl.observe_tpot(i * 1000, 0.5);
+        }
+        let snap = Snapshot {
+            now: 10 * SECOND,
+            prefill_queue: 12,
+            decode_queue: 0,
+            prefill_gpus: 4,
+            decode_gpus: 4,
+            prefill_power_saturated: false,
+            decode_power_saturated: false,
+        };
+        push(bench("controller/decide", cfg.target_ms, cfg.max_iters, || {
+            let mut s = snap.clone();
+            s.now += 1;
+            std::hint::black_box(ctl.decide(&s));
+        }));
+    }
+
+    // --- streaming stats the per-tick paths lean on ---------------------
+    if cfg.wants("stats/window_frac_above_512") {
+        let mut w = SlidingWindow::new(10 * SECOND);
+        for i in 0..512u64 {
+            w.push(i * 1000, (i % 97) as f64 / 60.0);
+        }
+        push(bench("stats/window_frac_above_512", cfg.target_ms, cfg.max_iters, || {
+            std::hint::black_box(w.frac_above(512_000, 1.0));
+        }));
+    }
+    if cfg.wants("stats/histogram_record") {
+        let mut h = LatencyHistogram::new(1.0, 1e6, 128);
+        let mut x = 1.0f64;
+        push(bench("stats/histogram_record", cfg.target_ms, cfg.max_iters, || {
+            x = if x > 9e5 { 1.0 } else { x * 1.37 };
+            h.record(std::hint::black_box(x));
+        }));
+    }
+    // The sort-per-call cost the streaming paths avoid — tracked so the
+    // gap stays visible in the report.
+    if cfg.wants("stats/percentile_sort_1k") {
+        let xs: Vec<f64> = (0..1000).map(|i| ((i * 2654435761u64) % 10007) as f64).collect();
+        push(bench("stats/percentile_sort_1k", cfg.target_ms, cfg.max_iters / 100, || {
+            std::hint::black_box(percentile(std::hint::black_box(&xs), 90.0));
+        }));
+    }
+
+    // --- end-to-end sim throughput -------------------------------------
+    if cfg.wants(WHOLE_SIM) {
+        let sim_cfg = presets::rapid_600();
+        let mut ap = ArrivalProcess::poisson(Rng::new(1), 10.0);
+        let mut sizes = Sonnet::new(Rng::new(2), 2048, 64);
+        let trace = build_trace(cfg.sim_requests, &mut ap, &mut sizes, Slo::paper_default());
+        // One probe run pins the exact event count this trace produces;
+        // `per_sec` of the timing is then simulated events per second.
+        let events = sim::run(&sim_cfg, &trace, &SimOptions::default()).sim_events as usize;
+        push(bench_batch(
+            WHOLE_SIM,
+            events.max(1),
+            cfg.target_ms * 5,
+            cfg.max_iters.min(1000),
+            || {
+                std::hint::black_box(sim::run(&sim_cfg, &trace, &SimOptions::default()));
+            },
+        ));
+    }
+
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(filter: &str) -> SuiteConfig {
+        SuiteConfig {
+            filter: Some(filter.to_string()),
+            target_ms: 3,
+            max_iters: 100,
+            sim_requests: 20,
+        }
+    }
+
+    #[test]
+    fn filter_selects_cases() {
+        let rep = run_suite(&tiny("router"));
+        assert_eq!(rep.entries.len(), 2);
+        assert!(rep.entries.iter().all(|t| t.name.contains("router")));
+        assert!(rep.entries.iter().all(|t| t.iters >= 3 && t.mean_us >= 0.0));
+        assert!(run_suite(&tiny("no-such-case")).entries.is_empty());
+    }
+
+    #[test]
+    fn whole_sim_case_reports_event_throughput() {
+        let rep = run_suite(&tiny(WHOLE_SIM));
+        let t = rep.entry(WHOLE_SIM).expect("whole-sim entry");
+        assert!(t.batch > 100, "a 20-request sim still has many events");
+        assert!(t.per_sec() > 0.0);
+    }
+}

@@ -1,60 +1,188 @@
 //! Bench harness (offline substitute for `criterion`).
 //!
-//! Used by every `benches/*` target (all `harness = false`): warmup,
-//! timed iterations, mean / p50 / p99, and a one-line report compatible
-//! with eyeballing regressions. Also hosts `Table` for the figure benches
-//! that print paper-style rows rather than timings.
+//! Used by every `benches/*` target (all `harness = false`) and by the
+//! `rapid bench` subcommand: warmup, timed iterations, mean / p50 / p99 /
+//! min / max, per-iteration batch sizes for throughput, and a
+//! machine-readable [`BenchReport`] with a stable JSON schema that the CI
+//! regression gate consumes (see [`report`] and DESIGN.md §10).
+//!
+//! The hot-path suite itself lives in [`hotpath`]; `benches/hotpath_micro`
+//! and `rapid bench` both run it in-process so the numbers CI gates on
+//! are the numbers developers see locally.
+
+pub mod hotpath;
+pub mod report;
+
+pub use report::{BenchReport, Comparison, SCHEMA_VERSION};
 
 use std::time::Instant;
 
-use crate::util::stats::percentile;
+use crate::util::stats::percentile_sorted;
 
 /// Timing result of one benchmark case.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Timing {
     pub name: String,
+    /// Timed iterations (after the warmup/calibration pass).
     pub iters: usize,
+    /// Work items per iteration; `per_sec` = `batch / mean`. `1` for
+    /// plain latency cases, the simulated-event count for whole-sim runs.
+    pub batch: usize,
     pub mean_us: f64,
     pub p50_us: f64,
     pub p99_us: f64,
+    pub min_us: f64,
+    pub max_us: f64,
 }
 
 impl Timing {
+    /// A one-shot wall-clock measurement (figure benches record one of
+    /// these per run; all the order statistics collapse to the total).
+    pub fn single(name: &str, total_us: f64) -> Timing {
+        Timing {
+            name: name.to_string(),
+            iters: 1,
+            batch: 1,
+            mean_us: total_us,
+            p50_us: total_us,
+            p99_us: total_us,
+            min_us: total_us,
+            max_us: total_us,
+        }
+    }
+
+    /// Throughput in items per second (batch items per mean iteration).
+    pub fn per_sec(&self) -> f64 {
+        if self.mean_us <= 0.0 {
+            return 0.0;
+        }
+        self.batch as f64 / (self.mean_us / 1e6)
+    }
+
+    /// Median time per work item — what regression comparisons use:
+    /// batch-normalized so whole-sim runs at different request counts
+    /// stay comparable, median so one noisy CI iteration cannot fake a
+    /// regression.
+    pub fn per_item_p50_us(&self) -> f64 {
+        self.p50_us / self.batch.max(1) as f64
+    }
+
+    /// Has this entry actually been measured? Bootstrap baselines carry
+    /// zeroed entries ("not yet recorded") that gates must skip.
+    pub fn is_recorded(&self) -> bool {
+        self.per_item_p50_us().is_finite() && self.per_item_p50_us() > 0.0
+    }
+
     pub fn report(&self) -> String {
-        format!(
+        let mut s = format!(
             "{:<44} {:>8} iters  mean {:>10.1} us  p50 {:>10.1} us  p99 {:>10.1} us",
             self.name, self.iters, self.mean_us, self.p50_us, self.p99_us
-        )
+        );
+        if self.batch > 1 {
+            s.push_str(&format!("  ({:.2} M/s)", self.per_sec() / 1e6));
+        }
+        s
     }
 }
 
 /// Time `f` with warmup; iteration count adapts so the run takes roughly
 /// `target_ms` total (bounded by `max_iters`).
-pub fn bench<F: FnMut()>(name: &str, target_ms: u64, max_iters: usize, mut f: F) -> Timing {
+pub fn bench<F: FnMut()>(name: &str, target_ms: u64, max_iters: usize, f: F) -> Timing {
+    bench_batch(name, 1, target_ms, max_iters, f)
+}
+
+/// [`bench`] for cases where each iteration processes `batch` items, so
+/// the timing carries a meaningful events-per-second throughput.
+pub fn bench_batch<F: FnMut()>(
+    name: &str,
+    batch: usize,
+    target_ms: u64,
+    max_iters: usize,
+    mut f: F,
+) -> Timing {
     // Warmup + calibration.
     let t0 = Instant::now();
     f();
     let once = t0.elapsed().as_secs_f64().max(1e-9);
-    let iters = ((target_ms as f64 / 1000.0 / once) as usize)
-        .clamp(3, max_iters.max(3));
+    let iters = ((target_ms as f64 / 1000.0 / once) as usize).clamp(3, max_iters.max(3));
     let mut samples = Vec::with_capacity(iters);
     for _ in 0..iters {
         let t = Instant::now();
         f();
         samples.push(t.elapsed().as_secs_f64() * 1e6);
     }
+    let mean_us = samples.iter().sum::<f64>() / samples.len() as f64;
+    samples.sort_by(|a, b| a.total_cmp(b));
     Timing {
         name: name.to_string(),
         iters,
-        mean_us: samples.iter().sum::<f64>() / samples.len() as f64,
-        p50_us: percentile(&samples, 50.0),
-        p99_us: percentile(&samples, 99.0),
+        batch: batch.max(1),
+        mean_us,
+        p50_us: percentile_sorted(&samples, 50.0),
+        p99_us: percentile_sorted(&samples, 99.0),
+        min_us: samples[0],
+        max_us: samples[samples.len() - 1],
     }
 }
 
-/// Throughput helper: events per second given a timing and batch size.
-pub fn per_second(t: &Timing, batch: usize) -> f64 {
-    batch as f64 / (t.mean_us / 1e6)
+/// `--NAME VALUE` / `--NAME=VALUE` from this process's argv. Bench
+/// binaries are `harness = false` mains, so flags arrive verbatim after
+/// `cargo bench --bench X -- ...`. A following argument that is itself a
+/// flag does not count as a value (`--json --compare b.json` must not
+/// write a file named `--compare`).
+pub fn arg_value(name: &str) -> Option<String> {
+    let flag = format!("--{name}");
+    let eq = format!("--{name}=");
+    let args: Vec<String> = std::env::args().collect();
+    if let Some(i) = args.iter().position(|a| *a == flag) {
+        return args.get(i + 1).filter(|v| !v.starts_with("--")).cloned();
+    }
+    args.iter().find_map(|a| a.strip_prefix(&eq).map(str::to_string))
+}
+
+/// The `--json PATH` flag every bench target accepts. Panics when the
+/// flag is present but its path is missing or flag-shaped — a silently
+/// unwritten report would only surface later as a confusing missing
+/// artifact.
+pub fn json_arg() -> Option<String> {
+    let present = std::env::args().any(|a| a == "--json" || a.starts_with("--json="));
+    let v = arg_value("json").filter(|s| !s.is_empty());
+    if present && v.is_none() {
+        panic!("--json requires a path argument");
+    }
+    v
+}
+
+/// Standard figure-bench epilogue: print the `<suite>: P/T shape checks
+/// passed in Xs` line and honor `--json` — the one place the eight
+/// `fig*` benches share their closing format.
+pub fn finish_figure_bench(
+    suite: &str,
+    t0: std::time::Instant,
+    checks: &[crate::scenario::ShapeCheck],
+) {
+    let failed = checks.iter().filter(|c| !c.pass).count();
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "{suite}: {}/{} shape checks passed in {wall:.1}s",
+        checks.len() - failed,
+        checks.len()
+    );
+    write_figure_report(suite, wall, checks.len() - failed, checks.len());
+}
+
+/// Shared `--json` handling for the figure benches: one wall-clock entry
+/// named `<suite>/total` plus shape-check counts in `meta`. No-op when
+/// `--json` was not passed; panics on an unwritable path (bench binaries
+/// then exit non-zero, and in-process callers still unwind).
+pub fn write_figure_report(suite: &str, wall_s: f64, checks_passed: usize, checks_total: usize) {
+    let Some(path) = json_arg() else { return };
+    let mut r = BenchReport::new(suite);
+    r.entries.push(Timing::single(&format!("{suite}/total"), wall_s * 1e6));
+    r.meta.insert("checks_passed".into(), checks_passed.to_string());
+    r.meta.insert("checks_total".into(), checks_total.to_string());
+    r.write(&path).unwrap_or_else(|e| panic!("bench json: {e}"));
+    println!("wrote {path}");
 }
 
 #[cfg(test)]
@@ -69,18 +197,33 @@ mod tests {
         });
         assert!(t.iters >= 3);
         assert!(t.mean_us >= 0.0);
+        assert!(t.min_us <= t.mean_us && t.mean_us <= t.max_us);
+        assert_eq!(t.batch, 1);
         assert!(t.report().contains("noop-ish"));
     }
 
     #[test]
-    fn per_second_scales_with_batch() {
-        let t = Timing {
-            name: "x".into(),
-            iters: 1,
-            mean_us: 1000.0, // 1 ms
-            p50_us: 1000.0,
-            p99_us: 1000.0,
-        };
-        assert!((per_second(&t, 100) - 100_000.0).abs() < 1e-6);
+    fn per_sec_scales_with_batch() {
+        let mut t = Timing::single("x", 1000.0); // 1 ms
+        assert!((t.per_sec() - 1000.0).abs() < 1e-6);
+        t.batch = 100;
+        assert!((t.per_sec() - 100_000.0).abs() < 1e-6);
+        assert!(t.report().contains("M/s"));
+    }
+
+    #[test]
+    fn batch_timings_report_throughput() {
+        let t = bench_batch("b", 50, 5, 500, || {
+            std::hint::black_box(0u64);
+        });
+        assert_eq!(t.batch, 50);
+        assert!(t.per_sec() > 0.0);
+    }
+
+    #[test]
+    fn zero_mean_has_zero_throughput() {
+        let mut t = Timing::single("z", 0.0);
+        t.batch = 10;
+        assert_eq!(t.per_sec(), 0.0);
     }
 }

@@ -1,0 +1,264 @@
+//! Machine-readable bench reports with a stable JSON schema.
+//!
+//! Schema (version 1) — every field below is load-bearing for the CI
+//! regression gate, so additions are fine but renames/removals bump
+//! [`SCHEMA_VERSION`]:
+//!
+//! ```json
+//! {
+//!   "schema_version": 1,
+//!   "suite": "hotpath",
+//!   "entries": [
+//!     {"name": "router/pick_prefill_8", "iters": 12000, "batch": 1,
+//!      "mean_us": 0.4, "p50_us": 0.4, "p99_us": 0.7,
+//!      "min_us": 0.3, "max_us": 1.2, "per_sec": 2500000.0}
+//!   ],
+//!   "meta": {"free-form": "string key/values"}
+//! }
+//! ```
+//!
+//! `per_sec` is derived (`batch / mean`) and ignored on load. A baseline
+//! entry whose times are `0` (or non-finite) means "not yet recorded" —
+//! comparisons skip it instead of failing, which is how the committed
+//! bootstrap baseline stays advisory until CI records real numbers.
+//! Comparisons gate on the batch-normalized median (`p50_us / batch`),
+//! not the mean — see [`Comparison`].
+
+use std::collections::BTreeMap;
+
+use super::Timing;
+use crate::util::json::Json;
+
+/// Bump on any backwards-incompatible change to the report shape.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// A named collection of [`Timing`]s plus free-form string metadata.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct BenchReport {
+    pub suite: String,
+    pub entries: Vec<Timing>,
+    pub meta: BTreeMap<String, String>,
+}
+
+/// One current-vs-baseline pairing from [`BenchReport::compare`].
+/// Times are batch-normalized medians ([`Timing::per_item_p50_us`]):
+/// median so a single noisy CI iteration cannot fake a regression, and
+/// per-item so whole-sim runs at different request counts (different
+/// `batch`) remain comparable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Comparison {
+    pub name: String,
+    pub baseline_us: f64,
+    pub current_us: f64,
+    /// Positive = slower than baseline, in percent of the baseline time.
+    pub delta_pct: f64,
+}
+
+impl Comparison {
+    pub fn regressed(&self, max_regress_pct: f64) -> bool {
+        self.delta_pct > max_regress_pct
+    }
+}
+
+impl BenchReport {
+    pub fn new(suite: &str) -> BenchReport {
+        BenchReport {
+            suite: suite.to_string(),
+            entries: Vec::new(),
+            meta: BTreeMap::new(),
+        }
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&Timing> {
+        self.entries.iter().find(|t| t.name == name)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("schema_version".into(), Json::Num(SCHEMA_VERSION as f64));
+        obj.insert("suite".into(), Json::Str(self.suite.clone()));
+        let entries: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|t| {
+                let mut e = BTreeMap::new();
+                e.insert("name".into(), Json::Str(t.name.clone()));
+                e.insert("iters".into(), Json::Num(t.iters as f64));
+                e.insert("batch".into(), Json::Num(t.batch as f64));
+                e.insert("mean_us".into(), Json::Num(t.mean_us));
+                e.insert("p50_us".into(), Json::Num(t.p50_us));
+                e.insert("p99_us".into(), Json::Num(t.p99_us));
+                e.insert("min_us".into(), Json::Num(t.min_us));
+                e.insert("max_us".into(), Json::Num(t.max_us));
+                e.insert("per_sec".into(), Json::Num(t.per_sec()));
+                Json::Obj(e)
+            })
+            .collect();
+        obj.insert("entries".into(), Json::Arr(entries));
+        obj.insert(
+            "meta".into(),
+            Json::Obj(
+                self.meta
+                    .iter()
+                    .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                    .collect(),
+            ),
+        );
+        Json::Obj(obj)
+    }
+
+    pub fn from_json(v: &Json) -> Result<BenchReport, String> {
+        let sv = v
+            .get("schema_version")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| "bench report: missing schema_version".to_string())?;
+        if sv != SCHEMA_VERSION {
+            return Err(format!(
+                "bench report: unsupported schema_version {sv} (expected {SCHEMA_VERSION})"
+            ));
+        }
+        let suite = v
+            .get("suite")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "bench report: missing suite".to_string())?
+            .to_string();
+        let mut entries = Vec::new();
+        let arr = v
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| "bench report: missing entries".to_string())?;
+        for e in arr {
+            let name = e
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| "bench entry: missing name".to_string())?
+                .to_string();
+            let num = |k: &str| {
+                e.get(k)
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| format!("bench entry '{name}': missing {k}"))
+            };
+            entries.push(Timing {
+                iters: num("iters")? as usize,
+                batch: e.get("batch").and_then(Json::as_usize).unwrap_or(1),
+                mean_us: num("mean_us")?,
+                p50_us: num("p50_us")?,
+                p99_us: num("p99_us")?,
+                min_us: num("min_us")?,
+                max_us: num("max_us")?,
+                name,
+            });
+        }
+        let mut meta = BTreeMap::new();
+        if let Some(Json::Obj(m)) = v.get("meta") {
+            for (k, val) in m {
+                let s = match val {
+                    Json::Str(s) => s.clone(),
+                    other => other.to_string(),
+                };
+                meta.insert(k.clone(), s);
+            }
+        }
+        Ok(BenchReport { suite, entries, meta })
+    }
+
+    pub fn parse(text: &str) -> Result<BenchReport, String> {
+        let v = Json::parse(text).map_err(|e| format!("bench report: {e}"))?;
+        BenchReport::from_json(&v)
+    }
+
+    pub fn load(path: &str) -> Result<BenchReport, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        BenchReport::parse(&text).map_err(|e| format!("{path}: {e}"))
+    }
+
+    /// Write the pretty-printed report (stable, diffable formatting).
+    pub fn write(&self, path: &str) -> Result<(), String> {
+        let mut text = self.to_json().pretty();
+        text.push('\n');
+        std::fs::write(path, text).map_err(|e| format!("{path}: {e}"))
+    }
+
+    /// Pair every current entry with the like-named baseline entry,
+    /// comparing batch-normalized median per-item times (see
+    /// [`Comparison`]). Entries missing from the baseline, and baseline
+    /// entries that were never recorded ([`Timing::is_recorded`]),
+    /// produce no comparison.
+    pub fn compare(&self, baseline: &BenchReport) -> Vec<Comparison> {
+        let mut out = Vec::new();
+        for cur in &self.entries {
+            let Some(base) = baseline.entry(&cur.name) else {
+                continue;
+            };
+            if !base.is_recorded() {
+                continue;
+            }
+            let (b, c) = (base.per_item_p50_us(), cur.per_item_p50_us());
+            out.push(Comparison {
+                name: cur.name.clone(),
+                baseline_us: b,
+                current_us: c,
+                delta_pct: (c - b) / b * 100.0,
+            });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn timing(name: &str, mean: f64) -> Timing {
+        Timing {
+            name: name.into(),
+            iters: 100,
+            batch: 1,
+            mean_us: mean,
+            p50_us: mean,
+            p99_us: mean * 1.5,
+            min_us: mean * 0.5,
+            max_us: mean * 2.0,
+        }
+    }
+
+    #[test]
+    fn round_trips_through_json() {
+        let mut r = BenchReport::new("hotpath");
+        r.meta.insert("host".into(), "ci".into());
+        r.entries.push(timing("a/b", 123.456));
+        let mut t = Timing::single("fig/total", 5.5e6);
+        t.batch = 28_000;
+        r.entries.push(t);
+        let compact = BenchReport::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(compact, r);
+        let mut pretty = r.to_json().pretty();
+        pretty.push('\n');
+        assert_eq!(BenchReport::parse(&pretty).unwrap(), r);
+    }
+
+    #[test]
+    fn rejects_wrong_schema_version() {
+        let text = r#"{"schema_version": 2, "suite": "x", "entries": []}"#;
+        assert!(BenchReport::parse(text).unwrap_err().contains("schema_version"));
+        assert!(BenchReport::parse("{}").is_err());
+    }
+
+    #[test]
+    fn compare_computes_deltas_and_skips_unrecorded() {
+        let mut base = BenchReport::new("hotpath");
+        base.entries.push(timing("hot", 100.0));
+        base.entries.push(timing("bootstrap", 0.0)); // not yet recorded
+        base.entries.push(timing("removed", 50.0));
+        let mut cur = BenchReport::new("hotpath");
+        cur.entries.push(timing("hot", 130.0));
+        cur.entries.push(timing("bootstrap", 10.0));
+        cur.entries.push(timing("brand-new", 5.0));
+        let cmps = cur.compare(&base);
+        assert_eq!(cmps.len(), 1);
+        assert_eq!(cmps[0].name, "hot");
+        assert!((cmps[0].delta_pct - 30.0).abs() < 1e-9);
+        assert!(cmps[0].regressed(25.0));
+        assert!(!cmps[0].regressed(35.0));
+    }
+}

@@ -67,6 +67,17 @@ pub struct Cluster {
     /// (kernel gaps, transfer stalls) that a 10 ms meter sees on real
     /// hardware. Never feeds back into scheduling decisions' latencies.
     sample_rng: crate::util::rng::Rng,
+    /// Events processed so far (RunResult::sim_events).
+    events_handled: u64,
+    // --- reused scratch (hot paths allocate nothing per event) ---
+    /// Router view buffer, refilled per routing decision.
+    scratch_loads: Vec<WorkerLoad>,
+    /// Prefill batch formation buffer (`kick_prefill`).
+    pub(crate) scratch_batch: Vec<Request>,
+    /// Finished-decode buffer (`on_decode_step` / `on_coalesced_step`).
+    pub(crate) scratch_done: Vec<DecodeItem>,
+    /// Per-node power accumulation buffer (`on_sample`).
+    scratch_node_w: Vec<f64>,
 }
 
 impl Cluster {
@@ -97,16 +108,17 @@ impl Cluster {
             .map(|r| r.arrival)
             .unwrap_or(0)
             + opts.drain_grace;
+        let n_requests = trace.requests.len();
         Cluster {
             model,
             power,
             policy,
             gpus,
-            events: EventQueue::new(),
+            events: EventQueue::with_capacity(2 * total + 16),
             now: 0,
             trace: trace.requests,
             next_arrival: 0,
-            records: Vec::new(),
+            records: Vec::with_capacity(n_requests),
             ring_used: vec![0; cfg.n_nodes],
             cluster_power: TimeSeries::new(),
             node_power: (0..cfg.n_nodes).map(|_| TimeSeries::new()).collect(),
@@ -116,9 +128,14 @@ impl Cluster {
             provisioned_integral: 0.0,
             last_sample_at: 0,
             opts,
-            cfg,
             hard_stop,
             sample_rng: crate::util::rng::Rng::new(0xF16_3),
+            events_handled: 0,
+            scratch_loads: Vec::with_capacity(total),
+            scratch_batch: Vec::with_capacity(cfg.batch.max_prefill_reqs),
+            scratch_done: Vec::with_capacity(cfg.batch.max_decode_reqs),
+            scratch_node_w: Vec::with_capacity(cfg.n_nodes),
+            cfg,
         }
     }
 
@@ -137,6 +154,7 @@ impl Cluster {
             if self.records.len() >= total || self.now > self.hard_stop {
                 break;
             }
+            self.events_handled += 1;
             self.handle(ev);
         }
         self.finish()
@@ -156,37 +174,61 @@ impl Cluster {
         self.cfg.batch.ring_slots.saturating_sub(self.ring_used[node])
     }
 
-    /// Router view of every prefill worker.
-    pub(crate) fn prefill_loads(&self) -> Vec<WorkerLoad> {
-        self.gpus
-            .iter()
-            .enumerate()
-            .filter(|(_, g)| g.role == Role::Prefill)
-            .map(|(i, g)| WorkerLoad {
-                gpu: GpuId(i),
-                node: self.node_of(i),
-                queued_tokens: g.pf_queued_tokens,
-                requests: g.pf_queue.len(),
-                accepting: g.accepting(),
-            })
-            .collect()
+    /// Router view of every prefill worker, into a caller-owned buffer.
+    fn fill_prefill_loads(&self, out: &mut Vec<WorkerLoad>) {
+        out.clear();
+        for (i, g) in self.gpus.iter().enumerate() {
+            if g.role == Role::Prefill {
+                out.push(WorkerLoad {
+                    gpu: GpuId(i),
+                    node: self.node_of(i),
+                    queued_tokens: g.pf_queued_tokens,
+                    requests: g.pf_queue.len(),
+                    accepting: g.accepting(),
+                });
+            }
+        }
     }
 
     /// Router view of every decode worker, optionally excluding one GPU
     /// (drain re-routing must not pick the drainer itself).
-    pub(crate) fn decode_loads_excluding(&self, exclude: Option<usize>) -> Vec<WorkerLoad> {
-        self.gpus
-            .iter()
-            .enumerate()
-            .filter(|(i, g)| g.role == Role::Decode && Some(*i) != exclude)
-            .map(|(i, g)| WorkerLoad {
-                gpu: GpuId(i),
-                node: self.node_of(i),
-                queued_tokens: 0,
-                requests: g.decode_load(),
-                accepting: g.accepting(),
-            })
-            .collect()
+    fn fill_decode_loads(&self, exclude: Option<usize>, out: &mut Vec<WorkerLoad>) {
+        out.clear();
+        for (i, g) in self.gpus.iter().enumerate() {
+            if g.role == Role::Decode && Some(i) != exclude {
+                out.push(WorkerLoad {
+                    gpu: GpuId(i),
+                    node: self.node_of(i),
+                    queued_tokens: 0,
+                    requests: g.decode_load(),
+                    accepting: g.accepting(),
+                });
+            }
+        }
+    }
+
+    /// Least-loaded accepting prefill worker, via the reused routing
+    /// scratch (no per-decision allocation).
+    pub(crate) fn pick_prefill_gpu(&mut self) -> Option<GpuId> {
+        let mut loads = std::mem::take(&mut self.scratch_loads);
+        self.fill_prefill_loads(&mut loads);
+        let pick = router::pick_prefill(&loads);
+        self.scratch_loads = loads;
+        pick
+    }
+
+    /// Least-loaded accepting decode worker with same-node preference,
+    /// via the reused routing scratch.
+    pub(crate) fn pick_decode_gpu(
+        &mut self,
+        exclude: Option<usize>,
+        prefer_node: usize,
+    ) -> Option<GpuId> {
+        let mut loads = std::mem::take(&mut self.scratch_loads);
+        self.fill_decode_loads(exclude, &mut loads);
+        let pick = router::pick_decode_prefer_node(&loads, prefer_node);
+        self.scratch_loads = loads;
+        pick
     }
 
     /// Append a completion record.
@@ -229,7 +271,7 @@ impl Cluster {
     }
 
     fn on_arrival(&mut self) {
-        let req = self.trace[self.next_arrival].clone();
+        let req = self.trace[self.next_arrival];
         self.next_arrival += 1;
         if self.next_arrival < self.trace.len() {
             self.events
@@ -244,8 +286,7 @@ impl Cluster {
     /// Centrally route a prompt to the least-loaded prefill worker of any
     /// node (paper §3.2's central scheduler, now cluster-wide).
     pub(crate) fn route_prefill(&mut self, req: Request) {
-        let loads = self.prefill_loads();
-        let Some(gpu) = router::pick_prefill(&loads) else {
+        let Some(gpu) = self.pick_prefill_gpu() else {
             // No accepting prefill GPU (all draining): park on the one with
             // the committed prefill role; it will pick the work up after
             // the drain. This cannot happen with >= 1 GPU per phase.
@@ -262,19 +303,20 @@ impl Cluster {
     }
 
     fn route_coalesced(&mut self, req: Request) {
-        let loads: Vec<WorkerLoad> = self
-            .gpus
-            .iter()
-            .enumerate()
-            .map(|(i, g)| WorkerLoad {
+        let mut loads = std::mem::take(&mut self.scratch_loads);
+        loads.clear();
+        for (i, g) in self.gpus.iter().enumerate() {
+            loads.push(WorkerLoad {
                 gpu: GpuId(i),
                 node: self.node_of(i),
                 queued_tokens: g.co_queued_tokens(),
                 requests: g.co_queue.len() + g.dec_active.len(),
                 accepting: g.accepting(),
-            })
-            .collect();
-        let gpu = router::pick_prefill(&loads).expect("coalesced pool nonempty");
+            });
+        }
+        let pick = router::pick_prefill(&loads);
+        self.scratch_loads = loads;
+        let gpu = pick.expect("coalesced pool nonempty");
         self.gpus[gpu.0].co_queue.push_back(crate::sim::gpu::ChunkMeta {
             prog: crate::coordinator::batcher::ChunkProgress::new(req),
             started: None,
@@ -296,26 +338,25 @@ impl Cluster {
         // deep queue keeps the signal high even right after a power boost
         // clears the head.
         if self.policy.is_dynamic() {
-            let mut samples: Vec<(f64, u64)> = Vec::new();
+            // Field-disjoint borrows (gpus shared, policy mut) keep this
+            // loop allocation-free — no samples buffer.
+            let now = self.now;
             for (i, g) in self.gpus.iter().enumerate() {
                 let (head, backlog_tokens) = match g.role {
                     Role::Coalesced => (
-                        g.co_queue.front().map(|c| &c.prog.request),
+                        g.co_queue.front().map(|c| c.prog.request),
                         g.co_queued_tokens(),
                     ),
-                    _ => (g.pf_queue.front(), g.pf_queued_tokens),
+                    _ => (g.pf_queue.front().copied(), g.pf_queued_tokens),
                 };
-                if let Some(req) = head {
-                    let age = self.now.saturating_sub(req.arrival);
-                    let cap = self.power.effective(GpuId(i), self.now);
-                    let drain =
-                        (backlog_tokens as f64 / self.model.prefill_rate(cap) * 1e6) as Micros;
-                    let projected = age + drain;
-                    samples.push((projected as f64, req.slo.ttft));
-                }
-            }
-            for (projected, slo) in samples {
-                self.policy.observe_ttft(self.now, projected / slo as f64);
+                let Some(req) = head else { continue };
+                let age = now.saturating_sub(req.arrival);
+                let cap = self.power.effective(GpuId(i), now);
+                let drain =
+                    (backlog_tokens as f64 / self.model.prefill_rate(cap) * 1e6) as Micros;
+                let projected = age + drain;
+                self.policy
+                    .observe_ttft(now, projected as f64 / req.slo.ttft as f64);
             }
         }
         let snap = self.snapshot();
@@ -346,48 +387,61 @@ impl Cluster {
     }
 
     fn snapshot(&self) -> Snapshot {
+        // Single allocation-free pass over the GPUs: this runs every
+        // controller tick, so it must not build per-role pool vectors.
         let c = &self.cfg.controller;
-        let prefill_pool = self.pool(Role::Prefill);
-        let decode_pool = self.pool(Role::Decode);
-        let prefill_queue: usize = self.gpus.iter().map(|g| g.pf_queue.len()).sum::<usize>()
-            + self.gpus.iter().map(|g| g.co_queue.len()).sum::<usize>();
-        let decode_queue: usize = self.gpus.iter().map(|g| g.dec_pending.len()).sum();
-        // MovePower(D->P) is exhausted when prefill caps hit MAX or decode
-        // caps hit MIN.
-        let prefill_power_saturated = prefill_pool
-            .iter()
-            .all(|&g| self.power.target(g) >= c.max_gpu_w - 1.0)
-            || decode_pool
-                .iter()
-                .all(|&g| self.power.target(g) <= c.min_gpu_w + 1.0)
-            || prefill_pool.is_empty()
-            || decode_pool.is_empty();
-        // MovePower(P->D) is exhausted when decode caps hit their ceiling
-        // (decode gains nothing above the knee) or prefill caps hit MIN.
-        let decode_power_saturated = decode_pool
-            .iter()
-            .all(|&g| self.power.target(g) >= c.decode_ceiling_w - 1.0)
-            || prefill_pool
-                .iter()
-                .all(|&g| self.power.target(g) <= c.min_gpu_w + 1.0)
-            || prefill_pool.is_empty()
-            || decode_pool.is_empty();
+        let mut prefill_queue = 0usize;
+        let mut decode_queue = 0usize;
+        let mut prefill_committed = 0usize;
+        let mut decode_committed = 0usize;
+        let mut prefill_pool = 0usize; // accepting members only
+        let mut decode_pool = 0usize;
+        // Vacuously true over empty pools, exactly like `.all()` on an
+        // empty iterator in the pool-vector formulation.
+        let mut p_all_at_max = true;
+        let mut p_all_at_min = true;
+        let mut d_all_at_min = true;
+        let mut d_all_at_ceiling = true;
+        for (i, g) in self.gpus.iter().enumerate() {
+            prefill_queue += g.pf_queue.len() + g.co_queue.len();
+            decode_queue += g.dec_pending.len();
+            match g.committed_role() {
+                Role::Prefill => prefill_committed += 1,
+                Role::Decode => decode_committed += 1,
+                Role::Coalesced => {}
+            }
+            if !g.accepting() {
+                continue;
+            }
+            let target = self.power.target(GpuId(i));
+            match g.role {
+                Role::Prefill => {
+                    prefill_pool += 1;
+                    p_all_at_max &= target >= c.max_gpu_w - 1.0;
+                    p_all_at_min &= target <= c.min_gpu_w + 1.0;
+                }
+                Role::Decode => {
+                    decode_pool += 1;
+                    d_all_at_min &= target <= c.min_gpu_w + 1.0;
+                    d_all_at_ceiling &= target >= c.decode_ceiling_w - 1.0;
+                }
+                Role::Coalesced => {}
+            }
+        }
+        let either_pool_empty = prefill_pool == 0 || decode_pool == 0;
         Snapshot {
             now: self.now,
             prefill_queue,
             decode_queue,
-            prefill_gpus: self
-                .gpus
-                .iter()
-                .filter(|g| g.committed_role() == Role::Prefill)
-                .count(),
-            decode_gpus: self
-                .gpus
-                .iter()
-                .filter(|g| g.committed_role() == Role::Decode)
-                .count(),
-            prefill_power_saturated,
-            decode_power_saturated,
+            prefill_gpus: prefill_committed,
+            decode_gpus: decode_committed,
+            // MovePower(D->P) is exhausted when prefill caps hit MAX or
+            // decode caps hit MIN.
+            prefill_power_saturated: p_all_at_max || d_all_at_min || either_pool_empty,
+            // MovePower(P->D) is exhausted when decode caps hit their
+            // ceiling (decode gains nothing above the knee) or prefill
+            // caps hit MIN.
+            decode_power_saturated: d_all_at_ceiling || p_all_at_min || either_pool_empty,
         }
     }
 
@@ -486,8 +540,7 @@ impl Cluster {
             // Send to the least-loaded other decode GPU, preferring the
             // same node (KV re-transfer is charged: the cache must move
             // with the request, and cross-node hops pay the slower link).
-            let loads = self.decode_loads_excluding(Some(gi));
-            if let Some(target) = router::pick_decode_prefer_node(&loads, src_node) {
+            if let Some(target) = self.pick_decode_gpu(Some(gi), src_node) {
                 let same_node = self.node_of(target.0) == src_node;
                 let t = self
                     .model
@@ -567,11 +620,14 @@ impl Cluster {
     }
 
     fn on_sample(&mut self) {
-        let dt = (self.now - self.last_sample_at) as f64;
-        self.last_sample_at = self.now;
-        let mut per_node = vec![0.0; self.cfg.n_nodes];
+        let now = self.now;
+        let dt = (now - self.last_sample_at) as f64;
+        self.last_sample_at = now;
+        let mut per_node = std::mem::take(&mut self.scratch_node_w);
+        per_node.clear();
+        per_node.resize(self.cfg.n_nodes, 0.0);
         for (i, g) in self.gpus.iter().enumerate() {
-            let cap = self.power.effective(GpuId(i), self.now);
+            let cap = self.power.effective(GpuId(i), now);
             let is_prefill_like = matches!(g.role, Role::Prefill | Role::Coalesced);
             let mut mean_draw = self.model.draw(cap, g.util(), is_prefill_like);
             // Host-side iteration gaps (scheduling, sampling,
@@ -583,18 +639,20 @@ impl Cluster {
             // Microburst variation around the mean draw (per-kernel power
             // phases under a 10 ms meter).
             let jitter = 1.0 + 0.08 * self.sample_rng.normal();
-            per_node[self.node_of(i)] +=
-                (mean_draw * jitter).clamp(self.model.idle_w(), cap);
+            per_node[self.node_of(i)] += (mean_draw * jitter).clamp(self.model.idle_w(), cap);
         }
         let total: f64 = per_node.iter().sum();
-        for (nd, w) in per_node.into_iter().enumerate() {
-            self.node_power[nd].push(self.now, w);
+        for (nd, &w) in per_node.iter().enumerate() {
+            self.node_power[nd].push(now, w);
         }
-        self.cluster_power.push(self.now, total);
-        self.provisioned_integral += self.power.targets().iter().sum::<f64>() * dt;
-        self.cap_trace.push((self.now, self.power.targets()));
-        self.events
-            .push(self.now + self.opts.sample_period, Event::Sample);
+        self.scratch_node_w = per_node;
+        self.cluster_power.push(now, total);
+        // One targets() materialization per sample: the cap trace keeps
+        // the vector, the provisioned integral just sums it first.
+        let targets = self.power.targets();
+        self.provisioned_integral += targets.iter().sum::<f64>() * dt;
+        self.cap_trace.push((now, targets));
+        self.events.push(now + self.opts.sample_period, Event::Sample);
     }
 
     fn record_roles(&mut self) {
@@ -636,7 +694,7 @@ impl Cluster {
                 });
             }
         }
-        RunResult {
+        let mut result = RunResult {
             config_name: self.cfg.name.clone(),
             records: self.records,
             node_power: self.cluster_power,
@@ -646,6 +704,12 @@ impl Cluster {
             decisions: self.decisions,
             duration,
             mean_provisioned_w,
-        }
+            sim_events: self.events_handled,
+            summary_cache: None,
+        };
+        // Aggregate once here so emitters/figure drivers never re-scan
+        // the record and power series per metric.
+        result.seal_summary();
+        result
     }
 }

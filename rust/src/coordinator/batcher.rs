@@ -24,20 +24,34 @@ pub struct PrefillBatch {
 /// Always admits at least one request (a single over-budget prompt must
 /// not deadlock the queue).
 pub fn form_prefill_batch(queue: &mut VecDeque<Request>, cfg: &BatchConfig) -> PrefillBatch {
-    let mut batch = PrefillBatch::default();
+    let mut requests = Vec::new();
+    let total_tokens = form_prefill_batch_into(queue, cfg, &mut requests);
+    PrefillBatch { requests, total_tokens }
+}
+
+/// [`form_prefill_batch`] into a caller-owned buffer (cleared first),
+/// returning the batch's total prompt tokens — the zero-allocation
+/// variant the simulator's per-batch hot path uses with a reused
+/// scratch vector.
+pub fn form_prefill_batch_into(
+    queue: &mut VecDeque<Request>,
+    cfg: &BatchConfig,
+    out: &mut Vec<Request>,
+) -> u32 {
+    out.clear();
+    let mut total_tokens = 0u32;
     while let Some(front) = queue.front() {
-        let would_be = batch.total_tokens + front.input_tokens;
-        let fits = batch.requests.is_empty()
-            || (would_be <= cfg.max_prefill_tokens
-                && batch.requests.len() < cfg.max_prefill_reqs);
+        let would_be = total_tokens + front.input_tokens;
+        let fits = out.is_empty()
+            || (would_be <= cfg.max_prefill_tokens && out.len() < cfg.max_prefill_reqs);
         if !fits {
             break;
         }
         let r = queue.pop_front().unwrap();
-        batch.total_tokens += r.input_tokens;
-        batch.requests.push(r);
+        total_tokens += r.input_tokens;
+        out.push(r);
     }
-    batch
+    total_tokens
 }
 
 /// Decode admission: how many pending requests may join given the current
@@ -77,23 +91,11 @@ impl ChunkProgress {
     }
 }
 
-/// Take the next chunk across queued prompts (head-first, spilling into
-/// later prompts if the head finishes inside the budget — Sarathi packs
-/// chunks to the budget).
-pub fn take_chunk(queue: &mut VecDeque<ChunkProgress>, budget: u32) -> (u32, Vec<Request>) {
-    let mut used = 0u32;
-    let mut finished = Vec::new();
-    while used < budget {
-        let Some(head) = queue.front_mut() else { break };
-        used += head.advance(budget - used);
-        if head.complete() {
-            finished.push(queue.pop_front().unwrap().request);
-        } else {
-            break;
-        }
-    }
-    (used, finished)
-}
+// NOTE: chunk-taking across queued prompts (head-first, spilling into
+// later prompts if the head finishes inside the budget — Sarathi packs
+// chunks to the budget) lives in `Cluster::kick_coalesced`, which walks
+// the `ChunkMeta` queue in place; `ChunkProgress` above is its per-prompt
+// bookkeeping unit.
 
 #[cfg(test)]
 mod tests {
@@ -127,6 +129,21 @@ mod tests {
         assert_eq!(b.requests.len(), 2);
         assert_eq!(b.total_tokens, 3500);
         assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn into_variant_matches_and_reuses_buffer() {
+        let mut q1: VecDeque<Request> = (0..10).map(|i| req(i, 700)).collect();
+        let mut q2 = q1.clone();
+        let mut scratch = vec![req(99, 1)]; // stale contents must be cleared
+        let total = form_prefill_batch_into(&mut q1, &cfg(), &mut scratch);
+        let b = form_prefill_batch(&mut q2, &cfg());
+        assert_eq!(total, b.total_tokens);
+        assert_eq!(
+            scratch.iter().map(|r| r.id.0).collect::<Vec<_>>(),
+            b.requests.iter().map(|r| r.id.0).collect::<Vec<_>>()
+        );
+        assert_eq!(q1.len(), q2.len());
     }
 
     #[test]
@@ -180,23 +197,4 @@ mod tests {
         assert!(p.complete());
     }
 
-    #[test]
-    fn take_chunk_packs_across_prompts() {
-        let mut q: VecDeque<ChunkProgress> =
-            vec![ChunkProgress::new(req(0, 1000)), ChunkProgress::new(req(1, 5000))].into();
-        let (used, finished) = take_chunk(&mut q, 2048);
-        assert_eq!(used, 2048);
-        assert_eq!(finished.len(), 1);
-        assert_eq!(finished[0].id.0, 0);
-        // Head of queue is now request 1 with 1048 tokens done.
-        assert_eq!(q.front().unwrap().done_tokens, 1048);
-    }
-
-    #[test]
-    fn take_chunk_empty_queue() {
-        let mut q = VecDeque::new();
-        let (used, finished) = take_chunk(&mut q, 2048);
-        assert_eq!(used, 0);
-        assert!(finished.is_empty());
-    }
 }

@@ -23,6 +23,11 @@ pub struct WorkerLoad {
 }
 
 /// Pick the prefill worker with the least queued prompt tokens.
+///
+/// Called once per arrival/publish on the simulator's hot path — the
+/// cluster core reuses one scratch `Vec<WorkerLoad>` across calls so a
+/// routing decision allocates nothing.
+#[inline]
 pub fn pick_prefill(loads: &[WorkerLoad]) -> Option<GpuId> {
     loads
         .iter()
@@ -32,6 +37,7 @@ pub fn pick_prefill(loads: &[WorkerLoad]) -> Option<GpuId> {
 }
 
 /// Pick the decode worker with the fewest resident requests.
+#[inline]
 pub fn pick_decode(loads: &[WorkerLoad]) -> Option<GpuId> {
     loads
         .iter()
@@ -47,6 +53,7 @@ pub const LOCALITY_SLACK_REQS: usize = 4;
 /// Pick a decode worker preferring `node` (where the KV cache already
 /// lives): take the least-loaded local worker unless a remote worker is
 /// more than `LOCALITY_SLACK_REQS` requests lighter.
+#[inline]
 pub fn pick_decode_prefer_node(loads: &[WorkerLoad], node: usize) -> Option<GpuId> {
     let global = pick_decode(loads)?;
     let global_load = loads

@@ -6,9 +6,12 @@
 //!   study    run a declarative scenario file (scenarios/*.toml)
 //!   sim      run one configuration over a workload, print metrics
 //!   sweep    static design-space search (the paper's §5.1 exploration)
+//!   bench    hot-path perf suite + JSON report + CI regression gate
 //!   serve    real PJRT serving demo (requires `make artifacts`)
 //!   presets  list configuration presets
 
+use rapid::bench::hotpath::SuiteConfig;
+use rapid::bench::BenchReport;
 use rapid::cli::Command;
 use rapid::config::{presets, ClusterConfig};
 use rapid::experiments::{self as exp, render_checks};
@@ -185,6 +188,31 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
                 base,
             );
         }
+        "bench" => {
+            let cmd = Command::new(
+                "bench",
+                "run the hot-path perf suite in-process; optionally gate on a baseline",
+            )
+            .opt("filter", "", "only run cases whose name contains this substring")
+            .opt("json", "", "write the BenchReport JSON here (BENCH_hotpath.json schema)")
+            .opt("compare", "", "baseline BenchReport JSON to gate against")
+            .opt("max-regress", "25", "max tolerated per-item median-time regression (percent)")
+            .opt("target-ms", "300", "per-case timing budget in ms (whole-sim case gets 5x)")
+            .opt("sim-requests", "400", "requests in the whole-sim case's trace");
+            let a = parse_or_help(&cmd, rest)?;
+            let suite = SuiteConfig {
+                filter: a.get("filter").filter(|f| !f.is_empty()).map(str::to_string),
+                target_ms: a.u64_or("target-ms", 300)?,
+                sim_requests: a.usize_or("sim-requests", 400)?,
+                ..SuiteConfig::default()
+            };
+            run_bench(
+                &suite,
+                a.get("json").unwrap_or(""),
+                a.get("compare").unwrap_or(""),
+                a.f64_or("max-regress", 25.0)?,
+            )?;
+        }
         "presets" => {
             println!("available presets:");
             for name in presets::NAMES {
@@ -224,7 +252,8 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
         "help" | "--help" | "-h" => {
             println!("rapid — power-aware disaggregated inference (paper reproduction)");
             println!(
-                "subcommands: fig1 fig3 fig4 fig5 fig6 fig7 fig8 fig9 study sim sweep serve presets"
+                "subcommands: fig1 fig3 fig4 fig5 fig6 fig7 fig8 fig9 study sim sweep bench \
+                 serve presets"
             );
             println!("run `rapid <subcommand> --help` for flags");
         }
@@ -254,6 +283,81 @@ fn load_config(path: &str, preset: &str) -> Result<ClusterConfig, Box<dyn std::e
     Ok(presets::by_name(preset)?)
 }
 
+fn run_bench(
+    suite: &SuiteConfig,
+    json_path: &str,
+    baseline_path: &str,
+    max_regress_pct: f64,
+) -> Result<(), Box<dyn std::error::Error>> {
+    let report = rapid::bench::hotpath::run_suite(suite);
+    if report.entries.is_empty() {
+        return Err("bench: no case matches the filter".into());
+    }
+    for t in &report.entries {
+        println!("{}", t.report());
+    }
+    if !json_path.is_empty() {
+        report.write(json_path)?;
+        println!("wrote {json_path}");
+    }
+    if baseline_path.is_empty() {
+        return Ok(());
+    }
+    let baseline = BenchReport::load(baseline_path)?;
+    let comparisons = report.compare(&baseline);
+    let skipped = report.entries.len() - comparisons.len();
+    println!(
+        "\nvs baseline {baseline_path} (median per-item time, max regression {max_regress_pct}%):"
+    );
+    for c in &comparisons {
+        println!(
+            "  {:<44} {:>12.4} us -> {:>12.4} us  {:>+7.1}%{}",
+            c.name,
+            c.baseline_us,
+            c.current_us,
+            c.delta_pct,
+            if c.regressed(max_regress_pct) { "  REGRESSED" } else { "" }
+        );
+    }
+    if skipped > 0 {
+        println!("  ({skipped} case(s) without a recorded baseline — skipped)");
+    }
+    // A recorded baseline case this run should have measured (i.e. the
+    // active filter selects it) but did not must not pass silently — it
+    // means the case was renamed or removed.
+    let unmatched: Vec<&str> = baseline
+        .entries
+        .iter()
+        .filter(|b| b.is_recorded())
+        .filter(|b| suite.wants(&b.name) && report.entry(&b.name).is_none())
+        .map(|b| b.name.as_str())
+        .collect();
+    if !unmatched.is_empty() {
+        return Err(format!(
+            "perf gate: {} recorded baseline case(s) missing from this run: {} \
+             (was the case renamed or removed?)",
+            unmatched.len(),
+            unmatched.join(", ")
+        )
+        .into());
+    }
+    let regressed: Vec<&str> = comparisons
+        .iter()
+        .filter(|c| c.regressed(max_regress_pct))
+        .map(|c| c.name.as_str())
+        .collect();
+    if !regressed.is_empty() {
+        return Err(format!(
+            "perf gate: {} case(s) regressed beyond {max_regress_pct}%: {}",
+            regressed.len(),
+            regressed.join(", ")
+        )
+        .into());
+    }
+    println!("perf gate OK ({} case(s) within {max_regress_pct}%)", comparisons.len());
+    Ok(())
+}
+
 fn print_result(cfg: &ClusterConfig, res: &rapid::metrics::RunResult) {
     println!("config: {}", cfg.name);
     println!("  requests:        {}", res.records.len());
@@ -261,21 +365,15 @@ fn print_result(cfg: &ClusterConfig, res: &rapid::metrics::RunResult) {
     println!("  attainment:      {:.1}%", res.attainment() * 100.0);
     println!("  goodput:         {:.2} qps", res.goodput_qps());
     println!("  qps/kW:          {:.3}", res.qps_per_kw());
-    println!(
-        "  TTFT p50/p90:    {:.0} / {:.0} ms",
-        res.ttft_percentile(50.0) / 1000.0,
-        res.ttft_percentile(90.0) / 1000.0
-    );
-    println!(
-        "  TPOT p50/p90:    {:.1} / {:.1} ms",
-        res.tpot_percentile(50.0) / 1000.0,
-        res.tpot_percentile(90.0) / 1000.0
-    );
+    let s = res.summary();
+    println!("  TTFT p50/p90:    {:.0} / {:.0} ms", s.ttft_p50_ms, s.ttft_p90_ms);
+    println!("  TPOT p50/p90:    {:.1} / {:.1} ms", s.tpot_p50_ms, s.tpot_p90_ms);
     let (q, e) = res.ttft_breakdown();
     println!("  queue/exec:      {:.0} / {:.0} ms", q / 1000.0, e / 1000.0);
     println!("  provisioned:     {:.0} W", res.mean_provisioned_w);
     println!("  peak node draw:  {:.0} W", res.node_power.max());
     println!("  decisions:       {}", res.decisions.len());
+    println!("  sim events:      {}", res.sim_events);
 }
 
 fn run_sweep(

@@ -1,7 +1,7 @@
 //! Experiment metrics: request records → paper-figure aggregates.
 
 use crate::types::{Micros, RequestRecord, Watts, SECOND};
-use crate::util::stats::{percentile, TimeSeries};
+use crate::util::stats::{percentile, percentile_sorted, TimeSeries};
 
 /// Everything a run produces; each paper figure is a view over this.
 #[derive(Debug, Default, Clone)]
@@ -24,11 +24,24 @@ pub struct RunResult {
     pub duration: Micros,
     /// Mean provisioned GPU power (sum of caps averaged over time).
     pub mean_provisioned_w: Watts,
+    /// Discrete events the simulation processed — the denominator of the
+    /// `rapid bench` / `benches/study_throughput` events-per-second
+    /// throughput metric.
+    pub sim_events: u64,
+    /// Summary computed once when the run finishes, so study emitters
+    /// and figure drivers never re-scan the record/power series.
+    /// Hand-built results (tests) fall back to computing on demand.
+    pub(crate) summary_cache: Option<Summary>,
 }
 
 impl RunResult {
     /// Fraction of requests meeting both SLOs (paper's "SLO attainment").
+    /// Served from the sealed summary when present so repeated calls
+    /// don't re-scan the record series.
     pub fn attainment(&self) -> f64 {
+        if let Some(s) = self.summary_cache {
+            return s.attainment;
+        }
         if self.records.is_empty() {
             return 0.0;
         }
@@ -38,6 +51,9 @@ impl RunResult {
 
     /// Attained requests per second (paper's "goodput", Fig 1).
     pub fn goodput_qps(&self) -> f64 {
+        if let Some(s) = self.summary_cache {
+            return s.goodput_qps;
+        }
         if self.duration == 0 {
             return 0.0;
         }
@@ -47,6 +63,9 @@ impl RunResult {
 
     /// Goodput per provisioned watt (the paper's QPS/W, §5.1).
     pub fn qps_per_kw(&self) -> f64 {
+        if let Some(s) = self.summary_cache {
+            return s.qps_per_kw;
+        }
         if self.mean_provisioned_w <= 0.0 {
             return 0.0;
         }
@@ -84,21 +103,67 @@ impl RunResult {
     }
 
     /// Flat aggregate view of this run — the per-cell payload every
-    /// study emitter (text/JSON/CSV) renders.
+    /// study emitter (text/JSON/CSV) renders. Served from the cache the
+    /// simulator populates at the end of a run; computed on demand for
+    /// hand-built results.
     pub fn summary(&self) -> Summary {
+        if let Some(s) = self.summary_cache {
+            return s;
+        }
+        self.compute_summary()
+    }
+
+    /// One-pass Summary computation: a single scan over the records
+    /// (attainment + latency series) and one sort per latency series,
+    /// instead of a scan-and-sort per accessor per emitter. Percentiles
+    /// stay exact — the streaming `LatencyHistogram` is for per-tick
+    /// paths, never the final Summary.
+    pub(crate) fn compute_summary(&self) -> Summary {
+        let n = self.records.len();
+        let mut ttfts: Vec<f64> = Vec::with_capacity(n);
+        let mut tpots: Vec<f64> = Vec::with_capacity(n);
+        let mut attained = 0usize;
+        for r in &self.records {
+            ttfts.push(r.ttft() as f64);
+            if r.output_tokens > 1 {
+                tpots.push(r.tpot() as f64);
+            }
+            if r.attained() {
+                attained += 1;
+            }
+        }
+        ttfts.sort_by(|a, b| a.total_cmp(b));
+        tpots.sort_by(|a, b| a.total_cmp(b));
+        let attainment = if n == 0 { 0.0 } else { attained as f64 / n as f64 };
+        let goodput_qps = if self.duration == 0 {
+            0.0
+        } else {
+            attained as f64 / (self.duration as f64 / SECOND as f64)
+        };
+        let qps_per_kw = if self.mean_provisioned_w <= 0.0 {
+            0.0
+        } else {
+            goodput_qps / (self.mean_provisioned_w / 1000.0)
+        };
         Summary {
-            requests: self.records.len(),
-            attainment: self.attainment(),
-            goodput_qps: self.goodput_qps(),
-            qps_per_kw: self.qps_per_kw(),
-            ttft_p50_ms: self.ttft_percentile(50.0) / 1000.0,
-            ttft_p90_ms: self.ttft_percentile(90.0) / 1000.0,
-            tpot_p50_ms: self.tpot_percentile(50.0) / 1000.0,
-            tpot_p90_ms: self.tpot_percentile(90.0) / 1000.0,
+            requests: n,
+            attainment,
+            goodput_qps,
+            qps_per_kw,
+            ttft_p50_ms: percentile_sorted(&ttfts, 50.0) / 1000.0,
+            ttft_p90_ms: percentile_sorted(&ttfts, 90.0) / 1000.0,
+            tpot_p50_ms: percentile_sorted(&tpots, 50.0) / 1000.0,
+            tpot_p90_ms: percentile_sorted(&tpots, 90.0) / 1000.0,
             mean_provisioned_w: self.mean_provisioned_w,
             peak_node_w: self.node_power.max(),
             duration_s: self.duration as f64 / SECOND as f64,
         }
+    }
+
+    /// Populate the summary cache (called once by the simulator's
+    /// `finish`; later `summary()` calls are free).
+    pub(crate) fn seal_summary(&mut self) {
+        self.summary_cache = Some(self.compute_summary());
     }
 
     /// Attainment over completion-time buckets (Fig 6/9 time axes).
@@ -126,7 +191,7 @@ impl RunResult {
 
 /// Flat per-run aggregates (ms-scale latencies, W-scale power) shared
 /// by every study emitter.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Summary {
     pub requests: usize,
     pub attainment: f64,
@@ -234,6 +299,24 @@ mod tests {
         assert_eq!(s.ttft_p90_ms, r.ttft_percentile(90.0) / 1000.0);
         assert_eq!(s.mean_provisioned_w, 4800.0);
         assert_eq!(s.duration_s, 10.0);
+    }
+
+    #[test]
+    fn sealed_summary_matches_recompute() {
+        let mut r = result_with(
+            vec![
+                record(0, 0, 500 * MILLIS, SECOND, 20),
+                record(1, 0, 2 * SECOND, 3 * SECOND, 20),
+            ],
+            10 * SECOND,
+        );
+        let fresh = r.compute_summary();
+        r.seal_summary();
+        assert_eq!(r.summary(), fresh);
+        // Cache is a snapshot: mutating records afterwards must not
+        // change what emitters render.
+        r.records.pop();
+        assert_eq!(r.summary(), fresh);
     }
 
     #[test]

@@ -585,21 +585,25 @@ impl Cell {
     /// Headline value: attainment for sim cells, the scalar otherwise.
     pub fn value(&self) -> f64 {
         match &self.out {
-            CellOut::Sim(r) => r.attainment(),
+            CellOut::Sim(r) => r.summary().attainment,
             CellOut::Scalar(v) => *v,
         }
     }
 
+    // The scalar accessors read the run's sealed `Summary` (computed once
+    // when the cell finished), so emitters that render several metrics
+    // per cell never re-scan the record series.
+
     pub fn attainment(&self) -> f64 {
-        self.result().map_or(0.0, RunResult::attainment)
+        self.result().map_or(0.0, |r| r.summary().attainment)
     }
 
     pub fn goodput_qps(&self) -> f64 {
-        self.result().map_or(0.0, RunResult::goodput_qps)
+        self.result().map_or(0.0, |r| r.summary().goodput_qps)
     }
 
     pub fn qps_per_kw(&self) -> f64 {
-        self.result().map_or(0.0, RunResult::qps_per_kw)
+        self.result().map_or(0.0, |r| r.summary().qps_per_kw)
     }
 
     pub fn rate_point(&self) -> RatePoint {
@@ -684,6 +688,7 @@ fn build_cell_trace(scenario: &Scenario, spec: &CellSpec) -> Trace {
 }
 
 fn cell_checks(config: &ClusterConfig, n_requests: usize, res: &RunResult) -> Vec<ShapeCheck> {
+    let summary = res.summary();
     let mut checks = vec![
         ShapeCheck::new(
             "all requests completed or accounted",
@@ -692,8 +697,8 @@ fn cell_checks(config: &ClusterConfig, n_requests: usize, res: &RunResult) -> Ve
         ),
         ShapeCheck::new(
             "attainment within [0, 1]",
-            (0.0..=1.0).contains(&res.attainment()),
-            format!("{:.4}", res.attainment()),
+            (0.0..=1.0).contains(&summary.attainment),
+            format!("{:.4}", summary.attainment),
         ),
     ];
     if config.enforce_budget {

@@ -86,8 +86,15 @@ pub struct EventQueue {
 
 impl EventQueue {
     pub fn new() -> Self {
+        EventQueue::with_capacity(0)
+    }
+
+    /// Preallocate the heap: steady-state sims keep roughly one in-flight
+    /// event per GPU plus the periodic timers, so sizing up-front avoids
+    /// the early growth reallocations on every run of a sweep.
+    pub fn with_capacity(capacity: usize) -> Self {
         EventQueue {
-            heap: BinaryHeap::new(),
+            heap: BinaryHeap::with_capacity(capacity),
             seq: 0,
         }
     }

@@ -2,12 +2,9 @@
 //! with the resident decode batch — the vLLM baseline the paper
 //! disaggregates away from.
 
-use std::collections::VecDeque;
-
 use crate::cluster::Cluster;
-use crate::coordinator::batcher::{self, ChunkProgress};
+use crate::coordinator::batcher;
 use crate::sim::event::{DecodeItem, Event};
-use crate::sim::gpu::ChunkMeta;
 use crate::sim::worker::RoleBehavior;
 use crate::types::{GpuId, Role};
 
@@ -47,37 +44,28 @@ impl Cluster {
             let item = g.dec_pending.pop_front().unwrap();
             g.dec_active.push(item);
         }
-        // Take the next prefill chunk (if any prompt is queued).
-        let mut done_before = 0u32;
-        if let Some(head) = g.co_queue.front_mut() {
+        // Take the next prefill chunk directly over the meta queue —
+        // same packing as `batcher::take_chunk` (head-first, spilling
+        // into later prompts when the head completes inside the budget)
+        // but in place: no cloned progress queue per iteration.
+        let now = self.now;
+        let done_before = g.co_queue.front().map_or(0, |c| c.prog.done_tokens);
+        let mut used = 0u32;
+        while used < chunk_budget {
+            let Some(head) = g.co_queue.front_mut() else { break };
             if head.started.is_none() {
-                head.started = Some(self.now);
+                // The chunk reached this prompt: its execution starts now.
+                head.started = Some(now);
             }
-            done_before = head.prog.done_tokens;
+            used += head.prog.advance(chunk_budget - used);
+            if head.prog.complete() {
+                let meta = g.co_queue.pop_front().unwrap();
+                g.co_finishing
+                    .push((meta.prog.request, meta.started.unwrap_or(now)));
+            } else {
+                break;
+            }
         }
-        let mut queue = std::mem::take(&mut g.co_queue);
-        // Mark start times for any prompt the chunk reaches.
-        let (used, finished_reqs) = {
-            let mut progs: VecDeque<ChunkProgress> =
-                queue.iter().map(|c| c.prog.clone()).collect();
-            let r = batcher::take_chunk(&mut progs, chunk_budget);
-            // Write back progress into the metas that remain.
-            let consumed = queue.len() - progs.len();
-            let finished_meta: Vec<ChunkMeta> = queue.drain(..consumed).collect();
-            for (meta, prog) in queue.iter_mut().zip(progs.iter()) {
-                meta.prog = prog.clone();
-                if meta.prog.done_tokens > 0 && meta.started.is_none() {
-                    meta.started = Some(self.now);
-                }
-            }
-            let mut finished = Vec::new();
-            for meta in finished_meta {
-                finished.push((meta.prog.request.clone(), meta.started.unwrap_or(self.now)));
-            }
-            (r.0, finished)
-        };
-        g.co_queue = queue;
-        g.co_finishing = finished_reqs;
         g.co_step_chunk = used;
         if used == 0 && g.dec_active.is_empty() {
             return; // nothing to do this iteration
@@ -102,9 +90,10 @@ impl Cluster {
         let step = self.gpus[gi].dec_step_time;
         self.gpus[gi].busy = false;
         // Prefill completions: first token now; join local decode.
-        let finishing = std::mem::take(&mut self.gpus[gi].co_finishing);
+        // Drain-and-restore keeps co_finishing's capacity across steps.
+        let mut finishing = std::mem::take(&mut self.gpus[gi].co_finishing);
         let dynamic = self.policy.is_dynamic();
-        for (req, started) in finishing {
+        for (req, started) in finishing.drain(..) {
             if dynamic {
                 let ratio = (self.now - req.arrival) as f64 / req.slo.ttft as f64;
                 self.policy.observe_ttft(self.now, ratio);
@@ -121,9 +110,11 @@ impl Cluster {
                 tokens_done: 1,
             });
         }
-        // Decode completions.
+        self.gpus[gi].co_finishing = finishing;
+        // Decode completions, into the shared finished-items scratch.
         let mut ratio_sum = 0.0;
-        let mut finished: Vec<DecodeItem> = Vec::new();
+        let mut finished = std::mem::take(&mut self.scratch_done);
+        finished.clear();
         let mut tpot_sample = None;
         {
             let g = &mut self.gpus[gi];
@@ -147,10 +138,75 @@ impl Cluster {
                 self.policy.observe_tpot(self.now, ratio);
             }
         }
-        for item in finished {
+        for item in finished.drain(..) {
             let now = self.now;
             self.push_record(&item.req, item.prefill_start, item.first_token, now);
         }
+        self.scratch_done = finished;
         self.kick_coalesced(gi);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::cluster::Cluster;
+    use crate::config::presets;
+    use crate::coordinator::batcher::ChunkProgress;
+    use crate::sim::engine::SimOptions;
+    use crate::sim::gpu::ChunkMeta;
+    use crate::types::{Request, RequestId, Slo};
+    use crate::workload::Trace;
+
+    fn req(id: u64, input: u32) -> Request {
+        Request {
+            id: RequestId(id),
+            arrival: 0,
+            input_tokens: input,
+            output_tokens: 8,
+            slo: Slo::paper_default(),
+        }
+    }
+
+    fn cluster() -> Cluster {
+        Cluster::new(
+            presets::coalesced(750.0),
+            Trace { requests: Vec::new() },
+            SimOptions::default(),
+        )
+    }
+
+    #[test]
+    fn chunk_packs_across_prompts_in_place() {
+        // The Sarathi packing invariant the in-place loop must keep: a
+        // head that finishes inside the budget spills exactly the
+        // remaining budget into the next prompt.
+        let mut cl = cluster();
+        let budget = cl.cfg.perf.chunk_tokens;
+        assert!(budget > 300, "test assumes the first prompt fits one chunk");
+        for (id, toks) in [(0u64, 300u32), (1, 5000)] {
+            cl.gpus[0].co_queue.push_back(ChunkMeta {
+                prog: ChunkProgress::new(req(id, toks)),
+                started: None,
+            });
+        }
+        cl.kick_coalesced(0);
+        let g = &cl.gpus[0];
+        assert_eq!(g.co_step_chunk, budget);
+        assert_eq!(g.co_finishing.len(), 1);
+        assert_eq!(g.co_finishing[0].0.id.0, 0);
+        assert_eq!(g.co_finishing[0].1, 0, "head's started stamp");
+        let head = g.co_queue.front().unwrap();
+        assert_eq!(head.prog.request.id.0, 1);
+        assert_eq!(head.prog.done_tokens, budget - 300);
+        assert_eq!(head.started, Some(0), "reached prompt is marked started");
+        assert!(g.busy);
+    }
+
+    #[test]
+    fn kick_with_empty_queue_is_a_noop() {
+        let mut cl = cluster();
+        cl.kick_coalesced(0);
+        assert!(!cl.gpus[0].busy);
+        assert_eq!(cl.gpus[0].co_step_chunk, 0);
     }
 }

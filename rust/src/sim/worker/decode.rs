@@ -77,7 +77,11 @@ impl Cluster {
         let step = self.gpus[gi].dec_step_time;
         self.gpus[gi].busy = false;
         let mut ratio_sum = 0.0;
-        let mut finished: Vec<DecodeItem> = Vec::new();
+        // Decode steps are the most frequent event in a run; the
+        // finished-items buffer is cluster-owned scratch, not a fresh
+        // allocation per step.
+        let mut finished = std::mem::take(&mut self.scratch_done);
+        finished.clear();
         let mut tpot_sample = None;
         {
             let g = &mut self.gpus[gi];
@@ -102,10 +106,11 @@ impl Cluster {
                 self.policy.observe_tpot(self.now, ratio);
             }
         }
-        for item in finished {
+        for item in finished.drain(..) {
             let now = self.now;
             self.push_record(&item.req, item.prefill_start, item.first_token, now);
         }
+        self.scratch_done = finished;
         self.maybe_finish_drain(gi);
         self.kick_decode(gi);
     }

@@ -2,7 +2,7 @@
 //! KV-ring backpressure, and publish into the decode pool (paper §3.2).
 
 use crate::cluster::Cluster;
-use crate::coordinator::{batcher, router};
+use crate::coordinator::batcher;
 use crate::sim::event::{DecodeItem, Event};
 use crate::sim::worker::RoleBehavior;
 use crate::types::{GpuId, Role};
@@ -26,30 +26,39 @@ impl RoleBehavior for PrefillBehavior {
 impl Cluster {
     pub(crate) fn kick_prefill(&mut self, gi: usize) {
         let ring_free = self.ring_free(self.node_of(gi));
+        let now = self.now;
+        {
+            let g = &self.gpus[gi];
+            if g.busy || g.role != Role::Prefill || g.pf_queue.is_empty() {
+                return;
+            }
+            // Backpressure: wait for ring slots before starting a new
+            // batch (the paper's prefill stall when decode cannot drain).
+            if !g.publish_wait.is_empty() || ring_free == 0 {
+                return;
+            }
+        }
+        // Batch formation reuses the cluster-wide scratch buffer: a busy
+        // prefill GPU forms thousands of batches per run without touching
+        // the allocator. Taken only after the guards so every return path
+        // past this point restores it.
+        let mut scratch = std::mem::take(&mut self.scratch_batch);
         let g = &mut self.gpus[gi];
-        if g.busy || g.role != Role::Prefill || g.pf_queue.is_empty() {
+        let total_tokens =
+            batcher::form_prefill_batch_into(&mut g.pf_queue, &self.cfg.batch, &mut scratch);
+        if scratch.is_empty() {
+            self.scratch_batch = scratch;
             return;
         }
-        // Backpressure: wait for ring slots before starting a new batch
-        // (the paper's prefill stall when decode cannot drain).
-        if !g.publish_wait.is_empty() || ring_free == 0 {
-            return;
-        }
-        let batch = batcher::form_prefill_batch(&mut g.pf_queue, &self.cfg.batch);
-        if batch.requests.is_empty() {
-            return;
-        }
-        g.pop_prefill_tokens(batch.total_tokens as u64);
-        g.pf_batch = batch
-            .requests
-            .into_iter()
-            .map(|r| (r, self.now))
-            .collect();
+        g.pop_prefill_tokens(total_tokens as u64);
+        g.pf_batch.clear();
+        g.pf_batch.extend(scratch.drain(..).map(|r| (r, now)));
         g.busy = true;
-        let power = self.power.effective(GpuId(gi), self.now);
-        let t = self.model.prefill_batch_time(batch.total_tokens, power);
         let epoch = g.epoch;
-        self.events.push(self.now + t, Event::StepDone { gpu: gi, epoch });
+        self.scratch_batch = scratch;
+        let power = self.power.effective(GpuId(gi), now);
+        let t = self.model.prefill_batch_time(total_tokens, power);
+        self.events.push(now + t, Event::StepDone { gpu: gi, epoch });
     }
 
     pub(crate) fn on_prefill_done(&mut self, gi: usize, epoch: u64) {
@@ -57,9 +66,10 @@ impl Cluster {
             return; // stale (role changed mid-flight)
         }
         self.gpus[gi].busy = false;
-        let batch = std::mem::take(&mut self.gpus[gi].pf_batch);
+        // Drain-and-restore keeps pf_batch's capacity across batches.
+        let mut batch = std::mem::take(&mut self.gpus[gi].pf_batch);
         let dynamic = self.policy.is_dynamic();
-        for (req, prefill_start) in batch {
+        for (req, prefill_start) in batch.drain(..) {
             if dynamic {
                 let ratio = (self.now - req.arrival) as f64 / req.slo.ttft as f64;
                 self.policy.observe_ttft(self.now, ratio);
@@ -78,6 +88,7 @@ impl Cluster {
             };
             self.gpus[gi].publish_wait.push_back(item);
         }
+        self.gpus[gi].pf_batch = batch;
         self.try_publish(gi);
         // Drain handling: if this GPU is switching roles and is now empty,
         // the switch can proceed.
@@ -94,8 +105,8 @@ impl Cluster {
             let Some(item) = self.gpus[gi].publish_wait.pop_front() else {
                 break;
             };
-            let loads = self.decode_loads_excluding(None);
-            let target = router::pick_decode_prefer_node(&loads, src_node)
+            let target = self
+                .pick_decode_gpu(None, src_node)
                 .or_else(|| {
                     self.gpus
                         .iter()

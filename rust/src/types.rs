@@ -56,8 +56,10 @@ impl fmt::Display for Role {
     }
 }
 
-/// An inference request as the coordinator sees it.
-#[derive(Debug, Clone)]
+/// An inference request as the coordinator sees it. Plain old data —
+/// `Copy` keeps the simulator's hot paths free of per-request heap
+/// traffic (requests move through the event heap by value).
+#[derive(Debug, Clone, Copy)]
 pub struct Request {
     pub id: RequestId,
     /// Arrival time at the router.

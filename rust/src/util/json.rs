@@ -94,6 +94,46 @@ impl Json {
             .map(|v| v.as_usize())
             .collect::<Option<Vec<_>>>()
     }
+
+    /// Pretty-print with two-space indentation. Committed artifacts
+    /// (`BENCH_hotpath.json`, bench baselines) stay human-diffable;
+    /// `Display` remains the compact wire form.
+    pub fn pretty(&self) -> String {
+        let mut out = String::new();
+        self.pretty_into(&mut out, 0);
+        out
+    }
+
+    fn pretty_into(&self, out: &mut String, depth: usize) {
+        const INDENT: &str = "  ";
+        match self {
+            Json::Arr(a) if !a.is_empty() => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    out.push_str(if i > 0 { ",\n" } else { "\n" });
+                    out.push_str(&INDENT.repeat(depth + 1));
+                    v.pretty_into(out, depth + 1);
+                }
+                out.push('\n');
+                out.push_str(&INDENT.repeat(depth));
+                out.push(']');
+            }
+            Json::Obj(m) if !m.is_empty() => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    out.push_str(if i > 0 { ",\n" } else { "\n" });
+                    out.push_str(&INDENT.repeat(depth + 1));
+                    out.push_str(&escape(k));
+                    out.push_str(": ");
+                    v.pretty_into(out, depth + 1);
+                }
+                out.push('\n');
+                out.push_str(&INDENT.repeat(depth));
+                out.push('}');
+            }
+            scalar_or_empty => out.push_str(&scalar_or_empty.to_string()),
+        }
+    }
 }
 
 impl fmt::Display for Json {
@@ -369,6 +409,17 @@ mod tests {
         let v = Json::parse(src).unwrap();
         let printed = v.to_string();
         assert_eq!(Json::parse(&printed).unwrap(), v);
+    }
+
+    #[test]
+    fn pretty_round_trips_and_indents() {
+        let src = r#"{"arr":[1,2.5,"x"],"empty":[],"n":null,"obj":{"k":true},"s":"a\nb"}"#;
+        let v = Json::parse(src).unwrap();
+        let pretty = v.pretty();
+        assert_eq!(Json::parse(&pretty).unwrap(), v);
+        assert!(pretty.contains("\n  \"arr\": ["));
+        assert!(pretty.contains("\"empty\": []"));
+        assert!(pretty.contains("\n    \"k\": true"));
     }
 
     #[test]

@@ -7,13 +7,24 @@
 use crate::types::Micros;
 
 /// Exact percentile over a sample (sorts a copy; fine at our sizes).
+///
+/// NaN-tolerant: samples are ordered with `total_cmp`, so NaNs sort to
+/// the end instead of panicking mid-sort (a single NaN latency in a
+/// series must not abort a whole study).
 pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    let mut s: Vec<f64> = samples.to_vec();
+    s.sort_by(|a, b| a.total_cmp(b));
+    percentile_sorted(&s, p)
+}
+
+/// [`percentile`] over an already-sorted slice — the zero-copy variant
+/// for callers that compute several percentiles from one sort (e.g. the
+/// final [`crate::metrics::Summary`]).
+pub fn percentile_sorted(s: &[f64], p: f64) -> f64 {
     assert!((0.0..=100.0).contains(&p), "percentile out of range: {p}");
-    if samples.is_empty() {
+    if s.is_empty() {
         return f64::NAN;
     }
-    let mut s: Vec<f64> = samples.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let rank = (p / 100.0) * (s.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -282,6 +293,26 @@ mod tests {
     fn percentile_single_and_empty() {
         assert_eq!(percentile(&[7.0], 90.0), 7.0);
         assert!(percentile(&[], 50.0).is_nan());
+    }
+
+    #[test]
+    fn percentile_tolerates_nan_samples() {
+        // Regression: `partial_cmp().unwrap()` used to panic here. NaNs
+        // now sort last (total order), so low percentiles stay usable.
+        let xs = [2.0, f64::NAN, 1.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 2.0);
+        assert!(percentile(&xs, 100.0).is_nan());
+    }
+
+    #[test]
+    fn percentile_sorted_matches_percentile() {
+        let xs: Vec<f64> = (1..=50).rev().map(|x| x as f64).collect();
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        for p in [0.0, 10.0, 50.0, 90.0, 99.0, 100.0] {
+            assert_eq!(percentile(&xs, p), percentile_sorted(&sorted, p));
+        }
     }
 
     #[test]

@@ -1,0 +1,155 @@
+//! Perf-subsystem tests: the BenchReport schema the CI gate parses, the
+//! regression comparison itself, the hot-path suite plumbing, and the
+//! statistical contract between the streaming histogram and the exact
+//! percentile it substitutes for on per-tick paths.
+
+use rapid::bench::hotpath::{run_suite, SuiteConfig, WHOLE_SIM};
+use rapid::bench::{BenchReport, Timing};
+use rapid::config::presets;
+use rapid::sim::{self, SimOptions};
+use rapid::types::Slo;
+use rapid::util::check::{ensure, property};
+use rapid::util::stats::{percentile, LatencyHistogram};
+
+fn timing(name: &str, mean_us: f64) -> Timing {
+    Timing {
+        name: name.into(),
+        iters: 10,
+        batch: 1,
+        mean_us,
+        p50_us: mean_us,
+        p99_us: mean_us * 2.0,
+        min_us: mean_us * 0.5,
+        max_us: mean_us * 3.0,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// BenchReport schema
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bench_report_round_trips_via_file() {
+    let mut report = BenchReport::new("hotpath");
+    report.meta.insert("note".into(), "round trip".into());
+    report.entries.push(timing("router/pick", 0.75));
+    let mut whole = timing(WHOLE_SIM, 1.25e6);
+    whole.batch = 30_000;
+    report.entries.push(whole);
+
+    let dir = std::env::temp_dir().join(format!("rapid-bench-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("report.json").to_string_lossy().into_owned();
+    report.write(&path).unwrap();
+    let loaded = BenchReport::load(&path).unwrap();
+    assert_eq!(loaded, report);
+    // The stable schema markers the CI gate greps for.
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.contains("\"schema_version\": 1"));
+    assert!(text.contains("\"per_sec\""));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn comparison_gates_an_injected_regression() {
+    let mut baseline = BenchReport::new("hotpath");
+    baseline.entries.push(timing("steady", 100.0));
+    baseline.entries.push(timing("hot", 100.0));
+    baseline.entries.push(timing("unrecorded", 0.0));
+
+    // Inject a 40% regression on one case.
+    let mut current = BenchReport::new("hotpath");
+    current.entries.push(timing("steady", 104.0));
+    current.entries.push(timing("hot", 140.0));
+    current.entries.push(timing("unrecorded", 9.0));
+
+    let cmps = current.compare(&baseline);
+    assert_eq!(cmps.len(), 2, "unrecorded baselines are skipped");
+    let regressed: Vec<&str> = cmps
+        .iter()
+        .filter(|c| c.regressed(25.0))
+        .map(|c| c.name.as_str())
+        .collect();
+    assert_eq!(regressed, vec!["hot"]);
+    // An improvement is a negative delta, never a regression.
+    let steady = cmps.iter().find(|c| c.name == "steady").unwrap();
+    assert!(!steady.regressed(25.0));
+    assert!((steady.delta_pct - 4.0).abs() < 1e-9);
+}
+
+// ---------------------------------------------------------------------------
+// Hot-path suite plumbing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn suite_report_round_trips_and_counts_events() {
+    let cfg = SuiteConfig {
+        filter: Some("sim/".into()),
+        target_ms: 5,
+        max_iters: 20,
+        sim_requests: 30,
+    };
+    let report = run_suite(&cfg);
+    let t = report.entry(WHOLE_SIM).expect("whole-sim case");
+    assert!(t.batch > 0 && t.per_sec() > 0.0);
+    let back = BenchReport::parse(&report.to_json().to_string()).unwrap();
+    assert_eq!(back, report);
+}
+
+#[test]
+fn sim_events_counter_is_populated_and_deterministic() {
+    let cfg = presets::rapid_600();
+    let trace = rapid::experiments::longbench_trace(7, 10.0, 60, Slo::paper_default());
+    let a = sim::run(&cfg, &trace, &SimOptions::default());
+    let b = sim::run(&cfg, &trace, &SimOptions::default());
+    assert!(
+        a.sim_events > a.records.len() as u64,
+        "every request takes several events (got {})",
+        a.sim_events
+    );
+    assert_eq!(a.sim_events, b.sim_events, "event count must be deterministic");
+}
+
+// ---------------------------------------------------------------------------
+// Streaming histogram vs exact percentile
+// ---------------------------------------------------------------------------
+
+#[test]
+fn histogram_quantiles_bracket_exact_percentile_within_one_bucket() {
+    property("histogram brackets exact percentile", 150, |g| {
+        let buckets = g.usize_range(16, 257);
+        let (min, max) = (1.0f64, 1e6f64);
+        let ratio = (max / min).powf(1.0 / buckets as f64);
+        let mut h = LatencyHistogram::new(min, max, buckets);
+        let n = g.usize_range(2, 1500);
+        let mut xs = Vec::with_capacity(n);
+        for _ in 0..n {
+            // Log-uniform in [min, max/2]: every sample lands in a real
+            // bucket (no underflow clamp, no overflow bucket).
+            let v = min * (max / (2.0 * min)).powf(g.f64_range(0.0, 1.0));
+            h.record(v);
+            xs.push(v);
+        }
+        for &q in &[0.5, 0.9, 0.99] {
+            let approx = h.quantile(q);
+            // The histogram's convention is nearest-rank: evaluate the
+            // exact percentile at that same rank so `percentile()`'s
+            // interpolation agrees sample-for-sample.
+            let rank = ((q * n as f64).ceil() as usize).clamp(1, n) - 1;
+            let p = 100.0 * rank as f64 / (n - 1) as f64;
+            let exact = percentile(&xs, p);
+            // Bracket within one bucket: the returned lower edge must not
+            // exceed the exact value, and the exact value must lie below
+            // the bucket's upper edge (1e-9 covers ln/powf rounding).
+            ensure(
+                approx <= exact * (1.0 + 1e-9),
+                format!("q={q}: edge {approx} above exact {exact} (n={n})"),
+            )?;
+            ensure(
+                exact <= approx * ratio * (1.0 + 1e-9),
+                format!("q={q}: exact {exact} beyond bucket [{approx}, {})", approx * ratio),
+            )?;
+        }
+        Ok(())
+    });
+}
