@@ -87,6 +87,7 @@ pub fn run_suite(cfg: &SuiteConfig) -> BenchReport {
             queued_tokens: (i as u64 * 37) % 5000,
             requests: i % 5,
             accepting: i != 3,
+            perf_scale: if i % 2 == 0 { 1.0 } else { 0.55 },
         })
         .collect();
     if cfg.wants("router/pick_prefill_8") {
@@ -128,6 +129,26 @@ pub fn run_suite(cfg: &SuiteConfig) -> BenchReport {
                 q = mk_queue();
             }
             std::hint::black_box(form_prefill_batch_into(&mut q, &bcfg, &mut scratch));
+        }));
+    }
+
+    // --- per-SKU model lookup (fleet hot path) --------------------------
+    if cfg.wants("fleet/model_lookup") {
+        // The double-index every sim event pays on a heterogeneous
+        // fleet: GPU -> SKU -> model, plus one curve evaluation. Must
+        // stay allocation-free (tracked against the router picks, which
+        // share the same flat-lookup budget).
+        let mut hetero = presets::rapid_600();
+        hetero.fleet = Some(
+            crate::fleet::FleetConfig::parse_mix("mi300x:2+a100:2+mi300x:2+a100:2", &[])
+                .expect("builtin mix parses"),
+        );
+        let fleet = crate::fleet::Fleet::of_config(&hetero);
+        let mut gi = 0usize;
+        push(bench("fleet/model_lookup", cfg.target_ms, cfg.max_iters, || {
+            gi = (gi + 5) & 7;
+            let m = fleet.model(std::hint::black_box(gi));
+            std::hint::black_box(m.prefill_speedup(std::hint::black_box(612.0)));
         }));
     }
 
@@ -224,6 +245,13 @@ mod tests {
         assert!(rep.entries.iter().all(|t| t.name.contains("router")));
         assert!(rep.entries.iter().all(|t| t.iters >= 3 && t.mean_us >= 0.0));
         assert!(run_suite(&tiny("no-such-case")).entries.is_empty());
+    }
+
+    #[test]
+    fn fleet_lookup_case_runs() {
+        let rep = run_suite(&tiny("fleet/model_lookup"));
+        let t = rep.entry("fleet/model_lookup").expect("fleet entry");
+        assert!(t.iters >= 3 && t.per_sec() > 0.0);
     }
 
     #[test]

@@ -25,6 +25,7 @@ pub mod policy;
 use crate::config::ClusterConfig;
 use crate::coordinator::router::{self, WorkerLoad};
 use crate::coordinator::{Action, Snapshot};
+use crate::fleet::Fleet;
 use crate::metrics::RunResult;
 use crate::power::{PowerManager, PowerModel};
 use crate::sim::engine::SimOptions;
@@ -41,7 +42,8 @@ use policy::Policy;
 /// behaviors in `sim::worker` can operate on it directly.
 pub struct Cluster {
     pub(crate) cfg: ClusterConfig,
-    pub(crate) model: PowerModel,
+    /// Per-GPU SKU view: perf/power models, envelopes, router scales.
+    pub(crate) fleet: Fleet,
     pub(crate) power: PowerManager,
     pub(crate) policy: Box<dyn Policy>,
     pub(crate) gpus: Vec<GpuSim>,
@@ -82,23 +84,21 @@ pub struct Cluster {
 
 impl Cluster {
     pub fn new(cfg: ClusterConfig, trace: Trace, opts: SimOptions) -> Self {
-        let model = PowerModel::new(cfg.perf.clone());
+        let fleet = Fleet::of_config(&cfg);
         let total = cfg.total_gpus();
-        let caps: Vec<f64> = (0..total)
-            .map(|i| match cfg.initial_role(i) {
-                Role::Prefill | Role::Coalesced => cfg.prefill_cap_w,
-                Role::Decode => cfg.decode_cap_w,
-            })
-            .collect();
+        // Initial caps: the role's configured cap, clamped into each
+        // slot's SKU envelope — the same `slot_cap` the budget
+        // validation sums, so validation and runtime cannot disagree.
+        let caps: Vec<f64> = (0..total).map(|i| cfg.slot_cap(i % cfg.n_gpus)).collect();
         let node_of: Vec<usize> = (0..total).map(|i| cfg.node_of(i)).collect();
-        let power = PowerManager::with_nodes(
+        let power = PowerManager::with_limits(
             &caps,
             node_of,
             vec![cfg.node_budget_w; cfg.n_nodes],
             cfg.cluster_budget(),
             cfg.enforce_budget,
-            cfg.controller.min_gpu_w,
-            cfg.controller.max_gpu_w,
+            fleet.floors(),
+            fleet.maxes(),
         );
         let gpus: Vec<GpuSim> = (0..total).map(|i| GpuSim::new(cfg.initial_role(i))).collect();
         let policy = policy::make_policy(&cfg);
@@ -110,7 +110,7 @@ impl Cluster {
             + opts.drain_grace;
         let n_requests = trace.requests.len();
         Cluster {
-            model,
+            fleet,
             power,
             policy,
             gpus,
@@ -169,12 +169,21 @@ impl Cluster {
         gi / self.cfg.n_gpus
     }
 
+    /// Perf/power model of GPU `gi` (per-SKU; allocation-free lookup).
+    #[inline]
+    pub(crate) fn model_of(&self, gi: usize) -> &PowerModel {
+        self.fleet.model(gi)
+    }
+
     /// Free KV ring slots on `node`.
     pub(crate) fn ring_free(&self, node: usize) -> usize {
         self.cfg.batch.ring_slots.saturating_sub(self.ring_used[node])
     }
 
     /// Router view of every prefill worker, into a caller-owned buffer.
+    /// `perf_scale` normalizes queued tokens by SKU throughput so a
+    /// faster part absorbs proportionally more backlog (1.0 everywhere
+    /// on a homogeneous fleet).
     fn fill_prefill_loads(&self, out: &mut Vec<WorkerLoad>) {
         out.clear();
         for (i, g) in self.gpus.iter().enumerate() {
@@ -185,6 +194,7 @@ impl Cluster {
                     queued_tokens: g.pf_queued_tokens,
                     requests: g.pf_queue.len(),
                     accepting: g.accepting(),
+                    perf_scale: self.fleet.prefill_scale(i),
                 });
             }
         }
@@ -202,6 +212,7 @@ impl Cluster {
                     queued_tokens: 0,
                     requests: g.decode_load(),
                     accepting: g.accepting(),
+                    perf_scale: self.fleet.decode_scale(i),
                 });
             }
         }
@@ -312,6 +323,7 @@ impl Cluster {
                 queued_tokens: g.co_queued_tokens(),
                 requests: g.co_queue.len() + g.dec_active.len(),
                 accepting: g.accepting(),
+                perf_scale: self.fleet.prefill_scale(i),
             });
         }
         let pick = router::pick_prefill(&loads);
@@ -353,7 +365,7 @@ impl Cluster {
                 let age = now.saturating_sub(req.arrival);
                 let cap = self.power.effective(GpuId(i), now);
                 let drain =
-                    (backlog_tokens as f64 / self.model.prefill_rate(cap) * 1e6) as Micros;
+                    (backlog_tokens as f64 / self.fleet.model(i).prefill_rate(cap) * 1e6) as Micros;
                 let projected = age + drain;
                 self.policy
                     .observe_ttft(now, projected as f64 / req.slo.ttft as f64);
@@ -414,16 +426,21 @@ impl Cluster {
                 continue;
             }
             let target = self.power.target(GpuId(i));
+            // Saturation is judged against each GPU's own envelope (==
+            // MIN_P/MAX_P on a homogeneous fleet): a 400 W-max part
+            // pinned at 400 W *is* at max even though MAX_P says 750.
+            let gpu_max = self.power.max_of(GpuId(i));
+            let gpu_min = self.power.min_of(GpuId(i));
             match g.role {
                 Role::Prefill => {
                     prefill_pool += 1;
-                    p_all_at_max &= target >= c.max_gpu_w - 1.0;
-                    p_all_at_min &= target <= c.min_gpu_w + 1.0;
+                    p_all_at_max &= target >= gpu_max - 1.0;
+                    p_all_at_min &= target <= gpu_min + 1.0;
                 }
                 Role::Decode => {
                     decode_pool += 1;
-                    d_all_at_min &= target <= c.min_gpu_w + 1.0;
-                    d_all_at_ceiling &= target >= c.decode_ceiling_w - 1.0;
+                    d_all_at_min &= target <= gpu_min + 1.0;
+                    d_all_at_ceiling &= target >= c.decode_ceiling_w.min(gpu_max) - 1.0;
                 }
                 Role::Coalesced => {}
             }
@@ -464,7 +481,34 @@ impl Cluster {
                     self.cfg.controller.max_gpu_w
                 };
                 let total = self.cfg.controller.power_step_w * sources.len() as f64;
-                match self.power.move_power(self.now, &sources, &sinks, total, ceiling) {
+                // Heterogeneous fleets reallocate by marginal tokens/s
+                // per watt (steepest sink gains most, flattest source
+                // gives most); homogeneous pools keep the paper's
+                // uniform split, bit-identically.
+                let weighted = self.fleet.heterogeneous()
+                    && self.policy.power_weighting() == policy::PowerWeighting::MarginalTps;
+                let result = if weighted {
+                    let now = self.now;
+                    let src_w: Vec<f64> = sources
+                        .iter()
+                        .map(|&g| {
+                            let cap = self.power.target(g);
+                            self.fleet.source_weight(g.0, from, cap)
+                        })
+                        .collect();
+                    let sink_w: Vec<f64> = sinks
+                        .iter()
+                        .map(|&g| {
+                            let cap = self.power.target(g);
+                            self.fleet.sink_weight(g.0, to, cap)
+                        })
+                        .collect();
+                    self.power
+                        .move_power_weighted(now, &sources, &sinks, &src_w, &sink_w, total, ceiling)
+                } else {
+                    self.power.move_power(self.now, &sources, &sinks, total, ceiling)
+                };
+                match result {
                     Ok(mv) => {
                         self.decisions.push((
                             self.now,
@@ -543,8 +587,8 @@ impl Cluster {
             if let Some(target) = self.pick_decode_gpu(Some(gi), src_node) {
                 let same_node = self.node_of(target.0) == src_node;
                 let t = self
-                    .model
-                    .kv_transfer_time_between(item.req.input_tokens, same_node);
+                    .fleet
+                    .kv_transfer_time_between(gi, target.0, item.req.input_tokens, same_node);
                 self.events.push(
                     self.now + t,
                     Event::KvArrive { gpu: target.0, src_node, item },
@@ -629,17 +673,18 @@ impl Cluster {
         for (i, g) in self.gpus.iter().enumerate() {
             let cap = self.power.effective(GpuId(i), now);
             let is_prefill_like = matches!(g.role, Role::Prefill | Role::Coalesced);
-            let mut mean_draw = self.model.draw(cap, g.util(), is_prefill_like);
+            let model = self.fleet.model(i);
+            let mut mean_draw = model.draw(cap, g.util(), is_prefill_like);
             // Host-side iteration gaps (scheduling, sampling,
             // detokenization) idle the GPU between iterations; a 10 ms
             // meter catches them as deep dips (paper Fig 3's burstiness).
             if g.busy && self.sample_rng.chance(0.12) {
-                mean_draw = self.model.idle_w() + 0.18 * (mean_draw - self.model.idle_w());
+                mean_draw = model.idle_w() + 0.18 * (mean_draw - model.idle_w());
             }
             // Microburst variation around the mean draw (per-kernel power
             // phases under a 10 ms meter).
             let jitter = 1.0 + 0.08 * self.sample_rng.normal();
-            per_node[self.node_of(i)] += (mean_draw * jitter).clamp(self.model.idle_w(), cap);
+            per_node[self.node_of(i)] += (mean_draw * jitter).clamp(model.idle_w().min(cap), cap);
         }
         let total: f64 = per_node.iter().sum();
         for (nd, &w) in per_node.iter().enumerate() {

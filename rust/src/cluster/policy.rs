@@ -18,6 +18,19 @@ use crate::coordinator::{Action, Controller, Snapshot};
 use crate::types::{Micros, Role};
 use crate::util::stats::SlidingWindow;
 
+/// How a `MovePower` action splits watts inside its source/sink pools.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PowerWeighting {
+    /// The paper's uniform per-GPU split.
+    Uniform,
+    /// Weight by marginal tokens/s per watt: the steepest sink curve
+    /// receives the most watts, the flattest source gives up the most.
+    /// Only differentiates heterogeneous fleets — on a homogeneous pool
+    /// the cluster core always uses the uniform split (bit-identical to
+    /// the paper's behavior).
+    MarginalTps,
+}
+
 /// A cluster controller: consumes SLO-normalized latency observations and
 /// emits at most one [`Action`] per tick. The cluster core executes
 /// actions; policies stay side-effect free.
@@ -30,6 +43,13 @@ pub trait Policy: std::fmt::Debug + Send {
     fn observe_ttft(&mut self, _now: Micros, _ratio: f64) {}
     /// Record a decode step's per-token latency ratio to the SLO.
     fn observe_tpot(&mut self, _now: Micros, _ratio: f64) {}
+    /// How the cluster core distributes this policy's `MovePower` watts.
+    /// Defaults to marginal-throughput weighting so every built-in
+    /// policy (Static/RapidDynamic/PowerOnly) is SKU-aware on mixed
+    /// fleets without further changes; override to `Uniform` to ablate.
+    fn power_weighting(&self) -> PowerWeighting {
+        PowerWeighting::MarginalTps
+    }
     /// One decision tick.
     fn decide(&mut self, snap: &Snapshot) -> Option<Action>;
 }
@@ -192,6 +212,21 @@ mod tests {
         assert_eq!(make_policy(&presets::power_only_600()).name(), "power-only");
         assert!(!make_policy(&presets::p4d4(600.0)).is_dynamic());
         assert!(make_policy(&presets::power_only_600()).is_dynamic());
+    }
+
+    #[test]
+    fn all_builtin_policies_default_to_marginal_weighting() {
+        // The SKU-aware reallocation hook: every built-in policy opts in
+        // by default (the cluster core still uses the uniform split on
+        // homogeneous fleets, so the paper's behavior is unchanged).
+        for preset in [presets::p4d4(600.0), presets::rapid_600(), presets::power_only_600()] {
+            assert_eq!(
+                make_policy(&preset).power_weighting(),
+                PowerWeighting::MarginalTps,
+                "{}",
+                preset.name
+            );
+        }
     }
 
     #[test]

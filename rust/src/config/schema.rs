@@ -6,7 +6,8 @@
 //! DynGPU-DynPower, ...). Configs load from TOML files (`--config`) with
 //! preset names as a starting point (`preset = "4p4d-600"`).
 
-use crate::config::toml::Document;
+use crate::config::toml::{Document, Value};
+use crate::fleet::{skus, FleetConfig, GpuSku};
 use crate::types::{Micros, Watts, MILLIS, SECOND};
 
 /// How GPUs are split across phases.
@@ -166,6 +167,14 @@ pub struct PerfModelConfig {
     /// fraction of the already-processed prompt (the efficiency tax of
     /// chunked prefill vs one-shot prefill).
     pub chunk_reread_frac: f64,
+    /// Floor of the power/speedup curves: speedup == 1.0 at/below this
+    /// cap (the lowest cap in Fig 4 for the paper's part). Per-SKU
+    /// models with smaller power envelopes anchor lower.
+    pub ref_w: Watts,
+    /// Power at which `prefill_rate_tps` is quoted (max cap of the part).
+    pub rated_w: Watts,
+    /// Power at which `decode_base` is quoted.
+    pub decode_rated_w: Watts,
 }
 
 impl Default for PerfModelConfig {
@@ -187,6 +196,9 @@ impl Default for PerfModelConfig {
             inter_node_bw: 25e9,
             chunk_tokens: 512,
             chunk_reread_frac: 0.15,
+            ref_w: 400.0,
+            rated_w: 750.0,
+            decode_rated_w: 600.0,
         }
     }
 }
@@ -240,6 +252,10 @@ pub struct ClusterConfig {
     pub controller: ControllerConfig,
     pub perf: PerfModelConfig,
     pub batch: BatchConfig,
+    /// Optional per-node SKU mix (heterogeneous fleet, DESIGN.md §11).
+    /// `None` means one implicit SKU built from `perf` and the
+    /// controller envelope — the paper's homogeneous testbed.
+    pub fleet: Option<FleetConfig>,
 }
 
 impl Default for ClusterConfig {
@@ -310,12 +326,29 @@ impl ClusterConfig {
         if c.min_gpu_w > c.max_gpu_w {
             return err(format!("min_gpu_w {} > max_gpu_w {}", c.min_gpu_w, c.max_gpu_w));
         }
-        for (label, cap) in [("prefill", self.prefill_cap_w), ("decode", self.decode_cap_w)] {
-            if cap < c.min_gpu_w || cap > c.max_gpu_w {
+        if let Some(fc) = &self.fleet {
+            fc.validate().map_err(ConfigError::Invalid)?;
+            if fc.gpus_per_node() != self.n_gpus {
                 return err(format!(
-                    "{label} cap {cap} outside [{}, {}]",
-                    c.min_gpu_w, c.max_gpu_w
+                    "sku mix '{}' covers {} GPUs per node but cluster.n_gpus is {}",
+                    fc.mix_label(),
+                    fc.gpus_per_node(),
+                    self.n_gpus
                 ));
+            }
+            for (label, cap) in [("prefill", self.prefill_cap_w), ("decode", self.decode_cap_w)] {
+                if cap <= 0.0 {
+                    return err(format!("{label} cap {cap} must be positive"));
+                }
+            }
+        } else {
+            for (label, cap) in [("prefill", self.prefill_cap_w), ("decode", self.decode_cap_w)] {
+                if cap < c.min_gpu_w || cap > c.max_gpu_w {
+                    return err(format!(
+                        "{label} cap {cap} outside [{}, {}]",
+                        c.min_gpu_w, c.max_gpu_w
+                    ));
+                }
             }
         }
         if self.enforce_budget {
@@ -326,11 +359,11 @@ impl ClusterConfig {
                     self.node_budget_w
                 ));
             }
-            let floor = c.min_gpu_w * self.n_gpus as f64;
+            let floor = self.cap_floor_per_node();
             if floor > self.node_budget_w + 1e-6 {
                 return err(format!(
-                    "node budget {} W below the cap floor {} W ({} GPUs x min {} W)",
-                    self.node_budget_w, floor, self.n_gpus, c.min_gpu_w
+                    "node budget {} W below the cap floor {} W ({} GPUs, per-GPU floors summed)",
+                    self.node_budget_w, floor, self.n_gpus
                 ));
             }
             let cluster_total = per_node * self.n_nodes as f64;
@@ -354,13 +387,44 @@ impl ClusterConfig {
         Ok(())
     }
 
-    /// Sum of the configured per-GPU caps **per node**.
+    /// Sum of the configured per-GPU caps **per node** (clamped into
+    /// each slot's SKU envelope when a fleet mix is declared).
     pub fn total_initial_caps(&self) -> Watts {
+        if self.fleet.is_some() {
+            return (0..self.n_gpus).map(|s| self.slot_cap(s)).sum();
+        }
         match self.topology {
             Topology::Coalesced => self.prefill_cap_w * self.n_gpus as f64,
             Topology::Disaggregated { prefill, decode } => {
                 self.prefill_cap_w * prefill as f64 + self.decode_cap_w * decode as f64
             }
+        }
+    }
+
+    /// Initial cap of per-node GPU slot `slot`: the role's configured
+    /// cap, clamped into the slot's SKU envelope.
+    pub fn slot_cap(&self, slot: usize) -> Watts {
+        let configured = match self.initial_role(slot) {
+            crate::types::Role::Prefill | crate::types::Role::Coalesced => self.prefill_cap_w,
+            crate::types::Role::Decode => self.decode_cap_w,
+        };
+        match &self.fleet {
+            Some(fc) => {
+                let sku = &fc.skus[fc.sku_of_slot(slot)];
+                configured.clamp(sku.cap_floor_w, sku.max_w)
+            }
+            None => configured,
+        }
+    }
+
+    /// Sum of per-GPU cap floors **per node** (SKU floors when a mix is
+    /// declared, MIN_P otherwise).
+    pub fn cap_floor_per_node(&self) -> Watts {
+        match &self.fleet {
+            Some(fc) => (0..self.n_gpus)
+                .map(|s| fc.skus[fc.sku_of_slot(s)].cap_floor_w)
+                .sum(),
+            None => self.controller.min_gpu_w * self.n_gpus as f64,
         }
     }
 
@@ -404,9 +468,11 @@ impl ClusterConfig {
         }
     }
 
-    /// Load from TOML text, starting from `preset` if given.
+    /// Load from TOML text, starting from `preset` if given. Unknown
+    /// keys are rejected with an error naming the key and its table.
     pub fn from_toml(text: &str) -> Result<ClusterConfig, ConfigError> {
         let doc = Document::parse(text)?;
+        check_unknown_keys(&doc)?;
         let mut cfg = match doc.get_str("preset") {
             Some(name) => presets::by_name(name)?,
             None => ClusterConfig::default(),
@@ -415,6 +481,171 @@ impl ClusterConfig {
         cfg.validate()?;
         Ok(cfg)
     }
+}
+
+/// Keys `from_toml` accepts, by table (`""` = top level). Used by the
+/// strict unknown-key validation so a misspelled key fails loudly
+/// instead of being silently ignored.
+const KNOWN_TABLES: &[(&str, &[&str])] = &[
+    ("", &["preset", "name"]),
+    ("cluster", &["n_gpus", "n_nodes", "topology", "prefill_gpus", "skus"]),
+    (
+        "power",
+        &["budget_w", "cluster_budget_w", "enforce_budget", "prefill_cap_w", "decode_cap_w"],
+    ),
+    ("control", &["policy"]),
+    (
+        "controller",
+        &[
+            "min_gpu_w",
+            "max_gpu_w",
+            "decode_ceiling_w",
+            "queue_threshold",
+            "tick_ms",
+            "cooldown_ms",
+            "power_step_w",
+        ],
+    ),
+    (
+        "perf",
+        &[
+            "prefill_rate_tps",
+            "decode_base_us",
+            "decode_per_req_us",
+            "idle_w",
+            "kv_bytes_per_token",
+            "xgmi_bw_gbps",
+            "inter_node_bw_gbps",
+            "chunk_tokens",
+        ],
+    ),
+    (
+        "batch",
+        &["max_prefill_tokens", "max_prefill_reqs", "max_decode_reqs", "ring_slots"],
+    ),
+];
+
+/// Fields a `[sku.<name>]` table accepts: the power envelope plus every
+/// calibrated perf-model constant.
+const SKU_KEYS: &[&str] = &[
+    "max_w",
+    "cap_floor_w",
+    "idle_w",
+    "prefill_rate_tps",
+    "prefill_overhead_ms",
+    "decode_base_us",
+    "decode_per_req_us",
+    "decode_kv_us_per_ktok",
+    "decode_kv_ctx_cap_tokens",
+    "prefill_speedup_max",
+    "prefill_knee_w",
+    "decode_speedup_max",
+    "decode_knee_w",
+    "kv_bytes_per_token",
+    "xgmi_bw_gbps",
+    "inter_node_bw_gbps",
+    "chunk_tokens",
+    "chunk_reread_frac",
+    "ref_w",
+    "rated_w",
+    "decode_rated_w",
+];
+
+/// Reject any key the config loader would silently ignore, naming the
+/// key and its table (and the keys that table does accept).
+fn check_unknown_keys(doc: &Document) -> Result<(), ConfigError> {
+    doc.check_known_keys(KNOWN_TABLES, &[("sku", SKU_KEYS)])
+        .map_err(ConfigError::Invalid)
+}
+
+/// Parse every `[sku.<name>]` table: start from the built-in catalog
+/// entry of that name (or the paper's default part for new names) and
+/// apply the overrides.
+fn parse_sku_tables(doc: &Document) -> Result<Vec<GpuSku>, ConfigError> {
+    let mut names: Vec<&str> = Vec::new();
+    for key in doc.entries.keys() {
+        if let Some(rest) = key.strip_prefix("sku.") {
+            if let Some((name, _field)) = rest.rsplit_once('.') {
+                if !names.contains(&name) {
+                    names.push(name);
+                }
+            }
+        }
+    }
+    let mut out = Vec::with_capacity(names.len());
+    for name in names {
+        let mut sku = skus::by_name(name)
+            .unwrap_or_else(|| GpuSku::new(name, PerfModelConfig::default(), 400.0, 750.0));
+        let get = |field: &str| doc.get_f64(&format!("sku.{name}.{field}"));
+        if let Some(v) = get("max_w") {
+            sku.max_w = v;
+        }
+        if let Some(v) = get("cap_floor_w") {
+            sku.cap_floor_w = v;
+        }
+        if let Some(v) = get("idle_w") {
+            sku.idle_w = v;
+            sku.perf.idle_w = v;
+        }
+        let p = &mut sku.perf;
+        if let Some(v) = get("prefill_rate_tps") {
+            p.prefill_rate_tps = v;
+        }
+        if let Some(v) = get("prefill_overhead_ms") {
+            p.prefill_overhead = (v * MILLIS as f64) as Micros;
+        }
+        if let Some(v) = get("decode_base_us") {
+            p.decode_base = v as Micros;
+        }
+        if let Some(v) = get("decode_per_req_us") {
+            p.decode_per_req = v as Micros;
+        }
+        if let Some(v) = get("decode_kv_us_per_ktok") {
+            p.decode_kv_us_per_ktok = v;
+        }
+        if let Some(v) = get("decode_kv_ctx_cap_tokens") {
+            p.decode_kv_ctx_cap_tokens = v;
+        }
+        if let Some(v) = get("prefill_speedup_max") {
+            p.prefill_speedup_max = v;
+        }
+        if let Some(v) = get("prefill_knee_w") {
+            p.prefill_knee_w = v;
+        }
+        if let Some(v) = get("decode_speedup_max") {
+            p.decode_speedup_max = v;
+        }
+        if let Some(v) = get("decode_knee_w") {
+            p.decode_knee_w = v;
+        }
+        if let Some(v) = get("kv_bytes_per_token") {
+            p.kv_bytes_per_token = v as u64;
+        }
+        if let Some(v) = get("xgmi_bw_gbps") {
+            p.xgmi_bw = v * 1e9;
+        }
+        if let Some(v) = get("inter_node_bw_gbps") {
+            p.inter_node_bw = v * 1e9;
+        }
+        if let Some(v) = get("chunk_tokens") {
+            p.chunk_tokens = v as u32;
+        }
+        if let Some(v) = get("chunk_reread_frac") {
+            p.chunk_reread_frac = v;
+        }
+        if let Some(v) = get("ref_w") {
+            p.ref_w = v;
+        }
+        if let Some(v) = get("rated_w") {
+            p.rated_w = v;
+        }
+        if let Some(v) = get("decode_rated_w") {
+            p.decode_rated_w = v;
+        }
+        sku.validate().map_err(ConfigError::Invalid)?;
+        out.push(sku);
+    }
+    Ok(out)
 }
 
 fn get_watts(doc: &Document, key: &str) -> Option<Watts> {
@@ -534,6 +765,59 @@ fn apply_overrides(cfg: &mut ClusterConfig, doc: &Document) -> Result<(), Config
     if let Some(v) = doc.get_i64("batch.ring_slots") {
         b.ring_slots = v as usize;
     }
+    // Fleet mix: `[sku.<name>]` tables resolve first, then the ordered
+    // `cluster.skus = ["name:count", ...]` mix references them (plus the
+    // built-in catalog).
+    let file_skus = parse_sku_tables(doc)?;
+    match doc.get("cluster.skus") {
+        Some(Value::Array(values)) => {
+            let entries = values
+                .iter()
+                .map(|v| {
+                    v.as_str().map(str::to_string).ok_or_else(|| {
+                        ConfigError::Invalid(
+                            "cluster.skus entries must be \"name:count\" strings".into(),
+                        )
+                    })
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            cfg.fleet =
+                Some(FleetConfig::resolve(&entries, &file_skus).map_err(ConfigError::Invalid)?);
+        }
+        Some(_) => {
+            return Err(ConfigError::Invalid(
+                "cluster.skus must be an array of \"name:count\" strings".into(),
+            ))
+        }
+        None => {
+            if !file_skus.is_empty() {
+                return Err(ConfigError::Invalid(format!(
+                    "[sku.{}] is defined but cluster.skus declares no mix using it",
+                    file_skus[0].name
+                )));
+            }
+        }
+    }
+    // With an explicit mix, per-GPU perf and power envelopes come from
+    // the SKU tables — a top-level [perf] override or controller
+    // min/max would be silently ignored (the exact trap the strict key
+    // validation exists to prevent), so reject the combination.
+    if cfg.fleet.is_some() {
+        if let Some(key) = doc.entries.keys().find(|k| k.starts_with("perf.")) {
+            return Err(ConfigError::Invalid(format!(
+                "'{key}' has no effect when cluster.skus is declared — set it inside a \
+                 [sku.<name>] table instead"
+            )));
+        }
+        for key in ["controller.min_gpu_w", "controller.max_gpu_w"] {
+            if doc.get(key).is_some() {
+                return Err(ConfigError::Invalid(format!(
+                    "'{key}' has no effect when cluster.skus is declared — per-GPU limits \
+                     come from each SKU's cap_floor_w/max_w"
+                )));
+            }
+        }
+    }
     Ok(())
 }
 
@@ -556,6 +840,7 @@ pub mod presets {
             controller: ControllerConfig::default(),
             perf: PerfModelConfig::default(),
             batch: BatchConfig::default(),
+            fleet: None,
         }
     }
 
@@ -869,5 +1154,116 @@ inter_node_bw_gbps = 20
     fn power_only_policy_parses() {
         let cfg = ClusterConfig::from_toml("[control]\npolicy = \"power-only\"").unwrap();
         assert_eq!(cfg.control, ControlPolicy::PowerOnly);
+    }
+
+    #[test]
+    fn unknown_keys_rejected_with_table_named() {
+        // A misspelled key in a known table names both the key and table.
+        let err = ClusterConfig::from_toml("[controller]\ncooldown_msx = 4000").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("cooldown_msx"), "{msg}");
+        assert!(msg.contains("[controller]"), "{msg}");
+        assert!(msg.contains("cooldown_ms"), "should list valid keys: {msg}");
+        // Unknown top-level key.
+        let err = ClusterConfig::from_toml("presett = \"4p4d-600\"").unwrap_err();
+        assert!(err.to_string().contains("presett"), "{err}");
+        // Unknown table.
+        let err = ClusterConfig::from_toml("[powr]\nbudget_w = 4800").unwrap_err();
+        assert!(err.to_string().contains("powr.budget_w"), "{err}");
+        // Unknown field inside a sku table.
+        let err = ClusterConfig::from_toml(
+            "[cluster]\nskus = [\"x:8\"]\n[sku.x]\nmax_watts = 700",
+        )
+        .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("max_watts") && msg.contains("[sku.x]"), "{msg}");
+    }
+
+    #[test]
+    fn sku_mix_toml_round_trip() {
+        let cfg = ClusterConfig::from_toml(
+            r#"
+preset = "rapid-600"
+name = "hetero"
+[cluster]
+skus = ["mi300x:2", "a100:2", "mi300x:2", "a100:2"]
+"#,
+        )
+        .unwrap();
+        let fc = cfg.fleet.as_ref().expect("fleet parsed");
+        assert_eq!(fc.gpus_per_node(), 8);
+        assert!(fc.heterogeneous());
+        assert_eq!(fc.mix_label(), "mi300x:2+a100:2+mi300x:2+a100:2");
+        // a100 slots clamp the 600 W cap to their 400 W envelope.
+        assert_eq!(cfg.slot_cap(0), 600.0);
+        assert_eq!(cfg.slot_cap(2), 400.0);
+        assert!(cfg.total_initial_caps() < 8.0 * 600.0);
+        assert!(cfg.cap_floor_per_node() < 8.0 * 400.0);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn sku_table_overrides_and_custom_skus() {
+        let cfg = ClusterConfig::from_toml(
+            r#"
+preset = "rapid-600"
+[cluster]
+skus = ["mi300x:4", "mi300x-derated:4"]
+[sku.mi300x-derated]
+max_w = 650
+cap_floor_w = 400
+prefill_rate_tps = 8000
+idle_w = 120
+"#,
+        )
+        .unwrap();
+        let fc = cfg.fleet.unwrap();
+        assert_eq!(fc.skus.len(), 2);
+        let derated = &fc.skus[1];
+        assert_eq!(derated.max_w, 650.0);
+        assert_eq!(derated.perf.prefill_rate_tps, 8000.0);
+        assert_eq!(derated.idle_w, 120.0);
+        assert_eq!(derated.perf.idle_w, 120.0);
+    }
+
+    #[test]
+    fn sku_mix_must_cover_n_gpus() {
+        let err = ClusterConfig::from_toml(
+            "preset = \"rapid-600\"\n[cluster]\nskus = [\"mi300x:2\", \"a100:2\"]",
+        )
+        .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("4 GPUs") && msg.contains("n_gpus is 8"), "{msg}");
+    }
+
+    #[test]
+    fn sku_tables_without_mix_rejected() {
+        let err = ClusterConfig::from_toml("[sku.h100]\nmax_w = 700").unwrap_err();
+        assert!(err.to_string().contains("declares no mix"), "{err}");
+        let err = ClusterConfig::from_toml("[cluster]\nskus = [\"nope:8\"]").unwrap_err();
+        assert!(err.to_string().contains("unknown sku 'nope'"), "{err}");
+    }
+
+    #[test]
+    fn perf_and_envelope_overrides_rejected_alongside_sku_mix() {
+        // A [perf] override would be silently shadowed by the SKU tables;
+        // it must be rejected, pointing at the [sku.*] grammar.
+        let err = ClusterConfig::from_toml(
+            "[cluster]\nskus = [\"mi300x:8\"]\n[perf]\nprefill_rate_tps = 5000",
+        )
+        .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("perf.prefill_rate_tps") && msg.contains("[sku."), "{msg}");
+        // Same for the uniform controller envelope.
+        let err = ClusterConfig::from_toml(
+            "[cluster]\nskus = [\"mi300x:8\"]\n[controller]\nmin_gpu_w = 300",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("controller.min_gpu_w"), "{err}");
+        // Other controller knobs (cooldown etc.) still apply and pass.
+        ClusterConfig::from_toml(
+            "[cluster]\nskus = [\"mi300x:8\"]\n[controller]\ncooldown_ms = 3000",
+        )
+        .unwrap();
     }
 }

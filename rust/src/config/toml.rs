@@ -147,6 +147,70 @@ impl Document {
                 .map(|_| k.as_str())
         })
     }
+
+    /// Strict unknown-key validation: every key in the document must be
+    /// declared in `tables` — `(table, fields)` pairs where `""` names
+    /// the top level — or live under a `dynamic` table family:
+    /// `("sku", FIELDS)` accepts `sku.<any-name>.<field>` for any
+    /// single-segment name. A misspelled key returns a friendly error
+    /// naming the key, its table, and the keys that table accepts,
+    /// instead of being silently ignored.
+    pub fn check_known_keys(
+        &self,
+        tables: &[(&str, &[&str])],
+        dynamic: &[(&str, &[&str])],
+    ) -> Result<(), String> {
+        'keys: for key in self.entries.keys() {
+            let (table, field) = match key.rsplit_once('.') {
+                Some((t, f)) => (t, f),
+                None => ("", key.as_str()),
+            };
+            for (family, fields) in dynamic {
+                if let Some(name) = table.strip_prefix(family).and_then(|r| r.strip_prefix('.')) {
+                    if !name.contains('.') {
+                        if fields.contains(&field) {
+                            continue 'keys;
+                        }
+                        return Err(format!(
+                            "unknown key '{field}' in table [{family}.{name}] (valid keys: {})",
+                            fields.join(", ")
+                        ));
+                    }
+                }
+            }
+            for (known_table, fields) in tables {
+                if table == *known_table {
+                    if fields.contains(&field) {
+                        continue 'keys;
+                    }
+                    let wher = if table.is_empty() {
+                        "at the top level".to_string()
+                    } else {
+                        format!("in table [{table}]")
+                    };
+                    return Err(format!(
+                        "unknown key '{field}' {wher} (valid keys: {})",
+                        fields.join(", ")
+                    ));
+                }
+            }
+            let mut valid: Vec<String> = dynamic
+                .iter()
+                .map(|(f, _)| format!("[{f}.<name>]"))
+                .collect();
+            valid.extend(
+                tables
+                    .iter()
+                    .filter(|(t, _)| !t.is_empty())
+                    .map(|(t, _)| format!("[{t}]")),
+            );
+            return Err(format!(
+                "unknown table for key '{key}' (valid tables: {})",
+                valid.join(", ")
+            ));
+        }
+        Ok(())
+    }
 }
 
 fn strip_comment(line: &str) -> &str {
@@ -365,5 +429,38 @@ settle_ms = 300
         let doc = Document::parse("[a]\nx = 1\ny = 2\n[b]\nz = 3").unwrap();
         let keys: Vec<&str> = doc.keys_under("a").collect();
         assert_eq!(keys, vec!["a.x", "a.y"]);
+    }
+
+    #[test]
+    fn check_known_keys_names_key_and_table() {
+        let tables: &[(&str, &[&str])] = &[("", &["name"]), ("power", &["budget_w"])];
+        let dynamic: &[(&str, &[&str])] = &[("sku", &["max_w"])];
+        let ok = Document::parse("name = \"x\"\n[power]\nbudget_w = 1\n[sku.h100]\nmax_w = 700")
+            .unwrap();
+        ok.check_known_keys(tables, dynamic).unwrap();
+        // Misspelled field in a known table: names key, table, and the
+        // valid keys.
+        let bad = Document::parse("[power]\nbudget_watts = 1").unwrap();
+        let msg = bad.check_known_keys(tables, dynamic).unwrap_err();
+        assert!(msg.contains("'budget_watts'") && msg.contains("[power]"), "{msg}");
+        assert!(msg.contains("budget_w"), "{msg}");
+        // Unknown top-level key.
+        let msg = Document::parse("nam = \"x\"")
+            .unwrap()
+            .check_known_keys(tables, dynamic)
+            .unwrap_err();
+        assert!(msg.contains("'nam'") && msg.contains("top level"), "{msg}");
+        // Unknown table lists the valid ones, including dynamic families.
+        let msg = Document::parse("[powr]\nbudget_w = 1")
+            .unwrap()
+            .check_known_keys(tables, dynamic)
+            .unwrap_err();
+        assert!(msg.contains("powr.budget_w") && msg.contains("[sku.<name>]"), "{msg}");
+        // Bad field inside a dynamic table.
+        let msg = Document::parse("[sku.h100]\nmax_watts = 700")
+            .unwrap()
+            .check_known_keys(tables, dynamic)
+            .unwrap_err();
+        assert!(msg.contains("'max_watts'") && msg.contains("[sku.h100]"), "{msg}");
     }
 }

@@ -4,7 +4,14 @@
 //! to a specific worker, and coordinates inter-stage communication."
 //! Routing is least-loaded: prefill by queued prompt tokens (prompt cost
 //! is token-proportional), decode by active+pending request count
-//! (decode cost is batch-slot-proportional).
+//! (decode cost is batch-slot-proportional). On heterogeneous fleets
+//! every load is first normalized by the worker's SKU throughput
+//! (`perf_scale`), so "least loaded" means *soonest drained*, not
+//! smallest queue — a part with 2x the prompt rate legitimately holds
+//! 2x the backlog. Homogeneous fleets have `perf_scale == 1.0`
+//! everywhere, which reduces bit-exactly to the raw comparisons.
+
+use std::cmp::Ordering;
 
 use crate::types::GpuId;
 
@@ -20,9 +27,44 @@ pub struct WorkerLoad {
     pub requests: usize,
     /// Workers mid-drain are not eligible.
     pub accepting: bool,
+    /// Relative SKU throughput of this worker (1.0 = the fleet's
+    /// reference part): prefill rate for prefill pools, step rate for
+    /// decode pools. Loads divide by it before comparison.
+    pub perf_scale: f64,
 }
 
-/// Pick the prefill worker with the least queued prompt tokens.
+impl WorkerLoad {
+    /// Throughput-normalized prefill backlog (≈ seconds to drain).
+    #[inline]
+    fn eff_tokens(&self) -> f64 {
+        self.queued_tokens as f64 / self.perf_scale
+    }
+
+    /// Throughput-normalized decode occupancy.
+    #[inline]
+    fn eff_requests(&self) -> f64 {
+        self.requests as f64 / self.perf_scale
+    }
+}
+
+#[inline]
+fn prefill_order(a: &WorkerLoad, b: &WorkerLoad) -> Ordering {
+    a.eff_tokens()
+        .total_cmp(&b.eff_tokens())
+        .then(a.requests.cmp(&b.requests))
+        .then(a.gpu.0.cmp(&b.gpu.0))
+}
+
+#[inline]
+fn decode_order(a: &WorkerLoad, b: &WorkerLoad) -> Ordering {
+    a.eff_requests()
+        .total_cmp(&b.eff_requests())
+        .then(a.queued_tokens.cmp(&b.queued_tokens))
+        .then(a.gpu.0.cmp(&b.gpu.0))
+}
+
+/// Pick the prefill worker with the least (throughput-normalized)
+/// queued prompt tokens.
 ///
 /// Called once per arrival/publish on the simulator's hot path — the
 /// cluster core reuses one scratch `Vec<WorkerLoad>` across calls so a
@@ -32,41 +74,43 @@ pub fn pick_prefill(loads: &[WorkerLoad]) -> Option<GpuId> {
     loads
         .iter()
         .filter(|l| l.accepting)
-        .min_by_key(|l| (l.queued_tokens, l.requests, l.gpu.0))
+        .min_by(|a, b| prefill_order(a, b))
         .map(|l| l.gpu)
 }
 
-/// Pick the decode worker with the fewest resident requests.
+/// Pick the decode worker with the fewest (throughput-normalized)
+/// resident requests.
 #[inline]
 pub fn pick_decode(loads: &[WorkerLoad]) -> Option<GpuId> {
     loads
         .iter()
         .filter(|l| l.accepting)
-        .min_by_key(|l| (l.requests, l.queued_tokens, l.gpu.0))
+        .min_by(|a, b| decode_order(a, b))
         .map(|l| l.gpu)
 }
 
-/// Extra resident requests we tolerate on a same-node decode worker
-/// before paying a cross-node KV transfer instead (locality bias).
+/// Extra (normalized) resident requests we tolerate on a same-node
+/// decode worker before paying a cross-node KV transfer instead
+/// (locality bias).
 pub const LOCALITY_SLACK_REQS: usize = 4;
 
 /// Pick a decode worker preferring `node` (where the KV cache already
 /// lives): take the least-loaded local worker unless a remote worker is
-/// more than `LOCALITY_SLACK_REQS` requests lighter.
+/// more than `LOCALITY_SLACK_REQS` normalized requests lighter.
 #[inline]
 pub fn pick_decode_prefer_node(loads: &[WorkerLoad], node: usize) -> Option<GpuId> {
     let global = pick_decode(loads)?;
     let global_load = loads
         .iter()
         .find(|l| l.gpu == global)
-        .map(|l| l.requests)
-        .unwrap_or(0);
+        .map(WorkerLoad::eff_requests)
+        .unwrap_or(0.0);
     let local = loads
         .iter()
         .filter(|l| l.accepting && l.node == node)
-        .min_by_key(|l| (l.requests, l.queued_tokens, l.gpu.0));
+        .min_by(|a, b| decode_order(a, b));
     match local {
-        Some(l) if l.requests <= global_load + LOCALITY_SLACK_REQS => Some(l.gpu),
+        Some(l) if l.eff_requests() <= global_load + LOCALITY_SLACK_REQS as f64 => Some(l.gpu),
         _ => Some(global),
     }
 }
@@ -76,12 +120,23 @@ mod tests {
     use super::*;
 
     fn load(gpu: usize, tokens: u64, reqs: usize, accepting: bool) -> WorkerLoad {
+        scaled_load(gpu, tokens, reqs, accepting, 1.0)
+    }
+
+    fn scaled_load(
+        gpu: usize,
+        tokens: u64,
+        reqs: usize,
+        accepting: bool,
+        scale: f64,
+    ) -> WorkerLoad {
         WorkerLoad {
             gpu: GpuId(gpu),
             node: gpu / 8,
             queued_tokens: tokens,
             requests: reqs,
             accepting,
+            perf_scale: scale,
         }
     }
 
@@ -140,5 +195,43 @@ mod tests {
     fn locality_skips_draining_local_workers() {
         let loads = [load(1, 0, 0, false), load(9, 0, 5, true)];
         assert_eq!(pick_decode_prefer_node(&loads, 0), Some(GpuId(9)));
+    }
+
+    // ------------------------------------------------------------------
+    // heterogeneous (SKU-normalized) routing
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn prefill_normalizes_backlog_by_throughput() {
+        // GPU 0 is 2x faster and holds 2x - 1 tokens: it drains sooner,
+        // so it wins despite the raw queue being deeper.
+        let loads = [scaled_load(0, 3999, 0, true, 2.0), scaled_load(1, 2000, 0, true, 1.0)];
+        assert_eq!(pick_prefill(&loads), Some(GpuId(0)));
+        // At exactly 2x the tokens the drain times tie: requests, then
+        // gpu id break it deterministically.
+        let tie = [scaled_load(0, 4000, 1, true, 2.0), scaled_load(1, 2000, 1, true, 1.0)];
+        assert_eq!(pick_prefill(&tie), Some(GpuId(0)));
+        // A slow part with a small queue still loses to a fast empty one.
+        let slow = [scaled_load(0, 0, 0, true, 2.0), scaled_load(1, 100, 0, true, 0.5)];
+        assert_eq!(pick_prefill(&slow), Some(GpuId(0)));
+    }
+
+    #[test]
+    fn decode_normalizes_occupancy_by_throughput() {
+        // 6 requests on a 2x part == 3 normalized < 4 on the 1x part.
+        let loads = [scaled_load(0, 0, 6, true, 2.0), scaled_load(1, 0, 4, true, 1.0)];
+        assert_eq!(pick_decode(&loads), Some(GpuId(0)));
+    }
+
+    #[test]
+    fn locality_slack_compares_normalized_loads() {
+        // Local worker (node 0) is a slow part: 6 raw / 0.5 = 12
+        // normalized, more than slack above the remote's 1 — pay the hop.
+        let loads = [scaled_load(1, 0, 6, true, 0.5), scaled_load(9, 0, 1, true, 1.0)];
+        assert_eq!(pick_decode_prefer_node(&loads, 0), Some(GpuId(9)));
+        // A fast local part with the same raw queue stays local:
+        // 6 / 2.0 = 3 normalized <= 1 + 4 slack.
+        let fast = [scaled_load(1, 0, 6, true, 2.0), scaled_load(9, 0, 1, true, 1.0)];
+        assert_eq!(pick_decode_prefer_node(&fast, 0), Some(GpuId(1)));
     }
 }

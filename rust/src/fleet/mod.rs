@@ -1,0 +1,624 @@
+//! Heterogeneous GPU fleets: the SKU catalog and the per-GPU
+//! perf/power-model plumbing (DESIGN.md §11).
+//!
+//! The paper's testbed is homogeneous (one MI300X-class part), but real
+//! fleets mix SKUs with different perf-per-watt curves — exactly where
+//! power reallocation pays off most, since watts should flow to the
+//! GPUs with the steepest marginal tokens/s-per-watt curve. This module
+//! owns:
+//!
+//! * [`GpuSku`] — one part number: a calibrated [`PerfModelConfig`] plus
+//!   its power envelope (`idle_w`, `cap_floor_w`, `max_w`);
+//! * [`skus`] — the built-in catalog (`mi300x`, `h100`, `a100`), each
+//!   calibrated *relative to* the paper's part so homogeneous `mi300x`
+//!   fleets reproduce the paper exactly;
+//! * [`FleetConfig`] — a per-node ordered SKU mix (`"mi300x:2+a100:2"`
+//!   or TOML `cluster.skus = ["mi300x:2", "a100:2"]`), resolved against
+//!   the catalog plus any `[sku.<name>]` tables in the config file;
+//! * [`Fleet`] — the runtime view the cluster core reads on its hot
+//!   paths: per-GPU SKU ids indexing per-SKU [`PowerModel`]s (a plain
+//!   `Vec` double-index, allocation-free; see the `fleet/model_lookup`
+//!   hot-path bench), per-GPU cap floors/ceilings for the power manager,
+//!   router throughput scales, slower-endpoint KV bandwidth resolution,
+//!   and the marginal tokens/s-per-watt weights the power reallocator
+//!   uses on heterogeneous pools.
+//!
+//! A config without an explicit mix gets one implicit SKU built from
+//! `cfg.perf` and the controller's MIN_P/MAX_P — all single-SKU paths
+//! are bit-identical to the pre-fleet code.
+
+use crate::config::{ClusterConfig, PerfModelConfig};
+use crate::power::PowerModel;
+use crate::types::{Micros, Role, Watts};
+
+/// One GPU part number: its calibrated performance model and power
+/// envelope. `idle_w` mirrors `perf.idle_w` (kept in both places so the
+/// catalog entry is self-describing and the model stays self-contained).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSku {
+    pub name: String,
+    pub perf: PerfModelConfig,
+    /// Idle draw (W); always equal to `perf.idle_w`.
+    pub idle_w: Watts,
+    /// Hardware max power cap (W) — the per-GPU ceiling for this SKU.
+    pub max_w: Watts,
+    /// Lowest cap firmware accepts (W) — the per-GPU floor for this SKU.
+    pub cap_floor_w: Watts,
+}
+
+impl GpuSku {
+    /// Build a SKU from a perf model and a power envelope (idle comes
+    /// from the perf model, keeping the two in sync).
+    pub fn new(
+        name: impl Into<String>,
+        perf: PerfModelConfig,
+        cap_floor_w: Watts,
+        max_w: Watts,
+    ) -> Self {
+        GpuSku {
+            name: name.into(),
+            idle_w: perf.idle_w,
+            perf,
+            max_w,
+            cap_floor_w,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.cap_floor_w <= 0.0 || self.max_w <= 0.0 {
+            return Err(format!("sku '{}': power envelope must be positive", self.name));
+        }
+        if self.cap_floor_w > self.max_w {
+            return Err(format!(
+                "sku '{}': cap_floor_w {} above max_w {}",
+                self.name, self.cap_floor_w, self.max_w
+            ));
+        }
+        if (self.idle_w - self.perf.idle_w).abs() > 1e-9 {
+            return Err(format!(
+                "sku '{}': idle_w {} disagrees with perf.idle_w {}",
+                self.name, self.idle_w, self.perf.idle_w
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// The built-in SKU catalog. Constants are calibrated relative to the
+/// paper's MI300X-class measurements (DESIGN.md §4): `mi300x` *is* the
+/// paper's part; the others are plausible same-model deployments on
+/// neighboring hardware classes, chosen so mixed fleets exercise both a
+/// stronger-prefill part and a small-envelope part whose caps are
+/// nearly immobile (the realistic heterogeneity regime).
+pub mod skus {
+    use super::*;
+
+    /// The paper's part: `PerfModelConfig::default()` with the
+    /// controller's MIN_P/MAX_P envelope. Homogeneous `mi300x` fleets
+    /// are bit-identical to the implicit (pre-fleet) configuration.
+    pub fn mi300x() -> GpuSku {
+        GpuSku::new("mi300x", PerfModelConfig::default(), 400.0, 750.0)
+    }
+
+    /// Compute-strong 700 W-class part: slightly lower peak prompt rate
+    /// than the 750 W part but an earlier prefill knee, weaker decode
+    /// scaling, lower idle.
+    pub fn h100() -> GpuSku {
+        let perf = PerfModelConfig {
+            prefill_rate_tps: 8_400.0,
+            decode_base: 9_800,
+            decode_per_req: 110,
+            prefill_speedup_max: 1.7,
+            prefill_knee_w: 650.0,
+            decode_speedup_max: 1.35,
+            decode_knee_w: 480.0,
+            idle_w: 110.0,
+            ref_w: 350.0,
+            rated_w: 700.0,
+            decode_rated_w: 480.0,
+            ..PerfModelConfig::default()
+        };
+        GpuSku::new("h100", perf, 350.0, 700.0)
+    }
+
+    /// Previous-generation 400 W-class part: roughly half the prompt
+    /// rate, slower HBM (longer decode base, slower links), and a
+    /// narrow 250–400 W envelope that leaves its caps nearly immobile —
+    /// watts flow among the bigger parts instead.
+    pub fn a100() -> GpuSku {
+        let perf = PerfModelConfig {
+            prefill_rate_tps: 4_600.0,
+            decode_base: 15_000,
+            decode_per_req: 150,
+            decode_kv_us_per_ktok: 780.0,
+            prefill_speedup_max: 1.45,
+            prefill_knee_w: 390.0,
+            decode_speedup_max: 1.2,
+            decode_knee_w: 340.0,
+            idle_w: 60.0,
+            xgmi_bw: 32e9,
+            inter_node_bw: 12.5e9,
+            ref_w: 250.0,
+            rated_w: 400.0,
+            decode_rated_w: 340.0,
+            ..PerfModelConfig::default()
+        };
+        GpuSku::new("a100", perf, 250.0, 400.0)
+    }
+
+    /// Catalog lookup by name.
+    pub fn by_name(name: &str) -> Option<GpuSku> {
+        match name {
+            "mi300x" => Some(mi300x()),
+            "h100" => Some(h100()),
+            "a100" => Some(a100()),
+            _ => None,
+        }
+    }
+
+    /// All built-in SKU names (CLI help + docs + tests).
+    pub const NAMES: &[&str] = &["mi300x", "h100", "a100"];
+}
+
+/// A declared per-node SKU mix: resolved SKUs plus an ordered list of
+/// `(sku index, count)` runs. GPU slot `i` on every node gets the SKU
+/// the runs assign it, in declaration order — so with a disaggregated
+/// `prefill` split the first runs land in the prefill pool.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetConfig {
+    /// Resolved SKU table (unique names).
+    pub skus: Vec<GpuSku>,
+    /// Ordered mix: `(index into skus, count)`; counts sum to the
+    /// per-node GPU count.
+    pub mix: Vec<(usize, usize)>,
+}
+
+impl FleetConfig {
+    /// Resolve a mix expression against the built-in catalog plus
+    /// `extra` file-defined SKUs (which shadow built-ins by name).
+    /// Entries look like `"a100:2"`; `parse_mix` accepts either a slice
+    /// of such entries or one `+`-joined string split by the caller.
+    pub fn resolve(entries: &[String], extra: &[GpuSku]) -> Result<FleetConfig, String> {
+        let mut skus: Vec<GpuSku> = Vec::new();
+        let mut mix: Vec<(usize, usize)> = Vec::new();
+        for entry in entries {
+            let (name, count) = entry
+                .rsplit_once(':')
+                .ok_or_else(|| format!("sku mix entry '{entry}' must look like 'name:count'"))?;
+            let count: usize = count
+                .parse()
+                .ok()
+                .filter(|&c| c > 0)
+                .ok_or_else(|| {
+                    format!("sku mix entry '{entry}': count must be a positive integer")
+                })?;
+            let sku = extra
+                .iter()
+                .find(|s| s.name == name)
+                .cloned()
+                .or_else(|| skus::by_name(name))
+                .ok_or_else(|| {
+                    format!(
+                        "unknown sku '{name}' (built-in: {}; or define [sku.{name}])",
+                        skus::NAMES.join(", ")
+                    )
+                })?;
+            let idx = match skus.iter().position(|s| s.name == name) {
+                Some(i) => i,
+                None => {
+                    skus.push(sku);
+                    skus.len() - 1
+                }
+            };
+            mix.push((idx, count));
+        }
+        if mix.is_empty() {
+            return Err("sku mix is empty".into());
+        }
+        let fc = FleetConfig { skus, mix };
+        fc.validate()?;
+        Ok(fc)
+    }
+
+    /// Parse a single `+`-joined mix string (`"mi300x:2+a100:2"`), the
+    /// form the scenario `sku_mix` axis uses.
+    pub fn parse_mix(s: &str, extra: &[GpuSku]) -> Result<FleetConfig, String> {
+        let entries: Vec<String> = s.split('+').map(|p| p.trim().to_string()).collect();
+        FleetConfig::resolve(&entries, extra)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        for sku in &self.skus {
+            sku.validate()?;
+        }
+        for &(idx, count) in &self.mix {
+            if idx >= self.skus.len() {
+                return Err("sku mix index out of range".into());
+            }
+            if count == 0 {
+                return Err("sku mix counts must be positive".into());
+            }
+        }
+        Ok(())
+    }
+
+    /// GPUs per node this mix describes (sum of the run counts).
+    pub fn gpus_per_node(&self) -> usize {
+        self.mix.iter().map(|&(_, c)| c).sum()
+    }
+
+    /// More than one distinct SKU in the mix?
+    pub fn heterogeneous(&self) -> bool {
+        let first = self.mix.first().map(|&(i, _)| i);
+        self.mix.iter().any(|&(i, _)| Some(i) != first)
+    }
+
+    /// SKU index of per-node slot `slot` (0..gpus_per_node).
+    pub fn sku_of_slot(&self, slot: usize) -> usize {
+        let mut at = 0;
+        for &(idx, count) in &self.mix {
+            at += count;
+            if slot < at {
+                return idx;
+            }
+        }
+        self.mix.last().map(|&(i, _)| i).unwrap_or(0)
+    }
+
+    /// Canonical `name:count+...` rendering (labels, config names).
+    pub fn mix_label(&self) -> String {
+        self.mix
+            .iter()
+            .map(|&(i, c)| format!("{}:{c}", self.skus[i].name))
+            .collect::<Vec<_>>()
+            .join("+")
+    }
+}
+
+/// The runtime fleet view: per-SKU models and envelopes plus the
+/// per-GPU SKU index, sized for the whole cluster. All accessors are
+/// `#[inline]` double-indexes into pre-built `Vec`s — the DES hot paths
+/// (per-step model lookups, router load fills, power sampling) touch no
+/// allocator through this type.
+#[derive(Debug)]
+pub struct Fleet {
+    /// Per-SKU power/perf models.
+    models: Vec<PowerModel>,
+    /// Per-SKU cap floors / ceilings (W).
+    floor_w: Vec<Watts>,
+    max_w: Vec<Watts>,
+    /// Per-SKU router throughput scales, relative to SKU 0: prefill by
+    /// rated prompt rate, decode by rated step time. Exactly 1.0 across
+    /// the board for homogeneous fleets.
+    prefill_scale: Vec<f64>,
+    decode_scale: Vec<f64>,
+    /// SKU index of every cluster-global GPU.
+    sku_of: Vec<u32>,
+    hetero: bool,
+}
+
+impl Fleet {
+    /// Build the runtime fleet for a configuration. With no explicit
+    /// mix, the whole cluster is one implicit SKU made of `cfg.perf`
+    /// and the controller's MIN_P/MAX_P envelope (the pre-fleet shape).
+    pub fn of_config(cfg: &ClusterConfig) -> Fleet {
+        let skus: Vec<GpuSku> = match &cfg.fleet {
+            Some(fc) => fc.skus.clone(),
+            None => vec![GpuSku::new(
+                "default",
+                cfg.perf.clone(),
+                cfg.controller.min_gpu_w,
+                cfg.controller.max_gpu_w,
+            )],
+        };
+        let total = cfg.total_gpus();
+        let sku_of: Vec<u32> = (0..total)
+            .map(|gi| match &cfg.fleet {
+                Some(fc) => fc.sku_of_slot(gi % cfg.n_gpus) as u32,
+                None => 0,
+            })
+            .collect();
+        let ref_prefill = skus[0].perf.prefill_rate_tps;
+        let ref_decode = skus[0].perf.decode_base as f64;
+        let prefill_scale = skus
+            .iter()
+            .map(|s| s.perf.prefill_rate_tps / ref_prefill)
+            .collect();
+        let decode_scale = skus
+            .iter()
+            .map(|s| ref_decode / s.perf.decode_base as f64)
+            .collect();
+        let hetero = {
+            let first = sku_of.first().copied().unwrap_or(0);
+            skus.len() > 1 && sku_of.iter().any(|&i| i != first)
+        };
+        Fleet {
+            floor_w: skus.iter().map(|s| s.cap_floor_w).collect(),
+            max_w: skus.iter().map(|s| s.max_w).collect(),
+            models: skus.into_iter().map(|s| PowerModel::new(s.perf)).collect(),
+            prefill_scale,
+            decode_scale,
+            sku_of,
+            hetero,
+        }
+    }
+
+    /// Number of distinct SKUs.
+    pub fn n_skus(&self) -> usize {
+        self.models.len()
+    }
+
+    /// Does the fleet actually mix SKUs? Homogeneous fleets keep every
+    /// pre-fleet code path (uniform power splits, raw router loads).
+    #[inline]
+    pub fn heterogeneous(&self) -> bool {
+        self.hetero
+    }
+
+    /// SKU index of cluster-global GPU `gi`.
+    #[inline]
+    pub fn sku_of(&self, gi: usize) -> usize {
+        self.sku_of[gi] as usize
+    }
+
+    /// The perf/power model of GPU `gi` (allocation-free double index —
+    /// the per-event lookup the `fleet/model_lookup` bench tracks).
+    #[inline]
+    pub fn model(&self, gi: usize) -> &PowerModel {
+        &self.models[self.sku_of[gi] as usize]
+    }
+
+    /// Cap floor of GPU `gi` (W).
+    #[inline]
+    pub fn floor_w(&self, gi: usize) -> Watts {
+        self.floor_w[self.sku_of[gi] as usize]
+    }
+
+    /// Cap ceiling of GPU `gi` (W).
+    #[inline]
+    pub fn max_w(&self, gi: usize) -> Watts {
+        self.max_w[self.sku_of[gi] as usize]
+    }
+
+    /// Router prefill-throughput scale of GPU `gi` (1.0 = SKU 0).
+    #[inline]
+    pub fn prefill_scale(&self, gi: usize) -> f64 {
+        self.prefill_scale[self.sku_of[gi] as usize]
+    }
+
+    /// Router decode-throughput scale of GPU `gi` (1.0 = SKU 0).
+    #[inline]
+    pub fn decode_scale(&self, gi: usize) -> f64 {
+        self.decode_scale[self.sku_of[gi] as usize]
+    }
+
+    /// Per-GPU cap floors / ceilings for the power manager.
+    pub fn floors(&self) -> Vec<Watts> {
+        (0..self.sku_of.len()).map(|gi| self.floor_w(gi)).collect()
+    }
+
+    pub fn maxes(&self) -> Vec<Watts> {
+        (0..self.sku_of.len()).map(|gi| self.max_w(gi)).collect()
+    }
+
+    /// Clamp a configured role cap into GPU `gi`'s envelope (a 600 W
+    /// uniform cap becomes 400 W on a 400 W-max part).
+    pub fn initial_cap(&self, gi: usize, configured: Watts) -> Watts {
+        configured.clamp(self.floor_w(gi), self.max_w(gi))
+    }
+
+    /// KV transfer time between two endpoints: the **slower endpoint's
+    /// bandwidth wins** on the shared hop (a fast NIC cannot push bytes
+    /// a slow NIC cannot absorb). Same-node hops use the XGMI-class
+    /// link, cross-node hops the RDMA-class link.
+    pub fn kv_transfer_time_between(
+        &self,
+        src: usize,
+        dst: usize,
+        tokens: u32,
+        same_node: bool,
+    ) -> Micros {
+        let (a, b) = (self.model(src).cfg(), self.model(dst).cfg());
+        let bw = if same_node {
+            a.xgmi_bw.min(b.xgmi_bw)
+        } else {
+            a.inter_node_bw.min(b.inter_node_bw)
+        };
+        self.model(src).kv_transfer_time_at_bw(tokens, bw)
+    }
+
+    /// Marginal tokens/s per watt of GPU `gi` at cap `w` in `role` —
+    /// the quantity the power reallocator weighs: sinks with the
+    /// steepest curve receive the most watts, sources with the
+    /// flattest give up the most. Central finite difference over a
+    /// ±5 W window clamped to the SKU envelope; 0 on a flat curve
+    /// (above the knee, or a pinned envelope).
+    pub fn marginal_tps_per_w(&self, gi: usize, role: Role, w: Watts) -> f64 {
+        let lo = self.floor_w(gi);
+        let hi = self.max_w(gi);
+        let a = (w - 5.0).max(lo);
+        let b = (w + 5.0).min(hi);
+        if b - a < 1e-9 {
+            return 0.0;
+        }
+        let m = self.model(gi);
+        match role {
+            Role::Prefill | Role::Coalesced => (m.prefill_rate(b) - m.prefill_rate(a)) / (b - a),
+            Role::Decode => {
+                // Decode throughput ∝ speedup(w) / decode_base; the
+                // absolute scale only matters relative to other decode
+                // GPUs, which is what the weights compare.
+                let base = m.cfg().decode_base as f64;
+                (m.decode_speedup(b) - m.decode_speedup(a)) / (b - a) * (1e6 / base)
+            }
+        }
+    }
+
+    /// MovePower sink weight: steeper marginal curve ⇒ more watts.
+    pub fn sink_weight(&self, gi: usize, role: Role, w: Watts) -> f64 {
+        self.marginal_tps_per_w(gi, role, w) + 1e-6
+    }
+
+    /// MovePower source weight: flatter marginal curve ⇒ cheaper donor
+    /// ⇒ gives up more watts.
+    pub fn source_weight(&self, gi: usize, role: Role, w: Watts) -> f64 {
+        1.0 / (self.marginal_tps_per_w(gi, role, w) + 1e-6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn hetero_cfg() -> ClusterConfig {
+        let mut cfg = presets::rapid_600();
+        cfg.fleet = Some(
+            FleetConfig::parse_mix("mi300x:2+a100:2+mi300x:2+a100:2", &[]).unwrap(),
+        );
+        cfg
+    }
+
+    #[test]
+    fn builtin_catalog_validates() {
+        for name in skus::NAMES {
+            let sku = skus::by_name(name).unwrap();
+            sku.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(sku.name, *name);
+        }
+        assert!(skus::by_name("tpu-v9").is_none());
+    }
+
+    #[test]
+    fn mix_parses_and_orders_slots() {
+        let fc = FleetConfig::parse_mix("mi300x:2+a100:2", &[]).unwrap();
+        assert_eq!(fc.gpus_per_node(), 4);
+        assert!(fc.heterogeneous());
+        assert_eq!(fc.skus.len(), 2);
+        assert_eq!(fc.sku_of_slot(0), 0);
+        assert_eq!(fc.sku_of_slot(1), 0);
+        assert_eq!(fc.sku_of_slot(2), 1);
+        assert_eq!(fc.sku_of_slot(3), 1);
+        assert_eq!(fc.mix_label(), "mi300x:2+a100:2");
+        // Repeated runs of the same SKU share one catalog entry.
+        let fc2 = FleetConfig::parse_mix("mi300x:1+a100:1+mi300x:2", &[]).unwrap();
+        assert_eq!(fc2.skus.len(), 2);
+        assert_eq!(fc2.gpus_per_node(), 4);
+        assert_eq!(fc2.sku_of_slot(3), 0);
+        assert!(!FleetConfig::parse_mix("mi300x:4", &[]).unwrap().heterogeneous());
+    }
+
+    #[test]
+    fn bad_mixes_rejected() {
+        assert!(FleetConfig::parse_mix("mi300x", &[]).is_err());
+        assert!(FleetConfig::parse_mix("mi300x:0", &[]).is_err());
+        assert!(FleetConfig::parse_mix("mi300x:-2", &[]).is_err());
+        assert!(FleetConfig::parse_mix("warp9:4", &[]).is_err());
+        assert!(FleetConfig::parse_mix("", &[]).is_err());
+    }
+
+    #[test]
+    fn file_defined_skus_shadow_builtins() {
+        let mut custom = skus::mi300x();
+        custom.name = "a100".into(); // shadow the built-in
+        custom.max_w = 500.0;
+        let fc = FleetConfig::parse_mix("a100:4", &[custom]).unwrap();
+        assert_eq!(fc.skus[0].max_w, 500.0);
+    }
+
+    #[test]
+    fn implicit_fleet_is_single_default_sku() {
+        let cfg = presets::p4d4(600.0);
+        let fleet = Fleet::of_config(&cfg);
+        assert_eq!(fleet.n_skus(), 1);
+        assert!(!fleet.heterogeneous());
+        for gi in 0..cfg.total_gpus() {
+            assert_eq!(fleet.sku_of(gi), 0);
+            assert_eq!(fleet.prefill_scale(gi), 1.0);
+            assert_eq!(fleet.decode_scale(gi), 1.0);
+            assert_eq!(fleet.floor_w(gi), cfg.controller.min_gpu_w);
+            assert_eq!(fleet.max_w(gi), cfg.controller.max_gpu_w);
+            assert_eq!(fleet.initial_cap(gi, 600.0), 600.0);
+        }
+    }
+
+    #[test]
+    fn hetero_fleet_maps_slots_across_nodes() {
+        let mut cfg = hetero_cfg();
+        cfg.n_nodes = 2;
+        let fleet = Fleet::of_config(&cfg);
+        assert!(fleet.heterogeneous());
+        for node in 0..2 {
+            let base = node * cfg.n_gpus;
+            assert_eq!(fleet.sku_of(base), 0);
+            assert_eq!(fleet.sku_of(base + 2), 1);
+            assert_eq!(fleet.sku_of(base + 4), 0);
+            assert_eq!(fleet.sku_of(base + 7), 1);
+        }
+        // The a100 slots clamp a 600 W cap to their 400 W envelope.
+        assert_eq!(fleet.initial_cap(2, 600.0), 400.0);
+        assert_eq!(fleet.initial_cap(0, 600.0), 600.0);
+        // Router scales favor the stronger prefill part.
+        assert!(fleet.prefill_scale(2) < fleet.prefill_scale(0));
+        assert!(fleet.decode_scale(2) < fleet.decode_scale(0));
+    }
+
+    #[test]
+    fn kv_transfer_uses_slower_endpoint() {
+        let cfg = hetero_cfg();
+        let fleet = Fleet::of_config(&cfg);
+        // GPU 0 = mi300x (64 GB/s XGMI), GPU 2 = a100 (32 GB/s).
+        let fast_fast = fleet.kv_transfer_time_between(0, 1, 4096, true);
+        let fast_slow = fleet.kv_transfer_time_between(0, 2, 4096, true);
+        let slow_fast = fleet.kv_transfer_time_between(2, 0, 4096, true);
+        let slow_slow = fleet.kv_transfer_time_between(2, 3, 4096, true);
+        assert!(fast_slow > fast_fast, "{fast_slow} vs {fast_fast}");
+        assert_eq!(fast_slow, slow_fast, "slower endpoint wins symmetrically");
+        assert_eq!(fast_slow, slow_slow, "a100 link binds either way");
+        // Cross-node hops pay the slower RDMA NIC of the pair.
+        let x_fast = fleet.kv_transfer_time_between(0, 5, 4096, false);
+        let x_slow = fleet.kv_transfer_time_between(0, 2, 4096, false);
+        assert!(x_slow > x_fast);
+        // Homogeneous fleet matches the plain single-model helper.
+        let homo = Fleet::of_config(&presets::p4d4(600.0));
+        let m = PowerModel::new(PerfModelConfig::default());
+        assert_eq!(
+            homo.kv_transfer_time_between(0, 4, 4096, true),
+            m.kv_transfer_time_between(4096, true)
+        );
+        assert_eq!(
+            homo.kv_transfer_time_between(0, 4, 4096, false),
+            m.kv_transfer_time_between(4096, false)
+        );
+    }
+
+    #[test]
+    fn marginal_weights_rank_steeper_curves_higher() {
+        let cfg = hetero_cfg();
+        let fleet = Fleet::of_config(&cfg);
+        // mi300x prefill at 500 W is on the steep shoulder; at 740 W it
+        // is nearly flat.
+        let steep = fleet.marginal_tps_per_w(0, Role::Prefill, 500.0);
+        let flat = fleet.marginal_tps_per_w(0, Role::Prefill, 745.0);
+        assert!(steep > flat, "{steep} vs {flat}");
+        assert!(steep > 0.0);
+        // An a100 pinned at its 400 W max has no cap mobility upward;
+        // the window clamps to [395, 400] where its curve is flat.
+        let pinned = fleet.marginal_tps_per_w(2, Role::Prefill, 400.0);
+        assert!(pinned < steep);
+        // Sink weight follows the marginal; source weight inverts it.
+        let (sink_steep, sink_flat) = (
+            fleet.sink_weight(0, Role::Prefill, 500.0),
+            fleet.sink_weight(0, Role::Prefill, 745.0),
+        );
+        assert!(sink_steep > sink_flat);
+        let (src_flat, src_steep) = (
+            fleet.source_weight(0, Role::Prefill, 745.0),
+            fleet.source_weight(0, Role::Prefill, 500.0),
+        );
+        assert!(src_flat > src_steep);
+        // Decode above the knee is flat: weight collapses to the epsilon.
+        let d = fleet.marginal_tps_per_w(0, Role::Decode, 700.0);
+        assert!(d.abs() < 1e-9);
+    }
+}

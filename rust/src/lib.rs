@@ -10,6 +10,7 @@ pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod experiments;
+pub mod fleet;
 pub mod kv;
 pub mod metrics;
 pub mod power;

@@ -73,8 +73,10 @@ pub struct PowerManager {
     pending: Vec<PendingRaise>,
     profile: RampProfile,
     enforce: bool,
-    min_w: Watts,
-    max_w: Watts,
+    /// Per-GPU cap floor/ceiling (W) — uniform MIN_P/MAX_P on a
+    /// homogeneous fleet, the SKU envelope per GPU on a mixed one.
+    min_of: Vec<Watts>,
+    max_of: Vec<Watts>,
 }
 
 impl PowerManager {
@@ -98,8 +100,9 @@ impl PowerManager {
         )
     }
 
-    /// Hierarchical manager: `node_of[i]` is GPU i's node; each node has
-    /// its own budget; `cluster_budget` caps the whole fleet.
+    /// Hierarchical manager with uniform per-GPU limits: `node_of[i]` is
+    /// GPU i's node; each node has its own budget; `cluster_budget` caps
+    /// the whole fleet.
     pub fn with_nodes(
         initial_caps: &[Watts],
         node_of: Vec<usize>,
@@ -109,7 +112,32 @@ impl PowerManager {
         min_w: Watts,
         max_w: Watts,
     ) -> Self {
+        let n = initial_caps.len();
+        PowerManager::with_limits(
+            initial_caps,
+            node_of,
+            node_budgets,
+            cluster_budget,
+            enforce,
+            vec![min_w; n],
+            vec![max_w; n],
+        )
+    }
+
+    /// Fully general manager: per-GPU cap limits (heterogeneous SKU
+    /// envelopes) on top of the hierarchical budgets.
+    pub fn with_limits(
+        initial_caps: &[Watts],
+        node_of: Vec<usize>,
+        node_budgets: Vec<Watts>,
+        cluster_budget: Watts,
+        enforce: bool,
+        min_of: Vec<Watts>,
+        max_of: Vec<Watts>,
+    ) -> Self {
         assert_eq!(initial_caps.len(), node_of.len());
+        assert_eq!(initial_caps.len(), min_of.len());
+        assert_eq!(initial_caps.len(), max_of.len());
         assert!(node_of.iter().all(|&n| n < node_budgets.len()));
         PowerManager {
             caps: initial_caps.iter().map(|&w| CapState::new(w)).collect(),
@@ -119,8 +147,8 @@ impl PowerManager {
             pending: Vec::new(),
             profile: RampProfile::default(),
             enforce,
-            min_w,
-            max_w,
+            min_of,
+            max_of,
         }
     }
 
@@ -143,6 +171,16 @@ impl PowerManager {
 
     pub fn node_of(&self, gpu: GpuId) -> usize {
         self.node_of[gpu.0]
+    }
+
+    /// Cap floor of one GPU (W).
+    pub fn min_of(&self, gpu: GpuId) -> Watts {
+        self.min_of[gpu.0]
+    }
+
+    /// Cap ceiling of one GPU (W).
+    pub fn max_of(&self, gpu: GpuId) -> Watts {
+        self.max_of[gpu.0]
     }
 
     pub fn profile(&self) -> &RampProfile {
@@ -183,13 +221,10 @@ impl PowerManager {
             .sum()
     }
 
-    fn check_limits(&self, cap: Watts) -> Result<(), PowerError> {
-        if cap < self.min_w - 1e-9 || cap > self.max_w + 1e-9 {
-            return Err(PowerError::OutOfLimits {
-                cap,
-                min: self.min_w,
-                max: self.max_w,
-            });
+    fn check_limits(&self, gpu: GpuId, cap: Watts) -> Result<(), PowerError> {
+        let (min, max) = (self.min_of[gpu.0], self.max_of[gpu.0]);
+        if cap < min - 1e-9 || cap > max + 1e-9 {
+            return Err(PowerError::OutOfLimits { cap, min, max });
         }
         Ok(())
     }
@@ -197,7 +232,7 @@ impl PowerManager {
     /// Immediately retarget one GPU's cap (checked against both budget
     /// levels).
     pub fn set_cap(&mut self, now: Micros, gpu: GpuId, cap: Watts) -> Result<Micros, PowerError> {
-        self.check_limits(cap)?;
+        self.check_limits(gpu, cap)?;
         if self.enforce {
             let delta = (cap - self.caps[gpu.0].target()).max(0.0);
             if delta > 0.0 {
@@ -235,6 +270,50 @@ impl PowerManager {
         total_w: Watts,
         sink_ceiling: Watts,
     ) -> Result<PowerMove, PowerError> {
+        self.move_power_impl(now, sources, sinks, None, None, total_w, sink_ceiling)
+    }
+
+    /// Marginal-weighted variant for heterogeneous fleets: `src_weights`
+    /// skews how much each source gives up (flatter marginal
+    /// tokens/s-per-watt curve ⇒ larger weight ⇒ cheaper donor) and
+    /// `sink_weights` skews how the moved watts land (steeper curve ⇒
+    /// larger weight ⇒ more watts). Uniform weights reduce bit-exactly
+    /// to [`PowerManager::move_power`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn move_power_weighted(
+        &mut self,
+        now: Micros,
+        sources: &[GpuId],
+        sinks: &[GpuId],
+        src_weights: &[f64],
+        sink_weights: &[f64],
+        total_w: Watts,
+        sink_ceiling: Watts,
+    ) -> Result<PowerMove, PowerError> {
+        assert_eq!(sources.len(), src_weights.len());
+        assert_eq!(sinks.len(), sink_weights.len());
+        self.move_power_impl(
+            now,
+            sources,
+            sinks,
+            Some(src_weights),
+            Some(sink_weights),
+            total_w,
+            sink_ceiling,
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn move_power_impl(
+        &mut self,
+        now: Micros,
+        sources: &[GpuId],
+        sinks: &[GpuId],
+        src_weights: Option<&[f64]>,
+        sink_weights: Option<&[f64]>,
+        total_w: Watts,
+        sink_ceiling: Watts,
+    ) -> Result<PowerMove, PowerError> {
         if sources.is_empty() {
             return Err(PowerError::EmptyPool("source"));
         }
@@ -254,20 +333,36 @@ impl PowerManager {
             }
             c
         };
+        // How much does each source owe? Uniform split by default; with
+        // weights, donor i owes total_w * w_i / Σw.
+        let wanted: Vec<Watts> = match src_weights {
+            None => {
+                let per_source = total_w / sources.len() as f64;
+                vec![per_source; sources.len()]
+            }
+            Some(ws) => {
+                let sum: f64 = ws.iter().sum();
+                if sum <= 0.0 {
+                    let per_source = total_w / sources.len() as f64;
+                    vec![per_source; sources.len()]
+                } else {
+                    ws.iter().map(|w| (total_w * w) / sum).collect()
+                }
+            }
+        };
         // How much can each side actually absorb?
-        let per_source = total_w / sources.len() as f64;
         let mut takeable = 0.0;
-        let mut lowers: Vec<(GpuId, Watts)> = Vec::new();
-        for &g in sources {
+        for (&g, &want) in sources.iter().zip(&wanted) {
             let cur = self.caps[g.0].target();
-            let new = (cur - per_source).max(self.min_w);
+            let new = (cur - want).max(self.min_of[g.0]);
             takeable += cur - new;
-            lowers.push((g, new));
         }
-        let ceiling = sink_ceiling.min(self.max_w);
+        // Per-sink ceiling: the requested pool ceiling intersected with
+        // each sink's own SKU envelope.
+        let ceiling_of = |mgr: &Self, g: GpuId| sink_ceiling.min(mgr.max_of[g.0]);
         let mut givable = 0.0;
         for &g in sinks {
-            givable += (ceiling - committed_cap(self, g)).max(0.0);
+            givable += (ceiling_of(self, g) - committed_cap(self, g)).max(0.0);
         }
         let moved = takeable.min(givable);
         if moved < 1.0 {
@@ -284,20 +379,27 @@ impl PowerManager {
         // (gpu, new target, watts given up) — the third field drives the
         // rollback below when budget clamps strand part of the move.
         let mut lowered_full: Vec<(GpuId, Watts, Watts)> = Vec::new();
-        for (g, _) in &lowers {
+        for (&g, &want) in sources.iter().zip(&wanted) {
             let cur = self.caps[g.0].target();
-            let reduce = (cur - ((cur - per_source).max(self.min_w))) * scale;
+            let reduce = (cur - ((cur - want).max(self.min_of[g.0]))) * scale;
             let new = cur - reduce;
             let d = self.caps[g.0].set_target(now, new, &self.profile);
             settle_deadline = settle_deadline.max(d);
-            lowered_full.push((*g, new, reduce));
+            lowered_full.push((g, new, reduce));
         }
         // Queue the raises for after the sources settle, clamped by the
         // sink's cap room and by whatever node/cluster headroom is left
-        // now that the lowers are committed.
-        let per_sink_room: Vec<Watts> = sinks
+        // now that the lowers are committed. With weights, a sink's
+        // share scales with weight × room instead of room alone (but
+        // never exceeds its actual cap room).
+        let actual_room: Vec<Watts> = sinks
             .iter()
-            .map(|&g| (ceiling - committed_cap(self, g)).max(0.0))
+            .map(|&g| (ceiling_of(self, g) - committed_cap(self, g)).max(0.0))
+            .collect();
+        let per_sink_room: Vec<Watts> = actual_room
+            .iter()
+            .enumerate()
+            .map(|(i, &room)| room * sink_weights.map_or(1.0, |ws| ws[i].max(0.0)))
             .collect();
         let room_total: f64 = per_sink_room.iter().sum();
         let mut node_room: Vec<Watts> = (0..self.node_budgets.len())
@@ -316,11 +418,17 @@ impl PowerManager {
         };
         let mut raised = Vec::new();
         let mut granted_total = 0.0;
-        for (&g, &room) in sinks.iter().zip(&per_sink_room) {
+        for ((&g, &room), &cap_room) in sinks.iter().zip(&per_sink_room).zip(&actual_room) {
             if room <= 0.0 {
                 continue;
             }
-            let share = moved * room / room_total;
+            let mut share = moved * room / room_total;
+            if sink_weights.is_some() {
+                // A heavily-weighted sink's proportional share can exceed
+                // what its own cap envelope absorbs; spill is handed back
+                // to the sources by the stranded-watts rollback below.
+                share = share.min(cap_room);
+            }
             let nd = self.node_of[g.0];
             let grant = share.min(node_room[nd]).min(cluster_room);
             if grant <= 0.0 {
@@ -360,7 +468,7 @@ impl PowerManager {
                 if restore <= 0.0 {
                     continue;
                 }
-                let cap = (self.caps[g.0].target() + restore).min(self.max_w);
+                let cap = (self.caps[g.0].target() + restore).min(self.max_of[g.0]);
                 let d = self.caps[g.0].set_target(now, cap, &self.profile);
                 settle_deadline = settle_deadline.max(d);
                 lowered_full[i].1 = cap;
@@ -386,7 +494,7 @@ impl PowerManager {
                 let nd = self.node_of[i];
                 (self.node_budgets[nd] / node_count(nd) as f64)
                     .min(per_gpu_cluster)
-                    .clamp(self.min_w, self.max_w)
+                    .clamp(self.min_of[i], self.max_of[i])
             })
             .collect();
         self.pending.clear();
@@ -419,7 +527,7 @@ impl PowerManager {
         for p in pending {
             if p.at <= now {
                 // Raise within limits; budget holds by construction.
-                let cap = p.cap.clamp(self.min_w, self.max_w);
+                let cap = p.cap.clamp(self.min_of[p.gpu.0], self.max_of[p.gpu.0]);
                 self.caps[p.gpu.0].set_target(now, cap, &self.profile);
                 applied.push((p.gpu, cap));
             } else {
@@ -728,6 +836,164 @@ mod tests {
                 m.target(GpuId(i))
             );
         }
+    }
+
+    // ------------------------------------------------------------------
+    // per-GPU (SKU-envelope) limits + weighted moves
+    // ------------------------------------------------------------------
+
+    /// 2 big GPUs ([400, 750]) + 2 small GPUs ([250, 400]) on one node.
+    fn manager_mixed_envelopes() -> PowerManager {
+        PowerManager::with_limits(
+            &[600.0, 600.0, 400.0, 400.0],
+            vec![0; 4],
+            vec![2400.0],
+            2400.0,
+            true,
+            vec![400.0, 400.0, 250.0, 250.0],
+            vec![750.0, 750.0, 400.0, 400.0],
+        )
+    }
+
+    #[test]
+    fn per_gpu_limits_bound_set_cap() {
+        let mut m = manager_mixed_envelopes();
+        // Raising a small GPU above its 400 W envelope fails even though
+        // the uniform MAX would allow it.
+        let err = m.set_cap(0, GpuId(2), 450.0).unwrap_err();
+        assert!(matches!(err, PowerError::OutOfLimits { max, .. } if max == 400.0), "{err}");
+        // Its floor is lower than the big GPUs' floor.
+        m.set_cap(0, GpuId(2), 300.0).unwrap();
+        assert!(m.set_cap(0, GpuId(0), 300.0).is_err());
+        assert_eq!(m.min_of(GpuId(0)), 400.0);
+        assert_eq!(m.max_of(GpuId(2)), 400.0);
+    }
+
+    #[test]
+    fn move_power_respects_sku_ceiling_of_each_sink() {
+        // Sinks: one big (room up to 750) and one small pinned at 400.
+        let mut m = manager_mixed_envelopes();
+        m.set_cap(0, GpuId(0), 500.0).unwrap();
+        let mv = m
+            .move_power(SECOND, &[GpuId(1)], &[GpuId(0), GpuId(3)], 200.0, 750.0)
+            .unwrap();
+        m.poll(mv.effective_at);
+        assert!(m.target(GpuId(0)) <= 750.0 + 1e-9);
+        assert!(m.target(GpuId(3)) <= 400.0 + 1e-9, "small sink must stay in envelope");
+        assert!(m.budget_ok());
+    }
+
+    #[test]
+    fn move_power_respects_sku_floor_of_each_source() {
+        let mut m = manager_mixed_envelopes();
+        // Small sources can only go to 250; big source to 400.
+        let mv = m
+            .move_power(0, &[GpuId(1), GpuId(2)], &[GpuId(0)], 600.0, 750.0)
+            .unwrap();
+        m.poll(mv.effective_at);
+        assert!(m.target(GpuId(1)) >= 400.0 - 1e-9);
+        assert!(m.target(GpuId(2)) >= 250.0 - 1e-9);
+        assert!(m.budget_ok());
+    }
+
+    #[test]
+    fn weighted_move_skews_toward_heavy_sink() {
+        let mut m = PowerManager::new(&[600.0, 450.0, 450.0, 400.0], 4800.0, true, 400.0, 750.0);
+        // Sink 1 gets 3x the weight of sink 2: with equal room it should
+        // receive ~3x the watts.
+        let mv = m
+            .move_power_weighted(
+                0,
+                &[GpuId(0)],
+                &[GpuId(1), GpuId(2)],
+                &[1.0],
+                &[3.0, 1.0],
+                120.0,
+                750.0,
+            )
+            .unwrap();
+        m.poll(mv.effective_at);
+        let g1 = m.target(GpuId(1)) - 450.0;
+        let g2 = m.target(GpuId(2)) - 450.0;
+        assert!((g1 + g2 - 120.0).abs() < 1e-6, "all watts land: {g1} + {g2}");
+        assert!((g1 / g2 - 3.0).abs() < 1e-6, "3:1 split, got {g1}:{g2}");
+        assert!(m.budget_ok());
+    }
+
+    #[test]
+    fn weighted_move_skews_donation_toward_heavy_source() {
+        let mut m = PowerManager::new(&[600.0, 600.0, 400.0, 400.0], 4800.0, true, 400.0, 750.0);
+        let mv = m
+            .move_power_weighted(
+                0,
+                &[GpuId(0), GpuId(1)],
+                &[GpuId(2), GpuId(3)],
+                &[3.0, 1.0],
+                &[1.0, 1.0],
+                80.0,
+                750.0,
+            )
+            .unwrap();
+        m.poll(mv.effective_at);
+        let d0 = 600.0 - m.target(GpuId(0));
+        let d1 = 600.0 - m.target(GpuId(1));
+        assert!((d0 / d1 - 3.0).abs() < 1e-6, "3:1 donation, got {d0}:{d1}");
+        assert!(m.budget_ok());
+    }
+
+    #[test]
+    fn uniform_weights_match_unweighted_move_exactly() {
+        let caps = [620.0, 580.0, 460.0, 440.0];
+        let mut a = PowerManager::new(&caps, 4800.0, true, 400.0, 750.0);
+        let mut b = PowerManager::new(&caps, 4800.0, true, 400.0, 750.0);
+        let srcs = [GpuId(0), GpuId(1)];
+        let sinks = [GpuId(2), GpuId(3)];
+        let mv_a = a.move_power(0, &srcs, &sinks, 130.0, 650.0).unwrap();
+        let mv_b = b
+            .move_power_weighted(0, &srcs, &sinks, &[1.0, 1.0], &[1.0, 1.0], 130.0, 650.0)
+            .unwrap();
+        assert_eq!(mv_a, mv_b, "uniform weights must be bit-identical");
+        a.poll(mv_a.effective_at);
+        b.poll(mv_b.effective_at);
+        for i in 0..4 {
+            assert_eq!(a.target(GpuId(i)).to_bits(), b.target(GpuId(i)).to_bits());
+        }
+    }
+
+    #[test]
+    fn weighted_share_clamped_to_sink_cap_room() {
+        // Sink 1 is nearly full (room 10 W) but heavily weighted: its
+        // share clamps to the room and the spill returns to the source.
+        let mut m = PowerManager::new(&[700.0, 740.0, 400.0, 400.0], 4800.0, true, 400.0, 750.0);
+        let mv = m
+            .move_power_weighted(
+                0,
+                &[GpuId(0)],
+                &[GpuId(1), GpuId(2)],
+                &[1.0],
+                &[100.0, 1.0],
+                200.0,
+                750.0,
+            )
+            .unwrap();
+        m.poll(mv.effective_at);
+        assert!(m.target(GpuId(1)) <= 750.0 + 1e-9);
+        assert!(m.budget_ok());
+        // Whatever could not land was restored to the source.
+        let given = 700.0 - m.target(GpuId(0));
+        let landed = (m.target(GpuId(1)) - 740.0) + (m.target(GpuId(2)) - 400.0);
+        assert!((given - landed).abs() < 1e-6, "given {given} vs landed {landed}");
+    }
+
+    #[test]
+    fn distribute_uniform_clamps_to_sku_envelopes() {
+        let mut m = manager_mixed_envelopes();
+        // Uniform share would be 600 W; small GPUs clamp to 400.
+        let settle = m.distribute_uniform(0);
+        m.poll(settle);
+        assert!((m.target(GpuId(0)) - 600.0).abs() < 1e-6);
+        assert!((m.target(GpuId(2)) - 400.0).abs() < 1e-6);
+        assert!(m.budget_ok());
     }
 
     #[test]

@@ -14,19 +14,26 @@
 use crate::config::PerfModelConfig;
 use crate::types::{Micros, Watts};
 
-/// Reference power for the speedup curves (lowest cap in Fig 4).
+/// Reference power of the paper's speedup curves (lowest cap in Fig 4).
+/// Per-SKU models may anchor lower via `PerfModelConfig::ref_w`.
 pub const REF_W: Watts = 400.0;
 
-/// Saturating speedup curve: 1.0 at `REF_W`, `max` at/above `knee`.
+/// Saturating speedup curve: 1.0 at `ref`, `max` at/above `knee`.
 /// Exponential approach keeps the marginal gain per 50 W step roughly
 /// matching Fig 4 (steady gains, then a flat tail).
-fn saturating_speedup(power: Watts, knee: Watts, max: f64) -> f64 {
-    let p = power.clamp(REF_W, 1000.0);
+fn saturating_speedup(power: Watts, ref_w: Watts, knee: Watts, max: f64) -> f64 {
+    if knee <= ref_w {
+        return max; // degenerate curve: flat at max everywhere
+    }
+    // No upper clamp needed: anything at/above the knee is flat at max,
+    // and a `clamp(ref_w, CONST)` would panic for SKUs anchored above
+    // the constant.
+    let p = power.max(ref_w);
     if p >= knee {
         return max;
     }
     // Normalized position in [0,1] with an exponential shoulder.
-    let x = (p - REF_W) / (knee - REF_W);
+    let x = (p - ref_w) / (knee - ref_w);
     let k = 0.5; // shoulder sharpness: 600 W prefill ≈ 15% slower than 750 W (§5.1)
     let frac = (1.0 - (-k * x).exp()) / (1.0 - (-k_f()).exp());
     1.0 + (max - 1.0) * frac.min(1.0)
@@ -53,20 +60,33 @@ impl PowerModel {
         &self.cfg
     }
 
-    /// Prefill speedup at `power` relative to 400 W (Fig 4a).
+    /// Prefill speedup at `power` relative to the curve floor `ref_w`
+    /// (Fig 4a; 400 W on the paper's MI300X-class part).
     pub fn prefill_speedup(&self, power: Watts) -> f64 {
-        saturating_speedup(power, self.cfg.prefill_knee_w, self.cfg.prefill_speedup_max)
+        saturating_speedup(
+            power,
+            self.cfg.ref_w,
+            self.cfg.prefill_knee_w,
+            self.cfg.prefill_speedup_max,
+        )
     }
 
-    /// Decode speedup at `power` relative to 400 W (Fig 4b).
+    /// Decode speedup at `power` relative to the curve floor (Fig 4b).
     pub fn decode_speedup(&self, power: Watts) -> f64 {
-        saturating_speedup(power, self.cfg.decode_knee_w, self.cfg.decode_speedup_max)
+        saturating_speedup(
+            power,
+            self.cfg.ref_w,
+            self.cfg.decode_knee_w,
+            self.cfg.decode_speedup_max,
+        )
     }
 
     /// Prompt-processing rate (tokens/s) of one prefill GPU at `power`.
+    /// `prefill_rate_tps` is quoted at `rated_w` (750 W for the paper's
+    /// part); other SKUs quote at their own rated power.
     pub fn prefill_rate(&self, power: Watts) -> f64 {
         let at_max = self.cfg.prefill_rate_tps;
-        let su_max = self.prefill_speedup(750.0);
+        let su_max = self.prefill_speedup(self.cfg.rated_w);
         at_max * self.prefill_speedup(power) / su_max
     }
 
@@ -86,10 +106,10 @@ impl PowerModel {
         }
         let ctx = mean_ctx_tokens.min(self.cfg.decode_kv_ctx_cap_tokens);
         let kv = self.cfg.decode_kv_us_per_ktok * (ctx / 1000.0);
-        let at_600 = self.cfg.decode_base as f64
+        let at_rated = self.cfg.decode_base as f64
             + (self.cfg.decode_per_req as f64 + kv) * batch as f64;
-        let su_600 = self.decode_speedup(600.0);
-        (at_600 * su_600 / self.decode_speedup(power)) as Micros
+        let su_rated = self.decode_speedup(self.cfg.decode_rated_w);
+        (at_rated * su_rated / self.decode_speedup(power)) as Micros
     }
 
     /// Latency of a chunked-prefill coalesced iteration: a prefill chunk of
@@ -146,11 +166,23 @@ impl PowerModel {
         }
     }
 
+    /// KV transfer time at an explicit link bandwidth (bytes/s). The
+    /// fleet layer uses this with the *slower endpoint's* bandwidth when
+    /// the two ends of a hop are different SKUs.
+    pub fn kv_transfer_time_at_bw(&self, tokens: u32, bw: f64) -> Micros {
+        let bytes = tokens as u64 * self.cfg.kv_bytes_per_token;
+        ((bytes as f64 / bw) * 1e6) as Micros
+    }
+
     /// Instantaneous power draw of a GPU at `cap` with `util` in [0,1].
     /// Prefill saturates its cap; decode tops out near its knee (it cannot
-    /// pull much more power even uncapped — memory-bound).
+    /// pull much more power even uncapped — memory-bound). The result is
+    /// clamped into `[idle_w, cap]` (degenerating to `cap` when the cap
+    /// sits below idle, and to 0 for a nonsensical negative cap), so
+    /// per-SKU power accounting can never go negative or exceed the cap.
     pub fn draw(&self, cap: Watts, util: f64, is_prefill: bool) -> Watts {
         let util = util.clamp(0.0, 1.0);
+        let cap = cap.max(0.0);
         let ceiling = if is_prefill {
             cap
         } else {
@@ -158,7 +190,7 @@ impl PowerModel {
             cap.min(self.cfg.decode_knee_w + 20.0)
         };
         let dynamic = (ceiling - self.cfg.idle_w).max(0.0) * util;
-        (self.cfg.idle_w + dynamic).min(cap)
+        (self.cfg.idle_w + dynamic).clamp(self.cfg.idle_w.min(cap), cap)
     }
 
     /// Idle draw (W).
@@ -315,5 +347,71 @@ mod tests {
     fn rate_at_750_matches_config() {
         let m = model();
         assert!((m.prefill_rate(750.0) - 9_300.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn draw_clamps_util_above_one() {
+        let m = model();
+        assert_eq!(m.draw(750.0, 3.5, true), m.draw(750.0, 1.0, true));
+        assert_eq!(m.draw(600.0, -1.0, true), m.idle_w());
+    }
+
+    #[test]
+    fn draw_cap_below_idle_returns_cap() {
+        // A cap below idle cannot be honored by lowering draw below the
+        // floor; the firmware cap wins and the draw pins at the cap.
+        let m = model();
+        let idle = m.idle_w();
+        assert!(idle > 100.0, "test assumes idle around 140 W");
+        assert_eq!(m.draw(100.0, 0.0, true), 100.0);
+        assert_eq!(m.draw(100.0, 1.0, false), 100.0);
+        // Nonsensical negative cap degrades to zero, never negative.
+        assert_eq!(m.draw(-50.0, 1.0, true), 0.0);
+        assert!(m.draw(-50.0, 0.3, false) >= 0.0);
+    }
+
+    #[test]
+    fn draw_never_leaves_idle_cap_interval() {
+        let m = model();
+        for cap in [400.0, 500.0, 600.0, 750.0] {
+            for util in [0.0, 0.3, 0.7, 1.0, 2.0] {
+                for pf in [true, false] {
+                    let d = m.draw(cap, util, pf);
+                    assert!(d >= m.idle_w() - 1e-9 && d <= cap + 1e-9, "{cap} {util} {pf}: {d}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn explicit_bw_transfer_matches_link_helpers() {
+        let m = model();
+        assert_eq!(
+            m.kv_transfer_time_at_bw(4096, m.cfg().xgmi_bw),
+            m.kv_transfer_time(4096)
+        );
+        assert_eq!(
+            m.kv_transfer_time_at_bw(4096, m.cfg().inter_node_bw),
+            m.kv_transfer_time_cross_node(4096)
+        );
+    }
+
+    #[test]
+    fn shifted_curve_anchor_rescales_rates() {
+        // A SKU whose curve spans [250, 400] W: speedup 1.0 at 250,
+        // flat at its max by 400, with the rate quoted at rated_w.
+        let cfg = PerfModelConfig {
+            ref_w: 250.0,
+            rated_w: 400.0,
+            prefill_knee_w: 390.0,
+            prefill_speedup_max: 1.4,
+            prefill_rate_tps: 5_000.0,
+            ..PerfModelConfig::default()
+        };
+        let m = PowerModel::new(cfg);
+        assert!((m.prefill_speedup(250.0) - 1.0).abs() < 1e-9);
+        assert!((m.prefill_speedup(400.0) - 1.4).abs() < 1e-9);
+        assert!((m.prefill_rate(400.0) - 5_000.0).abs() < 1e-6);
+        assert!(m.prefill_rate(250.0) < 5_000.0);
     }
 }

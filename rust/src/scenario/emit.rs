@@ -166,6 +166,22 @@ impl Emitter for TextEmitter {
                 }
             }
         }
+        let study_checks = study.study_checks();
+        if !study_checks.is_empty() {
+            let passed = study_checks.iter().filter(|c| c.pass).count();
+            out.push_str(&format!(
+                "study checks: {passed}/{} passed\n",
+                study_checks.len()
+            ));
+            for c in &study_checks {
+                out.push_str(&format!(
+                    "  [{}] {} ({})\n",
+                    if c.pass { "PASS" } else { "FAIL" },
+                    c.what,
+                    c.detail
+                ));
+            }
+        }
         out
     }
 }
@@ -258,6 +274,18 @@ impl Emitter for JsonEmitter {
             "cells".into(),
             Json::Arr(study.cells.iter().map(cell_json).collect()),
         );
+        let study_checks: Vec<Json> = study
+            .study_checks()
+            .iter()
+            .map(|c| {
+                let mut m = BTreeMap::new();
+                m.insert("what".into(), Json::Str(c.what.clone()));
+                m.insert("pass".into(), Json::Bool(c.pass));
+                m.insert("detail".into(), Json::Str(c.detail.clone()));
+                Json::Obj(m)
+            })
+            .collect();
+        obj.insert("study_checks".into(), Json::Arr(study_checks));
         let mut out = Json::Obj(obj).to_string();
         out.push('\n');
         out

@@ -32,9 +32,10 @@
 //!
 //! TOML tables are unordered, so axes expand in a fixed canonical
 //! order regardless of file order (outermost → innermost): `preset`,
-//! `policy`, `n_nodes`, `prefill_gpus`, `power_w`, `batch`,
+//! `sku_mix`, `policy`, `n_nodes`, `prefill_gpus`, `power_w`, `batch`,
 //! `burst_factor`, `slo_scale`, `rate_per_gpu`. The last declared axis
-//! becomes the column axis of the text tables.
+//! becomes the column axis of the text tables. Unknown keys anywhere in
+//! the file are rejected with an error naming the key and its table.
 
 use super::{Axis, Scenario, ScenarioError, WorkloadSpec};
 use crate::config::toml::{Document, Value};
@@ -44,6 +45,7 @@ use crate::types::{Slo, MILLIS};
 /// Canonical axis expansion order for TOML-declared scenarios.
 const AXIS_ORDER: &[&str] = &[
     "preset",
+    "sku_mix",
     "policy",
     "n_nodes",
     "prefill_gpus",
@@ -54,10 +56,27 @@ const AXIS_ORDER: &[&str] = &[
     "rate_per_gpu",
 ];
 
+/// Keys a scenario file accepts, by table (`""` = top level).
+const KNOWN_TABLES: &[(&str, &[&str])] = &[
+    ("", &["name", "seed", "requests", "rate_per_gpu"]),
+    ("workload", &["kind", "input_tokens", "output_tokens", "burst_frac"]),
+    ("slo", &["ttft_ms", "tpot_ms"]),
+    ("base", &["preset"]),
+    ("sim", &["sample_period_ms"]),
+    ("axes", AXIS_ORDER),
+];
+
+/// Reject any key the scenario loader would silently ignore, naming the
+/// key and its table (and the keys that table does accept).
+fn check_unknown_keys(doc: &Document) -> Result<(), ScenarioError> {
+    doc.check_known_keys(KNOWN_TABLES, &[]).map_err(ScenarioError)
+}
+
 impl Scenario {
     /// Parse a scenario from TOML text.
     pub fn from_toml(text: &str) -> Result<Scenario, ScenarioError> {
         let doc = Document::parse(text).map_err(|e| ScenarioError(e.to_string()))?;
+        check_unknown_keys(&doc)?;
         let base = match doc.get_str("base.preset") {
             Some(name) => presets::by_name(name).map_err(|e| ScenarioError(e.to_string()))?,
             None => presets::p4d4(600.0),
@@ -90,15 +109,6 @@ impl Scenario {
             slo.tpot = (ms * MILLIS as f64) as crate::types::Micros;
         }
         s.slo = slo;
-        for key in doc.keys_under("axes") {
-            let short = key.strip_prefix("axes.").unwrap_or(key);
-            if !AXIS_ORDER.contains(&short) {
-                return Err(ScenarioError(format!(
-                    "unknown axis '{short}' (known: {})",
-                    AXIS_ORDER.join(", ")
-                )));
-            }
-        }
         for &name in AXIS_ORDER {
             if let Some(values) = doc.get_array(&format!("axes.{name}")) {
                 s.axes.push(parse_axis(name, values)?);
@@ -187,6 +197,19 @@ fn parse_axis(name: &str, values: &[Value]) -> Result<Axis, ScenarioError> {
                 })
                 .collect::<Result<Vec<_>, _>>()?;
             Ok(Axis::Policy(policies))
+        }
+        "sku_mix" => {
+            let mixes = values
+                .iter()
+                .map(|v| {
+                    v.as_str().map(str::to_string).ok_or_else(|| {
+                        ScenarioError(
+                            "axis 'sku_mix' needs mix strings like \"mi300x:4+a100:4\"".into(),
+                        )
+                    })
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            Ok(Axis::SkuMix(mixes))
         }
         "n_nodes" => Ok(Axis::NNodes(ints(name, values)?)),
         "prefill_gpus" => Ok(Axis::PrefillGpus(ints(name, values)?)),
@@ -299,5 +322,37 @@ rate_per_gpu = [1.0]
             "[workload]\nkind = \"mixed\"\n[axes]\nburst_factor = [2.0]"
         )
         .is_err());
+    }
+
+    #[test]
+    fn unknown_keys_rejected_with_table_named() {
+        let err = Scenario::from_toml("[slo]\nttft_msx = 500").unwrap_err();
+        assert!(err.0.contains("ttft_msx") && err.0.contains("[slo]"), "{}", err.0);
+        assert!(err.0.contains("ttft_ms"), "lists valid keys: {}", err.0);
+        let err = Scenario::from_toml("reqests = 100").unwrap_err();
+        assert!(err.0.contains("reqests"), "{}", err.0);
+        let err = Scenario::from_toml("[workloads]\nkind = \"longbench\"").unwrap_err();
+        assert!(err.0.contains("workloads.kind"), "{}", err.0);
+    }
+
+    #[test]
+    fn sku_mix_axis_parses() {
+        let s = Scenario::from_toml(
+            r#"
+[base]
+preset = "rapid-600"
+[axes]
+sku_mix = ["mi300x:8", "mi300x:4+a100:4"]
+rate_per_gpu = [1.0]
+"#,
+        )
+        .unwrap();
+        assert_eq!(s.axes.len(), 2);
+        assert_eq!(s.axes[0].key(), "sku_mix");
+        assert_eq!(s.axes[0].label(1), "mi300x:4+a100:4");
+        assert_eq!(s.n_cells(), 2);
+        // Bad mixes fail at load time.
+        assert!(Scenario::from_toml("[axes]\nsku_mix = [\"warp9:8\"]").is_err());
+        assert!(Scenario::from_toml("[axes]\nsku_mix = [9]").is_err());
     }
 }

@@ -235,6 +235,11 @@ pub enum Axis {
     PrefillGpus(Vec<usize>),
     /// Batch size (microbench workloads).
     Batch(Vec<usize>),
+    /// Per-node SKU mixes (`"mi300x:8"`, `"mi300x:4+a100:4"`), resolved
+    /// against the built-in `fleet::skus` catalog. Each mix must cover
+    /// exactly the base config's `n_gpus`, so homogeneous and mixed
+    /// fleets of equal GPU count sweep under one power cap.
+    SkuMix(Vec<String>),
 }
 
 impl Axis {
@@ -250,6 +255,7 @@ impl Axis {
             Axis::BurstFactor(_) => "burst_factor",
             Axis::PrefillGpus(_) => "prefill_gpus",
             Axis::Batch(_) => "batch",
+            Axis::SkuMix(_) => "sku_mix",
         }
     }
 
@@ -261,6 +267,7 @@ impl Axis {
             }
             Axis::NNodes(v) | Axis::PrefillGpus(v) | Axis::Batch(v) => v.len(),
             Axis::Policy(v) => v.len(),
+            Axis::SkuMix(v) => v.len(),
         }
     }
 
@@ -277,6 +284,7 @@ impl Axis {
             }
             Axis::NNodes(v) | Axis::PrefillGpus(v) | Axis::Batch(v) => format!("{}", v[i]),
             Axis::Policy(v) => v[i].name().to_string(),
+            Axis::SkuMix(v) => v[i].clone(),
         }
     }
 }
@@ -417,10 +425,15 @@ impl Scenario {
             return err("batch axis only applies to microbench workloads".into());
         }
         if self.workload.is_micro() {
-            for k in ["rate_per_gpu", "slo_scale", "burst_factor", "n_nodes"] {
+            for k in ["rate_per_gpu", "slo_scale", "burst_factor", "n_nodes", "sku_mix"] {
                 if has(k) {
                     return err(format!("{k} axis does not apply to microbench workloads"));
                 }
+            }
+        }
+        if let Some(Axis::SkuMix(mixes)) = self.axes.iter().find(|a| a.key() == "sku_mix") {
+            for mix in mixes {
+                crate::fleet::FleetConfig::parse_mix(mix, &[]).map_err(ScenarioError)?;
             }
         }
         Ok(())
@@ -502,6 +515,20 @@ fn resolve_cell(scenario: &Scenario, tuple: &[usize]) -> Result<CellSpec, Scenar
                 };
             }
             Axis::Batch(v) => spec.batch = v[i],
+            Axis::SkuMix(v) => {
+                let fc = crate::fleet::FleetConfig::parse_mix(&v[i], &[])
+                    .map_err(ScenarioError)?;
+                if fc.gpus_per_node() != spec.config.n_gpus {
+                    return Err(ScenarioError(format!(
+                        "sku mix '{}' covers {} GPUs but the cell's config has n_gpus {}",
+                        v[i],
+                        fc.gpus_per_node(),
+                        spec.config.n_gpus
+                    )));
+                }
+                spec.config.name = format!("{}@{}", spec.config.name, fc.mix_label());
+                spec.config.fleet = Some(fc);
+            }
         }
     }
     spec.config
@@ -634,6 +661,58 @@ impl StudyResult {
             .filter(|c| c.pass)
             .count();
         (passed, total)
+    }
+
+    /// Cross-cell invariants the per-cell checks cannot see. Today:
+    /// with a `SkuMix` axis, every *mixed* fleet must achieve at least
+    /// the goodput of the *worst homogeneous* fleet of equal GPU count
+    /// under the same power cap, at every setting of the other axes —
+    /// the basic sanity property of SKU-aware reallocation (strictly
+    /// better hardware plus marginal-watt shifting cannot lose to the
+    /// all-worst fleet).
+    pub fn study_checks(&self) -> Vec<ShapeCheck> {
+        let Some(mix_pos) = self.scenario.axes.iter().position(|a| a.key() == "sku_mix") else {
+            return Vec::new();
+        };
+        let is_hetero = |cell: &Cell| {
+            crate::fleet::FleetConfig::parse_mix(&cell.coords[mix_pos].1, &[])
+                .map(|fc| fc.heterogeneous())
+                .unwrap_or(false)
+        };
+        // Group by every coordinate except the mix itself.
+        let mut groups: std::collections::BTreeMap<String, Vec<&Cell>> =
+            std::collections::BTreeMap::new();
+        for cell in &self.cells {
+            let key = cell
+                .coords
+                .iter()
+                .enumerate()
+                .filter(|&(i, _)| i != mix_pos)
+                .map(|(_, (k, v))| format!("{k}={v}"))
+                .collect::<Vec<_>>()
+                .join(" ");
+            groups.entry(key).or_default().push(cell);
+        }
+        let mut checks = Vec::new();
+        for (key, cells) in groups {
+            let worst_homog = cells
+                .iter()
+                .filter(|c| !is_hetero(c))
+                .map(|c| (c.coords[mix_pos].1.clone(), c.goodput_qps()))
+                .min_by(|a, b| a.1.total_cmp(&b.1));
+            let Some((worst_mix, worst_goodput)) = worst_homog else { continue };
+            for cell in cells.iter().filter(|c| is_hetero(c)) {
+                let mix = &cell.coords[mix_pos].1;
+                let goodput = cell.goodput_qps();
+                let at = if key.is_empty() { String::new() } else { format!(" at {key}") };
+                checks.push(ShapeCheck::new(
+                    format!("mixed fleet '{mix}' >= worst homogeneous fleet{at}"),
+                    goodput + 1e-9 >= worst_goodput,
+                    format!("{goodput:.3} qps vs {worst_goodput:.3} qps ({worst_mix})"),
+                ));
+            }
+        }
+        checks
     }
 
     /// View a `[Config, RatePerGpu]` study as per-config rate curves
@@ -921,6 +1000,53 @@ mod tests {
         assert!(cell.checks.iter().all(|c| c.pass), "{:?}", cell.checks);
         let (passed, total) = study.checks_passed();
         assert_eq!(passed, total);
+    }
+
+    #[test]
+    fn sku_mix_axis_sets_fleet_and_name() {
+        let s = Scenario::new("t", presets::rapid_600())
+            .axis(Axis::SkuMix(vec!["mi300x:8".into(), "mi300x:4+a100:4".into()]));
+        let cells = Study::new(s).cells().unwrap();
+        assert_eq!(cells.len(), 2);
+        assert!(!cells[0].config.fleet.as_ref().unwrap().heterogeneous());
+        let mixed = cells[1].config.fleet.as_ref().unwrap();
+        assert!(mixed.heterogeneous());
+        assert_eq!(mixed.gpus_per_node(), 8);
+        assert!(cells[1].config.name.ends_with("@mi300x:4+a100:4"));
+        assert_eq!(cells[1].coords[0], ("sku_mix".to_string(), "mi300x:4+a100:4".to_string()));
+        // Mixes must cover the config's n_gpus exactly.
+        let bad = Scenario::new("t", presets::rapid_600())
+            .axis(Axis::SkuMix(vec!["mi300x:4".into()]));
+        assert!(Study::new(bad).cells().is_err());
+        // Unknown SKUs are rejected at validation time.
+        let unknown = Scenario::new("t", presets::rapid_600())
+            .axis(Axis::SkuMix(vec!["warp9:8".into()]));
+        assert!(unknown.validate().is_err());
+        // Microbench workloads reject the axis.
+        let micro = Scenario::new("t", presets::p4d4(600.0))
+            .workload(WorkloadSpec::PrefillMicrobench { input_tokens: 1024 })
+            .axis(Axis::SkuMix(vec!["mi300x:8".into()]));
+        assert!(micro.validate().is_err());
+    }
+
+    #[test]
+    fn study_checks_compare_mixed_to_worst_homogeneous() {
+        let s = Scenario::new("t", presets::p4d4(600.0))
+            .requests(60)
+            .seed(11)
+            .axis(Axis::SkuMix(vec![
+                "mi300x:8".into(),
+                "a100:8".into(),
+                "mi300x:4+a100:4".into(),
+            ]));
+        let study = Study::new(s).run(Some(1)).unwrap();
+        let checks = study.study_checks();
+        assert_eq!(checks.len(), 1, "one mixed cell, one group");
+        assert!(checks[0].what.contains("mi300x:4+a100:4"), "{}", checks[0].what);
+        assert!(checks[0].pass, "{}: {}", checks[0].what, checks[0].detail);
+        // No SkuMix axis -> no study checks.
+        let plain = Scenario::new("t", presets::p4d4(600.0)).requests(20);
+        assert!(Study::new(plain).run(Some(1)).unwrap().study_checks().is_empty());
     }
 
     #[test]

@@ -26,7 +26,9 @@ impl RoleBehavior for CoalescedBehavior {
 
 impl Cluster {
     pub(crate) fn kick_coalesced(&mut self, gi: usize) {
-        let chunk_budget = self.cfg.perf.chunk_tokens;
+        // Chunk budget is a per-SKU constant (heterogeneous fleets may
+        // mix chunk sizes; the implicit fleet reads cfg.perf as before).
+        let chunk_budget = self.model_of(gi).cfg().chunk_tokens;
         let g = &mut self.gpus[gi];
         if g.busy || g.role != Role::Coalesced {
             return;
@@ -75,7 +77,7 @@ impl Cluster {
         let ctx = g.mean_ctx();
         let power = self.power.effective(GpuId(gi), self.now);
         let t = self
-            .model
+            .model_of(gi)
             .coalesced_step_time(used, done_before, batch, ctx, power);
         self.gpus[gi].dec_step_time = t;
         let epoch = self.gpus[gi].epoch;

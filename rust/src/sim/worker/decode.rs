@@ -64,7 +64,7 @@ impl Cluster {
         let batch = g.dec_active.len();
         let ctx = g.mean_ctx();
         let power = self.power.effective(GpuId(gi), self.now);
-        let t = self.model.decode_step_time(batch, ctx, power);
+        let t = self.model_of(gi).decode_step_time(batch, ctx, power);
         self.gpus[gi].dec_step_time = t;
         let epoch = self.gpus[gi].epoch;
         self.events.push(self.now + t, Event::StepDone { gpu: gi, epoch });

@@ -57,7 +57,7 @@ impl Cluster {
         let epoch = g.epoch;
         self.scratch_batch = scratch;
         let power = self.power.effective(GpuId(gi), now);
-        let t = self.model.prefill_batch_time(total_tokens, power);
+        let t = self.model_of(gi).prefill_batch_time(total_tokens, power);
         self.events.push(now + t, Event::StepDone { gpu: gi, epoch });
     }
 
@@ -116,9 +116,10 @@ impl Cluster {
                 .expect("at least one decode-committed GPU");
             self.ring_used[src_node] += 1;
             let same_node = self.node_of(target.0) == src_node;
+            // Heterogeneous endpoints: the slower side's link binds.
             let t = self
-                .model
-                .kv_transfer_time_between(item.req.input_tokens, same_node);
+                .fleet
+                .kv_transfer_time_between(gi, target.0, item.req.input_tokens, same_node);
             self.events.push(
                 self.now + t,
                 Event::KvArrive { gpu: target.0, src_node, item },

@@ -1,0 +1,164 @@
+//! Heterogeneous-fleet integration tests (ISSUE-4 acceptance criteria).
+//!
+//! * **Golden single-SKU identity**: threading per-SKU models through
+//!   the cluster, router and power manager must leave every single-SKU
+//!   config bit-identical — an explicit `mi300x:8` fleet (the paper's
+//!   part) and the implicit no-fleet path produce the same RunResult
+//!   for the shipped `configs/rapid-600.toml` and
+//!   `configs/two-node-4p4d.toml`.
+//! * **Mixed fleets run end-to-end** under per-SKU cap envelopes with
+//!   both budget levels holding.
+//! * **`scenarios/hetero-mix.toml`** loads, runs, and its study-level
+//!   ShapeCheck holds: a mixed fleet under the same cluster cap
+//!   achieves at least the goodput of the worst homogeneous fleet of
+//!   equal GPU count.
+
+use rapid::config::ClusterConfig;
+use rapid::fleet::FleetConfig;
+use rapid::metrics::RunResult;
+use rapid::scenario::{Scenario, Study};
+use rapid::sim::{self, SimOptions};
+use rapid::types::Slo;
+use rapid::util::rng::Rng;
+use rapid::workload::{build_trace, sonnet::Sonnet, ArrivalProcess};
+
+fn shipped_config(name: &str) -> ClusterConfig {
+    let path = format!("{}/configs/{name}", env!("CARGO_MANIFEST_DIR"));
+    let text = std::fs::read_to_string(&path).expect("shipped config");
+    ClusterConfig::from_toml(&text).expect("config parses")
+}
+
+fn trace(n: usize, qps: f64, input: u32, output: u32) -> rapid::workload::Trace {
+    let mut ap = ArrivalProcess::poisson(Rng::new(71), qps);
+    let mut sizes = Sonnet::new(Rng::new(72), input, output);
+    build_trace(n, &mut ap, &mut sizes, Slo::paper_default())
+}
+
+fn assert_bit_identical(a: &RunResult, b: &RunResult) {
+    assert_eq!(a.records.len(), b.records.len());
+    for (x, y) in a.records.iter().zip(&b.records) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.prefill_start, y.prefill_start);
+        assert_eq!(x.first_token, y.first_token);
+        assert_eq!(x.finish, y.finish);
+    }
+    assert_eq!(a.decisions, b.decisions, "controller decisions must match");
+    assert_eq!(a.sim_events, b.sim_events);
+    assert_eq!(a.cap_trace.len(), b.cap_trace.len());
+    for ((ta, capsa), (tb, capsb)) in a.cap_trace.iter().zip(&b.cap_trace) {
+        assert_eq!(ta, tb);
+        for (ca, cb) in capsa.iter().zip(capsb) {
+            assert_eq!(ca.to_bits(), cb.to_bits(), "cap targets must be bit-identical");
+        }
+    }
+    assert_eq!(a.node_power.points.len(), b.node_power.points.len());
+    for (pa, pb) in a.node_power.points.iter().zip(&b.node_power.points) {
+        assert_eq!(pa.0, pb.0);
+        assert_eq!(pa.1.to_bits(), pb.1.to_bits(), "power samples must be bit-identical");
+    }
+    assert_eq!(
+        a.mean_provisioned_w.to_bits(),
+        b.mean_provisioned_w.to_bits()
+    );
+}
+
+/// The golden acceptance test: an explicit single-SKU `mi300x` fleet is
+/// the paper's part with the controller's MIN_P/MAX_P envelope, so it
+/// must reproduce the implicit (no-fleet) path bit-for-bit.
+#[test]
+fn single_sku_fleet_bit_identical_on_shipped_configs() {
+    for (file, n, qps, input, output) in [
+        ("rapid-600.toml", 250, 18.0, 4000, 32),
+        ("two-node-4p4d.toml", 250, 24.0, 2048, 64),
+    ] {
+        let implicit = shipped_config(file);
+        assert!(implicit.fleet.is_none(), "{file} must not declare a fleet");
+        let mut explicit = implicit.clone();
+        explicit.fleet = Some(FleetConfig::parse_mix("mi300x:8", &[]).unwrap());
+        explicit.validate().unwrap();
+        let t = trace(n, qps, input, output);
+        let a = sim::run(&implicit, &t, &SimOptions::default());
+        let b = sim::run(&explicit, &t, &SimOptions::default());
+        assert_bit_identical(&a, &b);
+    }
+}
+
+#[test]
+fn hetero_config_runs_with_per_sku_envelopes() {
+    let cfg = shipped_config("hetero-4p4d.toml");
+    let fc = cfg.fleet.as_ref().expect("hetero config declares a fleet");
+    assert!(fc.heterogeneous());
+    // Overload enough that the RAPID controller acts.
+    let t = trace(300, 20.0, 5000, 24);
+    let r = sim::run(&cfg, &t, &SimOptions::default());
+    assert_eq!(r.records.len(), 300, "every request gets a record");
+    // Per-SKU ceilings hold at every cap-trace point: slots 2,3,6,7 are
+    // a100s (max 400 W), slots 4,5 the derated part (max 650 W).
+    for (at, caps) in &r.cap_trace {
+        for (i, &cap) in caps.iter().enumerate() {
+            let max = match i {
+                2 | 3 | 6 | 7 => 400.0,
+                4 | 5 => 650.0,
+                _ => 750.0,
+            };
+            let min = match i {
+                2 | 3 | 6 | 7 => 250.0,
+                _ => 400.0,
+            };
+            assert!(
+                cap <= max + 1e-6 && cap >= min - 1e-6,
+                "t={at} gpu{i}: cap {cap} outside [{min}, {max}]"
+            );
+        }
+    }
+    // The node budget holds on the measured draw.
+    assert!(
+        r.node_power.max() <= cfg.node_budget_w + 10.0,
+        "peak draw {} > budget",
+        r.node_power.max()
+    );
+    // Deterministic under the per-SKU path too.
+    let r2 = sim::run(&cfg, &t, &SimOptions::default());
+    assert_bit_identical(&r, &r2);
+}
+
+#[test]
+fn hetero_mix_scenario_passes_study_checks() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/scenarios/hetero-mix.toml");
+    let mut scenario = Scenario::from_toml_file(path).expect("shipped scenario loads");
+    scenario.requests = 150; // keep the test quick; CI smoke runs it too
+    let study = Study::new(scenario).run(Some(2)).expect("study runs");
+    assert_eq!(study.cells.len(), 10, "5 mixes x 2 rates");
+    let (passed, total) = study.checks_passed();
+    assert_eq!(passed, total, "per-cell invariants hold");
+    let checks = study.study_checks();
+    assert_eq!(
+        checks.len(),
+        4,
+        "2 mixed fleets x 2 rates get a worst-homogeneous comparison"
+    );
+    for c in &checks {
+        assert!(c.pass, "{}: {}", c.what, c.detail);
+    }
+}
+
+#[test]
+fn mixed_fleet_beats_all_worst_fleet_under_same_cap() {
+    // Direct (non-scenario) form of the acceptance ShapeCheck at a
+    // saturating rate: mixed mi300x+a100 vs all-a100, equal GPU count,
+    // same 4800 W node budget.
+    let base = shipped_config("rapid-600.toml");
+    let mut mixed = base.clone();
+    mixed.fleet = Some(FleetConfig::parse_mix("mi300x:2+a100:2+mi300x:2+a100:2", &[]).unwrap());
+    let mut worst = base.clone();
+    worst.fleet = Some(FleetConfig::parse_mix("a100:8", &[]).unwrap());
+    let t = trace(300, 14.0, 3000, 48);
+    let rm = sim::run(&mixed, &t, &SimOptions::default());
+    let rw = sim::run(&worst, &t, &SimOptions::default());
+    assert!(
+        rm.goodput_qps() + 1e-9 >= rw.goodput_qps(),
+        "mixed {} qps must be >= all-worst {} qps",
+        rm.goodput_qps(),
+        rw.goodput_qps()
+    );
+}
