@@ -152,6 +152,24 @@ pub fn run_suite(cfg: &SuiteConfig) -> BenchReport {
         }));
     }
 
+    // --- environment disturbance application -----------------------------
+    if cfg.wants("env/event_apply") {
+        // The work one mid-run EnvEvent does on the power books: a
+        // cluster-budget step (shed across 8 GPUs) plus a thermal
+        // derate/restore. Must stay allocation-free — it runs inside
+        // the DES event loop (see cluster::env::on_env).
+        let mut pm = crate::power::PowerManager::new(&[600.0; 8], 4800.0, true, 400.0, 750.0);
+        let mut t: u64 = 0;
+        let mut low = false;
+        push(bench("env/event_apply", cfg.target_ms, cfg.max_iters, || {
+            t += 1000;
+            low = !low;
+            pm.set_cluster_budget(t, if low { 4000.0 } else { 4800.0 });
+            pm.derate_gpu(t, GpuId(3), if low { 500.0 } else { 750.0 });
+            std::hint::black_box(pm.target(GpuId(3)));
+        }));
+    }
+
     // --- controller tick -----------------------------------------------
     if cfg.wants("controller/decide") {
         let mut ctl = Controller::new(ControllerConfig::default(), ControlPolicy::DynPowerGpu);
@@ -252,6 +270,13 @@ mod tests {
         let rep = run_suite(&tiny("fleet/model_lookup"));
         let t = rep.entry("fleet/model_lookup").expect("fleet entry");
         assert!(t.iters >= 3 && t.per_sec() > 0.0);
+    }
+
+    #[test]
+    fn env_event_apply_case_runs() {
+        let rep = run_suite(&tiny("env/event_apply"));
+        let t = rep.entry("env/event_apply").expect("env entry");
+        assert!(t.iters >= 3 && t.mean_us >= 0.0);
     }
 
     #[test]

@@ -1,0 +1,215 @@
+//! Environment disturbance handling on the cluster core (DESIGN.md §12).
+//!
+//! `Event::Env` entries from the expanded [`crate::env::EnvProfile`]
+//! timeline land here. The split of responsibilities:
+//!
+//! * the **core** applies the mandatory safety work for every policy —
+//!   budget steps shed committed power inside SKU floors immediately,
+//!   failures requeue all queued/in-flight work (prefill re-runs, decode
+//!   items re-fetch their KV over the ring) and re-spread the dead GPU's
+//!   power uniformly (the same DISTRIBUTEUNIFORMPOWER a role move
+//!   triggers), thermal derates clamp the GPU's ceiling;
+//! * the **policy** is then consulted via `on_env_event` — a dynamic
+//!   policy reclaims restored budget immediately
+//!   (`EnvResponse::RedistributeUniform`), the static one by definition
+//!   leaves its caps where the shed put them.
+//!
+//! Failure conservation invariant: no request is ever lost. Queued and
+//! in-flight prefill work re-routes (the prompt must be recomputed —
+//! its KV died with the GPU); decode items keep their generated-token
+//! count and pay a fresh KV transfer to a surviving peer; work with no
+//! surviving peer parks in the orphan pools and re-enters on the next
+//! recovery (or is recorded as an SLO violation at the hard stop).
+
+use crate::env::{CapScope, EnvDisturbance};
+use crate::sim::event::{DecodeItem, Event};
+use crate::sim::worker;
+use crate::types::{GpuId, Role};
+
+use super::policy::EnvResponse;
+use super::Cluster;
+
+impl Cluster {
+    /// Apply environment timeline entry `idx` at the current time.
+    /// Guarded no-ops (failing a dead GPU, recovering a live one,
+    /// clearing an underated ceiling) are dropped entirely: they enter
+    /// neither `env_applied` (which defines the resilience window) nor
+    /// the policy hook.
+    pub(crate) fn on_env(&mut self, idx: usize) {
+        let ev = self.env_timeline[idx];
+        let now = self.now;
+        let applied = match ev.what {
+            EnvDisturbance::CapChange { scope: CapScope::Cluster, watts } => {
+                self.power.set_cluster_budget(now, watts);
+                self.budget_trace.push((now, watts));
+                true
+            }
+            EnvDisturbance::CapChange { scope: CapScope::Node(nd), watts } => {
+                self.power.set_node_budget(now, nd, watts);
+                true
+            }
+            EnvDisturbance::GpuFail { gpu } => {
+                let live = !self.gpus[gpu].failed;
+                if live {
+                    self.fail_gpu(gpu);
+                }
+                live
+            }
+            EnvDisturbance::GpuRecover { gpu } => {
+                let down = self.gpus[gpu].failed;
+                if down {
+                    self.recover_gpu(gpu);
+                }
+                down
+            }
+            EnvDisturbance::ThermalThrottle { gpu, max_w } => {
+                // Applies even to a failed GPU: the thermal envelope is
+                // physical, so a recovery mid-throttle rejoins under the
+                // derated ceiling.
+                self.power.derate_gpu(now, GpuId(gpu), max_w);
+                true
+            }
+            EnvDisturbance::ThermalClear { gpu } => {
+                let derated =
+                    self.power.max_of(GpuId(gpu)) < self.power.rated_max_of(GpuId(gpu));
+                self.power.restore_gpu(now, GpuId(gpu));
+                derated
+            }
+        };
+        if !applied {
+            return;
+        }
+        // Let the policy rebalance immediately instead of waiting for
+        // its next latency window / sampling tick.
+        if self.policy.on_env_event(now, &ev) == EnvResponse::RedistributeUniform {
+            let settle = self.power.distribute_uniform(now);
+            self.events.push(settle, Event::PowerPoll);
+        }
+        if let Some(at) = self.power.next_pending_at() {
+            self.events.push(at, Event::PowerPoll);
+        }
+        self.env_applied.push((now, ev.what.to_string()));
+        self.cap_trace.push((now, self.power.targets()));
+    }
+
+    /// A GPU drops out of the fleet. Epoch-bumps it so in-flight
+    /// completions go stale, requeues everything it held, takes it out
+    /// of the power books, and re-spreads its watts.
+    fn fail_gpu(&mut self, gi: usize) {
+        let node = self.node_of(gi);
+        let mut reqs: Vec<crate::types::Request> = Vec::new();
+        let mut items: Vec<DecodeItem> = Vec::new();
+        {
+            let g = &mut self.gpus[gi];
+            g.failed = true;
+            g.draining_to = None;
+            g.epoch += 1;
+            g.busy = false;
+            // Prefill-side work: queued, batched mid-flight, and
+            // published-but-unsent all lose their (local) KV — the
+            // prompts must be recomputed elsewhere.
+            reqs.extend(g.pf_queue.drain(..));
+            g.pf_queued_tokens = 0;
+            reqs.extend(g.pf_batch.drain(..).map(|(r, _)| r));
+            reqs.extend(g.publish_wait.drain(..).map(|it| it.req));
+            reqs.extend(g.co_queue.drain(..).map(|c| c.prog.request));
+            reqs.extend(g.co_finishing.drain(..).map(|(r, _)| r));
+            // Decode-side work keeps its progress: the KV re-fetches
+            // over the ring to a surviving peer.
+            items.extend(g.dec_pending.drain(..));
+            items.extend(g.dec_active.drain(..));
+        }
+        for r in reqs {
+            self.route_request(r);
+        }
+        for it in items {
+            self.redispatch_decode(gi, node, Some(gi), it);
+        }
+        self.power.set_offline(self.now, GpuId(gi), true);
+        let settle = self.power.distribute_uniform(self.now);
+        self.events.push(settle, Event::PowerPoll);
+        self.record_roles();
+    }
+
+    /// A failed GPU rejoins: back on the power books at its floor, a
+    /// uniform re-spread raises it, stranded orphans re-enter, and (for
+    /// prefill) it steals half the deepest peer queue so convergence
+    /// does not wait for new arrivals.
+    fn recover_gpu(&mut self, gi: usize) {
+        {
+            let g = &mut self.gpus[gi];
+            g.failed = false;
+            g.epoch += 1;
+            g.busy = false;
+        }
+        self.power.set_offline(self.now, GpuId(gi), false);
+        let settle = self.power.distribute_uniform(self.now);
+        self.events.push(settle, Event::PowerPoll);
+        self.record_roles();
+        let reqs = std::mem::take(&mut self.orphan_reqs);
+        for r in reqs {
+            self.route_request(r);
+        }
+        let node = self.node_of(gi);
+        let items = std::mem::take(&mut self.orphan_items);
+        for it in items {
+            self.redispatch_decode(gi, node, None, it);
+        }
+        let role = self.gpus[gi].role;
+        worker::behavior(role).kick(self, gi);
+        if role == Role::Prefill {
+            self.steal_prefill_work(gi);
+        }
+        // Publishers stalled while every decode worker was down retry.
+        for i in 0..self.gpus.len() {
+            if !self.gpus[i].publish_wait.is_empty() {
+                self.try_publish(i);
+                self.kick_prefill(i);
+            }
+        }
+    }
+
+    /// Send a decode item (whose KV lives on `via`'s node ring) to a
+    /// surviving worker, paying the KV re-transfer; parks it in the
+    /// orphan pool when no worker survives.
+    pub(crate) fn redispatch_decode(
+        &mut self,
+        via: usize,
+        src_node: usize,
+        exclude: Option<usize>,
+        item: DecodeItem,
+    ) {
+        let target = match self.cfg.topology {
+            crate::config::Topology::Coalesced => self.pick_coalesced_gpu(exclude),
+            crate::config::Topology::Disaggregated { .. } => {
+                self.pick_decode_gpu(exclude, src_node)
+            }
+        };
+        let Some(target) = target else {
+            self.orphan_items.push(item);
+            return;
+        };
+        let same_node = self.node_of(target.0) == src_node;
+        // The re-fetch moves the *live* context — prompt plus generated
+        // tokens — not just the original prompt KV.
+        let t = self
+            .fleet
+            .kv_transfer_time_between(via, target.0, item.ctx_tokens(), same_node);
+        self.ring_used[src_node] += 1; // the re-transfer occupies a slot
+        self.events.push(
+            self.now + t,
+            Event::KvArrive { gpu: target.0, src_node, item },
+        );
+    }
+
+    /// Least-loaded accepting coalesced worker (failure re-dispatch on
+    /// the coalesced topology), via the reused routing scratch and the
+    /// same load view `route_coalesced` ranks by.
+    fn pick_coalesced_gpu(&mut self, exclude: Option<usize>) -> Option<GpuId> {
+        let mut loads = std::mem::take(&mut self.scratch_loads);
+        self.fill_coalesced_loads(exclude, &mut loads);
+        let pick = crate::coordinator::router::pick_decode(&loads);
+        self.scratch_loads = loads;
+        pick
+    }
+}

@@ -20,11 +20,13 @@
 //! behind [`policy::Policy`]. The public entry point remains
 //! [`crate::sim::run`].
 
+pub mod env;
 pub mod policy;
 
 use crate::config::ClusterConfig;
 use crate::coordinator::router::{self, WorkerLoad};
 use crate::coordinator::{Action, Snapshot};
+use crate::env::EnvEvent;
 use crate::fleet::Fleet;
 use crate::metrics::RunResult;
 use crate::power::{PowerManager, PowerModel};
@@ -56,12 +58,23 @@ pub struct Cluster {
     /// decode on that node's ring).
     pub(crate) ring_used: Vec<usize>,
     pub(crate) opts: SimOptions,
+    /// Expanded environment disturbance timeline (empty = undisturbed;
+    /// see `crate::env` and `cluster::env`).
+    pub(crate) env_timeline: Vec<EnvEvent>,
+    /// Disturbances actually applied: (t, label) for RunResult.
+    pub(crate) env_applied: Vec<(Micros, String)>,
+    /// Cluster-budget steps: (t, new budget).
+    pub(crate) budget_trace: Vec<(Micros, f64)>,
+    /// Work stranded when every eligible GPU was down; re-routed on the
+    /// next recovery (or recorded as violations at the hard stop).
+    pub(crate) orphan_reqs: Vec<Request>,
+    pub(crate) orphan_items: Vec<DecodeItem>,
     // --- result accumulation ---
     cluster_power: TimeSeries,
     node_power: Vec<TimeSeries>,
-    cap_trace: Vec<(Micros, Vec<f64>)>,
+    pub(crate) cap_trace: Vec<(Micros, Vec<f64>)>,
     role_trace: Vec<(Micros, usize, usize)>,
-    decisions: Vec<(Micros, String)>,
+    pub(crate) decisions: Vec<(Micros, String)>,
     provisioned_integral: f64,
     last_sample_at: Micros,
     hard_stop: Micros,
@@ -109,6 +122,7 @@ impl Cluster {
             .unwrap_or(0)
             + opts.drain_grace;
         let n_requests = trace.requests.len();
+        let env_timeline = cfg.env.expand(total, cfg.cluster_budget(), hard_stop);
         Cluster {
             fleet,
             power,
@@ -120,6 +134,11 @@ impl Cluster {
             next_arrival: 0,
             records: Vec::with_capacity(n_requests),
             ring_used: vec![0; cfg.n_nodes],
+            env_timeline,
+            env_applied: Vec::new(),
+            budget_trace: Vec::new(),
+            orphan_reqs: Vec::new(),
+            orphan_items: Vec::new(),
             cluster_power: TimeSeries::new(),
             node_power: (0..cfg.n_nodes).map(|_| TimeSeries::new()).collect(),
             cap_trace: Vec::new(),
@@ -144,6 +163,14 @@ impl Cluster {
             self.events.push(self.trace[0].arrival, Event::Arrival);
         }
         self.events.push(self.cfg.controller.tick, Event::ControllerTick);
+        // Env events enqueue before the first Sample so that at equal
+        // timestamps a disturbance always applies before telemetry (and
+        // before any controller tick pushed later): every cap-trace
+        // point reflects the budget in force at its instant.
+        for i in 0..self.env_timeline.len() {
+            let at = self.env_timeline[i].at;
+            self.events.push(at, Event::Env { idx: i });
+        }
         self.events.push(0, Event::Sample);
         self.record_roles();
 
@@ -187,7 +214,7 @@ impl Cluster {
     fn fill_prefill_loads(&self, out: &mut Vec<WorkerLoad>) {
         out.clear();
         for (i, g) in self.gpus.iter().enumerate() {
-            if g.role == Role::Prefill {
+            if g.role == Role::Prefill && !g.failed {
                 out.push(WorkerLoad {
                     gpu: GpuId(i),
                     node: self.node_of(i),
@@ -205,7 +232,7 @@ impl Cluster {
     fn fill_decode_loads(&self, exclude: Option<usize>, out: &mut Vec<WorkerLoad>) {
         out.clear();
         for (i, g) in self.gpus.iter().enumerate() {
-            if g.role == Role::Decode && Some(i) != exclude {
+            if g.role == Role::Decode && !g.failed && Some(i) != exclude {
                 out.push(WorkerLoad {
                     gpu: GpuId(i),
                     node: self.node_of(i),
@@ -278,6 +305,7 @@ impl Cluster {
             Event::PowerPoll => self.on_power_poll(),
             Event::Sample => self.on_sample(),
             Event::DrainDone { gpu, epoch } => self.on_drain_done(gpu, epoch),
+            Event::Env { idx } => self.on_env(idx),
         }
     }
 
@@ -288,6 +316,11 @@ impl Cluster {
             self.events
                 .push(self.trace[self.next_arrival].arrival, Event::Arrival);
         }
+        self.route_request(req);
+    }
+
+    /// Route by topology (arrivals, failure requeues, orphan re-entry).
+    pub(crate) fn route_request(&mut self, req: Request) {
         match self.cfg.topology {
             crate::config::Topology::Coalesced => self.route_coalesced(req),
             crate::config::Topology::Disaggregated { .. } => self.route_prefill(req),
@@ -298,37 +331,53 @@ impl Cluster {
     /// node (paper §3.2's central scheduler, now cluster-wide).
     pub(crate) fn route_prefill(&mut self, req: Request) {
         let Some(gpu) = self.pick_prefill_gpu() else {
-            // No accepting prefill GPU (all draining): park on the one with
-            // the committed prefill role; it will pick the work up after
-            // the drain. This cannot happen with >= 1 GPU per phase.
+            // No accepting prefill GPU (all draining): park on one with
+            // the committed prefill role; it picks the work up after the
+            // drain. With failures in play even that can be empty — then
+            // the request waits in the orphan pool for a recovery.
             let fallback = self
                 .gpus
                 .iter()
-                .position(|g| g.committed_role() == Role::Prefill)
-                .expect("at least one prefill-committed GPU");
-            self.gpus[fallback].push_prefill(req);
+                .position(|g| !g.failed && g.committed_role() == Role::Prefill);
+            match fallback {
+                Some(i) => self.gpus[i].push_prefill(req),
+                None => self.orphan_reqs.push(req),
+            }
             return;
         };
         self.gpus[gpu.0].push_prefill(req);
         self.kick_prefill(gpu.0);
     }
 
+    /// Router view of every live coalesced worker, into a caller-owned
+    /// buffer — shared by arrival routing and the failure re-dispatch
+    /// path so both rank workers identically.
+    pub(crate) fn fill_coalesced_loads(&self, exclude: Option<usize>, out: &mut Vec<WorkerLoad>) {
+        out.clear();
+        for (i, g) in self.gpus.iter().enumerate() {
+            if g.role == Role::Coalesced && !g.failed && Some(i) != exclude {
+                out.push(WorkerLoad {
+                    gpu: GpuId(i),
+                    node: self.node_of(i),
+                    queued_tokens: g.co_queued_tokens(),
+                    requests: g.co_queue.len() + g.dec_active.len(),
+                    accepting: g.accepting(),
+                    perf_scale: self.fleet.prefill_scale(i),
+                });
+            }
+        }
+    }
+
     fn route_coalesced(&mut self, req: Request) {
         let mut loads = std::mem::take(&mut self.scratch_loads);
-        loads.clear();
-        for (i, g) in self.gpus.iter().enumerate() {
-            loads.push(WorkerLoad {
-                gpu: GpuId(i),
-                node: self.node_of(i),
-                queued_tokens: g.co_queued_tokens(),
-                requests: g.co_queue.len() + g.dec_active.len(),
-                accepting: g.accepting(),
-                perf_scale: self.fleet.prefill_scale(i),
-            });
-        }
+        self.fill_coalesced_loads(None, &mut loads);
         let pick = router::pick_prefill(&loads);
         self.scratch_loads = loads;
-        let gpu = pick.expect("coalesced pool nonempty");
+        let Some(gpu) = pick else {
+            // Every coalesced GPU is down or draining: wait for recovery.
+            self.orphan_reqs.push(req);
+            return;
+        };
         self.gpus[gpu.0].co_queue.push_back(crate::sim::gpu::ChunkMeta {
             prog: crate::coordinator::batcher::ChunkProgress::new(req),
             started: None,
@@ -354,6 +403,9 @@ impl Cluster {
             // loop allocation-free — no samples buffer.
             let now = self.now;
             for (i, g) in self.gpus.iter().enumerate() {
+                if g.failed {
+                    continue;
+                }
                 let (head, backlog_tokens) = match g.role {
                     Role::Coalesced => (
                         g.co_queue.front().map(|c| c.prog.request),
@@ -415,6 +467,9 @@ impl Cluster {
         let mut d_all_at_min = true;
         let mut d_all_at_ceiling = true;
         for (i, g) in self.gpus.iter().enumerate() {
+            if g.failed {
+                continue;
+            }
             prefill_queue += g.pf_queue.len() + g.co_queue.len();
             decode_queue += g.dec_pending.len();
             match g.committed_role() {
@@ -634,7 +689,7 @@ impl Cluster {
 
     fn steal_prefill_work(&mut self, gi: usize) {
         let Some(victim) = (0..self.gpus.len())
-            .filter(|&i| i != gi && self.gpus[i].role == Role::Prefill)
+            .filter(|&i| i != gi && self.gpus[i].role == Role::Prefill && !self.gpus[i].failed)
             .max_by_key(|&i| self.gpus[i].pf_queued_tokens)
         else {
             return;
@@ -671,6 +726,9 @@ impl Cluster {
         per_node.clear();
         per_node.resize(self.cfg.n_nodes, 0.0);
         for (i, g) in self.gpus.iter().enumerate() {
+            if g.failed {
+                continue; // down: draws nothing, meters read nothing
+            }
             let cap = self.power.effective(GpuId(i), now);
             let is_prefill_like = matches!(g.role, Role::Prefill | Role::Coalesced);
             let model = self.fleet.model(i);
@@ -704,12 +762,12 @@ impl Cluster {
         let p = self
             .gpus
             .iter()
-            .filter(|g| g.committed_role() == Role::Prefill)
+            .filter(|g| !g.failed && g.committed_role() == Role::Prefill)
             .count();
         let d = self
             .gpus
             .iter()
-            .filter(|g| g.committed_role() == Role::Decode)
+            .filter(|g| !g.failed && g.committed_role() == Role::Decode)
             .count();
         self.role_trace.push((self.now, p, d));
     }
@@ -739,6 +797,16 @@ impl Cluster {
                 });
             }
         }
+        // Resilience aggregates span the first to the last disturbance
+        // actually applied (None when the run was undisturbed).
+        let window = self
+            .env_applied
+            .first()
+            .map(|e| e.0)
+            .zip(self.env_applied.last().map(|e| e.0));
+        let resilience = window.map(|(first, last)| {
+            crate::metrics::compute_resilience(&self.records, first, last, duration)
+        });
         let mut result = RunResult {
             config_name: self.cfg.name.clone(),
             records: self.records,
@@ -750,6 +818,9 @@ impl Cluster {
             duration,
             mean_provisioned_w,
             sim_events: self.events_handled,
+            env_events: self.env_applied,
+            budget_trace: self.budget_trace,
+            resilience,
             summary_cache: None,
         };
         // Aggregate once here so emitters/figure drivers never re-scan

@@ -15,8 +15,22 @@
 
 use crate::config::{ClusterConfig, ControlPolicy, ControllerConfig};
 use crate::coordinator::{Action, Controller, Snapshot};
+use crate::env::{EnvDisturbance, EnvEvent};
 use crate::types::{Micros, Role};
 use crate::util::stats::SlidingWindow;
+
+/// What a policy asks the cluster core to do right after an environment
+/// disturbance lands (in addition to the core's own failure handling).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EnvResponse {
+    /// Do nothing now; react through the normal decision ticks (or not
+    /// at all — the static stance).
+    None,
+    /// Re-spread power uniformly under the new budgets/envelopes
+    /// immediately (lower-first, raise-later), instead of waiting for a
+    /// latency window to fill.
+    RedistributeUniform,
+}
 
 /// How a `MovePower` action splits watts inside its source/sink pools.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -49,6 +63,17 @@ pub trait Policy: std::fmt::Debug + Send {
     /// fleets without further changes; override to `Uniform` to ablate.
     fn power_weighting(&self) -> PowerWeighting {
         PowerWeighting::MarginalTps
+    }
+    /// An environment disturbance just landed (cap step, GPU
+    /// failure/recovery, thermal derate — see [`crate::env`]). The core
+    /// has already applied the mandatory safety work (budget shedding,
+    /// failure requeue + uniform re-spread); the hook lets a *dynamic*
+    /// policy additionally rebalance immediately instead of waiting for
+    /// its sampling tick. The static default does nothing — cap
+    /// restoration after a curtailment window is a reallocation
+    /// decision, which a static policy by definition never takes.
+    fn on_env_event(&mut self, _now: Micros, _ev: &EnvEvent) -> EnvResponse {
+        EnvResponse::None
     }
     /// One decision tick.
     fn decide(&mut self, snap: &Snapshot) -> Option<Action>;
@@ -113,8 +138,25 @@ impl Policy for RapidDynamic {
     fn observe_tpot(&mut self, now: Micros, ratio: f64) {
         self.controller.observe_tpot(now, ratio);
     }
+    fn on_env_event(&mut self, _now: Micros, ev: &EnvEvent) -> EnvResponse {
+        dynamic_env_response(ev)
+    }
     fn decide(&mut self, snap: &Snapshot) -> Option<Action> {
         self.controller.decide(snap)
+    }
+}
+
+/// The shared dynamic stance: budget steps and thermal events re-spread
+/// power under the new constraints immediately (a raised budget is
+/// reclaimed the instant curtailment ends); failures/recoveries return
+/// `None` because the cluster core already redistributes as part of its
+/// mandatory failure handling.
+fn dynamic_env_response(ev: &EnvEvent) -> EnvResponse {
+    match ev.what {
+        EnvDisturbance::CapChange { .. }
+        | EnvDisturbance::ThermalThrottle { .. }
+        | EnvDisturbance::ThermalClear { .. } => EnvResponse::RedistributeUniform,
+        EnvDisturbance::GpuFail { .. } | EnvDisturbance::GpuRecover { .. } => EnvResponse::None,
     }
 }
 
@@ -158,6 +200,9 @@ impl Policy for PowerOnly {
     }
     fn observe_tpot(&mut self, now: Micros, ratio: f64) {
         self.tpot.push(now, ratio);
+    }
+    fn on_env_event(&mut self, _now: Micros, ev: &EnvEvent) -> EnvResponse {
+        dynamic_env_response(ev)
     }
     fn decide(&mut self, snap: &Snapshot) -> Option<Action> {
         if !self.cooled_down(snap.now) {
@@ -267,6 +312,28 @@ mod tests {
             p.observe_ttft(later - i, 1.6);
         }
         assert!(p.decide(&snap(later)).is_some());
+    }
+
+    #[test]
+    fn env_hook_static_stays_put_dynamic_redistributes() {
+        use crate::env::{CapScope, EnvDisturbance, EnvEvent};
+        let cap = EnvEvent {
+            at: 10 * SECOND,
+            what: EnvDisturbance::CapChange { scope: CapScope::Cluster, watts: 4000.0 },
+        };
+        let fail = EnvEvent { at: 10 * SECOND, what: EnvDisturbance::GpuFail { gpu: 3 } };
+        let throttle = EnvEvent {
+            at: 10 * SECOND,
+            what: EnvDisturbance::ThermalThrottle { gpu: 1, max_w: 500.0 },
+        };
+        let mut st = StaticPolicy;
+        assert_eq!(st.on_env_event(0, &cap), EnvResponse::None);
+        let mut r = RapidDynamic::new(ControllerConfig::default(), ControlPolicy::DynPowerGpu);
+        assert_eq!(r.on_env_event(0, &cap), EnvResponse::RedistributeUniform);
+        assert_eq!(r.on_env_event(0, &throttle), EnvResponse::RedistributeUniform);
+        assert_eq!(r.on_env_event(0, &fail), EnvResponse::None, "core owns failure handling");
+        let mut p = PowerOnly::new(ControllerConfig::default());
+        assert_eq!(p.on_env_event(0, &cap), EnvResponse::RedistributeUniform);
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! preset names as a starting point (`preset = "4p4d-600"`).
 
 use crate::config::toml::{Document, Value};
+use crate::env::EnvProfile;
 use crate::fleet::{skus, FleetConfig, GpuSku};
 use crate::types::{Micros, Watts, MILLIS, SECOND};
 
@@ -256,6 +257,9 @@ pub struct ClusterConfig {
     /// `None` means one implicit SKU built from `perf` and the
     /// controller envelope — the paper's homogeneous testbed.
     pub fleet: Option<FleetConfig>,
+    /// Timed operational disturbances (DESIGN.md §12). Empty (the
+    /// default) injects nothing and is bit-identical to pre-env code.
+    pub env: EnvProfile,
 }
 
 impl Default for ClusterConfig {
@@ -384,6 +388,16 @@ impl ClusterConfig {
         if self.batch.ring_slots == 0 || self.batch.max_prefill_reqs == 0 {
             return err("batch limits must be positive".into());
         }
+        self.env
+            .validate(
+                self.total_gpus(),
+                self.n_nodes,
+                self.enforce_budget,
+                self.cap_floor_per_node() * self.n_nodes as f64,
+                self.cap_floor_per_node(),
+                self.cluster_budget(),
+            )
+            .map_err(ConfigError::Invalid)?;
         Ok(())
     }
 
@@ -523,6 +537,12 @@ const KNOWN_TABLES: &[(&str, &[&str])] = &[
         "batch",
         &["max_prefill_tokens", "max_prefill_reqs", "max_decode_reqs", "ring_slots"],
     ),
+    (
+        "env",
+        &["cluster_cap", "node_cap", "fail", "recover", "throttle", "clear"],
+    ),
+    ("env.curtailment", &["period_s", "duty", "budget_frac", "start_s"]),
+    ("env.faults", &["mtbf_s", "mttr_s", "seed", "max_failures"]),
 ];
 
 /// Fields a `[sku.<name>]` table accepts: the power envelope plus every
@@ -765,6 +785,10 @@ fn apply_overrides(cfg: &mut ClusterConfig, doc: &Document) -> Result<(), Config
     if let Some(v) = doc.get_i64("batch.ring_slots") {
         b.ring_slots = v as usize;
     }
+    // Environment disturbances: `[env]` tables (DESIGN.md §12).
+    if let Some(profile) = EnvProfile::from_doc(doc).map_err(ConfigError::Invalid)? {
+        cfg.env = profile;
+    }
     // Fleet mix: `[sku.<name>]` tables resolve first, then the ordered
     // `cluster.skus = ["name:count", ...]` mix references them (plus the
     // built-in catalog).
@@ -841,6 +865,7 @@ pub mod presets {
             perf: PerfModelConfig::default(),
             batch: BatchConfig::default(),
             fleet: None,
+            env: EnvProfile::default(),
         }
     }
 
@@ -1242,6 +1267,41 @@ idle_w = 120
         assert!(err.to_string().contains("declares no mix"), "{err}");
         let err = ClusterConfig::from_toml("[cluster]\nskus = [\"nope:8\"]").unwrap_err();
         assert!(err.to_string().contains("unknown sku 'nope'"), "{err}");
+    }
+
+    #[test]
+    fn env_tables_round_trip_and_validate() {
+        let cfg = ClusterConfig::from_toml(
+            r#"
+preset = "rapid-600"
+[env]
+cluster_cap = ["10:4000", "25:4800"]
+fail = ["8:5"]
+recover = ["20:5"]
+[env.curtailment]
+period_s = 30
+duty = 0.5
+budget_frac = 0.75
+start_s = 10
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.env.events.len(), 4);
+        assert!(cfg.env.curtailment.is_some());
+        assert!(!cfg.env.is_empty());
+        // Unknown env key rejected with the table named.
+        let err = ClusterConfig::from_toml("[env]\nfial = [\"8:5\"]").unwrap_err();
+        assert!(err.to_string().contains("fial"), "{err}");
+        // A curtailed budget below the fleet cap floor is structural.
+        let err = ClusterConfig::from_toml(
+            "preset = \"rapid-600\"\n[env.curtailment]\nperiod_s = 30\nbudget_frac = 0.5",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("cap floor"), "{err}");
+        // A GPU index beyond the cluster is structural too.
+        let err =
+            ClusterConfig::from_toml("preset = \"rapid-600\"\n[env]\nfail = [\"8:9\"]").unwrap_err();
+        assert!(err.to_string().contains("gpu 9"), "{err}");
     }
 
     #[test]

@@ -224,6 +224,40 @@ mod tests {
     }
 
     #[test]
+    fn perf_scale_exact_ties_break_by_requests_then_id() {
+        // Normalized prefill backlogs tie exactly (4000/2.0 == 2000/1.0):
+        // the raw request count breaks the tie...
+        let deep_fast = scaled_load(5, 4000, 3, true, 2.0);
+        let shallow_slow = scaled_load(1, 2000, 1, true, 1.0);
+        assert_eq!(pick_prefill(&[deep_fast, shallow_slow]), Some(GpuId(1)));
+        // ...and with requests tied too, the lowest GPU id wins, so the
+        // pick is deterministic regardless of scale combinations.
+        let full_tie = scaled_load(7, 4000, 1, true, 2.0);
+        assert_eq!(pick_prefill(&[full_tie, shallow_slow]), Some(GpuId(1)));
+        assert_eq!(pick_prefill(&[shallow_slow, full_tie]), Some(GpuId(1)), "order-free");
+        // Decode: normalized occupancy ties (8/2.0 == 4/1.0) break by
+        // queued tokens, then id.
+        let busy_fast = scaled_load(2, 5, 8, true, 2.0);
+        let calm_slow = scaled_load(4, 0, 4, true, 1.0);
+        assert_eq!(pick_decode(&[busy_fast, calm_slow]), Some(GpuId(4)));
+        let token_tie = scaled_load(6, 0, 8, true, 2.0);
+        assert_eq!(pick_decode(&[token_tie, calm_slow]), Some(GpuId(4)), "id breaks full tie");
+    }
+
+    #[test]
+    fn perf_scale_tiny_and_fractional_scales_stay_finite_and_ordered() {
+        // A severely derated part (scale 0.25) holding a small queue
+        // still loses to a healthy empty one; zero-queue entries compare
+        // equal across any scale (0/s == 0.0) and fall to the id tie.
+        let derated = scaled_load(3, 100, 0, true, 0.25);
+        let healthy = scaled_load(5, 0, 0, true, 1.0);
+        assert_eq!(pick_prefill(&[derated, healthy]), Some(GpuId(5)));
+        let idle_a = scaled_load(9, 0, 0, true, 0.25);
+        let idle_b = scaled_load(4, 0, 0, true, 2.0);
+        assert_eq!(pick_prefill(&[idle_a, idle_b]), Some(GpuId(4)));
+    }
+
+    #[test]
     fn locality_slack_compares_normalized_loads() {
         // Local worker (node 0) is a slow part: 6 raw / 0.5 = 12
         // normalized, more than slack above the remote's 1 — pay the hop.

@@ -1,0 +1,657 @@
+//! Environment subsystem: timed operational disturbances for the DES
+//! (DESIGN.md §12).
+//!
+//! RAPID's claim is that *dynamic* reallocation sustains goodput "within
+//! strict power caps" — which is only testable when the caps, the fleet
+//! and the thermal envelopes actually move mid-run. This module owns the
+//! disturbance model:
+//!
+//! * [`EnvEvent`] — one timed disturbance: a cluster/node budget step
+//!   (grid curtailment), a GPU failure/recovery (fleet churn), or a
+//!   thermal derate/clear (a GPU's max-power ceiling temporarily drops);
+//! * [`EnvProfile`] — a declarative timeline: hand-written events plus
+//!   two deterministic generators (periodic [`Curtailment`] windows and
+//!   a Poisson [`FaultProcess`] with MTTR), expanded seed-reproducibly
+//!   by [`EnvProfile::expand`];
+//! * TOML surfaces — `[env]` tables in config files
+//!   ([`EnvProfile::from_doc`]) and the compact `env` scenario axis
+//!   grammar ([`EnvProfile::parse_compact`], e.g.
+//!   `"curtail:30:0.5:0.75:10"` or `"fail:8:5+recover:20:5"`).
+//!
+//! The cluster core injects expanded events into its event heap
+//! (`sim::event::Event::Env`); the power manager sheds/derates inside
+//! SKU floors and ceilings; every [`crate::cluster::policy::Policy`]
+//! sees the disturbance through `on_env_event` so dynamic controllers
+//! can rebalance immediately instead of waiting for a latency window to
+//! fill. With an empty profile nothing is injected and the simulation
+//! is bit-identical to the pre-env code.
+
+use std::fmt;
+
+use crate::config::toml::Document;
+use crate::types::{Micros, Watts, SECOND};
+use crate::util::rng::Rng;
+
+/// Which budget level a [`EnvDisturbance::CapChange`] steps.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CapScope {
+    /// The facility-level cluster budget.
+    Cluster,
+    /// One node's budget.
+    Node(usize),
+}
+
+/// One kind of operational disturbance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EnvDisturbance {
+    /// The budget at `scope` steps to `watts` (curtailment drop or
+    /// restore). Decreases shed caps immediately; increases free
+    /// headroom but raise nothing by themselves.
+    CapChange { scope: CapScope, watts: Watts },
+    /// GPU `gpu` (cluster-global index) leaves the fleet: queued and
+    /// in-flight prefill work re-runs elsewhere, decode items re-fetch
+    /// their KV over the ring, the GPU stops drawing and counting
+    /// toward any budget.
+    GpuFail { gpu: usize },
+    /// The failed GPU rejoins at its cap floor; power re-spreads.
+    GpuRecover { gpu: usize },
+    /// Thermal derating: the GPU's max-power ceiling drops to `max_w`
+    /// (clamped into its SKU envelope) until cleared.
+    ThermalThrottle { gpu: usize, max_w: Watts },
+    /// Thermal derating ends: the rated ceiling is restored (the cap
+    /// itself stays put until a policy raises it).
+    ThermalClear { gpu: usize },
+}
+
+impl fmt::Display for EnvDisturbance {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EnvDisturbance::CapChange { scope: CapScope::Cluster, watts } => {
+                write!(f, "cluster-cap -> {watts:.0} W")
+            }
+            EnvDisturbance::CapChange { scope: CapScope::Node(nd), watts } => {
+                write!(f, "node{nd}-cap -> {watts:.0} W")
+            }
+            EnvDisturbance::GpuFail { gpu } => write!(f, "gpu{gpu} FAIL"),
+            EnvDisturbance::GpuRecover { gpu } => write!(f, "gpu{gpu} RECOVER"),
+            EnvDisturbance::ThermalThrottle { gpu, max_w } => {
+                write!(f, "gpu{gpu} throttle -> {max_w:.0} W")
+            }
+            EnvDisturbance::ThermalClear { gpu } => write!(f, "gpu{gpu} thermal clear"),
+        }
+    }
+}
+
+/// A disturbance pinned to a simulation time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnvEvent {
+    pub at: Micros,
+    pub what: EnvDisturbance,
+}
+
+/// Periodic grid-curtailment windows: starting at `start`, every
+/// `period` the cluster budget drops to `budget_frac` of its base value
+/// for `duty * period`, then restores.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Curtailment {
+    pub period: Micros,
+    /// Fraction of each period spent curtailed, in (0, 1).
+    pub duty: f64,
+    /// Cluster budget multiplier while curtailed, in (0, 1].
+    pub budget_frac: f64,
+    /// Offset of the first window.
+    pub start: Micros,
+}
+
+/// Fleet-level Poisson failure process: failures arrive with mean
+/// inter-arrival `mtbf`, each takes a uniformly-drawn currently-up GPU
+/// down for `mttr`. Fully determined by `seed`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultProcess {
+    pub mtbf: Micros,
+    pub mttr: Micros,
+    pub seed: u64,
+    /// Hard cap on injected failures (runaway guard).
+    pub max_failures: usize,
+}
+
+/// A declarative disturbance timeline: explicit events plus generators.
+/// The default (empty) profile injects nothing.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EnvProfile {
+    /// Hand-written events (absolute times).
+    pub events: Vec<EnvEvent>,
+    pub curtailment: Option<Curtailment>,
+    pub faults: Option<FaultProcess>,
+}
+
+fn parse_secs(s: &str) -> Result<Micros, String> {
+    s.trim()
+        .parse::<f64>()
+        .ok()
+        .filter(|v| *v >= 0.0 && v.is_finite())
+        .map(|v| (v * SECOND as f64) as Micros)
+        .ok_or_else(|| format!("'{s}' is not a non-negative time in seconds"))
+}
+
+fn parse_watts(s: &str) -> Result<Watts, String> {
+    s.trim()
+        .parse::<f64>()
+        .ok()
+        .filter(|v| *v > 0.0 && v.is_finite())
+        .ok_or_else(|| format!("'{s}' is not a positive wattage"))
+}
+
+fn parse_index(s: &str, what: &str) -> Result<usize, String> {
+    s.trim()
+        .parse::<usize>()
+        .map_err(|_| format!("'{s}' is not a valid {what} index"))
+}
+
+/// Entry kinds an `[env]` table's string arrays accept.
+const EVENT_KINDS: &[&str] = &["cluster_cap", "node_cap", "fail", "recover", "throttle", "clear"];
+
+fn parse_event(kind: &str, entry: &str) -> Result<EnvEvent, String> {
+    let err = |msg: &str| format!("env.{kind} entry '{entry}': {msg}");
+    let parts: Vec<&str> = entry.split(':').collect();
+    let need = |n: usize, shape: &str| {
+        if parts.len() == n {
+            Ok(())
+        } else {
+            Err(err(&format!("expected '{shape}'")))
+        }
+    };
+    let what = match kind {
+        "cluster_cap" => {
+            need(2, "t_s:watts")?;
+            EnvDisturbance::CapChange {
+                scope: CapScope::Cluster,
+                watts: parse_watts(parts[1]).map_err(|e| err(&e))?,
+            }
+        }
+        "node_cap" => {
+            need(3, "t_s:node:watts")?;
+            EnvDisturbance::CapChange {
+                scope: CapScope::Node(parse_index(parts[1], "node").map_err(|e| err(&e))?),
+                watts: parse_watts(parts[2]).map_err(|e| err(&e))?,
+            }
+        }
+        "fail" => {
+            need(2, "t_s:gpu")?;
+            EnvDisturbance::GpuFail { gpu: parse_index(parts[1], "gpu").map_err(|e| err(&e))? }
+        }
+        "recover" => {
+            need(2, "t_s:gpu")?;
+            EnvDisturbance::GpuRecover { gpu: parse_index(parts[1], "gpu").map_err(|e| err(&e))? }
+        }
+        "throttle" => {
+            need(3, "t_s:gpu:max_w")?;
+            EnvDisturbance::ThermalThrottle {
+                gpu: parse_index(parts[1], "gpu").map_err(|e| err(&e))?,
+                max_w: parse_watts(parts[2]).map_err(|e| err(&e))?,
+            }
+        }
+        "clear" => {
+            need(2, "t_s:gpu")?;
+            EnvDisturbance::ThermalClear { gpu: parse_index(parts[1], "gpu").map_err(|e| err(&e))? }
+        }
+        other => return Err(format!("unknown env event kind '{other}'")),
+    };
+    Ok(EnvEvent { at: parse_secs(parts[0]).map_err(|e| err(&e))?, what })
+}
+
+impl EnvProfile {
+    /// Nothing to inject?
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty() && self.curtailment.is_none() && self.faults.is_none()
+    }
+
+    /// Parse the `[env]` tables of a config document. Returns `None`
+    /// when the document declares no environment at all.
+    pub fn from_doc(doc: &Document) -> Result<Option<EnvProfile>, String> {
+        let mut p = EnvProfile::default();
+        let mut any = false;
+        for &kind in EVENT_KINDS {
+            let path = format!("env.{kind}");
+            match doc.get(&path) {
+                None => {}
+                Some(v) => {
+                    let values = v
+                        .as_array()
+                        .ok_or_else(|| format!("{path} must be an array of event strings"))?;
+                    any = true;
+                    for v in values {
+                        let s = v
+                            .as_str()
+                            .ok_or_else(|| format!("{path} entries must be strings"))?;
+                        p.events.push(parse_event(kind, s)?);
+                    }
+                }
+            }
+        }
+        let secs = |v: f64| (v.max(0.0) * SECOND as f64) as Micros;
+        if let Some(period_s) = doc.get_f64("env.curtailment.period_s") {
+            any = true;
+            p.curtailment = Some(Curtailment {
+                period: secs(period_s),
+                duty: doc.get_f64("env.curtailment.duty").unwrap_or(0.5),
+                budget_frac: doc.get_f64("env.curtailment.budget_frac").unwrap_or(0.75),
+                start: secs(doc.get_f64("env.curtailment.start_s").unwrap_or(0.0)),
+            });
+        } else if doc.keys_under("env.curtailment").next().is_some() {
+            return Err("env.curtailment needs period_s".into());
+        }
+        match (doc.get_f64("env.faults.mtbf_s"), doc.get_f64("env.faults.mttr_s")) {
+            (Some(mtbf_s), Some(mttr_s)) => {
+                any = true;
+                p.faults = Some(FaultProcess {
+                    mtbf: secs(mtbf_s),
+                    mttr: secs(mttr_s),
+                    seed: doc.get_i64("env.faults.seed").unwrap_or(1) as u64,
+                    max_failures: doc.get_i64("env.faults.max_failures").unwrap_or(32) as usize,
+                });
+            }
+            (None, None) => {
+                if doc.keys_under("env.faults").next().is_some() {
+                    return Err("env.faults needs mtbf_s and mttr_s".into());
+                }
+            }
+            _ => return Err("env.faults needs both mtbf_s and mttr_s".into()),
+        }
+        Ok(if any { Some(p) } else { None })
+    }
+
+    /// Parse the compact one-string grammar the scenario `env` axis
+    /// uses: `+`-joined atoms, e.g.
+    /// `"curtail:30:0.5:0.75:10"`, `"faults:25:10:7:4"`,
+    /// `"fail:8:5+recover:20:5"`, `"cap:10:4000"`,
+    /// `"throttle:12:1:500+clear:40:1"`, or `"none"`.
+    pub fn parse_compact(s: &str) -> Result<EnvProfile, String> {
+        let s = s.trim();
+        let mut p = EnvProfile::default();
+        if s.is_empty() || s == "none" {
+            return Ok(p);
+        }
+        for atom in s.split('+') {
+            let atom = atom.trim();
+            let parts: Vec<&str> = atom.split(':').collect();
+            let rest = parts[1..].join(":");
+            match (parts[0], parts.len()) {
+                ("cap", 3) => p.events.push(parse_event("cluster_cap", &rest)?),
+                ("nodecap", 4) => p.events.push(parse_event("node_cap", &rest)?),
+                ("fail", 3) => p.events.push(parse_event("fail", &rest)?),
+                ("recover", 3) => p.events.push(parse_event("recover", &rest)?),
+                ("throttle", 4) => p.events.push(parse_event("throttle", &rest)?),
+                ("clear", 3) => p.events.push(parse_event("clear", &rest)?),
+                ("curtail", 4) | ("curtail", 5) => {
+                    if p.curtailment.is_some() {
+                        return Err(format!("duplicate curtail atom '{atom}'"));
+                    }
+                    p.curtailment = Some(Curtailment {
+                        period: parse_secs(parts[1])?,
+                        duty: parts[2]
+                            .parse::<f64>()
+                            .map_err(|_| format!("curtail duty '{}' must be a number", parts[2]))?,
+                        budget_frac: parts[3].parse::<f64>().map_err(|_| {
+                            format!("curtail budget_frac '{}' must be a number", parts[3])
+                        })?,
+                        start: if parts.len() == 5 { parse_secs(parts[4])? } else { 0 },
+                    });
+                }
+                ("faults", 4) | ("faults", 5) => {
+                    if p.faults.is_some() {
+                        return Err(format!("duplicate faults atom '{atom}'"));
+                    }
+                    p.faults = Some(FaultProcess {
+                        mtbf: parse_secs(parts[1])?,
+                        mttr: parse_secs(parts[2])?,
+                        seed: parts[3]
+                            .parse::<u64>()
+                            .map_err(|_| format!("faults seed '{}' must be an integer", parts[3]))?,
+                        max_failures: if parts.len() == 5 {
+                            parts[4].parse::<usize>().map_err(|_| {
+                                format!("faults max '{}' must be an integer", parts[4])
+                            })?
+                        } else {
+                            32
+                        },
+                    });
+                }
+                _ => {
+                    return Err(format!(
+                        "unknown env atom '{atom}' (none | cap:t:w | nodecap:t:n:w | fail:t:g | \
+                         recover:t:g | throttle:t:g:w | clear:t:g | curtail:period:duty:frac[:start] | \
+                         faults:mtbf:mttr:seed[:max])"
+                    ));
+                }
+            }
+        }
+        Ok(p)
+    }
+
+    /// Structural validation against a cluster's shape and budgets.
+    /// `cluster_floor` / `node_floor` are the summed per-GPU cap floors
+    /// a curtailed budget must still be able to host (only enforced
+    /// when the config enforces budgets at all).
+    pub fn validate(
+        &self,
+        total_gpus: usize,
+        n_nodes: usize,
+        enforce: bool,
+        cluster_floor: Watts,
+        node_floor: Watts,
+        cluster_budget: Watts,
+    ) -> Result<(), String> {
+        let err = |m: String| Err(m);
+        for e in &self.events {
+            match e.what {
+                EnvDisturbance::CapChange { scope: CapScope::Cluster, watts } => {
+                    if enforce && watts + 1e-6 < cluster_floor {
+                        return err(format!(
+                            "env cluster cap {watts} W below the fleet cap floor {cluster_floor} W"
+                        ));
+                    }
+                }
+                EnvDisturbance::CapChange { scope: CapScope::Node(nd), watts } => {
+                    if nd >= n_nodes {
+                        return err(format!(
+                            "env node cap names node {nd} but n_nodes is {n_nodes}"
+                        ));
+                    }
+                    if enforce && watts + 1e-6 < node_floor {
+                        return err(format!(
+                            "env node cap {watts} W below the node cap floor {node_floor} W"
+                        ));
+                    }
+                }
+                EnvDisturbance::GpuFail { gpu }
+                | EnvDisturbance::GpuRecover { gpu }
+                | EnvDisturbance::ThermalThrottle { gpu, .. }
+                | EnvDisturbance::ThermalClear { gpu } => {
+                    if gpu >= total_gpus {
+                        return err(format!(
+                            "env event names gpu {gpu} but the cluster has {total_gpus} GPUs"
+                        ));
+                    }
+                }
+            }
+        }
+        if let Some(c) = &self.curtailment {
+            if c.period == 0 {
+                return err("curtailment period must be > 0".into());
+            }
+            if !(0.0..1.0).contains(&c.duty) || c.duty <= 0.0 {
+                return err(format!("curtailment duty {} must be in (0, 1)", c.duty));
+            }
+            if !(0.0..=1.0).contains(&c.budget_frac) || c.budget_frac <= 0.0 {
+                return err(format!(
+                    "curtailment budget_frac {} must be in (0, 1]",
+                    c.budget_frac
+                ));
+            }
+            if enforce && c.budget_frac * cluster_budget + 1e-6 < cluster_floor {
+                return err(format!(
+                    "curtailed budget {:.0} W below the fleet cap floor {cluster_floor} W",
+                    c.budget_frac * cluster_budget
+                ));
+            }
+        }
+        if let Some(fp) = &self.faults {
+            if fp.mtbf == 0 || fp.mttr == 0 {
+                return err("fault mtbf_s and mttr_s must be > 0".into());
+            }
+            if fp.max_failures == 0 {
+                return err("fault max_failures must be >= 1".into());
+            }
+        }
+        Ok(())
+    }
+
+    /// Expand the profile into a sorted concrete timeline for a cluster
+    /// of `total_gpus` GPUs whose base cluster budget is
+    /// `base_cluster_budget`, out to `horizon`. Deterministic: same
+    /// profile + same arguments → the same timeline, always.
+    pub fn expand(
+        &self,
+        total_gpus: usize,
+        base_cluster_budget: Watts,
+        horizon: Micros,
+    ) -> Vec<EnvEvent> {
+        let mut out = self.events.clone();
+        if let Some(c) = &self.curtailment {
+            let mut t = c.start;
+            while t < horizon {
+                out.push(EnvEvent {
+                    at: t,
+                    what: EnvDisturbance::CapChange {
+                        scope: CapScope::Cluster,
+                        watts: base_cluster_budget * c.budget_frac,
+                    },
+                });
+                out.push(EnvEvent {
+                    at: t + (c.duty * c.period as f64) as Micros,
+                    what: EnvDisturbance::CapChange {
+                        scope: CapScope::Cluster,
+                        watts: base_cluster_budget,
+                    },
+                });
+                t = t.saturating_add(c.period);
+            }
+        }
+        if let Some(fp) = &self.faults {
+            // Salted so a fault stream never aliases a workload stream
+            // built from the same user seed.
+            let mut rng = Rng::new(fp.seed ^ 0x00E5_7FA1_7000);
+            let mut down_until = vec![0u64; total_gpus];
+            let mut t: Micros = 0;
+            let mut injected = 0usize;
+            while injected < fp.max_failures {
+                t = t.saturating_add((rng.exponential(1.0) * fp.mtbf as f64) as Micros);
+                if t >= horizon {
+                    break;
+                }
+                // Linear probe from a uniform pick to the next currently-up
+                // GPU keeps the draw deterministic and non-overlapping.
+                let pick = rng.index(total_gpus);
+                let gpu = (0..total_gpus)
+                    .map(|k| (pick + k) % total_gpus)
+                    .find(|&g| down_until[g] <= t);
+                let Some(gpu) = gpu else { continue };
+                let back = t.saturating_add(fp.mttr);
+                down_until[gpu] = back;
+                out.push(EnvEvent { at: t, what: EnvDisturbance::GpuFail { gpu } });
+                out.push(EnvEvent { at: back, what: EnvDisturbance::GpuRecover { gpu } });
+                injected += 1;
+            }
+        }
+        out.sort_by_key(|e| e.at);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::SECOND;
+
+    #[test]
+    fn empty_profile_expands_to_nothing() {
+        let p = EnvProfile::default();
+        assert!(p.is_empty());
+        assert!(p.expand(8, 4800.0, 600 * SECOND).is_empty());
+        assert_eq!(EnvProfile::parse_compact("none").unwrap(), p);
+        assert_eq!(EnvProfile::parse_compact("  ").unwrap(), p);
+    }
+
+    #[test]
+    fn compact_atoms_parse() {
+        let p = EnvProfile::parse_compact("cap:10:4000+fail:8:5+recover:20:5").unwrap();
+        assert_eq!(p.events.len(), 3);
+        assert_eq!(
+            p.events[0],
+            EnvEvent {
+                at: 10 * SECOND,
+                what: EnvDisturbance::CapChange { scope: CapScope::Cluster, watts: 4000.0 }
+            }
+        );
+        assert_eq!(p.events[1].what, EnvDisturbance::GpuFail { gpu: 5 });
+        assert_eq!(p.events[2].at, 20 * SECOND);
+        let c = EnvProfile::parse_compact("curtail:30:0.5:0.75:10").unwrap();
+        let cur = c.curtailment.unwrap();
+        assert_eq!(cur.period, 30 * SECOND);
+        assert_eq!(cur.start, 10 * SECOND);
+        assert_eq!(cur.duty, 0.5);
+        let f = EnvProfile::parse_compact("faults:25:10:7:4").unwrap();
+        let fp = f.faults.unwrap();
+        assert_eq!(fp.mtbf, 25 * SECOND);
+        assert_eq!(fp.mttr, 10 * SECOND);
+        assert_eq!(fp.seed, 7);
+        assert_eq!(fp.max_failures, 4);
+        let t = EnvProfile::parse_compact("throttle:12:1:500+clear:40:1").unwrap();
+        assert_eq!(
+            t.events[0].what,
+            EnvDisturbance::ThermalThrottle { gpu: 1, max_w: 500.0 }
+        );
+        assert_eq!(t.events[1].what, EnvDisturbance::ThermalClear { gpu: 1 });
+    }
+
+    #[test]
+    fn bad_compact_atoms_rejected() {
+        assert!(EnvProfile::parse_compact("warp:9").is_err());
+        assert!(EnvProfile::parse_compact("cap:10").is_err());
+        assert!(EnvProfile::parse_compact("fail:x:3").is_err());
+        assert!(EnvProfile::parse_compact("cap:10:-5").is_err());
+        assert!(EnvProfile::parse_compact("curtail:30:0.5:0.75+curtail:10:0.5:0.9").is_err());
+        assert!(EnvProfile::parse_compact("faults:25:10:7+faults:1:1:1").is_err());
+    }
+
+    #[test]
+    fn from_doc_parses_env_tables() {
+        let doc = Document::parse(
+            r#"
+[env]
+cluster_cap = ["10:4000", "25:4800"]
+node_cap = ["12:0:1800"]
+fail = ["15:3"]
+recover = ["35:3"]
+throttle = ["12.5:1:500"]
+clear = ["40:1"]
+[env.curtailment]
+period_s = 60
+duty = 0.4
+budget_frac = 0.8
+start_s = 5
+[env.faults]
+mtbf_s = 120
+mttr_s = 20
+seed = 9
+max_failures = 3
+"#,
+        )
+        .unwrap();
+        let p = EnvProfile::from_doc(&doc).unwrap().unwrap();
+        assert_eq!(p.events.len(), 6);
+        assert!(p.events.iter().any(|e| e.at == 12_500_000
+            && e.what == EnvDisturbance::ThermalThrottle { gpu: 1, max_w: 500.0 }));
+        let c = p.curtailment.unwrap();
+        assert_eq!(c.period, 60 * SECOND);
+        assert_eq!(c.start, 5 * SECOND);
+        let f = p.faults.unwrap();
+        assert_eq!((f.mtbf, f.mttr, f.seed, f.max_failures), (120 * SECOND, 20 * SECOND, 9, 3));
+        // No [env] at all -> None.
+        assert!(EnvProfile::from_doc(&Document::parse("x = 1").unwrap())
+            .unwrap()
+            .is_none());
+        // Half-declared generators are rejected.
+        let half = Document::parse("[env.faults]\nmtbf_s = 10").unwrap();
+        assert!(EnvProfile::from_doc(&half).is_err());
+        let half = Document::parse("[env.curtailment]\nduty = 0.5").unwrap();
+        assert!(EnvProfile::from_doc(&half).is_err());
+        let bad = Document::parse("[env]\nfail = [\"oops\"]").unwrap();
+        assert!(EnvProfile::from_doc(&bad).is_err());
+    }
+
+    #[test]
+    fn curtailment_expands_to_alternating_steps() {
+        let p = EnvProfile {
+            curtailment: Some(Curtailment {
+                period: 30 * SECOND,
+                duty: 0.5,
+                budget_frac: 0.75,
+                start: 10 * SECOND,
+            }),
+            ..Default::default()
+        };
+        let tl = p.expand(8, 4800.0, 75 * SECOND);
+        // Windows at 10s and 40s and 70s (70 < 75), each with a restore.
+        assert_eq!(tl.len(), 6);
+        let caps: Vec<(Micros, f64)> = tl
+            .iter()
+            .map(|e| match e.what {
+                EnvDisturbance::CapChange { watts, .. } => (e.at, watts),
+                _ => panic!("unexpected {e:?}"),
+            })
+            .collect();
+        assert_eq!(caps[0], (10 * SECOND, 3600.0));
+        assert_eq!(caps[1], (25 * SECOND, 4800.0));
+        assert_eq!(caps[2], (40 * SECOND, 3600.0));
+        assert_eq!(caps[3], (55 * SECOND, 4800.0));
+        assert_eq!(caps[4], (70 * SECOND, 3600.0));
+        assert_eq!(caps[5], (85 * SECOND, 4800.0));
+    }
+
+    #[test]
+    fn fault_process_is_deterministic_and_non_overlapping() {
+        let p = EnvProfile {
+            faults: Some(FaultProcess {
+                mtbf: 20 * SECOND,
+                mttr: 15 * SECOND,
+                seed: 7,
+                max_failures: 6,
+            }),
+            ..Default::default()
+        };
+        let a = p.expand(8, 4800.0, 300 * SECOND);
+        let b = p.expand(8, 4800.0, 300 * SECOND);
+        assert_eq!(a, b, "same seed must expand to the same timeline");
+        assert!(!a.is_empty());
+        // Every failure pairs with a recovery mttr later, and no GPU
+        // fails again while still down.
+        let mut down: Vec<Option<Micros>> = vec![None; 8];
+        for e in &a {
+            match e.what {
+                EnvDisturbance::GpuFail { gpu } => {
+                    assert!(down[gpu].is_none() || down[gpu].unwrap() <= e.at, "{e:?}");
+                    down[gpu] = Some(e.at + 15 * SECOND);
+                }
+                EnvDisturbance::GpuRecover { gpu } => {
+                    assert_eq!(down[gpu], Some(e.at), "recovery must be mttr after failure");
+                }
+                _ => panic!("unexpected {e:?}"),
+            }
+        }
+        // A different seed gives a different stream.
+        let mut p2 = p.clone();
+        p2.faults.as_mut().unwrap().seed = 8;
+        assert_ne!(p2.expand(8, 4800.0, 300 * SECOND), a);
+    }
+
+    #[test]
+    fn validation_catches_bad_shapes() {
+        let gpu_oob = EnvProfile::parse_compact("fail:1:9").unwrap();
+        assert!(gpu_oob.validate(8, 1, true, 3200.0, 3200.0, 4800.0).is_err());
+        assert!(gpu_oob.validate(16, 2, true, 3200.0, 1600.0, 9600.0).is_ok());
+        let cap_low = EnvProfile::parse_compact("cap:10:3000").unwrap();
+        assert!(cap_low.validate(8, 1, true, 3200.0, 3200.0, 4800.0).is_err());
+        // Unenforced budgets skip the floor comparison.
+        assert!(cap_low.validate(8, 1, false, 3200.0, 3200.0, 4800.0).is_ok());
+        let node_oob = EnvProfile::parse_compact("nodecap:10:2:2400").unwrap();
+        assert!(node_oob.validate(16, 2, true, 6400.0, 3200.0, 9600.0).is_err());
+        let deep = EnvProfile::parse_compact("curtail:30:0.5:0.5").unwrap();
+        assert!(deep.validate(8, 1, true, 3200.0, 3200.0, 4800.0).is_err(), "2400 W < floor");
+        let ok = EnvProfile::parse_compact("curtail:30:0.5:0.75").unwrap();
+        ok.validate(8, 1, true, 3200.0, 3200.0, 4800.0).unwrap();
+        let bad_duty = EnvProfile::parse_compact("curtail:30:1.5:0.75").unwrap();
+        assert!(bad_duty.validate(8, 1, true, 3200.0, 3200.0, 4800.0).is_err());
+    }
+}

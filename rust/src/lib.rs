@@ -9,6 +9,7 @@ pub mod cli;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
+pub mod env;
 pub mod experiments;
 pub mod fleet;
 pub mod kv;

@@ -4,6 +4,7 @@
 //!   fig1 | fig3 | fig4 | fig5 | fig6 | fig7 | fig8 | fig9
 //!       regenerate a paper figure (table + shape checks)
 //!   study    run a declarative scenario file (scenarios/*.toml)
+//!   validate parse config/scenario TOML files, listing every error
 //!   sim      run one configuration over a workload, print metrics
 //!   sweep    static design-space search (the paper's §5.1 exploration)
 //!   bench    hot-path perf suite + JSON report + CI regression gate
@@ -164,6 +165,29 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
             let study = Study::new(scenario).run(threads)?;
             print!("{}", emit::emit(&study, format));
         }
+        "validate" => {
+            let cmd = Command::new(
+                "validate",
+                "parse config/scenario TOML files; exit non-zero listing every error",
+            );
+            let a = parse_or_help(&cmd, rest)?;
+            if a.positional.is_empty() {
+                return Err("usage: rapid validate <file.toml>...".into());
+            }
+            let mut failures = 0usize;
+            for path in &a.positional {
+                match rapid::scenario::file::validate_path(path) {
+                    Ok(kind) => println!("{path}: OK ({kind})"),
+                    Err(e) => {
+                        failures += 1;
+                        eprintln!("{path}: {e}");
+                    }
+                }
+            }
+            if failures > 0 {
+                return Err(format!("{failures} file(s) failed validation").into());
+            }
+        }
         "sweep" => {
             let cmd = common(Command::new(
                 "sweep",
@@ -252,8 +276,8 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
         "help" | "--help" | "-h" => {
             println!("rapid — power-aware disaggregated inference (paper reproduction)");
             println!(
-                "subcommands: fig1 fig3 fig4 fig5 fig6 fig7 fig8 fig9 study sim sweep bench \
-                 serve presets"
+                "subcommands: fig1 fig3 fig4 fig5 fig6 fig7 fig8 fig9 study validate sim sweep \
+                 bench serve presets"
             );
             println!("run `rapid <subcommand> --help` for flags");
         }

@@ -28,6 +28,16 @@ pub struct RunResult {
     /// `rapid bench` / `benches/study_throughput` events-per-second
     /// throughput metric.
     pub sim_events: u64,
+    /// Environment disturbances actually applied, in time order
+    /// (empty for undisturbed runs — see DESIGN.md §12).
+    pub env_events: Vec<(Micros, String)>,
+    /// Cluster-budget steps over time: (t, new budget). The budget
+    /// before the first entry is the configured one. Populated only by
+    /// disturbed runs.
+    pub budget_trace: Vec<(Micros, Watts)>,
+    /// Resilience aggregates around the disturbance window; `None` for
+    /// undisturbed runs.
+    pub resilience: Option<Resilience>,
     /// Summary computed once when the run finishes, so study emitters
     /// and figure drivers never re-scan the record/power series.
     /// Hand-built results (tests) fall back to computing on demand.
@@ -157,6 +167,7 @@ impl RunResult {
             mean_provisioned_w: self.mean_provisioned_w,
             peak_node_w: self.node_power.max(),
             duration_s: self.duration as f64 / SECOND as f64,
+            resilience: self.resilience,
         }
     }
 
@@ -204,6 +215,116 @@ pub struct Summary {
     pub mean_provisioned_w: f64,
     pub peak_node_w: f64,
     pub duration_s: f64,
+    /// Disturbance-recovery aggregates; `None` for undisturbed runs.
+    pub resilience: Option<Resilience>,
+}
+
+/// Goodput bucket width for the resilience aggregates (coarse enough
+/// that a bucket holds tens of completions at paper-scale rates).
+pub const RESILIENCE_BUCKET: Micros = 5 * SECOND;
+
+/// How a run rode out its disturbance window (DESIGN.md §12): the
+/// window spans the first to the last applied environment event.
+/// Deterministic — a pure function of the request records, so it is
+/// bit-identical at any sweep thread count.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Resilience {
+    /// Reference goodput: mean over the complete pre-disturbance
+    /// buckets (whole-run mean when the disturbance hits inside the
+    /// first bucket).
+    pub pre_goodput_qps: f64,
+    /// Worst bucket goodput while disturbed.
+    pub dip_goodput_qps: f64,
+    /// `1 - dip/pre`, clamped into [0, 1] (0 = no dip).
+    pub dip_depth: f64,
+    /// Seconds after the last disturbance until bucket goodput first
+    /// returns to 95% of the reference (0 when it never dipped below
+    /// that bar; infinite when it never recovers).
+    pub recovery_s: f64,
+    /// SLO attainment split by completion time: before the first
+    /// event, inside the window, after the last event. Requests that
+    /// never finished count as post-window violations.
+    pub attainment_pre: f64,
+    pub attainment_during: f64,
+    pub attainment_post: f64,
+}
+
+/// Compute the resilience aggregates for a disturbed run whose applied
+/// environment events span `[first, last]`.
+pub fn compute_resilience(
+    records: &[RequestRecord],
+    first: Micros,
+    last: Micros,
+    duration: Micros,
+) -> Resilience {
+    let bucket = RESILIENCE_BUCKET;
+    let duration = duration.max(1);
+    let n_buckets = (duration / bucket + 1) as usize;
+    let mut hit = vec![0u32; n_buckets];
+    let mut win_hit = [0u32; 3];
+    let mut win_tot = [0u32; 3];
+    for r in records {
+        let f = r.finish.min(duration);
+        let attained = r.attained();
+        if attained {
+            hit[(f / bucket) as usize] += 1;
+        }
+        let w = if f < first {
+            0
+        } else if f <= last {
+            1
+        } else {
+            2
+        };
+        win_tot[w] += 1;
+        if attained {
+            win_hit[w] += 1;
+        }
+    }
+    let bucket_s = bucket as f64 / SECOND as f64;
+    let goodput = |b: usize| hit[b] as f64 / bucket_s;
+    let pre_full = (first / bucket) as usize;
+    let pre = if pre_full > 0 {
+        (0..pre_full).map(goodput).sum::<f64>() / pre_full as f64
+    } else {
+        hit.iter().map(|&h| h as f64).sum::<f64>() / (duration as f64 / SECOND as f64)
+    };
+    let b_first = ((first / bucket) as usize).min(n_buckets - 1);
+    let b_last = ((last / bucket) as usize).min(n_buckets - 1);
+    let dip = (b_first..=b_last).map(goodput).fold(f64::INFINITY, f64::min);
+    let dip = if dip.is_finite() { dip } else { 0.0 };
+    let dip_depth = if pre > 0.0 { ((pre - dip) / pre).clamp(0.0, 1.0) } else { 0.0 };
+    let bar = 0.95 * pre;
+    let recovery_s = if dip >= bar {
+        0.0
+    } else {
+        let mut found = f64::INFINITY;
+        for b in ((last / bucket) as usize + 1)..n_buckets {
+            if goodput(b) >= bar {
+                found = (b as Micros * bucket).saturating_sub(last) as f64 / SECOND as f64;
+                break;
+            }
+        }
+        found
+    };
+    let att = |w: usize| {
+        if win_tot[w] == 0 {
+            // An empty window attains vacuously (matches `.all()` on an
+            // empty iterator; keeps the field finite and comparable).
+            1.0
+        } else {
+            win_hit[w] as f64 / win_tot[w] as f64
+        }
+    };
+    Resilience {
+        pre_goodput_qps: pre,
+        dip_goodput_qps: dip,
+        dip_depth,
+        recovery_s,
+        attainment_pre: att(0),
+        attainment_during: att(1),
+        attainment_post: att(2),
+    }
 }
 
 #[cfg(test)]
@@ -325,6 +446,49 @@ mod tests {
         assert_eq!(r.attainment(), 0.0);
         assert_eq!(r.goodput_qps(), 0.0);
         assert!(r.ttft_percentile(90.0).is_nan());
+    }
+
+    #[test]
+    fn resilience_dip_window_and_recovery() {
+        // 5 attained completions/s for t in [0, 10 s); nothing during the
+        // [10 s, 20 s] disturbance window; 5/s again in [20 s, 30 s).
+        let mut recs = Vec::new();
+        let mut id = 0u64;
+        let mut push_attained = |recs: &mut Vec<RequestRecord>, finish: Micros| {
+            recs.push(record(id, finish - 700 * MILLIS, finish - 200 * MILLIS, finish, 20));
+            id += 1;
+        };
+        for i in 0..50 {
+            push_attained(&mut recs, SECOND + i * 200 * MILLIS); // 1.0 .. 10.8 s
+        }
+        for i in 0..50 {
+            push_attained(&mut recs, 20 * SECOND + 500 * MILLIS + i * 200 * MILLIS);
+        }
+        // Keep the pre window clean: drop the few that spilled past 10 s.
+        recs.retain(|r| r.finish < 10 * SECOND || r.finish >= 20 * SECOND);
+        let r = compute_resilience(&recs, 10 * SECOND, 20 * SECOND, 30 * SECOND);
+        assert!((r.pre_goodput_qps - 4.5).abs() < 0.6, "pre={}", r.pre_goodput_qps);
+        assert_eq!(r.dip_goodput_qps, 0.0);
+        assert_eq!(r.dip_depth, 1.0);
+        assert_eq!(r.recovery_s, 5.0, "first full bucket after the window recovers");
+        assert_eq!(r.attainment_pre, 1.0);
+        assert_eq!(r.attainment_during, 1.0, "empty window attains vacuously");
+        assert_eq!(r.attainment_post, 1.0);
+        // A violating completion inside the window splits attainment.
+        recs.push(record(999, 10 * SECOND, 14 * SECOND, 15 * SECOND, 20));
+        let r2 = compute_resilience(&recs, 10 * SECOND, 20 * SECOND, 30 * SECOND);
+        assert_eq!(r2.attainment_during, 0.0);
+        assert_eq!(r2.attainment_pre, 1.0);
+        // No dip at all -> depth 0, recovery 0.
+        let flat: Vec<RequestRecord> = (0..150u64)
+            .map(|i| {
+                let f = SECOND + i * 200 * MILLIS;
+                record(i, f - 700 * MILLIS, f - 200 * MILLIS, f, 20)
+            })
+            .collect();
+        let r3 = compute_resilience(&flat, 10 * SECOND, 20 * SECOND, 31 * SECOND);
+        assert!(r3.dip_depth < 0.2, "steady goodput has no meaningful dip");
+        assert_eq!(r3.recovery_s, 0.0);
     }
 
     #[test]

@@ -77,6 +77,12 @@ pub struct PowerManager {
     /// homogeneous fleet, the SKU envelope per GPU on a mixed one.
     min_of: Vec<Watts>,
     max_of: Vec<Watts>,
+    /// Rated (undegraded) ceiling per GPU: `max_of` returns here when a
+    /// thermal derate clears.
+    rated_max: Vec<Watts>,
+    /// Failed GPUs: excluded from every budget sum, uniform split and
+    /// cap trace until they recover (environment subsystem).
+    offline: Vec<bool>,
 }
 
 impl PowerManager {
@@ -141,6 +147,7 @@ impl PowerManager {
         assert!(node_of.iter().all(|&n| n < node_budgets.len()));
         PowerManager {
             caps: initial_caps.iter().map(|&w| CapState::new(w)).collect(),
+            offline: vec![false; initial_caps.len()],
             node_of,
             node_budgets,
             cluster_budget,
@@ -148,6 +155,7 @@ impl PowerManager {
             profile: RampProfile::default(),
             enforce,
             min_of,
+            rated_max: max_of.clone(),
             max_of,
         }
     }
@@ -197,13 +205,31 @@ impl PowerManager {
         self.caps[gpu.0].effective(now)
     }
 
-    /// Per-GPU committed cap: target plus any pending raise.
+    /// Per-GPU committed cap: target plus any pending raise. A failed
+    /// (offline) GPU draws nothing and counts for nothing.
     fn committed_caps(&self) -> Vec<Watts> {
-        let mut per_gpu: Vec<Watts> = self.caps.iter().map(|c| c.target()).collect();
+        let mut per_gpu: Vec<Watts> = self
+            .caps
+            .iter()
+            .zip(&self.offline)
+            .map(|(c, &off)| if off { 0.0 } else { c.target() })
+            .collect();
         for p in &self.pending {
             per_gpu[p.gpu.0] = per_gpu[p.gpu.0].max(p.cap);
         }
         per_gpu
+    }
+
+    /// Committed cap of one GPU without materializing the per-GPU
+    /// vector (budget-step shedding runs on the DES hot path).
+    fn committed_cap_of(&self, i: usize) -> Watts {
+        let mut c = if self.offline[i] { 0.0 } else { self.caps[i].target() };
+        for p in &self.pending {
+            if p.gpu.0 == i {
+                c = c.max(p.cap);
+            }
+        }
+        c
     }
 
     /// Sum of target caps plus any pending raises (the committed power).
@@ -485,10 +511,18 @@ impl PowerManager {
     /// Set every GPU to its node's uniform share (paper:
     /// DISTRIBUTEUNIFORMPOWER after a role move), additionally limited by
     /// the cluster-wide per-GPU share when the cluster budget binds.
-    /// Lower-first/raise-later sequencing applies here too.
+    /// Lower-first/raise-later sequencing applies here too. Offline
+    /// (failed) GPUs are skipped and do not dilute the shares.
     pub fn distribute_uniform(&mut self, now: Micros) -> Micros {
-        let per_gpu_cluster = self.cluster_budget / self.caps.len() as f64;
-        let node_count = |nd: usize| self.node_of.iter().filter(|&&n| n == nd).count();
+        let online = self.offline.iter().filter(|&&off| !off).count().max(1);
+        let per_gpu_cluster = self.cluster_budget / online as f64;
+        let node_count = |nd: usize| {
+            self.node_of
+                .iter()
+                .zip(&self.offline)
+                .filter(|&(&n, &off)| n == nd && !off)
+                .count()
+        };
         let uniform_of: Vec<Watts> = (0..self.caps.len())
             .map(|i| {
                 let nd = self.node_of[i];
@@ -501,14 +535,14 @@ impl PowerManager {
         let mut settle = now;
         // Phase 1: all lowers immediately.
         for i in 0..self.caps.len() {
-            if self.caps[i].target() > uniform_of[i] {
+            if !self.offline[i] && self.caps[i].target() > uniform_of[i] {
                 let d = self.caps[i].set_target(now, uniform_of[i], &self.profile);
                 settle = settle.max(d);
             }
         }
         // Phase 2: raises queued after the lowers settle.
         for i in 0..self.caps.len() {
-            if self.caps[i].target() < uniform_of[i] {
+            if !self.offline[i] && self.caps[i].target() < uniform_of[i] {
                 self.pending.push(PendingRaise {
                     gpu: GpuId(i),
                     cap: uniform_of[i],
@@ -517,6 +551,153 @@ impl PowerManager {
             }
         }
         settle
+    }
+
+    // ------------------------------------------------------------------
+    // environment disturbances (DESIGN.md §12)
+    // ------------------------------------------------------------------
+
+    /// Step the cluster-wide budget (grid curtailment). A decrease sheds
+    /// committed power immediately — pending raises planned under the
+    /// old budget are dropped, then every online GPU's cap is lowered in
+    /// proportion to its slack above its floor until the new budget
+    /// holds. An increase frees headroom but raises nothing by itself.
+    /// Returns the settle deadline of the lowers.
+    pub fn set_cluster_budget(&mut self, now: Micros, budget: Watts) -> Micros {
+        self.cluster_budget = budget;
+        self.shed_into_budgets(now)
+    }
+
+    /// Step one node's budget; same shedding semantics.
+    pub fn set_node_budget(&mut self, now: Micros, node: usize, budget: Watts) -> Micros {
+        self.node_budgets[node] = budget;
+        self.shed_into_budgets(now)
+    }
+
+    /// Re-establish both budget levels after a step: node pools first,
+    /// then the cluster pool.
+    fn shed_into_budgets(&mut self, now: Micros) -> Micros {
+        if !self.enforce {
+            return now;
+        }
+        let mut settle = now;
+        for nd in 0..self.node_budgets.len() {
+            settle = settle.max(self.shed_pool(now, Some(nd)));
+        }
+        settle.max(self.shed_pool(now, None))
+    }
+
+    /// Shed the pool (`Some(node)` or the whole cluster) down to its
+    /// budget: cancel the pool's pending raises, then lower each online
+    /// member proportionally to its slack above its floor. GPUs already
+    /// at their floor cannot shed further (an infeasible budget is
+    /// reported by `budget_ok`, exactly like an infeasible construction).
+    fn shed_pool(&mut self, now: Micros, node: Option<usize>) -> Micros {
+        let budget = match node {
+            Some(nd) => self.node_budgets[nd],
+            None => self.cluster_budget,
+        };
+        let mut committed = 0.0;
+        for i in 0..self.caps.len() {
+            if node.map_or(false, |nd| self.node_of[i] != nd) {
+                continue;
+            }
+            committed += self.committed_cap_of(i);
+        }
+        if committed <= budget + 1e-9 {
+            return now;
+        }
+        // Over budget: raises planned under the old budget are void.
+        let pending = std::mem::take(&mut self.pending);
+        self.pending = pending
+            .into_iter()
+            .filter(|p| {
+                let i = p.gpu.0;
+                self.offline[i] || node.map_or(false, |nd| self.node_of[i] != nd)
+            })
+            .collect();
+        let mut total = 0.0;
+        let mut slack = 0.0;
+        for i in 0..self.caps.len() {
+            if self.offline[i] || node.map_or(false, |nd| self.node_of[i] != nd) {
+                continue;
+            }
+            total += self.caps[i].target();
+            slack += (self.caps[i].target() - self.min_of[i]).max(0.0);
+        }
+        let cut = (total - budget).min(slack);
+        if cut <= 1e-9 || slack <= 0.0 {
+            return now;
+        }
+        let mut settle = now;
+        for i in 0..self.caps.len() {
+            if self.offline[i] || node.map_or(false, |nd| self.node_of[i] != nd) {
+                continue;
+            }
+            let s = (self.caps[i].target() - self.min_of[i]).max(0.0);
+            if s <= 0.0 {
+                continue;
+            }
+            let new = self.caps[i].target() - cut * s / slack;
+            let d = self.caps[i].set_target(now, new, &self.profile);
+            settle = settle.max(d);
+        }
+        settle
+    }
+
+    /// Thermal derating: lower one GPU's cap ceiling to `ceiling`
+    /// (clamped into `[floor, rated max]`), clamping its target and any
+    /// pending raise down with it. Returns the settle deadline of the
+    /// lower (or `now` when the cap already fits).
+    pub fn derate_gpu(&mut self, now: Micros, gpu: GpuId, ceiling: Watts) -> Micros {
+        let i = gpu.0;
+        let ceil = ceiling.clamp(self.min_of[i], self.rated_max[i]);
+        self.max_of[i] = ceil;
+        for p in &mut self.pending {
+            if p.gpu == gpu {
+                p.cap = p.cap.min(ceil);
+            }
+        }
+        if self.caps[i].target() > ceil {
+            self.caps[i].set_target(now, ceil, &self.profile)
+        } else {
+            now
+        }
+    }
+
+    /// Thermal derating ends: the rated ceiling returns. The cap itself
+    /// stays where the derate left it until a policy raises it.
+    pub fn restore_gpu(&mut self, now: Micros, gpu: GpuId) -> Micros {
+        self.max_of[gpu.0] = self.rated_max[gpu.0];
+        now
+    }
+
+    /// Rated (undegraded) ceiling of one GPU.
+    pub fn rated_max_of(&self, gpu: GpuId) -> Watts {
+        self.rated_max[gpu.0]
+    }
+
+    /// Mark a GPU failed/recovered. Failed GPUs drop out of every
+    /// budget sum and the uniform split, and their pending raises are
+    /// cancelled. A recovering GPU rejoins at its cap floor — callers
+    /// redistribute (lower-first) immediately after, so the floor is the
+    /// only power it can claim unilaterally.
+    pub fn set_offline(&mut self, now: Micros, gpu: GpuId, offline: bool) {
+        let i = gpu.0;
+        if self.offline[i] == offline {
+            return;
+        }
+        self.offline[i] = offline;
+        if offline {
+            self.pending.retain(|p| p.gpu != gpu);
+        } else {
+            self.caps[i].set_target(now, self.min_of[i], &self.profile);
+        }
+    }
+
+    /// Is this GPU currently failed?
+    pub fn is_offline(&self, gpu: GpuId) -> bool {
+        self.offline[gpu.0]
     }
 
     /// Apply any pending raises that are due; returns them for logging.
@@ -558,7 +739,11 @@ impl PowerManager {
 
     /// All target caps (Fig 9a trace).
     pub fn targets(&self) -> Vec<Watts> {
-        self.caps.iter().map(|c| c.target()).collect()
+        self.caps
+            .iter()
+            .zip(&self.offline)
+            .map(|(c, &off)| if off { 0.0 } else { c.target() })
+            .collect()
     }
 }
 
@@ -993,6 +1178,175 @@ mod tests {
         m.poll(settle);
         assert!((m.target(GpuId(0)) - 600.0).abs() < 1e-6);
         assert!((m.target(GpuId(2)) - 400.0).abs() < 1e-6);
+        assert!(m.budget_ok());
+    }
+
+    // ------------------------------------------------------------------
+    // environment disturbances: budget steps, derating, offline GPUs
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn cluster_budget_step_sheds_proportionally_above_floors() {
+        let mut m = manager_4p4d();
+        let settle = m.set_cluster_budget(SECOND, 4000.0);
+        assert!(settle > SECOND, "lowers take settle time");
+        // Uniform slack (8 x 200 W above floor) -> uniform 100 W shed.
+        for i in 0..8 {
+            assert!((m.target(GpuId(i)) - 500.0).abs() < 1e-6, "gpu {i}");
+        }
+        assert!((m.committed_total() - 4000.0).abs() < 1e-6);
+        assert!(m.budget_ok());
+        // Raises are now judged against the curtailed budget.
+        assert!(m.set_cap(2 * SECOND, GpuId(0), 750.0).is_err());
+        // Restoring the budget frees headroom but raises nothing.
+        m.set_cluster_budget(3 * SECOND, 4800.0);
+        assert_eq!(m.target(GpuId(0)), 500.0);
+        assert!(m.budget_ok());
+        m.set_cap(4 * SECOND, GpuId(0), 750.0).unwrap();
+    }
+
+    #[test]
+    fn uneven_slack_sheds_in_proportion() {
+        let mut m = PowerManager::new(&[700.0, 700.0, 450.0, 450.0], 4800.0, true, 400.0, 750.0);
+        // Slack: 300, 300, 50, 50 (total 700). Shed 350 => halve each slack.
+        m.set_cluster_budget(0, 1950.0);
+        assert!((m.target(GpuId(0)) - 550.0).abs() < 1e-6);
+        assert!((m.target(GpuId(2)) - 425.0).abs() < 1e-6);
+        assert!(m.budget_ok());
+    }
+
+    #[test]
+    fn budget_below_floor_clamps_at_floors_and_flags() {
+        let mut m = manager_4p4d();
+        m.set_cluster_budget(0, 3000.0); // floor is 8 x 400 = 3200
+        for i in 0..8 {
+            assert!((m.target(GpuId(i)) - 400.0).abs() < 1e-6, "gpu {i}");
+        }
+        assert!(!m.budget_ok(), "infeasible curtailment must be flagged");
+    }
+
+    #[test]
+    fn node_budget_step_sheds_only_that_node() {
+        let mut m = manager_two_nodes(4800.0); // 8 x 500 W, 2400 W/node
+        m.set_node_budget(SECOND, 0, 1800.0);
+        for i in 0..4 {
+            assert!((m.target(GpuId(i)) - 450.0).abs() < 1e-6, "node-0 gpu {i}");
+        }
+        for i in 4..8 {
+            assert_eq!(m.target(GpuId(i)), 500.0, "node 1 untouched");
+        }
+        assert!(m.budget_ok());
+    }
+
+    #[test]
+    fn budget_step_cancels_pending_raises() {
+        let mut m = manager_4p4d();
+        let mv = m.move_power(0, &[GpuId(4)], &[GpuId(0)], 100.0, 750.0).unwrap();
+        assert!(m.next_pending_at().is_some());
+        m.set_cluster_budget(1, 4000.0);
+        assert!(
+            m.next_pending_at().is_none(),
+            "raises planned under the old budget are void"
+        );
+        m.poll(mv.effective_at);
+        assert!(m.budget_ok());
+        assert!(m.committed_total() <= 4000.0 + 1e-6);
+    }
+
+    #[test]
+    fn derate_clamps_target_and_pending_then_restore_lifts_only_ceiling() {
+        let mut m = manager_4p4d();
+        // Queue a raise on gpu0, then derate it below the queued cap.
+        let mv = m.move_power(0, &[GpuId(4)], &[GpuId(0)], 100.0, 750.0).unwrap();
+        let settle = m.derate_gpu(1, GpuId(0), 450.0);
+        assert!(settle > 1);
+        assert_eq!(m.max_of(GpuId(0)), 450.0);
+        assert_eq!(m.rated_max_of(GpuId(0)), 750.0);
+        assert!((m.target(GpuId(0)) - 450.0).abs() < 1e-6);
+        m.poll(mv.effective_at);
+        assert!(m.target(GpuId(0)) <= 450.0 + 1e-9, "pending raise clamped to derated ceiling");
+        assert!(m.set_cap(SECOND, GpuId(0), 500.0).is_err());
+        m.restore_gpu(2 * SECOND, GpuId(0));
+        assert_eq!(m.max_of(GpuId(0)), 750.0);
+        assert!(m.target(GpuId(0)) <= 450.0 + 1e-9, "restore lifts the ceiling, not the cap");
+        m.set_cap(3 * SECOND, GpuId(0), 600.0).unwrap();
+        // Requests below the floor clamp to the floor.
+        m.derate_gpu(4 * SECOND, GpuId(1), 300.0);
+        assert_eq!(m.max_of(GpuId(1)), 400.0);
+        assert!(m.budget_ok());
+    }
+
+    #[test]
+    fn offline_gpu_excluded_from_budget_and_uniform_split() {
+        let mut m = manager_4p4d();
+        m.set_offline(0, GpuId(7), true);
+        assert!(m.is_offline(GpuId(7)));
+        assert!((m.committed_total() - 7.0 * 600.0).abs() < 1e-6);
+        assert_eq!(m.targets()[7], 0.0, "failed GPU provisions nothing");
+        let settle = m.distribute_uniform(SECOND);
+        m.poll(settle);
+        for i in 0..7 {
+            assert!(
+                (m.target(GpuId(i)) - 4800.0 / 7.0).abs() < 1e-6,
+                "freed budget spreads over the 7 online GPUs (gpu {i})"
+            );
+        }
+        assert!(m.budget_ok());
+        // Recovery: rejoin at the floor, then redistribute.
+        m.set_offline(2 * SECOND, GpuId(7), false);
+        assert!((m.target(GpuId(7)) - 400.0).abs() < 1e-6, "rejoins at the floor");
+        let settle = m.distribute_uniform(2 * SECOND);
+        m.poll(settle);
+        for i in 0..8 {
+            assert!((m.target(GpuId(i)) - 600.0).abs() < 1e-6, "gpu {i}");
+        }
+        assert!(m.budget_ok());
+    }
+
+    #[test]
+    fn weighted_move_zero_when_every_sink_at_sku_ceiling() {
+        // The previously-untested saturation path: every sink pinned at
+        // its own SKU ceiling — the move must be a zero-move with the
+        // source untouched (no donor ratchet).
+        let mut m = manager_mixed_envelopes();
+        m.set_cap(0, GpuId(1), 400.0).unwrap();
+        m.set_cap(1, GpuId(0), 750.0).unwrap(); // big sink at 750 (its max)
+        // gpu2 sits at 400 == its small-SKU max already.
+        let mv = m
+            .move_power_weighted(
+                2,
+                &[GpuId(1)],
+                &[GpuId(0), GpuId(2)],
+                &[1.0],
+                &[5.0, 3.0],
+                150.0,
+                750.0,
+            )
+            .unwrap();
+        assert!(mv.raised.is_empty() && mv.lowered.is_empty(), "{mv:?}");
+        assert_eq!(m.target(GpuId(1)), 400.0, "source untouched by a zero-move");
+        m.poll(mv.effective_at);
+        assert!(m.budget_ok());
+    }
+
+    #[test]
+    fn weighted_move_zero_when_pool_ceiling_binds_every_sink() {
+        // Same saturation through the *pool* ceiling: sinks sit at the
+        // decode ceiling, so even with cap room to 750 nothing moves.
+        let mut m = manager_4p4d();
+        let mv = m
+            .move_power_weighted(
+                0,
+                &[GpuId(4), GpuId(5)],
+                &[GpuId(0), GpuId(1)],
+                &[1.0, 2.0],
+                &[3.0, 1.0],
+                120.0,
+                600.0, // == current sink caps
+            )
+            .unwrap();
+        assert!(mv.raised.is_empty() && mv.lowered.is_empty(), "{mv:?}");
+        assert_eq!(m.target(GpuId(4)), 600.0);
         assert!(m.budget_ok());
     }
 

@@ -58,6 +58,12 @@ fn all_scalar(study: &StudyResult) -> bool {
         .all(|c| matches!(c.out, CellOut::Scalar(_)))
 }
 
+/// Any disturbed cell in the study? Gates the resilience columns so
+/// undisturbed studies render byte-identically to pre-env output.
+fn any_resilience(study: &StudyResult) -> bool {
+    study.cells.iter().any(|c| c.resilience().is_some())
+}
+
 // ---------------------------------------------------------------------------
 // Text
 // ---------------------------------------------------------------------------
@@ -79,7 +85,7 @@ fn text_metrics(study: &StudyResult) -> Vec<Metric> {
             fmt: |v| format!("{v:.0}"),
         }]
     } else {
-        vec![
+        let mut metrics = vec![
             Metric {
                 name: "attainment",
                 value: Cell::attainment,
@@ -90,7 +96,21 @@ fn text_metrics(study: &StudyResult) -> Vec<Metric> {
                 value: Cell::goodput_qps,
                 fmt: |v| format!("{v:.3}"),
             },
-        ]
+        ];
+        if any_resilience(study) {
+            metrics.push(Metric {
+                name: "dip_depth",
+                value: |c| c.resilience().map_or(0.0, |r| r.dip_depth),
+                fmt: |v| format!("{v:.3}"),
+            });
+            metrics.push(Metric {
+                name: "recovery_s",
+                value: |c| c.resilience().map_or(0.0, |r| r.recovery_s),
+                // Infinite = never recovered before the run ended.
+                fmt: |v| if v.is_finite() { format!("{v:.1}") } else { "never".into() },
+            });
+        }
+        metrics
     }
 }
 
@@ -230,6 +250,15 @@ fn cell_json(cell: &Cell) -> Json {
             m.insert("mean_provisioned_w".into(), num(s.mean_provisioned_w));
             m.insert("peak_node_w".into(), num(s.peak_node_w));
             m.insert("duration_s".into(), num(s.duration_s));
+            if let Some(res) = s.resilience {
+                m.insert("dip_depth".into(), num(res.dip_depth));
+                m.insert("recovery_s".into(), num(res.recovery_s));
+                m.insert("pre_goodput_qps".into(), num(res.pre_goodput_qps));
+                m.insert("dip_goodput_qps".into(), num(res.dip_goodput_qps));
+                m.insert("attainment_pre".into(), num(res.attainment_pre));
+                m.insert("attainment_during".into(), num(res.attainment_during));
+                m.insert("attainment_post".into(), num(res.attainment_post));
+            }
             obj.insert("metrics".into(), Json::Obj(m));
         }
     }
@@ -310,6 +339,7 @@ impl Emitter for CsvEmitter {
     fn emit(&self, study: &StudyResult) -> String {
         let axis_keys: Vec<&str> = study.scenario.axes.iter().map(super::Axis::key).collect();
         let scalar = all_scalar(study);
+        let resilience = any_resilience(study);
         let mut out = String::new();
         for k in &axis_keys {
             out.push_str(k);
@@ -322,8 +352,12 @@ impl Emitter for CsvEmitter {
         } else {
             out.push_str(
                 "config_name,attainment,goodput_qps,qps_per_kw,ttft_p90_ms,tpot_p90_ms,\
-                 mean_provisioned_w\n",
+                 mean_provisioned_w",
             );
+            if resilience {
+                out.push_str(",dip_depth,recovery_s");
+            }
+            out.push('\n');
         }
         for cell in &study.cells {
             for (_, v) in &cell.coords {
@@ -344,6 +378,19 @@ impl Emitter for CsvEmitter {
                         s.tpot_p90_ms,
                         s.mean_provisioned_w
                     ));
+                    if resilience {
+                        let (dip, rec) = s
+                            .resilience
+                            .map_or((0.0, 0.0), |r| (r.dip_depth, r.recovery_s));
+                        // Never-recovered runs leave the field empty
+                        // (standard CSV missing value), matching the
+                        // JSON emitter's null for non-finite numbers.
+                        if rec.is_finite() {
+                            out.push_str(&format!(",{dip},{rec}"));
+                        } else {
+                            out.push_str(&format!(",{dip},"));
+                        }
+                    }
                 }
             }
             out.push('\n');
@@ -444,6 +491,35 @@ mod tests {
         assert!(cells[0].get("value_us").unwrap().as_f64().unwrap() > 0.0);
         let text = emit(&study, Format::Text);
         assert!(text.contains("[value (us)]"));
+    }
+
+    #[test]
+    fn resilience_rendered_only_for_disturbed_studies() {
+        // Undisturbed studies keep the pre-env output shape exactly.
+        let plain = small_study();
+        assert!(!emit(&plain, Format::Text).contains("[dip_depth]"));
+        assert!(!emit(&plain, Format::Csv).lines().next().unwrap().contains("dip_depth"));
+        // A disturbed study renders the resilience block everywhere.
+        let study = Study::new(
+            Scenario::new("env-emit", presets::rapid_600())
+                .requests(60)
+                .seed(3)
+                .axis(Axis::Env(vec!["cap:2:4000".into()])),
+        )
+        .run(Some(1))
+        .unwrap();
+        let text = emit(&study, Format::Text);
+        assert!(text.contains("[dip_depth]"), "{text}");
+        assert!(text.contains("[recovery_s]"), "{text}");
+        let json = emit(&study, Format::Json);
+        let v = Json::parse(json.trim()).unwrap();
+        let cells = v.get("cells").unwrap().as_arr().unwrap();
+        let m = cells[0].get("metrics").unwrap();
+        assert!(m.get("dip_depth").is_some());
+        assert!(m.get("attainment_during").is_some());
+        let csv = emit(&study, Format::Csv);
+        assert!(csv.lines().next().unwrap().ends_with("dip_depth,recovery_s"), "{csv}");
+        assert_eq!(csv.trim_end().lines().count(), 2);
     }
 
     #[test]

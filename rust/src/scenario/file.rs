@@ -31,9 +31,10 @@
 //! ```
 //!
 //! TOML tables are unordered, so axes expand in a fixed canonical
-//! order regardless of file order (outermost → innermost): `preset`,
-//! `sku_mix`, `policy`, `n_nodes`, `prefill_gpus`, `power_w`, `batch`,
-//! `burst_factor`, `slo_scale`, `rate_per_gpu`. The last declared axis
+//! order regardless of file order (outermost → innermost): `seed`,
+//! `preset`, `sku_mix`, `policy`, `env`, `n_nodes`, `prefill_gpus`,
+//! `power_w`, `batch`, `burst_factor`, `slo_scale`, `rate_per_gpu`.
+//! The last declared axis
 //! becomes the column axis of the text tables. Unknown keys anywhere in
 //! the file are rejected with an error naming the key and its table.
 
@@ -44,9 +45,11 @@ use crate::types::{Slo, MILLIS};
 
 /// Canonical axis expansion order for TOML-declared scenarios.
 const AXIS_ORDER: &[&str] = &[
+    "seed",
     "preset",
     "sku_mix",
     "policy",
+    "env",
     "n_nodes",
     "prefill_gpus",
     "power_w",
@@ -172,6 +175,30 @@ fn ints(name: &str, values: &[Value]) -> Result<Vec<usize>, ScenarioError> {
         .collect()
 }
 
+/// Validate one TOML file as *either* a cluster config or a scenario —
+/// the `rapid validate` subcommand and CI's fail-fast TOML gate. Both
+/// loaders already do strict unknown-key checking, so a file that
+/// parses as neither reports both errors.
+pub fn validate_path(path: &str) -> Result<&'static str, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+    validate_toml(&text)
+}
+
+/// [`validate_path`] over in-memory text. Returns which grammar the
+/// file satisfied (`"config"` or `"scenario"`).
+pub fn validate_toml(text: &str) -> Result<&'static str, String> {
+    let config_err = match crate::config::ClusterConfig::from_toml(text) {
+        Ok(_) => return Ok("config"),
+        Err(e) => e,
+    };
+    match Scenario::from_toml(text) {
+        Ok(_) => Ok("scenario"),
+        Err(scenario_err) => Err(format!(
+            "not a valid config ({config_err}); not a valid scenario ({scenario_err})"
+        )),
+    }
+}
+
 fn parse_axis(name: &str, values: &[Value]) -> Result<Axis, ScenarioError> {
     match name {
         "preset" => {
@@ -197,6 +224,30 @@ fn parse_axis(name: &str, values: &[Value]) -> Result<Axis, ScenarioError> {
                 })
                 .collect::<Result<Vec<_>, _>>()?;
             Ok(Axis::Policy(policies))
+        }
+        "seed" => {
+            let seeds = values
+                .iter()
+                .map(|v| {
+                    v.as_i64().filter(|&x| x >= 0).map(|x| x as u64).ok_or_else(|| {
+                        ScenarioError("axis 'seed' needs non-negative integers".into())
+                    })
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            Ok(Axis::Seed(seeds))
+        }
+        "env" => {
+            let profiles = values
+                .iter()
+                .map(|v| {
+                    v.as_str().map(str::to_string).ok_or_else(|| {
+                        ScenarioError(
+                            "axis 'env' needs profile strings like \"curtail:30:0.5:0.75\"".into(),
+                        )
+                    })
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            Ok(Axis::Env(profiles))
         }
         "sku_mix" => {
             let mixes = values
@@ -333,6 +384,47 @@ rate_per_gpu = [1.0]
         assert!(err.0.contains("reqests"), "{}", err.0);
         let err = Scenario::from_toml("[workloads]\nkind = \"longbench\"").unwrap_err();
         assert!(err.0.contains("workloads.kind"), "{}", err.0);
+    }
+
+    #[test]
+    fn seed_and_env_axes_parse_in_canonical_order() {
+        let s = Scenario::from_toml(
+            r#"
+[base]
+preset = "rapid-600"
+[axes]
+rate_per_gpu = [1.0]
+env = ["none", "curtail:30:0.5:0.75:10"]
+seed = [1, 2, 3]
+"#,
+        )
+        .unwrap();
+        // seed outermost, then env, rate innermost — file order ignored.
+        assert_eq!(s.axes[0].key(), "seed");
+        assert_eq!(s.axes[1].key(), "env");
+        assert_eq!(s.axes[2].key(), "rate_per_gpu");
+        assert_eq!(s.n_cells(), 6);
+        assert_eq!(s.axes[0].label(2), "3");
+        assert_eq!(s.axes[1].label(1), "curtail:30:0.5:0.75:10");
+        // Bad values fail at load time.
+        assert!(Scenario::from_toml("[axes]\nseed = [-1]").is_err());
+        assert!(Scenario::from_toml("[axes]\nseed = [\"a\"]").is_err());
+        assert!(Scenario::from_toml("[axes]\nenv = [9]").is_err());
+        assert!(Scenario::from_toml("[axes]\nenv = [\"warp:9\"]").is_err());
+    }
+
+    #[test]
+    fn validate_toml_distinguishes_configs_and_scenarios() {
+        assert_eq!(validate_toml("preset = \"rapid-600\"").unwrap(), "config");
+        assert_eq!(
+            validate_toml("requests = 100\n[axes]\nrate_per_gpu = [1.0]").unwrap(),
+            "scenario"
+        );
+        let err = validate_toml("[powr]\nbudget_w = 1").unwrap_err();
+        assert!(
+            err.contains("not a valid config") && err.contains("not a valid scenario"),
+            "{err}"
+        );
     }
 
     #[test]

@@ -240,6 +240,13 @@ pub enum Axis {
     /// exactly the base config's `n_gpus`, so homogeneous and mixed
     /// fleets of equal GPU count sweep under one power cap.
     SkuMix(Vec<String>),
+    /// Workload RNG seeds: replicate every other cell across seeds (no
+    /// aggregation — each seed is its own cell, emitted unchanged).
+    Seed(Vec<u64>),
+    /// Environment disturbance profiles in the compact grammar of
+    /// [`crate::env::EnvProfile::parse_compact`] (`"none"`,
+    /// `"curtail:30:0.5:0.75:10"`, `"faults:25:10:7"`, ...).
+    Env(Vec<String>),
 }
 
 impl Axis {
@@ -256,6 +263,8 @@ impl Axis {
             Axis::PrefillGpus(_) => "prefill_gpus",
             Axis::Batch(_) => "batch",
             Axis::SkuMix(_) => "sku_mix",
+            Axis::Seed(_) => "seed",
+            Axis::Env(_) => "env",
         }
     }
 
@@ -267,7 +276,8 @@ impl Axis {
             }
             Axis::NNodes(v) | Axis::PrefillGpus(v) | Axis::Batch(v) => v.len(),
             Axis::Policy(v) => v.len(),
-            Axis::SkuMix(v) => v.len(),
+            Axis::SkuMix(v) | Axis::Env(v) => v.len(),
+            Axis::Seed(v) => v.len(),
         }
     }
 
@@ -284,7 +294,8 @@ impl Axis {
             }
             Axis::NNodes(v) | Axis::PrefillGpus(v) | Axis::Batch(v) => format!("{}", v[i]),
             Axis::Policy(v) => v[i].name().to_string(),
-            Axis::SkuMix(v) => v[i].clone(),
+            Axis::SkuMix(v) | Axis::Env(v) => v[i].clone(),
+            Axis::Seed(v) => format!("{}", v[i]),
         }
     }
 }
@@ -425,7 +436,9 @@ impl Scenario {
             return err("batch axis only applies to microbench workloads".into());
         }
         if self.workload.is_micro() {
-            for k in ["rate_per_gpu", "slo_scale", "burst_factor", "n_nodes", "sku_mix"] {
+            const SIM_ONLY: &[&str] =
+                &["rate_per_gpu", "slo_scale", "burst_factor", "n_nodes", "sku_mix", "seed", "env"];
+            for &k in SIM_ONLY {
                 if has(k) {
                     return err(format!("{k} axis does not apply to microbench workloads"));
                 }
@@ -434,6 +447,11 @@ impl Scenario {
         if let Some(Axis::SkuMix(mixes)) = self.axes.iter().find(|a| a.key() == "sku_mix") {
             for mix in mixes {
                 crate::fleet::FleetConfig::parse_mix(mix, &[]).map_err(ScenarioError)?;
+            }
+        }
+        if let Some(Axis::Env(profiles)) = self.axes.iter().find(|a| a.key() == "env") {
+            for p in profiles {
+                crate::env::EnvProfile::parse_compact(p).map_err(ScenarioError)?;
             }
         }
         Ok(())
@@ -458,6 +476,8 @@ pub struct CellSpec {
     pub power_w: Option<f64>,
     /// Batch size for microbench cells.
     pub batch: usize,
+    /// Workload seed override (from a `Seed` axis).
+    pub seed: Option<u64>,
 }
 
 fn index_tuples(axes: &[Axis]) -> Vec<Vec<usize>> {
@@ -485,6 +505,7 @@ fn resolve_cell(scenario: &Scenario, tuple: &[usize]) -> Result<CellSpec, Scenar
         burst_factor: 1.0,
         power_w: None,
         batch: 1,
+        seed: None,
     };
     for (axis, &i) in scenario.axes.iter().zip(tuple) {
         spec.coords.push((axis.key().to_string(), axis.label(i)));
@@ -515,6 +536,15 @@ fn resolve_cell(scenario: &Scenario, tuple: &[usize]) -> Result<CellSpec, Scenar
                 };
             }
             Axis::Batch(v) => spec.batch = v[i],
+            Axis::Seed(v) => spec.seed = Some(v[i]),
+            Axis::Env(v) => {
+                let profile =
+                    crate::env::EnvProfile::parse_compact(&v[i]).map_err(ScenarioError)?;
+                if !profile.is_empty() {
+                    spec.config.name = format!("{}@{}", spec.config.name, v[i]);
+                }
+                spec.config.env = profile;
+            }
             Axis::SkuMix(v) => {
                 let fc = crate::fleet::FleetConfig::parse_mix(&v[i], &[])
                     .map_err(ScenarioError)?;
@@ -633,6 +663,12 @@ impl Cell {
         self.result().map_or(0.0, |r| r.summary().qps_per_kw)
     }
 
+    /// Resilience aggregates of a disturbed sim cell (`None` for
+    /// microbench cells and undisturbed runs).
+    pub fn resilience(&self) -> Option<crate::metrics::Resilience> {
+        self.result().and_then(|r| r.summary().resilience)
+    }
+
     pub fn rate_point(&self) -> RatePoint {
         RatePoint {
             qps_per_gpu: self.rate_per_gpu,
@@ -663,14 +699,23 @@ impl StudyResult {
         (passed, total)
     }
 
-    /// Cross-cell invariants the per-cell checks cannot see. Today:
-    /// with a `SkuMix` axis, every *mixed* fleet must achieve at least
-    /// the goodput of the *worst homogeneous* fleet of equal GPU count
-    /// under the same power cap, at every setting of the other axes —
-    /// the basic sanity property of SKU-aware reallocation (strictly
-    /// better hardware plus marginal-watt shifting cannot lose to the
-    /// all-worst fleet).
+    /// Cross-cell invariants the per-cell checks cannot see:
+    ///
+    /// * with a `SkuMix` axis, every *mixed* fleet must achieve at
+    ///   least the goodput of the *worst homogeneous* fleet of equal
+    ///   GPU count under the same power cap (SKU-aware reallocation
+    ///   cannot lose to the all-worst fleet);
+    /// * with `Env` × `Policy` axes, every dynamic policy must achieve
+    ///   at least the static policy's goodput under a pure-curtailment
+    ///   profile — the tentpole claim that *dynamic* reallocation is
+    ///   what rides out budget disturbances.
     pub fn study_checks(&self) -> Vec<ShapeCheck> {
+        let mut checks = self.sku_mix_checks();
+        checks.extend(self.env_policy_checks());
+        checks
+    }
+
+    fn sku_mix_checks(&self) -> Vec<ShapeCheck> {
         let Some(mix_pos) = self.scenario.axes.iter().position(|a| a.key() == "sku_mix") else {
             return Vec::new();
         };
@@ -715,6 +760,58 @@ impl StudyResult {
         checks
     }
 
+    /// Dynamic >= static goodput under pure-curtailment profiles (see
+    /// `study_checks`). Fault profiles are excluded: a failure landing
+    /// on a rebalanced layout can legitimately hurt more than on a
+    /// static one, so only the budget-step claim is a hard invariant.
+    fn env_policy_checks(&self) -> Vec<ShapeCheck> {
+        let axes = &self.scenario.axes;
+        let Some(env_pos) = axes.iter().position(|a| a.key() == "env") else {
+            return Vec::new();
+        };
+        let Some(pol_pos) = axes.iter().position(|a| a.key() == "policy") else {
+            return Vec::new();
+        };
+        let is_pure_curtailment = |label: &str| {
+            crate::env::EnvProfile::parse_compact(label)
+                .map(|p| p.curtailment.is_some() && p.faults.is_none() && p.events.is_empty())
+                .unwrap_or(false)
+        };
+        let mut groups: std::collections::BTreeMap<String, Vec<&Cell>> =
+            std::collections::BTreeMap::new();
+        for cell in &self.cells {
+            if !is_pure_curtailment(&cell.coords[env_pos].1) {
+                continue;
+            }
+            let key = cell
+                .coords
+                .iter()
+                .enumerate()
+                .filter(|&(i, _)| i != pol_pos)
+                .map(|(_, (k, v))| format!("{k}={v}"))
+                .collect::<Vec<_>>()
+                .join(" ");
+            groups.entry(key).or_default().push(cell);
+        }
+        let mut checks = Vec::new();
+        for (key, cells) in groups {
+            let Some(static_cell) = cells.iter().find(|c| c.coords[pol_pos].1 == "static") else {
+                continue;
+            };
+            let static_goodput = static_cell.goodput_qps();
+            for cell in cells.iter().filter(|c| c.coords[pol_pos].1 != "static") {
+                let policy = &cell.coords[pol_pos].1;
+                let goodput = cell.goodput_qps();
+                checks.push(ShapeCheck::new(
+                    format!("policy '{policy}' >= static goodput under curtailment at {key}"),
+                    goodput + 1e-9 >= static_goodput,
+                    format!("{goodput:.3} qps vs {static_goodput:.3} qps"),
+                ));
+            }
+        }
+        checks
+    }
+
     /// View a `[Config, RatePerGpu]` study as per-config rate curves
     /// (the shape most figures plot).
     pub fn rate_curves(&self) -> Vec<(ClusterConfig, Vec<RatePoint>)> {
@@ -737,9 +834,10 @@ impl StudyResult {
 
 fn build_cell_trace(scenario: &Scenario, spec: &CellSpec) -> Trace {
     let node_qps = spec.rate_per_gpu * spec.config.total_gpus() as f64;
+    let seed = spec.seed.unwrap_or(scenario.seed);
     match &scenario.workload {
         WorkloadSpec::LongBench => longbench_trace_bursty(
-            scenario.seed,
+            seed,
             node_qps,
             scenario.requests,
             spec.slo,
@@ -750,7 +848,7 @@ fn build_cell_trace(scenario: &Scenario, spec: &CellSpec) -> Trace {
             input_tokens,
             output_tokens,
         } => sonnet_trace(
-            scenario.seed,
+            seed,
             node_qps,
             scenario.requests,
             spec.slo,
@@ -759,7 +857,7 @@ fn build_cell_trace(scenario: &Scenario, spec: &CellSpec) -> Trace {
             spec.burst_factor,
             scenario.burst_frac,
         ),
-        WorkloadSpec::MixedPhases => mixed_phases_trace(scenario.seed, scenario.requests, node_qps),
+        WorkloadSpec::MixedPhases => mixed_phases_trace(seed, scenario.requests, node_qps),
         WorkloadSpec::PrefillMicrobench { .. } | WorkloadSpec::DecodeMicrobench { .. } => {
             unreachable!("microbench cells do not build traces")
         }
@@ -786,6 +884,40 @@ fn cell_checks(config: &ClusterConfig, n_requests: usize, res: &RunResult) -> Ve
             "provisioned power within cluster budget",
             res.mean_provisioned_w <= budget + 1e-6,
             format!("{:.0} W <= {:.0} W", res.mean_provisioned_w, budget),
+        ));
+    }
+    if config.enforce_budget && !res.env_events.is_empty() {
+        // Time-varying budgets need the stronger instantaneous form:
+        // at every cap-trace point the summed targets must fit the
+        // budget in force at that instant (budget steps land before
+        // same-time samples, so the walk below is exact).
+        let mut budget = config.cluster_budget();
+        let mut steps = res.budget_trace.iter().peekable();
+        let mut ok = true;
+        let mut worst = 0.0f64;
+        for (t, caps) in &res.cap_trace {
+            while let Some(&&(st, b)) = steps.peek() {
+                if st <= *t {
+                    budget = b;
+                    steps.next();
+                } else {
+                    break;
+                }
+            }
+            let sum: f64 = caps.iter().sum();
+            if sum > budget + 1e-6 {
+                ok = false;
+                worst = worst.max(sum - budget);
+            }
+        }
+        checks.push(ShapeCheck::new(
+            "allocated power within instantaneous budget",
+            ok,
+            if ok {
+                format!("{} cap points checked", res.cap_trace.len())
+            } else {
+                format!("worst overage {worst:.1} W")
+            },
         ));
     }
     checks
@@ -1047,6 +1179,74 @@ mod tests {
         // No SkuMix axis -> no study checks.
         let plain = Scenario::new("t", presets::p4d4(600.0)).requests(20);
         assert!(Study::new(plain).run(Some(1)).unwrap().study_checks().is_empty());
+    }
+
+    #[test]
+    fn seed_axis_replicates_cells_without_aggregation() {
+        let s = Scenario::new("t", presets::p4d4(600.0))
+            .requests(40)
+            .axis(Axis::Seed(vec![1, 2]))
+            .axis(Axis::RatePerGpu(vec![1.0]));
+        let study = Study::new(s.clone()).run(Some(1)).unwrap();
+        assert_eq!(study.cells.len(), 2);
+        assert_eq!(study.cells[0].coords[0], ("seed".to_string(), "1".to_string()));
+        assert_eq!(study.cells[1].coords[0], ("seed".to_string(), "2".to_string()));
+        // Different seeds build different traces...
+        let a0 = study.cells[0].result().unwrap().records[0].arrival;
+        let a1 = study.cells[1].result().unwrap().records[0].arrival;
+        assert_ne!(a0, a1, "seed must change the workload");
+        // ...and the same grid re-runs bit-identically (per-seed cells
+        // are plain cells: no aggregation anywhere).
+        let again = Study::new(s).run(Some(2)).unwrap();
+        for (x, y) in study.cells.iter().zip(&again.cells) {
+            assert_eq!(x.goodput_qps(), y.goodput_qps());
+        }
+        // Seed axis is meaningless for analytic microbenches.
+        let micro = Scenario::new("t", presets::p4d4(600.0))
+            .workload(WorkloadSpec::PrefillMicrobench { input_tokens: 1024 })
+            .axis(Axis::Seed(vec![1]));
+        assert!(micro.validate().is_err());
+    }
+
+    #[test]
+    fn env_axis_sets_profile_and_name() {
+        let s = Scenario::new("t", presets::rapid_600())
+            .axis(Axis::Env(vec!["none".into(), "curtail:30:0.5:0.75:10".into()]));
+        let cells = Study::new(s).cells().unwrap();
+        assert_eq!(cells.len(), 2);
+        assert!(cells[0].config.env.is_empty());
+        assert_eq!(cells[0].config.name, "DynGPU-DynPower", "'none' keeps the name");
+        assert!(cells[1].config.env.curtailment.is_some());
+        assert!(cells[1].config.name.ends_with("@curtail:30:0.5:0.75:10"));
+        assert_eq!(cells[1].coords[0].0, "env");
+        // Bad atoms fail at validation time, before any cell runs.
+        let bad = Scenario::new("t", presets::rapid_600()).axis(Axis::Env(vec!["warp:9".into()]));
+        assert!(bad.validate().is_err());
+        // Structurally-infeasible profiles fail at cell resolution.
+        let deep = Scenario::new("t", presets::rapid_600())
+            .axis(Axis::Env(vec!["curtail:30:0.5:0.5".into()]));
+        assert!(Study::new(deep).cells().is_err(), "curtailed below the cap floor");
+    }
+
+    #[test]
+    fn disturbed_cells_carry_resilience_and_budget_checks() {
+        let s = Scenario::new("t", presets::rapid_600())
+            .requests(60)
+            .seed(5)
+            .axis(Axis::Env(vec!["cap:2:4000".into()]));
+        let study = Study::new(s).run(Some(1)).unwrap();
+        let cell = &study.cells[0];
+        let res = cell.result().unwrap();
+        assert!(!res.env_events.is_empty(), "the cap step must fire");
+        assert!(res.resilience.is_some());
+        assert!(
+            cell.checks
+                .iter()
+                .any(|c| c.what.contains("instantaneous budget")),
+            "{:?}",
+            cell.checks
+        );
+        assert!(cell.checks.iter().all(|c| c.pass), "{:?}", cell.checks);
     }
 
     #[test]

@@ -48,6 +48,10 @@ pub enum Event {
     Sample,
     /// A draining GPU finished its role switch.
     DrainDone { gpu: usize, epoch: u64 },
+    /// An environment disturbance is due: index into the cluster's
+    /// expanded `env_timeline` (cap step, GPU failure/recovery, thermal
+    /// derate — see `crate::env`).
+    Env { idx: usize },
 }
 
 struct HeapItem {

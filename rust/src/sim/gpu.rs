@@ -26,6 +26,9 @@ pub struct GpuSim {
     /// An execution (prefill batch / decode step / coalesced step) is in
     /// flight.
     pub busy: bool,
+    /// Down due to an environment `GpuFail`: accepts nothing, draws
+    /// nothing, counts for nothing until `GpuRecover`.
+    pub failed: bool,
 
     // --- prefill ---
     pub pf_queue: VecDeque<Request>,
@@ -56,6 +59,7 @@ impl GpuSim {
             draining_to: None,
             epoch: 0,
             busy: false,
+            failed: false,
             pf_queue: VecDeque::new(),
             pf_queued_tokens: 0,
             pf_batch: Vec::new(),
@@ -76,7 +80,7 @@ impl GpuSim {
 
     /// May the router send new work here?
     pub fn accepting(&self) -> bool {
-        self.draining_to.is_none()
+        self.draining_to.is_none() && !self.failed
     }
 
     pub fn push_prefill(&mut self, r: Request) {

@@ -30,7 +30,7 @@ impl Cluster {
         // mix chunk sizes; the implicit fleet reads cfg.perf as before).
         let chunk_budget = self.model_of(gi).cfg().chunk_tokens;
         let g = &mut self.gpus[gi];
-        if g.busy || g.role != Role::Coalesced {
+        if g.busy || g.failed || g.role != Role::Coalesced {
             return;
         }
         if g.co_queue.is_empty() && g.dec_active.is_empty() && g.dec_pending.is_empty() {

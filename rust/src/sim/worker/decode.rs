@@ -28,6 +28,12 @@ impl Cluster {
     /// slot, and let stalled prefill GPUs publish again.
     pub(crate) fn on_kv_arrive(&mut self, gi: usize, src_node: usize, item: DecodeItem) {
         self.ring_used[src_node] = self.ring_used[src_node].saturating_sub(1);
+        if self.gpus[gi].failed {
+            // The target died while the KV was in flight: re-fetch to a
+            // surviving worker (conservation: the request is never lost).
+            self.redispatch_decode(gi, src_node, Some(gi), item);
+            return;
+        }
         self.gpus[gi].dec_pending.push_back(item);
         // A slot freed: stalled prefill GPUs may publish now.
         for i in 0..self.gpus.len() {
@@ -36,12 +42,15 @@ impl Cluster {
                 self.kick_prefill(i);
             }
         }
-        self.kick_decode(gi);
+        // Role-dispatched: on the coalesced topology the KV target is a
+        // coalesced worker (failure re-dispatch), not a decode worker.
+        let role = self.gpus[gi].role;
+        crate::sim::worker::behavior(role).kick(self, gi);
     }
 
     pub(crate) fn kick_decode(&mut self, gi: usize) {
         let g = &mut self.gpus[gi];
-        if g.busy || g.role != Role::Decode {
+        if g.busy || g.failed || g.role != Role::Decode {
             return;
         }
         // Admissions at step boundaries (continuous batching). Draining

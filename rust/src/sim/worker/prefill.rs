@@ -29,7 +29,7 @@ impl Cluster {
         let now = self.now;
         {
             let g = &self.gpus[gi];
-            if g.busy || g.role != Role::Prefill || g.pf_queue.is_empty() {
+            if g.busy || g.failed || g.role != Role::Prefill || g.pf_queue.is_empty() {
                 return;
             }
             // Backpressure: wait for ring slots before starting a new
@@ -105,15 +105,18 @@ impl Cluster {
             let Some(item) = self.gpus[gi].publish_wait.pop_front() else {
                 break;
             };
-            let target = self
-                .pick_decode_gpu(None, src_node)
-                .or_else(|| {
-                    self.gpus
-                        .iter()
-                        .position(|g| g.committed_role() == Role::Decode)
-                        .map(GpuId)
-                })
-                .expect("at least one decode-committed GPU");
+            let target = self.pick_decode_gpu(None, src_node).or_else(|| {
+                self.gpus
+                    .iter()
+                    .position(|g| !g.failed && g.committed_role() == Role::Decode)
+                    .map(GpuId)
+            });
+            let Some(target) = target else {
+                // Every decode worker is down: park the item back; a
+                // recovery re-triggers publishing.
+                self.gpus[gi].publish_wait.push_front(item);
+                break;
+            };
             self.ring_used[src_node] += 1;
             let same_node = self.node_of(target.0) == src_node;
             // Heterogeneous endpoints: the slower side's link binds.

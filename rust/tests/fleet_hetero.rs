@@ -13,53 +13,21 @@
 //!   achieves at least the goodput of the worst homogeneous fleet of
 //!   equal GPU count.
 
-use rapid::config::ClusterConfig;
 use rapid::fleet::FleetConfig;
-use rapid::metrics::RunResult;
 use rapid::scenario::{Scenario, Study};
 use rapid::sim::{self, SimOptions};
 use rapid::types::Slo;
 use rapid::util::rng::Rng;
 use rapid::workload::{build_trace, sonnet::Sonnet, ArrivalProcess};
 
-fn shipped_config(name: &str) -> ClusterConfig {
-    let path = format!("{}/configs/{name}", env!("CARGO_MANIFEST_DIR"));
-    let text = std::fs::read_to_string(&path).expect("shipped config");
-    ClusterConfig::from_toml(&text).expect("config parses")
-}
+#[path = "support/mod.rs"]
+mod support;
+use support::{assert_bit_identical, shipped_config};
 
 fn trace(n: usize, qps: f64, input: u32, output: u32) -> rapid::workload::Trace {
     let mut ap = ArrivalProcess::poisson(Rng::new(71), qps);
     let mut sizes = Sonnet::new(Rng::new(72), input, output);
     build_trace(n, &mut ap, &mut sizes, Slo::paper_default())
-}
-
-fn assert_bit_identical(a: &RunResult, b: &RunResult) {
-    assert_eq!(a.records.len(), b.records.len());
-    for (x, y) in a.records.iter().zip(&b.records) {
-        assert_eq!(x.id, y.id);
-        assert_eq!(x.prefill_start, y.prefill_start);
-        assert_eq!(x.first_token, y.first_token);
-        assert_eq!(x.finish, y.finish);
-    }
-    assert_eq!(a.decisions, b.decisions, "controller decisions must match");
-    assert_eq!(a.sim_events, b.sim_events);
-    assert_eq!(a.cap_trace.len(), b.cap_trace.len());
-    for ((ta, capsa), (tb, capsb)) in a.cap_trace.iter().zip(&b.cap_trace) {
-        assert_eq!(ta, tb);
-        for (ca, cb) in capsa.iter().zip(capsb) {
-            assert_eq!(ca.to_bits(), cb.to_bits(), "cap targets must be bit-identical");
-        }
-    }
-    assert_eq!(a.node_power.points.len(), b.node_power.points.len());
-    for (pa, pb) in a.node_power.points.iter().zip(&b.node_power.points) {
-        assert_eq!(pa.0, pb.0);
-        assert_eq!(pa.1.to_bits(), pb.1.to_bits(), "power samples must be bit-identical");
-    }
-    assert_eq!(
-        a.mean_provisioned_w.to_bits(),
-        b.mean_provisioned_w.to_bits()
-    );
 }
 
 /// The golden acceptance test: an explicit single-SKU `mi300x` fleet is

@@ -1,0 +1,44 @@
+//! Shared helpers for the golden integration tests. Pulled in per test
+//! target via `#[path = "support/mod.rs"] mod support;` — files under
+//! `rust/tests/` are not auto-discovered with this non-standard layout,
+//! so this module is never compiled as its own test target.
+
+use rapid::config::ClusterConfig;
+use rapid::metrics::RunResult;
+
+/// Load one of the shipped `configs/*.toml` files.
+pub fn shipped_config(name: &str) -> ClusterConfig {
+    let path = format!("{}/configs/{name}", env!("CARGO_MANIFEST_DIR"));
+    let text = std::fs::read_to_string(&path).expect("shipped config");
+    ClusterConfig::from_toml(&text).expect("config parses")
+}
+
+/// The golden identity comparator: every record, decision, cap-trace
+/// point and power sample must match to the bit. Extend HERE when
+/// `RunResult` grows a series that golden tests must cover.
+pub fn assert_bit_identical(a: &RunResult, b: &RunResult) {
+    assert_eq!(a.records.len(), b.records.len());
+    for (x, y) in a.records.iter().zip(&b.records) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.prefill_start, y.prefill_start);
+        assert_eq!(x.first_token, y.first_token);
+        assert_eq!(x.finish, y.finish);
+    }
+    assert_eq!(a.decisions, b.decisions, "controller decisions must match");
+    assert_eq!(a.sim_events, b.sim_events);
+    assert_eq!(a.cap_trace.len(), b.cap_trace.len());
+    for ((ta, capsa), (tb, capsb)) in a.cap_trace.iter().zip(&b.cap_trace) {
+        assert_eq!(ta, tb);
+        for (ca, cb) in capsa.iter().zip(capsb) {
+            assert_eq!(ca.to_bits(), cb.to_bits(), "cap targets must be bit-identical");
+        }
+    }
+    assert_eq!(a.node_power.points.len(), b.node_power.points.len());
+    for (pa, pb) in a.node_power.points.iter().zip(&b.node_power.points) {
+        assert_eq!(pa.0, pb.0);
+        assert_eq!(pa.1.to_bits(), pb.1.to_bits(), "power samples must be bit-identical");
+    }
+    assert_eq!(a.mean_provisioned_w.to_bits(), b.mean_provisioned_w.to_bits());
+    assert_eq!(a.env_events, b.env_events, "applied disturbances must match");
+    assert_eq!(a.budget_trace, b.budget_trace);
+}
