@@ -13,7 +13,9 @@ use std::collections::VecDeque;
 use crate::bench::{bench, bench_batch, BenchReport, Timing};
 use crate::config::{presets, BatchConfig, ControlPolicy, ControllerConfig};
 use crate::coordinator::batcher::form_prefill_batch_into;
-use crate::coordinator::router::{pick_decode_prefer_node, pick_prefill, WorkerLoad};
+use crate::coordinator::router::{
+    pick_decode_prefer_node, pick_prefill, LoadIndex, LoadKey, WorkerLoad,
+};
 use crate::coordinator::{Controller, Snapshot};
 use crate::kv::KvRing;
 use crate::sim::{self, SimOptions};
@@ -25,6 +27,11 @@ use crate::workload::{build_trace, sonnet::Sonnet, ArrivalProcess};
 /// Name of the whole-sim case (`per_sec` = simulated events/second) —
 /// the headline number `BENCH_hotpath.json` tracks across PRs.
 pub const WHOLE_SIM: &str = "sim/whole_run";
+
+/// The same events/second headline on the 1024-GPU kilo-node fleet
+/// (`configs/kilo-node.toml`) — the scale the sub-linear DES paths are
+/// proved at (DESIGN.md §13).
+pub const WHOLE_SIM_1024: &str = "sim/whole_1024";
 
 /// Suite knobs. Defaults match what CI gates on; tests shrink the
 /// budgets to keep the suite exercisable in debug builds.
@@ -106,6 +113,45 @@ pub fn run_suite(cfg: &SuiteConfig) -> BenchReport {
         ));
     }
 
+    // --- indexed routing at kilo-node scale -----------------------------
+    // 1024 workers over 128 nodes, mixed per-SKU scales. Each iteration
+    // touches one worker's key (the enqueue/step cadence of the DES)
+    // and re-picks — the maintained-index path `Cluster::pick_*` rides,
+    // whose cost must not grow with the fleet.
+    let scales = [1.0, 1.45, 0.62, 2.0];
+    if cfg.wants("router/pick_prefill_1024") {
+        let mut idx = LoadIndex::new(1024, 128);
+        for i in 0..1024 {
+            let key = LoadKey::prefill((i as u64 * 613) % 9000, i % 7, scales[i % 4], i);
+            idx.update(i, i / 8, Some(key));
+        }
+        let mut k = 0usize;
+        let mut t = 0u64;
+        push(bench("router/pick_prefill_1024", cfg.target_ms, cfg.max_iters, || {
+            k = (k + 257) & 1023;
+            t = t.wrapping_add(997);
+            let key = LoadKey::prefill(t % 9000, (t % 7) as usize, scales[k % 4], k);
+            idx.update(k, k / 8, Some(key));
+            std::hint::black_box(idx.pick(None));
+        }));
+    }
+    if cfg.wants("router/pick_decode_1024") {
+        let mut idx = LoadIndex::new(1024, 128);
+        for i in 0..1024 {
+            let key = LoadKey::decode(i % 60, (i as u64 * 311) % 4000, scales[i % 4], i);
+            idx.update(i, i / 8, Some(key));
+        }
+        let mut k = 0usize;
+        let mut t = 0u64;
+        push(bench("router/pick_decode_1024", cfg.target_ms, cfg.max_iters, || {
+            k = (k + 257) & 1023;
+            t = t.wrapping_add(997);
+            let key = LoadKey::decode((t % 60) as usize, t % 4000, scales[k % 4], k);
+            idx.update(k, k / 8, Some(key));
+            std::hint::black_box(idx.pick_prefer_node((k >> 3) & 127, None));
+        }));
+    }
+
     // --- batch formation ----------------------------------------------
     if cfg.wants("batcher/form_prefill_batch") {
         let bcfg = BatchConfig::default();
@@ -167,6 +213,37 @@ pub fn run_suite(cfg: &SuiteConfig) -> BenchReport {
             pm.set_cluster_budget(t, if low { 4000.0 } else { 4800.0 });
             pm.derate_gpu(t, GpuId(3), if low { 500.0 } else { 750.0 });
             std::hint::black_box(pm.target(GpuId(3)));
+        }));
+    }
+
+    // --- power books at kilo-node scale ---------------------------------
+    if cfg.wants("power/poll_1024") {
+        // 1024 GPUs / 128 nodes: one cap step plus one poll per
+        // iteration — the cadence the kilo-node DES drives the power
+        // books at. The budget checks inside `set_cap` ride the cached
+        // committed sums (refolded only when a mutation dirtied them)
+        // instead of rebuilding a per-GPU vector per call.
+        let node_of: Vec<usize> = (0..1024).map(|i| i / 8).collect();
+        let mut pm = crate::power::PowerManager::with_nodes(
+            &[550.0; 1024],
+            node_of,
+            vec![4800.0; 128],
+            128.0 * 4800.0,
+            true,
+            400.0,
+            750.0,
+        );
+        let mut k = 0usize;
+        let mut t: u64 = 0;
+        let mut up = false;
+        push(bench("power/poll_1024", cfg.target_ms, cfg.max_iters, || {
+            k = (k + 257) & 1023;
+            t += 1000;
+            up = !up;
+            // 8 x 600 W fills a node budget exactly, so the raise always
+            // clears both budget checks.
+            pm.set_cap(t, GpuId(k), if up { 600.0 } else { 550.0 }).unwrap();
+            std::hint::black_box(pm.poll(t).len());
         }));
     }
 
@@ -240,6 +317,28 @@ pub fn run_suite(cfg: &SuiteConfig) -> BenchReport {
         ));
     }
 
+    // --- end-to-end sim throughput, kilo-node fleet ----------------------
+    if cfg.wants(WHOLE_SIM_1024) {
+        // Same probe-then-batch pattern on 128 rapid-600 nodes (1024
+        // GPUs) near the knee (1.5 req/s/GPU): `per_sec` is simulated
+        // events per second at the scale the indexed routing, cached
+        // power sums and calendar queue are built for.
+        let sim_cfg = presets::scaled_to_nodes(presets::rapid_600(), 128);
+        let mut ap = ArrivalProcess::poisson(Rng::new(7), 1536.0);
+        let mut sizes = Sonnet::new(Rng::new(8), 2048, 64);
+        let trace = build_trace(cfg.sim_requests, &mut ap, &mut sizes, Slo::paper_default());
+        let events = sim::run(&sim_cfg, &trace, &SimOptions::default()).sim_events as usize;
+        push(bench_batch(
+            WHOLE_SIM_1024,
+            events.max(1),
+            cfg.target_ms * 5,
+            cfg.max_iters.min(200),
+            || {
+                std::hint::black_box(sim::run(&sim_cfg, &trace, &SimOptions::default()));
+            },
+        ));
+    }
+
     report
 }
 
@@ -259,10 +358,22 @@ mod tests {
     #[test]
     fn filter_selects_cases() {
         let rep = run_suite(&tiny("router"));
-        assert_eq!(rep.entries.len(), 2);
+        assert_eq!(rep.entries.len(), 4);
         assert!(rep.entries.iter().all(|t| t.name.contains("router")));
         assert!(rep.entries.iter().all(|t| t.iters >= 3 && t.mean_us >= 0.0));
         assert!(run_suite(&tiny("no-such-case")).entries.is_empty());
+    }
+
+    #[test]
+    fn kilo_scale_cases_run() {
+        let rep = run_suite(&tiny("1024"));
+        for name in ["router/pick_prefill_1024", "router/pick_decode_1024", "power/poll_1024"] {
+            let t = rep.entry(name).unwrap_or_else(|| panic!("missing {name}"));
+            assert!(t.iters >= 3 && t.per_sec() > 0.0, "{name}");
+        }
+        let t = rep.entry(WHOLE_SIM_1024).expect("kilo whole-sim entry");
+        assert!(t.batch > 100, "a kilo-node sim still has many events");
+        assert!(t.per_sec() > 0.0);
     }
 
     #[test]

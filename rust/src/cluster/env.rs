@@ -119,6 +119,9 @@ impl Cluster {
             items.extend(g.dec_pending.drain(..));
             items.extend(g.dec_active.drain(..));
         }
+        // Out of the role lists and pick indexes before the requeue
+        // loops below route anything.
+        self.refresh_worker(gi);
         for r in reqs {
             self.route_request(r);
         }
@@ -142,6 +145,8 @@ impl Cluster {
             g.epoch += 1;
             g.busy = false;
         }
+        // Back into the role lists and pick indexes before orphans route.
+        self.refresh_worker(gi);
         self.power.set_offline(self.now, GpuId(gi), false);
         let settle = self.power.distribute_uniform(self.now);
         self.events.push(settle, Event::PowerPoll);
@@ -160,12 +165,16 @@ impl Cluster {
         if role == Role::Prefill {
             self.steal_prefill_work(gi);
         }
-        // Publishers stalled while every decode worker was down retry.
-        for i in 0..self.gpus.len() {
+        // Publishers stalled while every decode worker was down retry
+        // (publish_wait only ever lives on live prefill-role workers).
+        let mut k = 0;
+        while k < self.prefill_ids.len() {
+            let i = self.prefill_ids[k];
             if !self.gpus[i].publish_wait.is_empty() {
                 self.try_publish(i);
                 self.kick_prefill(i);
             }
+            k += 1;
         }
     }
 

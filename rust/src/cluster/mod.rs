@@ -24,7 +24,7 @@ pub mod env;
 pub mod policy;
 
 use crate::config::ClusterConfig;
-use crate::coordinator::router::{self, WorkerLoad};
+use crate::coordinator::router::{self, LoadIndex, LoadKey, WorkerLoad};
 use crate::coordinator::{Action, Snapshot};
 use crate::env::EnvEvent;
 use crate::fleet::Fleet;
@@ -84,6 +84,16 @@ pub struct Cluster {
     sample_rng: crate::util::rng::Rng,
     /// Events processed so far (RunResult::sim_events).
     events_handled: u64,
+    // --- incremental routing state (thousand-node fleets) ---
+    /// Live members of each role (`role == X && !failed`), ascending GPU
+    /// id — the linear reference fills walk these instead of every GPU.
+    pub(crate) prefill_ids: Vec<usize>,
+    pub(crate) decode_ids: Vec<usize>,
+    pub(crate) coalesced_ids: Vec<usize>,
+    /// Ordered pick indexes over *accepting* workers, maintained at
+    /// every load/role/failure mutation; picks are O(log n).
+    prefill_index: LoadIndex,
+    decode_index: LoadIndex,
     // --- reused scratch (hot paths allocate nothing per event) ---
     /// Router view buffer, refilled per routing decision.
     scratch_loads: Vec<WorkerLoad>,
@@ -123,7 +133,7 @@ impl Cluster {
             + opts.drain_grace;
         let n_requests = trace.requests.len();
         let env_timeline = cfg.env.expand(total, cfg.cluster_budget(), hard_stop);
-        Cluster {
+        let mut cl = Cluster {
             fleet,
             power,
             policy,
@@ -150,12 +160,21 @@ impl Cluster {
             hard_stop,
             sample_rng: crate::util::rng::Rng::new(0xF16_3),
             events_handled: 0,
+            prefill_ids: Vec::new(),
+            decode_ids: Vec::new(),
+            coalesced_ids: Vec::new(),
+            prefill_index: LoadIndex::new(total, cfg.n_nodes),
+            decode_index: LoadIndex::new(total, cfg.n_nodes),
             scratch_loads: Vec::with_capacity(total),
             scratch_batch: Vec::with_capacity(cfg.batch.max_prefill_reqs),
             scratch_done: Vec::with_capacity(cfg.batch.max_decode_reqs),
             scratch_node_w: Vec::with_capacity(cfg.n_nodes),
             cfg,
+        };
+        for gi in 0..cl.gpus.len() {
+            cl.refresh_worker(gi);
         }
+        cl
     }
 
     pub fn run(mut self) -> RunResult {
@@ -207,23 +226,76 @@ impl Cluster {
         self.cfg.batch.ring_slots.saturating_sub(self.ring_used[node])
     }
 
+    // ------------------------------------------------------------------
+    // incremental routing state
+    // ------------------------------------------------------------------
+
+    /// Re-derive `gi`'s entries in both pick indexes from its live
+    /// state. Called after every mutation that can change a routing
+    /// decision: enqueue, batch start, decode completion, drain begin,
+    /// role flip, failure, recovery. Cheap when nothing changed.
+    pub(crate) fn reindex(&mut self, gi: usize) {
+        let node = self.node_of(gi);
+        let (pf, dec) = {
+            let g = &self.gpus[gi];
+            let pf = (g.role == Role::Prefill && g.accepting()).then(|| {
+                LoadKey::prefill(
+                    g.pf_queued_tokens,
+                    g.pf_queue.len(),
+                    self.fleet.prefill_scale(gi),
+                    gi,
+                )
+            });
+            let dec = (g.role == Role::Decode && g.accepting()).then(|| {
+                LoadKey::decode(g.decode_load(), 0, self.fleet.decode_scale(gi), gi)
+            });
+            (pf, dec)
+        };
+        self.prefill_index.update(gi, node, pf);
+        self.decode_index.update(gi, node, dec);
+    }
+
+    /// Reindex plus role-list membership — for role flips, failures and
+    /// recoveries (load-only changes take the cheaper [`Self::reindex`]).
+    pub(crate) fn refresh_worker(&mut self, gi: usize) {
+        for role in [Role::Prefill, Role::Decode, Role::Coalesced] {
+            let member = {
+                let g = &self.gpus[gi];
+                g.role == role && !g.failed
+            };
+            let ids = match role {
+                Role::Prefill => &mut self.prefill_ids,
+                Role::Decode => &mut self.decode_ids,
+                Role::Coalesced => &mut self.coalesced_ids,
+            };
+            match (ids.binary_search(&gi), member) {
+                (Ok(pos), false) => {
+                    ids.remove(pos);
+                }
+                (Err(pos), true) => ids.insert(pos, gi),
+                _ => {}
+            }
+        }
+        self.reindex(gi);
+    }
+
     /// Router view of every prefill worker, into a caller-owned buffer.
     /// `perf_scale` normalizes queued tokens by SKU throughput so a
     /// faster part absorbs proportionally more backlog (1.0 everywhere
-    /// on a homogeneous fleet).
+    /// on a homogeneous fleet). Only the maintained role members are
+    /// walked, so the debug-build reference comparator stays cheap.
     fn fill_prefill_loads(&self, out: &mut Vec<WorkerLoad>) {
         out.clear();
-        for (i, g) in self.gpus.iter().enumerate() {
-            if g.role == Role::Prefill && !g.failed {
-                out.push(WorkerLoad {
-                    gpu: GpuId(i),
-                    node: self.node_of(i),
-                    queued_tokens: g.pf_queued_tokens,
-                    requests: g.pf_queue.len(),
-                    accepting: g.accepting(),
-                    perf_scale: self.fleet.prefill_scale(i),
-                });
-            }
+        for &i in &self.prefill_ids {
+            let g = &self.gpus[i];
+            out.push(WorkerLoad {
+                gpu: GpuId(i),
+                node: self.node_of(i),
+                queued_tokens: g.pf_queued_tokens,
+                requests: g.pf_queue.len(),
+                accepting: g.accepting(),
+                perf_scale: self.fleet.prefill_scale(i),
+            });
         }
     }
 
@@ -231,41 +303,55 @@ impl Cluster {
     /// (drain re-routing must not pick the drainer itself).
     fn fill_decode_loads(&self, exclude: Option<usize>, out: &mut Vec<WorkerLoad>) {
         out.clear();
-        for (i, g) in self.gpus.iter().enumerate() {
-            if g.role == Role::Decode && !g.failed && Some(i) != exclude {
-                out.push(WorkerLoad {
-                    gpu: GpuId(i),
-                    node: self.node_of(i),
-                    queued_tokens: 0,
-                    requests: g.decode_load(),
-                    accepting: g.accepting(),
-                    perf_scale: self.fleet.decode_scale(i),
-                });
+        for &i in &self.decode_ids {
+            if Some(i) == exclude {
+                continue;
             }
+            let g = &self.gpus[i];
+            out.push(WorkerLoad {
+                gpu: GpuId(i),
+                node: self.node_of(i),
+                queued_tokens: 0,
+                requests: g.decode_load(),
+                accepting: g.accepting(),
+                perf_scale: self.fleet.decode_scale(i),
+            });
         }
     }
 
-    /// Least-loaded accepting prefill worker, via the reused routing
-    /// scratch (no per-decision allocation).
+    /// Least-loaded accepting prefill worker, read off the incremental
+    /// index (O(log n)). Debug builds re-derive the pick with the linear
+    /// reference scan and assert equality, exact ties included.
     pub(crate) fn pick_prefill_gpu(&mut self) -> Option<GpuId> {
-        let mut loads = std::mem::take(&mut self.scratch_loads);
-        self.fill_prefill_loads(&mut loads);
-        let pick = router::pick_prefill(&loads);
-        self.scratch_loads = loads;
+        let pick = self.prefill_index.pick(None);
+        #[cfg(debug_assertions)]
+        {
+            let mut loads = std::mem::take(&mut self.scratch_loads);
+            self.fill_prefill_loads(&mut loads);
+            let reference = router::pick_prefill(&loads);
+            self.scratch_loads = loads;
+            debug_assert_eq!(pick, reference, "indexed prefill pick != linear reference");
+        }
         pick
     }
 
     /// Least-loaded accepting decode worker with same-node preference,
-    /// via the reused routing scratch.
+    /// read off the incremental index (O(log n)); debug builds assert
+    /// equality against the linear reference.
     pub(crate) fn pick_decode_gpu(
         &mut self,
         exclude: Option<usize>,
         prefer_node: usize,
     ) -> Option<GpuId> {
-        let mut loads = std::mem::take(&mut self.scratch_loads);
-        self.fill_decode_loads(exclude, &mut loads);
-        let pick = router::pick_decode_prefer_node(&loads, prefer_node);
-        self.scratch_loads = loads;
+        let pick = self.decode_index.pick_prefer_node(prefer_node, exclude);
+        #[cfg(debug_assertions)]
+        {
+            let mut loads = std::mem::take(&mut self.scratch_loads);
+            self.fill_decode_loads(exclude, &mut loads);
+            let reference = router::pick_decode_prefer_node(&loads, prefer_node);
+            self.scratch_loads = loads;
+            debug_assert_eq!(pick, reference, "indexed decode pick != linear reference");
+        }
         pick
     }
 
@@ -340,12 +426,16 @@ impl Cluster {
                 .iter()
                 .position(|g| !g.failed && g.committed_role() == Role::Prefill);
             match fallback {
-                Some(i) => self.gpus[i].push_prefill(req),
+                Some(i) => {
+                    self.gpus[i].push_prefill(req);
+                    self.reindex(i);
+                }
                 None => self.orphan_reqs.push(req),
             }
             return;
         };
         self.gpus[gpu.0].push_prefill(req);
+        self.reindex(gpu.0);
         self.kick_prefill(gpu.0);
     }
 
@@ -354,17 +444,19 @@ impl Cluster {
     /// path so both rank workers identically.
     pub(crate) fn fill_coalesced_loads(&self, exclude: Option<usize>, out: &mut Vec<WorkerLoad>) {
         out.clear();
-        for (i, g) in self.gpus.iter().enumerate() {
-            if g.role == Role::Coalesced && !g.failed && Some(i) != exclude {
-                out.push(WorkerLoad {
-                    gpu: GpuId(i),
-                    node: self.node_of(i),
-                    queued_tokens: g.co_queued_tokens(),
-                    requests: g.co_queue.len() + g.dec_active.len(),
-                    accepting: g.accepting(),
-                    perf_scale: self.fleet.prefill_scale(i),
-                });
+        for &i in &self.coalesced_ids {
+            if Some(i) == exclude {
+                continue;
             }
+            let g = &self.gpus[i];
+            out.push(WorkerLoad {
+                gpu: GpuId(i),
+                node: self.node_of(i),
+                queued_tokens: g.co_queued_tokens(),
+                requests: g.co_queue.len() + g.dec_active.len(),
+                accepting: g.accepting(),
+                perf_scale: self.fleet.prefill_scale(i),
+            });
         }
     }
 
@@ -442,11 +534,15 @@ impl Cluster {
     }
 
     fn pool(&self, role: Role) -> Vec<GpuId> {
-        self.gpus
-            .iter()
-            .enumerate()
-            .filter(|(_, g)| g.role == role && g.accepting())
-            .map(|(i, _)| GpuId(i))
+        let ids = match role {
+            Role::Prefill => &self.prefill_ids,
+            Role::Decode => &self.decode_ids,
+            Role::Coalesced => &self.coalesced_ids,
+        };
+        ids.iter()
+            .copied()
+            .filter(|&i| self.gpus[i].accepting())
+            .map(GpuId)
             .collect()
     }
 
@@ -623,6 +719,9 @@ impl Cluster {
             }
             g.draining_to = Some(to);
         }
+        // A drainer accepts nothing: drop out of the pick indexes before
+        // its queued work re-routes (it must not pick itself up again).
+        self.reindex(gi);
         // Re-route queued (not yet running) work to peers.
         let queued: Vec<Request> = {
             let g = &mut self.gpus[gi];
@@ -676,6 +775,7 @@ impl Cluster {
         g.role = g.draining_to.take().unwrap();
         g.epoch += 1;
         g.busy = false;
+        self.refresh_worker(gi);
         self.record_roles();
         let role = self.gpus[gi].role;
         worker::behavior(role).kick(self, gi);
@@ -688,8 +788,11 @@ impl Cluster {
     }
 
     fn steal_prefill_work(&mut self, gi: usize) {
-        let Some(victim) = (0..self.gpus.len())
-            .filter(|&i| i != gi && self.gpus[i].role == Role::Prefill && !self.gpus[i].failed)
+        let Some(victim) = self
+            .prefill_ids
+            .iter()
+            .copied()
+            .filter(|&i| i != gi)
             .max_by_key(|&i| self.gpus[i].pf_queued_tokens)
         else {
             return;
@@ -701,6 +804,8 @@ impl Cluster {
                 self.gpus[gi].push_prefill(r);
             }
         }
+        self.reindex(victim);
+        self.reindex(gi);
         self.kick_prefill(gi);
     }
 

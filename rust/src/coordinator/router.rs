@@ -115,6 +115,122 @@ pub fn pick_decode_prefer_node(loads: &[WorkerLoad], node: usize) -> Option<GpuI
     }
 }
 
+// ---------------------------------------------------------------------
+// Incremental load indexes (thousand-node routing)
+// ---------------------------------------------------------------------
+
+/// Sort key of one worker inside a [`LoadIndex`], ordered exactly like
+/// the linear comparators: normalized load first, then the role's raw
+/// tie-breaker, then GPU id.
+///
+/// The float comparison is encoded as integer bits: for non-negative
+/// finite f64 values (loads always are — counts divided by a positive
+/// scale), `total_cmp` order equals unsigned order of `to_bits()`, so a
+/// plain lexicographic `Ord` on this struct reproduces `prefill_order` /
+/// `decode_order` bit-for-bit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct LoadKey {
+    eff_bits: u64,
+    tie: u64,
+    gpu: usize,
+}
+
+impl LoadKey {
+    /// Key for a prefill worker: normalized queued prompt tokens, ties
+    /// by raw queued request count.
+    pub fn prefill(queued_tokens: u64, requests: usize, perf_scale: f64, gpu: usize) -> Self {
+        let eff = queued_tokens as f64 / perf_scale;
+        debug_assert!(eff >= 0.0 && eff.is_finite());
+        LoadKey { eff_bits: eff.to_bits(), tie: requests as u64, gpu }
+    }
+
+    /// Key for a decode worker: normalized resident+pending requests,
+    /// ties by raw queued tokens (always 0 for decode pools today).
+    pub fn decode(requests: usize, queued_tokens: u64, perf_scale: f64, gpu: usize) -> Self {
+        let eff = requests as f64 / perf_scale;
+        debug_assert!(eff >= 0.0 && eff.is_finite());
+        LoadKey { eff_bits: eff.to_bits(), tie: queued_tokens, gpu }
+    }
+
+    pub fn gpu(&self) -> GpuId {
+        GpuId(self.gpu)
+    }
+
+    fn eff(&self) -> f64 {
+        f64::from_bits(self.eff_bits)
+    }
+}
+
+/// Incrementally-maintained pick index for one worker role: an ordered
+/// set of [`LoadKey`]s cluster-wide plus one per node, updated in
+/// O(log n) whenever a worker's load or eligibility changes. Picks read
+/// the set minimum instead of scanning every GPU, making routing
+/// O(log n) on thousand-GPU fleets. Only *accepting* workers are ever
+/// resident, matching the `accepting` filter of the linear scans.
+#[derive(Debug)]
+pub struct LoadIndex {
+    /// Current (key, node) of each GPU; `None` = not indexed.
+    entries: Vec<Option<(LoadKey, usize)>>,
+    global: std::collections::BTreeSet<LoadKey>,
+    by_node: Vec<std::collections::BTreeSet<LoadKey>>,
+}
+
+impl LoadIndex {
+    pub fn new(n_gpus: usize, n_nodes: usize) -> Self {
+        LoadIndex {
+            entries: vec![None; n_gpus],
+            global: std::collections::BTreeSet::new(),
+            by_node: vec![std::collections::BTreeSet::new(); n_nodes],
+        }
+    }
+
+    /// Install `key` as `gpu`'s current load (or remove it with `None`).
+    /// Idempotent and cheap when the key is unchanged.
+    pub fn update(&mut self, gpu: usize, node: usize, key: Option<LoadKey>) {
+        if let Some((old, old_node)) = self.entries[gpu] {
+            if Some(old) == key && old_node == node {
+                return;
+            }
+            self.global.remove(&old);
+            self.by_node[old_node].remove(&old);
+        }
+        self.entries[gpu] = key.map(|k| {
+            self.global.insert(k);
+            self.by_node[node].insert(k);
+            (k, node)
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.global.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.global.is_empty()
+    }
+
+    /// Least-loaded indexed worker, skipping `exclude` (≤ 2 set probes).
+    pub fn pick(&self, exclude: Option<usize>) -> Option<GpuId> {
+        self.global
+            .iter()
+            .find(|k| Some(k.gpu) != exclude)
+            .map(LoadKey::gpu)
+    }
+
+    /// Indexed [`pick_decode_prefer_node`]: the node-local minimum wins
+    /// unless the global minimum is more than `LOCALITY_SLACK_REQS`
+    /// normalized requests lighter — the same arithmetic on the same
+    /// values as the linear reference, so picks are identical.
+    pub fn pick_prefer_node(&self, node: usize, exclude: Option<usize>) -> Option<GpuId> {
+        let global = self.global.iter().find(|k| Some(k.gpu) != exclude)?;
+        let local = self.by_node[node].iter().find(|k| Some(k.gpu) != exclude);
+        match local {
+            Some(l) if l.eff() <= global.eff() + LOCALITY_SLACK_REQS as f64 => Some(l.gpu()),
+            _ => Some(global.gpu()),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -267,5 +383,130 @@ mod tests {
         // 6 / 2.0 = 3 normalized <= 1 + 4 slack.
         let fast = [scaled_load(1, 0, 6, true, 2.0), scaled_load(9, 0, 1, true, 1.0)];
         assert_eq!(pick_decode_prefer_node(&fast, 0), Some(GpuId(1)));
+    }
+
+    // ------------------------------------------------------------------
+    // incremental LoadIndex vs the linear reference
+    // ------------------------------------------------------------------
+
+    /// Mirror of the cluster's fill-then-pick path: build loads from the
+    /// same state the index sees, drop non-accepting entries entirely
+    /// (the index never holds them; the linear pick filters them).
+    fn reference_loads(state: &[(u64, usize, bool, f64)], decode: bool) -> Vec<WorkerLoad> {
+        state
+            .iter()
+            .enumerate()
+            .map(|(gpu, &(tokens, reqs, accepting, scale))| WorkerLoad {
+                gpu: GpuId(gpu),
+                node: gpu / 8,
+                queued_tokens: if decode { 0 } else { tokens },
+                requests: reqs,
+                accepting,
+                perf_scale: scale,
+            })
+            .collect()
+    }
+
+    fn sync_index(idx: &mut LoadIndex, state: &[(u64, usize, bool, f64)], decode: bool) {
+        for (gpu, &(tokens, reqs, accepting, scale)) in state.iter().enumerate() {
+            let key = accepting.then(|| {
+                if decode {
+                    LoadKey::decode(reqs, 0, scale, gpu)
+                } else {
+                    LoadKey::prefill(tokens, reqs, scale, gpu)
+                }
+            });
+            idx.update(gpu, gpu / 8, key);
+        }
+    }
+
+    #[test]
+    fn index_matches_linear_reference_under_random_churn() {
+        // Random enqueue/step/eligibility-flip sequences on fleets from
+        // 8 to 1024 GPUs; after every mutation the indexed pick must
+        // equal the linear scan, including exact ties and the
+        // prefer-node slack comparison.
+        let mut rng = crate::util::rng::Rng::new(0x10AD);
+        for &n in &[8usize, 24, 128, 1024] {
+            let nodes = n.div_ceil(8);
+            // (queued_tokens, requests, accepting, perf_scale) per GPU.
+            // Scales drawn from the shipped SKU table values plus 1.0.
+            let scales = [1.0, 1.45, 0.62, 2.0];
+            let mut state: Vec<(u64, usize, bool, f64)> = (0..n)
+                .map(|i| (0, 0, true, scales[i % scales.len()]))
+                .collect();
+            let mut pf = LoadIndex::new(n, nodes);
+            let mut dec = LoadIndex::new(n, nodes);
+            for step in 0..600 {
+                let g = rng.index(n);
+                match rng.index(5) {
+                    // enqueue: tokens arrive (small range forces ties)
+                    0 => state[g].0 += rng.range_u64(0, 3) * 512,
+                    // step: drain tokens / finish requests
+                    1 => {
+                        state[g].0 = state[g].0.saturating_sub(1024);
+                        state[g].1 = state[g].1.saturating_sub(1);
+                    }
+                    // admission: request lands
+                    2 => state[g].1 += rng.index(3),
+                    // drain/fail: leaves both pools
+                    3 => state[g].2 = false,
+                    // recover/flip back in
+                    _ => state[g].2 = true,
+                }
+                sync_index(&mut pf, &state, false);
+                sync_index(&mut dec, &state, true);
+                let pf_loads = reference_loads(&state, false);
+                let dec_loads = reference_loads(&state, true);
+                assert_eq!(pf.pick(None), pick_prefill(&pf_loads), "step {step} n {n}");
+                assert_eq!(dec.pick(None), pick_decode(&dec_loads), "step {step} n {n}");
+                let node = rng.index(nodes);
+                assert_eq!(
+                    dec.pick_prefer_node(node, None),
+                    pick_decode_prefer_node(&dec_loads, node),
+                    "step {step} n {n} node {node}"
+                );
+                // Excluded picks mirror fill_decode_loads' exclude arg.
+                let ex = rng.index(n);
+                let mut without: Vec<WorkerLoad> = dec_loads.clone();
+                without.retain(|l| l.gpu.0 != ex);
+                assert_eq!(
+                    dec.pick_prefer_node(node, Some(ex)),
+                    pick_decode_prefer_node(&without, node),
+                    "step {step} n {n} exclude {ex}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn index_exact_ties_break_like_the_comparators() {
+        // Two workers with bit-equal normalized loads: requests, then
+        // gpu id decide, exactly as `prefill_order`.
+        let mut idx = LoadIndex::new(4, 1);
+        idx.update(2, 0, Some(LoadKey::prefill(4000, 1, 2.0, 2)));
+        idx.update(1, 0, Some(LoadKey::prefill(2000, 1, 1.0, 1)));
+        assert_eq!(idx.pick(None), Some(GpuId(1)), "id breaks the full tie");
+        idx.update(1, 0, Some(LoadKey::prefill(2000, 3, 1.0, 1)));
+        assert_eq!(idx.pick(None), Some(GpuId(2)), "requests break the eff tie");
+        // Removal restores the other candidate.
+        idx.update(2, 0, None);
+        assert_eq!(idx.pick(None), Some(GpuId(1)));
+        idx.update(1, 0, None);
+        assert_eq!(idx.pick(None), None);
+    }
+
+    #[test]
+    fn index_prefer_node_falls_back_without_local_candidates() {
+        let mut idx = LoadIndex::new(16, 2);
+        idx.update(9, 1, Some(LoadKey::decode(1, 0, 1.0, 9)));
+        // No node-0 candidate: global pick wins.
+        assert_eq!(idx.pick_prefer_node(0, None), Some(GpuId(9)));
+        // A local worker within slack takes over.
+        idx.update(1, 0, Some(LoadKey::decode(5, 0, 1.0, 1)));
+        assert_eq!(idx.pick_prefer_node(0, None), Some(GpuId(1)));
+        // Beyond slack the remote worker wins again.
+        idx.update(1, 0, Some(LoadKey::decode(6, 0, 1.0, 1)));
+        assert_eq!(idx.pick_prefer_node(0, None), Some(GpuId(9)));
     }
 }

@@ -12,6 +12,8 @@
 //! The single-node constructor (`new`) is the paper's testbed: one node
 //! whose budget is also the cluster budget.
 
+use std::cell::Cell;
+
 use crate::power::capper::{CapState, RampProfile};
 use crate::types::{GpuId, Micros, Watts};
 
@@ -83,6 +85,23 @@ pub struct PowerManager {
     /// Failed GPUs: excluded from every budget sum, uniform split and
     /// cap trace until they recover (environment subsystem).
     offline: Vec<bool>,
+    /// Per-GPU committed cap (target ∨ pending raises, 0 when offline),
+    /// kept current by `refresh_committed` at every mutation so budget
+    /// sums never rescan `caps`/`pending`.
+    committed_of: Vec<Watts>,
+    /// GPUs of each node in ascending id order — the summation order the
+    /// node totals have always used (bit-identity invariant).
+    node_members: Vec<Vec<usize>>,
+    /// Cached folds of `committed_of`. Dirty-tracked rather than
+    /// delta-updated: f64 addition is not associative, so the only sum
+    /// that is bit-identical to the historical `Vec` fold is a refold
+    /// over the same values in the same order. Queries between
+    /// mutations are O(1); a mutation marks only the touched node (and
+    /// the cluster) dirty.
+    cluster_sum: Cell<Watts>,
+    cluster_dirty: Cell<bool>,
+    node_sum: Vec<Cell<Watts>>,
+    node_dirty: Vec<Cell<bool>>,
 }
 
 impl PowerManager {
@@ -145,6 +164,11 @@ impl PowerManager {
         assert_eq!(initial_caps.len(), min_of.len());
         assert_eq!(initial_caps.len(), max_of.len());
         assert!(node_of.iter().all(|&n| n < node_budgets.len()));
+        let mut node_members: Vec<Vec<usize>> = vec![Vec::new(); node_budgets.len()];
+        for (i, &nd) in node_of.iter().enumerate() {
+            node_members[nd].push(i);
+        }
+        let n_nodes = node_budgets.len();
         PowerManager {
             caps: initial_caps.iter().map(|&w| CapState::new(w)).collect(),
             offline: vec![false; initial_caps.len()],
@@ -157,6 +181,13 @@ impl PowerManager {
             min_of,
             rated_max: max_of.clone(),
             max_of,
+            // No pending, nobody offline: committed == initial targets.
+            committed_of: initial_caps.to_vec(),
+            node_members,
+            cluster_sum: Cell::new(0.0),
+            cluster_dirty: Cell::new(true),
+            node_sum: (0..n_nodes).map(|_| Cell::new(0.0)).collect(),
+            node_dirty: (0..n_nodes).map(|_| Cell::new(true)).collect(),
         }
     }
 
@@ -205,46 +236,65 @@ impl PowerManager {
         self.caps[gpu.0].effective(now)
     }
 
-    /// Per-GPU committed cap: target plus any pending raise. A failed
-    /// (offline) GPU draws nothing and counts for nothing.
-    fn committed_caps(&self) -> Vec<Watts> {
-        let mut per_gpu: Vec<Watts> = self
-            .caps
-            .iter()
-            .zip(&self.offline)
-            .map(|(c, &off)| if off { 0.0 } else { c.target() })
-            .collect();
-        for p in &self.pending {
-            per_gpu[p.gpu.0] = per_gpu[p.gpu.0].max(p.cap);
-        }
-        per_gpu
-    }
-
-    /// Committed cap of one GPU without materializing the per-GPU
-    /// vector (budget-step shedding runs on the DES hot path).
-    fn committed_cap_of(&self, i: usize) -> Watts {
+    /// Recompute one GPU's committed cap (target plus any pending raise;
+    /// a failed GPU draws nothing and counts for nothing) after a
+    /// mutation, dirtying the affected sums only when the value moved.
+    fn refresh_committed(&mut self, i: usize) {
         let mut c = if self.offline[i] { 0.0 } else { self.caps[i].target() };
         for p in &self.pending {
             if p.gpu.0 == i {
                 c = c.max(p.cap);
             }
         }
-        c
+        if c.to_bits() != self.committed_of[i].to_bits() {
+            self.committed_of[i] = c;
+            self.cluster_dirty.set(true);
+            self.node_dirty[self.node_of[i]].set(true);
+        }
+    }
+
+    /// Refold the whole committed view in one pass — for bulk rewrites
+    /// (uniform redistribution, budget sheds) where per-GPU refreshes
+    /// would rescan `pending` once per GPU.
+    fn rebuild_committed(&mut self) {
+        for i in 0..self.caps.len() {
+            self.committed_of[i] =
+                if self.offline[i] { 0.0 } else { self.caps[i].target() };
+        }
+        for p in &self.pending {
+            let c = &mut self.committed_of[p.gpu.0];
+            *c = c.max(p.cap);
+        }
+        self.cluster_dirty.set(true);
+        for d in &self.node_dirty {
+            d.set(true);
+        }
     }
 
     /// Sum of target caps plus any pending raises (the committed power).
+    /// O(1) between mutations; a dirty cache refolds `committed_of` in
+    /// GPU-id order — the summation order this total has always used, so
+    /// the result is bit-identical to the historical per-call rebuild.
     pub fn committed_total(&self) -> Watts {
-        self.committed_caps().iter().sum()
+        if self.cluster_dirty.get() {
+            self.cluster_sum.set(self.committed_of.iter().sum());
+            self.cluster_dirty.set(false);
+        }
+        self.cluster_sum.get()
     }
 
-    /// Committed power of one node.
+    /// Committed power of one node (cached like `committed_total`; the
+    /// refold runs over the node's members in ascending id order).
     pub fn committed_node_total(&self, node: usize) -> Watts {
-        self.committed_caps()
-            .iter()
-            .zip(&self.node_of)
-            .filter(|(_, &n)| n == node)
-            .map(|(c, _)| c)
-            .sum()
+        if self.node_dirty[node].get() {
+            let s: Watts = self.node_members[node]
+                .iter()
+                .map(|&i| self.committed_of[i])
+                .sum();
+            self.node_sum[node].set(s);
+            self.node_dirty[node].set(false);
+        }
+        self.node_sum[node].get()
     }
 
     fn check_limits(&self, gpu: GpuId, cap: Watts) -> Result<(), PowerError> {
@@ -280,7 +330,9 @@ impl PowerManager {
                 }
             }
         }
-        Ok(self.caps[gpu.0].set_target(now, cap, &self.profile))
+        let d = self.caps[gpu.0].set_target(now, cap, &self.profile);
+        self.refresh_committed(gpu.0);
+        Ok(d)
     }
 
     /// Move `total_w` watts from `sources` to `sinks` (split evenly inside
@@ -349,6 +401,9 @@ impl PowerManager {
         // A pending raise on a source would land *after* we lower it and
         // overshoot the budget: cancel source-side pending raises first.
         self.pending.retain(|p| !sources.contains(&p.gpu));
+        for &g in sources {
+            self.refresh_committed(g.0);
+        }
         // Sink room must account for raises already committed to them.
         let committed_cap = |mgr: &Self, g: GpuId| {
             let mut c = mgr.caps[g.0].target();
@@ -410,6 +465,7 @@ impl PowerManager {
             let reduce = (cur - ((cur - want).max(self.min_of[g.0]))) * scale;
             let new = cur - reduce;
             let d = self.caps[g.0].set_target(now, new, &self.profile);
+            self.refresh_committed(g.0);
             settle_deadline = settle_deadline.max(d);
             lowered_full.push((g, new, reduce));
         }
@@ -469,6 +525,7 @@ impl PowerManager {
                 cap,
                 at: settle_deadline,
             });
+            self.refresh_committed(g.0);
             raised.push((g, cap));
         }
         // Budget clamps (a full sink node, or the cluster cap) can strand
@@ -496,6 +553,7 @@ impl PowerManager {
                 }
                 let cap = (self.caps[g.0].target() + restore).min(self.max_of[g.0]);
                 let d = self.caps[g.0].set_target(now, cap, &self.profile);
+                self.refresh_committed(g.0);
                 settle_deadline = settle_deadline.max(d);
                 lowered_full[i].1 = cap;
             }
@@ -516,17 +574,18 @@ impl PowerManager {
     pub fn distribute_uniform(&mut self, now: Micros) -> Micros {
         let online = self.offline.iter().filter(|&&off| !off).count().max(1);
         let per_gpu_cluster = self.cluster_budget / online as f64;
-        let node_count = |nd: usize| {
-            self.node_of
-                .iter()
-                .zip(&self.offline)
-                .filter(|&(&n, &off)| n == nd && !off)
-                .count()
-        };
+        // Per-node online counts in one sweep (a per-GPU rescan made this
+        // quadratic on kilo-node fleets).
+        let mut node_online = vec![0usize; self.node_budgets.len()];
+        for (i, &nd) in self.node_of.iter().enumerate() {
+            if !self.offline[i] {
+                node_online[nd] += 1;
+            }
+        }
         let uniform_of: Vec<Watts> = (0..self.caps.len())
             .map(|i| {
                 let nd = self.node_of[i];
-                (self.node_budgets[nd] / node_count(nd) as f64)
+                (self.node_budgets[nd] / node_online[nd] as f64)
                     .min(per_gpu_cluster)
                     .clamp(self.min_of[i], self.max_of[i])
             })
@@ -550,6 +609,7 @@ impl PowerManager {
                 });
             }
         }
+        self.rebuild_committed();
         settle
     }
 
@@ -597,13 +657,12 @@ impl PowerManager {
             Some(nd) => self.node_budgets[nd],
             None => self.cluster_budget,
         };
-        let mut committed = 0.0;
-        for i in 0..self.caps.len() {
-            if node.map_or(false, |nd| self.node_of[i] != nd) {
-                continue;
-            }
-            committed += self.committed_cap_of(i);
-        }
+        // Cached totals make the common case — a pool already within its
+        // stepped budget — O(1) instead of a full fleet rescan.
+        let committed = match node {
+            Some(nd) => self.committed_node_total(nd),
+            None => self.committed_total(),
+        };
         if committed <= budget + 1e-9 {
             return now;
         }
@@ -616,10 +675,21 @@ impl PowerManager {
                 self.offline[i] || node.map_or(false, |nd| self.node_of[i] != nd)
             })
             .collect();
+        // A node-scoped shed walks only that node's members (ascending
+        // ids, same order as before) instead of the whole fleet.
+        let pool_len = match node {
+            Some(nd) => self.node_members[nd].len(),
+            None => self.caps.len(),
+        };
+        let member = |mgr: &Self, k: usize| match node {
+            Some(nd) => mgr.node_members[nd][k],
+            None => k,
+        };
         let mut total = 0.0;
         let mut slack = 0.0;
-        for i in 0..self.caps.len() {
-            if self.offline[i] || node.map_or(false, |nd| self.node_of[i] != nd) {
+        for k in 0..pool_len {
+            let i = member(self, k);
+            if self.offline[i] {
                 continue;
             }
             total += self.caps[i].target();
@@ -627,11 +697,14 @@ impl PowerManager {
         }
         let cut = (total - budget).min(slack);
         if cut <= 1e-9 || slack <= 0.0 {
+            // The pending cancellation above still changed the books.
+            self.rebuild_committed();
             return now;
         }
         let mut settle = now;
-        for i in 0..self.caps.len() {
-            if self.offline[i] || node.map_or(false, |nd| self.node_of[i] != nd) {
+        for k in 0..pool_len {
+            let i = member(self, k);
+            if self.offline[i] {
                 continue;
             }
             let s = (self.caps[i].target() - self.min_of[i]).max(0.0);
@@ -642,6 +715,7 @@ impl PowerManager {
             let d = self.caps[i].set_target(now, new, &self.profile);
             settle = settle.max(d);
         }
+        self.rebuild_committed();
         settle
     }
 
@@ -658,11 +732,13 @@ impl PowerManager {
                 p.cap = p.cap.min(ceil);
             }
         }
-        if self.caps[i].target() > ceil {
+        let d = if self.caps[i].target() > ceil {
             self.caps[i].set_target(now, ceil, &self.profile)
         } else {
             now
-        }
+        };
+        self.refresh_committed(i);
+        d
     }
 
     /// Thermal derating ends: the rated ceiling returns. The cap itself
@@ -693,6 +769,7 @@ impl PowerManager {
         } else {
             self.caps[i].set_target(now, self.min_of[i], &self.profile);
         }
+        self.refresh_committed(i);
     }
 
     /// Is this GPU currently failed?
@@ -703,19 +780,25 @@ impl PowerManager {
     /// Apply any pending raises that are due; returns them for logging.
     pub fn poll(&mut self, now: Micros) -> Vec<(GpuId, Watts)> {
         let mut applied = Vec::new();
-        let mut remaining = Vec::new();
+        let mut due = Vec::new();
         let pending = std::mem::take(&mut self.pending);
         for p in pending {
             if p.at <= now {
-                // Raise within limits; budget holds by construction.
-                let cap = p.cap.clamp(self.min_of[p.gpu.0], self.max_of[p.gpu.0]);
-                self.caps[p.gpu.0].set_target(now, cap, &self.profile);
-                applied.push((p.gpu, cap));
+                due.push(p);
             } else {
-                remaining.push(p);
+                self.pending.push(p);
             }
         }
-        self.pending = remaining;
+        // Split first so each refresh below sees the final pending list;
+        // poll does no budget checks, so applying after the split is
+        // order-equivalent. A poll with nothing due touches no GPU.
+        for p in due {
+            // Raise within limits; budget holds by construction.
+            let cap = p.cap.clamp(self.min_of[p.gpu.0], self.max_of[p.gpu.0]);
+            self.caps[p.gpu.0].set_target(now, cap, &self.profile);
+            self.refresh_committed(p.gpu.0);
+            applied.push((p.gpu, cap));
+        }
         applied
     }
 
@@ -1348,6 +1431,88 @@ mod tests {
         assert!(mv.raised.is_empty() && mv.lowered.is_empty(), "{mv:?}");
         assert_eq!(m.target(GpuId(4)), 600.0);
         assert!(m.budget_ok());
+    }
+
+    /// The historical `committed_caps()` rebuild, kept verbatim as the
+    /// reference the cached sums must reproduce bit-for-bit.
+    fn reference_committed(m: &PowerManager) -> Vec<Watts> {
+        let mut per_gpu: Vec<Watts> = m
+            .caps
+            .iter()
+            .zip(&m.offline)
+            .map(|(c, &off)| if off { 0.0 } else { c.target() })
+            .collect();
+        for p in &m.pending {
+            per_gpu[p.gpu.0] = per_gpu[p.gpu.0].max(p.cap);
+        }
+        per_gpu
+    }
+
+    fn assert_totals_bit_exact(m: &PowerManager, what: &str) {
+        let per_gpu = reference_committed(m);
+        let want: Watts = per_gpu.iter().sum();
+        assert_eq!(
+            m.committed_total().to_bits(),
+            want.to_bits(),
+            "cluster total drifted after {what}: {} vs {}",
+            m.committed_total(),
+            want
+        );
+        for nd in 0..m.n_nodes() {
+            let want_nd: Watts = per_gpu
+                .iter()
+                .zip(&m.node_of)
+                .filter(|(_, &n)| n == nd)
+                .map(|(c, _)| c)
+                .sum();
+            assert_eq!(
+                m.committed_node_total(nd).to_bits(),
+                want_nd.to_bits(),
+                "node {nd} total drifted after {what}"
+            );
+        }
+    }
+
+    #[test]
+    fn cached_totals_match_rebuild_bit_exactly_through_all_mutations() {
+        for (label, mut m) in [
+            ("4p4d", manager_4p4d()),
+            ("two-node", manager_two_nodes(4100.0)),
+        ] {
+            assert_totals_bit_exact(&m, "construction");
+            m.set_cap(0, GpuId(0), 450.0).unwrap();
+            assert_totals_bit_exact(&m, "set_cap lower");
+            let _ = m.set_cap(0, GpuId(1), 750.0); // may reject on two-node
+            assert_totals_bit_exact(&m, "set_cap raise");
+            let mv = m
+                .move_power(SECOND, &[GpuId(4), GpuId(5)], &[GpuId(0), GpuId(2)], 90.0, 750.0)
+                .unwrap();
+            assert_totals_bit_exact(&m, "move_power (pending queued)");
+            assert!(m.poll(mv.effective_at - 1).is_empty());
+            assert_totals_bit_exact(&m, "poll with nothing due");
+            m.poll(mv.effective_at);
+            assert_totals_bit_exact(&m, "poll applying raises");
+            m.derate_gpu(2 * SECOND, GpuId(0), 430.0);
+            assert_totals_bit_exact(&m, "derate_gpu");
+            m.restore_gpu(3 * SECOND, GpuId(0));
+            assert_totals_bit_exact(&m, "restore_gpu");
+            m.set_offline(3 * SECOND, GpuId(7), true);
+            assert_totals_bit_exact(&m, "set_offline(true)");
+            let settle = m.distribute_uniform(4 * SECOND);
+            assert_totals_bit_exact(&m, "distribute_uniform (pending queued)");
+            m.poll(settle);
+            assert_totals_bit_exact(&m, "poll after distribute_uniform");
+            m.set_offline(5 * SECOND, GpuId(7), false);
+            assert_totals_bit_exact(&m, "set_offline(false)");
+            m.set_cluster_budget(6 * SECOND, 3700.0);
+            assert_totals_bit_exact(&m, "cluster budget shed");
+            m.set_node_budget(7 * SECOND, 0, 1700.0);
+            assert_totals_bit_exact(&m, "node budget shed");
+            m.set_cluster_budget(8 * SECOND, 4800.0);
+            let settle = m.distribute_uniform(8 * SECOND);
+            m.poll(settle);
+            assert_totals_bit_exact(&m, &format!("{label}: final redistribute"));
+        }
     }
 
     #[test]

@@ -1,4 +1,15 @@
-//! Discrete-event machinery: the event heap and event types.
+//! Discrete-event machinery: the event queue and event types.
+//!
+//! The queue is a calendar queue (hierarchical timing wheel with one
+//! level plus an overflow heap): near-future events land in fixed-width
+//! time buckets indexed directly from their timestamp, far-future events
+//! (beyond the bucket window) wait in a `BinaryHeap` and are decanted
+//! into buckets when the window advances. Push and pop are O(1) +
+//! O(log bucket_occupancy) instead of O(log n) over the whole fleet's
+//! event population, which is what makes thousand-GPU runs tractable.
+//! Pop order — strictly (at, seq), FIFO on timestamp ties — is identical
+//! to the original single `BinaryHeap`, so `RunResult`s are bit-for-bit
+//! unchanged. Set `RAPID_EVENTQ=heap` to fall back to the plain heap.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -81,11 +92,108 @@ impl Ord for HeapItem {
     }
 }
 
+/// Bucket width exponent: 2^10 µs ≈ 1 ms per bucket. Decode steps,
+/// prefill batches, KV hops and the telemetry/controller timers all land
+/// within a few thousand buckets of "now".
+const BUCKET_BITS: u32 = 10;
+const BUCKET_WIDTH: Micros = 1 << BUCKET_BITS;
+/// Window size: 4096 buckets ≈ 4.2 s of simulated time. Longer horizons
+/// (the environment timeline, sparse arrivals) overflow into the heap.
+const N_BUCKETS: usize = 4096;
+const SPAN: Micros = BUCKET_WIDTH * N_BUCKETS as Micros;
+
+/// The in-window part of the calendar: fixed-width buckets, each a small
+/// (at, seq)-ordered heap, plus a cursor that only moves forward.
+struct Calendar {
+    buckets: Vec<BinaryHeap<HeapItem>>,
+    /// Lowest bucket that may still hold events. Events pushed "into the
+    /// past" (at below the cursor bucket — the DES never rewinds, but
+    /// zero-delay events at the current instant do this) clamp to the
+    /// cursor bucket, where the per-bucket heap restores exact order.
+    cursor: usize,
+    /// Timestamp of bucket 0's left edge.
+    win_start: Micros,
+    /// Events currently resident in buckets (not counting overflow).
+    in_window: usize,
+    /// Events at or beyond `win_start + SPAN`.
+    overflow: BinaryHeap<HeapItem>,
+}
+
+impl Calendar {
+    fn new(capacity: usize) -> Self {
+        let mut buckets = Vec::with_capacity(N_BUCKETS);
+        buckets.resize_with(N_BUCKETS, BinaryHeap::new);
+        Calendar {
+            buckets,
+            cursor: 0,
+            win_start: 0,
+            in_window: 0,
+            overflow: BinaryHeap::with_capacity(capacity.min(64)),
+        }
+    }
+
+    fn push(&mut self, item: HeapItem) {
+        if item.at >= self.win_start + SPAN {
+            self.overflow.push(item);
+            return;
+        }
+        let idx = ((item.at.saturating_sub(self.win_start)) >> BUCKET_BITS) as usize;
+        self.buckets[idx.max(self.cursor)].push(item);
+        self.in_window += 1;
+    }
+
+    fn pop(&mut self) -> Option<HeapItem> {
+        loop {
+            if self.in_window > 0 {
+                // The global minimum always sits in the first non-empty
+                // bucket: every event in a later bucket has a strictly
+                // later timestamp (clamped events land *at* the cursor,
+                // never past it), and the per-bucket heap orders exact
+                // (at, seq) within the bucket.
+                while self.buckets[self.cursor].is_empty() {
+                    self.cursor += 1;
+                }
+                self.in_window -= 1;
+                return self.buckets[self.cursor].pop();
+            }
+            // Buckets are dry: jump the window to the overflow head and
+            // decant everything that now fits. Overflow items all sit at
+            // or past the old window's end, so the window never rewinds.
+            let head_at = self.overflow.peek()?.at;
+            self.win_start = head_at & !(BUCKET_WIDTH - 1);
+            self.cursor = 0;
+            while let Some(top) = self.overflow.peek() {
+                if top.at >= self.win_start + SPAN {
+                    break;
+                }
+                let item = self.overflow.pop().unwrap();
+                let idx = ((item.at - self.win_start) >> BUCKET_BITS) as usize;
+                self.buckets[idx].push(item);
+                self.in_window += 1;
+            }
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.in_window + self.overflow.len()
+    }
+}
+
+enum Backend {
+    Calendar(Calendar),
+    Heap(BinaryHeap<HeapItem>),
+}
+
 /// Earliest-first event queue with deterministic FIFO tie-breaking.
-#[derive(Default)]
 pub struct EventQueue {
-    heap: BinaryHeap<HeapItem>,
+    backend: Backend,
     seq: u64,
+}
+
+impl Default for EventQueue {
+    fn default() -> Self {
+        EventQueue::new()
+    }
 }
 
 impl EventQueue {
@@ -93,41 +201,63 @@ impl EventQueue {
         EventQueue::with_capacity(0)
     }
 
-    /// Preallocate the heap: steady-state sims keep roughly one in-flight
-    /// event per GPU plus the periodic timers, so sizing up-front avoids
-    /// the early growth reallocations on every run of a sweep.
+    /// Build the default calendar-queue backend, or the legacy single
+    /// `BinaryHeap` when `RAPID_EVENTQ=heap` is set (escape hatch and
+    /// equivalence-testing aid; pop order is identical either way).
+    /// Steady-state sims keep roughly one in-flight event per GPU plus
+    /// the periodic timers; the capacity hint presizes the heap backend.
     pub fn with_capacity(capacity: usize) -> Self {
+        match std::env::var("RAPID_EVENTQ") {
+            Ok(v) if v == "heap" => EventQueue::heap_with_capacity(capacity),
+            _ => EventQueue {
+                backend: Backend::Calendar(Calendar::new(capacity)),
+                seq: 0,
+            },
+        }
+    }
+
+    /// The legacy single-`BinaryHeap` backend, selectable directly (the
+    /// wheel-vs-heap golden tests compare full runs across backends).
+    pub fn heap_with_capacity(capacity: usize) -> Self {
         EventQueue {
-            heap: BinaryHeap::with_capacity(capacity),
+            backend: Backend::Heap(BinaryHeap::with_capacity(capacity)),
             seq: 0,
         }
     }
 
     pub fn push(&mut self, at: Micros, event: Event) {
         self.seq += 1;
-        self.heap.push(HeapItem {
-            at,
-            seq: self.seq,
-            event,
-        });
+        let item = HeapItem { at, seq: self.seq, event };
+        match &mut self.backend {
+            Backend::Calendar(c) => c.push(item),
+            Backend::Heap(h) => h.push(item),
+        }
     }
 
     pub fn pop(&mut self) -> Option<(Micros, Event)> {
-        self.heap.pop().map(|i| (i.at, i.event))
+        let item = match &mut self.backend {
+            Backend::Calendar(c) => c.pop(),
+            Backend::Heap(h) => h.pop(),
+        };
+        item.map(|i| (i.at, i.event))
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        match &self.backend {
+            Backend::Calendar(c) => c.len(),
+            Backend::Heap(h) => h.len(),
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len() == 0
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
 
     #[test]
     fn pops_in_time_order() {
@@ -172,5 +302,104 @@ mod tests {
         };
         assert_eq!(item.ctx_tokens(), 503);
         assert_eq!(item.remaining(), 7);
+    }
+
+    /// Tag pops so two queues can be compared event-by-event.
+    fn tag(q: &mut EventQueue, at: Micros, id: usize) {
+        q.push(at, Event::StepDone { gpu: id, epoch: 0 });
+    }
+
+    fn pop_tag(q: &mut EventQueue) -> Option<(Micros, usize)> {
+        q.pop().map(|(at, ev)| match ev {
+            Event::StepDone { gpu, .. } => (at, gpu),
+            _ => unreachable!(),
+        })
+    }
+
+    #[test]
+    fn calendar_matches_heap_on_random_workload() {
+        // Interleaved pushes and pops with a monotone "now" (the DES
+        // never schedules into the past) across short hops, zero-delay
+        // events and far-future overflow jumps.
+        let mut rng = Rng::new(0xE7E7);
+        let mut cal = EventQueue::new();
+        let mut heap = EventQueue::heap_with_capacity(0);
+        let mut now: Micros = 0;
+        let mut id = 0usize;
+        for _ in 0..20_000 {
+            if rng.chance(0.55) {
+                let delay = match rng.index(10) {
+                    0 => 0,                                 // same-instant
+                    1 => SPAN + rng.range_u64(0, SPAN * 3), // overflow
+                    _ => rng.range_u64(0, 40_000),          // typical hop
+                };
+                tag(&mut cal, now + delay, id);
+                tag(&mut heap, now + delay, id);
+                id += 1;
+            } else {
+                let a = pop_tag(&mut cal);
+                let b = pop_tag(&mut heap);
+                assert_eq!(a, b);
+                if let Some((at, _)) = a {
+                    now = at;
+                }
+            }
+            assert_eq!(cal.len(), heap.len());
+        }
+        loop {
+            let a = pop_tag(&mut cal);
+            let b = pop_tag(&mut heap);
+            assert_eq!(a, b);
+            if a.is_none() {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn far_future_overflow_drains_in_order() {
+        let mut q = EventQueue::new();
+        // Beyond the window — parked in overflow, multiple jumps apart.
+        tag(&mut q, SPAN * 3 + 7, 0);
+        tag(&mut q, SPAN + 1, 1);
+        tag(&mut q, SPAN * 10, 2);
+        // In-window events pop first.
+        tag(&mut q, 100, 3);
+        assert_eq!(q.len(), 4);
+        assert_eq!(pop_tag(&mut q), Some((100, 3)));
+        assert_eq!(pop_tag(&mut q), Some((SPAN + 1, 1)));
+        assert_eq!(pop_tag(&mut q), Some((SPAN * 3 + 7, 0)));
+        assert_eq!(pop_tag(&mut q), Some((SPAN * 10, 2)));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn same_timestamp_fifo_survives_window_jump() {
+        let mut q = EventQueue::new();
+        let far = SPAN * 2 + 12_345;
+        for i in 0..5 {
+            tag(&mut q, far, i);
+        }
+        // Pops force a window jump; FIFO must survive the decant.
+        for want in 0..5 {
+            assert_eq!(pop_tag(&mut q), Some((far, want)));
+        }
+    }
+
+    #[test]
+    fn push_behind_cursor_clamps_and_pops_in_order() {
+        let mut q = EventQueue::new();
+        // Advance the cursor several buckets into the window…
+        tag(&mut q, BUCKET_WIDTH * 4 + 100, 0);
+        assert_eq!(pop_tag(&mut q), Some((BUCKET_WIDTH * 4 + 100, 0)));
+        // …then push an event whose nominal bucket is behind the cursor.
+        // It clamps into the cursor bucket and still pops strictly by
+        // (at, seq) against later events.
+        tag(&mut q, BUCKET_WIDTH + 7, 1);
+        tag(&mut q, BUCKET_WIDTH * 5, 2);
+        tag(&mut q, BUCKET_WIDTH + 7, 3); // FIFO tie with id 1
+        assert_eq!(pop_tag(&mut q), Some((BUCKET_WIDTH + 7, 1)));
+        assert_eq!(pop_tag(&mut q), Some((BUCKET_WIDTH + 7, 3)));
+        assert_eq!(pop_tag(&mut q), Some((BUCKET_WIDTH * 5, 2)));
     }
 }

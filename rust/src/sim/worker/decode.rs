@@ -35,12 +35,19 @@ impl Cluster {
             return;
         }
         self.gpus[gi].dec_pending.push_back(item);
-        // A slot freed: stalled prefill GPUs may publish now.
-        for i in 0..self.gpus.len() {
+        self.reindex(gi); // occupancy grew: update before any publish picks
+        // A slot freed: stalled prefill GPUs may publish now. Only live
+        // prefill-role workers can hold publish_wait items (they drain
+        // before any role flip and are flushed on failure), so walking
+        // the maintained role list visits every candidate.
+        let mut k = 0;
+        while k < self.prefill_ids.len() {
+            let i = self.prefill_ids[k];
             if !self.gpus[i].publish_wait.is_empty() {
                 self.try_publish(i);
                 self.kick_prefill(i);
             }
+            k += 1;
         }
         // Role-dispatched: on the coalesced topology the KV target is a
         // coalesced worker (failure re-dispatch), not a decode worker.
@@ -115,11 +122,15 @@ impl Cluster {
                 self.policy.observe_tpot(self.now, ratio);
             }
         }
+        let n_finished = finished.len();
         for item in finished.drain(..) {
             let now = self.now;
             self.push_record(&item.req, item.prefill_start, item.first_token, now);
         }
         self.scratch_done = finished;
+        if n_finished > 0 {
+            self.reindex(gi); // occupancy dropped: update the pick index
+        }
         self.maybe_finish_drain(gi);
         self.kick_decode(gi);
     }

@@ -56,6 +56,7 @@ impl Cluster {
         g.busy = true;
         let epoch = g.epoch;
         self.scratch_batch = scratch;
+        self.reindex(gi); // queue shrank: update the pick index
         let power = self.power.effective(GpuId(gi), now);
         let t = self.model_of(gi).prefill_batch_time(total_tokens, power);
         self.events.push(now + t, Event::StepDone { gpu: gi, epoch });

@@ -1,0 +1,86 @@
+//! Kilo-node DES scale tests (DESIGN.md §13).
+//!
+//! * **Backend equivalence**: the calendar event queue must reproduce
+//!   the plain binary heap's `RunResult` bit-for-bit on every shipped
+//!   seed config (`RAPID_EVENTQ=heap` selects the old backend).
+//! * **Kilo-node end-to-end**: `configs/kilo-node.toml` (128 nodes,
+//!   1024 GPUs) runs to completion, conserves every request through a
+//!   mid-run failure, and is deterministic. In debug builds every
+//!   router pick along the way is additionally checked against the
+//!   linear-scan reference by the `Cluster::pick_*` debug assertions,
+//!   so this doubles as a cluster-level index-equivalence test.
+//! * **Kilo-grid scenario**: `scenarios/kilo-grid.toml` loads and its
+//!   single 1024-GPU cell runs under the Study API.
+
+use rapid::env::EnvProfile;
+use rapid::scenario::{Scenario, Study};
+use rapid::sim::{self, SimOptions};
+use rapid::types::Slo;
+use rapid::util::rng::Rng;
+use rapid::workload::{build_trace, sonnet::Sonnet, ArrivalProcess};
+
+#[path = "support/mod.rs"]
+mod support;
+use support::{assert_bit_identical, shipped_config};
+
+fn trace(n: usize, qps: f64, input: u32, output: u32) -> rapid::workload::Trace {
+    let mut ap = ArrivalProcess::poisson(Rng::new(91), qps);
+    let mut sizes = Sonnet::new(Rng::new(92), input, output);
+    build_trace(n, &mut ap, &mut sizes, Slo::paper_default())
+}
+
+/// One #[test] for all three configs so the `RAPID_EVENTQ` toggles are
+/// serialized. A concurrently-running test that happens to construct a
+/// queue mid-toggle would pick up the heap backend — which is exactly
+/// the backend this test proves result-identical, so the race is benign.
+#[test]
+fn calendar_and_heap_backends_are_bit_identical_on_shipped_configs() {
+    for (file, n, qps, input, output) in [
+        ("rapid-600.toml", 250, 16.0, 2500, 48),
+        ("two-node-4p4d.toml", 250, 20.0, 2500, 48),
+        ("hetero-4p4d.toml", 250, 14.0, 2500, 48),
+    ] {
+        let cfg = shipped_config(file);
+        let t = trace(n, qps, input, output);
+        std::env::set_var("RAPID_EVENTQ", "heap");
+        let heap = sim::run(&cfg, &t, &SimOptions::default());
+        std::env::remove_var("RAPID_EVENTQ");
+        let calendar = sim::run(&cfg, &t, &SimOptions::default());
+        assert_bit_identical(&heap, &calendar);
+        assert!(heap.sim_events > 0, "{file}: run must do work");
+    }
+}
+
+#[test]
+fn kilo_node_runs_end_to_end_and_conserves_requests_through_churn() {
+    let mut cfg = shipped_config("kilo-node.toml");
+    assert_eq!(cfg.n_nodes, 128);
+    assert_eq!(cfg.total_gpus(), 1024);
+    // A failure + recovery mid-run so the indexed role lists, the power
+    // books and the orphan paths all see churn at kilo scale.
+    cfg.env = EnvProfile::parse_compact("fail:1:17+recover:2:17").unwrap();
+    cfg.validate().unwrap();
+    let n = 400;
+    let t = trace(n, 512.0, 1200, 48);
+    let r = sim::run(&cfg, &t, &SimOptions::default());
+    assert_eq!(r.records.len(), n, "kilo-node run must lose zero requests");
+    let unique: std::collections::HashSet<u64> = r.records.iter().map(|x| x.id.0).collect();
+    assert_eq!(unique.len(), n, "no request recorded twice");
+    // Deterministic at scale (and under the calendar queue).
+    let r2 = sim::run(&cfg, &t, &SimOptions::default());
+    assert_bit_identical(&r, &r2);
+}
+
+#[test]
+fn kilo_grid_scenario_smokes() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/scenarios/kilo-grid.toml");
+    let mut s = Scenario::from_toml_file(path).unwrap();
+    assert_eq!(s.n_cells(), 1, "one big cell: scale, not coverage");
+    s.requests = 40;
+    let study = Study::new(s).run(Some(1)).unwrap();
+    let cell = &study.cells[0];
+    assert_eq!(cell.config.n_nodes, 128);
+    assert_eq!(cell.config.total_gpus(), 1024);
+    let (passed, total) = study.checks_passed();
+    assert_eq!(passed, total, "per-cell invariant checks must pass");
+}
