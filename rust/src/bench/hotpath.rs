@@ -95,6 +95,7 @@ pub fn run_suite(cfg: &SuiteConfig) -> BenchReport {
             requests: i % 5,
             accepting: i != 3,
             perf_scale: if i % 2 == 0 { 1.0 } else { 0.55 },
+            mem_pressure: 0.0,
         })
         .collect();
     if cfg.wants("router/pick_prefill_8") {
@@ -122,7 +123,7 @@ pub fn run_suite(cfg: &SuiteConfig) -> BenchReport {
     if cfg.wants("router/pick_prefill_1024") {
         let mut idx = LoadIndex::new(1024, 128);
         for i in 0..1024 {
-            let key = LoadKey::prefill((i as u64 * 613) % 9000, i % 7, scales[i % 4], i);
+            let key = LoadKey::prefill((i as u64 * 613) % 9000, i % 7, scales[i % 4], 0.0, i);
             idx.update(i, i / 8, Some(key));
         }
         let mut k = 0usize;
@@ -130,7 +131,7 @@ pub fn run_suite(cfg: &SuiteConfig) -> BenchReport {
         push(bench("router/pick_prefill_1024", cfg.target_ms, cfg.max_iters, || {
             k = (k + 257) & 1023;
             t = t.wrapping_add(997);
-            let key = LoadKey::prefill(t % 9000, (t % 7) as usize, scales[k % 4], k);
+            let key = LoadKey::prefill(t % 9000, (t % 7) as usize, scales[k % 4], 0.0, k);
             idx.update(k, k / 8, Some(key));
             std::hint::black_box(idx.pick(None));
         }));
@@ -138,7 +139,7 @@ pub fn run_suite(cfg: &SuiteConfig) -> BenchReport {
     if cfg.wants("router/pick_decode_1024") {
         let mut idx = LoadIndex::new(1024, 128);
         for i in 0..1024 {
-            let key = LoadKey::decode(i % 60, (i as u64 * 311) % 4000, scales[i % 4], i);
+            let key = LoadKey::decode(i % 60, (i as u64 * 311) % 4000, scales[i % 4], 0.0, i);
             idx.update(i, i / 8, Some(key));
         }
         let mut k = 0usize;
@@ -146,7 +147,7 @@ pub fn run_suite(cfg: &SuiteConfig) -> BenchReport {
         push(bench("router/pick_decode_1024", cfg.target_ms, cfg.max_iters, || {
             k = (k + 257) & 1023;
             t = t.wrapping_add(997);
-            let key = LoadKey::decode((t % 60) as usize, t % 4000, scales[k % 4], k);
+            let key = LoadKey::decode((t % 60) as usize, t % 4000, scales[k % 4], 0.0, k);
             idx.update(k, k / 8, Some(key));
             std::hint::black_box(idx.pick_prefer_node((k >> 3) & 127, None));
         }));
@@ -244,6 +245,30 @@ pub fn run_suite(cfg: &SuiteConfig) -> BenchReport {
             // clears both budget checks.
             pm.set_cap(t, GpuId(k), if up { 600.0 } else { 550.0 }).unwrap();
             std::hint::black_box(pm.poll(t).len());
+        }));
+    }
+
+    // --- KV pool eviction (mem hot path) ---------------------------------
+    if cfg.wants("mem/pool_evict") {
+        // The admission-side reserve -> LRU demote -> finish-as-cached
+        // cycle a capacity-bound decode pool pays per context
+        // (DESIGN.md §14). The pool sits exactly at capacity, so every
+        // reserve demotes one block to the remote tier; cycling a fixed
+        // conversation set keeps the tier pools bounded (a re-finished
+        // conversation consumes its stale demoted block).
+        let mc = crate::mem::MemConfig { hbm_gb: Some(0.064), ..Default::default() };
+        let mut pool = crate::mem::MemState::new(mc, &[Some(0.064)]);
+        const BLOCK: u64 = 8_000_000;
+        for conv in 0..8u64 {
+            pool.reserve(0, BLOCK).expect("warmup fits");
+            pool.finish(0, Some(conv), BLOCK, 512);
+        }
+        let mut conv = 8u64;
+        push(bench("mem/pool_evict", cfg.target_ms, cfg.max_iters, || {
+            conv = (conv + 1) % 64;
+            let ev = pool.reserve(0, BLOCK).expect("a cached victim always exists");
+            std::hint::black_box(ev.bytes);
+            pool.finish(0, Some(conv), BLOCK, 512);
         }));
     }
 
@@ -381,6 +406,13 @@ mod tests {
         let rep = run_suite(&tiny("fleet/model_lookup"));
         let t = rep.entry("fleet/model_lookup").expect("fleet entry");
         assert!(t.iters >= 3 && t.per_sec() > 0.0);
+    }
+
+    #[test]
+    fn mem_pool_evict_case_runs() {
+        let rep = run_suite(&tiny("mem/pool_evict"));
+        let t = rep.entry("mem/pool_evict").expect("mem entry");
+        assert!(t.iters >= 3 && t.mean_us >= 0.0);
     }
 
     #[test]

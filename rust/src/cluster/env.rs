@@ -119,6 +119,9 @@ impl Cluster {
             items.extend(g.dec_pending.drain(..));
             items.extend(g.dec_active.drain(..));
         }
+        // The dead GPU's HBM is gone: reservations, and every cached
+        // prefix block in all tiers (they hang off its node agent).
+        self.mem.invalidate_gpu(gi);
         // Out of the role lists and pick indexes before the requeue
         // loops below route anything.
         self.refresh_worker(gi);
@@ -188,6 +191,13 @@ impl Cluster {
         exclude: Option<usize>,
         item: DecodeItem,
     ) {
+        // A full ring used to over-commit its slot count here; defer
+        // instead (deterministic backpressure) and drain FIFO as slots
+        // free in `on_kv_arrive`.
+        if self.ring_free(src_node) == 0 {
+            self.retransfer_wait[src_node].push_back((via, item));
+            return;
+        }
         let target = match self.cfg.topology {
             crate::config::Topology::Coalesced => self.pick_coalesced_gpu(exclude),
             crate::config::Topology::Disaggregated { .. } => {
@@ -198,6 +208,23 @@ impl Cluster {
             self.orphan_items.push(item);
             return;
         };
+        // The new host must fit the context (the caller no longer holds
+        // a reservation: failure wiped it, a drain released it, or the
+        // item came from the orphan pool). A pool that cannot evict
+        // enough parks the item until a completion or recovery retries.
+        if self.mem.active() {
+            let bytes = self.kv_bytes_for(target.0, &item);
+            match self.mem.reserve(target.0, bytes) {
+                Ok(ev) => {
+                    self.note_eviction(target.0, ev);
+                    self.reindex(target.0);
+                }
+                Err(()) => {
+                    self.orphan_items.push(item);
+                    return;
+                }
+            }
+        }
         let same_node = self.node_of(target.0) == src_node;
         // The re-fetch moves the *live* context — prompt plus generated
         // tokens — not just the original prompt KV.
@@ -205,6 +232,7 @@ impl Cluster {
             .fleet
             .kv_transfer_time_between(via, target.0, item.ctx_tokens(), same_node);
         self.ring_used[src_node] += 1; // the re-transfer occupies a slot
+        debug_assert!(self.ring_used[src_node] <= self.cfg.batch.ring_slots);
         self.events.push(
             self.now + t,
             Event::KvArrive { gpu: target.0, src_node, item },

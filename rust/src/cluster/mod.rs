@@ -23,11 +23,14 @@
 pub mod env;
 pub mod policy;
 
+use std::collections::{HashMap, VecDeque};
+
 use crate::config::ClusterConfig;
 use crate::coordinator::router::{self, LoadIndex, LoadKey, WorkerLoad};
 use crate::coordinator::{Action, Snapshot};
 use crate::env::EnvEvent;
 use crate::fleet::Fleet;
+use crate::mem::MemState;
 use crate::metrics::RunResult;
 use crate::power::{PowerManager, PowerModel};
 use crate::sim::engine::SimOptions;
@@ -69,6 +72,18 @@ pub struct Cluster {
     /// next recovery (or recorded as violations at the hard stop).
     pub(crate) orphan_reqs: Vec<Request>,
     pub(crate) orphan_items: Vec<DecodeItem>,
+    /// KV memory subsystem: per-GPU HBM pools, tiered offload and the
+    /// prefix cache (DESIGN.md §14). Inert unless `[mem]` is configured.
+    pub(crate) mem: MemState,
+    /// Per-request conversation identity from the multi-turn workload
+    /// transform: request id → (conversation id, reusable prefix tokens).
+    pub(crate) conv_of: HashMap<u64, (u64, u32)>,
+    /// Per-node KV re-transfers deferred because the ring was full,
+    /// (via GPU, item); drained FIFO as slots free in `on_kv_arrive`.
+    pub(crate) retransfer_wait: Vec<VecDeque<(usize, DecodeItem)>>,
+    /// Fleet-max HBM occupancy per telemetry sample (the series the
+    /// "resident KV <= HBM capacity" ShapeCheck walks).
+    pub(crate) mem_trace: Vec<(Micros, f64)>,
     // --- result accumulation ---
     cluster_power: TimeSeries,
     node_power: Vec<TimeSeries>,
@@ -133,6 +148,21 @@ impl Cluster {
             + opts.drain_grace;
         let n_requests = trace.requests.len();
         let env_timeline = cfg.env.expand(total, cfg.cluster_budget(), hard_stop);
+        // The memory subsystem only engages on the disaggregated
+        // topology (its hooks live on the prefill→decode KV path); with
+        // no `[mem]` table it is structurally inert and the run is
+        // bit-identical to a build without the subsystem.
+        let mem = match (&cfg.mem, &cfg.topology) {
+            (Some(mc), crate::config::Topology::Disaggregated { .. }) => {
+                MemState::new(mc.clone(), &fleet.hbm_caps())
+            }
+            _ => MemState::inactive(),
+        };
+        let conv_of: HashMap<u64, (u64, u32)> = trace
+            .conv
+            .iter()
+            .map(|c| (c.req_id, (c.conv, c.prefix_tokens)))
+            .collect();
         let mut cl = Cluster {
             fleet,
             power,
@@ -149,6 +179,10 @@ impl Cluster {
             budget_trace: Vec::new(),
             orphan_reqs: Vec::new(),
             orphan_items: Vec::new(),
+            mem,
+            conv_of,
+            retransfer_wait: (0..cfg.n_nodes).map(|_| VecDeque::new()).collect(),
+            mem_trace: Vec::new(),
             cluster_power: TimeSeries::new(),
             node_power: (0..cfg.n_nodes).map(|_| TimeSeries::new()).collect(),
             cap_trace: Vec::new(),
@@ -226,6 +260,31 @@ impl Cluster {
         self.cfg.batch.ring_slots.saturating_sub(self.ring_used[node])
     }
 
+    /// Projected peak KV footprint of a decode context hosted on `gi`:
+    /// prompt + reused prefix + full output, in that SKU's bytes/token —
+    /// the same sizing the per-SKU re-fetch cost model uses.
+    pub(crate) fn kv_bytes_for(&self, gi: usize, item: &DecodeItem) -> u64 {
+        let tokens =
+            item.req.input_tokens as u64 + item.cached_tokens as u64 + item.req.output_tokens as u64;
+        tokens * self.model_of(gi).cfg().kv_bytes_per_token
+    }
+
+    /// Register the demotion work a successful `reserve` incurred on
+    /// `gi`: extend the decode stall deadline, schedule the epoch-guarded
+    /// resume event and let the policy weigh the eviction cost.
+    pub(crate) fn note_eviction(&mut self, gi: usize, ev: crate::mem::Eviction) {
+        if ev.bytes == 0 {
+            return;
+        }
+        let until = (self.now + ev.time).max(self.mem.evict_until[gi]);
+        self.mem.evict_until[gi] = until;
+        let epoch = self.gpus[gi].epoch;
+        self.events.push(until, Event::MemEvict { gpu: gi, epoch });
+        let occ = self.mem.occupancy(gi);
+        let now = self.now;
+        self.policy.on_memory_pressure(now, gi, occ, ev.bytes);
+    }
+
     // ------------------------------------------------------------------
     // incremental routing state
     // ------------------------------------------------------------------
@@ -243,11 +302,18 @@ impl Cluster {
                     g.pf_queued_tokens,
                     g.pf_queue.len(),
                     self.fleet.prefill_scale(gi),
+                    0.0,
                     gi,
                 )
             });
             let dec = (g.role == Role::Decode && g.accepting()).then(|| {
-                LoadKey::decode(g.decode_load(), 0, self.fleet.decode_scale(gi), gi)
+                LoadKey::decode(
+                    g.decode_load(),
+                    0,
+                    self.fleet.decode_scale(gi),
+                    self.mem.pressure(gi, self.cfg.batch.max_decode_reqs),
+                    gi,
+                )
             });
             (pf, dec)
         };
@@ -295,6 +361,7 @@ impl Cluster {
                 requests: g.pf_queue.len(),
                 accepting: g.accepting(),
                 perf_scale: self.fleet.prefill_scale(i),
+                mem_pressure: 0.0,
             });
         }
     }
@@ -315,6 +382,7 @@ impl Cluster {
                 requests: g.decode_load(),
                 accepting: g.accepting(),
                 perf_scale: self.fleet.decode_scale(i),
+                mem_pressure: self.mem.pressure(i, self.cfg.batch.max_decode_reqs),
             });
         }
     }
@@ -392,15 +460,33 @@ impl Cluster {
             Event::Sample => self.on_sample(),
             Event::DrainDone { gpu, epoch } => self.on_drain_done(gpu, epoch),
             Event::Env { idx } => self.on_env(idx),
+            Event::MemEvict { gpu, epoch } => {
+                if self.gpus[gpu].epoch == epoch {
+                    self.kick_decode(gpu); // eviction stall elapsed
+                }
+            }
         }
     }
 
     fn on_arrival(&mut self) {
-        let req = self.trace[self.next_arrival];
+        let mut req = self.trace[self.next_arrival];
         self.next_arrival += 1;
         if self.next_arrival < self.trace.len() {
             self.events
                 .push(self.trace[self.next_arrival].arrival, Event::Arrival);
+        }
+        // Multi-turn prefix reuse: a cache hit shrinks the prompt to the
+        // un-cached suffix (skipping its re-prefill); the tier fetch time
+        // is paid when the KV publishes to the decode pool.
+        if self.mem.active() {
+            if let Some(&(conv, prefix)) = self.conv_of.get(&req.id.0) {
+                let bpt = self.cfg.perf.kv_bytes_per_token;
+                if let Some(cached) =
+                    self.mem.prefix_lookup(req.id.0, conv, prefix, req.input_tokens, bpt)
+                {
+                    req.input_tokens -= cached;
+                }
+            }
         }
         self.route_request(req);
     }
@@ -456,6 +542,7 @@ impl Cluster {
                 requests: g.co_queue.len() + g.dec_active.len(),
                 accepting: g.accepting(),
                 perf_scale: self.fleet.prefill_scale(i),
+                mem_pressure: 0.0,
             });
         }
     }
@@ -735,10 +822,40 @@ impl Cluster {
         let pending: Vec<DecodeItem> = self.gpus[gi].dec_pending.drain(..).collect();
         let src_node = self.node_of(gi);
         for item in pending {
+            // A full ring used to over-commit here (the slot count ran
+            // past `ring_slots`); defer instead and drain FIFO as slots
+            // free in `on_kv_arrive`. The drainer's reservation moves
+            // with the item (released now, re-reserved at dispatch).
+            if self.ring_free(src_node) == 0 {
+                if self.mem.active() {
+                    let b = self.kv_bytes_for(gi, &item);
+                    self.mem.release(gi, b);
+                }
+                self.retransfer_wait[src_node].push_back((gi, item));
+                continue;
+            }
             // Send to the least-loaded other decode GPU, preferring the
             // same node (KV re-transfer is charged: the cache must move
             // with the request, and cross-node hops pay the slower link).
             if let Some(target) = self.pick_decode_gpu(Some(gi), src_node) {
+                // The new host must fit the context before the transfer
+                // commits; if its pool cannot evict enough, the item
+                // stays (it finishes here before the flip).
+                if self.mem.active() {
+                    let b_new = self.kv_bytes_for(target.0, &item);
+                    match self.mem.reserve(target.0, b_new) {
+                        Ok(ev) => {
+                            self.note_eviction(target.0, ev);
+                            let b_old = self.kv_bytes_for(gi, &item);
+                            self.mem.release(gi, b_old);
+                            self.reindex(target.0);
+                        }
+                        Err(()) => {
+                            self.gpus[gi].dec_pending.push_back(item);
+                            continue;
+                        }
+                    }
+                }
                 let same_node = self.node_of(target.0) == src_node;
                 let t = self
                     .fleet
@@ -748,6 +865,7 @@ impl Cluster {
                     Event::KvArrive { gpu: target.0, src_node, item },
                 );
                 self.ring_used[src_node] += 1; // re-transfer occupies a slot
+                debug_assert!(self.ring_used[src_node] <= self.cfg.batch.ring_slots);
             } else {
                 // No other decode GPU: keep it; it finishes before the flip.
                 self.gpus[gi].dec_pending.push_back(item);
@@ -860,6 +978,9 @@ impl Cluster {
         let targets = self.power.targets();
         self.provisioned_integral += targets.iter().sum::<f64>() * dt;
         self.cap_trace.push((now, targets));
+        if self.mem.active() {
+            self.mem_trace.push((now, self.mem.sample_occupancy()));
+        }
         self.events.push(now + self.opts.sample_period, Event::Sample);
     }
 
@@ -912,6 +1033,11 @@ impl Cluster {
         let resilience = window.map(|(first, last)| {
             crate::metrics::compute_resilience(&self.records, first, last, duration)
         });
+        let mem = if self.mem.active() {
+            Some(self.mem.summary())
+        } else {
+            None
+        };
         let mut result = RunResult {
             config_name: self.cfg.name.clone(),
             records: self.records,
@@ -926,6 +1052,8 @@ impl Cluster {
             env_events: self.env_applied,
             budget_trace: self.budget_trace,
             resilience,
+            mem,
+            mem_trace: self.mem_trace,
             summary_cache: None,
         };
         // Aggregate once here so emitters/figure drivers never re-scan

@@ -75,6 +75,19 @@ pub trait Policy: std::fmt::Debug + Send {
     fn on_env_event(&mut self, _now: Micros, _ev: &EnvEvent) -> EnvResponse {
         EnvResponse::None
     }
+    /// A decode admission on `gpu` just forced KV demotions: `occ_frac`
+    /// is the pool's occupancy after the reserve, `evicted_bytes` what
+    /// moved to a slower tier. Lets a dynamic policy weigh power moves
+    /// against eviction cost; the default ignores memory entirely (and
+    /// the hook never fires when the subsystem is inactive).
+    fn on_memory_pressure(
+        &mut self,
+        _now: Micros,
+        _gpu: usize,
+        _occ_frac: f64,
+        _evicted_bytes: u64,
+    ) {
+    }
     /// One decision tick.
     fn decide(&mut self, snap: &Snapshot) -> Option<Action>;
 }
@@ -110,18 +123,30 @@ impl Policy for StaticPolicy {
 #[derive(Debug)]
 pub struct RapidDynamic {
     controller: Controller,
+    /// Eviction-time HBM occupancy observations (same window length as
+    /// the latency metrics). Empty for the whole run unless the memory
+    /// subsystem is active — then Algorithm 1 is bit-identical.
+    mem_occ: SlidingWindow,
 }
 
 impl RapidDynamic {
     pub fn new(cfg: ControllerConfig, policy: ControlPolicy) -> Self {
+        let window = cfg.metric_window;
         RapidDynamic {
             controller: Controller::new(cfg, policy),
+            mem_occ: SlidingWindow::new(window),
         }
     }
 
     /// The wrapped controller (tests / traces).
     pub fn controller(&self) -> &Controller {
         &self.controller
+    }
+
+    /// Is the decode pool too memory-hot to shrink? (Majority of recent
+    /// evictions happened above 90% occupancy.)
+    fn decode_memory_hot(&self, now: Micros) -> bool {
+        self.mem_occ.frac_above(now, 0.9).map_or(false, |f| f > 0.5)
     }
 }
 
@@ -141,8 +166,21 @@ impl Policy for RapidDynamic {
     fn on_env_event(&mut self, _now: Micros, ev: &EnvEvent) -> EnvResponse {
         dynamic_env_response(ev)
     }
+    fn on_memory_pressure(&mut self, now: Micros, _gpu: usize, occ_frac: f64, _bytes: u64) {
+        self.mem_occ.push(now, occ_frac);
+    }
     fn decide(&mut self, snap: &Snapshot) -> Option<Action> {
-        self.controller.decide(snap)
+        let action = self.controller.decide(snap);
+        // Taking a GPU away from decode while its pools are evicting to
+        // stay afloat trades an SLO miss for a worse one: the survivors
+        // absorb the drained contexts and spiral into offload. Veto the
+        // shrink; power moves and grows pass through untouched.
+        if let Some(Action::MoveGpu { from: Role::Decode }) = action {
+            if self.decode_memory_hot(snap.now) {
+                return None;
+            }
+        }
+        action
     }
 }
 
@@ -347,5 +385,45 @@ mod tests {
         let mut s = snap(now);
         s.prefill_queue = 20;
         assert_eq!(p.decide(&s), Some(Action::MovePower { from: Role::Decode }));
+    }
+
+    /// Drive Algorithm 1 to a decode-pool shrink (TTFT hot, queue deep,
+    /// power saturated); the memory hook must veto it only when recent
+    /// evictions ran near-full, and stay inert with an empty window (the
+    /// bit-identity guarantee for runs without a `[mem]` table).
+    #[test]
+    fn memory_pressure_vetoes_decode_shrink_only_when_hot() {
+        let now = 10 * SECOND;
+        let mut s = snap(now);
+        s.prefill_queue = 20;
+        s.prefill_power_saturated = true;
+
+        let mut cold = RapidDynamic::new(ControllerConfig::default(), ControlPolicy::DynPowerGpu);
+        for i in 0..10 {
+            cold.observe_ttft(now - i, 1.6);
+            cold.observe_tpot(now - i, 0.4);
+        }
+        assert_eq!(cold.decide(&s), Some(Action::MoveGpu { from: Role::Decode }));
+
+        let mut hot = RapidDynamic::new(ControllerConfig::default(), ControlPolicy::DynPowerGpu);
+        for i in 0..10 {
+            hot.observe_ttft(now - i, 1.6);
+            hot.observe_tpot(now - i, 0.4);
+        }
+        for i in 0..6 {
+            hot.on_memory_pressure(now - i, 0, 0.97, 1 << 30);
+        }
+        assert_eq!(hot.decide(&s), None, "memory-hot decode pool vetoes the shrink");
+
+        // Mostly-low occupancy evictions do not veto.
+        let mut mild = RapidDynamic::new(ControllerConfig::default(), ControlPolicy::DynPowerGpu);
+        for i in 0..10 {
+            mild.observe_ttft(now - i, 1.6);
+            mild.observe_tpot(now - i, 0.4);
+        }
+        for i in 0..6 {
+            mild.on_memory_pressure(now - i, 0, 0.5, 1 << 20);
+        }
+        assert_eq!(mild.decide(&s), Some(Action::MoveGpu { from: Role::Decode }));
     }
 }

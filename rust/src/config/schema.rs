@@ -260,6 +260,10 @@ pub struct ClusterConfig {
     /// Timed operational disturbances (DESIGN.md §12). Empty (the
     /// default) injects nothing and is bit-identical to pre-env code.
     pub env: EnvProfile,
+    /// KV memory subsystem (DESIGN.md §14): HBM capacity accounting,
+    /// tiered offload, and the prefix cache. `None` (the default) keeps
+    /// memory infinite and is bit-identical to pre-mem code.
+    pub mem: Option<crate::mem::MemConfig>,
 }
 
 impl Default for ClusterConfig {
@@ -387,6 +391,9 @@ impl ClusterConfig {
         }
         if self.batch.ring_slots == 0 || self.batch.max_prefill_reqs == 0 {
             return err("batch limits must be positive".into());
+        }
+        if let Some(mem) = &self.mem {
+            mem.validate().map_err(ConfigError::Invalid)?;
         }
         self.env
             .validate(
@@ -543,6 +550,19 @@ const KNOWN_TABLES: &[(&str, &[&str])] = &[
     ),
     ("env.curtailment", &["period_s", "duty", "budget_frac", "start_s"]),
     ("env.faults", &["mtbf_s", "mttr_s", "seed", "max_failures"]),
+    (
+        "mem",
+        &[
+            "hbm_gb",
+            "remote_gb",
+            "local_bw_gbps",
+            "remote_bw_gbps",
+            "disk_bw_gbps",
+            "remote_lat_us",
+            "disk_lat_us",
+            "prefix_cache",
+        ],
+    ),
 ];
 
 /// Fields a `[sku.<name>]` table accepts: the power envelope plus every
@@ -569,6 +589,7 @@ const SKU_KEYS: &[&str] = &[
     "ref_w",
     "rated_w",
     "decode_rated_w",
+    "hbm_gb",
 ];
 
 /// Reject any key the config loader would silently ignore, naming the
@@ -661,6 +682,9 @@ fn parse_sku_tables(doc: &Document) -> Result<Vec<GpuSku>, ConfigError> {
         }
         if let Some(v) = get("decode_rated_w") {
             p.decode_rated_w = v;
+        }
+        if let Some(v) = get("hbm_gb") {
+            sku.hbm_gb = Some(v);
         }
         sku.validate().map_err(ConfigError::Invalid)?;
         out.push(sku);
@@ -789,6 +813,37 @@ fn apply_overrides(cfg: &mut ClusterConfig, doc: &Document) -> Result<(), Config
     if let Some(profile) = EnvProfile::from_doc(doc).map_err(ConfigError::Invalid)? {
         cfg.env = profile;
     }
+    // KV memory subsystem: a `[mem]` table activates capacity
+    // enforcement (DESIGN.md §14). Any mem.* key present — even just
+    // `prefix_cache = false` — turns the subsystem on.
+    if doc.entries.keys().any(|k| k.starts_with("mem.")) {
+        let mut mem = crate::mem::MemConfig::default();
+        if let Some(v) = doc.get_f64("mem.hbm_gb") {
+            mem.hbm_gb = Some(v);
+        }
+        if let Some(v) = doc.get_f64("mem.remote_gb") {
+            mem.remote_gb = v;
+        }
+        if let Some(v) = doc.get_f64("mem.local_bw_gbps") {
+            mem.local_bw_gbps = v;
+        }
+        if let Some(v) = doc.get_f64("mem.remote_bw_gbps") {
+            mem.remote_bw_gbps = v;
+        }
+        if let Some(v) = doc.get_f64("mem.disk_bw_gbps") {
+            mem.disk_bw_gbps = v;
+        }
+        if let Some(v) = doc.get_f64("mem.remote_lat_us") {
+            mem.remote_lat_us = v as Micros;
+        }
+        if let Some(v) = doc.get_f64("mem.disk_lat_us") {
+            mem.disk_lat_us = v as Micros;
+        }
+        if let Some(b) = doc.get_bool("mem.prefix_cache") {
+            mem.prefix_cache = b;
+        }
+        cfg.mem = Some(mem);
+    }
     // Fleet mix: `[sku.<name>]` tables resolve first, then the ordered
     // `cluster.skus = ["name:count", ...]` mix references them (plus the
     // built-in catalog).
@@ -866,6 +921,7 @@ pub mod presets {
             batch: BatchConfig::default(),
             fleet: None,
             env: EnvProfile::default(),
+            mem: None,
         }
     }
 
@@ -1302,6 +1358,63 @@ start_s = 10
         let err =
             ClusterConfig::from_toml("preset = \"rapid-600\"\n[env]\nfail = [\"8:9\"]").unwrap_err();
         assert!(err.to_string().contains("gpu 9"), "{err}");
+    }
+
+    #[test]
+    fn mem_table_round_trip_and_validate() {
+        let cfg = ClusterConfig::from_toml(
+            r#"
+preset = "rapid-600"
+[mem]
+hbm_gb = 16
+remote_gb = 256
+remote_bw_gbps = 12
+disk_lat_us = 3000
+prefix_cache = false
+"#,
+        )
+        .unwrap();
+        let mem = cfg.mem.as_ref().expect("mem table parsed");
+        assert_eq!(mem.hbm_gb, Some(16.0));
+        assert_eq!(mem.remote_gb, 256.0);
+        assert_eq!(mem.remote_bw_gbps, 12.0);
+        assert_eq!(mem.disk_lat_us, 3000);
+        assert!(!mem.prefix_cache);
+        // No [mem] table means no subsystem (bit-identity default).
+        assert!(ClusterConfig::from_toml("preset = \"rapid-600\"").unwrap().mem.is_none());
+        // Unknown mem key rejected with the table named.
+        let err = ClusterConfig::from_toml("[mem]\nhbm_gbx = 16").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("hbm_gbx") && msg.contains("[mem]"), "{msg}");
+        // Structural checks ride ClusterConfig::validate (rapid validate).
+        let err = ClusterConfig::from_toml("[mem]\nhbm_gb = 0").unwrap_err();
+        assert!(err.to_string().contains("must be > 0"), "{err}");
+        // Tier ordering: remote faster than local is structural nonsense.
+        let err = ClusterConfig::from_toml("[mem]\nremote_bw_gbps = 128").unwrap_err();
+        assert!(err.to_string().contains("local >= remote >= disk"), "{err}");
+    }
+
+    #[test]
+    fn sku_hbm_gb_override() {
+        let cfg = ClusterConfig::from_toml(
+            r#"
+preset = "rapid-600"
+[cluster]
+skus = ["mi300x:4", "mi300x-slim:4"]
+[sku.mi300x-slim]
+hbm_gb = 96
+"#,
+        )
+        .unwrap();
+        let fc = cfg.fleet.unwrap();
+        assert_eq!(fc.skus[0].hbm_gb, Some(192.0), "catalog value");
+        assert_eq!(fc.skus[1].hbm_gb, Some(96.0), "table override");
+        // Zero/negative capacities are rejected by sku validation.
+        let err = ClusterConfig::from_toml(
+            "[cluster]\nskus = [\"x:8\"]\n[sku.x]\nhbm_gb = -4",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("hbm_gb"), "{err}");
     }
 
     #[test]

@@ -31,19 +31,25 @@ pub struct WorkerLoad {
     /// reference part): prefill rate for prefill pools, step rate for
     /// decode pools. Loads divide by it before comparison.
     pub perf_scale: f64,
+    /// KV memory pressure in request units (HBM occupancy scaled by the
+    /// decode batch limit; DESIGN.md §14). Exactly `0.0` when the mem
+    /// subsystem is inactive or the GPU is uncapped — adding it then is
+    /// the identity on every finite non-negative load, so the comparator
+    /// reduces bit-exactly to the capacity-blind router.
+    pub mem_pressure: f64,
 }
 
 impl WorkerLoad {
     /// Throughput-normalized prefill backlog (≈ seconds to drain).
     #[inline]
     fn eff_tokens(&self) -> f64 {
-        self.queued_tokens as f64 / self.perf_scale
+        self.queued_tokens as f64 / self.perf_scale + self.mem_pressure
     }
 
     /// Throughput-normalized decode occupancy.
     #[inline]
     fn eff_requests(&self) -> f64 {
-        self.requests as f64 / self.perf_scale
+        self.requests as f64 / self.perf_scale + self.mem_pressure
     }
 }
 
@@ -136,18 +142,31 @@ pub struct LoadKey {
 }
 
 impl LoadKey {
-    /// Key for a prefill worker: normalized queued prompt tokens, ties
-    /// by raw queued request count.
-    pub fn prefill(queued_tokens: u64, requests: usize, perf_scale: f64, gpu: usize) -> Self {
-        let eff = queued_tokens as f64 / perf_scale;
+    /// Key for a prefill worker: normalized queued prompt tokens plus
+    /// the memory-pressure term, ties by raw queued request count.
+    pub fn prefill(
+        queued_tokens: u64,
+        requests: usize,
+        perf_scale: f64,
+        pressure: f64,
+        gpu: usize,
+    ) -> Self {
+        let eff = queued_tokens as f64 / perf_scale + pressure;
         debug_assert!(eff >= 0.0 && eff.is_finite());
         LoadKey { eff_bits: eff.to_bits(), tie: requests as u64, gpu }
     }
 
-    /// Key for a decode worker: normalized resident+pending requests,
-    /// ties by raw queued tokens (always 0 for decode pools today).
-    pub fn decode(requests: usize, queued_tokens: u64, perf_scale: f64, gpu: usize) -> Self {
-        let eff = requests as f64 / perf_scale;
+    /// Key for a decode worker: normalized resident+pending requests
+    /// plus the memory-pressure term, ties by raw queued tokens (always
+    /// 0 for decode pools today).
+    pub fn decode(
+        requests: usize,
+        queued_tokens: u64,
+        perf_scale: f64,
+        pressure: f64,
+        gpu: usize,
+    ) -> Self {
+        let eff = requests as f64 / perf_scale + pressure;
         debug_assert!(eff >= 0.0 && eff.is_finite());
         LoadKey { eff_bits: eff.to_bits(), tie: queued_tokens, gpu }
     }
@@ -253,6 +272,7 @@ mod tests {
             requests: reqs,
             accepting,
             perf_scale: scale,
+            mem_pressure: 0.0,
         }
     }
 
@@ -403,6 +423,7 @@ mod tests {
                 requests: reqs,
                 accepting,
                 perf_scale: scale,
+                mem_pressure: 0.0,
             })
             .collect()
     }
@@ -411,9 +432,9 @@ mod tests {
         for (gpu, &(tokens, reqs, accepting, scale)) in state.iter().enumerate() {
             let key = accepting.then(|| {
                 if decode {
-                    LoadKey::decode(reqs, 0, scale, gpu)
+                    LoadKey::decode(reqs, 0, scale, 0.0, gpu)
                 } else {
-                    LoadKey::prefill(tokens, reqs, scale, gpu)
+                    LoadKey::prefill(tokens, reqs, scale, 0.0, gpu)
                 }
             });
             idx.update(gpu, gpu / 8, key);
@@ -484,10 +505,10 @@ mod tests {
         // Two workers with bit-equal normalized loads: requests, then
         // gpu id decide, exactly as `prefill_order`.
         let mut idx = LoadIndex::new(4, 1);
-        idx.update(2, 0, Some(LoadKey::prefill(4000, 1, 2.0, 2)));
-        idx.update(1, 0, Some(LoadKey::prefill(2000, 1, 1.0, 1)));
+        idx.update(2, 0, Some(LoadKey::prefill(4000, 1, 2.0, 0.0, 2)));
+        idx.update(1, 0, Some(LoadKey::prefill(2000, 1, 1.0, 0.0, 1)));
         assert_eq!(idx.pick(None), Some(GpuId(1)), "id breaks the full tie");
-        idx.update(1, 0, Some(LoadKey::prefill(2000, 3, 1.0, 1)));
+        idx.update(1, 0, Some(LoadKey::prefill(2000, 3, 1.0, 0.0, 1)));
         assert_eq!(idx.pick(None), Some(GpuId(2)), "requests break the eff tie");
         // Removal restores the other candidate.
         idx.update(2, 0, None);
@@ -499,14 +520,14 @@ mod tests {
     #[test]
     fn index_prefer_node_falls_back_without_local_candidates() {
         let mut idx = LoadIndex::new(16, 2);
-        idx.update(9, 1, Some(LoadKey::decode(1, 0, 1.0, 9)));
+        idx.update(9, 1, Some(LoadKey::decode(1, 0, 1.0, 0.0, 9)));
         // No node-0 candidate: global pick wins.
         assert_eq!(idx.pick_prefer_node(0, None), Some(GpuId(9)));
         // A local worker within slack takes over.
-        idx.update(1, 0, Some(LoadKey::decode(5, 0, 1.0, 1)));
+        idx.update(1, 0, Some(LoadKey::decode(5, 0, 1.0, 0.0, 1)));
         assert_eq!(idx.pick_prefer_node(0, None), Some(GpuId(1)));
         // Beyond slack the remote worker wins again.
-        idx.update(1, 0, Some(LoadKey::decode(6, 0, 1.0, 1)));
+        idx.update(1, 0, Some(LoadKey::decode(6, 0, 1.0, 0.0, 1)));
         assert_eq!(idx.pick_prefer_node(0, None), Some(GpuId(9)));
     }
 }

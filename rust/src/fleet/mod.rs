@@ -44,6 +44,10 @@ pub struct GpuSku {
     pub max_w: Watts,
     /// Lowest cap firmware accepts (W) — the per-GPU floor for this SKU.
     pub cap_floor_w: Watts,
+    /// HBM capacity (GB) for the KV memory subsystem. `None` leaves the
+    /// SKU uncapped; only enforced when a `[mem]` table activates the
+    /// subsystem (DESIGN.md §14).
+    pub hbm_gb: Option<f64>,
 }
 
 impl GpuSku {
@@ -61,6 +65,7 @@ impl GpuSku {
             perf,
             max_w,
             cap_floor_w,
+            hbm_gb: None,
         }
     }
 
@@ -80,6 +85,11 @@ impl GpuSku {
                 self.name, self.idle_w, self.perf.idle_w
             ));
         }
+        if let Some(gb) = self.hbm_gb {
+            if gb <= 0.0 {
+                return Err(format!("sku '{}': hbm_gb {gb} must be > 0", self.name));
+            }
+        }
         Ok(())
     }
 }
@@ -97,7 +107,9 @@ pub mod skus {
     /// controller's MIN_P/MAX_P envelope. Homogeneous `mi300x` fleets
     /// are bit-identical to the implicit (pre-fleet) configuration.
     pub fn mi300x() -> GpuSku {
-        GpuSku::new("mi300x", PerfModelConfig::default(), 400.0, 750.0)
+        let mut sku = GpuSku::new("mi300x", PerfModelConfig::default(), 400.0, 750.0);
+        sku.hbm_gb = Some(192.0);
+        sku
     }
 
     /// Compute-strong 700 W-class part: slightly lower peak prompt rate
@@ -118,7 +130,9 @@ pub mod skus {
             decode_rated_w: 480.0,
             ..PerfModelConfig::default()
         };
-        GpuSku::new("h100", perf, 350.0, 700.0)
+        let mut sku = GpuSku::new("h100", perf, 350.0, 700.0);
+        sku.hbm_gb = Some(80.0);
+        sku
     }
 
     /// Previous-generation 400 W-class part: roughly half the prompt
@@ -143,7 +157,9 @@ pub mod skus {
             decode_rated_w: 340.0,
             ..PerfModelConfig::default()
         };
-        GpuSku::new("a100", perf, 250.0, 400.0)
+        let mut sku = GpuSku::new("a100", perf, 250.0, 400.0);
+        sku.hbm_gb = Some(40.0);
+        sku
     }
 
     /// Catalog lookup by name.
@@ -287,6 +303,8 @@ pub struct Fleet {
     /// Per-SKU cap floors / ceilings (W).
     floor_w: Vec<Watts>,
     max_w: Vec<Watts>,
+    /// Per-SKU HBM capacity (GB); `None` = uncapped.
+    hbm_gb: Vec<Option<f64>>,
     /// Per-SKU router throughput scales, relative to SKU 0: prefill by
     /// rated prompt rate, decode by rated step time. Exactly 1.0 across
     /// the board for homogeneous fleets.
@@ -335,6 +353,7 @@ impl Fleet {
         Fleet {
             floor_w: skus.iter().map(|s| s.cap_floor_w).collect(),
             max_w: skus.iter().map(|s| s.max_w).collect(),
+            hbm_gb: skus.iter().map(|s| s.hbm_gb).collect(),
             models: skus.into_iter().map(|s| PowerModel::new(s.perf)).collect(),
             prefill_scale,
             decode_scale,
@@ -390,6 +409,18 @@ impl Fleet {
     #[inline]
     pub fn decode_scale(&self, gi: usize) -> f64 {
         self.decode_scale[self.sku_of[gi] as usize]
+    }
+
+    /// HBM capacity (GB) of GPU `gi`'s SKU; `None` = uncapped.
+    #[inline]
+    pub fn hbm_gb(&self, gi: usize) -> Option<f64> {
+        self.hbm_gb[self.sku_of[gi] as usize]
+    }
+
+    /// Per-GPU SKU HBM capacities, the slot list `mem::MemState::new`
+    /// resolves its pool sizes from.
+    pub fn hbm_caps(&self) -> Vec<Option<f64>> {
+        (0..self.sku_of.len()).map(|gi| self.hbm_gb(gi)).collect()
     }
 
     /// Per-GPU cap floors / ceilings for the power manager.
@@ -524,6 +555,25 @@ mod tests {
         custom.max_w = 500.0;
         let fc = FleetConfig::parse_mix("a100:4", &[custom]).unwrap();
         assert_eq!(fc.skus[0].max_w, 500.0);
+    }
+
+    #[test]
+    fn catalog_hbm_capacities() {
+        assert_eq!(skus::mi300x().hbm_gb, Some(192.0));
+        assert_eq!(skus::h100().hbm_gb, Some(80.0));
+        assert_eq!(skus::a100().hbm_gb, Some(40.0));
+        // The implicit SKU is uncapped: no [mem] table can be surprised
+        // by a capacity it never declared.
+        let fleet = Fleet::of_config(&presets::p4d4(600.0));
+        assert!(fleet.hbm_caps().iter().all(Option::is_none));
+        // Hetero fleets expose per-slot capacities.
+        let fleet = Fleet::of_config(&hetero_cfg());
+        assert_eq!(fleet.hbm_gb(0), Some(192.0));
+        assert_eq!(fleet.hbm_gb(2), Some(40.0));
+        // hbm_gb must be positive when set.
+        let mut bad = skus::mi300x();
+        bad.hbm_gb = Some(0.0);
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -13,6 +13,7 @@ pub mod env;
 pub mod experiments;
 pub mod fleet;
 pub mod kv;
+pub mod mem;
 pub mod metrics;
 pub mod power;
 #[cfg(feature = "pjrt")]

@@ -1,0 +1,736 @@
+//! KV memory subsystem (DESIGN.md §14): per-GPU HBM capacity
+//! accounting, tiered offload, and a conversation-keyed prefix cache.
+//!
+//! The paper's reallocation model pays bandwidth for KV transfers but
+//! never capacity — decode can always admit, and multi-turn prompts
+//! always re-prefill. This module makes KV memory a first-class
+//! resource, following the MemDis-LLM tier shape (local HBM → remote
+//! memory → disk, each with its own bandwidth/latency) and the
+//! TensorRT-LLM KV-cache-exchange design for conversation reuse:
+//!
+//! * [`MemConfig`] — the `[mem]` TOML table: an optional uniform HBM
+//!   capacity override (per-SKU `hbm_gb` catalog values apply when
+//!   unset), tier bandwidths/latencies (validated `local ≥ remote ≥
+//!   disk`), and the prefix-cache switch;
+//! * [`MemState`] — per-GPU pools the cluster core drives: decode
+//!   dispatch **reserves** the request's projected context bytes
+//!   (prompt + cached prefix + generated tokens, the same sizing the
+//!   failure re-fetch path uses) and eviction demotes least-recently
+//!   finished cached blocks local → remote → disk to make headroom.
+//!   Active reservations are never victims, so `resident ≤ capacity`
+//!   holds at every instant by construction (the per-cell ShapeCheck);
+//! * a prefix cache keyed by conversation id: a finished turn's KV
+//!   parks as a cached block, and the next turn of that conversation
+//!   skips re-prefilling the reused prefix, paying only the tier fetch.
+//!
+//! **Bit-identity contract**: without a `[mem]` table (`ClusterConfig::
+//! mem == None`) the subsystem is inert — no reservations, no stalls, a
+//! memory-pressure term of exactly `+0.0` in the router — and every run
+//! is bit-identical to the pre-mem simulator. Coalesced topologies keep
+//! the subsystem inert too (their KV never crosses the ring).
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::types::Micros;
+
+/// The `[mem]` config table: HBM capacity plus the offload tier model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemConfig {
+    /// Uniform per-GPU HBM capacity override (GB). `None` falls back to
+    /// each slot's SKU `hbm_gb`; a slot with neither is uncapped.
+    pub hbm_gb: Option<f64>,
+    /// Per-GPU remote-tier (CXL/host-memory class) capacity (GB).
+    pub remote_gb: f64,
+    /// Local HBM-side eviction/fetch bandwidth (GB/s), XGMI-class.
+    pub local_bw_gbps: f64,
+    /// Remote-tier bandwidth (GB/s).
+    pub remote_bw_gbps: f64,
+    /// Disk-tier bandwidth (GB/s). The disk tier is unbounded.
+    pub disk_bw_gbps: f64,
+    /// Added latency for any remote-tier touch (us).
+    pub remote_lat_us: Micros,
+    /// Added latency for any disk-tier touch (us).
+    pub disk_lat_us: Micros,
+    /// Keep finished conversations' KV as prefix-cache blocks.
+    pub prefix_cache: bool,
+}
+
+impl Default for MemConfig {
+    fn default() -> Self {
+        MemConfig {
+            hbm_gb: None,
+            remote_gb: 512.0,
+            local_bw_gbps: 64.0,
+            remote_bw_gbps: 16.0,
+            disk_bw_gbps: 2.0,
+            remote_lat_us: 50,
+            disk_lat_us: 2_000,
+            prefix_cache: true,
+        }
+    }
+}
+
+impl MemConfig {
+    /// Structural checks `rapid validate` enforces: positive
+    /// capacities/bandwidths and the tier ordering local ≥ remote ≥ disk.
+    pub fn validate(&self) -> Result<(), String> {
+        if let Some(gb) = self.hbm_gb {
+            if gb <= 0.0 {
+                return Err(format!("mem.hbm_gb {gb} must be > 0"));
+            }
+        }
+        if self.remote_gb <= 0.0 {
+            return Err(format!("mem.remote_gb {} must be > 0", self.remote_gb));
+        }
+        for (name, bw) in [
+            ("local_bw_gbps", self.local_bw_gbps),
+            ("remote_bw_gbps", self.remote_bw_gbps),
+            ("disk_bw_gbps", self.disk_bw_gbps),
+        ] {
+            if bw <= 0.0 {
+                return Err(format!("mem.{name} {bw} must be > 0"));
+            }
+        }
+        if self.local_bw_gbps < self.remote_bw_gbps || self.remote_bw_gbps < self.disk_bw_gbps {
+            return Err(format!(
+                "mem tier bandwidths must be ordered local >= remote >= disk \
+                 (got {} >= {} >= {})",
+                self.local_bw_gbps, self.remote_bw_gbps, self.disk_bw_gbps
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Where a cached (finished-context) KV block currently lives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    Local,
+    Remote,
+    Disk,
+}
+
+/// One finished conversation's parked KV: the prefix-cache unit and the
+/// eviction victim unit (whole conversations demote atomically).
+#[derive(Debug, Clone, Copy)]
+struct CachedBlock {
+    conv: u64,
+    bytes: u64,
+    tokens: u32,
+}
+
+/// Result of a successful reservation: the eviction work it forced.
+/// `time == 0` when the pool had headroom without demoting anything.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Eviction {
+    /// Simulated time the demotions occupy the GPU's copy engines
+    /// (decode on the GPU stalls until `now + time`).
+    pub time: Micros,
+    /// Bytes demoted out of local HBM.
+    pub bytes: u64,
+}
+
+/// Per-run memory counters surfaced on `Summary`/emitters.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct MemSummary {
+    /// Peak HBM occupancy fraction over finite-capacity GPUs.
+    pub peak_occupancy: f64,
+    /// Cached blocks demoted out of local HBM.
+    pub evictions: u64,
+    /// Bytes those demotions moved to remote/disk tiers.
+    pub offload_bytes: u64,
+    /// Prefix-cache hits / lookups and their ratio.
+    pub prefix_hits: u64,
+    pub prefix_lookups: u64,
+    pub hit_rate: f64,
+}
+
+/// Outcome of a mem-axis atom string (`hbm:<gb>` /
+/// `multiturn:<turns>:<reuse_frac>` / `none`), the compact grammar the
+/// scenario `mem` axis parses alongside the `env` axis grammar.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct MemAxis {
+    /// Uniform HBM capacity to enforce (activates the subsystem).
+    pub hbm_gb: Option<f64>,
+    /// Multi-turn workload transform: (turns per conversation,
+    /// reused-prefix fraction of the prior context).
+    pub multiturn: Option<(u32, f64)>,
+}
+
+impl MemAxis {
+    /// Parse `+`-joined atoms, e.g. `"hbm:16"`,
+    /// `"multiturn:4:0.6+hbm:32"`, or `"none"` (the inert label).
+    pub fn parse_compact(s: &str) -> Result<MemAxis, String> {
+        let s = s.trim();
+        let mut axis = MemAxis::default();
+        if s.is_empty() || s == "none" {
+            return Ok(axis);
+        }
+        for atom in s.split('+') {
+            let atom = atom.trim();
+            let parts: Vec<&str> = atom.split(':').collect();
+            match (parts[0], parts.len()) {
+                ("hbm", 2) => {
+                    if axis.hbm_gb.is_some() {
+                        return Err(format!("duplicate hbm atom '{atom}'"));
+                    }
+                    let gb = parts[1]
+                        .parse::<f64>()
+                        .ok()
+                        .filter(|&g| g > 0.0)
+                        .ok_or_else(|| {
+                            format!("hbm capacity '{}' must be a positive number", parts[1])
+                        })?;
+                    axis.hbm_gb = Some(gb);
+                }
+                ("multiturn", 3) => {
+                    if axis.multiturn.is_some() {
+                        return Err(format!("duplicate multiturn atom '{atom}'"));
+                    }
+                    let turns = parts[1]
+                        .parse::<u32>()
+                        .ok()
+                        .filter(|&t| t >= 2)
+                        .ok_or_else(|| {
+                            format!("multiturn turns '{}' must be an integer >= 2", parts[1])
+                        })?;
+                    let reuse = parts[2]
+                        .parse::<f64>()
+                        .ok()
+                        .filter(|f| (0.0..=1.0).contains(f))
+                        .ok_or_else(|| {
+                            format!("multiturn reuse_frac '{}' must be in [0, 1]", parts[2])
+                        })?;
+                    axis.multiturn = Some((turns, reuse));
+                }
+                _ => {
+                    return Err(format!(
+                        "unknown mem atom '{atom}' \
+                         (none | hbm:<gb> | multiturn:<turns>:<reuse_frac>)"
+                    ));
+                }
+            }
+        }
+        Ok(axis)
+    }
+
+    /// Does this axis cell change anything relative to the default?
+    pub fn is_empty(&self) -> bool {
+        *self == MemAxis::default()
+    }
+}
+
+/// Runtime per-GPU KV pools. All hot-path methods early-return when
+/// inactive so the no-`[mem]` configuration touches none of this state.
+#[derive(Debug, Default)]
+pub struct MemState {
+    cfg: MemConfig,
+    active: bool,
+    /// Per-GPU HBM capacity in bytes; `None` = uncapped.
+    cap: Vec<Option<u64>>,
+    /// Bytes reserved by live decode contexts (never evictable).
+    reserved: Vec<u64>,
+    /// Bytes held by local cached (finished, idle) blocks.
+    cached: Vec<u64>,
+    /// Per-GPU LRU of local cached blocks (front = oldest = next victim).
+    local: Vec<VecDeque<CachedBlock>>,
+    /// Per-GPU remote/disk offload pools (demotion order preserved).
+    remote: Vec<VecDeque<CachedBlock>>,
+    remote_used: Vec<u64>,
+    disk: Vec<VecDeque<CachedBlock>>,
+    /// conversation id → (gpu, tier) of its cached block.
+    conv_index: HashMap<u64, (usize, Tier)>,
+    /// Decode stall deadline per GPU while demotions occupy the engines.
+    pub evict_until: Vec<Micros>,
+    /// Arrival-time prefix hits awaiting their prefill completion
+    /// (request id → reused tokens) and publish (request id → tier
+    /// fetch time to add to the KV transfer).
+    pending_cached: HashMap<u64, u32>,
+    pending_fetch: HashMap<u64, Micros>,
+    evictions: u64,
+    offload_bytes: u64,
+    prefix_hits: u64,
+    prefix_lookups: u64,
+    peak_occ: f64,
+}
+
+impl MemState {
+    /// Inert state for configs without a `[mem]` table (allocates
+    /// nothing; every method is a guarded no-op).
+    pub fn inactive() -> MemState {
+        MemState::default()
+    }
+
+    /// Build the per-GPU pools. `hbm_of(gi)` is the slot's SKU capacity
+    /// (GB); the uniform `cfg.hbm_gb` override wins when set.
+    pub fn new(cfg: MemConfig, hbm_of: &[Option<f64>]) -> MemState {
+        let n = hbm_of.len();
+        let cap = hbm_of
+            .iter()
+            .map(|sku_gb| cfg.hbm_gb.or(*sku_gb).map(|gb| (gb * 1e9) as u64))
+            .collect();
+        MemState {
+            cfg,
+            active: true,
+            cap,
+            reserved: vec![0; n],
+            cached: vec![0; n],
+            local: vec![VecDeque::new(); n],
+            remote: vec![VecDeque::new(); n],
+            remote_used: vec![0; n],
+            disk: vec![VecDeque::new(); n],
+            conv_index: HashMap::new(),
+            evict_until: vec![0; n],
+            pending_cached: HashMap::new(),
+            pending_fetch: HashMap::new(),
+            evictions: 0,
+            offload_bytes: 0,
+            prefix_hits: 0,
+            prefix_lookups: 0,
+            peak_occ: 0.0,
+        }
+    }
+
+    #[inline]
+    pub fn active(&self) -> bool {
+        self.active
+    }
+
+    pub fn config(&self) -> &MemConfig {
+        &self.cfg
+    }
+
+    /// Is decode on `gi` stalled behind in-progress demotions?
+    #[inline]
+    pub fn stalled(&self, gi: usize, now: Micros) -> bool {
+        self.active && now < self.evict_until[gi]
+    }
+
+    fn resident(&self, gi: usize) -> u64 {
+        self.reserved[gi] + self.cached[gi]
+    }
+
+    /// HBM occupancy fraction of `gi` (0.0 when uncapped or inactive).
+    pub fn occupancy(&self, gi: usize) -> f64 {
+        if !self.active {
+            return 0.0;
+        }
+        match self.cap[gi] {
+            Some(cap) if cap > 0 => self.resident(gi) as f64 / cap as f64,
+            _ => 0.0,
+        }
+    }
+
+    /// Router memory-pressure term for decode GPU `gi`: occupancy
+    /// scaled into request units so a near-full pool weighs like a
+    /// near-full batch. Exactly `0.0` when inactive or uncapped, which
+    /// keeps the comparator bit-identical to the pre-mem router.
+    pub fn pressure(&self, gi: usize, max_decode_reqs: usize) -> f64 {
+        if !self.active {
+            return 0.0;
+        }
+        self.occupancy(gi) * max_decode_reqs as f64
+    }
+
+    /// Time to demote/fetch `bytes` through a tier's link.
+    fn tier_time(&self, tier: Tier, bytes: u64) -> Micros {
+        let (lat, bw_gbps) = match tier {
+            Tier::Local => (0, self.cfg.local_bw_gbps),
+            Tier::Remote => (self.cfg.remote_lat_us, self.cfg.remote_bw_gbps),
+            Tier::Disk => (self.cfg.disk_lat_us, self.cfg.disk_bw_gbps),
+        };
+        // bytes / (GB/s) in us: bytes / (bw * 1e9) * 1e6.
+        lat + (bytes as f64 / (bw_gbps * 1e3)) as Micros
+    }
+
+    /// Reserve `bytes` of HBM on `gi` for a decode context, demoting
+    /// least-recently-finished cached blocks (local → remote while the
+    /// remote tier has room, then → disk) until the reservation fits.
+    /// Live reservations are never demoted — a victim mid-decode is
+    /// structurally impossible — so `Err` means the GPU cannot host the
+    /// context at all right now and the caller must backpressure.
+    pub fn reserve(&mut self, gi: usize, bytes: u64) -> Result<Eviction, ()> {
+        if !self.active {
+            return Ok(Eviction::default());
+        }
+        let Some(cap) = self.cap[gi] else {
+            self.reserved[gi] += bytes;
+            return Ok(Eviction::default());
+        };
+        let mut ev = Eviction::default();
+        while self.resident(gi) + bytes > cap {
+            let Some(block) = self.local[gi].pop_front() else {
+                // Nothing left to demote: reject. (Blocks already
+                // demoted this call stay demoted — they are cached
+                // copies, and re-promoting them would cost more.)
+                return Err(());
+            };
+            self.cached[gi] -= block.bytes;
+            let dest = if self.remote_used[gi] + block.bytes <= (self.cfg.remote_gb * 1e9) as u64 {
+                self.remote_used[gi] += block.bytes;
+                self.remote[gi].push_back(block);
+                Tier::Remote
+            } else {
+                self.disk[gi].push_back(block);
+                Tier::Disk
+            };
+            self.conv_index.insert(block.conv, (gi, dest));
+            ev.time += self.tier_time(dest, block.bytes);
+            ev.bytes += block.bytes;
+            self.evictions += 1;
+            self.offload_bytes += block.bytes;
+        }
+        self.reserved[gi] += bytes;
+        Ok(ev)
+    }
+
+    /// Release a reservation (context finished without caching, moved
+    /// to another GPU, or its GPU failed and re-dispatched).
+    pub fn release(&mut self, gi: usize, bytes: u64) {
+        if !self.active {
+            return;
+        }
+        debug_assert!(self.reserved[gi] >= bytes, "release exceeds reservation");
+        self.reserved[gi] = self.reserved[gi].saturating_sub(bytes);
+    }
+
+    /// A context finished on `gi`: convert its reservation into a
+    /// prefix-cache block for conversation `conv` (resident bytes are
+    /// unchanged, so the capacity invariant is untouched). With the
+    /// prefix cache disabled this is a plain release.
+    pub fn finish(&mut self, gi: usize, conv: Option<u64>, bytes: u64, tokens: u32) {
+        if !self.active {
+            return;
+        }
+        let conv = match conv {
+            Some(c) if self.cfg.prefix_cache => c,
+            _ => {
+                self.release(gi, bytes);
+                return;
+            }
+        };
+        // A stale block from an earlier turn (that never got consumed)
+        // is superseded by this longer context.
+        self.consume_block(conv);
+        self.release(gi, bytes);
+        self.cached[gi] += bytes;
+        self.local[gi].push_back(CachedBlock { conv, bytes, tokens });
+        self.conv_index.insert(conv, (gi, Tier::Local));
+    }
+
+    /// Remove and return `conv`'s cached block wherever it lives.
+    fn consume_block(&mut self, conv: u64) -> Option<(usize, Tier, CachedBlock)> {
+        let (gi, tier) = self.conv_index.remove(&conv)?;
+        let pool = match tier {
+            Tier::Local => &mut self.local[gi],
+            Tier::Remote => &mut self.remote[gi],
+            Tier::Disk => &mut self.disk[gi],
+        };
+        let at = pool.iter().position(|b| b.conv == conv)?;
+        let block = pool.remove(at).unwrap();
+        match tier {
+            Tier::Local => self.cached[gi] -= block.bytes,
+            Tier::Remote => self.remote_used[gi] -= block.bytes,
+            Tier::Disk => {}
+        }
+        Some((gi, tier, block))
+    }
+
+    /// Arrival-time prefix lookup for a multi-turn request: on a hit the
+    /// cached block is consumed and the caller shrinks the prompt by the
+    /// returned token count; the tier fetch time is parked for the
+    /// publish path (`take_fetch`). `input_tokens` is the full prompt —
+    /// at least one token always remains to prefill.
+    pub fn prefix_lookup(
+        &mut self,
+        req_id: u64,
+        conv: u64,
+        prefix_tokens: u32,
+        input_tokens: u32,
+        bytes_per_token: u64,
+    ) -> Option<u32> {
+        if !self.active || !self.cfg.prefix_cache || prefix_tokens == 0 {
+            return None;
+        }
+        self.prefix_lookups += 1;
+        let (_, tier, block) = self.consume_block(conv)?;
+        let tokens = prefix_tokens
+            .min(block.tokens)
+            .min(input_tokens.saturating_sub(1));
+        if tokens == 0 {
+            return None;
+        }
+        self.prefix_hits += 1;
+        let fetch = self.tier_time(tier, tokens as u64 * bytes_per_token);
+        self.pending_cached.insert(req_id, tokens);
+        self.pending_fetch.insert(req_id, fetch);
+        Some(tokens)
+    }
+
+    /// Reused-prefix tokens of a request whose prefill just completed
+    /// (consumed into `DecodeItem::cached_tokens`).
+    pub fn take_cached_tokens(&mut self, req_id: u64) -> u32 {
+        if !self.active {
+            return 0;
+        }
+        self.pending_cached.remove(&req_id).unwrap_or(0)
+    }
+
+    /// Tier fetch time owed by a prefix hit, paid on the KV publish.
+    pub fn take_fetch(&mut self, req_id: u64) -> Micros {
+        if !self.active {
+            return 0;
+        }
+        self.pending_fetch.remove(&req_id).unwrap_or(0)
+    }
+
+    /// GPU `gi` failed: its HBM contents (reservations and every cached
+    /// block in all tiers — the offload pools hang off its node agent)
+    /// are gone. In-flight decode items re-reserve on their new target.
+    pub fn invalidate_gpu(&mut self, gi: usize) {
+        if !self.active {
+            return;
+        }
+        self.reserved[gi] = 0;
+        self.cached[gi] = 0;
+        self.remote_used[gi] = 0;
+        self.evict_until[gi] = 0;
+        for pool in [&mut self.local[gi], &mut self.remote[gi], &mut self.disk[gi]] {
+            for b in pool.drain(..) {
+                self.conv_index.remove(&b.conv);
+            }
+        }
+    }
+
+    /// Record one occupancy sample; returns the fleet max fraction (the
+    /// `mem_trace` series the ShapeCheck walks).
+    pub fn sample_occupancy(&mut self) -> f64 {
+        let max = (0..self.cap.len())
+            .map(|gi| self.occupancy(gi))
+            .fold(0.0f64, f64::max);
+        if max > self.peak_occ {
+            self.peak_occ = max;
+        }
+        max
+    }
+
+    /// Fold the counters into the run summary.
+    pub fn summary(&self) -> MemSummary {
+        MemSummary {
+            peak_occupancy: self.peak_occ,
+            evictions: self.evictions,
+            offload_bytes: self.offload_bytes,
+            prefix_hits: self.prefix_hits,
+            prefix_lookups: self.prefix_lookups,
+            hit_rate: if self.prefix_lookups > 0 {
+                self.prefix_hits as f64 / self.prefix_lookups as f64
+            } else {
+                0.0
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(hbm_gb: f64, n: usize) -> MemState {
+        let cfg = MemConfig { hbm_gb: Some(hbm_gb), ..MemConfig::default() };
+        MemState::new(cfg, &vec![None; n])
+    }
+
+    #[test]
+    fn config_validation() {
+        MemConfig::default().validate().unwrap();
+        let bad = MemConfig { hbm_gb: Some(0.0), ..MemConfig::default() };
+        assert!(bad.validate().is_err());
+        let bad = MemConfig { remote_gb: -1.0, ..MemConfig::default() };
+        assert!(bad.validate().is_err());
+        let bad = MemConfig { disk_bw_gbps: 0.0, ..MemConfig::default() };
+        assert!(bad.validate().is_err());
+        // Tier ordering: remote faster than local is structural nonsense.
+        let bad = MemConfig { remote_bw_gbps: 128.0, ..MemConfig::default() };
+        assert!(bad.validate().is_err(), "local >= remote must hold");
+        let bad = MemConfig { disk_bw_gbps: 32.0, ..MemConfig::default() };
+        assert!(bad.validate().is_err(), "remote >= disk must hold");
+    }
+
+    #[test]
+    fn inactive_state_is_inert() {
+        let mut m = MemState::inactive();
+        assert!(!m.active());
+        assert_eq!(m.pressure(0, 64), 0.0);
+        assert_eq!(m.occupancy(0), 0.0);
+        assert!(!m.stalled(0, 100));
+        let ev = m.reserve(0, u64::MAX).unwrap();
+        assert_eq!(ev.bytes, 0);
+        m.release(0, 123);
+        m.finish(0, Some(1), 123, 10);
+        m.invalidate_gpu(0);
+        assert_eq!(m.summary(), MemSummary::default());
+    }
+
+    #[test]
+    fn pool_exactly_full_admits_then_rejects() {
+        let mut m = pool(1.0, 1); // 1 GB = 1e9 bytes
+        assert!(m.reserve(0, 600_000_000).unwrap().bytes == 0);
+        // Exactly to the byte: still admitted, occupancy hits 1.0.
+        assert!(m.reserve(0, 400_000_000).is_ok());
+        assert!((m.occupancy(0) - 1.0).abs() < 1e-12);
+        // One more byte has no victim to evict: rejected.
+        assert!(m.reserve(0, 1).is_err());
+        m.release(0, 400_000_000);
+        assert!(m.reserve(0, 1).is_ok());
+    }
+
+    #[test]
+    fn eviction_demotes_lru_and_never_touches_reservations() {
+        let mut m = pool(1.0, 1);
+        m.reserve(0, 500_000_000).unwrap();
+        // Two finished conversations park as cached blocks (LRU: 7 older).
+        m.finish(0, Some(7), 300_000_000, 2000);
+        m.finish(0, Some(8), 200_000_000, 1500);
+        m.release(0, 0);
+        assert!((m.occupancy(0) - 1.0).abs() < 1e-12);
+        // A 250 MB reservation must demote conv 7 (oldest) only.
+        let ev = m.reserve(0, 250_000_000).unwrap();
+        assert_eq!(ev.bytes, 300_000_000);
+        assert!(ev.time > 0);
+        assert_eq!(m.conv_index.get(&7), Some(&(0, Tier::Remote)));
+        assert_eq!(m.conv_index.get(&8), Some(&(0, Tier::Local)));
+        let s = m.summary();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.offload_bytes, 300_000_000);
+        // Mid-decode victims are impossible: with only reservations
+        // left, further pressure rejects instead of evicting them.
+        m.reserve(0, 200_000_000).unwrap(); // demotes conv 8
+        assert!(m.reserve(0, 100_000_000).is_err());
+        assert_eq!(m.reserved[0], 950_000_000, "reservations intact");
+    }
+
+    #[test]
+    fn remote_overflow_spills_to_disk() {
+        let cfg = MemConfig {
+            hbm_gb: Some(1.0),
+            remote_gb: 0.25, // 250 MB remote tier
+            ..MemConfig::default()
+        };
+        let mut m = MemState::new(cfg, &[None]);
+        m.finish(0, Some(1), 200_000_000, 100);
+        m.finish(0, Some(2), 300_000_000, 100);
+        m.finish(0, Some(3), 500_000_000, 100);
+        // Reserve the whole pool: all three demote; 1 fits remote,
+        // 2 and 3 overflow to disk.
+        let ev = m.reserve(0, 1_000_000_000).unwrap();
+        assert_eq!(ev.bytes, 1_000_000_000);
+        assert_eq!(m.conv_index.get(&1), Some(&(0, Tier::Remote)));
+        assert_eq!(m.conv_index.get(&2), Some(&(0, Tier::Disk)));
+        assert_eq!(m.conv_index.get(&3), Some(&(0, Tier::Disk)));
+        // Disk demotions are slower than remote ones.
+        let remote_t = m.tier_time(Tier::Remote, 100_000_000);
+        let disk_t = m.tier_time(Tier::Disk, 100_000_000);
+        assert!(disk_t > remote_t);
+        assert!(m.tier_time(Tier::Local, 100_000_000) < remote_t);
+    }
+
+    #[test]
+    fn prefix_cache_hit_consumes_block_and_charges_tier_fetch() {
+        let mut m = pool(4.0, 2);
+        m.reserve(1, 400_000_000).unwrap();
+        m.finish(1, Some(42), 400_000_000, 3000);
+        // Next turn of conv 42: 2000-token reusable prefix, 2500 prompt.
+        let hit = m.prefix_lookup(9, 42, 2000, 2500, 131_072);
+        assert_eq!(hit, Some(2000));
+        assert_eq!(m.take_cached_tokens(9), 2000);
+        assert!(m.take_fetch(9) > 0, "local fetch pays bandwidth");
+        // The block is consumed: a second lookup misses.
+        assert_eq!(m.prefix_lookup(10, 42, 2000, 2500, 131_072), None);
+        let s = m.summary();
+        assert_eq!((s.prefix_hits, s.prefix_lookups), (1, 2));
+        assert!((s.hit_rate - 0.5).abs() < 1e-12);
+        // Consuming freed the cached bytes.
+        assert_eq!(m.cached[1], 0);
+    }
+
+    #[test]
+    fn prefix_hit_never_zeroes_the_prompt() {
+        let mut m = pool(4.0, 1);
+        m.finish(0, Some(5), 100_000_000, 4000);
+        // Prefix covers the whole 1000-token prompt: one token remains.
+        assert_eq!(m.prefix_lookup(1, 5, 4000, 1000, 131_072), Some(999));
+    }
+
+    #[test]
+    fn prefix_cache_disabled_means_plain_release() {
+        let cfg = MemConfig {
+            hbm_gb: Some(1.0),
+            prefix_cache: false,
+            ..MemConfig::default()
+        };
+        let mut m = MemState::new(cfg, &[None]);
+        m.reserve(0, 500_000_000).unwrap();
+        m.finish(0, Some(3), 500_000_000, 100);
+        assert_eq!(m.resident(0), 0, "finish released instead of caching");
+        assert_eq!(m.prefix_lookup(1, 3, 100, 200, 131_072), None);
+        assert_eq!(m.summary().prefix_lookups, 0);
+    }
+
+    #[test]
+    fn gpu_failure_invalidates_prefix_blocks_and_reservations() {
+        let mut m = pool(1.0, 2);
+        m.reserve(0, 300_000_000).unwrap();
+        m.finish(0, Some(11), 300_000_000, 500);
+        m.finish(0, Some(12), 600_000_000, 500);
+        // Force 11 to the remote tier so a non-local block dies too.
+        m.reserve(0, 500_000_000).unwrap();
+        assert_eq!(m.conv_index.get(&11), Some(&(0, Tier::Remote)));
+        m.invalidate_gpu(0);
+        assert_eq!(m.resident(0), 0);
+        assert_eq!(m.prefix_lookup(1, 11, 100, 200, 131_072), None);
+        assert_eq!(m.prefix_lookup(2, 12, 100, 200, 131_072), None);
+        // Blocks on the surviving GPU are untouched.
+        m.finish(1, Some(13), 100_000_000, 500);
+        assert!(m.prefix_lookup(3, 13, 100, 200, 131_072).is_some());
+    }
+
+    #[test]
+    fn sku_capacity_applies_per_slot_with_uniform_override_winning() {
+        let cfg = MemConfig::default(); // hbm_gb unset
+        let m = MemState::new(cfg, &[Some(2.0), None]);
+        assert_eq!(m.cap[0], Some(2_000_000_000));
+        assert_eq!(m.cap[1], None, "slot without SKU capacity is uncapped");
+        let cfg = MemConfig { hbm_gb: Some(1.0), ..MemConfig::default() };
+        let m = MemState::new(cfg, &[Some(2.0), None]);
+        assert_eq!(m.cap[0], Some(1_000_000_000), "uniform override wins");
+        assert_eq!(m.cap[1], Some(1_000_000_000));
+    }
+
+    #[test]
+    fn pressure_scales_occupancy_into_request_units() {
+        let mut m = pool(1.0, 1);
+        assert_eq!(m.pressure(0, 64), 0.0);
+        m.reserve(0, 500_000_000).unwrap();
+        assert!((m.pressure(0, 64) - 32.0).abs() < 1e-9);
+        assert!((m.sample_occupancy() - 0.5).abs() < 1e-9);
+        assert!((m.summary().peak_occupancy - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn axis_grammar_round_trips() {
+        assert!(MemAxis::parse_compact("none").unwrap().is_empty());
+        assert!(MemAxis::parse_compact("").unwrap().is_empty());
+        let a = MemAxis::parse_compact("hbm:16").unwrap();
+        assert_eq!(a.hbm_gb, Some(16.0));
+        assert_eq!(a.multiturn, None);
+        let a = MemAxis::parse_compact("multiturn:4:0.6+hbm:32").unwrap();
+        assert_eq!(a.hbm_gb, Some(32.0));
+        assert_eq!(a.multiturn, Some((4, 0.6)));
+        assert!(MemAxis::parse_compact("hbm:0").is_err());
+        assert!(MemAxis::parse_compact("hbm:x").is_err());
+        assert!(MemAxis::parse_compact("multiturn:1:0.5").is_err());
+        assert!(MemAxis::parse_compact("multiturn:4:1.5").is_err());
+        assert!(MemAxis::parse_compact("hbm:8+hbm:16").is_err());
+        assert!(MemAxis::parse_compact("warp:9").is_err());
+    }
+}

@@ -38,6 +38,13 @@ pub struct RunResult {
     /// Resilience aggregates around the disturbance window; `None` for
     /// undisturbed runs.
     pub resilience: Option<Resilience>,
+    /// KV memory subsystem aggregates; `None` when the run had no
+    /// `[mem]` table (the subsystem was structurally inactive).
+    pub mem: Option<crate::mem::MemSummary>,
+    /// Fleet-max HBM occupancy fraction per telemetry sample — the
+    /// series the "resident KV <= HBM capacity" ShapeCheck walks.
+    /// Empty when the memory subsystem is inactive.
+    pub mem_trace: Vec<(Micros, f64)>,
     /// Summary computed once when the run finishes, so study emitters
     /// and figure drivers never re-scan the record/power series.
     /// Hand-built results (tests) fall back to computing on demand.
@@ -168,6 +175,7 @@ impl RunResult {
             peak_node_w: self.node_power.max(),
             duration_s: self.duration as f64 / SECOND as f64,
             resilience: self.resilience,
+            mem: self.mem,
         }
     }
 
@@ -217,6 +225,8 @@ pub struct Summary {
     pub duration_s: f64,
     /// Disturbance-recovery aggregates; `None` for undisturbed runs.
     pub resilience: Option<Resilience>,
+    /// KV memory aggregates; `None` when the subsystem was inactive.
+    pub mem: Option<crate::mem::MemSummary>,
 }
 
 /// Goodput bucket width for the resilience aggregates (coarse enough

@@ -64,6 +64,12 @@ fn any_resilience(study: &StudyResult) -> bool {
     study.cells.iter().any(|c| c.resilience().is_some())
 }
 
+/// Any cell with an active KV capacity model? Gates the memory columns
+/// so capacity-free studies render byte-identically to pre-mem output.
+fn any_mem(study: &StudyResult) -> bool {
+    study.cells.iter().any(|c| c.mem().is_some())
+}
+
 // ---------------------------------------------------------------------------
 // Text
 // ---------------------------------------------------------------------------
@@ -108,6 +114,18 @@ fn text_metrics(study: &StudyResult) -> Vec<Metric> {
                 value: |c| c.resilience().map_or(0.0, |r| r.recovery_s),
                 // Infinite = never recovered before the run ended.
                 fmt: |v| if v.is_finite() { format!("{v:.1}") } else { "never".into() },
+            });
+        }
+        if any_mem(study) {
+            metrics.push(Metric {
+                name: "peak_kv_occ",
+                value: |c| c.mem().map_or(0.0, |m| m.peak_occupancy),
+                fmt: |v| format!("{v:.3}"),
+            });
+            metrics.push(Metric {
+                name: "prefix_hit_rate",
+                value: |c| c.mem().map_or(0.0, |m| m.hit_rate),
+                fmt: |v| format!("{v:.3}"),
             });
         }
         metrics
@@ -259,6 +277,14 @@ fn cell_json(cell: &Cell) -> Json {
                 m.insert("attainment_during".into(), num(res.attainment_during));
                 m.insert("attainment_post".into(), num(res.attainment_post));
             }
+            if let Some(mem) = s.mem {
+                m.insert("peak_kv_occ".into(), num(mem.peak_occupancy));
+                m.insert("kv_evictions".into(), Json::Num(mem.evictions as f64));
+                m.insert("kv_offload_bytes".into(), Json::Num(mem.offload_bytes as f64));
+                m.insert("prefix_hits".into(), Json::Num(mem.prefix_hits as f64));
+                m.insert("prefix_lookups".into(), Json::Num(mem.prefix_lookups as f64));
+                m.insert("prefix_hit_rate".into(), num(mem.hit_rate));
+            }
             obj.insert("metrics".into(), Json::Obj(m));
         }
     }
@@ -340,6 +366,7 @@ impl Emitter for CsvEmitter {
         let axis_keys: Vec<&str> = study.scenario.axes.iter().map(super::Axis::key).collect();
         let scalar = all_scalar(study);
         let resilience = any_resilience(study);
+        let mem = any_mem(study);
         let mut out = String::new();
         for k in &axis_keys {
             out.push_str(k);
@@ -356,6 +383,9 @@ impl Emitter for CsvEmitter {
             );
             if resilience {
                 out.push_str(",dip_depth,recovery_s");
+            }
+            if mem {
+                out.push_str(",peak_kv_occ,kv_evictions,kv_offload_bytes,prefix_hit_rate");
             }
             out.push('\n');
         }
@@ -390,6 +420,14 @@ impl Emitter for CsvEmitter {
                         } else {
                             out.push_str(&format!(",{dip},"));
                         }
+                    }
+                    if mem {
+                        // Inactive cells in a mem study emit zeros (the
+                        // capacity model never engaged there).
+                        let (occ, ev, off, hr) = s.mem.map_or((0.0, 0, 0, 0.0), |m| {
+                            (m.peak_occupancy, m.evictions, m.offload_bytes, m.hit_rate)
+                        });
+                        out.push_str(&format!(",{occ},{ev},{off},{hr}"));
                     }
                 }
             }
@@ -520,6 +558,44 @@ mod tests {
         let csv = emit(&study, Format::Csv);
         assert!(csv.lines().next().unwrap().ends_with("dip_depth,recovery_s"), "{csv}");
         assert_eq!(csv.trim_end().lines().count(), 2);
+    }
+
+    #[test]
+    fn mem_rendered_only_for_mem_studies() {
+        // Capacity-free studies keep the pre-mem output shape exactly.
+        let plain = small_study();
+        assert!(!emit(&plain, Format::Text).contains("[peak_kv_occ]"));
+        assert!(!emit(&plain, Format::Csv).lines().next().unwrap().contains("peak_kv_occ"));
+        // A capacity-model study renders the memory block everywhere.
+        let study = Study::new(
+            Scenario::new("mem-emit", presets::p4d4(600.0))
+                .requests(40)
+                .seed(7)
+                .axis(Axis::Mem(vec!["none".into(), "multiturn:3:0.5+hbm:64".into()])),
+        )
+        .run(Some(1))
+        .unwrap();
+        let text = emit(&study, Format::Text);
+        assert!(text.contains("[peak_kv_occ]"), "{text}");
+        assert!(text.contains("[prefix_hit_rate]"), "{text}");
+        let json = emit(&study, Format::Json);
+        let v = Json::parse(json.trim()).unwrap();
+        let cells = v.get("cells").unwrap().as_arr().unwrap();
+        // Cell 0 is the inactive comparison cell: no mem metrics.
+        let m0 = cells[0].get("metrics").unwrap();
+        assert!(m0.get("peak_kv_occ").is_none());
+        let m1 = cells[1].get("metrics").unwrap();
+        assert!(m1.get("peak_kv_occ").is_some());
+        assert!(m1.get("prefix_hit_rate").is_some());
+        assert!(m1.get("kv_evictions").is_some());
+        let csv = emit(&study, Format::Csv);
+        assert!(
+            csv.lines().next().unwrap().ends_with(
+                "peak_kv_occ,kv_evictions,kv_offload_bytes,prefix_hit_rate"
+            ),
+            "{csv}"
+        );
+        assert_eq!(csv.trim_end().lines().count(), 3);
     }
 
     #[test]

@@ -32,9 +32,9 @@
 //!
 //! TOML tables are unordered, so axes expand in a fixed canonical
 //! order regardless of file order (outermost → innermost): `seed`,
-//! `preset`, `sku_mix`, `policy`, `env`, `n_nodes`, `prefill_gpus`,
-//! `power_w`, `batch`, `burst_factor`, `slo_scale`, `rate_per_gpu`.
-//! The last declared axis
+//! `preset`, `sku_mix`, `policy`, `env`, `mem`, `n_nodes`,
+//! `prefill_gpus`, `power_w`, `batch`, `burst_factor`, `slo_scale`,
+//! `rate_per_gpu`. The last declared axis
 //! becomes the column axis of the text tables. Unknown keys anywhere in
 //! the file are rejected with an error naming the key and its table.
 
@@ -50,6 +50,7 @@ const AXIS_ORDER: &[&str] = &[
     "sku_mix",
     "policy",
     "env",
+    "mem",
     "n_nodes",
     "prefill_gpus",
     "power_w",
@@ -62,7 +63,7 @@ const AXIS_ORDER: &[&str] = &[
 /// Keys a scenario file accepts, by table (`""` = top level).
 const KNOWN_TABLES: &[(&str, &[&str])] = &[
     ("", &["name", "seed", "requests", "rate_per_gpu"]),
-    ("workload", &["kind", "input_tokens", "output_tokens", "burst_frac"]),
+    ("workload", &["kind", "input_tokens", "output_tokens", "burst_frac", "turns", "reuse_frac"]),
     ("slo", &["ttft_ms", "tpot_ms"]),
     ("base", &["preset"]),
     ("sim", &["sample_period_ms"]),
@@ -103,6 +104,22 @@ impl Scenario {
         s.workload = parse_workload(&doc)?;
         if let Some(f) = doc.get_f64("workload.burst_frac") {
             s.burst_frac = f;
+        }
+        // Multi-turn transform: both keys or neither (`Scenario::validate`
+        // checks the value ranges).
+        match (doc.get_i64("workload.turns"), doc.get_f64("workload.reuse_frac")) {
+            (Some(turns), Some(reuse)) => {
+                if turns < 2 {
+                    return Err(ScenarioError(format!("workload.turns {turns} must be >= 2")));
+                }
+                s.multiturn = Some((turns as u32, reuse));
+            }
+            (None, None) => {}
+            _ => {
+                return Err(ScenarioError(
+                    "workload.turns and workload.reuse_frac must be set together".into(),
+                ));
+            }
         }
         let mut slo = Slo::paper_default();
         if let Some(ms) = doc.get_f64("slo.ttft_ms") {
@@ -248,6 +265,20 @@ fn parse_axis(name: &str, values: &[Value]) -> Result<Axis, ScenarioError> {
                 })
                 .collect::<Result<Vec<_>, _>>()?;
             Ok(Axis::Env(profiles))
+        }
+        "mem" => {
+            let cells = values
+                .iter()
+                .map(|v| {
+                    v.as_str().map(str::to_string).ok_or_else(|| {
+                        ScenarioError(
+                            "axis 'mem' needs strings like \"hbm:16\" or \
+                             \"multiturn:4:0.6\"".into(),
+                        )
+                    })
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            Ok(Axis::Mem(cells))
         }
         "sku_mix" => {
             let mixes = values
@@ -425,6 +456,39 @@ seed = [1, 2, 3]
             err.contains("not a valid config") && err.contains("not a valid scenario"),
             "{err}"
         );
+    }
+
+    #[test]
+    fn mem_axis_and_multiturn_workload_parse() {
+        let s = Scenario::from_toml(
+            r#"
+[base]
+preset = "rapid-600"
+[workload]
+kind = "longbench"
+turns = 4
+reuse_frac = 0.6
+[axes]
+mem = ["none", "hbm:16", "hbm:64"]
+rate_per_gpu = [1.0]
+"#,
+        )
+        .unwrap();
+        assert_eq!(s.multiturn, Some((4, 0.6)));
+        // mem expands after env, before n_nodes; rate innermost.
+        assert_eq!(s.axes[0].key(), "mem");
+        assert_eq!(s.axes[0].label(1), "hbm:16");
+        assert_eq!(s.axes[1].key(), "rate_per_gpu");
+        assert_eq!(s.n_cells(), 3);
+        // Bad values fail at load time.
+        assert!(Scenario::from_toml("[axes]\nmem = [9]").is_err());
+        assert!(Scenario::from_toml("[axes]\nmem = [\"hbm:0\"]").is_err());
+        assert!(Scenario::from_toml("[axes]\nmem = [\"warp:9\"]").is_err());
+        // turns/reuse_frac must be set together and in range.
+        assert!(Scenario::from_toml("[workload]\nturns = 4").is_err());
+        assert!(Scenario::from_toml("[workload]\nreuse_frac = 0.5").is_err());
+        assert!(Scenario::from_toml("[workload]\nturns = 1\nreuse_frac = 0.5").is_err());
+        assert!(Scenario::from_toml("[workload]\nturns = 4\nreuse_frac = 1.5").is_err());
     }
 
     #[test]

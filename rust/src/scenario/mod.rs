@@ -247,6 +247,13 @@ pub enum Axis {
     /// [`crate::env::EnvProfile::parse_compact`] (`"none"`,
     /// `"curtail:30:0.5:0.75:10"`, `"faults:25:10:7"`, ...).
     Env(Vec<String>),
+    /// Memory-subsystem cells in the compact grammar of
+    /// [`crate::mem::MemAxis::parse_compact`] (`"none"`, `"hbm:16"`,
+    /// `"multiturn:4:0.6+hbm:32"`, ...). An `hbm` atom activates the KV
+    /// capacity model with that uniform per-GPU capacity; a `multiturn`
+    /// atom rewrites the cell's trace into conversations; `"none"` is
+    /// the inert comparison cell (no `[mem]` table, cache disabled).
+    Mem(Vec<String>),
 }
 
 impl Axis {
@@ -265,6 +272,7 @@ impl Axis {
             Axis::SkuMix(_) => "sku_mix",
             Axis::Seed(_) => "seed",
             Axis::Env(_) => "env",
+            Axis::Mem(_) => "mem",
         }
     }
 
@@ -276,7 +284,7 @@ impl Axis {
             }
             Axis::NNodes(v) | Axis::PrefillGpus(v) | Axis::Batch(v) => v.len(),
             Axis::Policy(v) => v.len(),
-            Axis::SkuMix(v) | Axis::Env(v) => v.len(),
+            Axis::SkuMix(v) | Axis::Env(v) | Axis::Mem(v) => v.len(),
             Axis::Seed(v) => v.len(),
         }
     }
@@ -294,7 +302,7 @@ impl Axis {
             }
             Axis::NNodes(v) | Axis::PrefillGpus(v) | Axis::Batch(v) => format!("{}", v[i]),
             Axis::Policy(v) => v[i].name().to_string(),
-            Axis::SkuMix(v) | Axis::Env(v) => v[i].clone(),
+            Axis::SkuMix(v) | Axis::Env(v) | Axis::Mem(v) => v[i].clone(),
             Axis::Seed(v) => format!("{}", v[i]),
         }
     }
@@ -319,6 +327,10 @@ pub struct Scenario {
     pub burst_frac: f64,
     /// Telemetry sampling period override (Fig 3 wants 10 ms).
     pub sample_period: Option<Micros>,
+    /// Rewrite every cell's trace into multi-turn conversations:
+    /// `(turns, reuse_frac)` as in [`crate::workload::make_multiturn`].
+    /// A `multiturn` atom on a `Mem` axis overrides this per cell.
+    pub multiturn: Option<(u32, f64)>,
     pub axes: Vec<Axis>,
 }
 
@@ -345,6 +357,7 @@ impl Scenario {
             rate_per_gpu: 1.5,
             burst_frac: 0.2,
             sample_period: None,
+            multiturn: None,
             axes: Vec::new(),
         }
     }
@@ -376,6 +389,11 @@ impl Scenario {
 
     pub fn sample_period(mut self, period: Micros) -> Self {
         self.sample_period = Some(period);
+        self
+    }
+
+    pub fn multiturn(mut self, turns: u32, reuse_frac: f64) -> Self {
+        self.multiturn = Some((turns, reuse_frac));
         self
     }
 
@@ -436,12 +454,25 @@ impl Scenario {
             return err("batch axis only applies to microbench workloads".into());
         }
         if self.workload.is_micro() {
-            const SIM_ONLY: &[&str] =
-                &["rate_per_gpu", "slo_scale", "burst_factor", "n_nodes", "sku_mix", "seed", "env"];
+            const SIM_ONLY: &[&str] = &[
+                "rate_per_gpu", "slo_scale", "burst_factor", "n_nodes", "sku_mix", "seed",
+                "env", "mem",
+            ];
             for &k in SIM_ONLY {
                 if has(k) {
                     return err(format!("{k} axis does not apply to microbench workloads"));
                 }
+            }
+            if self.multiturn.is_some() {
+                return err("multiturn does not apply to microbench workloads".into());
+            }
+        }
+        if let Some((turns, reuse)) = self.multiturn {
+            if turns < 2 {
+                return err(format!("multiturn turns {turns} must be >= 2"));
+            }
+            if !(0.0..=1.0).contains(&reuse) {
+                return err(format!("multiturn reuse_frac {reuse} must be in [0, 1]"));
             }
         }
         if let Some(Axis::SkuMix(mixes)) = self.axes.iter().find(|a| a.key() == "sku_mix") {
@@ -452,6 +483,11 @@ impl Scenario {
         if let Some(Axis::Env(profiles)) = self.axes.iter().find(|a| a.key() == "env") {
             for p in profiles {
                 crate::env::EnvProfile::parse_compact(p).map_err(ScenarioError)?;
+            }
+        }
+        if let Some(Axis::Mem(cells)) = self.axes.iter().find(|a| a.key() == "mem") {
+            for c in cells {
+                crate::mem::MemAxis::parse_compact(c).map_err(ScenarioError)?;
             }
         }
         Ok(())
@@ -478,6 +514,9 @@ pub struct CellSpec {
     pub batch: usize,
     /// Workload seed override (from a `Seed` axis).
     pub seed: Option<u64>,
+    /// Multi-turn trace transform for this cell (scenario default,
+    /// overridden by a `multiturn` atom on a `Mem` axis).
+    pub multiturn: Option<(u32, f64)>,
 }
 
 fn index_tuples(axes: &[Axis]) -> Vec<Vec<usize>> {
@@ -506,6 +545,7 @@ fn resolve_cell(scenario: &Scenario, tuple: &[usize]) -> Result<CellSpec, Scenar
         power_w: None,
         batch: 1,
         seed: None,
+        multiturn: scenario.multiturn,
     };
     for (axis, &i) in scenario.axes.iter().zip(tuple) {
         spec.coords.push((axis.key().to_string(), axis.label(i)));
@@ -544,6 +584,21 @@ fn resolve_cell(scenario: &Scenario, tuple: &[usize]) -> Result<CellSpec, Scenar
                     spec.config.name = format!("{}@{}", spec.config.name, v[i]);
                 }
                 spec.config.env = profile;
+            }
+            Axis::Mem(v) => {
+                let mem = crate::mem::MemAxis::parse_compact(&v[i]).map_err(ScenarioError)?;
+                if let Some(gb) = mem.hbm_gb {
+                    spec.config.mem = Some(crate::mem::MemConfig {
+                        hbm_gb: Some(gb),
+                        ..Default::default()
+                    });
+                }
+                if let Some(mt) = mem.multiturn {
+                    spec.multiturn = Some(mt);
+                }
+                if !mem.is_empty() {
+                    spec.config.name = format!("{}@{}", spec.config.name, v[i]);
+                }
             }
             Axis::SkuMix(v) => {
                 let fc = crate::fleet::FleetConfig::parse_mix(&v[i], &[])
@@ -669,6 +724,12 @@ impl Cell {
         self.result().and_then(|r| r.summary().resilience)
     }
 
+    /// Memory-subsystem aggregates (`None` for microbench cells and
+    /// runs without an active KV capacity model).
+    pub fn mem(&self) -> Option<crate::mem::MemSummary> {
+        self.result().and_then(|r| r.summary().mem)
+    }
+
     pub fn rate_point(&self) -> RatePoint {
         RatePoint {
             qps_per_gpu: self.rate_per_gpu,
@@ -708,10 +769,15 @@ impl StudyResult {
     /// * with `Env` × `Policy` axes, every dynamic policy must achieve
     ///   at least the static policy's goodput under a pure-curtailment
     ///   profile — the tentpole claim that *dynamic* reallocation is
-    ///   what rides out budget disturbances.
+    ///   what rides out budget disturbances;
+    /// * with a `Mem` axis, every cache-enabled cell that actually hit
+    ///   the prefix cache must show mean TTFT no worse than the
+    ///   cache-disabled cell running the identical trace (skipped
+    ///   prefill cannot slow a request down).
     pub fn study_checks(&self) -> Vec<ShapeCheck> {
         let mut checks = self.sku_mix_checks();
         checks.extend(self.env_policy_checks());
+        checks.extend(self.mem_ttft_checks());
         checks
     }
 
@@ -812,6 +878,78 @@ impl StudyResult {
         checks
     }
 
+    /// Prefix-cache TTFT win vs the cache-disabled cell (see
+    /// `study_checks`). Cells are grouped by every coordinate except
+    /// the mem axis; within a group the baseline is the mem-inactive
+    /// cell whose `multiturn` atom matches, so both cells ran the
+    /// byte-identical trace and differ only in the cache.
+    fn mem_ttft_checks(&self) -> Vec<ShapeCheck> {
+        let Some(mem_pos) = self.scenario.axes.iter().position(|a| a.key() == "mem") else {
+            return Vec::new();
+        };
+        let multiturn_of = |label: &str| {
+            crate::mem::MemAxis::parse_compact(label)
+                .map(|a| a.multiturn)
+                .unwrap_or(None)
+        };
+        let mean_ttft_us = |c: &Cell| -> Option<f64> {
+            let r = c.result()?;
+            if r.records.is_empty() {
+                return None;
+            }
+            let sum: f64 = r.records.iter().map(|rec| rec.ttft() as f64).sum();
+            Some(sum / r.records.len() as f64)
+        };
+        let mut groups: std::collections::BTreeMap<String, Vec<&Cell>> =
+            std::collections::BTreeMap::new();
+        for cell in &self.cells {
+            let key = cell
+                .coords
+                .iter()
+                .enumerate()
+                .filter(|&(i, _)| i != mem_pos)
+                .map(|(_, (k, v))| format!("{k}={v}"))
+                .collect::<Vec<_>>()
+                .join(" ");
+            groups.entry(key).or_default().push(cell);
+        }
+        let mut checks = Vec::new();
+        for (key, cells) in groups {
+            for &cell in &cells {
+                let Some(mem) = cell.mem() else { continue };
+                if mem.prefix_hits == 0 {
+                    continue;
+                }
+                let label = &cell.coords[mem_pos].1;
+                let mt = multiturn_of(label);
+                let Some(&base) = cells.iter().find(|c| {
+                    c.mem().is_none() && multiturn_of(&c.coords[mem_pos].1) == mt
+                }) else {
+                    continue;
+                };
+                let (Some(hit), Some(off)) = (mean_ttft_us(cell), mean_ttft_us(base)) else {
+                    continue;
+                };
+                let at = if key.is_empty() { String::new() } else { format!(" at {key}") };
+                checks.push(ShapeCheck::new(
+                    format!(
+                        "prefix cache '{label}' mean TTFT <= cache-off '{}'{at}",
+                        base.coords[mem_pos].1
+                    ),
+                    hit <= off + 1e-9,
+                    format!(
+                        "{:.1} ms vs {:.1} ms ({} hits, {:.0}% hit rate)",
+                        hit / 1000.0,
+                        off / 1000.0,
+                        mem.prefix_hits,
+                        mem.hit_rate * 100.0
+                    ),
+                ));
+            }
+        }
+        checks
+    }
+
     /// View a `[Config, RatePerGpu]` study as per-config rate curves
     /// (the shape most figures plot).
     pub fn rate_curves(&self) -> Vec<(ClusterConfig, Vec<RatePoint>)> {
@@ -835,7 +973,7 @@ impl StudyResult {
 fn build_cell_trace(scenario: &Scenario, spec: &CellSpec) -> Trace {
     let node_qps = spec.rate_per_gpu * spec.config.total_gpus() as f64;
     let seed = spec.seed.unwrap_or(scenario.seed);
-    match &scenario.workload {
+    let mut trace = match &scenario.workload {
         WorkloadSpec::LongBench => longbench_trace_bursty(
             seed,
             node_qps,
@@ -861,7 +999,11 @@ fn build_cell_trace(scenario: &Scenario, spec: &CellSpec) -> Trace {
         WorkloadSpec::PrefillMicrobench { .. } | WorkloadSpec::DecodeMicrobench { .. } => {
             unreachable!("microbench cells do not build traces")
         }
+    };
+    if let Some((turns, reuse)) = spec.multiturn {
+        crate::workload::make_multiturn(&mut trace, turns, reuse);
     }
+    trace
 }
 
 fn cell_checks(config: &ClusterConfig, n_requests: usize, res: &RunResult) -> Vec<ShapeCheck> {
@@ -918,6 +1060,25 @@ fn cell_checks(config: &ClusterConfig, n_requests: usize, res: &RunResult) -> Ve
             } else {
                 format!("worst overage {worst:.1} W")
             },
+        ));
+    }
+    if let Some(mem) = res.mem {
+        // The pool invariant, checked at every telemetry sample rather
+        // than only at the end: resident KV never exceeds HBM capacity.
+        let worst = res
+            .mem_trace
+            .iter()
+            .map(|&(_, occ)| occ)
+            .fold(0.0f64, f64::max);
+        checks.push(ShapeCheck::new(
+            "resident KV within HBM capacity at every sample",
+            worst <= 1.0 + 1e-9,
+            format!(
+                "peak occupancy {:.3} over {} samples ({} evictions)",
+                mem.peak_occupancy,
+                res.mem_trace.len(),
+                mem.evictions
+            ),
         ));
     }
     checks
@@ -1247,6 +1408,74 @@ mod tests {
             cell.checks
         );
         assert!(cell.checks.iter().all(|c| c.pass), "{:?}", cell.checks);
+    }
+
+    #[test]
+    fn mem_axis_sets_capacity_and_multiturn() {
+        let s = Scenario::new("t", presets::p4d4(600.0))
+            .axis(Axis::Mem(vec!["none".into(), "multiturn:4:0.6+hbm:32".into()]));
+        let cells = Study::new(s).cells().unwrap();
+        assert_eq!(cells.len(), 2);
+        assert!(cells[0].config.mem.is_none(), "'none' stays inactive");
+        assert!(cells[0].multiturn.is_none());
+        assert_eq!(cells[0].config.name, "4P4D-600W", "'none' keeps the name");
+        let c = &cells[1];
+        assert_eq!(c.config.mem.as_ref().unwrap().hbm_gb, Some(32.0));
+        assert_eq!(c.multiturn, Some((4, 0.6)));
+        assert!(c.config.name.ends_with("@multiturn:4:0.6+hbm:32"));
+        assert_eq!(c.coords[0].0, "mem");
+        // Bad atoms fail at validation time, before any cell runs.
+        let bad = Scenario::new("t", presets::p4d4(600.0)).axis(Axis::Mem(vec!["hbm:0".into()]));
+        assert!(bad.validate().is_err());
+        // Microbench workloads reject the axis and the transform.
+        let micro = Scenario::new("t", presets::p4d4(600.0))
+            .workload(WorkloadSpec::PrefillMicrobench { input_tokens: 1024 })
+            .axis(Axis::Mem(vec!["hbm:16".into()]));
+        assert!(micro.validate().is_err());
+        let micro_mt = Scenario::new("t", presets::p4d4(600.0))
+            .workload(WorkloadSpec::PrefillMicrobench { input_tokens: 1024 })
+            .multiturn(4, 0.5);
+        assert!(micro_mt.validate().is_err());
+        // Scenario-level multiturn values are validated too.
+        assert!(Scenario::new("t", presets::p4d4(600.0)).multiturn(1, 0.5).validate().is_err());
+        assert!(Scenario::new("t", presets::p4d4(600.0)).multiturn(4, 1.5).validate().is_err());
+    }
+
+    #[test]
+    fn mem_cells_carry_occupancy_check_and_prefix_traffic() {
+        let s = Scenario::new("t", presets::p4d4(600.0))
+            .requests(80)
+            .seed(9)
+            .axis(Axis::Mem(vec![
+                "multiturn:4:0.6".into(),
+                "multiturn:4:0.6+hbm:64".into(),
+            ]));
+        let study = Study::new(s).run(Some(1)).unwrap();
+        // Cache-off cell: identical trace, no mem summary, no mem check.
+        assert!(study.cells[0].mem().is_none());
+        assert!(!study.cells[0]
+            .checks
+            .iter()
+            .any(|c| c.what.contains("HBM capacity")));
+        // Cache-on cell: summary, per-sample occupancy check, lookups.
+        let mem = study.cells[1].mem().expect("mem active");
+        assert!(mem.prefix_lookups > 0, "multi-turn arrivals must look up");
+        assert!(study.cells[1]
+            .checks
+            .iter()
+            .any(|c| c.what.contains("HBM capacity")));
+        assert!(
+            study.cells[1].checks.iter().all(|c| c.pass),
+            "{:?}",
+            study.cells[1].checks
+        );
+        // With any hits the study-level TTFT comparison must pass (the
+        // cache can only skip prefill work, never add it).
+        if mem.prefix_hits > 0 {
+            let checks = study.study_checks();
+            assert!(checks.iter().any(|c| c.what.contains("prefix cache")));
+            assert!(checks.iter().all(|c| c.pass), "{checks:?}");
+        }
     }
 
     #[test]

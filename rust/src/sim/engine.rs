@@ -194,6 +194,7 @@ mod tests {
                 output_tokens: 1,
                 slo: Slo::paper_default(),
             }],
+            ..Trace::default()
         };
         let r = run(&cfg, &trace, &SimOptions::default());
         assert_eq!(r.records.len(), 1);

@@ -25,12 +25,16 @@ pub struct DecodeItem {
     /// Output tokens generated so far *including* the prefill-produced
     /// first token.
     pub tokens_done: u32,
+    /// Prompt tokens served from the prefix cache (skipped at prefill
+    /// but still resident context for decode and KV accounting). Zero
+    /// unless the memory subsystem is active and the lookup hit.
+    pub cached_tokens: u32,
 }
 
 impl DecodeItem {
     /// Live context length (prompt + generated) — drives KV-read cost.
     pub fn ctx_tokens(&self) -> u32 {
-        self.req.input_tokens + self.tokens_done
+        self.req.input_tokens + self.cached_tokens + self.tokens_done
     }
 
     pub fn remaining(&self) -> u32 {
@@ -63,6 +67,9 @@ pub enum Event {
     /// expanded `env_timeline` (cap step, GPU failure/recovery, thermal
     /// derate — see `crate::env`).
     Env { idx: usize },
+    /// A KV eviction (tier demotion) on `gpu` completed; the decode
+    /// worker may resume admissions. Epoch-guarded like `StepDone`.
+    MemEvict { gpu: usize, epoch: u64 },
 }
 
 struct HeapItem {
@@ -299,6 +306,7 @@ mod tests {
             prefill_start: 0,
             first_token: 0,
             tokens_done: 3,
+            cached_tokens: 0,
         };
         assert_eq!(item.ctx_tokens(), 503);
         assert_eq!(item.remaining(), 7);

@@ -182,6 +182,7 @@ mod tests {
             prefill_start: 0,
             first_token: 0,
             tokens_done: 1,
+            cached_tokens: 0,
         });
         assert!(!g.drained());
         g.dec_active.clear();
@@ -204,6 +205,7 @@ mod tests {
                 prefill_start: 0,
                 first_token: 0,
                 tokens_done: 1,
+                cached_tokens: 0,
             });
         }
         assert!(d.util() > low);
@@ -220,6 +222,7 @@ mod tests {
                 prefill_start: 0,
                 first_token: 0,
                 tokens_done: 10,
+                cached_tokens: 0,
             });
         }
         assert!((g.mean_ctx() - 210.0).abs() < 1e-9); // (110 + 310) / 2

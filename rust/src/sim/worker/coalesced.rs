@@ -110,6 +110,7 @@ impl Cluster {
                 prefill_start: started,
                 first_token: self.now,
                 tokens_done: 1,
+                cached_tokens: 0,
             });
         }
         self.gpus[gi].co_finishing = finishing;
@@ -172,7 +173,7 @@ mod tests {
     fn cluster() -> Cluster {
         Cluster::new(
             presets::coalesced(750.0),
-            Trace { requests: Vec::new() },
+            Trace::default(),
             SimOptions::default(),
         )
     }

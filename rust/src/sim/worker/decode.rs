@@ -28,6 +28,15 @@ impl Cluster {
     /// slot, and let stalled prefill GPUs publish again.
     pub(crate) fn on_kv_arrive(&mut self, gi: usize, src_node: usize, item: DecodeItem) {
         self.ring_used[src_node] = self.ring_used[src_node].saturating_sub(1);
+        // Re-transfers deferred on a full ring go out first, FIFO, as
+        // soon as a slot frees (deterministic backpressure; strictly a
+        // no-op while the wait queue is empty).
+        while self.ring_free(src_node) > 0 {
+            let Some((via, it)) = self.retransfer_wait[src_node].pop_front() else {
+                break;
+            };
+            self.redispatch_decode(via, src_node, None, it);
+        }
         if self.gpus[gi].failed {
             // The target died while the KV was in flight: re-fetch to a
             // surviving worker (conservation: the request is never lost).
@@ -56,6 +65,11 @@ impl Cluster {
     }
 
     pub(crate) fn kick_decode(&mut self, gi: usize) {
+        // In-progress KV demotions occupy the copy engines: the next
+        // step waits out the eviction stall (a MemEvict event resumes).
+        if self.mem.stalled(gi, self.now) {
+            return;
+        }
         let g = &mut self.gpus[gi];
         if g.busy || g.failed || g.role != Role::Decode {
             return;
@@ -124,14 +138,50 @@ impl Cluster {
         }
         let n_finished = finished.len();
         for item in finished.drain(..) {
+            if self.mem.active() {
+                // Turn the reservation into a prefix-cache block for the
+                // request's conversation (or release it outright).
+                let bytes = self.kv_bytes_for(gi, &item);
+                let conv = self.conv_of.get(&item.req.id.0).map(|c| c.0);
+                self.mem.finish(gi, conv, bytes, item.ctx_tokens());
+            }
             let now = self.now;
             self.push_record(&item.req, item.prefill_start, item.first_token, now);
         }
         self.scratch_done = finished;
         if n_finished > 0 {
             self.reindex(gi); // occupancy dropped: update the pick index
+            if self.mem.active() {
+                self.retry_memory_waiters(gi);
+            }
         }
         self.maybe_finish_drain(gi);
         self.kick_decode(gi);
+    }
+
+    /// Completions freed (or made evictable) HBM on `gi`: retry work
+    /// parked on a failed reservation — orphaned decode items first,
+    /// then publishers stalled with their head pushed back. Items that
+    /// still do not fit park again; there is no livelock because each
+    /// retry is driven by a completion, not a timer.
+    fn retry_memory_waiters(&mut self, gi: usize) {
+        if !self.orphan_items.is_empty() {
+            let node = self.node_of(gi);
+            let items = std::mem::take(&mut self.orphan_items);
+            for it in items {
+                // The original KV source is gone (orphans outlive their
+                // producer); the freshly-freed GPU re-sources the fetch.
+                self.redispatch_decode(gi, node, None, it);
+            }
+        }
+        let mut k = 0;
+        while k < self.prefill_ids.len() {
+            let i = self.prefill_ids[k];
+            if !self.gpus[i].publish_wait.is_empty() {
+                self.try_publish(i);
+                self.kick_prefill(i);
+            }
+            k += 1;
+        }
     }
 }

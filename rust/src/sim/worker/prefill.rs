@@ -76,16 +76,21 @@ impl Cluster {
                 self.policy.observe_ttft(self.now, ratio);
             }
             if req.output_tokens <= 1 {
-                // Single-token request: done at prefill.
+                // Single-token request: done at prefill. Drop any parked
+                // prefix-hit state — it never reaches the decode pool.
+                self.mem.take_cached_tokens(req.id.0);
+                self.mem.take_fetch(req.id.0);
                 let now = self.now;
                 self.push_record(&req, prefill_start, now, now);
                 continue;
             }
+            let id = req.id.0;
             let item = DecodeItem {
                 req,
                 prefill_start,
                 first_token: self.now,
                 tokens_done: 1,
+                cached_tokens: self.mem.take_cached_tokens(id),
             };
             self.gpus[gi].publish_wait.push_back(item);
         }
@@ -118,12 +123,31 @@ impl Cluster {
                 self.gpus[gi].publish_wait.push_front(item);
                 break;
             };
+            // Admission control: the decode pool must fit the context's
+            // projected KV before the transfer commits. A pool that
+            // cannot evict enough stalls this publisher exactly like
+            // ring backpressure (retried on completions/arrivals).
+            if self.mem.active() {
+                let bytes = self.kv_bytes_for(target.0, &item);
+                match self.mem.reserve(target.0, bytes) {
+                    Ok(ev) => {
+                        self.note_eviction(target.0, ev);
+                        self.reindex(target.0);
+                    }
+                    Err(()) => {
+                        self.gpus[gi].publish_wait.push_front(item);
+                        break;
+                    }
+                }
+            }
             self.ring_used[src_node] += 1;
             let same_node = self.node_of(target.0) == src_node;
-            // Heterogeneous endpoints: the slower side's link binds.
+            // Heterogeneous endpoints: the slower side's link binds. A
+            // prefix-cache hit additionally pays its tier fetch here.
             let t = self
                 .fleet
-                .kv_transfer_time_between(gi, target.0, item.req.input_tokens, same_node);
+                .kv_transfer_time_between(gi, target.0, item.req.input_tokens, same_node)
+                + self.mem.take_fetch(item.req.id.0);
             self.events.push(
                 self.now + t,
                 Event::KvArrive { gpu: target.0, src_node, item },

@@ -16,7 +16,7 @@ pub mod sonnet;
 pub mod trace;
 
 pub use arrivals::{ArrivalProcess, Burstiness};
-pub use trace::Trace;
+pub use trace::{ConvTurn, Trace};
 
 use crate::types::{Micros, Request, RequestId, Slo};
 
@@ -46,7 +46,35 @@ pub fn build_trace<S: SizeSampler>(
             slo,
         });
     }
-    Trace { requests }
+    Trace { requests, ..Trace::default() }
+}
+
+/// Fold a single-turn trace into multi-turn conversations in place
+/// (the scenario `multiturn:<turns>:<reuse_frac>` knob).
+///
+/// Requests keep their arrival times and ids; request `i` joins
+/// conversation `i % n_convs` (interleaved, so a conversation's turns
+/// are spread across the trace and the prior turn has finished before
+/// the next arrives). Each turn after a conversation's first re-sends
+/// `reuse_frac` of the conversation's accumulated context as a
+/// reusable prefix: those tokens are *added* to the request's prompt —
+/// without a prefix cache they must be re-prefilled, with one they are
+/// fetched from the cached block instead.
+pub fn make_multiturn(trace: &mut Trace, turns: u32, reuse_frac: f64) {
+    if turns <= 1 || trace.requests.is_empty() {
+        return;
+    }
+    let n = trace.requests.len();
+    let n_convs = (n / turns as usize).max(1);
+    let mut ctx_tokens: Vec<u64> = vec![0; n_convs];
+    trace.conv.clear();
+    for (i, r) in trace.requests.iter_mut().enumerate() {
+        let conv = (i % n_convs) as u64;
+        let prefix = (ctx_tokens[conv as usize] as f64 * reuse_frac) as u32;
+        r.input_tokens += prefix;
+        ctx_tokens[conv as usize] += (r.input_tokens + r.output_tokens) as u64;
+        trace.conv.push(ConvTurn { req_id: r.id.0, conv, prefix_tokens: prefix });
+    }
 }
 
 #[cfg(test)]
@@ -59,6 +87,33 @@ mod tests {
         fn sample(&mut self, _i: usize) -> (u32, u32) {
             (100, 10)
         }
+    }
+
+    #[test]
+    fn multiturn_interleaves_conversations_and_grows_prefixes() {
+        let mut ap = ArrivalProcess::poisson(Rng::new(5), 10.0);
+        let mut trace = build_trace(12, &mut ap, &mut Fixed, Slo::paper_default());
+        make_multiturn(&mut trace, 4, 0.5);
+        assert_eq!(trace.conv.len(), 12);
+        // 12 requests / 4 turns = 3 conversations, interleaved i % 3.
+        for (i, c) in trace.conv.iter().enumerate() {
+            assert_eq!(c.conv, (i % 3) as u64);
+            assert_eq!(c.req_id, trace.requests[i].id.0);
+        }
+        // First turns send the plain prompt; later turns add a prefix.
+        assert_eq!(trace.conv[0].prefix_tokens, 0);
+        assert_eq!(trace.requests[0].input_tokens, 100);
+        // Turn 2 of conv 0 (index 3): prefix = 0.5 * (100 + 10) = 55.
+        assert_eq!(trace.conv[3].prefix_tokens, 55);
+        assert_eq!(trace.requests[3].input_tokens, 155);
+        // Prefixes grow with accumulated context.
+        assert!(trace.conv[6].prefix_tokens > trace.conv[3].prefix_tokens);
+        // turns <= 1 is a no-op.
+        let mut ap = ArrivalProcess::poisson(Rng::new(5), 10.0);
+        let mut t1 = build_trace(12, &mut ap, &mut Fixed, Slo::paper_default());
+        make_multiturn(&mut t1, 1, 0.5);
+        assert!(t1.conv.is_empty());
+        assert_eq!(t1.requests[3].input_tokens, 100);
     }
 
     #[test]

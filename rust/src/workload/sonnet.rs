@@ -121,7 +121,7 @@ pub fn mixed_phases(seed: u64, spec: MixedPhasesSpec) -> Trace {
             slo,
         });
     }
-    Trace { requests }
+    Trace { requests, ..Trace::default() }
 }
 
 #[cfg(test)]

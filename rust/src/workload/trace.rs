@@ -2,10 +2,23 @@
 
 use crate::types::{Micros, Request, RequestId, Slo, SECOND};
 
+/// Conversation membership of one request in a multi-turn trace: which
+/// conversation it belongs to and how many of its prompt tokens repeat
+/// the prior turn's context (prefix-cacheable on a hit).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ConvTurn {
+    pub req_id: u64,
+    pub conv: u64,
+    pub prefix_tokens: u32,
+}
+
 /// An ordered list of requests with non-decreasing arrival times.
 #[derive(Debug, Clone, Default)]
 pub struct Trace {
     pub requests: Vec<Request>,
+    /// Conversation structure for multi-turn traces (empty for the
+    /// single-turn generators; see [`super::make_multiturn`]).
+    pub conv: Vec<ConvTurn>,
 }
 
 impl Trace {
@@ -84,7 +97,7 @@ impl Trace {
                 slo: Slo::new(parse(fields[4])?, parse(fields[5])?),
             });
         }
-        Ok(Trace { requests })
+        Ok(Trace { requests, ..Trace::default() })
     }
 }
 
@@ -117,6 +130,7 @@ mod tests {
                     slo: Slo::paper_default(),
                 },
             ],
+            ..Trace::default()
         }
     }
 

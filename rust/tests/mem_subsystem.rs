@@ -1,0 +1,206 @@
+//! KV memory subsystem integration tests (ISSUE-7 acceptance criteria,
+//! DESIGN.md §14).
+//!
+//! * **Golden inertness**: the shipped configs declare no `[mem]` table,
+//!   so the subsystem must stay fully inert — no memory summary, no
+//!   occupancy trace — and runs stay deterministic to the bit on
+//!   `rapid-600.toml`, `two-node-4p4d.toml` and `hetero-4p4d.toml`.
+//! * **`scenarios/mem-pressure.toml`**: every capped cell keeps resident
+//!   KV within HBM capacity at every occupancy sample (the per-cell
+//!   ShapeCheck) while conserving every request under admission
+//!   backpressure.
+//! * **`scenarios/multi-turn.toml`**: the prefix cache actually hits,
+//!   and the cache-enabled cell's mean TTFT is no worse than the
+//!   cache-off cell running the byte-identical trace (the study-level
+//!   ShapeCheck).
+//! * **Recover-after-fail re-admission**: a GPU failure under a tight
+//!   capacity budget invalidates that GPU's blocks and reservations,
+//!   re-admits its in-flight work elsewhere, and the fleet converges
+//!   back — losing zero requests, deterministically.
+//! * **Ring backpressure regression**: with `batch.ring_slots` squeezed
+//!   to near nothing, failure-driven redispatch must defer through the
+//!   retransfer FIFO instead of over-committing the ring (the pre-fix
+//!   over-commit trips a live `debug_assert` in these builds).
+
+use rapid::env::EnvProfile;
+use rapid::mem::MemConfig;
+use rapid::scenario::{Scenario, Study};
+use rapid::sim::{self, SimOptions};
+use rapid::types::Slo;
+use rapid::util::rng::Rng;
+use rapid::workload::{build_trace, sonnet::Sonnet, ArrivalProcess};
+
+#[path = "support/mod.rs"]
+mod support;
+use support::{assert_bit_identical, shipped_config};
+
+fn trace(n: usize, qps: f64, input: u32, output: u32) -> rapid::workload::Trace {
+    let mut ap = ArrivalProcess::poisson(Rng::new(91), qps);
+    let mut sizes = Sonnet::new(Rng::new(92), input, output);
+    build_trace(n, &mut ap, &mut sizes, Slo::paper_default())
+}
+
+/// Mean time-to-first-token (us) across a cell's records.
+fn mean_ttft(res: &rapid::metrics::RunResult) -> f64 {
+    let sum: f64 = res.records.iter().map(|r| r.ttft() as f64).sum();
+    sum / res.records.len() as f64
+}
+
+#[test]
+fn no_mem_table_stays_inert_on_shipped_configs() {
+    for (file, n, qps, input, output) in [
+        ("rapid-600.toml", 200, 16.0, 3000, 32),
+        ("two-node-4p4d.toml", 200, 20.0, 2048, 64),
+        ("hetero-4p4d.toml", 200, 14.0, 3000, 32),
+    ] {
+        let cfg = shipped_config(file);
+        assert!(cfg.mem.is_none(), "{file} must not declare a [mem] table");
+        let t = trace(n, qps, input, output);
+        let a = sim::run(&cfg, &t, &SimOptions::default());
+        // Inert: no summary, no occupancy samples, ever.
+        assert!(a.mem.is_none(), "{file}: no [mem] table must mean no memory summary");
+        assert!(a.mem_trace.is_empty(), "{file}: no [mem] table must mean no occupancy trace");
+        // And deterministic to the bit (the golden comparator now also
+        // covers the mem fields).
+        let b = sim::run(&cfg, &t, &SimOptions::default());
+        assert_bit_identical(&a, &b);
+    }
+}
+
+#[test]
+fn mem_pressure_scenario_keeps_resident_kv_within_capacity() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/scenarios/mem-pressure.toml");
+    let mut scenario = Scenario::from_toml_file(path).expect("shipped scenario loads");
+    scenario.requests = 150; // keep the test quick; CI smoke runs it too
+    let study = Study::new(scenario).run(Some(2)).expect("study runs");
+    assert_eq!(study.cells.len(), 8, "4 mem cells x 2 rates");
+    let (passed, total) = study.checks_passed();
+    assert_eq!(passed, total, "per-cell invariants (incl. HBM capacity) hold");
+    let mut capped = 0;
+    for cell in &study.cells {
+        let res = cell.result().expect("cell ran");
+        // Admission backpressure must never lose a request.
+        assert_eq!(res.records.len(), 150, "{:?}", cell.coords);
+        let is_capped = cell.coords.iter().any(|(k, v)| k == "mem" && v != "none");
+        assert_eq!(res.mem.is_some(), is_capped, "{:?}", cell.coords);
+        if let Some(mem) = res.mem {
+            capped += 1;
+            assert!(
+                mem.peak_occupancy <= 1.0 + 1e-9,
+                "{:?}: peak occupancy {}",
+                cell.coords,
+                mem.peak_occupancy
+            );
+            assert!(!res.mem_trace.is_empty(), "capped cells must trace occupancy");
+            // Plain (single-turn) traffic never parks prefix blocks.
+            assert_eq!(mem.prefix_lookups, 0, "{:?}", cell.coords);
+        }
+    }
+    assert_eq!(capped, 6, "hbm:8/16/32 x 2 rates carry memory summaries");
+    // The tightest pool actually fills: hbm:8 at the hot rate runs near
+    // capacity (otherwise the scenario exercises nothing).
+    let peak = study
+        .cells
+        .iter()
+        .filter(|c| c.coords.iter().any(|(k, v)| k == "mem" && v == "hbm:8"))
+        .filter_map(|c| c.result().and_then(|r| r.summary().mem))
+        .map(|m| m.peak_occupancy)
+        .fold(0.0f64, f64::max);
+    assert!(peak > 0.25, "hbm:8 cells must see real pressure, peak {peak}");
+}
+
+#[test]
+fn multi_turn_prefix_cache_hits_and_wins_ttft() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/scenarios/multi-turn.toml");
+    let mut scenario = Scenario::from_toml_file(path).expect("shipped scenario loads");
+    scenario.requests = 200;
+    let study = Study::new(scenario).run(Some(2)).expect("study runs");
+    assert_eq!(study.cells.len(), 2, "cache-off and cache-on cells");
+    let (passed, total) = study.checks_passed();
+    assert_eq!(passed, total, "per-cell invariants hold");
+    let off = study.cells[0].result().expect("cache-off cell ran");
+    let on = study.cells[1].result().expect("cache-on cell ran");
+    assert!(off.mem.is_none(), "multiturn-only atom must not activate the subsystem");
+    let mem = on.mem.expect("hbm atom activates the subsystem");
+    assert!(mem.prefix_lookups > 0, "later turns must look up the cache");
+    assert!(mem.prefix_hits > 0, "the prefix cache must actually hit");
+    assert!(mem.hit_rate > 0.0 && mem.hit_rate <= 1.0, "hit rate {}", mem.hit_rate);
+    // Both cells run the byte-identical trace, so the cache win is a
+    // direct apples-to-apples TTFT comparison...
+    assert_eq!(off.records.len(), on.records.len());
+    assert!(
+        mean_ttft(on) <= mean_ttft(off) + 1e-9,
+        "cached mean TTFT {:.1} us must not exceed uncached {:.1} us",
+        mean_ttft(on),
+        mean_ttft(off)
+    );
+    // ...and the study-level ShapeCheck says the same thing.
+    let checks = study.study_checks();
+    let cache: Vec<_> = checks.iter().filter(|c| c.what.contains("prefix cache")).collect();
+    assert_eq!(cache.len(), 1, "one cache-on cell gets a TTFT comparison");
+    assert!(cache[0].pass, "{}: {}", cache[0].what, cache[0].detail);
+}
+
+#[test]
+fn gpu_failure_under_pressure_readmits_and_converges() {
+    // Static 4P4D, tight 2 GB pools (~9 concurrent 1.5K-token contexts
+    // per GPU), and a decode-GPU failure mid-run: the failure must
+    // invalidate gpu5's reservations, re-admit its in-flight decodes on
+    // the survivors' pools (waiting for headroom when full), and lose
+    // nothing.
+    let mut cfg = rapid::config::presets::p4d4(600.0);
+    cfg.mem = Some(MemConfig {
+        hbm_gb: Some(2.0),
+        ..Default::default()
+    });
+    cfg.env = EnvProfile::parse_compact("fail:8:5+recover:20:5").unwrap();
+    cfg.validate().unwrap();
+    let n = 300;
+    let t = trace(n, 8.0, 1500, 32);
+    let r = sim::run(&cfg, &t, &SimOptions::default());
+    assert_eq!(r.records.len(), n, "pressure + failure must lose zero requests");
+    let unique: std::collections::HashSet<u64> = r.records.iter().map(|x| x.id.0).collect();
+    assert_eq!(unique.len(), n, "no request recorded twice");
+    for rec in &r.records {
+        assert!(rec.arrival <= rec.prefill_start, "{rec:?}");
+        assert!(rec.prefill_start <= rec.first_token && rec.first_token <= rec.finish);
+    }
+    let mem = r.mem.expect("[mem] table activates the subsystem");
+    assert!(mem.peak_occupancy <= 1.0 + 1e-9, "capacity holds through the failure");
+    // Fleet converges back after recovery, same as the env-only test.
+    let &(_, p_end, d_end) = r.role_trace.last().unwrap();
+    assert_eq!((p_end, d_end), (4, 4), "fleet converges back after recovery");
+    // Deterministic under pressure + failure.
+    let r2 = sim::run(&cfg, &t, &SimOptions::default());
+    assert_bit_identical(&r, &r2);
+}
+
+#[test]
+fn squeezed_ring_defers_redispatch_without_overcommit() {
+    // Regression for the ring over-commit: redispatching a failed GPU's
+    // decodes used to skip the slot check and publish past ring_slots.
+    // With 2 slots, a hot prefill rate, a tight pool and a mid-run
+    // failure, the redispatch path MUST defer through the retransfer
+    // FIFO — the old over-commit trips the live debug_assert
+    // (`ring_used <= ring_slots`) in this build. Conservation plus
+    // bit-determinism pin the drain order.
+    let mut cfg = rapid::config::presets::p4d4(600.0);
+    cfg.batch.ring_slots = 2;
+    cfg.mem = Some(MemConfig {
+        hbm_gb: Some(2.0),
+        ..Default::default()
+    });
+    cfg.env = EnvProfile::parse_compact("fail:6:5+recover:18:5").unwrap();
+    cfg.validate().unwrap();
+    let n = 300;
+    let t = trace(n, 12.0, 3000, 32);
+    let r = sim::run(&cfg, &t, &SimOptions::default());
+    assert_eq!(r.records.len(), n, "a full ring must defer, never drop");
+    let unique: std::collections::HashSet<u64> = r.records.iter().map(|x| x.id.0).collect();
+    assert_eq!(unique.len(), n, "no request recorded twice");
+    for rec in &r.records {
+        assert!(rec.prefill_start <= rec.first_token && rec.first_token <= rec.finish);
+    }
+    let r2 = sim::run(&cfg, &t, &SimOptions::default());
+    assert_bit_identical(&r, &r2);
+}

@@ -41,4 +41,10 @@ pub fn assert_bit_identical(a: &RunResult, b: &RunResult) {
     assert_eq!(a.mean_provisioned_w.to_bits(), b.mean_provisioned_w.to_bits());
     assert_eq!(a.env_events, b.env_events, "applied disturbances must match");
     assert_eq!(a.budget_trace, b.budget_trace);
+    assert_eq!(a.mem, b.mem, "memory summaries must match");
+    assert_eq!(a.mem_trace.len(), b.mem_trace.len());
+    for ((ta, oa), (tb, ob)) in a.mem_trace.iter().zip(&b.mem_trace) {
+        assert_eq!(ta, tb);
+        assert_eq!(oa.to_bits(), ob.to_bits(), "occupancy samples must be bit-identical");
+    }
 }
