@@ -164,6 +164,7 @@ pub fn run_suite(cfg: &SuiteConfig) -> BenchReport {
                     input_tokens: 500 + (i as u32 * 131) % 3000,
                     output_tokens: 64,
                     slo: Slo::paper_default(),
+                    tenant: 0,
                 })
                 .collect()
         };

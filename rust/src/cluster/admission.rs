@@ -1,0 +1,259 @@
+//! Admission control for multi-tenant runs (DESIGN.md §15).
+//!
+//! Activation: an `[admission]` table (any `admission.*` key) in a
+//! config or scenario file. Without one the subsystem is structurally
+//! inert — `AdmissionState::admit` is never consulted and the run is
+//! bit-identical to a build without this module.
+//!
+//! Two policies beyond `none`:
+//!
+//! * **queue-depth** — shed an arrival when the number of requests in
+//!   the system reaches `queue_depth × mult(tier)`, where higher
+//!   priority tiers get a larger multiplier (interactive 4×, standard
+//!   2×, batch 1×). Under overload the batch tier saturates its
+//!   threshold first, so the lowest-priority work sheds first and the
+//!   interactive tier keeps admitting the longest.
+//! * **token-bucket** — per-tenant buckets refilled at
+//!   `bucket_rps × share` (the untenanted id 0 gets the full rate),
+//!   capped at `bucket_burst`; an arrival takes one token or sheds.
+//!   This is per-tenant rate isolation: one tenant's flash crowd
+//!   cannot starve another's admission budget.
+//!
+//! A shed request is *accounted, not dropped*: the cluster records an
+//! immediate SLO-violation record with the `shed` flag set, so request
+//! conservation (`records.len() == n_requests`) still holds and
+//! attainment counts the miss.
+
+use crate::config::toml::Document;
+use crate::types::{Micros, SECOND};
+use crate::workload::tracespec::{TenantClass, TIER_INTERACTIVE, TIER_STANDARD};
+
+/// Which shedding policy an `[admission]` table selects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionMode {
+    /// Admit everything (the default: structurally inert).
+    None,
+    /// Shed when the in-system count reaches a tier-scaled threshold.
+    QueueDepth,
+    /// Per-tenant token buckets (rate isolation).
+    TokenBucket,
+}
+
+/// Parsed `[admission]` table. The default (`mode = None`) admits
+/// everything and keeps every run bit-identical to pre-admission code.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdmissionConfig {
+    pub mode: AdmissionMode,
+    /// Base in-system threshold for `queue-depth` (batch tier's limit;
+    /// standard tolerates 2×, interactive 4×).
+    pub queue_depth: usize,
+    /// Full refill rate for `token-bucket` (tokens/s before the
+    /// per-tenant share split).
+    pub bucket_rps: f64,
+    /// Bucket capacity (burst tolerance), in tokens.
+    pub bucket_burst: f64,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            mode: AdmissionMode::None,
+            queue_depth: 64,
+            bucket_rps: 8.0,
+            bucket_burst: 16.0,
+        }
+    }
+}
+
+impl AdmissionConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.mode == AdmissionMode::QueueDepth && self.queue_depth == 0 {
+            return Err("admission.queue_depth must be > 0".into());
+        }
+        if self.mode == AdmissionMode::TokenBucket
+            && (self.bucket_rps <= 0.0 || self.bucket_burst < 1.0)
+        {
+            return Err("admission needs bucket_rps > 0 and bucket_burst >= 1".into());
+        }
+        Ok(())
+    }
+
+    /// Parse an `[admission]` table from a TOML document. Returns
+    /// `Ok(None)` when no `admission.*` key is present (the subsystem
+    /// stays inert); a present table must name its `mode`.
+    pub fn from_doc(doc: &Document) -> Result<Option<AdmissionConfig>, String> {
+        if !doc.entries.keys().any(|k| k.starts_with("admission.")) {
+            return Ok(None);
+        }
+        let mut cfg = AdmissionConfig::default();
+        cfg.mode = match doc.get_str("admission.mode") {
+            Some("none") => AdmissionMode::None,
+            Some("queue-depth") => AdmissionMode::QueueDepth,
+            Some("token-bucket") => AdmissionMode::TokenBucket,
+            Some(other) => {
+                return Err(format!(
+                    "unknown admission.mode '{other}' (none | queue-depth | token-bucket)"
+                ))
+            }
+            None => return Err("[admission] table needs a mode key".into()),
+        };
+        if let Some(v) = doc.get_i64("admission.queue_depth") {
+            cfg.queue_depth = v as usize;
+        }
+        if let Some(v) = doc.get_f64("admission.bucket_rps") {
+            cfg.bucket_rps = v;
+        }
+        if let Some(v) = doc.get_f64("admission.bucket_burst") {
+            cfg.bucket_burst = v;
+        }
+        cfg.validate()?;
+        Ok(Some(cfg))
+    }
+}
+
+/// Runtime admission state: the parsed config plus per-tenant token
+/// buckets. Deterministic — refills are a pure function of event time,
+/// never wall clock.
+#[derive(Debug)]
+pub struct AdmissionState {
+    cfg: AdmissionConfig,
+    /// Per-tenant buckets: (tokens, last refill time). Index = tenant
+    /// id (0 = untenanted).
+    buckets: Vec<(f64, Micros)>,
+    /// Per-tenant arrival share (bucket refill split; id 0 gets 1.0).
+    shares: Vec<f64>,
+}
+
+impl AdmissionState {
+    pub fn new(cfg: AdmissionConfig, tenants: &[TenantClass]) -> Self {
+        let mut shares = vec![1.0];
+        shares.extend(tenants.iter().map(|t| t.share));
+        AdmissionState {
+            buckets: vec![(cfg.bucket_burst, 0); shares.len()],
+            shares,
+            cfg,
+        }
+    }
+
+    /// Does `admit` need consulting at all? False keeps the arrival
+    /// path bit-identical to pre-admission code.
+    pub fn active(&self) -> bool {
+        self.cfg.mode != AdmissionMode::None
+    }
+
+    /// Queue-depth headroom multiplier: higher-priority tiers tolerate
+    /// deeper backlogs before shedding, so batch sheds first.
+    fn depth_mult(tier: u8) -> usize {
+        match tier {
+            TIER_INTERACTIVE => 4,
+            TIER_STANDARD => 2,
+            _ => 1,
+        }
+    }
+
+    /// Admit or shed one arrival. `in_system` is the number of
+    /// requests arrived but not yet recorded (the cluster's live load
+    /// proxy).
+    pub fn admit(&mut self, now: Micros, tenant: u8, tier: u8, in_system: usize) -> bool {
+        match self.cfg.mode {
+            AdmissionMode::None => true,
+            AdmissionMode::QueueDepth => {
+                in_system <= self.cfg.queue_depth * Self::depth_mult(tier)
+            }
+            AdmissionMode::TokenBucket => {
+                let idx = (tenant as usize).min(self.buckets.len() - 1);
+                let rate = self.cfg.bucket_rps * self.shares[idx];
+                let (tokens, last) = &mut self.buckets[idx];
+                let dt_s = now.saturating_sub(*last) as f64 / SECOND as f64;
+                *last = now;
+                *tokens = (*tokens + dt_s * rate).min(self.cfg.bucket_burst);
+                if *tokens >= 1.0 {
+                    *tokens -= 1.0;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::tracespec::TIER_BATCH;
+
+    fn tenants() -> Vec<TenantClass> {
+        vec![
+            TenantClass { name: "chat".into(), share: 0.5, tier: TIER_INTERACTIVE, slo_scale: 1.0 },
+            TenantClass { name: "jobs".into(), share: 0.5, tier: TIER_BATCH, slo_scale: 4.0 },
+        ]
+    }
+
+    #[test]
+    fn default_is_inert_and_admits_everything() {
+        let mut st = AdmissionState::new(AdmissionConfig::default(), &[]);
+        assert!(!st.active());
+        assert!(st.admit(0, 0, TIER_STANDARD, usize::MAX / 2));
+    }
+
+    #[test]
+    fn queue_depth_sheds_batch_before_interactive() {
+        let cfg = AdmissionConfig {
+            mode: AdmissionMode::QueueDepth,
+            queue_depth: 10,
+            ..AdmissionConfig::default()
+        };
+        let mut st = AdmissionState::new(cfg, &tenants());
+        assert!(st.active());
+        // At depth 11 the batch tier (threshold 10) sheds while the
+        // standard (20) and interactive (40) tiers still admit.
+        assert!(!st.admit(0, 2, TIER_BATCH, 11));
+        assert!(st.admit(0, 0, TIER_STANDARD, 11));
+        assert!(st.admit(0, 1, TIER_INTERACTIVE, 11));
+        // Interactive sheds last, at 4x the base threshold.
+        assert!(!st.admit(0, 1, TIER_INTERACTIVE, 41));
+    }
+
+    #[test]
+    fn token_bucket_isolates_tenants_and_refills() {
+        let cfg = AdmissionConfig {
+            mode: AdmissionMode::TokenBucket,
+            bucket_rps: 2.0,
+            bucket_burst: 2.0,
+            ..AdmissionConfig::default()
+        };
+        let mut st = AdmissionState::new(cfg, &tenants());
+        // Tenant 1 (share 0.5 -> 1 token/s) burns its 2-token burst...
+        assert!(st.admit(0, 1, TIER_INTERACTIVE, 0));
+        assert!(st.admit(0, 1, TIER_INTERACTIVE, 0));
+        assert!(!st.admit(0, 1, TIER_INTERACTIVE, 0));
+        // ...without touching tenant 2's bucket.
+        assert!(st.admit(0, 2, TIER_BATCH, 0));
+        // One second refills one token for tenant 1.
+        assert!(st.admit(SECOND, 1, TIER_INTERACTIVE, 0));
+        assert!(!st.admit(SECOND, 1, TIER_INTERACTIVE, 0));
+    }
+
+    #[test]
+    fn from_doc_parses_and_rejects() {
+        let doc = Document::parse("[admission]\nmode = \"queue-depth\"\nqueue_depth = 32").unwrap();
+        let cfg = AdmissionConfig::from_doc(&doc).unwrap().unwrap();
+        assert_eq!(cfg.mode, AdmissionMode::QueueDepth);
+        assert_eq!(cfg.queue_depth, 32);
+        // Absent table -> None (inert).
+        let doc = Document::parse("preset = \"rapid-600\"").unwrap();
+        assert!(AdmissionConfig::from_doc(&doc).unwrap().is_none());
+        // A present table must name its mode; bad modes are named back.
+        let doc = Document::parse("[admission]\nqueue_depth = 32").unwrap();
+        assert!(AdmissionConfig::from_doc(&doc).unwrap_err().contains("mode"));
+        let doc = Document::parse("[admission]\nmode = \"yolo\"").unwrap();
+        assert!(AdmissionConfig::from_doc(&doc).unwrap_err().contains("yolo"));
+        // Structural validation.
+        let doc = Document::parse("[admission]\nmode = \"queue-depth\"\nqueue_depth = 0").unwrap();
+        assert!(AdmissionConfig::from_doc(&doc).is_err());
+        let doc =
+            Document::parse("[admission]\nmode = \"token-bucket\"\nbucket_rps = -1").unwrap();
+        assert!(AdmissionConfig::from_doc(&doc).is_err());
+    }
+}

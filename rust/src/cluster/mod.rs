@@ -14,12 +14,26 @@
 //! * **the KV ring** — per-node ring-slot accounting between prefill and
 //!   decode (backpressure, paper §3.2);
 //! * **hierarchical power** — [`crate::power::PowerManager`] enforcing
-//!   per-node budgets under a cluster-wide cap.
+//!   per-node budgets under a cluster-wide cap;
+//! * **multi-tenant admission & preemption** — [`admission`] sheds
+//!   arrivals lowest-tier-first when an `[admission]` table is present
+//!   (shed requests become SLO-violation records, never silent drops,
+//!   so request conservation holds), and saturated decode batches swap
+//!   a waiting higher-tier request in for the lowest-tier active
+//!   decode, preserving the victim's `tokens_done` progress and HBM
+//!   reservation.
+//!
+//! **Bit-identity contract**: without `[tenant.*]` and `[admission]`
+//! tables both mechanisms are structurally inert — the admission gate
+//! is never consulted and the preemption comparison can never fire
+//! (every request is the same standard tier) — so untenanted runs are
+//! bit-identical to pre-tenant builds.
 //!
 //! Per-role step behavior lives in [`crate::sim::worker`]; control lives
 //! behind [`policy::Policy`]. The public entry point remains
 //! [`crate::sim::run`].
 
+pub mod admission;
 pub mod env;
 pub mod policy;
 
@@ -84,6 +98,13 @@ pub struct Cluster {
     /// Fleet-max HBM occupancy per telemetry sample (the series the
     /// "resident KV <= HBM capacity" ShapeCheck walks).
     pub(crate) mem_trace: Vec<(Micros, f64)>,
+    /// Admission control (DESIGN.md §15). Inert (`!active()`) unless an
+    /// `[admission]` table selected a shedding mode.
+    pub(crate) admission: admission::AdmissionState,
+    /// Tenant id -> priority tier (index 0 = untenanted standard).
+    pub(crate) tenant_tiers: Vec<u8>,
+    /// Decode preemptions suffered per tier (preempted side).
+    pub(crate) preempted_by_tier: [u64; 3],
     // --- result accumulation ---
     cluster_power: TimeSeries,
     node_power: Vec<TimeSeries>,
@@ -163,6 +184,8 @@ impl Cluster {
             .iter()
             .map(|c| (c.req_id, (c.conv, c.prefix_tokens)))
             .collect();
+        let admission = admission::AdmissionState::new(cfg.admission.clone(), &cfg.tenants);
+        let tenant_tiers = crate::workload::tracespec::tier_table(&cfg.tenants);
         let mut cl = Cluster {
             fleet,
             power,
@@ -183,6 +206,9 @@ impl Cluster {
             conv_of,
             retransfer_wait: (0..cfg.n_nodes).map(|_| VecDeque::new()).collect(),
             mem_trace: Vec::new(),
+            admission,
+            tenant_tiers,
+            preempted_by_tier: [0; 3],
             cluster_power: TimeSeries::new(),
             node_power: (0..cfg.n_nodes).map(|_| TimeSeries::new()).collect(),
             cap_trace: Vec::new(),
@@ -440,7 +466,18 @@ impl Cluster {
             input_tokens: req.input_tokens,
             output_tokens: req.output_tokens,
             slo: req.slo,
+            tenant: req.tenant,
+            shed: false,
         });
+    }
+
+    /// Priority tier of a tenant id (untenanted and out-of-range ids
+    /// read as standard).
+    pub(crate) fn tier_of(&self, tenant: u8) -> u8 {
+        self.tenant_tiers
+            .get(tenant as usize)
+            .copied()
+            .unwrap_or(crate::workload::tracespec::TIER_STANDARD)
     }
 
     // ------------------------------------------------------------------
@@ -475,6 +512,18 @@ impl Cluster {
             self.events
                 .push(self.trace[self.next_arrival].arrival, Event::Arrival);
         }
+        // Admission control (inert without an `[admission]` table): a
+        // shed arrival is decided before any routing or prefix-cache
+        // work, so it leaves no trace beyond its violation record.
+        if self.admission.active() {
+            let in_system = self.next_arrival - self.records.len();
+            let tier = self.tier_of(req.tenant);
+            let now = self.now;
+            if !self.admission.admit(now, req.tenant, tier, in_system) {
+                self.shed_request(&req);
+                return;
+            }
+        }
         // Multi-turn prefix reuse: a cache hit shrinks the prompt to the
         // un-cached suffix (skipping its re-prefill); the tier fetch time
         // is paid when the KV publishes to the decode pool.
@@ -489,6 +538,28 @@ impl Cluster {
             }
         }
         self.route_request(req);
+    }
+
+    /// Account a shed arrival: an immediate SLO-violation record with
+    /// the `shed` flag (conservation counts it, attainment does not —
+    /// same "infinite latency" shape as the unfinished-request records
+    /// in [`Self::finish`]), plus the policy overload hook so a dynamic
+    /// controller can trade power moves against further shedding.
+    fn shed_request(&mut self, req: &Request) {
+        let now = self.now;
+        self.records.push(RequestRecord {
+            id: req.id,
+            arrival: req.arrival,
+            prefill_start: now,
+            first_token: now + 3600 * SECOND,
+            finish: now + 7200 * SECOND,
+            input_tokens: req.input_tokens,
+            output_tokens: req.output_tokens,
+            slo: req.slo,
+            tenant: req.tenant,
+            shed: true,
+        });
+        self.policy.on_overload(now);
     }
 
     /// Route by topology (arrivals, failure requeues, orphan re-entry).
@@ -1020,6 +1091,8 @@ impl Cluster {
                     input_tokens: req.input_tokens,
                     output_tokens: req.output_tokens,
                     slo: req.slo,
+                    tenant: req.tenant,
+                    shed: false,
                 });
             }
         }
@@ -1054,6 +1127,14 @@ impl Cluster {
             resilience,
             mem,
             mem_trace: self.mem_trace,
+            // Tier table only for multi-tenant runs: an empty table
+            // keeps `Summary.tenants` None (emitters stay silent).
+            tenant_tiers: if self.cfg.tenants.is_empty() {
+                Vec::new()
+            } else {
+                self.tenant_tiers
+            },
+            preempted_by_tier: self.preempted_by_tier,
             summary_cache: None,
         };
         // Aggregate once here so emitters/figure drivers never re-scan

@@ -88,6 +88,11 @@ pub trait Policy: std::fmt::Debug + Send {
         _evicted_bytes: u64,
     ) {
     }
+    /// Admission control just shed an arrival (overload). Lets a
+    /// dynamic policy trade power moves against shedding; the default
+    /// ignores it (and the hook never fires without an `[admission]`
+    /// table, preserving bit-identity for untenanted runs).
+    fn on_overload(&mut self, _now: Micros) {}
     /// One decision tick.
     fn decide(&mut self, snap: &Snapshot) -> Option<Action>;
 }
@@ -168,6 +173,13 @@ impl Policy for RapidDynamic {
     }
     fn on_memory_pressure(&mut self, now: Micros, _gpu: usize, occ_frac: f64, _bytes: u64) {
         self.mem_occ.push(now, occ_frac);
+    }
+    fn on_overload(&mut self, now: Micros) {
+        // A shed arrival is stronger evidence than any completed TTFT:
+        // record a 2x-SLO violation so Algorithm 1's latency windows
+        // heat up and it reallocates power/GPUs toward the bottleneck
+        // instead of settling into a shedding equilibrium.
+        self.controller.observe_ttft(now, 2.0);
     }
     fn decide(&mut self, snap: &Snapshot) -> Option<Action> {
         let action = self.controller.decide(snap);
@@ -372,6 +384,26 @@ mod tests {
         assert_eq!(r.on_env_event(0, &fail), EnvResponse::None, "core owns failure handling");
         let mut p = PowerOnly::new(ControllerConfig::default());
         assert_eq!(p.on_env_event(0, &cap), EnvResponse::RedistributeUniform);
+    }
+
+    #[test]
+    fn overload_hook_feeds_ttft_pressure() {
+        // Enough shed arrivals alone must push Algorithm 1 toward a
+        // prefill power move — that is the trade between reallocation
+        // and further shedding.
+        let mut p = RapidDynamic::new(ControllerConfig::default(), ControlPolicy::DynPowerGpu);
+        let now = 10 * SECOND;
+        for i in 0..10 {
+            p.on_overload(now - i);
+            p.observe_tpot(now - i, 0.4);
+        }
+        let mut s = snap(now);
+        s.prefill_queue = 20;
+        assert_eq!(p.decide(&s), Some(Action::MovePower { from: Role::Decode }));
+        // The static policy ignores the hook entirely.
+        let mut st = StaticPolicy;
+        st.on_overload(now);
+        assert_eq!(st.decide(&snap(now)), None);
     }
 
     #[test]

@@ -264,6 +264,13 @@ pub struct ClusterConfig {
     /// tiered offload, and the prefix cache. `None` (the default) keeps
     /// memory infinite and is bit-identical to pre-mem code.
     pub mem: Option<crate::mem::MemConfig>,
+    /// Admission control (DESIGN.md §15). The default (`mode = none`)
+    /// admits everything and is bit-identical to pre-admission code.
+    pub admission: crate::cluster::admission::AdmissionConfig,
+    /// Tenant classes (`[tenant.<name>]` tables, DESIGN.md §15), in
+    /// name-sorted order; tenant id `i+1` is `tenants[i]`, id 0 the
+    /// untenanted default. Empty disables all multi-tenant machinery.
+    pub tenants: Vec<crate::workload::tracespec::TenantClass>,
 }
 
 impl Default for ClusterConfig {
@@ -395,6 +402,9 @@ impl ClusterConfig {
         if let Some(mem) = &self.mem {
             mem.validate().map_err(ConfigError::Invalid)?;
         }
+        self.admission.validate().map_err(ConfigError::Invalid)?;
+        crate::workload::tracespec::validate_tenants(&self.tenants)
+            .map_err(ConfigError::Invalid)?;
         self.env
             .validate(
                 self.total_gpus(),
@@ -563,7 +573,11 @@ const KNOWN_TABLES: &[(&str, &[&str])] = &[
             "prefix_cache",
         ],
     ),
+    ("admission", &["mode", "queue_depth", "bucket_rps", "bucket_burst"]),
 ];
+
+/// Fields a `[tenant.<name>]` table accepts.
+pub(crate) const TENANT_KEYS: &[&str] = &["share", "tier", "slo_scale"];
 
 /// Fields a `[sku.<name>]` table accepts: the power envelope plus every
 /// calibrated perf-model constant.
@@ -595,8 +609,41 @@ const SKU_KEYS: &[&str] = &[
 /// Reject any key the config loader would silently ignore, naming the
 /// key and its table (and the keys that table does accept).
 fn check_unknown_keys(doc: &Document) -> Result<(), ConfigError> {
-    doc.check_known_keys(KNOWN_TABLES, &[("sku", SKU_KEYS)])
+    doc.check_known_keys(KNOWN_TABLES, &[("sku", SKU_KEYS), ("tenant", TENANT_KEYS)])
         .map_err(ConfigError::Invalid)
+}
+
+/// Parse every `[tenant.<name>]` table into a name-sorted class list
+/// (sorted so tenant ids are stable regardless of file layout).
+pub(crate) fn parse_tenant_tables(
+    doc: &Document,
+) -> Result<Vec<crate::workload::tracespec::TenantClass>, ConfigError> {
+    use crate::workload::tracespec::{parse_tier, validate_tenants, TenantClass, TIER_STANDARD};
+    let mut names: Vec<&str> = Vec::new();
+    for key in doc.entries.keys() {
+        if let Some(rest) = key.strip_prefix("tenant.") {
+            if let Some((name, _field)) = rest.rsplit_once('.') {
+                if !names.contains(&name) {
+                    names.push(name);
+                }
+            }
+        }
+    }
+    names.sort_unstable();
+    let mut out = Vec::with_capacity(names.len());
+    for name in names {
+        let share = doc.get_f64(&format!("tenant.{name}.share")).ok_or_else(|| {
+            ConfigError::Invalid(format!("[tenant.{name}] needs a share key"))
+        })?;
+        let tier = match doc.get_str(&format!("tenant.{name}.tier")) {
+            Some(s) => parse_tier(s).map_err(ConfigError::Invalid)?,
+            None => TIER_STANDARD,
+        };
+        let slo_scale = doc.get_f64(&format!("tenant.{name}.slo_scale")).unwrap_or(1.0);
+        out.push(TenantClass { name: name.to_string(), share, tier, slo_scale });
+    }
+    validate_tenants(&out).map_err(ConfigError::Invalid)?;
+    Ok(out)
 }
 
 /// Parse every `[sku.<name>]` table: start from the built-in catalog
@@ -844,6 +891,19 @@ fn apply_overrides(cfg: &mut ClusterConfig, doc: &Document) -> Result<(), Config
         }
         cfg.mem = Some(mem);
     }
+    // Admission control: an `[admission]` table selects a shedding
+    // policy (DESIGN.md §15); absent, the default mode admits all.
+    if let Some(adm) = crate::cluster::admission::AdmissionConfig::from_doc(doc)
+        .map_err(ConfigError::Invalid)?
+    {
+        cfg.admission = adm;
+    }
+    // Tenant classes: `[tenant.<name>]` tables, name-sorted for stable
+    // tenant ids.
+    let tenants = parse_tenant_tables(doc)?;
+    if !tenants.is_empty() {
+        cfg.tenants = tenants;
+    }
     // Fleet mix: `[sku.<name>]` tables resolve first, then the ordered
     // `cluster.skus = ["name:count", ...]` mix references them (plus the
     // built-in catalog).
@@ -922,6 +982,8 @@ pub mod presets {
             fleet: None,
             env: EnvProfile::default(),
             mem: None,
+            admission: crate::cluster::admission::AdmissionConfig::default(),
+            tenants: Vec::new(),
         }
     }
 
@@ -1415,6 +1477,68 @@ hbm_gb = 96
         )
         .unwrap_err();
         assert!(err.to_string().contains("hbm_gb"), "{err}");
+    }
+
+    #[test]
+    fn admission_and_tenant_tables_round_trip() {
+        use crate::cluster::admission::AdmissionMode;
+        use crate::workload::tracespec::{TIER_BATCH, TIER_INTERACTIVE, TIER_STANDARD};
+        let cfg = ClusterConfig::from_toml(
+            r#"
+preset = "rapid-600"
+[admission]
+mode = "queue-depth"
+queue_depth = 48
+[tenant.chat]
+share = 0.5
+tier = "interactive"
+[tenant.jobs]
+share = 0.3
+tier = "batch"
+slo_scale = 4.0
+[tenant.api]
+share = 0.2
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.admission.mode, AdmissionMode::QueueDepth);
+        assert_eq!(cfg.admission.queue_depth, 48);
+        // Tenant ids follow name-sorted order: api, chat, jobs.
+        assert_eq!(cfg.tenants.len(), 3);
+        assert_eq!(cfg.tenants[0].name, "api");
+        assert_eq!(cfg.tenants[0].tier, TIER_STANDARD, "tier defaults to standard");
+        assert_eq!(cfg.tenants[1].name, "chat");
+        assert_eq!(cfg.tenants[1].tier, TIER_INTERACTIVE);
+        assert_eq!(cfg.tenants[2].tier, TIER_BATCH);
+        assert_eq!(cfg.tenants[2].slo_scale, 4.0);
+        // No tables -> inert defaults (the bit-identity contract).
+        let plain = ClusterConfig::from_toml("preset = \"rapid-600\"").unwrap();
+        assert_eq!(plain.admission.mode, AdmissionMode::None);
+        assert!(plain.tenants.is_empty());
+    }
+
+    #[test]
+    fn admission_and_tenant_tables_rejected_when_malformed() {
+        // Shares must sum to 1.
+        let err = ClusterConfig::from_toml(
+            "[tenant.a]\nshare = 0.5\n[tenant.b]\nshare = 0.2",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("sum to 1"), "{err}");
+        // A tenant table needs its share.
+        let err = ClusterConfig::from_toml("[tenant.a]\ntier = \"batch\"").unwrap_err();
+        assert!(err.to_string().contains("share"), "{err}");
+        // Unknown tier names are named back.
+        let err =
+            ClusterConfig::from_toml("[tenant.a]\nshare = 1.0\ntier = \"vip\"").unwrap_err();
+        assert!(err.to_string().contains("vip"), "{err}");
+        // Unknown tenant keys hit the strict key check.
+        let err =
+            ClusterConfig::from_toml("[tenant.a]\nshare = 1.0\nsharee = 2").unwrap_err();
+        assert!(err.to_string().contains("sharee"), "{err}");
+        // Admission mode is mandatory when the table is present.
+        let err = ClusterConfig::from_toml("[admission]\nqueue_depth = 8").unwrap_err();
+        assert!(err.to_string().contains("mode"), "{err}");
     }
 
     #[test]

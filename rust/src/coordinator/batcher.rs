@@ -109,6 +109,7 @@ mod tests {
             input_tokens: tokens,
             output_tokens: 16,
             slo: Slo::paper_default(),
+            tenant: 0,
         }
     }
 

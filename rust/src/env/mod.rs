@@ -25,6 +25,14 @@
 //! can rebalance immediately instead of waiting for a latency window to
 //! fill. With an empty profile nothing is injected and the simulation
 //! is bit-identical to the pre-env code.
+//!
+//! ```
+//! use rapid::env::EnvProfile;
+//!
+//! let p = EnvProfile::parse_compact("curtail:30:0.5:0.75:10").unwrap();
+//! assert!(!p.is_empty());
+//! assert!(EnvProfile::parse_compact("none").unwrap().is_empty());
+//! ```
 
 use std::fmt;
 

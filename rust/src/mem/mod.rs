@@ -28,6 +28,14 @@
 //! memory-pressure term of exactly `+0.0` in the router — and every run
 //! is bit-identical to the pre-mem simulator. Coalesced topologies keep
 //! the subsystem inert too (their KV never crosses the ring).
+//!
+//! ```
+//! use rapid::mem::MemAxis;
+//!
+//! let axis = MemAxis::parse_compact("multiturn:4:0.6+hbm:32").unwrap();
+//! assert!(axis.hbm_gb.is_some() && axis.multiturn.is_some());
+//! assert!(MemAxis::parse_compact("none").unwrap().is_empty());
+//! ```
 
 use std::collections::{HashMap, VecDeque};
 

@@ -45,6 +45,14 @@ pub struct RunResult {
     /// series the "resident KV <= HBM capacity" ShapeCheck walks.
     /// Empty when the memory subsystem is inactive.
     pub mem_trace: Vec<(Micros, f64)>,
+    /// Tier lookup table: index = request tenant id (0 = untenanted),
+    /// value = priority tier (see [`crate::workload::tracespec`]).
+    /// Empty when the run had no `[tenant.*]` classes; per-tier
+    /// aggregates in [`Summary::tenants`] exist only when non-empty.
+    pub tenant_tiers: Vec<u8>,
+    /// Decode preemptions per priority tier (the preempted side):
+    /// `[interactive, standard, batch]`.
+    pub preempted_by_tier: [u64; 3],
     /// Summary computed once when the run finishes, so study emitters
     /// and figure drivers never re-scan the record/power series.
     /// Hand-built results (tests) fall back to computing on demand.
@@ -140,6 +148,10 @@ impl RunResult {
         let mut ttfts: Vec<f64> = Vec::with_capacity(n);
         let mut tpots: Vec<f64> = Vec::with_capacity(n);
         let mut attained = 0usize;
+        let tiered = !self.tenant_tiers.is_empty();
+        let mut tier_req = [0usize; 3];
+        let mut tier_att = [0usize; 3];
+        let mut tier_shed = [0usize; 3];
         for r in &self.records {
             ttfts.push(r.ttft() as f64);
             if r.output_tokens > 1 {
@@ -147,6 +159,21 @@ impl RunResult {
             }
             if r.attained() {
                 attained += 1;
+            }
+            if tiered {
+                let tier = self
+                    .tenant_tiers
+                    .get(r.tenant as usize)
+                    .copied()
+                    .unwrap_or(crate::workload::tracespec::TIER_STANDARD)
+                    as usize;
+                tier_req[tier] += 1;
+                if r.attained() {
+                    tier_att[tier] += 1;
+                }
+                if r.shed {
+                    tier_shed[tier] += 1;
+                }
             }
         }
         ttfts.sort_by(|a, b| a.total_cmp(b));
@@ -162,6 +189,33 @@ impl RunResult {
         } else {
             goodput_qps / (self.mean_provisioned_w / 1000.0)
         };
+        let dur_s = self.duration as f64 / SECOND as f64;
+        let tenants = if tiered {
+            let mut out = [TierSummary::default(); 3];
+            for (t, slot) in out.iter_mut().enumerate() {
+                *slot = TierSummary {
+                    requests: tier_req[t],
+                    attained: tier_att[t],
+                    // An empty tier attains vacuously (matches the
+                    // resilience-window convention above).
+                    attainment: if tier_req[t] == 0 {
+                        1.0
+                    } else {
+                        tier_att[t] as f64 / tier_req[t] as f64
+                    },
+                    goodput_qps: if self.duration == 0 {
+                        0.0
+                    } else {
+                        tier_att[t] as f64 / dur_s
+                    },
+                    shed: tier_shed[t],
+                    preempted: self.preempted_by_tier[t],
+                };
+            }
+            Some(out)
+        } else {
+            None
+        };
         Summary {
             requests: n,
             attainment,
@@ -176,6 +230,7 @@ impl RunResult {
             duration_s: self.duration as f64 / SECOND as f64,
             resilience: self.resilience,
             mem: self.mem,
+            tenants,
         }
     }
 
@@ -227,6 +282,27 @@ pub struct Summary {
     pub resilience: Option<Resilience>,
     /// KV memory aggregates; `None` when the subsystem was inactive.
     pub mem: Option<crate::mem::MemSummary>,
+    /// Per-priority-tier aggregates, indexed `[interactive, standard,
+    /// batch]`; `None` when the run had no tenant classes.
+    pub tenants: Option<[TierSummary; 3]>,
+}
+
+/// Aggregates for one priority tier of a multi-tenant run.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct TierSummary {
+    /// Requests that arrived for this tier (shed ones included —
+    /// request conservation counts every arrival exactly once).
+    pub requests: usize,
+    /// Requests that met both SLOs.
+    pub attained: usize,
+    /// `attained / requests` (vacuously 1.0 for an empty tier).
+    pub attainment: f64,
+    /// Attained requests per second of run duration.
+    pub goodput_qps: f64,
+    /// Requests rejected by admission control before routing.
+    pub shed: usize,
+    /// Decode preemptions suffered by this tier.
+    pub preempted: u64,
 }
 
 /// Goodput bucket width for the resilience aggregates (coarse enough
@@ -352,6 +428,8 @@ mod tests {
             input_tokens: 1000,
             output_tokens: out,
             slo: Slo::paper_default(),
+            tenant: 0,
+            shed: false,
         }
     }
 
@@ -499,6 +577,43 @@ mod tests {
         let r3 = compute_resilience(&flat, 10 * SECOND, 20 * SECOND, 31 * SECOND);
         assert!(r3.dip_depth < 0.2, "steady goodput has no meaningful dip");
         assert_eq!(r3.recovery_s, 0.0);
+    }
+
+    #[test]
+    fn per_tier_summary_splits_by_tenant() {
+        use crate::workload::tracespec::{TIER_BATCH, TIER_INTERACTIVE, TIER_STANDARD};
+        let mut r = result_with(
+            vec![
+                record(0, 0, 500 * MILLIS, SECOND, 20),   // attained
+                record(1, 0, 2 * SECOND, 3 * SECOND, 20), // TTFT-violating
+            ],
+            10 * SECOND,
+        );
+        r.records[0].tenant = 1;
+        r.records[1].tenant = 2;
+        let mut shed = record(2, 0, 3600 * SECOND, 7200 * SECOND, 20);
+        shed.tenant = 2;
+        shed.shed = true;
+        r.records.push(shed);
+        assert!(r.summary().tenants.is_none(), "no tier table -> no tier view");
+        // tenant 0 (untenanted) standard, tenant 1 interactive, tenant 2 batch
+        r.tenant_tiers = vec![TIER_STANDARD, TIER_INTERACTIVE, TIER_BATCH];
+        r.preempted_by_tier = [0, 0, 3];
+        let tiers = r.compute_summary().tenants.unwrap();
+        let it = tiers[TIER_INTERACTIVE as usize];
+        assert_eq!((it.requests, it.attained, it.shed), (1, 1, 0));
+        assert_eq!(it.attainment, 1.0);
+        assert!((it.goodput_qps - 0.1).abs() < 1e-9);
+        let batch = tiers[TIER_BATCH as usize];
+        assert_eq!((batch.requests, batch.attained, batch.shed), (2, 0, 1));
+        assert_eq!(batch.attainment, 0.0);
+        assert_eq!(batch.preempted, 3);
+        let std_tier = tiers[TIER_STANDARD as usize];
+        assert_eq!(std_tier.requests, 0);
+        assert_eq!(std_tier.attainment, 1.0, "empty tier attains vacuously");
+        // Conservation: tier requests sum to the record count.
+        let total: usize = tiers.iter().map(|t| t.requests).sum();
+        assert_eq!(total, r.records.len());
     }
 
     #[test]

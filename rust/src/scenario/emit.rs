@@ -70,6 +70,12 @@ fn any_mem(study: &StudyResult) -> bool {
     study.cells.iter().any(|c| c.mem().is_some())
 }
 
+/// Any multi-tenant cell in the study? Gates the per-tier columns so
+/// untenanted studies render byte-identically to pre-tenant output.
+fn any_tenants(study: &StudyResult) -> bool {
+    study.cells.iter().any(|c| c.tenants().is_some())
+}
+
 // ---------------------------------------------------------------------------
 // Text
 // ---------------------------------------------------------------------------
@@ -126,6 +132,35 @@ fn text_metrics(study: &StudyResult) -> Vec<Metric> {
                 name: "prefix_hit_rate",
                 value: |c| c.mem().map_or(0.0, |m| m.hit_rate),
                 fmt: |v| format!("{v:.3}"),
+            });
+        }
+        if any_tenants(study) {
+            use crate::workload::tracespec::{TIER_BATCH, TIER_INTERACTIVE};
+            metrics.push(Metric {
+                name: "interactive_attainment",
+                value: |c| c.tenants().map_or(0.0, |t| t[TIER_INTERACTIVE as usize].attainment),
+                fmt: |v| format!("{v:.4}"),
+            });
+            metrics.push(Metric {
+                name: "batch_attainment",
+                value: |c| c.tenants().map_or(0.0, |t| t[TIER_BATCH as usize].attainment),
+                fmt: |v| format!("{v:.4}"),
+            });
+            metrics.push(Metric {
+                name: "shed",
+                value: |c| {
+                    c.tenants()
+                        .map_or(0.0, |t| t.iter().map(|x| x.shed as f64).sum())
+                },
+                fmt: |v| format!("{v:.0}"),
+            });
+            metrics.push(Metric {
+                name: "preempted",
+                value: |c| {
+                    c.tenants()
+                        .map_or(0.0, |t| t.iter().map(|x| x.preempted as f64).sum())
+                },
+                fmt: |v| format!("{v:.0}"),
             });
         }
         metrics
@@ -285,6 +320,16 @@ fn cell_json(cell: &Cell) -> Json {
                 m.insert("prefix_lookups".into(), Json::Num(mem.prefix_lookups as f64));
                 m.insert("prefix_hit_rate".into(), num(mem.hit_rate));
             }
+            if let Some(tiers) = s.tenants {
+                for (i, t) in tiers.iter().enumerate() {
+                    let tier = crate::workload::tracespec::tier_name(i as u8);
+                    m.insert(format!("{tier}_requests"), Json::Num(t.requests as f64));
+                    m.insert(format!("{tier}_attainment"), num(t.attainment));
+                    m.insert(format!("{tier}_goodput_qps"), num(t.goodput_qps));
+                    m.insert(format!("{tier}_shed"), Json::Num(t.shed as f64));
+                    m.insert(format!("{tier}_preempted"), Json::Num(t.preempted as f64));
+                }
+            }
             obj.insert("metrics".into(), Json::Obj(m));
         }
     }
@@ -367,6 +412,7 @@ impl Emitter for CsvEmitter {
         let scalar = all_scalar(study);
         let resilience = any_resilience(study);
         let mem = any_mem(study);
+        let tenants = any_tenants(study);
         let mut out = String::new();
         for k in &axis_keys {
             out.push_str(k);
@@ -386,6 +432,11 @@ impl Emitter for CsvEmitter {
             }
             if mem {
                 out.push_str(",peak_kv_occ,kv_evictions,kv_offload_bytes,prefix_hit_rate");
+            }
+            if tenants {
+                out.push_str(
+                    ",interactive_attainment,standard_attainment,batch_attainment,shed,preempted",
+                );
             }
             out.push('\n');
         }
@@ -428,6 +479,17 @@ impl Emitter for CsvEmitter {
                             (m.peak_occupancy, m.evictions, m.offload_bytes, m.hit_rate)
                         });
                         out.push_str(&format!(",{occ},{ev},{off},{hr}"));
+                    }
+                    if tenants {
+                        // Untenanted cells in a tenants study emit
+                        // zeros (no tier ever saw a request there).
+                        let tiers = s.tenants.unwrap_or_default();
+                        let shed: u64 = tiers.iter().map(|t| t.shed).sum();
+                        let preempted: u64 = tiers.iter().map(|t| t.preempted).sum();
+                        out.push_str(&format!(
+                            ",{},{},{},{shed},{preempted}",
+                            tiers[0].attainment, tiers[1].attainment, tiers[2].attainment
+                        ));
                     }
                 }
             }
@@ -592,6 +654,48 @@ mod tests {
         assert!(
             csv.lines().next().unwrap().ends_with(
                 "peak_kv_occ,kv_evictions,kv_offload_bytes,prefix_hit_rate"
+            ),
+            "{csv}"
+        );
+        assert_eq!(csv.trim_end().lines().count(), 3);
+    }
+
+    #[test]
+    fn tenants_rendered_only_for_multitenant_studies() {
+        // Untenanted studies keep the pre-tenant output shape exactly.
+        let plain = small_study();
+        assert!(!emit(&plain, Format::Text).contains("[interactive_attainment]"));
+        assert!(!emit(&plain, Format::Csv).lines().next().unwrap().contains("interactive"));
+        // A multi-tenant study renders the per-tier block everywhere.
+        let study = Study::new(
+            Scenario::new("tenant-emit", presets::p4d4(600.0))
+                .requests(60)
+                .seed(5)
+                .axis(Axis::Tenants(vec![
+                    "none".into(),
+                    "chat:0.6:interactive+jobs:0.4:batch:4".into(),
+                ])),
+        )
+        .run(Some(1))
+        .unwrap();
+        let text = emit(&study, Format::Text);
+        assert!(text.contains("[interactive_attainment]"), "{text}");
+        assert!(text.contains("[batch_attainment]"), "{text}");
+        assert!(text.contains("[shed]"), "{text}");
+        let json = emit(&study, Format::Json);
+        let v = Json::parse(json.trim()).unwrap();
+        let cells = v.get("cells").unwrap().as_arr().unwrap();
+        // Cell 0 is the untenanted comparison cell: no tier metrics.
+        let m0 = cells[0].get("metrics").unwrap();
+        assert!(m0.get("interactive_attainment").is_none());
+        let m1 = cells[1].get("metrics").unwrap();
+        assert!(m1.get("interactive_attainment").is_some());
+        assert!(m1.get("batch_goodput_qps").is_some());
+        assert!(m1.get("standard_requests").is_some());
+        let csv = emit(&study, Format::Csv);
+        assert!(
+            csv.lines().next().unwrap().ends_with(
+                "interactive_attainment,standard_attainment,batch_attainment,shed,preempted"
             ),
             "{csv}"
         );

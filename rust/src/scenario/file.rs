@@ -32,16 +32,23 @@
 //!
 //! TOML tables are unordered, so axes expand in a fixed canonical
 //! order regardless of file order (outermost → innermost): `seed`,
-//! `preset`, `sku_mix`, `policy`, `env`, `mem`, `n_nodes`,
-//! `prefill_gpus`, `power_w`, `batch`, `burst_factor`, `slo_scale`,
-//! `rate_per_gpu`. The last declared axis
+//! `preset`, `sku_mix`, `policy`, `env`, `mem`, `trace`, `tenants`,
+//! `n_nodes`, `prefill_gpus`, `power_w`, `batch`, `burst_factor`,
+//! `slo_scale`, `rate_per_gpu`. The last declared axis
 //! becomes the column axis of the text tables. Unknown keys anywhere in
 //! the file are rejected with an error naming the key and its table.
+//!
+//! Multi-tenant studies add three optional tables: `[workload.trace]`
+//! (a trace-replay preset plus an optional flash-crowd window),
+//! `[tenant.<name>]` classes (share / tier / slo_scale) and
+//! `[admission]` (shedding policy), all applied to every cell's base
+//! config.
 
 use super::{Axis, Scenario, ScenarioError, WorkloadSpec};
 use crate::config::toml::{Document, Value};
 use crate::config::{presets, ControlPolicy};
 use crate::types::{Slo, MILLIS};
+use crate::workload::tracespec::{FlashCrowd, TraceSpec};
 
 /// Canonical axis expansion order for TOML-declared scenarios.
 const AXIS_ORDER: &[&str] = &[
@@ -51,6 +58,8 @@ const AXIS_ORDER: &[&str] = &[
     "policy",
     "env",
     "mem",
+    "trace",
+    "tenants",
     "n_nodes",
     "prefill_gpus",
     "power_w",
@@ -64,16 +73,19 @@ const AXIS_ORDER: &[&str] = &[
 const KNOWN_TABLES: &[(&str, &[&str])] = &[
     ("", &["name", "seed", "requests", "rate_per_gpu"]),
     ("workload", &["kind", "input_tokens", "output_tokens", "burst_frac", "turns", "reuse_frac"]),
+    ("workload.trace", &["preset", "flash_start_s", "flash_dur_s", "flash_mult"]),
     ("slo", &["ttft_ms", "tpot_ms"]),
     ("base", &["preset"]),
     ("sim", &["sample_period_ms"]),
+    ("admission", &["mode", "queue_depth", "bucket_rps", "bucket_burst"]),
     ("axes", AXIS_ORDER),
 ];
 
 /// Reject any key the scenario loader would silently ignore, naming the
 /// key and its table (and the keys that table does accept).
 fn check_unknown_keys(doc: &Document) -> Result<(), ScenarioError> {
-    doc.check_known_keys(KNOWN_TABLES, &[]).map_err(ScenarioError)
+    doc.check_known_keys(KNOWN_TABLES, &[("tenant", crate::config::schema::TENANT_KEYS)])
+        .map_err(ScenarioError)
 }
 
 impl Scenario {
@@ -104,6 +116,14 @@ impl Scenario {
         s.workload = parse_workload(&doc)?;
         if let Some(f) = doc.get_f64("workload.burst_frac") {
             s.burst_frac = f;
+        }
+        s.trace = parse_trace_table(&doc)?;
+        s.base.tenants =
+            crate::config::schema::parse_tenant_tables(&doc).map_err(|e| ScenarioError(e.to_string()))?;
+        if let Some(adm) = crate::cluster::admission::AdmissionConfig::from_doc(&doc)
+            .map_err(ScenarioError)?
+        {
+            s.base.admission = adm;
         }
         // Multi-turn transform: both keys or neither (`Scenario::validate`
         // checks the value ranges).
@@ -146,6 +166,36 @@ impl Scenario {
             .map_err(|e| ScenarioError(format!("{path}: {e}")))?;
         Scenario::from_toml(&text).map_err(|e| ScenarioError(format!("{path}: {}", e.0)))
     }
+}
+
+/// Parse the optional `[workload.trace]` table: a preset name plus an
+/// optional flash-crowd window (the three `flash_*` keys are
+/// all-or-none).
+fn parse_trace_table(doc: &Document) -> Result<Option<TraceSpec>, ScenarioError> {
+    if !doc.entries.keys().any(|k| k.starts_with("workload.trace.")) {
+        return Ok(None);
+    }
+    let preset = doc
+        .get_str("workload.trace.preset")
+        .ok_or_else(|| ScenarioError("[workload.trace] needs a preset key".into()))?;
+    let spec = TraceSpec::preset(preset).map_err(ScenarioError)?;
+    let flash = (
+        doc.get_f64("workload.trace.flash_start_s"),
+        doc.get_f64("workload.trace.flash_dur_s"),
+        doc.get_f64("workload.trace.flash_mult"),
+    );
+    let spec = match flash {
+        (None, None, None) => spec,
+        (Some(start_s), Some(dur_s), Some(mult)) => spec
+            .with_flash(FlashCrowd { start_s, dur_s, mult })
+            .map_err(ScenarioError)?,
+        _ => {
+            return Err(ScenarioError(
+                "flash_start_s, flash_dur_s and flash_mult must be set together".into(),
+            ))
+        }
+    };
+    Ok(Some(spec))
 }
 
 fn parse_workload(doc: &Document) -> Result<WorkloadSpec, ScenarioError> {
@@ -279,6 +329,34 @@ fn parse_axis(name: &str, values: &[Value]) -> Result<Axis, ScenarioError> {
                 })
                 .collect::<Result<Vec<_>, _>>()?;
             Ok(Axis::Mem(cells))
+        }
+        "trace" => {
+            let specs = values
+                .iter()
+                .map(|v| {
+                    v.as_str().map(str::to_string).ok_or_else(|| {
+                        ScenarioError(
+                            "axis 'trace' needs strings like \"mt-4400x1200\" or \
+                             \"synth-8192x256:flash:120:60:3\"".into(),
+                        )
+                    })
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            Ok(Axis::Trace(specs))
+        }
+        "tenants" => {
+            let mixes = values
+                .iter()
+                .map(|v| {
+                    v.as_str().map(str::to_string).ok_or_else(|| {
+                        ScenarioError(
+                            "axis 'tenants' needs strings like \
+                             \"chat:0.5:interactive+jobs:0.5:batch\"".into(),
+                        )
+                    })
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            Ok(Axis::Tenants(mixes))
         }
         "sku_mix" => {
             let mixes = values
@@ -489,6 +567,85 @@ rate_per_gpu = [1.0]
         assert!(Scenario::from_toml("[workload]\nreuse_frac = 0.5").is_err());
         assert!(Scenario::from_toml("[workload]\nturns = 1\nreuse_frac = 0.5").is_err());
         assert!(Scenario::from_toml("[workload]\nturns = 4\nreuse_frac = 1.5").is_err());
+    }
+
+    #[test]
+    fn trace_table_and_tenant_tables_parse() {
+        let s = Scenario::from_toml(
+            r#"
+name = "flash"
+[base]
+preset = "rapid-600"
+[workload.trace]
+preset = "mt-4400x1200"
+flash_start_s = 120
+flash_dur_s = 60
+flash_mult = 3.0
+[tenant.chat]
+share = 0.5
+tier = "interactive"
+[tenant.jobs]
+share = 0.5
+tier = "batch"
+slo_scale = 4.0
+[admission]
+mode = "queue-depth"
+queue_depth = 32
+[axes]
+policy = ["static", "rapid"]
+"#,
+        )
+        .unwrap();
+        let ts = s.trace.as_ref().unwrap();
+        assert_eq!(ts.preset, "mt-4400x1200");
+        assert!(ts.flash.is_some());
+        assert_eq!(s.base.tenants.len(), 2);
+        assert_eq!(s.base.tenants[0].name, "chat");
+        assert_eq!(s.base.tenants[1].slo_scale, 4.0);
+        assert_eq!(
+            s.base.admission.mode,
+            crate::cluster::admission::AdmissionMode::QueueDepth
+        );
+        // Flash keys are all-or-none; the preset key is required; bad
+        // tenant keys and shares are named back.
+        assert!(Scenario::from_toml(
+            "[workload.trace]\npreset = \"mt-4400x1200\"\nflash_start_s = 120"
+        )
+        .is_err());
+        assert!(Scenario::from_toml("[workload.trace]\nflash_mult = 3.0").is_err());
+        assert!(Scenario::from_toml("[workload.trace]\npreset = \"warp\"").is_err());
+        assert!(Scenario::from_toml("[tenant.chat]\nshare = 0.4").is_err());
+        assert!(Scenario::from_toml("[tenant.chat]\nshare = 1.0\nsharee = 2").is_err());
+    }
+
+    #[test]
+    fn trace_and_tenants_axes_parse_in_canonical_order() {
+        let s = Scenario::from_toml(
+            r#"
+[base]
+preset = "rapid-600"
+[axes]
+rate_per_gpu = [1.0]
+tenants = ["none", "chat:0.5:interactive+jobs:0.5:batch"]
+trace = ["none", "synth-8192x256"]
+"#,
+        )
+        .unwrap();
+        // trace before tenants, rate innermost — file order ignored.
+        assert_eq!(s.axes[0].key(), "trace");
+        assert_eq!(s.axes[1].key(), "tenants");
+        assert_eq!(s.axes[2].key(), "rate_per_gpu");
+        assert_eq!(s.n_cells(), 4);
+        assert_eq!(s.axes[0].label(1), "synth-8192x256");
+        // Bad values fail at load time.
+        assert!(Scenario::from_toml("[axes]\ntrace = [9]").is_err());
+        assert!(Scenario::from_toml("[axes]\ntrace = [\"warp\"]").is_err());
+        assert!(Scenario::from_toml("[axes]\ntenants = [\"chat:0.4:interactive\"]").is_err());
+        // trace x burst_factor is a structural conflict.
+        assert!(Scenario::from_toml(
+            "[workload.trace]\npreset = \"mt-4400x1200\"\n[axes]\nburst_factor = [4.0]"
+        )
+        .is_err());
     }
 
     #[test]

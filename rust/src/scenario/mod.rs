@@ -11,6 +11,23 @@
 //! figure drivers, the pluggable [`emit`] renderers (text/JSON/CSV) and
 //! the `rapid study` CLI. Scenario TOML files (`scenarios/*.toml`) load
 //! through [`file`], turning new experiments into data instead of code.
+//!
+//! String-valued axes use the same compact grammars the TOML loader
+//! accepts, parsed and rejected at validation time before any cell
+//! runs:
+//!
+//! ```
+//! use rapid::env::EnvProfile;
+//! use rapid::fleet::FleetConfig;
+//! use rapid::mem::MemAxis;
+//! use rapid::workload::tracespec::{TenantClass, TraceSpec};
+//!
+//! FleetConfig::parse_mix("mi300x:4+a100:4", &[]).unwrap();
+//! EnvProfile::parse_compact("curtail:30:0.5:0.75:10").unwrap();
+//! MemAxis::parse_compact("multiturn:4:0.6+hbm:32").unwrap();
+//! TraceSpec::parse_compact("mt-4400x1200:flash:120:60:3").unwrap();
+//! TenantClass::parse_compact("chat:0.5:interactive+jobs:0.5:batch:4").unwrap();
+//! ```
 
 pub mod emit;
 pub mod file;
@@ -23,6 +40,7 @@ use crate::types::{Micros, Slo};
 use crate::util::par::parallel_map_threads;
 use crate::util::rng::Rng;
 use crate::workload::sonnet::{mixed_phases, MixedPhasesSpec, Sonnet};
+use crate::workload::tracespec::{assign_tenants, TraceSpec};
 use crate::workload::{build_trace, longbench::LongBench, ArrivalProcess, Trace};
 
 // ---------------------------------------------------------------------------
@@ -254,6 +272,20 @@ pub enum Axis {
     /// atom rewrites the cell's trace into conversations; `"none"` is
     /// the inert comparison cell (no `[mem]` table, cache disabled).
     Mem(Vec<String>),
+    /// Trace-replay arrival curves in the compact grammar of
+    /// [`TraceSpec::parse_compact`] (`"none"`, `"mt-4400x1200"`,
+    /// `"synth-8192x256:flash:120:60:3"`). A non-`none` atom replaces
+    /// the cell's arrival process and size sampler with the preset's
+    /// diurnal rate curve and empirical length distributions; `"none"`
+    /// keeps the scenario workload (the inert comparison cell).
+    Trace(Vec<String>),
+    /// Tenant-class mixes in the compact grammar of
+    /// [`crate::workload::tracespec::TenantClass::parse_compact`]
+    /// (`"none"`, `"chat:0.5:interactive+jobs:0.5:batch:4"`). A
+    /// non-`none` atom tags every request with a tenant, scales its
+    /// SLO, and activates per-tier metrics and decode preemption;
+    /// `"none"` is the untenanted comparison cell.
+    Tenants(Vec<String>),
 }
 
 impl Axis {
@@ -273,6 +305,8 @@ impl Axis {
             Axis::Seed(_) => "seed",
             Axis::Env(_) => "env",
             Axis::Mem(_) => "mem",
+            Axis::Trace(_) => "trace",
+            Axis::Tenants(_) => "tenants",
         }
     }
 
@@ -284,7 +318,9 @@ impl Axis {
             }
             Axis::NNodes(v) | Axis::PrefillGpus(v) | Axis::Batch(v) => v.len(),
             Axis::Policy(v) => v.len(),
-            Axis::SkuMix(v) | Axis::Env(v) | Axis::Mem(v) => v.len(),
+            Axis::SkuMix(v) | Axis::Env(v) | Axis::Mem(v) | Axis::Trace(v) | Axis::Tenants(v) => {
+                v.len()
+            }
             Axis::Seed(v) => v.len(),
         }
     }
@@ -302,7 +338,9 @@ impl Axis {
             }
             Axis::NNodes(v) | Axis::PrefillGpus(v) | Axis::Batch(v) => format!("{}", v[i]),
             Axis::Policy(v) => v[i].name().to_string(),
-            Axis::SkuMix(v) | Axis::Env(v) | Axis::Mem(v) => v[i].clone(),
+            Axis::SkuMix(v) | Axis::Env(v) | Axis::Mem(v) | Axis::Trace(v) | Axis::Tenants(v) => {
+                v[i].clone()
+            }
             Axis::Seed(v) => format!("{}", v[i]),
         }
     }
@@ -331,6 +369,11 @@ pub struct Scenario {
     /// `(turns, reuse_frac)` as in [`crate::workload::make_multiturn`].
     /// A `multiturn` atom on a `Mem` axis overrides this per cell.
     pub multiturn: Option<(u32, f64)>,
+    /// Trace-replay spec (`[workload.trace]`): replaces the workload's
+    /// arrival process and size sampler with a deterministic diurnal
+    /// curve + empirical length distributions. A `Trace` axis overrides
+    /// this per cell.
+    pub trace: Option<TraceSpec>,
     pub axes: Vec<Axis>,
 }
 
@@ -358,6 +401,7 @@ impl Scenario {
             burst_frac: 0.2,
             sample_period: None,
             multiturn: None,
+            trace: None,
             axes: Vec::new(),
         }
     }
@@ -394,6 +438,11 @@ impl Scenario {
 
     pub fn multiturn(mut self, turns: u32, reuse_frac: f64) -> Self {
         self.multiturn = Some((turns, reuse_frac));
+        self
+    }
+
+    pub fn trace(mut self, spec: TraceSpec) -> Self {
+        self.trace = Some(spec);
         self
     }
 
@@ -456,7 +505,7 @@ impl Scenario {
         if self.workload.is_micro() {
             const SIM_ONLY: &[&str] = &[
                 "rate_per_gpu", "slo_scale", "burst_factor", "n_nodes", "sku_mix", "seed",
-                "env", "mem",
+                "env", "mem", "trace", "tenants",
             ];
             for &k in SIM_ONLY {
                 if has(k) {
@@ -466,6 +515,21 @@ impl Scenario {
             if self.multiturn.is_some() {
                 return err("multiturn does not apply to microbench workloads".into());
             }
+            if self.trace.is_some() {
+                return err("a trace spec does not apply to microbench workloads".into());
+            }
+        }
+        // Trace replay owns the arrival process end to end; layering
+        // Markov burst modulation on top would double-model the surges
+        // the trace already encodes (flash-crowd segments).
+        if (self.trace.is_some() || has("trace")) && has("burst_factor") {
+            return err("a trace spec cannot be combined with a burst_factor axis".into());
+        }
+        if self.trace.is_some() && self.workload == WorkloadSpec::MixedPhases {
+            return err("a trace spec cannot be combined with the mixed workload".into());
+        }
+        if let Some(spec) = &self.trace {
+            spec.validate().map_err(ScenarioError)?;
         }
         if let Some((turns, reuse)) = self.multiturn {
             if turns < 2 {
@@ -488,6 +552,17 @@ impl Scenario {
         if let Some(Axis::Mem(cells)) = self.axes.iter().find(|a| a.key() == "mem") {
             for c in cells {
                 crate::mem::MemAxis::parse_compact(c).map_err(ScenarioError)?;
+            }
+        }
+        if let Some(Axis::Trace(specs)) = self.axes.iter().find(|a| a.key() == "trace") {
+            for s in specs {
+                TraceSpec::parse_compact(s).map_err(ScenarioError)?;
+            }
+        }
+        if let Some(Axis::Tenants(mixes)) = self.axes.iter().find(|a| a.key() == "tenants") {
+            for m in mixes {
+                crate::workload::tracespec::TenantClass::parse_compact(m)
+                    .map_err(ScenarioError)?;
             }
         }
         Ok(())
@@ -517,6 +592,9 @@ pub struct CellSpec {
     /// Multi-turn trace transform for this cell (scenario default,
     /// overridden by a `multiturn` atom on a `Mem` axis).
     pub multiturn: Option<(u32, f64)>,
+    /// Trace-replay spec for this cell (scenario default, overridden
+    /// by a `Trace` axis atom; `None` = the scenario workload).
+    pub trace: Option<TraceSpec>,
 }
 
 fn index_tuples(axes: &[Axis]) -> Vec<Vec<usize>> {
@@ -546,6 +624,7 @@ fn resolve_cell(scenario: &Scenario, tuple: &[usize]) -> Result<CellSpec, Scenar
         batch: 1,
         seed: None,
         multiturn: scenario.multiturn,
+        trace: scenario.trace.clone(),
     };
     for (axis, &i) in scenario.axes.iter().zip(tuple) {
         spec.coords.push((axis.key().to_string(), axis.label(i)));
@@ -599,6 +678,22 @@ fn resolve_cell(scenario: &Scenario, tuple: &[usize]) -> Result<CellSpec, Scenar
                 if !mem.is_empty() {
                     spec.config.name = format!("{}@{}", spec.config.name, v[i]);
                 }
+            }
+            Axis::Trace(v) => {
+                let ts = TraceSpec::parse_compact(&v[i]).map_err(ScenarioError)?;
+                if let Some(ts) = &ts {
+                    ts.validate().map_err(ScenarioError)?;
+                    spec.config.name = format!("{}@{}", spec.config.name, v[i]);
+                }
+                spec.trace = ts;
+            }
+            Axis::Tenants(v) => {
+                let classes = crate::workload::tracespec::TenantClass::parse_compact(&v[i])
+                    .map_err(ScenarioError)?;
+                if !classes.is_empty() {
+                    spec.config.name = format!("{}@{}", spec.config.name, v[i]);
+                }
+                spec.config.tenants = classes;
             }
             Axis::SkuMix(v) => {
                 let fc = crate::fleet::FleetConfig::parse_mix(&v[i], &[])
@@ -728,6 +823,12 @@ impl Cell {
     /// runs without an active KV capacity model).
     pub fn mem(&self) -> Option<crate::mem::MemSummary> {
         self.result().and_then(|r| r.summary().mem)
+    }
+
+    /// Per-tier tenant aggregates (`None` for microbench cells and
+    /// untenanted runs).
+    pub fn tenants(&self) -> Option<[crate::metrics::TierSummary; 3]> {
+        self.result().and_then(|r| r.summary().tenants)
     }
 
     pub fn rate_point(&self) -> RatePoint {
@@ -970,10 +1071,8 @@ impl StudyResult {
     }
 }
 
-fn build_cell_trace(scenario: &Scenario, spec: &CellSpec) -> Trace {
-    let node_qps = spec.rate_per_gpu * spec.config.total_gpus() as f64;
-    let seed = spec.seed.unwrap_or(scenario.seed);
-    let mut trace = match &scenario.workload {
+fn build_workload_trace(scenario: &Scenario, spec: &CellSpec, seed: u64, node_qps: f64) -> Trace {
+    match &scenario.workload {
         WorkloadSpec::LongBench => longbench_trace_bursty(
             seed,
             node_qps,
@@ -999,9 +1098,23 @@ fn build_cell_trace(scenario: &Scenario, spec: &CellSpec) -> Trace {
         WorkloadSpec::PrefillMicrobench { .. } | WorkloadSpec::DecodeMicrobench { .. } => {
             unreachable!("microbench cells do not build traces")
         }
+    }
+}
+
+fn build_cell_trace(scenario: &Scenario, spec: &CellSpec) -> Trace {
+    let node_qps = spec.rate_per_gpu * spec.config.total_gpus() as f64;
+    let seed = spec.seed.unwrap_or(scenario.seed);
+    // Trace replay owns arrivals and sizes; the scenario workload only
+    // contributes the rate anchor and request count.
+    let mut trace = match &spec.trace {
+        Some(ts) => ts.build(seed, node_qps, scenario.requests, spec.slo),
+        None => build_workload_trace(scenario, spec, seed, node_qps),
     };
     if let Some((turns, reuse)) = spec.multiturn {
         crate::workload::make_multiturn(&mut trace, turns, reuse);
+    }
+    if !spec.config.tenants.is_empty() {
+        assign_tenants(&mut trace, &spec.config.tenants, seed);
     }
     trace
 }
@@ -1080,6 +1193,26 @@ fn cell_checks(config: &ClusterConfig, n_requests: usize, res: &RunResult) -> Ve
                 mem.evictions
             ),
         ));
+    }
+    if let Some(tiers) = summary.tenants {
+        use crate::workload::tracespec::{TIER_BATCH, TIER_INTERACTIVE};
+        let shed: u64 = tiers.iter().map(|t| t.shed).sum();
+        let preempted: u64 = tiers.iter().map(|t| t.preempted).sum();
+        let inter = tiers[TIER_INTERACTIVE as usize];
+        let batch = tiers[TIER_BATCH as usize];
+        // The tier ordering only binds when prioritization actually
+        // fired (shed or preempted work) and both tiers saw traffic;
+        // an unloaded run attains ~1.0 everywhere and proves nothing.
+        if shed + preempted > 0 && inter.requests > 0 && batch.requests > 0 {
+            checks.push(ShapeCheck::new(
+                "interactive attainment >= batch attainment under overload",
+                inter.attainment + 1e-9 >= batch.attainment,
+                format!(
+                    "{:.4} vs {:.4} ({shed} shed, {preempted} preempted)",
+                    inter.attainment, batch.attainment
+                ),
+            ));
+        }
     }
     checks
 }
@@ -1476,6 +1609,68 @@ mod tests {
             assert!(checks.iter().any(|c| c.what.contains("prefix cache")));
             assert!(checks.iter().all(|c| c.pass), "{checks:?}");
         }
+    }
+
+    #[test]
+    fn trace_axis_replaces_arrivals_and_names_the_cell() {
+        let s = Scenario::new("t", presets::p4d4(600.0))
+            .requests(40)
+            .seed(7)
+            .axis(Axis::Trace(vec!["none".into(), "synth-8192x256".into()]));
+        let cells = Study::new(s.clone()).cells().unwrap();
+        assert_eq!(cells.len(), 2);
+        assert!(cells[0].trace.is_none(), "'none' keeps the workload");
+        assert_eq!(cells[0].config.name, "4P4D-600W");
+        let ts = cells[1].trace.as_ref().unwrap();
+        assert_eq!(ts.preset, "synth-8192x256");
+        assert!(cells[1].config.name.ends_with("@synth-8192x256"));
+        // Replayed cells really run a different arrival sequence.
+        let study = Study::new(s).run(Some(1)).unwrap();
+        let a0 = study.cells[0].result().unwrap().records[0].arrival;
+        let a1 = study.cells[1].result().unwrap().records[0].arrival;
+        assert_ne!(a0, a1, "trace replay must change the workload");
+        // Bad atoms fail at validation time; trace x burst_factor and
+        // microbench workloads are rejected structurally.
+        let bad = Scenario::new("t", presets::p4d4(600.0))
+            .axis(Axis::Trace(vec!["warp-drive".into()]));
+        assert!(bad.validate().is_err());
+        let burst = Scenario::new("t", presets::p4d4(600.0))
+            .axis(Axis::Trace(vec!["mt-4400x1200".into()]))
+            .axis(Axis::BurstFactor(vec![4.0]));
+        assert!(burst.validate().is_err());
+        let micro = Scenario::new("t", presets::p4d4(600.0))
+            .workload(WorkloadSpec::PrefillMicrobench { input_tokens: 1024 })
+            .axis(Axis::Trace(vec!["mt-4400x1200".into()]));
+        assert!(micro.validate().is_err());
+    }
+
+    #[test]
+    fn tenants_axis_tags_requests_and_summarizes_tiers() {
+        let mix = "chat:0.5:interactive+api:0.3:standard+jobs:0.2:batch:4";
+        let s = Scenario::new("t", presets::p4d4(600.0))
+            .requests(60)
+            .seed(9)
+            .axis(Axis::Tenants(vec!["none".into(), mix.into()]));
+        let study = Study::new(s).run(Some(1)).unwrap();
+        assert_eq!(study.cells.len(), 2);
+        // Untenanted cell: no tenants in config, no per-tier summary.
+        assert!(study.cells[0].config.tenants.is_empty());
+        assert!(study.cells[0].tenants().is_none());
+        assert_eq!(study.cells[0].config.name, "4P4D-600W");
+        // Tenant cell: classes applied (name-sorted), requests tagged,
+        // per-tier summary conserves the request count.
+        let c = &study.cells[1];
+        assert_eq!(c.config.tenants.len(), 3);
+        assert!(c.config.name.ends_with(mix));
+        let tiers = c.tenants().expect("multi-tenant summary");
+        let total: u64 = tiers.iter().map(|t| t.requests).sum();
+        assert_eq!(total, 60);
+        let res = c.result().unwrap();
+        assert!(res.records.iter().any(|r| r.tenant > 0));
+        // Bad atoms fail at validation time.
+        let bad = Scenario::new("t", presets::p4d4(600.0))
+            .axis(Axis::Tenants(vec!["chat:0.4:interactive".into()]));
+        assert!(bad.validate().is_err(), "shares must sum to 1");
     }
 
     #[test]

@@ -331,6 +331,8 @@ fn decode_worker(sh: Arc<Shared>) {
                     input_tokens: group.prompts_len[lane] as u32,
                     output_tokens: group.budgets[lane] as u32,
                     slo: Slo::paper_default(),
+                    tenant: 0,
+                    shed: false,
                 },
                 text: tokenizer::decode(&generated[lane]),
             });

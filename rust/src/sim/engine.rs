@@ -193,6 +193,7 @@ mod tests {
                 input_tokens: 512,
                 output_tokens: 1,
                 slo: Slo::paper_default(),
+                tenant: 0,
             }],
             ..Trace::default()
         };

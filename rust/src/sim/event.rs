@@ -302,6 +302,7 @@ mod tests {
                 input_tokens: 500,
                 output_tokens: 10,
                 slo: crate::types::Slo::paper_default(),
+                tenant: 0,
             },
             prefill_start: 0,
             first_token: 0,

@@ -167,6 +167,7 @@ mod tests {
             input_tokens: input,
             output_tokens: 8,
             slo: Slo::paper_default(),
+            tenant: 0,
         }
     }
 

@@ -86,6 +86,52 @@ impl Cluster {
                 let item = g.dec_pending.pop_front().unwrap();
                 g.dec_active.push(item);
             }
+            // Priority-aware preemption (multi-tenant runs only; with no
+            // tenant classes every tier is standard and the strict
+            // comparison below never fires): when the batch is full and
+            // a strictly higher-priority request waits, swap it in for
+            // the lowest-priority active decode. The preempted item
+            // returns to the pending queue with `tokens_done` preserved
+            // (progress is never lost, like the failure-requeue path)
+            // and keeps its HBM reservation — its KV stays parked
+            // resident until readmission. At most one swap per kick.
+            if n == 0
+                && !self.cfg.tenants.is_empty()
+                && !g.dec_pending.is_empty()
+                && !g.dec_active.is_empty()
+            {
+                let tiers = &self.tenant_tiers;
+                let tier_of = |tenant: u8| {
+                    tiers
+                        .get(tenant as usize)
+                        .copied()
+                        .unwrap_or(crate::workload::tracespec::TIER_STANDARD)
+                };
+                // Best pending: lowest tier number, FIFO among ties.
+                let (promote_idx, promote_tier) = g
+                    .dec_pending
+                    .iter()
+                    .enumerate()
+                    .map(|(i, it)| (i, tier_of(it.req.tenant)))
+                    .min_by_key(|&(i, t)| (t, i))
+                    .unwrap();
+                // Victim: highest tier number; ties break to the last
+                // slot (deterministic).
+                let (victim_idx, victim_tier) = g
+                    .dec_active
+                    .iter()
+                    .enumerate()
+                    .map(|(i, it)| (i, tier_of(it.req.tenant)))
+                    .max_by_key(|&(i, t)| (t, i))
+                    .unwrap();
+                if promote_tier < victim_tier {
+                    let promoted = g.dec_pending.remove(promote_idx).unwrap();
+                    let demoted = g.dec_active.swap_remove(victim_idx);
+                    g.dec_active.push(promoted);
+                    g.dec_pending.push_back(demoted);
+                    self.preempted_by_tier[victim_tier as usize] += 1;
+                }
+            }
         }
         if g.dec_active.is_empty() {
             return;

@@ -71,6 +71,9 @@ pub struct Request {
     pub output_tokens: u32,
     /// SLO this request is judged against (provider tier).
     pub slo: Slo,
+    /// Tenant id: 0 = untenanted, else a 1-based index into the
+    /// config's tenant-class list (see `workload::tracespec`).
+    pub tenant: u8,
 }
 
 impl Request {
@@ -123,6 +126,11 @@ pub struct RequestRecord {
     pub input_tokens: u32,
     pub output_tokens: u32,
     pub slo: Slo,
+    /// Tenant id carried over from the request (0 = untenanted).
+    pub tenant: u8,
+    /// Shed by admission control: accounted (never dropped silently)
+    /// as an SLO-violating record with no service.
+    pub shed: bool,
 }
 
 impl RequestRecord {
@@ -169,6 +177,8 @@ mod tests {
             input_tokens: 100,
             output_tokens: out,
             slo: Slo::paper_default(),
+            tenant: 0,
+            shed: false,
         }
     }
 
@@ -222,6 +232,7 @@ mod tests {
             input_tokens: 4096,
             output_tokens: 128,
             slo: Slo::paper_default(),
+            tenant: 0,
         };
         assert_eq!(r.kv_bytes(131_072), 4096 * 131_072);
     }

@@ -14,6 +14,7 @@ pub mod arrivals;
 pub mod longbench;
 pub mod sonnet;
 pub mod trace;
+pub mod tracespec;
 
 pub use arrivals::{ArrivalProcess, Burstiness};
 pub use trace::{ConvTurn, Trace};
@@ -44,6 +45,7 @@ pub fn build_trace<S: SizeSampler>(
             input_tokens,
             output_tokens,
             slo,
+            tenant: 0,
         });
     }
     Trace { requests, ..Trace::default() }

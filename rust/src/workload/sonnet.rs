@@ -119,6 +119,7 @@ pub fn mixed_phases(seed: u64, spec: MixedPhasesSpec) -> Trace {
             input_tokens,
             output_tokens,
             slo,
+            tenant: 0,
         });
     }
     Trace { requests, ..Trace::default() }

@@ -95,6 +95,7 @@ impl Trace {
                 input_tokens: parse(fields[2])? as u32,
                 output_tokens: parse(fields[3])? as u32,
                 slo: Slo::new(parse(fields[4])?, parse(fields[5])?),
+                tenant: 0,
             });
         }
         Ok(Trace { requests, ..Trace::default() })
@@ -114,6 +115,7 @@ mod tests {
                     input_tokens: 100,
                     output_tokens: 10,
                     slo: Slo::paper_default(),
+                    tenant: 0,
                 },
                 Request {
                     id: RequestId(1),
@@ -121,6 +123,7 @@ mod tests {
                     input_tokens: 200,
                     output_tokens: 20,
                     slo: Slo::paper_default(),
+                    tenant: 0,
                 },
                 Request {
                     id: RequestId(2),
@@ -128,6 +131,7 @@ mod tests {
                     input_tokens: 300,
                     output_tokens: 30,
                     slo: Slo::paper_default(),
+                    tenant: 0,
                 },
             ],
             ..Trace::default()

@@ -1,0 +1,670 @@
+//! Trace-replay workloads and tenant classes (DESIGN.md §15).
+//!
+//! The paper evaluates on Poisson/bursty arrivals with fixed ISL/OSL
+//! mixes; production traffic is trace-shaped — diurnal rate curves,
+//! flash crowds, heavy-tailed length distributions. [`TraceSpec`] is a
+//! deterministic replica of that shape:
+//!
+//! * a **piecewise-constant diurnal curve** ([`RateSegment`]s, cycled)
+//!   that scales the cell's base rate over simulated time;
+//! * an optional **flash crowd** window ([`FlashCrowd`]): between
+//!   `start_s` and `start_s + dur_s` the instantaneous rate is further
+//!   multiplied by `mult`;
+//! * **empirical ISL/OSL distributions** ([`LenBucket`] tables sampled
+//!   seed-stably: pick a bucket by weight, then uniform inside it).
+//!
+//! Arrivals are an *exact* piecewise-constant-rate Poisson process: by
+//! memorylessness, a draw that crosses a rate boundary is discarded and
+//! redrawn from the boundary, so segment rates are honored without
+//! thinning bias. Two presets ship — `mt-4400x1200` (multi-tenant
+//! production mix, mean 4400/1200 ISL/OSL, ±40 % diurnal swing) and
+//! `synth-8192x256` (flat-rate synthetic prefill-heavy stress) — and
+//! load from TOML (`[workload.trace]`) or the compact `trace` scenario
+//! axis atom `<preset>[:flash:<start_s>:<dur_s>:<mult>]` | `none`:
+//!
+//! ```
+//! use rapid::workload::tracespec::TraceSpec;
+//! let ts = TraceSpec::parse_compact("mt-4400x1200:flash:120:60:3").unwrap().unwrap();
+//! assert_eq!(ts.flash.unwrap().mult, 3.0);
+//! assert!(TraceSpec::parse_compact("none").unwrap().is_none());
+//! assert!(TraceSpec::parse_compact("warp:9").is_err());
+//! ```
+//!
+//! [`TenantClass`] models multi-tenant SLO tiers: each class has an
+//! arrival share, a priority tier (interactive/standard/batch) and an
+//! SLO scale (TTFT/TPOT multipliers on the scenario SLO). Requests are
+//! tagged post-build by [`assign_tenants`] from an independent RNG
+//! stream (`fork(3)`), so untenanted traces are bit-identical to the
+//! pre-tenant builders. Shares must sum to 1:
+//!
+//! ```
+//! use rapid::workload::tracespec::TenantClass;
+//! let ts = TenantClass::parse_compact("prime:0.5:interactive+bulk:0.5:batch:2").unwrap();
+//! assert_eq!(ts.len(), 2);
+//! assert_eq!(ts[1].slo_scale, 2.0);
+//! assert!(TenantClass::parse_compact("a:0.9:interactive").is_err()); // shares != 1
+//! assert!(TenantClass::parse_compact("none").unwrap().is_empty());
+//! ```
+
+use crate::types::{Micros, Request, RequestId, Slo};
+use crate::util::rng::Rng;
+use crate::workload::Trace;
+
+/// Priority tiers, ordered: lower value = higher priority.
+pub const TIER_INTERACTIVE: u8 = 0;
+pub const TIER_STANDARD: u8 = 1;
+pub const TIER_BATCH: u8 = 2;
+/// Number of priority tiers.
+pub const N_TIERS: usize = 3;
+
+/// Human name of a tier index.
+pub fn tier_name(tier: u8) -> &'static str {
+    match tier {
+        TIER_INTERACTIVE => "interactive",
+        TIER_STANDARD => "standard",
+        _ => "batch",
+    }
+}
+
+/// Parse a tier name (`interactive` | `standard` | `batch`).
+pub fn parse_tier(s: &str) -> Result<u8, String> {
+    match s {
+        "interactive" => Ok(TIER_INTERACTIVE),
+        "standard" => Ok(TIER_STANDARD),
+        "batch" => Ok(TIER_BATCH),
+        other => Err(format!(
+            "unknown tier '{other}' (interactive | standard | batch)"
+        )),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TraceSpec
+// ---------------------------------------------------------------------------
+
+/// One piecewise-constant segment of the diurnal rate curve.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RateSegment {
+    /// Segment length in seconds.
+    pub dur_s: f64,
+    /// Multiplier on the base rate while the segment is active.
+    pub scale: f64,
+}
+
+/// One empirical length bucket: `weight` probability mass, lengths
+/// uniform in `[lo, hi]` (inclusive).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LenBucket {
+    pub weight: f64,
+    pub lo: u32,
+    pub hi: u32,
+}
+
+/// A flash-crowd window: rate multiplied by `mult` while
+/// `start_s <= t < start_s + dur_s`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FlashCrowd {
+    pub start_s: f64,
+    pub dur_s: f64,
+    pub mult: f64,
+}
+
+/// Deterministic trace-replay spec: diurnal curve + optional flash
+/// crowd + empirical ISL/OSL bucket tables (see module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceSpec {
+    /// Preset name (label in axis coords and config names).
+    pub preset: &'static str,
+    /// Cycled diurnal rate-scale segments; must be non-empty.
+    pub diurnal: Vec<RateSegment>,
+    /// Input-length (ISL) buckets; weights need not be normalized.
+    pub isl: Vec<LenBucket>,
+    /// Output-length (OSL) buckets.
+    pub osl: Vec<LenBucket>,
+    pub flash: Option<FlashCrowd>,
+}
+
+/// Names accepted by [`TraceSpec::preset`].
+pub const PRESETS: &[&str] = &["mt-4400x1200", "synth-8192x256"];
+
+impl TraceSpec {
+    /// A shipped preset by name (`mt-4400x1200` | `synth-8192x256`).
+    pub fn preset(name: &str) -> Result<TraceSpec, String> {
+        match name {
+            // Multi-tenant production mix: mean ISL ~4400, mean OSL
+            // ~1200, a 6-minute "day" with a ±40% swing around the base
+            // rate (mean scale exactly 1.0 so the long-run rate matches
+            // the cell's base rate).
+            "mt-4400x1200" => Ok(TraceSpec {
+                preset: "mt-4400x1200",
+                diurnal: vec![
+                    RateSegment { dur_s: 90.0, scale: 0.6 },
+                    RateSegment { dur_s: 90.0, scale: 1.0 },
+                    RateSegment { dur_s: 90.0, scale: 1.4 },
+                    RateSegment { dur_s: 90.0, scale: 1.0 },
+                ],
+                isl: vec![
+                    LenBucket { weight: 0.25, lo: 256, hi: 2048 },
+                    LenBucket { weight: 0.45, lo: 2048, hi: 6144 },
+                    LenBucket { weight: 0.30, lo: 6144, hi: 9000 },
+                ],
+                osl: vec![
+                    LenBucket { weight: 0.35, lo: 64, hi: 512 },
+                    LenBucket { weight: 0.40, lo: 512, hi: 2048 },
+                    LenBucket { weight: 0.25, lo: 2048, hi: 2650 },
+                ],
+                flash: None,
+            }),
+            // Flat-rate synthetic prefill-heavy stress: ~8K prompts,
+            // short outputs, no diurnal modulation.
+            "synth-8192x256" => Ok(TraceSpec {
+                preset: "synth-8192x256",
+                diurnal: vec![RateSegment { dur_s: 60.0, scale: 1.0 }],
+                isl: vec![
+                    LenBucket { weight: 0.7, lo: 8192, hi: 8192 },
+                    LenBucket { weight: 0.3, lo: 7168, hi: 9216 },
+                ],
+                osl: vec![LenBucket { weight: 1.0, lo: 128, hi: 384 }],
+                flash: None,
+            }),
+            other => Err(format!(
+                "unknown trace preset '{other}' ({})",
+                PRESETS.join(" | ")
+            )),
+        }
+    }
+
+    /// Parse the compact scenario-axis atom:
+    /// `none` | `<preset>` | `<preset>:flash:<start_s>:<dur_s>:<mult>`.
+    /// `Ok(None)` is the inert comparison cell.
+    pub fn parse_compact(atom: &str) -> Result<Option<TraceSpec>, String> {
+        if atom == "none" {
+            return Ok(None);
+        }
+        let mut parts = atom.splitn(2, ':');
+        let name = parts.next().unwrap_or("");
+        let mut spec = TraceSpec::preset(name)?;
+        if let Some(rest) = parts.next() {
+            let fields: Vec<&str> = rest.split(':').collect();
+            if fields.len() != 4 || fields[0] != "flash" {
+                return Err(format!(
+                    "bad trace atom '{atom}' \
+                     (expect <preset>[:flash:<start_s>:<dur_s>:<mult>])"
+                ));
+            }
+            let num = |s: &str, what: &str| -> Result<f64, String> {
+                s.parse::<f64>()
+                    .map_err(|_| format!("trace atom '{atom}': bad {what} '{s}'"))
+            };
+            let flash = FlashCrowd {
+                start_s: num(fields[1], "flash start_s")?,
+                dur_s: num(fields[2], "flash dur_s")?,
+                mult: num(fields[3], "flash mult")?,
+            };
+            spec = spec.with_flash(flash)?;
+        }
+        Ok(Some(spec))
+    }
+
+    /// Attach a validated flash-crowd window.
+    pub fn with_flash(mut self, flash: FlashCrowd) -> Result<TraceSpec, String> {
+        if flash.start_s < 0.0 || flash.dur_s <= 0.0 {
+            return Err(format!(
+                "flash window start_s {} / dur_s {} must be >= 0 / > 0",
+                flash.start_s, flash.dur_s
+            ));
+        }
+        if flash.mult <= 1.0 {
+            return Err(format!("flash mult {} must be > 1", flash.mult));
+        }
+        self.flash = Some(flash);
+        Ok(self)
+    }
+
+    /// The atom this spec round-trips to (axis labels, config names).
+    pub fn label(&self) -> String {
+        match self.flash {
+            None => self.preset.to_string(),
+            Some(f) => format!(
+                "{}:flash:{}:{}:{}",
+                self.preset, f.start_s, f.dur_s, f.mult
+            ),
+        }
+    }
+
+    fn cycle_s(&self) -> f64 {
+        self.diurnal.iter().map(|s| s.dur_s).sum()
+    }
+
+    /// Instantaneous rate multiplier at simulated time `t_s` (diurnal
+    /// scale × flash multiplier).
+    pub fn scale_at(&self, t_s: f64) -> f64 {
+        let cycle = self.cycle_s();
+        let mut pos = t_s % cycle;
+        let mut scale = self.diurnal[self.diurnal.len() - 1].scale;
+        for seg in &self.diurnal {
+            if pos < seg.dur_s {
+                scale = seg.scale;
+                break;
+            }
+            pos -= seg.dur_s;
+        }
+        if let Some(f) = self.flash {
+            if t_s >= f.start_s && t_s < f.start_s + f.dur_s {
+                scale *= f.mult;
+            }
+        }
+        scale
+    }
+
+    /// Integral of the rate multiplier over `[0, t_s]` — the expected
+    /// arrival count over `[0, t_s]` is `base_qps * integral`.
+    pub fn integrated_scale(&self, t_s: f64) -> f64 {
+        // Walk boundaries; segments are short so this stays cheap for
+        // test-sized horizons.
+        let mut acc = 0.0;
+        let mut t = 0.0;
+        while t < t_s {
+            let b = self.next_boundary(t).min(t_s);
+            acc += self.scale_at(t + (b - t) * 0.5) * (b - t);
+            t = b;
+        }
+        acc
+    }
+
+    /// The first rate boundary strictly after `t_s` (segment edge or
+    /// flash-window edge).
+    fn next_boundary(&self, t_s: f64) -> f64 {
+        let cycle = self.cycle_s();
+        let base = (t_s / cycle).floor() * cycle;
+        let mut next = base + cycle;
+        let mut edge = base;
+        for seg in &self.diurnal {
+            edge += seg.dur_s;
+            if edge > t_s + 1e-9 {
+                next = edge;
+                break;
+            }
+        }
+        if let Some(f) = self.flash {
+            for e in [f.start_s, f.start_s + f.dur_s] {
+                if e > t_s + 1e-9 && e < next {
+                    next = e;
+                }
+            }
+        }
+        next
+    }
+
+    /// Next arrival after `t_us` for a base rate of `base_qps`: exact
+    /// piecewise-constant-rate Poisson via memorylessness (a gap that
+    /// crosses a boundary is redrawn from the boundary).
+    pub fn next_arrival(&self, mut t_us: Micros, base_qps: f64, rng: &mut Rng) -> Micros {
+        loop {
+            let t_s = t_us as f64 / 1e6;
+            let rate = (base_qps * self.scale_at(t_s)).max(1e-9);
+            let boundary = self.next_boundary(t_s);
+            let gap_s = rng.exponential(rate);
+            if t_s + gap_s < boundary {
+                return t_us + ((gap_s * 1e6).max(1.0)) as Micros;
+            }
+            t_us = ((boundary * 1e6).ceil() as Micros).max(t_us + 1);
+        }
+    }
+
+    /// Build an `n`-request trace at base rate `base_qps` (node-level
+    /// QPS). RNG forks match the other builders: `fork(1)` arrivals,
+    /// `fork(2)` sizes.
+    pub fn build(&self, seed: u64, base_qps: f64, n: usize, slo: Slo) -> Trace {
+        let mut root = Rng::new(seed);
+        let mut arrivals = root.fork(1);
+        let mut sizes = root.fork(2);
+        let mut requests = Vec::with_capacity(n);
+        let mut t: Micros = 0;
+        for i in 0..n {
+            t = self.next_arrival(t, base_qps, &mut arrivals);
+            let input_tokens = sample_bucket(&self.isl, &mut sizes);
+            let output_tokens = sample_bucket(&self.osl, &mut sizes);
+            requests.push(Request {
+                id: RequestId(i as u64),
+                arrival: t,
+                input_tokens,
+                output_tokens,
+                slo,
+                tenant: 0,
+            });
+        }
+        Trace { requests, ..Trace::default() }
+    }
+
+    /// Structural checks shared by the TOML and axis loaders.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.diurnal.is_empty() || self.cycle_s() <= 0.0 {
+            return Err("trace diurnal curve must have positive total duration".into());
+        }
+        for tbl in [&self.isl, &self.osl] {
+            if tbl.is_empty() || tbl.iter().map(|b| b.weight).sum::<f64>() <= 0.0 {
+                return Err("trace length buckets must carry positive weight".into());
+            }
+            for b in tbl {
+                if b.lo == 0 || b.hi < b.lo {
+                    return Err(format!("bad length bucket [{}, {}]", b.lo, b.hi));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Weighted-bucket empirical sampler: pick a bucket proportional to its
+/// weight, then uniform in `[lo, hi]`.
+fn sample_bucket(buckets: &[LenBucket], rng: &mut Rng) -> u32 {
+    let total: f64 = buckets.iter().map(|b| b.weight).sum();
+    let target = rng.f64() * total;
+    let mut acc = 0.0;
+    let mut chosen = &buckets[buckets.len() - 1];
+    for b in buckets {
+        acc += b.weight;
+        if acc >= target {
+            chosen = b;
+            break;
+        }
+    }
+    if chosen.hi == chosen.lo {
+        chosen.lo
+    } else {
+        chosen.lo + rng.range_u64(0, (chosen.hi - chosen.lo + 1) as u64) as u32
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tenant classes
+// ---------------------------------------------------------------------------
+
+/// One tenant class: arrival share, priority tier, SLO scale. Tenant
+/// ids on [`Request`] are 1-based indexes into the class list (0 =
+/// untenanted).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantClass {
+    pub name: String,
+    /// Fraction of arrivals assigned to this class; shares sum to 1.
+    pub share: f64,
+    /// [`TIER_INTERACTIVE`] | [`TIER_STANDARD`] | [`TIER_BATCH`].
+    pub tier: u8,
+    /// TTFT/TPOT multiplier on the scenario SLO (1.0 = unchanged).
+    pub slo_scale: f64,
+}
+
+impl TenantClass {
+    /// Parse the compact tenants atom: `none` (empty set) or `+`-joined
+    /// `name:share:tier[:slo_scale]` entries. Shares must sum to 1.
+    pub fn parse_compact(atom: &str) -> Result<Vec<TenantClass>, String> {
+        if atom == "none" {
+            return Ok(Vec::new());
+        }
+        let mut classes = Vec::new();
+        for entry in atom.split('+') {
+            let fields: Vec<&str> = entry.split(':').collect();
+            if fields.len() < 3 || fields.len() > 4 {
+                return Err(format!(
+                    "bad tenant entry '{entry}' (expect name:share:tier[:slo_scale])"
+                ));
+            }
+            let share = fields[1]
+                .parse::<f64>()
+                .map_err(|_| format!("tenant '{}': bad share '{}'", fields[0], fields[1]))?;
+            let tier = parse_tier(fields[2])?;
+            let slo_scale = match fields.get(3) {
+                Some(s) => s.parse::<f64>().map_err(|_| {
+                    format!("tenant '{}': bad slo_scale '{s}'", fields[0])
+                })?,
+                None => 1.0,
+            };
+            classes.push(TenantClass {
+                name: fields[0].to_string(),
+                share,
+                tier,
+                slo_scale,
+            });
+        }
+        validate_tenants(&classes)?;
+        Ok(classes)
+    }
+
+    /// The atom a class list round-trips to.
+    pub fn label(classes: &[TenantClass]) -> String {
+        if classes.is_empty() {
+            return "none".into();
+        }
+        classes
+            .iter()
+            .map(|c| format!("{}:{}:{}:{}", c.name, c.share, tier_name(c.tier), c.slo_scale))
+            .collect::<Vec<_>>()
+            .join("+")
+    }
+}
+
+/// Structural checks on a tenant-class list: unique names, positive
+/// shares summing to 1 (±1e-6), positive SLO scales.
+pub fn validate_tenants(classes: &[TenantClass]) -> Result<(), String> {
+    if classes.is_empty() {
+        return Ok(());
+    }
+    let mut sum = 0.0;
+    for (i, c) in classes.iter().enumerate() {
+        if c.name.is_empty() {
+            return Err("tenant name must be non-empty".into());
+        }
+        if classes[..i].iter().any(|o| o.name == c.name) {
+            return Err(format!("duplicate tenant '{}'", c.name));
+        }
+        if c.share <= 0.0 || c.share > 1.0 {
+            return Err(format!("tenant '{}' share {} must be in (0, 1]", c.name, c.share));
+        }
+        if c.slo_scale <= 0.0 {
+            return Err(format!(
+                "tenant '{}' slo_scale {} must be > 0",
+                c.name, c.slo_scale
+            ));
+        }
+        if c.tier as usize >= N_TIERS {
+            return Err(format!("tenant '{}' tier {} out of range", c.name, c.tier));
+        }
+        sum += c.share;
+    }
+    if (sum - 1.0).abs() > 1e-6 {
+        return Err(format!("tenant shares sum to {sum}, must sum to 1"));
+    }
+    Ok(())
+}
+
+/// Tenant-id → tier lookup table: index 0 is the untenanted default
+/// (standard), index `i+1` is class `i`'s tier.
+pub fn tier_table(classes: &[TenantClass]) -> Vec<u8> {
+    let mut t = Vec::with_capacity(classes.len() + 1);
+    t.push(TIER_STANDARD);
+    t.extend(classes.iter().map(|c| c.tier));
+    t
+}
+
+/// Tag every request with a tenant id drawn by share and scale its SLO
+/// by the class's `slo_scale`. Uses an independent RNG stream
+/// (`fork(3)`), so traces built without tenants are untouched and
+/// bit-identical to the pre-tenant builders.
+pub fn assign_tenants(trace: &mut Trace, classes: &[TenantClass], seed: u64) {
+    if classes.is_empty() {
+        return;
+    }
+    let mut root = Rng::new(seed);
+    let mut rng = root.fork(3);
+    for req in &mut trace.requests {
+        let u = rng.f64();
+        let mut acc = 0.0;
+        let mut idx = classes.len() - 1;
+        for (i, c) in classes.iter().enumerate() {
+            acc += c.share;
+            if u < acc {
+                idx = i;
+                break;
+            }
+        }
+        req.tenant = (idx + 1) as u8;
+        if classes[idx].slo_scale != 1.0 {
+            req.slo = req.slo.scaled(classes[idx].slo_scale);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate_and_mean_lengths_match_names() {
+        for &name in PRESETS {
+            let spec = TraceSpec::preset(name).unwrap();
+            spec.validate().unwrap();
+            let trace = spec.build(7, 20.0, 4000, Slo::paper_default());
+            let mean_in: f64 = trace.requests.iter().map(|r| r.input_tokens as f64).sum::<f64>()
+                / trace.len() as f64;
+            let mean_out: f64 = trace.requests.iter().map(|r| r.output_tokens as f64).sum::<f64>()
+                / trace.len() as f64;
+            let (want_in, want_out) = match name {
+                "mt-4400x1200" => (4400.0, 1200.0),
+                _ => (8192.0, 256.0),
+            };
+            assert!((mean_in / want_in - 1.0).abs() < 0.1, "{name} ISL mean {mean_in}");
+            assert!((mean_out / want_out - 1.0).abs() < 0.1, "{name} OSL mean {mean_out}");
+        }
+        assert!(TraceSpec::preset("nope").is_err());
+    }
+
+    #[test]
+    fn long_run_arrivals_match_integrated_rate() {
+        // Satellite property: arrival count over [0, T] tracks
+        // base_qps * integrated_scale(T) for the diurnal curve.
+        let spec = TraceSpec::preset("mt-4400x1200").unwrap();
+        let trace = spec.build(3, 30.0, 6000, Slo::paper_default());
+        let t_end = trace.requests.last().unwrap().arrival as f64 / 1e6;
+        let expected = 30.0 * spec.integrated_scale(t_end);
+        let got = trace.len() as f64;
+        assert!(
+            (got / expected - 1.0).abs() < 0.08,
+            "got {got} arrivals, integrated curve expects {expected:.0}"
+        );
+    }
+
+    #[test]
+    fn flash_crowd_rate_exceeds_base() {
+        let spec = TraceSpec::preset("synth-8192x256")
+            .unwrap()
+            .with_flash(FlashCrowd { start_s: 50.0, dur_s: 50.0, mult: 4.0 })
+            .unwrap();
+        let trace = spec.build(11, 10.0, 4000, Slo::paper_default());
+        let count_in = |lo: f64, hi: f64| {
+            trace
+                .requests
+                .iter()
+                .filter(|r| {
+                    let t = r.arrival as f64 / 1e6;
+                    t >= lo && t < hi
+                })
+                .count() as f64
+        };
+        let flash_rate = count_in(50.0, 100.0) / 50.0;
+        let base_rate = count_in(0.0, 50.0) / 50.0;
+        assert!(
+            flash_rate > base_rate * 2.0,
+            "flash {flash_rate}/s vs base {base_rate}/s"
+        );
+        // And the instantaneous multiplier reflects the window.
+        assert_eq!(spec.scale_at(75.0), 4.0);
+        assert_eq!(spec.scale_at(150.0), 1.0);
+    }
+
+    #[test]
+    fn sampling_is_seed_stable() {
+        let spec = TraceSpec::parse_compact("mt-4400x1200:flash:30:30:2")
+            .unwrap()
+            .unwrap();
+        let a = spec.build(9, 12.0, 500, Slo::paper_default());
+        let b = spec.build(9, 12.0, 500, Slo::paper_default());
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.input_tokens, y.input_tokens);
+            assert_eq!(x.output_tokens, y.output_tokens);
+        }
+        let c = spec.build(10, 12.0, 500, Slo::paper_default());
+        assert_ne!(a.requests[0].arrival, c.requests[0].arrival);
+    }
+
+    #[test]
+    fn compact_atoms_round_trip_and_reject_garbage() {
+        let ts = TraceSpec::parse_compact("mt-4400x1200").unwrap().unwrap();
+        assert_eq!(ts.label(), "mt-4400x1200");
+        let ts = TraceSpec::parse_compact("synth-8192x256:flash:120:60:3").unwrap().unwrap();
+        assert_eq!(ts.label(), "synth-8192x256:flash:120:60:3");
+        assert!(TraceSpec::parse_compact("none").unwrap().is_none());
+        for bad in [
+            "nope",
+            "mt-4400x1200:flash:1:2",
+            "mt-4400x1200:surge:1:2:3",
+            "mt-4400x1200:flash:a:2:3",
+            "mt-4400x1200:flash:10:0:3",
+            "mt-4400x1200:flash:10:10:1",
+        ] {
+            assert!(TraceSpec::parse_compact(bad).is_err(), "{bad} should fail");
+        }
+    }
+
+    #[test]
+    fn tenant_atoms_validate_shares() {
+        let ts =
+            TenantClass::parse_compact("prime:0.5:interactive+std:0.3:standard+bulk:0.2:batch")
+                .unwrap();
+        assert_eq!(ts.len(), 3);
+        assert_eq!(ts[0].tier, TIER_INTERACTIVE);
+        assert_eq!(ts[2].tier, TIER_BATCH);
+        assert_eq!(ts[1].slo_scale, 1.0);
+        assert_eq!(tier_table(&ts), vec![TIER_STANDARD, 0, 1, 2]);
+        for bad in [
+            "a:0.5:interactive",                   // shares sum to 0.5
+            "a:0.6:interactive+b:0.6:batch",       // sum to 1.2
+            "a:0.5:interactive+a:0.5:batch",       // duplicate name
+            "a:0.5:warp+b:0.5:batch",              // unknown tier
+            "a:0.5:interactive:0+b:0.5:batch",     // slo_scale <= 0
+            "a:x:interactive+b:0.5:batch",         // bad share
+            "a:0.5",                               // too few fields
+        ] {
+            assert!(TenantClass::parse_compact(bad).is_err(), "{bad} should fail");
+        }
+    }
+
+    #[test]
+    fn assign_tenants_tags_by_share_and_scales_slo() {
+        let classes =
+            TenantClass::parse_compact("prime:0.5:interactive:0.5+bulk:0.5:batch:2").unwrap();
+        let spec = TraceSpec::preset("synth-8192x256").unwrap();
+        let mut trace = spec.build(5, 20.0, 2000, Slo::paper_default());
+        assign_tenants(&mut trace, &classes, 5);
+        let n1 = trace.requests.iter().filter(|r| r.tenant == 1).count();
+        let n2 = trace.requests.iter().filter(|r| r.tenant == 2).count();
+        assert_eq!(n1 + n2, trace.len(), "every request tagged");
+        let frac = n1 as f64 / trace.len() as f64;
+        assert!((frac - 0.5).abs() < 0.05, "share ~0.5, got {frac}");
+        let base = Slo::paper_default();
+        for r in &trace.requests {
+            if r.tenant == 1 {
+                assert_eq!(r.slo.ttft, base.ttft / 2);
+            } else {
+                assert_eq!(r.slo.ttft, base.ttft * 2);
+            }
+        }
+        // Deterministic across calls.
+        let mut again = spec.build(5, 20.0, 2000, Slo::paper_default());
+        assign_tenants(&mut again, &classes, 5);
+        for (a, b) in trace.requests.iter().zip(&again.requests) {
+            assert_eq!(a.tenant, b.tenant);
+        }
+    }
+}

@@ -1,0 +1,179 @@
+//! Multi-tenant workload integration tests (ISSUE-8 acceptance
+//! criteria, DESIGN.md §15).
+//!
+//! * **Golden inertness**: the shipped configs declare no `[tenant.*]`
+//!   or `[admission]` tables, so tenancy must stay fully inert — no
+//!   per-tier summary, no shed records, untagged requests — and runs
+//!   stay deterministic to the bit on `rapid-600.toml`.
+//! * **`scenarios/flash-crowd-curtail.toml`**: the shipped trace-replay
+//!   study runs end to end, conserves every request (shed arrivals are
+//!   accounted as SLO-violation records, never dropped), keeps
+//!   interactive attainment >= batch once prioritization fires, and
+//!   the study-level check holds rapid >= static goodput under the
+//!   curtailment window.
+//! * **Admission shedding**: a queue-depth policy under overload sheds
+//!   work lowest-tier-first while the record count still matches the
+//!   trace length exactly.
+//! * **Decode preemption**: with tenant classes and saturated decode
+//!   batches, higher-tier requests displace batch-tier decodes;
+//!   preempted work still completes (conservation) because its
+//!   `tokens_done` progress is preserved across the swap.
+
+use rapid::config::ClusterConfig;
+use rapid::scenario::{Scenario, Study};
+use rapid::sim::{self, SimOptions};
+use rapid::types::Slo;
+use rapid::workload::tracespec::{
+    assign_tenants, TraceSpec, TIER_BATCH, TIER_INTERACTIVE,
+};
+
+#[path = "support/mod.rs"]
+mod support;
+use support::{assert_bit_identical, shipped_config};
+
+/// A tenant-tagged trace at `qps_per_gpu` x 8 GPUs: half interactive,
+/// 30% standard, 20% batch at a relaxed SLO.
+fn tenant_config_and_trace(
+    extra: &str,
+    qps_per_gpu: f64,
+    n: usize,
+) -> (ClusterConfig, rapid::workload::Trace) {
+    let toml = format!(
+        "preset = \"rapid-600\"\n\
+         [tenant.chat]\nshare = 0.5\ntier = \"interactive\"\n\
+         [tenant.api]\nshare = 0.3\ntier = \"standard\"\n\
+         [tenant.jobs]\nshare = 0.2\ntier = \"batch\"\nslo_scale = 4.0\n\
+         {extra}"
+    );
+    let cfg = ClusterConfig::from_toml(&toml).expect("tenant config parses");
+    let spec = TraceSpec::preset("mt-4400x1200").unwrap();
+    let qps = qps_per_gpu * cfg.n_gpus as f64;
+    let mut trace = spec.build(7, qps, n, Slo::paper_default());
+    assign_tenants(&mut trace, &cfg.tenants, 7);
+    (cfg, trace)
+}
+
+#[test]
+fn untenanted_shipped_config_stays_inert_and_deterministic() {
+    let cfg = shipped_config("rapid-600.toml");
+    assert!(cfg.tenants.is_empty(), "shipped configs declare no tenants");
+    let spec = TraceSpec::preset("synth-8192x256").unwrap();
+    let trace = spec.build(3, 10.0, 150, Slo::paper_default());
+    let a = sim::run(&cfg, &trace, &SimOptions::default());
+    let b = sim::run(&cfg, &trace, &SimOptions::default());
+    assert_bit_identical(&a, &b);
+    // No tenancy artifacts anywhere: untagged records, no shed, no
+    // per-tier summary, no preemptions.
+    assert!(a.records.iter().all(|r| r.tenant == 0 && !r.shed));
+    assert!(a.summary().tenants.is_none());
+    assert_eq!(a.preempted_by_tier, [0, 0, 0]);
+    assert!(a.tenant_tiers.is_empty());
+}
+
+#[test]
+fn flash_crowd_curtail_scenario_end_to_end() {
+    let path = format!(
+        "{}/scenarios/flash-crowd-curtail.toml",
+        env!("CARGO_MANIFEST_DIR")
+    );
+    let scenario = Scenario::from_toml_file(&path).expect("shipped scenario parses");
+    assert!(scenario.trace.is_some());
+    assert_eq!(scenario.base.tenants.len(), 3);
+    let study = Study::new(scenario).run(Some(2)).expect("study runs");
+    assert_eq!(study.cells.len(), 2, "static and rapid cells");
+    for cell in &study.cells {
+        let res = cell.result().expect("sim cell");
+        // Zero requests lost: shed arrivals become records too.
+        assert_eq!(res.records.len(), study.scenario.requests);
+        let tiers = cell.tenants().expect("per-tier summary");
+        let total: u64 = tiers.iter().map(|t| t.requests).sum();
+        assert_eq!(total as usize, study.scenario.requests);
+        assert!(
+            cell.checks.iter().all(|c| c.pass),
+            "cell {:?} checks: {:?}",
+            cell.coords,
+            cell.checks
+        );
+        // The tier contract, asserted directly as well as via the
+        // ShapeCheck: once shedding/preemption fired, interactive
+        // must attain at least what batch attains.
+        let shed: u64 = tiers.iter().map(|t| t.shed).sum();
+        let preempted: u64 = tiers.iter().map(|t| t.preempted).sum();
+        if shed + preempted > 0 {
+            assert!(
+                tiers[TIER_INTERACTIVE as usize].attainment + 1e-9
+                    >= tiers[TIER_BATCH as usize].attainment,
+                "interactive {:?} vs batch {:?}",
+                tiers[TIER_INTERACTIVE as usize],
+                tiers[TIER_BATCH as usize]
+            );
+        }
+    }
+    // Study-level tentpole claim: rapid >= static goodput under the
+    // pure-curtailment profile.
+    let study_checks = study.study_checks();
+    assert!(
+        study_checks.iter().any(|c| c.what.contains("static")),
+        "{study_checks:?}"
+    );
+    assert!(
+        study_checks.iter().all(|c| c.pass),
+        "{study_checks:?}"
+    );
+}
+
+#[test]
+fn queue_depth_admission_sheds_lowest_tier_first() {
+    let (cfg, trace) =
+        tenant_config_and_trace("[admission]\nmode = \"queue-depth\"\nqueue_depth = 4\n", 6.0, 400);
+    let res = sim::run(&cfg, &trace, &SimOptions::default());
+    // Conservation: every arrival is a record, shed or finished.
+    assert_eq!(res.records.len(), trace.len());
+    let tiers = res.summary().tenants.expect("per-tier summary");
+    let shed: u64 = tiers.iter().map(|t| t.shed).sum();
+    assert!(shed > 0, "overload at 6 qps/GPU with depth 4 must shed");
+    assert_eq!(
+        res.records.iter().filter(|r| r.shed).count() as u64,
+        shed,
+        "summary shed matches the flagged records"
+    );
+    // Lowest tier first: batch sheds at least the interactive rate
+    // (queue-depth thresholds are 4x apart), and the attainment order
+    // follows.
+    let b = &tiers[TIER_BATCH as usize];
+    let i = &tiers[TIER_INTERACTIVE as usize];
+    assert!(b.requests > 0 && i.requests > 0);
+    assert!(
+        b.shed as f64 / b.requests as f64 >= i.shed as f64 / i.requests as f64,
+        "batch shed rate {}/{} vs interactive {}/{}",
+        b.shed,
+        b.requests,
+        i.shed,
+        i.requests
+    );
+    assert!(i.attainment + 1e-9 >= b.attainment);
+}
+
+#[test]
+fn decode_preemption_promotes_interactive_over_batch() {
+    // No admission table: overload pressure lands entirely on the
+    // decode batches, so the preemption path (not shedding) is what
+    // prioritizes the interactive tier here.
+    let (cfg, trace) = tenant_config_and_trace("", 8.0, 300);
+    let res = sim::run(&cfg, &trace, &SimOptions::default());
+    assert_eq!(res.records.len(), trace.len(), "preemption never loses work");
+    assert!(res.records.iter().all(|r| !r.shed));
+    let preempted: u64 = res.preempted_by_tier.iter().sum();
+    assert!(
+        preempted > 0,
+        "saturated decode batches with mixed tiers must preempt"
+    );
+    // Only lower tiers are ever victims: an interactive decode cannot
+    // be displaced (the swap requires promote_tier < victim_tier).
+    assert_eq!(res.preempted_by_tier[TIER_INTERACTIVE as usize], 0);
+    let tiers = res.summary().tenants.expect("per-tier summary");
+    assert!(
+        tiers[TIER_INTERACTIVE as usize].attainment + 1e-9
+            >= tiers[TIER_BATCH as usize].attainment
+    );
+}
