@@ -22,7 +22,7 @@ use crate::sim::{self, SimOptions};
 use crate::types::{GpuId, Request, RequestId, Slo, SECOND};
 use crate::util::rng::Rng;
 use crate::util::stats::{percentile, LatencyHistogram, SlidingWindow};
-use crate::workload::{build_trace, sonnet::Sonnet, ArrivalProcess};
+use crate::workload::{build_trace, longbench::LongBench, sonnet::Sonnet, ArrivalProcess};
 
 /// Name of the whole-sim case (`per_sec` = simulated events/second) —
 /// the headline number `BENCH_hotpath.json` tracks across PRs.
@@ -323,6 +323,78 @@ pub fn run_suite(cfg: &SuiteConfig) -> BenchReport {
         }));
     }
 
+    // --- slab request-store churn ----------------------------------------
+    if cfg.wants("cluster/slab_churn") {
+        use crate::cluster::store::{ReqState, RequestStore};
+        // One insert + one oldest-remove per iteration with ~32 resident
+        // — the arrival/completion cadence the generational slab pays on
+        // every request lifecycle. Must stay allocation-free (free-list
+        // reuse) and O(1) despite the ABA generation checks.
+        let req = Request {
+            id: RequestId(0),
+            arrival: 0,
+            input_tokens: 1024,
+            output_tokens: 64,
+            slo: Slo::paper_default(),
+            tenant: 0,
+        };
+        let mut store = RequestStore::with_capacity(64);
+        let mut slots: VecDeque<_> =
+            (0..32).map(|_| store.insert(ReqState::new(req))).collect();
+        push(bench("cluster/slab_churn", cfg.target_ms, cfg.max_iters, || {
+            slots.push_back(store.insert(ReqState::new(req)));
+            let old = slots.pop_front().unwrap();
+            std::hint::black_box(store.remove(old).tokens_done);
+        }));
+    }
+
+    // --- study-cell trace construction -----------------------------------
+    if cfg.wants("workload/trace_expand_mt") {
+        // What one arena miss costs: LongBench sampling plus the
+        // multi-turn rewrite — the work `Study::run` now does once per
+        // unique trace fingerprint instead of once per cell. `batch` is
+        // the request count, so `per_sec` reads as requests expanded/s.
+        const N: usize = 400;
+        push(bench_batch(
+            "workload/trace_expand_mt",
+            N,
+            cfg.target_ms,
+            cfg.max_iters.min(2000),
+            || {
+                let mut root = Rng::new(11);
+                let mut ap = ArrivalProcess::poisson(root.fork(1), 12.0);
+                let mut sizes = LongBench::new(root.fork(2));
+                let mut trace = build_trace(N, &mut ap, &mut sizes, Slo::paper_default());
+                crate::workload::make_multiturn(&mut trace, 4, 0.6);
+                std::hint::black_box(trace.len());
+            },
+        ));
+    }
+
+    // --- whole-study throughput ------------------------------------------
+    if cfg.wants("study/cells_per_sec") {
+        // A 2x2 policy x rate grid on rapid-600 through the shared trace
+        // arena, serial. `per_sec` is study cells per second — the
+        // headline number for study-scale refactors, reported alongside
+        // events/s in the CI perf-gate summary.
+        use crate::scenario::{Axis, Scenario, Study};
+        let scen = Scenario::new("bench-cells", presets::rapid_600())
+            .requests(cfg.sim_requests.min(120))
+            .seed(3)
+            .axis(Axis::Policy(vec![ControlPolicy::Static, ControlPolicy::DynPowerGpu]))
+            .axis(Axis::RatePerGpu(vec![1.0, 1.5]));
+        let study = Study::new(scen);
+        push(bench_batch(
+            "study/cells_per_sec",
+            4,
+            cfg.target_ms * 5,
+            cfg.max_iters.min(500),
+            || {
+                std::hint::black_box(study.run(Some(1)).unwrap().cells.len());
+            },
+        ));
+    }
+
     // --- end-to-end sim throughput -------------------------------------
     if cfg.wants(WHOLE_SIM) {
         let sim_cfg = presets::rapid_600();
@@ -421,6 +493,15 @@ mod tests {
         let rep = run_suite(&tiny("env/event_apply"));
         let t = rep.entry("env/event_apply").expect("env entry");
         assert!(t.iters >= 3 && t.mean_us >= 0.0);
+    }
+
+    #[test]
+    fn study_scale_cases_run() {
+        for name in ["cluster/slab_churn", "workload/trace_expand_mt", "study/cells_per_sec"] {
+            let rep = run_suite(&tiny(name));
+            let t = rep.entry(name).unwrap_or_else(|| panic!("missing {name}"));
+            assert!(t.per_sec() > 0.0, "{name}");
+        }
     }
 
     #[test]

@@ -22,9 +22,10 @@
 //! recovery (or is recorded as an SLO violation at the hard stop).
 
 use crate::env::{CapScope, EnvDisturbance};
-use crate::sim::event::{DecodeItem, Event};
+use crate::sim::event::Event;
 use crate::sim::worker;
 use crate::types::{GpuId, Role};
+use crate::util::slab::SlotId;
 
 use super::policy::EnvResponse;
 use super::Cluster;
@@ -97,8 +98,8 @@ impl Cluster {
     /// of the power books, and re-spreads its watts.
     fn fail_gpu(&mut self, gi: usize) {
         let node = self.node_of(gi);
-        let mut reqs: Vec<crate::types::Request> = Vec::new();
-        let mut items: Vec<DecodeItem> = Vec::new();
+        let mut reqs: Vec<SlotId> = Vec::new();
+        let mut items: Vec<SlotId> = Vec::new();
         {
             let g = &mut self.gpus[gi];
             g.failed = true;
@@ -107,13 +108,15 @@ impl Cluster {
             g.busy = false;
             // Prefill-side work: queued, batched mid-flight, and
             // published-but-unsent all lose their (local) KV — the
-            // prompts must be recomputed elsewhere.
+            // prompts must be recomputed elsewhere. (The re-route resets
+            // each slot's progress fields; the slab entry survives.)
             reqs.extend(g.pf_queue.drain(..));
             g.pf_queued_tokens = 0;
-            reqs.extend(g.pf_batch.drain(..).map(|(r, _)| r));
-            reqs.extend(g.publish_wait.drain(..).map(|it| it.req));
-            reqs.extend(g.co_queue.drain(..).map(|c| c.prog.request));
-            reqs.extend(g.co_finishing.drain(..).map(|(r, _)| r));
+            reqs.extend(g.pf_batch.drain(..));
+            reqs.extend(g.publish_wait.drain(..));
+            reqs.extend(g.co_queue.drain(..));
+            g.co_tokens = 0;
+            reqs.extend(g.co_finishing.drain(..));
             // Decode-side work keeps its progress: the KV re-fetches
             // over the ring to a surviving peer.
             items.extend(g.dec_pending.drain(..));
@@ -125,11 +128,11 @@ impl Cluster {
         // Out of the role lists and pick indexes before the requeue
         // loops below route anything.
         self.refresh_worker(gi);
-        for r in reqs {
-            self.route_request(r);
+        for s in reqs {
+            self.route_request(s);
         }
-        for it in items {
-            self.redispatch_decode(gi, node, Some(gi), it);
+        for s in items {
+            self.redispatch_decode(gi, node, Some(gi), s);
         }
         self.power.set_offline(self.now, GpuId(gi), true);
         let settle = self.power.distribute_uniform(self.now);
@@ -155,13 +158,13 @@ impl Cluster {
         self.events.push(settle, Event::PowerPoll);
         self.record_roles();
         let reqs = std::mem::take(&mut self.orphan_reqs);
-        for r in reqs {
-            self.route_request(r);
+        for s in reqs {
+            self.route_request(s);
         }
         let node = self.node_of(gi);
         let items = std::mem::take(&mut self.orphan_items);
-        for it in items {
-            self.redispatch_decode(gi, node, None, it);
+        for s in items {
+            self.redispatch_decode(gi, node, None, s);
         }
         let role = self.gpus[gi].role;
         worker::behavior(role).kick(self, gi);
@@ -189,13 +192,13 @@ impl Cluster {
         via: usize,
         src_node: usize,
         exclude: Option<usize>,
-        item: DecodeItem,
+        slot: SlotId,
     ) {
         // A full ring used to over-commit its slot count here; defer
         // instead (deterministic backpressure) and drain FIFO as slots
         // free in `on_kv_arrive`.
         if self.ring_free(src_node) == 0 {
-            self.retransfer_wait[src_node].push_back((via, item));
+            self.retransfer_wait[src_node].push_back((via, slot));
             return;
         }
         let target = match self.cfg.topology {
@@ -205,7 +208,7 @@ impl Cluster {
             }
         };
         let Some(target) = target else {
-            self.orphan_items.push(item);
+            self.orphan_items.push(slot);
             return;
         };
         // The new host must fit the context (the caller no longer holds
@@ -213,14 +216,14 @@ impl Cluster {
         // item came from the orphan pool). A pool that cannot evict
         // enough parks the item until a completion or recovery retries.
         if self.mem.active() {
-            let bytes = self.kv_bytes_for(target.0, &item);
+            let bytes = self.kv_bytes_for_slot(target.0, slot);
             match self.mem.reserve(target.0, bytes) {
                 Ok(ev) => {
                     self.note_eviction(target.0, ev);
                     self.reindex(target.0);
                 }
                 Err(()) => {
-                    self.orphan_items.push(item);
+                    self.orphan_items.push(slot);
                     return;
                 }
             }
@@ -228,14 +231,15 @@ impl Cluster {
         let same_node = self.node_of(target.0) == src_node;
         // The re-fetch moves the *live* context — prompt plus generated
         // tokens — not just the original prompt KV.
+        let ctx = self.store.get(slot).ctx_tokens();
         let t = self
             .fleet
-            .kv_transfer_time_between(via, target.0, item.ctx_tokens(), same_node);
+            .kv_transfer_time_between(via, target.0, ctx, same_node);
         self.ring_used[src_node] += 1; // the re-transfer occupies a slot
         debug_assert!(self.ring_used[src_node] <= self.cfg.batch.ring_slots);
         self.events.push(
             self.now + t,
-            Event::KvArrive { gpu: target.0, src_node, item },
+            Event::KvArrive { gpu: target.0, src_node, slot },
         );
     }
 

@@ -36,8 +36,10 @@
 pub mod admission;
 pub mod env;
 pub mod policy;
+pub mod store;
 
 use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
 
 use crate::config::ClusterConfig;
 use crate::coordinator::router::{self, LoadIndex, LoadKey, WorkerLoad};
@@ -48,14 +50,62 @@ use crate::mem::MemState;
 use crate::metrics::RunResult;
 use crate::power::{PowerManager, PowerModel};
 use crate::sim::engine::SimOptions;
-use crate::sim::event::{DecodeItem, Event, EventQueue};
+use crate::sim::event::{Event, EventQueue};
 use crate::sim::gpu::GpuSim;
 use crate::sim::worker;
 use crate::types::{GpuId, Micros, Request, RequestRecord, Role, SECOND};
+use crate::util::slab::SlotId;
 use crate::util::stats::TimeSeries;
 use crate::workload::Trace;
 
 use policy::Policy;
+use store::{ReqState, RequestStore};
+
+/// Struct-of-arrays mirror of the per-GPU fields the controller reads
+/// every tick. `snapshot()`, the tick TTFT projection and the router's
+/// load fills walk these flat vectors instead of hopping across
+/// `GpuSim` structs (each several cache lines wide); the arrays are
+/// kept coherent at the same choke points that maintain the
+/// [`LoadIndex`] (`reindex`/`sync_hot`), and debug builds re-derive
+/// every field from the live `GpuSim`s each tick and assert equality.
+pub(crate) struct HotState {
+    /// Current role (`GpuSim::role`).
+    pub role: Vec<Role>,
+    /// Committed role (drain target while draining).
+    pub committed: Vec<Role>,
+    pub failed: Vec<bool>,
+    pub accepting: Vec<bool>,
+    pub pf_len: Vec<u32>,
+    pub co_len: Vec<u32>,
+    pub dec_pending_len: Vec<u32>,
+    pub dec_active_len: Vec<u32>,
+    pub pf_tokens: Vec<u64>,
+    pub co_tokens: Vec<u64>,
+    /// Arrival of the head queued prompt (prefill queue, or chunk queue
+    /// on coalesced GPUs); `u64::MAX` when the queue is empty.
+    pub head_arrival: Vec<Micros>,
+    /// TTFT SLO of the head queued prompt (µs; 1 when empty).
+    pub head_ttft: Vec<Micros>,
+}
+
+impl HotState {
+    fn new(total: usize) -> Self {
+        HotState {
+            role: vec![Role::Decode; total],
+            committed: vec![Role::Decode; total],
+            failed: vec![false; total],
+            accepting: vec![true; total],
+            pf_len: vec![0; total],
+            co_len: vec![0; total],
+            dec_pending_len: vec![0; total],
+            dec_active_len: vec![0; total],
+            pf_tokens: vec![0; total],
+            co_tokens: vec![0; total],
+            head_arrival: vec![u64::MAX; total],
+            head_ttft: vec![1; total],
+        }
+    }
+}
 
 /// The cluster simulation state. Fields are `pub(crate)` so the role
 /// behaviors in `sim::worker` can operate on it directly.
@@ -66,9 +116,16 @@ pub struct Cluster {
     pub(crate) power: PowerManager,
     pub(crate) policy: Box<dyn Policy>,
     pub(crate) gpus: Vec<GpuSim>,
+    /// Slab of in-flight request state; queues and events carry
+    /// [`SlotId`]s into this store (see [`store`]).
+    pub(crate) store: RequestStore,
+    /// Per-GPU hot-field mirror for the tick-rate readers.
+    pub(crate) hot: HotState,
     pub(crate) events: EventQueue,
     pub(crate) now: Micros,
-    pub(crate) trace: Vec<Request>,
+    /// Shared immutable workload: study cells borrow one arena-built
+    /// trace instead of cloning it per cell (an `Arc` bump).
+    pub(crate) trace: Arc<Trace>,
     pub(crate) next_arrival: usize,
     pub(crate) records: Vec<RequestRecord>,
     /// KV ring occupancy per node (slots in flight between prefill and
@@ -84,8 +141,8 @@ pub struct Cluster {
     pub(crate) budget_trace: Vec<(Micros, f64)>,
     /// Work stranded when every eligible GPU was down; re-routed on the
     /// next recovery (or recorded as violations at the hard stop).
-    pub(crate) orphan_reqs: Vec<Request>,
-    pub(crate) orphan_items: Vec<DecodeItem>,
+    pub(crate) orphan_reqs: Vec<SlotId>,
+    pub(crate) orphan_items: Vec<SlotId>,
     /// KV memory subsystem: per-GPU HBM pools, tiered offload and the
     /// prefix cache (DESIGN.md §14). Inert unless `[mem]` is configured.
     pub(crate) mem: MemState,
@@ -93,8 +150,8 @@ pub struct Cluster {
     /// transform: request id → (conversation id, reusable prefix tokens).
     pub(crate) conv_of: HashMap<u64, (u64, u32)>,
     /// Per-node KV re-transfers deferred because the ring was full,
-    /// (via GPU, item); drained FIFO as slots free in `on_kv_arrive`.
-    pub(crate) retransfer_wait: Vec<VecDeque<(usize, DecodeItem)>>,
+    /// (via GPU, slot); drained FIFO as ring slots free in `on_kv_arrive`.
+    pub(crate) retransfer_wait: Vec<VecDeque<(usize, SlotId)>>,
     /// Fleet-max HBM occupancy per telemetry sample (the series the
     /// "resident KV <= HBM capacity" ShapeCheck walks).
     pub(crate) mem_trace: Vec<(Micros, f64)>,
@@ -134,15 +191,22 @@ pub struct Cluster {
     /// Router view buffer, refilled per routing decision.
     scratch_loads: Vec<WorkerLoad>,
     /// Prefill batch formation buffer (`kick_prefill`).
-    pub(crate) scratch_batch: Vec<Request>,
+    pub(crate) scratch_batch: Vec<SlotId>,
     /// Finished-decode buffer (`on_decode_step` / `on_coalesced_step`).
-    pub(crate) scratch_done: Vec<DecodeItem>,
+    pub(crate) scratch_done: Vec<SlotId>,
     /// Per-node power accumulation buffer (`on_sample`).
     scratch_node_w: Vec<f64>,
+    /// Set once the run is over (records complete, hard stop passed or
+    /// the event queue drained); `step_events` then refuses to proceed.
+    done: bool,
+    /// `RAPID_DEBUG_TICKS` looked up once at construction — an env::var
+    /// probe per tick allocates, which the steady-state allocation test
+    /// forbids.
+    debug_ticks: bool,
 }
 
 impl Cluster {
-    pub fn new(cfg: ClusterConfig, trace: Trace, opts: SimOptions) -> Self {
+    pub fn new(cfg: ClusterConfig, trace: Arc<Trace>, opts: SimOptions) -> Self {
         let fleet = Fleet::of_config(&cfg);
         let total = cfg.total_gpus();
         // Initial caps: the role's configured cap, clamped into each
@@ -191,9 +255,13 @@ impl Cluster {
             power,
             policy,
             gpus,
+            // In-system population is bounded by queue depths, far below
+            // the trace length; the cap only bounds the pre-reservation.
+            store: RequestStore::with_capacity(n_requests.min(1024)),
+            hot: HotState::new(total),
             events: EventQueue::with_capacity(2 * total + 16),
             now: 0,
-            trace: trace.requests,
+            trace,
             next_arrival: 0,
             records: Vec::with_capacity(n_requests),
             ring_used: vec![0; cfg.n_nodes],
@@ -204,7 +272,7 @@ impl Cluster {
             orphan_items: Vec::new(),
             mem,
             conv_of,
-            retransfer_wait: (0..cfg.n_nodes).map(|_| VecDeque::new()).collect(),
+            retransfer_wait: (0..cfg.n_nodes).map(|_| VecDeque::with_capacity(8)).collect(),
             mem_trace: Vec::new(),
             admission,
             tenant_tiers,
@@ -229,6 +297,8 @@ impl Cluster {
             scratch_batch: Vec::with_capacity(cfg.batch.max_prefill_reqs),
             scratch_done: Vec::with_capacity(cfg.batch.max_decode_reqs),
             scratch_node_w: Vec::with_capacity(cfg.n_nodes),
+            done: false,
+            debug_ticks: std::env::var("RAPID_DEBUG_TICKS").is_ok(),
             cfg,
         };
         for gi in 0..cl.gpus.len() {
@@ -238,8 +308,17 @@ impl Cluster {
     }
 
     pub fn run(mut self) -> RunResult {
-        if !self.trace.is_empty() {
-            self.events.push(self.trace[0].arrival, Event::Arrival);
+        self.prime();
+        self.step_events(u64::MAX);
+        self.finish()
+    }
+
+    /// Seed the initial event population: first arrival, controller
+    /// tick, environment timeline, telemetry sample. Split from [`run`]
+    /// so tests can drive the loop incrementally via [`step_events`].
+    pub fn prime(&mut self) {
+        if !self.trace.requests.is_empty() {
+            self.events.push(self.trace.requests[0].arrival, Event::Arrival);
         }
         self.events.push(self.cfg.controller.tick, Event::ControllerTick);
         // Env events enqueue before the first Sample so that at equal
@@ -252,18 +331,38 @@ impl Cluster {
         }
         self.events.push(0, Event::Sample);
         self.record_roles();
+    }
 
-        let total = self.trace.len();
-        while let Some((at, ev)) = self.events.pop() {
+    /// Process up to `n` events, returning how many were handled. Stops
+    /// early — and latches `done` — when the run is over: every record
+    /// accounted for, the hard stop passed, or the queue drained.
+    /// `run()` is exactly `prime()` + `step_events(u64::MAX)` +
+    /// `finish()`; the split exists for incremental drivers (the
+    /// steady-state allocation test steps a warmed run event by event).
+    pub fn step_events(&mut self, n: u64) -> u64 {
+        let total = self.trace.requests.len();
+        let mut handled = 0u64;
+        while handled < n && !self.done {
+            let Some((at, ev)) = self.events.pop() else {
+                self.done = true;
+                break;
+            };
             debug_assert!(at >= self.now, "time went backwards");
             self.now = at;
             if self.records.len() >= total || self.now > self.hard_stop {
+                self.done = true;
                 break;
             }
             self.events_handled += 1;
+            handled += 1;
             self.handle(ev);
         }
-        self.finish()
+        handled
+    }
+
+    /// Current simulated time (µs).
+    pub fn now(&self) -> Micros {
+        self.now
     }
 
     // ------------------------------------------------------------------
@@ -289,10 +388,15 @@ impl Cluster {
     /// Projected peak KV footprint of a decode context hosted on `gi`:
     /// prompt + reused prefix + full output, in that SKU's bytes/token —
     /// the same sizing the per-SKU re-fetch cost model uses.
-    pub(crate) fn kv_bytes_for(&self, gi: usize, item: &DecodeItem) -> u64 {
+    pub(crate) fn kv_bytes_for(&self, gi: usize, st: &ReqState) -> u64 {
         let tokens =
-            item.req.input_tokens as u64 + item.cached_tokens as u64 + item.req.output_tokens as u64;
+            st.req.input_tokens as u64 + st.cached_tokens as u64 + st.req.output_tokens as u64;
         tokens * self.model_of(gi).cfg().kv_bytes_per_token
+    }
+
+    /// KV footprint of the request behind `slot` when hosted on `gi`.
+    pub(crate) fn kv_bytes_for_slot(&self, gi: usize, slot: SlotId) -> u64 {
+        self.kv_bytes_for(gi, self.store.get(slot))
     }
 
     /// Register the demotion work a successful `reserve` incurred on
@@ -345,6 +449,85 @@ impl Cluster {
         };
         self.prefill_index.update(gi, node, pf);
         self.decode_index.update(gi, node, dec);
+        self.sync_hot(gi);
+    }
+
+    /// Refresh `gi`'s row of the [`HotState`] mirror from the live
+    /// `GpuSim`. O(1); called from [`Self::reindex`] plus the few
+    /// mutation sites that change tick-visible fields without touching
+    /// the routing indexes (coalesced queue moves, drain teardown,
+    /// decode admission swaps via the `kick_*` wrappers).
+    pub(crate) fn sync_hot(&mut self, gi: usize) {
+        let g = &self.gpus[gi];
+        let h = &mut self.hot;
+        h.role[gi] = g.role;
+        h.committed[gi] = g.committed_role();
+        h.failed[gi] = g.failed;
+        h.accepting[gi] = g.accepting();
+        h.pf_len[gi] = g.pf_queue.len() as u32;
+        h.co_len[gi] = g.co_queue.len() as u32;
+        h.dec_pending_len[gi] = g.dec_pending.len() as u32;
+        h.dec_active_len[gi] = g.dec_active.len() as u32;
+        h.pf_tokens[gi] = g.pf_queued_tokens;
+        h.co_tokens[gi] = g.co_tokens;
+        let head = match g.role {
+            Role::Coalesced => g.co_queue.front(),
+            _ => g.pf_queue.front(),
+        };
+        match head {
+            Some(&s) => {
+                let r = &self.store.get(s).req;
+                h.head_arrival[gi] = r.arrival;
+                h.head_ttft[gi] = r.slo.ttft;
+            }
+            None => {
+                h.head_arrival[gi] = u64::MAX;
+                h.head_ttft[gi] = 1;
+            }
+        }
+    }
+
+    /// Debug-build coherence comparator (the golden-comparator pattern):
+    /// re-derive every `HotState` field from the live `GpuSim`s and
+    /// assert the mirror matches. Runs each controller tick in debug
+    /// builds, so any missed `sync_hot` site fails loudly under the
+    /// whole test suite rather than skewing release-mode decisions.
+    #[cfg(debug_assertions)]
+    fn assert_hot_coherent(&self) {
+        for (gi, g) in self.gpus.iter().enumerate() {
+            let h = &self.hot;
+            debug_assert_eq!(h.role[gi], g.role, "hot.role stale for gpu {gi}");
+            debug_assert_eq!(h.committed[gi], g.committed_role(), "hot.committed stale for gpu {gi}");
+            debug_assert_eq!(h.failed[gi], g.failed, "hot.failed stale for gpu {gi}");
+            debug_assert_eq!(h.accepting[gi], g.accepting(), "hot.accepting stale for gpu {gi}");
+            debug_assert_eq!(h.pf_len[gi] as usize, g.pf_queue.len(), "hot.pf_len stale for gpu {gi}");
+            debug_assert_eq!(h.co_len[gi] as usize, g.co_queue.len(), "hot.co_len stale for gpu {gi}");
+            debug_assert_eq!(
+                h.dec_pending_len[gi] as usize,
+                g.dec_pending.len(),
+                "hot.dec_pending_len stale for gpu {gi}"
+            );
+            debug_assert_eq!(
+                h.dec_active_len[gi] as usize,
+                g.dec_active.len(),
+                "hot.dec_active_len stale for gpu {gi}"
+            );
+            debug_assert_eq!(h.pf_tokens[gi], g.pf_queued_tokens, "hot.pf_tokens stale for gpu {gi}");
+            debug_assert_eq!(h.co_tokens[gi], g.co_tokens, "hot.co_tokens stale for gpu {gi}");
+            let head = match g.role {
+                Role::Coalesced => g.co_queue.front(),
+                _ => g.pf_queue.front(),
+            };
+            let (want_arrival, want_ttft) = match head {
+                Some(&s) => {
+                    let r = &self.store.get(s).req;
+                    (r.arrival, r.slo.ttft)
+                }
+                None => (u64::MAX, 1),
+            };
+            debug_assert_eq!(h.head_arrival[gi], want_arrival, "hot.head_arrival stale for gpu {gi}");
+            debug_assert_eq!(h.head_ttft[gi], want_ttft, "hot.head_ttft stale for gpu {gi}");
+        }
     }
 
     /// Reindex plus role-list membership — for role flips, failures and
@@ -379,13 +562,12 @@ impl Cluster {
     fn fill_prefill_loads(&self, out: &mut Vec<WorkerLoad>) {
         out.clear();
         for &i in &self.prefill_ids {
-            let g = &self.gpus[i];
             out.push(WorkerLoad {
                 gpu: GpuId(i),
                 node: self.node_of(i),
-                queued_tokens: g.pf_queued_tokens,
-                requests: g.pf_queue.len(),
-                accepting: g.accepting(),
+                queued_tokens: self.hot.pf_tokens[i],
+                requests: self.hot.pf_len[i] as usize,
+                accepting: self.hot.accepting[i],
                 perf_scale: self.fleet.prefill_scale(i),
                 mem_pressure: 0.0,
             });
@@ -400,14 +582,15 @@ impl Cluster {
             if Some(i) == exclude {
                 continue;
             }
-            let g = &self.gpus[i];
             out.push(WorkerLoad {
                 gpu: GpuId(i),
                 node: self.node_of(i),
                 queued_tokens: 0,
-                requests: g.decode_load(),
-                accepting: g.accepting(),
+                requests: (self.hot.dec_pending_len[i] + self.hot.dec_active_len[i]) as usize,
+                accepting: self.hot.accepting[i],
                 perf_scale: self.fleet.decode_scale(i),
+                // Deliberately a live read: pressure moves with HBM
+                // reservations, which do not pass through `sync_hot`.
                 mem_pressure: self.mem.pressure(i, self.cfg.batch.max_decode_reqs),
             });
         }
@@ -491,7 +674,7 @@ impl Cluster {
                 let role = self.gpus[gpu].role;
                 worker::behavior(role).on_step_done(self, gpu, epoch);
             }
-            Event::KvArrive { gpu, src_node, item } => self.on_kv_arrive(gpu, src_node, item),
+            Event::KvArrive { gpu, src_node, slot } => self.on_kv_arrive(gpu, src_node, slot),
             Event::ControllerTick => self.on_tick(),
             Event::PowerPoll => self.on_power_poll(),
             Event::Sample => self.on_sample(),
@@ -506,11 +689,11 @@ impl Cluster {
     }
 
     fn on_arrival(&mut self) {
-        let mut req = self.trace[self.next_arrival];
+        let mut req = self.trace.requests[self.next_arrival];
         self.next_arrival += 1;
-        if self.next_arrival < self.trace.len() {
+        if self.next_arrival < self.trace.requests.len() {
             self.events
-                .push(self.trace[self.next_arrival].arrival, Event::Arrival);
+                .push(self.trace.requests[self.next_arrival].arrival, Event::Arrival);
         }
         // Admission control (inert without an `[admission]` table): a
         // shed arrival is decided before any routing or prefix-cache
@@ -537,7 +720,11 @@ impl Cluster {
                 }
             }
         }
-        self.route_request(req);
+        // The slot is born here — after admission (shed arrivals never
+        // touch the store) and after the prefix-cache prompt shrink —
+        // and dies where its completion record is pushed.
+        let slot = self.store.insert(ReqState::new(req));
+        self.route_request(slot);
     }
 
     /// Account a shed arrival: an immediate SLO-violation record with
@@ -563,16 +750,17 @@ impl Cluster {
     }
 
     /// Route by topology (arrivals, failure requeues, orphan re-entry).
-    pub(crate) fn route_request(&mut self, req: Request) {
+    pub(crate) fn route_request(&mut self, slot: SlotId) {
         match self.cfg.topology {
-            crate::config::Topology::Coalesced => self.route_coalesced(req),
-            crate::config::Topology::Disaggregated { .. } => self.route_prefill(req),
+            crate::config::Topology::Coalesced => self.route_coalesced(slot),
+            crate::config::Topology::Disaggregated { .. } => self.route_prefill(slot),
         }
     }
 
     /// Centrally route a prompt to the least-loaded prefill worker of any
     /// node (paper §3.2's central scheduler, now cluster-wide).
-    pub(crate) fn route_prefill(&mut self, req: Request) {
+    pub(crate) fn route_prefill(&mut self, slot: SlotId) {
+        let input = self.store.get(slot).req.input_tokens;
         let Some(gpu) = self.pick_prefill_gpu() else {
             // No accepting prefill GPU (all draining): park on one with
             // the committed prefill role; it picks the work up after the
@@ -584,14 +772,14 @@ impl Cluster {
                 .position(|g| !g.failed && g.committed_role() == Role::Prefill);
             match fallback {
                 Some(i) => {
-                    self.gpus[i].push_prefill(req);
+                    self.gpus[i].push_prefill(slot, input);
                     self.reindex(i);
                 }
-                None => self.orphan_reqs.push(req),
+                None => self.orphan_reqs.push(slot),
             }
             return;
         };
-        self.gpus[gpu.0].push_prefill(req);
+        self.gpus[gpu.0].push_prefill(slot, input);
         self.reindex(gpu.0);
         self.kick_prefill(gpu.0);
     }
@@ -618,20 +806,29 @@ impl Cluster {
         }
     }
 
-    fn route_coalesced(&mut self, req: Request) {
+    fn route_coalesced(&mut self, slot: SlotId) {
         let mut loads = std::mem::take(&mut self.scratch_loads);
         self.fill_coalesced_loads(None, &mut loads);
         let pick = router::pick_prefill(&loads);
         self.scratch_loads = loads;
         let Some(gpu) = pick else {
             // Every coalesced GPU is down or draining: wait for recovery.
-            self.orphan_reqs.push(req);
+            self.orphan_reqs.push(slot);
             return;
         };
-        self.gpus[gpu.0].co_queue.push_back(crate::sim::gpu::ChunkMeta {
-            prog: crate::coordinator::batcher::ChunkProgress::new(req),
-            started: None,
-        });
+        {
+            // (Re-)entering the chunk queue resets chunked-prefill
+            // progress — failure requeues restart the prompt, exactly as
+            // the old fresh-`ChunkProgress` construction did.
+            let st = self.store.get_mut(slot);
+            st.chunk_done = 0;
+            st.started = None;
+            let input = st.req.input_tokens as u64;
+            let g = &mut self.gpus[gpu.0];
+            g.co_queue.push_back(slot);
+            g.co_tokens += input;
+        }
+        self.sync_hot(gpu.0);
         self.kick_coalesced(gpu.0);
     }
 
@@ -642,6 +839,10 @@ impl Cluster {
     fn on_tick(&mut self) {
         self.events
             .push(self.now + self.cfg.controller.tick, Event::ControllerTick);
+        // Every tick-rate reader below walks the HotState mirror; prove
+        // it coherent against the live GpuSims first (debug builds).
+        #[cfg(debug_assertions)]
+        self.assert_hot_coherent();
         // Project queue pressure into the TTFT window: queue buildup must
         // trigger *before* completions report violations (paper §3.3:
         // "queue buildup as an early indicator of stress"). The projection
@@ -649,32 +850,29 @@ impl Cluster {
         // deep queue keeps the signal high even right after a power boost
         // clears the head.
         if self.policy.is_dynamic() {
-            // Field-disjoint borrows (gpus shared, policy mut) keep this
+            // Contiguous HotState reads (no GpuSim chasing) plus
+            // field-disjoint borrows (hot shared, policy mut) keep this
             // loop allocation-free — no samples buffer.
             let now = self.now;
-            for (i, g) in self.gpus.iter().enumerate() {
-                if g.failed {
+            for i in 0..self.hot.failed.len() {
+                if self.hot.failed[i] || self.hot.head_arrival[i] == u64::MAX {
                     continue;
                 }
-                let (head, backlog_tokens) = match g.role {
-                    Role::Coalesced => (
-                        g.co_queue.front().map(|c| c.prog.request),
-                        g.co_queued_tokens(),
-                    ),
-                    _ => (g.pf_queue.front().copied(), g.pf_queued_tokens),
+                let backlog_tokens = match self.hot.role[i] {
+                    Role::Coalesced => self.hot.co_tokens[i],
+                    _ => self.hot.pf_tokens[i],
                 };
-                let Some(req) = head else { continue };
-                let age = now.saturating_sub(req.arrival);
+                let age = now.saturating_sub(self.hot.head_arrival[i]);
                 let cap = self.power.effective(GpuId(i), now);
                 let drain =
                     (backlog_tokens as f64 / self.fleet.model(i).prefill_rate(cap) * 1e6) as Micros;
                 let projected = age + drain;
                 self.policy
-                    .observe_ttft(now, projected as f64 / req.slo.ttft as f64);
+                    .observe_ttft(now, projected as f64 / self.hot.head_ttft[i] as f64);
             }
         }
         let snap = self.snapshot();
-        if std::env::var("RAPID_DEBUG_TICKS").is_ok() {
+        if self.debug_ticks {
             eprintln!(
                 "tick t={:.2} qP={} qD={} p_sat={} d_sat={} P={} D={}",
                 self.now as f64 / 1e6,
@@ -705,9 +903,12 @@ impl Cluster {
     }
 
     fn snapshot(&self) -> Snapshot {
-        // Single allocation-free pass over the GPUs: this runs every
-        // controller tick, so it must not build per-role pool vectors.
+        // Single allocation-free pass over the HotState arrays (struct
+        // of arrays — contiguous, no per-GpuSim cache-line hops): this
+        // runs every controller tick, so it must not build per-role
+        // pool vectors.
         let c = &self.cfg.controller;
+        let h = &self.hot;
         let mut prefill_queue = 0usize;
         let mut decode_queue = 0usize;
         let mut prefill_committed = 0usize;
@@ -720,18 +921,18 @@ impl Cluster {
         let mut p_all_at_min = true;
         let mut d_all_at_min = true;
         let mut d_all_at_ceiling = true;
-        for (i, g) in self.gpus.iter().enumerate() {
-            if g.failed {
+        for i in 0..h.failed.len() {
+            if h.failed[i] {
                 continue;
             }
-            prefill_queue += g.pf_queue.len() + g.co_queue.len();
-            decode_queue += g.dec_pending.len();
-            match g.committed_role() {
+            prefill_queue += (h.pf_len[i] + h.co_len[i]) as usize;
+            decode_queue += h.dec_pending_len[i] as usize;
+            match h.committed[i] {
                 Role::Prefill => prefill_committed += 1,
                 Role::Decode => decode_committed += 1,
                 Role::Coalesced => {}
             }
-            if !g.accepting() {
+            if !h.accepting[i] {
                 continue;
             }
             let target = self.power.target(GpuId(i));
@@ -740,7 +941,7 @@ impl Cluster {
             // pinned at 400 W *is* at max even though MAX_P says 750.
             let gpu_max = self.power.max_of(GpuId(i));
             let gpu_min = self.power.min_of(GpuId(i));
-            match g.role {
+            match h.role[i] {
                 Role::Prefill => {
                     prefill_pool += 1;
                     p_all_at_max &= target >= gpu_max - 1.0;
@@ -881,28 +1082,28 @@ impl Cluster {
         // its queued work re-routes (it must not pick itself up again).
         self.reindex(gi);
         // Re-route queued (not yet running) work to peers.
-        let queued: Vec<Request> = {
+        let queued: Vec<SlotId> = {
             let g = &mut self.gpus[gi];
-            let drained: Vec<Request> = g.pf_queue.drain(..).collect();
+            let drained: Vec<SlotId> = g.pf_queue.drain(..).collect();
             g.pf_queued_tokens = 0;
             drained
         };
-        for r in queued {
-            self.route_prefill(r);
+        for s in queued {
+            self.route_prefill(s);
         }
-        let pending: Vec<DecodeItem> = self.gpus[gi].dec_pending.drain(..).collect();
+        let pending: Vec<SlotId> = self.gpus[gi].dec_pending.drain(..).collect();
         let src_node = self.node_of(gi);
-        for item in pending {
+        for slot in pending {
             // A full ring used to over-commit here (the slot count ran
             // past `ring_slots`); defer instead and drain FIFO as slots
             // free in `on_kv_arrive`. The drainer's reservation moves
             // with the item (released now, re-reserved at dispatch).
             if self.ring_free(src_node) == 0 {
                 if self.mem.active() {
-                    let b = self.kv_bytes_for(gi, &item);
+                    let b = self.kv_bytes_for_slot(gi, slot);
                     self.mem.release(gi, b);
                 }
-                self.retransfer_wait[src_node].push_back((gi, item));
+                self.retransfer_wait[src_node].push_back((gi, slot));
                 continue;
             }
             // Send to the least-loaded other decode GPU, preferring the
@@ -913,35 +1114,37 @@ impl Cluster {
                 // commits; if its pool cannot evict enough, the item
                 // stays (it finishes here before the flip).
                 if self.mem.active() {
-                    let b_new = self.kv_bytes_for(target.0, &item);
+                    let b_new = self.kv_bytes_for_slot(target.0, slot);
                     match self.mem.reserve(target.0, b_new) {
                         Ok(ev) => {
                             self.note_eviction(target.0, ev);
-                            let b_old = self.kv_bytes_for(gi, &item);
+                            let b_old = self.kv_bytes_for_slot(gi, slot);
                             self.mem.release(gi, b_old);
                             self.reindex(target.0);
                         }
                         Err(()) => {
-                            self.gpus[gi].dec_pending.push_back(item);
+                            self.gpus[gi].dec_pending.push_back(slot);
                             continue;
                         }
                     }
                 }
                 let same_node = self.node_of(target.0) == src_node;
+                let input = self.store.get(slot).req.input_tokens;
                 let t = self
                     .fleet
-                    .kv_transfer_time_between(gi, target.0, item.req.input_tokens, same_node);
+                    .kv_transfer_time_between(gi, target.0, input, same_node);
                 self.events.push(
                     self.now + t,
-                    Event::KvArrive { gpu: target.0, src_node, item },
+                    Event::KvArrive { gpu: target.0, src_node, slot },
                 );
                 self.ring_used[src_node] += 1; // re-transfer occupies a slot
                 debug_assert!(self.ring_used[src_node] <= self.cfg.batch.ring_slots);
             } else {
                 // No other decode GPU: keep it; it finishes before the flip.
-                self.gpus[gi].dec_pending.push_back(item);
+                self.gpus[gi].dec_pending.push_back(slot);
             }
         }
+        self.sync_hot(gi);
         self.maybe_finish_drain(gi);
     }
 
@@ -988,9 +1191,10 @@ impl Cluster {
         };
         let steal_n = self.gpus[victim].pf_queue.len() / 2;
         for _ in 0..steal_n {
-            if let Some(r) = self.gpus[victim].pf_queue.pop_back() {
-                self.gpus[victim].pf_queued_tokens -= r.input_tokens as u64;
-                self.gpus[gi].push_prefill(r);
+            if let Some(s) = self.gpus[victim].pf_queue.pop_back() {
+                let input = self.store.get(s).req.input_tokens;
+                self.gpus[victim].pf_queued_tokens -= input as u64;
+                self.gpus[gi].push_prefill(s, input);
             }
         }
         self.reindex(victim);
@@ -1080,7 +1284,7 @@ impl Cluster {
         // give them "infinite" latency records so attainment counts them.
         let completed: std::collections::HashSet<u64> =
             self.records.iter().map(|r| r.id.0).collect();
-        for req in &self.trace[..self.next_arrival] {
+        for req in &self.trace.requests[..self.next_arrival] {
             if !completed.contains(&req.id.0) {
                 self.records.push(RequestRecord {
                     id: req.id,

@@ -1,0 +1,143 @@
+//! Slab-backed request storage: one `ReqState` per in-flight request.
+//!
+//! Every request alive inside the cluster — queued for prefill, mid
+//! chunked-prefill, in transit over the KV ring, resident in a decode
+//! batch, or parked in a waiter pool — lives in exactly one slot of the
+//! cluster's [`RequestStore`]. Queues, batches and events carry copyable
+//! 8-byte [`SlotId`]s instead of owned `Request` structs, so moving a
+//! request between pools is an integer push, not a memcpy of the whole
+//! struct, and the `Event` enum stays small enough for the calendar
+//! queue's pre-sized buckets.
+//!
+//! `ReqState` folds the fields formerly spread across `DecodeItem`
+//! (decode-phase bookkeeping) and `ChunkMeta`/`ChunkProgress`
+//! (chunked-prefill bookkeeping) into one record, because a request
+//! transitions through those phases in place — only the slot's fields
+//! change, never its address. Slots are inserted at arrival (after
+//! admission control) and removed exactly where a record is pushed; the
+//! generation check in [`SlotId`] turns any use-after-free into a panic
+//! instead of silently reading the slot's next occupant.
+
+use crate::types::{Micros, Request};
+use crate::util::slab::{Slab, SlotId};
+
+pub use crate::util::slab::SlotId as ReqSlot;
+
+/// Per-request simulation state, stored once in the cluster's slab.
+#[derive(Debug, Clone)]
+pub struct ReqState {
+    pub req: Request,
+    /// When the request's prefill batch (or first coalesced chunk) began.
+    pub prefill_start: Micros,
+    /// When the first output token was produced.
+    pub first_token: Micros,
+    /// Output tokens generated so far *including* the prefill-produced
+    /// first token.
+    pub tokens_done: u32,
+    /// Prompt tokens served from the prefix cache (skipped at prefill
+    /// but still resident context for decode and KV accounting). Zero
+    /// unless the memory subsystem is active and the lookup hit.
+    pub cached_tokens: u32,
+    /// Chunked-prefill progress (coalesced GPUs only): prompt tokens
+    /// already processed.
+    pub chunk_done: u32,
+    /// When the first chunk of this prompt began executing (coalesced
+    /// GPUs only; `None` until scheduled).
+    pub started: Option<Micros>,
+}
+
+impl ReqState {
+    /// Fresh state for a request entering the cluster.
+    pub fn new(req: Request) -> Self {
+        ReqState {
+            req,
+            prefill_start: 0,
+            first_token: 0,
+            tokens_done: 0,
+            cached_tokens: 0,
+            chunk_done: 0,
+            started: None,
+        }
+    }
+
+    /// Live context length (prompt + generated) — drives KV-read cost.
+    pub fn ctx_tokens(&self) -> u32 {
+        self.req.input_tokens + self.cached_tokens + self.tokens_done
+    }
+
+    /// Output tokens still to generate.
+    pub fn remaining(&self) -> u32 {
+        self.req.output_tokens.saturating_sub(self.tokens_done)
+    }
+
+    /// Prompt tokens this chunked prefill has yet to process.
+    pub fn chunk_remaining(&self) -> u32 {
+        self.req.input_tokens - self.chunk_done
+    }
+
+    /// Advance the chunked prefill by up to `budget` tokens; returns
+    /// tokens consumed (the `ChunkProgress::advance` contract).
+    pub fn chunk_advance(&mut self, budget: u32) -> u32 {
+        let step = self.chunk_remaining().min(budget);
+        self.chunk_done += step;
+        step
+    }
+
+    /// Has the chunked prefill consumed the whole prompt?
+    pub fn chunk_complete(&self) -> bool {
+        self.chunk_done >= self.req.input_tokens
+    }
+}
+
+/// The cluster-owned slab of in-flight request state.
+pub type RequestStore = Slab<ReqState>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{RequestId, Slo};
+
+    fn req(id: u64, input: u32, output: u32) -> Request {
+        Request {
+            id: RequestId(id),
+            arrival: 0,
+            input_tokens: input,
+            output_tokens: output,
+            slo: Slo::paper_default(),
+            tenant: 0,
+        }
+    }
+
+    #[test]
+    fn context_and_remaining_match_decode_item_semantics() {
+        let mut st = ReqState::new(req(0, 500, 10));
+        st.tokens_done = 3;
+        assert_eq!(st.ctx_tokens(), 503);
+        assert_eq!(st.remaining(), 7);
+        st.cached_tokens = 200;
+        assert_eq!(st.ctx_tokens(), 703);
+    }
+
+    #[test]
+    fn chunk_advance_matches_chunk_progress_semantics() {
+        let mut st = ReqState::new(req(0, 5000, 8));
+        assert_eq!(st.chunk_advance(2048), 2048);
+        assert_eq!(st.chunk_advance(2048), 2048);
+        assert!(!st.chunk_complete());
+        assert_eq!(st.chunk_advance(2048), 904);
+        assert!(st.chunk_complete());
+        assert_eq!(st.chunk_remaining(), 0);
+    }
+
+    #[test]
+    fn store_round_trip() {
+        let mut store: RequestStore = RequestStore::with_capacity(4);
+        let a = store.insert(ReqState::new(req(7, 100, 4)));
+        store.get_mut(a).tokens_done = 2;
+        assert_eq!(store.get(a).req.id.0, 7);
+        assert_eq!(store.get(a).remaining(), 2);
+        let st = store.remove(a);
+        assert_eq!(st.tokens_done, 2);
+        assert!(store.is_empty());
+    }
+}

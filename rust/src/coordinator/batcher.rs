@@ -12,6 +12,7 @@ use std::collections::VecDeque;
 
 use crate::config::BatchConfig;
 use crate::types::Request;
+use crate::util::slab::SlotId;
 
 /// A formed prefill batch.
 #[derive(Debug, Clone, Default)]
@@ -50,6 +51,34 @@ pub fn form_prefill_batch_into(
         let r = queue.pop_front().unwrap();
         total_tokens += r.input_tokens;
         out.push(r);
+    }
+    total_tokens
+}
+
+/// Slab-backed variant of [`form_prefill_batch_into`]: the queue holds
+/// request-store [`SlotId`]s and `tokens_of` resolves a slot's prompt
+/// length. Identical admission rule (FIFO under token + request budgets;
+/// a lone over-budget prompt still admits), returning total prompt
+/// tokens. This is the simulator's hot path; the `Request` variants
+/// above remain for callers that own their requests.
+pub fn form_prefill_batch_ids(
+    queue: &mut VecDeque<SlotId>,
+    cfg: &BatchConfig,
+    tokens_of: impl Fn(SlotId) -> u32,
+    out: &mut Vec<SlotId>,
+) -> u32 {
+    out.clear();
+    let mut total_tokens = 0u32;
+    while let Some(&front) = queue.front() {
+        let would_be = total_tokens + tokens_of(front);
+        let fits = out.is_empty()
+            || (would_be <= cfg.max_prefill_tokens && out.len() < cfg.max_prefill_reqs);
+        if !fits {
+            break;
+        }
+        let s = queue.pop_front().unwrap();
+        total_tokens += tokens_of(s);
+        out.push(s);
     }
     total_tokens
 }
@@ -94,8 +123,8 @@ impl ChunkProgress {
 // NOTE: chunk-taking across queued prompts (head-first, spilling into
 // later prompts if the head finishes inside the budget — Sarathi packs
 // chunks to the budget) lives in `Cluster::kick_coalesced`, which walks
-// the `ChunkMeta` queue in place; `ChunkProgress` above is its per-prompt
-// bookkeeping unit.
+// the slab-backed slot queue in place; `ChunkProgress` above remains the
+// standalone per-prompt bookkeeping unit for callers that own requests.
 
 #[cfg(test)]
 mod tests {
@@ -186,6 +215,31 @@ mod tests {
         assert_eq!(decode_admissions(6, 100, &c), 2);
         assert_eq!(decode_admissions(8, 100, &c), 0);
         assert_eq!(decode_admissions(2, 1, &c), 1);
+    }
+
+    #[test]
+    fn ids_variant_matches_request_variant() {
+        // Build the same workload twice: once as owned requests, once as
+        // slab slots; both formers must admit identical batches.
+        let tokens: Vec<u32> = vec![2000, 1500, 1500, 700, 700, 9999];
+        let mut q_req: VecDeque<Request> =
+            tokens.iter().enumerate().map(|(i, &t)| req(i as u64, t)).collect();
+        let mut store: crate::util::slab::Slab<u32> = crate::util::slab::Slab::new();
+        let mut q_ids: VecDeque<SlotId> = tokens.iter().map(|&t| store.insert(t)).collect();
+        let c = cfg();
+        loop {
+            let b = form_prefill_batch(&mut q_req, &c);
+            let mut ids = Vec::new();
+            let total = form_prefill_batch_ids(&mut q_ids, &c, |s| *store.get(s), &mut ids);
+            assert_eq!(total, b.total_tokens);
+            assert_eq!(
+                ids.iter().map(|&s| *store.get(s)).collect::<Vec<_>>(),
+                b.requests.iter().map(|r| r.input_tokens).collect::<Vec<_>>()
+            );
+            if b.requests.is_empty() {
+                break;
+            }
+        }
     }
 
     #[test]

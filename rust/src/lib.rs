@@ -4,6 +4,14 @@
 //! (Jiang et al., 2026). See DESIGN.md for the architecture and the
 //! paper-to-repo substitution map.
 
+// Counting allocator (feature `alloc-count`): lets tests assert the DES
+// steady state performs zero heap allocations (see util::alloc_count and
+// tests/alloc_steady.rs). Off by default — the wrapper adds an atomic
+// increment to every allocation.
+#[cfg(feature = "alloc-count")]
+#[global_allocator]
+static ALLOC: util::alloc_count::CountingAlloc = util::alloc_count::CountingAlloc;
+
 pub mod bench;
 pub mod cli;
 pub mod cluster;

@@ -476,7 +476,7 @@ impl MemState {
     }
 
     /// Reused-prefix tokens of a request whose prefill just completed
-    /// (consumed into `DecodeItem::cached_tokens`).
+    /// (consumed into `ReqState::cached_tokens`).
     pub fn take_cached_tokens(&mut self, req_id: u64) -> u32 {
         if !self.active {
             return 0;

@@ -178,6 +178,71 @@ impl RunResult {
         }
         ttfts.sort_by(|a, b| a.total_cmp(b));
         tpots.sort_by(|a, b| a.total_cmp(b));
+        self.assemble_summary(attained, tier_req, tier_att, tier_shed, &ttfts, &tpots)
+    }
+
+    /// [`compute_summary`] through one reused scratch buffer: both
+    /// latency series live in a single allocation (TTFTs first, then
+    /// the multi-token TPOTs), split and sorted in place with
+    /// `sort_unstable_by(total_cmp)`. Bit-identical to the two-vector
+    /// reference — `total_cmp`-equal `f64`s share a bit pattern, so an
+    /// unstable sort produces the same sorted sequence and the same
+    /// percentile cuts (regression-tested against `compute_summary`).
+    /// This is what `seal_summary` runs once per cell at study scale.
+    pub(crate) fn compute_summary_scratch(&self) -> Summary {
+        let n = self.records.len();
+        let mut scratch: Vec<f64> = Vec::with_capacity(2 * n);
+        let mut attained = 0usize;
+        let tiered = !self.tenant_tiers.is_empty();
+        let mut tier_req = [0usize; 3];
+        let mut tier_att = [0usize; 3];
+        let mut tier_shed = [0usize; 3];
+        for r in &self.records {
+            scratch.push(r.ttft() as f64);
+            if r.attained() {
+                attained += 1;
+            }
+            if tiered {
+                let tier = self
+                    .tenant_tiers
+                    .get(r.tenant as usize)
+                    .copied()
+                    .unwrap_or(crate::workload::tracespec::TIER_STANDARD)
+                    as usize;
+                tier_req[tier] += 1;
+                if r.attained() {
+                    tier_att[tier] += 1;
+                }
+                if r.shed {
+                    tier_shed[tier] += 1;
+                }
+            }
+        }
+        let n_ttft = scratch.len();
+        for r in &self.records {
+            if r.output_tokens > 1 {
+                scratch.push(r.tpot() as f64);
+            }
+        }
+        let (ttfts, tpots) = scratch.split_at_mut(n_ttft);
+        ttfts.sort_unstable_by(|a, b| a.total_cmp(b));
+        tpots.sort_unstable_by(|a, b| a.total_cmp(b));
+        self.assemble_summary(attained, tier_req, tier_att, tier_shed, ttfts, tpots)
+    }
+
+    /// Final assembly shared by both summary paths; `ttfts`/`tpots`
+    /// must already be sorted.
+    fn assemble_summary(
+        &self,
+        attained: usize,
+        tier_req: [usize; 3],
+        tier_att: [usize; 3],
+        tier_shed: [usize; 3],
+        ttfts: &[f64],
+        tpots: &[f64],
+    ) -> Summary {
+        let n = self.records.len();
+        let tiered = !self.tenant_tiers.is_empty();
         let attainment = if n == 0 { 0.0 } else { attained as f64 / n as f64 };
         let goodput_qps = if self.duration == 0 {
             0.0
@@ -221,10 +286,10 @@ impl RunResult {
             attainment,
             goodput_qps,
             qps_per_kw,
-            ttft_p50_ms: percentile_sorted(&ttfts, 50.0) / 1000.0,
-            ttft_p90_ms: percentile_sorted(&ttfts, 90.0) / 1000.0,
-            tpot_p50_ms: percentile_sorted(&tpots, 50.0) / 1000.0,
-            tpot_p90_ms: percentile_sorted(&tpots, 90.0) / 1000.0,
+            ttft_p50_ms: percentile_sorted(ttfts, 50.0) / 1000.0,
+            ttft_p90_ms: percentile_sorted(ttfts, 90.0) / 1000.0,
+            tpot_p50_ms: percentile_sorted(tpots, 50.0) / 1000.0,
+            tpot_p90_ms: percentile_sorted(tpots, 90.0) / 1000.0,
             mean_provisioned_w: self.mean_provisioned_w,
             peak_node_w: self.node_power.max(),
             duration_s: self.duration as f64 / SECOND as f64,
@@ -235,9 +300,10 @@ impl RunResult {
     }
 
     /// Populate the summary cache (called once by the simulator's
-    /// `finish`; later `summary()` calls are free).
+    /// `finish`; later `summary()` calls are free). Uses the
+    /// single-scratch sort path, proven bit-identical to the reference.
     pub(crate) fn seal_summary(&mut self) {
-        self.summary_cache = Some(self.compute_summary());
+        self.summary_cache = Some(self.compute_summary_scratch());
     }
 
     /// Attainment over completion-time buckets (Fig 6/9 time axes).
@@ -508,6 +574,42 @@ mod tests {
         assert_eq!(s.ttft_p90_ms, r.ttft_percentile(90.0) / 1000.0);
         assert_eq!(s.mean_provisioned_w, 4800.0);
         assert_eq!(s.duration_s, 10.0);
+    }
+
+    #[test]
+    fn scratch_summary_bit_identical_to_reference() {
+        // The sealed path (one scratch, unstable total_cmp sorts) must
+        // reproduce the two-vector stable-sort reference bit for bit —
+        // including p50/p90 cuts over duplicated and adversarially
+        // ordered latencies, and the per-tier aggregates.
+        use crate::workload::tracespec::{TIER_BATCH, TIER_INTERACTIVE, TIER_STANDARD};
+        let mut recs = Vec::new();
+        let mut x = 7u64;
+        for i in 0..257u64 {
+            // LCG-scrambled first-token offsets with deliberate repeats.
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let first = (x % 97 + 1) * 37 * MILLIS;
+            let out = if i % 5 == 0 { 1 } else { 16 + (i % 3) as u32 };
+            let mut r = record(i, 0, first, first + 2 * SECOND, out);
+            r.tenant = (i % 3) as u8;
+            recs.push(r);
+        }
+        let mut res = result_with(recs, 30 * SECOND);
+        res.tenant_tiers = vec![TIER_STANDARD, TIER_INTERACTIVE, TIER_BATCH];
+        res.preempted_by_tier = [1, 2, 3];
+        let reference = res.compute_summary();
+        let scratch = res.compute_summary_scratch();
+        assert_eq!(scratch, reference);
+        assert_eq!(scratch.ttft_p50_ms.to_bits(), reference.ttft_p50_ms.to_bits());
+        assert_eq!(scratch.ttft_p90_ms.to_bits(), reference.ttft_p90_ms.to_bits());
+        assert_eq!(scratch.tpot_p50_ms.to_bits(), reference.tpot_p50_ms.to_bits());
+        assert_eq!(scratch.tpot_p90_ms.to_bits(), reference.tpot_p90_ms.to_bits());
+        // The empty case too (NaN percentiles compare by bits).
+        let empty = RunResult::default();
+        let a = empty.compute_summary();
+        let b = empty.compute_summary_scratch();
+        assert_eq!(a.requests, b.requests);
+        assert_eq!(a.ttft_p50_ms.to_bits(), b.ttft_p50_ms.to_bits());
     }
 
     #[test]

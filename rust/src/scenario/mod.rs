@@ -32,6 +32,9 @@
 pub mod emit;
 pub mod file;
 
+use std::collections::HashMap;
+use std::sync::Arc;
+
 use crate::config::{presets, ClusterConfig, ControlPolicy, Topology};
 use crate::metrics::RunResult;
 use crate::power::PowerModel;
@@ -743,9 +746,36 @@ impl Study {
 
     /// Run the study. `threads` overrides the worker count (wins over
     /// `RAPID_SWEEP_THREADS`); results are bit-identical regardless.
+    ///
+    /// Traces are pre-built once per unique trace fingerprint into a
+    /// shared arena ([`build_trace_arena`]); cells with identical
+    /// workload inputs (common along `Policy`, `Config`, `PrefillGpus`
+    /// and `SkuMix` axes, which sweep the *cluster* while the workload
+    /// is fixed) bump an `Arc` refcount instead of re-sampling tens of
+    /// thousands of requests per cell. Bit-identical to the per-cell
+    /// builds of [`Study::run_uncached`] — trace construction is a pure
+    /// function of the fingerprinted inputs.
     pub fn run(&self, threads: Option<usize>) -> Result<StudyResult, ScenarioError> {
         let specs = self.cells()?;
-        let cells = parallel_map_threads(&specs, threads, |spec| run_cell(&self.scenario, spec));
+        let arena = build_trace_arena(&self.scenario, &specs);
+        let cells = parallel_map_threads(&specs, threads, |spec| {
+            run_cell(&self.scenario, spec, Some(&arena))
+        });
+        Ok(StudyResult {
+            scenario: self.scenario.clone(),
+            cells,
+        })
+    }
+
+    /// [`Study::run`] without the shared trace arena: every cell builds
+    /// its own trace, exactly as studies ran before arenas existed.
+    /// Kept as the golden reference the arena path is regression-tested
+    /// against (tests prove bit-identical emitter output at 1 and 4
+    /// threads).
+    pub fn run_uncached(&self, threads: Option<usize>) -> Result<StudyResult, ScenarioError> {
+        let specs = self.cells()?;
+        let cells =
+            parallel_map_threads(&specs, threads, |spec| run_cell(&self.scenario, spec, None));
         Ok(StudyResult {
             scenario: self.scenario.clone(),
             cells,
@@ -1119,6 +1149,53 @@ fn build_cell_trace(scenario: &Scenario, spec: &CellSpec) -> Trace {
     trace
 }
 
+/// Shared immutable traces, keyed by [`trace_fingerprint`]. Built once
+/// per study ([`build_trace_arena`]); cells borrow via `Arc` bumps.
+pub type TraceArena = HashMap<String, Arc<Trace>>;
+
+/// Canonical key of every input `build_cell_trace` consumes: workload
+/// shape, trace-replay spec, seed, node-level rate, request count, SLO,
+/// burst modulation, multi-turn rewrite and tenant mix. Two cells with
+/// equal fingerprints build byte-identical traces (construction is a
+/// pure function of these inputs), so the arena may hand both the same
+/// `Arc<Trace>`. Direct `f64` inputs are keyed by `to_bits` so distinct
+/// bit patterns never alias; nested floats ride on `Debug`'s exact
+/// shortest-round-trip formatting.
+fn trace_fingerprint(scenario: &Scenario, spec: &CellSpec) -> String {
+    let node_qps = spec.rate_per_gpu * spec.config.total_gpus() as f64;
+    let seed = spec.seed.unwrap_or(scenario.seed);
+    format!(
+        "w={:?}|t={:?}|seed={seed}|qps={:016x}|n={}|slo={:?}|bf={:016x}|bfr={:016x}|mt={:?}|ten={:?}",
+        scenario.workload,
+        spec.trace,
+        node_qps.to_bits(),
+        scenario.requests,
+        spec.slo,
+        spec.burst_factor.to_bits(),
+        scenario.burst_frac.to_bits(),
+        spec.multiturn,
+        spec.config.tenants,
+    )
+}
+
+/// Pre-build each unique trace exactly once, serially, in grid order.
+/// Microbench scenarios build nothing (their cells are analytic). The
+/// serial build keeps the arena deterministic and contention-free; the
+/// parallel fan-out then only reads it.
+fn build_trace_arena(scenario: &Scenario, specs: &[CellSpec]) -> TraceArena {
+    let mut arena = TraceArena::new();
+    if scenario.workload.is_micro() {
+        return arena;
+    }
+    for spec in specs {
+        let key = trace_fingerprint(scenario, spec);
+        arena
+            .entry(key)
+            .or_insert_with(|| Arc::new(build_cell_trace(scenario, spec)));
+    }
+    arena
+}
+
 fn cell_checks(config: &ClusterConfig, n_requests: usize, res: &RunResult) -> Vec<ShapeCheck> {
     let summary = res.summary();
     let mut checks = vec![
@@ -1217,7 +1294,7 @@ fn cell_checks(config: &ClusterConfig, n_requests: usize, res: &RunResult) -> Ve
     checks
 }
 
-fn run_cell(scenario: &Scenario, spec: &CellSpec) -> Cell {
+fn run_cell(scenario: &Scenario, spec: &CellSpec, arena: Option<&TraceArena>) -> Cell {
     let (out, checks) = match &scenario.workload {
         WorkloadSpec::PrefillMicrobench { input_tokens } => {
             let model = PowerModel::new(spec.config.perf.clone());
@@ -1232,13 +1309,18 @@ fn run_cell(scenario: &Scenario, spec: &CellSpec) -> Cell {
             (CellOut::Scalar(t as f64), Vec::new())
         }
         _ => {
-            let trace = build_cell_trace(scenario, spec);
+            // Arena hit: an Arc bump instead of rebuilding (and then
+            // deep-copying into the cluster) the whole request list.
+            let trace: Arc<Trace> = match arena.and_then(|a| a.get(&trace_fingerprint(scenario, spec))) {
+                Some(t) => Arc::clone(t),
+                None => Arc::new(build_cell_trace(scenario, spec)),
+            };
             let n_requests = trace.len();
             let mut opts = SimOptions::default();
             if let Some(p) = scenario.sample_period {
                 opts.sample_period = p;
             }
-            let res = sim::run(&spec.config, &trace, &opts);
+            let res = sim::run_shared(&spec.config, &trace, &opts);
             let checks = cell_checks(&spec.config, n_requests, &res);
             (CellOut::Sim(res), checks)
         }
@@ -1671,6 +1753,65 @@ mod tests {
         let bad = Scenario::new("t", presets::p4d4(600.0))
             .axis(Axis::Tenants(vec!["chat:0.4:interactive".into()]));
         assert!(bad.validate().is_err(), "shares must sum to 1");
+    }
+
+    #[test]
+    fn trace_arena_shares_equal_workloads_and_splits_distinct_ones() {
+        // Policy axis sweeps the cluster, not the workload: one arena
+        // entry feeds both cells. A rate axis changes node_qps: two
+        // entries.
+        let pol = Scenario::new("t", presets::p4d4(600.0))
+            .requests(30)
+            .axis(Axis::Policy(vec![ControlPolicy::Static, ControlPolicy::DynPowerGpu]));
+        let specs = Study::new(pol.clone()).cells().unwrap();
+        let arena = build_trace_arena(&pol, &specs);
+        assert_eq!(arena.len(), 1, "same workload -> one shared trace");
+        let rates = Scenario::new("t", presets::p4d4(600.0))
+            .requests(30)
+            .axis(Axis::RatePerGpu(vec![0.5, 1.0]));
+        let specs = Study::new(rates.clone()).cells().unwrap();
+        let arena = build_trace_arena(&rates, &specs);
+        assert_eq!(arena.len(), 2, "distinct rates -> distinct traces");
+        // Arena entries are exactly what the per-cell builder makes.
+        for spec in &specs {
+            let shared = &arena[&trace_fingerprint(&rates, spec)];
+            let fresh = build_cell_trace(&rates, spec);
+            assert_eq!(shared.requests, fresh.requests);
+        }
+        // Microbench scenarios build nothing.
+        let micro = Scenario::new("t", presets::p4d4(600.0))
+            .workload(WorkloadSpec::PrefillMicrobench { input_tokens: 1024 })
+            .axis(Axis::Batch(vec![1, 2]));
+        let specs = Study::new(micro.clone()).cells().unwrap();
+        assert!(build_trace_arena(&micro, &specs).is_empty());
+    }
+
+    #[test]
+    fn arena_backed_study_matches_uncached_reference() {
+        // The tentpole equivalence at unit scale (the full golden suite
+        // lives in tests/storage_golden.rs): shared-arena cells must be
+        // bit-identical to per-cell trace builds at both thread counts.
+        let s = Scenario::new("t", presets::p4d4(600.0))
+            .requests(40)
+            .seed(7)
+            .axis(Axis::Policy(vec![ControlPolicy::Static, ControlPolicy::DynPowerGpu]))
+            .axis(Axis::RatePerGpu(vec![1.0, 2.0]));
+        let cached = Study::new(s.clone()).run(Some(1)).unwrap();
+        let uncached = Study::new(s.clone()).run_uncached(Some(1)).unwrap();
+        let par = Study::new(s).run(Some(4)).unwrap();
+        for (a, b) in cached.cells.iter().zip(&uncached.cells) {
+            let (ra, rb) = (a.result().unwrap(), b.result().unwrap());
+            assert_eq!(ra.records.len(), rb.records.len());
+            for (x, y) in ra.records.iter().zip(&rb.records) {
+                assert_eq!(x.id, y.id);
+                assert_eq!(x.finish, y.finish);
+            }
+            assert_eq!(a.goodput_qps(), b.goodput_qps());
+        }
+        for (a, c) in cached.cells.iter().zip(&par.cells) {
+            assert_eq!(a.goodput_qps(), c.goodput_qps());
+            assert_eq!(a.attainment(), c.attainment());
+        }
     }
 
     #[test]

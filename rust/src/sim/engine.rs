@@ -13,6 +13,8 @@
 //! the options type and the `run` façade, plus the engine-level
 //! regression tests.
 
+use std::sync::Arc;
+
 use crate::config::ClusterConfig;
 use crate::metrics::RunResult;
 use crate::types::{Micros, SECOND};
@@ -41,7 +43,16 @@ impl Default for SimOptions {
 
 /// Run one experiment: a trace through a cluster configuration.
 pub fn run(cfg: &ClusterConfig, trace: &Trace, opts: &SimOptions) -> RunResult {
-    crate::cluster::Cluster::new(cfg.clone(), trace.clone(), opts.clone()).run()
+    run_shared(cfg, &Arc::new(trace.clone()), opts)
+}
+
+/// [`run`] over a shared trace arena: the cluster borrows the `Arc`
+/// instead of deep-copying the request list. This is the study hot
+/// path — a sweep cell whose trace is already built bumps a refcount
+/// where it used to clone tens of thousands of requests. Bit-identical
+/// to [`run`] (which now delegates here).
+pub fn run_shared(cfg: &ClusterConfig, trace: &Arc<Trace>, opts: &SimOptions) -> RunResult {
+    crate::cluster::Cluster::new(cfg.clone(), Arc::clone(trace), opts.clone()).run()
 }
 
 #[cfg(test)]

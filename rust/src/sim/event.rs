@@ -14,36 +14,13 @@
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
-use crate::types::{Micros, Request};
-
-/// A request travelling the decode pipeline (KV handle + bookkeeping).
-#[derive(Debug, Clone)]
-pub struct DecodeItem {
-    pub req: Request,
-    pub prefill_start: Micros,
-    pub first_token: Micros,
-    /// Output tokens generated so far *including* the prefill-produced
-    /// first token.
-    pub tokens_done: u32,
-    /// Prompt tokens served from the prefix cache (skipped at prefill
-    /// but still resident context for decode and KV accounting). Zero
-    /// unless the memory subsystem is active and the lookup hit.
-    pub cached_tokens: u32,
-}
-
-impl DecodeItem {
-    /// Live context length (prompt + generated) — drives KV-read cost.
-    pub fn ctx_tokens(&self) -> u32 {
-        self.req.input_tokens + self.cached_tokens + self.tokens_done
-    }
-
-    pub fn remaining(&self) -> u32 {
-        self.req.output_tokens.saturating_sub(self.tokens_done)
-    }
-}
+use crate::types::Micros;
+use crate::util::slab::SlotId;
 
 /// Simulation events. Variants carry the minimum needed; `epoch` guards
-/// against stale completions after a GPU role change.
+/// against stale completions after a GPU role change. Requests travel as
+/// slab [`SlotId`]s (the `Cluster`'s request store owns the state), so
+/// every variant is a small POD and the calendar buckets stay compact.
 #[derive(Debug)]
 pub enum Event {
     /// Next trace arrival is due.
@@ -53,8 +30,8 @@ pub enum Event {
     /// GPU's current role behavior interprets it; see `sim::worker`).
     StepDone { gpu: usize, epoch: u64 },
     /// A KV transfer landed on decode `gpu`; `src_node` owns the ring
-    /// slot being released.
-    KvArrive { gpu: usize, src_node: usize, item: DecodeItem },
+    /// slot being released. `slot` indexes the cluster's request store.
+    KvArrive { gpu: usize, src_node: usize, slot: SlotId },
     /// Controller (policy) tick.
     ControllerTick,
     /// Pending power raises may be due.
@@ -128,8 +105,11 @@ struct Calendar {
 
 impl Calendar {
     fn new(capacity: usize) -> Self {
+        // Each bucket rarely holds more than a handful of events at once;
+        // pre-sizing keeps steady-state pushes allocation-free (the
+        // alloc-count test asserts zero allocations across 1k events).
         let mut buckets = Vec::with_capacity(N_BUCKETS);
-        buckets.resize_with(N_BUCKETS, BinaryHeap::new);
+        buckets.resize_with(N_BUCKETS, || BinaryHeap::with_capacity(8));
         Calendar {
             buckets,
             cursor: 0,
@@ -291,26 +271,6 @@ mod tests {
             })
             .collect();
         assert_eq!(order, vec![1, 2, 3]);
-    }
-
-    #[test]
-    fn decode_item_context() {
-        let item = DecodeItem {
-            req: Request {
-                id: crate::types::RequestId(0),
-                arrival: 0,
-                input_tokens: 500,
-                output_tokens: 10,
-                slo: crate::types::Slo::paper_default(),
-                tenant: 0,
-            },
-            prefill_start: 0,
-            first_token: 0,
-            tokens_done: 3,
-            cached_tokens: 0,
-        };
-        assert_eq!(item.ctx_tokens(), 503);
-        assert_eq!(item.remaining(), 7);
     }
 
     /// Tag pops so two queues can be compared event-by-event.

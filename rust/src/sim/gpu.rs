@@ -1,18 +1,14 @@
 //! Per-GPU simulated worker state (prefill / decode / coalesced).
+//!
+//! Queues and batches hold slab [`SlotId`]s into the cluster's
+//! `RequestStore` — shuffling requests between pools moves 8-byte ids,
+//! not whole `Request` structs (see `cluster::store`).
 
 use std::collections::VecDeque;
 
-use crate::coordinator::batcher::ChunkProgress;
-use crate::sim::event::DecodeItem;
-use crate::types::{Micros, Request, Role};
-
-/// Chunked-prefill bookkeeping on a coalesced GPU.
-#[derive(Debug, Clone)]
-pub struct ChunkMeta {
-    pub prog: ChunkProgress,
-    /// When the first chunk of this prompt began executing.
-    pub started: Option<Micros>,
-}
+use crate::cluster::store::RequestStore;
+use crate::types::{Micros, Role};
+use crate::util::slab::SlotId;
 
 /// One simulated GPU worker.
 #[derive(Debug)]
@@ -31,23 +27,28 @@ pub struct GpuSim {
     pub failed: bool,
 
     // --- prefill ---
-    pub pf_queue: VecDeque<Request>,
+    pub pf_queue: VecDeque<SlotId>,
     pub pf_queued_tokens: u64,
-    /// In-flight prefill batch: (request, prefill_start).
-    pub pf_batch: Vec<(Request, Micros)>,
+    /// In-flight prefill batch (each slot's `prefill_start` is stamped in
+    /// the store when the batch forms).
+    pub pf_batch: Vec<SlotId>,
     /// Completed prefills waiting for a free ring slot (backpressure).
-    pub publish_wait: VecDeque<DecodeItem>,
+    pub publish_wait: VecDeque<SlotId>,
 
     // --- decode ---
-    pub dec_pending: VecDeque<DecodeItem>,
-    pub dec_active: Vec<DecodeItem>,
+    pub dec_pending: VecDeque<SlotId>,
+    pub dec_active: Vec<SlotId>,
     /// Duration of the decode step currently in flight.
     pub dec_step_time: Micros,
 
     // --- coalesced ---
-    pub co_queue: VecDeque<ChunkMeta>,
+    pub co_queue: VecDeque<SlotId>,
+    /// Queued coalesced prompt tokens remaining, maintained incrementally
+    /// (+= on route, -= as chunks advance, = 0 on fail drain) so the
+    /// router reads a counter instead of walking the queue.
+    pub co_tokens: u64,
     /// Prompts completing in the in-flight coalesced step.
-    pub co_finishing: Vec<(Request, Micros)>,
+    pub co_finishing: Vec<SlotId>,
     /// Chunk tokens being processed in the in-flight step.
     pub co_step_chunk: u32,
 }
@@ -60,15 +61,18 @@ impl GpuSim {
             epoch: 0,
             busy: false,
             failed: false,
-            pf_queue: VecDeque::new(),
+            // Pre-sized so steady-state traffic never grows them (the
+            // alloc-count test asserts zero allocations across 1k events).
+            pf_queue: VecDeque::with_capacity(32),
             pf_queued_tokens: 0,
-            pf_batch: Vec::new(),
-            publish_wait: VecDeque::new(),
-            dec_pending: VecDeque::new(),
-            dec_active: Vec::new(),
+            pf_batch: Vec::with_capacity(16),
+            publish_wait: VecDeque::with_capacity(32),
+            dec_pending: VecDeque::with_capacity(32),
+            dec_active: Vec::with_capacity(32),
             dec_step_time: 0,
-            co_queue: VecDeque::new(),
-            co_finishing: Vec::new(),
+            co_queue: VecDeque::with_capacity(32),
+            co_tokens: 0,
+            co_finishing: Vec::with_capacity(16),
             co_step_chunk: 0,
         }
     }
@@ -83,9 +87,9 @@ impl GpuSim {
         self.draining_to.is_none() && !self.failed
     }
 
-    pub fn push_prefill(&mut self, r: Request) {
-        self.pf_queued_tokens += r.input_tokens as u64;
-        self.pf_queue.push_back(r);
+    pub fn push_prefill(&mut self, slot: SlotId, input_tokens: u32) {
+        self.pf_queued_tokens += input_tokens as u64;
+        self.pf_queue.push_back(slot);
     }
 
     pub fn pop_prefill_tokens(&mut self, tokens: u64) {
@@ -98,17 +102,20 @@ impl GpuSim {
     }
 
     /// Mean live context across active decode requests.
-    pub fn mean_ctx(&self) -> f64 {
+    pub fn mean_ctx(&self, store: &RequestStore) -> f64 {
         if self.dec_active.is_empty() {
             return 0.0;
         }
-        self.dec_active.iter().map(|d| d.ctx_tokens() as f64).sum::<f64>()
+        self.dec_active
+            .iter()
+            .map(|&s| store.get(s).ctx_tokens() as f64)
+            .sum::<f64>()
             / self.dec_active.len() as f64
     }
 
-    /// Queued coalesced prompt tokens remaining.
+    /// Queued coalesced prompt tokens remaining (O(1) counter).
     pub fn co_queued_tokens(&self) -> u64 {
-        self.co_queue.iter().map(|c| c.prog.remaining() as u64).sum()
+        self.co_tokens
     }
 
     /// Has this GPU fully drained (safe to flip roles)?
@@ -141,7 +148,8 @@ impl GpuSim {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::types::{RequestId, Slo};
+    use crate::cluster::store::ReqState;
+    use crate::types::{Request, RequestId, Slo};
 
     fn req(id: u64, input: u32) -> Request {
         Request {
@@ -154,11 +162,20 @@ mod tests {
         }
     }
 
+    fn slot(store: &mut RequestStore, id: u64, input: u32, tokens_done: u32) -> SlotId {
+        let mut st = ReqState::new(req(id, input));
+        st.tokens_done = tokens_done;
+        store.insert(st)
+    }
+
     #[test]
     fn prefill_token_accounting() {
+        let mut store = RequestStore::new();
         let mut g = GpuSim::new(Role::Prefill);
-        g.push_prefill(req(0, 1000));
-        g.push_prefill(req(1, 500));
+        let a = slot(&mut store, 0, 1000, 0);
+        let b = slot(&mut store, 1, 500, 0);
+        g.push_prefill(a, store.get(a).req.input_tokens);
+        g.push_prefill(b, store.get(b).req.input_tokens);
         assert_eq!(g.pf_queued_tokens, 1500);
         g.pop_prefill_tokens(1000);
         assert_eq!(g.pf_queued_tokens, 500);
@@ -176,15 +193,10 @@ mod tests {
 
     #[test]
     fn drained_requires_everything_empty() {
+        let mut store = RequestStore::new();
         let mut g = GpuSim::new(Role::Decode);
         assert!(g.drained());
-        g.dec_active.push(DecodeItem {
-            req: req(0, 100),
-            prefill_start: 0,
-            first_token: 0,
-            tokens_done: 1,
-            cached_tokens: 0,
-        });
+        g.dec_active.push(slot(&mut store, 0, 100, 1));
         assert!(!g.drained());
         g.dec_active.clear();
         g.busy = true;
@@ -193,6 +205,7 @@ mod tests {
 
     #[test]
     fn util_by_role() {
+        let mut store = RequestStore::new();
         let mut g = GpuSim::new(Role::Prefill);
         assert_eq!(g.util(), 0.0);
         g.busy = true;
@@ -201,13 +214,7 @@ mod tests {
         d.busy = true;
         let low = d.util();
         for i in 0..24 {
-            d.dec_active.push(DecodeItem {
-                req: req(i, 100),
-                prefill_start: 0,
-                first_token: 0,
-                tokens_done: 1,
-                cached_tokens: 0,
-            });
+            d.dec_active.push(slot(&mut store, i, 100, 1));
         }
         assert!(d.util() > low);
         assert!(d.util() <= 1.0);
@@ -215,17 +222,26 @@ mod tests {
 
     #[test]
     fn mean_ctx_over_active() {
+        let mut store = RequestStore::new();
         let mut g = GpuSim::new(Role::Decode);
-        assert_eq!(g.mean_ctx(), 0.0);
+        assert_eq!(g.mean_ctx(&store), 0.0);
         for (i, inp) in [(0u64, 100u32), (1, 300)] {
-            g.dec_active.push(DecodeItem {
-                req: req(i, inp),
-                prefill_start: 0,
-                first_token: 0,
-                tokens_done: 10,
-                cached_tokens: 0,
-            });
+            g.dec_active.push(slot(&mut store, i, inp, 10));
         }
-        assert!((g.mean_ctx() - 210.0).abs() < 1e-9); // (110 + 310) / 2
+        assert!((g.mean_ctx(&store) - 210.0).abs() < 1e-9); // (110 + 310) / 2
+    }
+
+    #[test]
+    fn co_tokens_counter_is_o1() {
+        let mut store = RequestStore::new();
+        let mut g = GpuSim::new(Role::Coalesced);
+        let a = slot(&mut store, 0, 4000, 0);
+        g.co_queue.push_back(a);
+        g.co_tokens += 4000;
+        assert_eq!(g.co_queued_tokens(), 4000);
+        // A chunk advances 2048 tokens: the counter mirrors the store.
+        let adv = store.get_mut(a).chunk_advance(2048);
+        g.co_tokens -= adv as u64;
+        assert_eq!(g.co_queued_tokens(), store.get(a).chunk_remaining() as u64);
     }
 }

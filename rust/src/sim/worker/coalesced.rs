@@ -4,7 +4,7 @@
 
 use crate::cluster::Cluster;
 use crate::coordinator::batcher;
-use crate::sim::event::{DecodeItem, Event};
+use crate::sim::event::Event;
 use crate::sim::worker::RoleBehavior;
 use crate::types::{GpuId, Role};
 
@@ -25,10 +25,20 @@ impl RoleBehavior for CoalescedBehavior {
 }
 
 impl Cluster {
+    /// Start the next coalesced step if possible, then re-sync the hot
+    /// mirror: chunk advances, queue pops and admissions all change
+    /// tick-visible fields without passing through `reindex` (coalesced
+    /// workers are not in the routing indexes).
     pub(crate) fn kick_coalesced(&mut self, gi: usize) {
+        self.kick_coalesced_inner(gi);
+        self.sync_hot(gi);
+    }
+
+    fn kick_coalesced_inner(&mut self, gi: usize) {
         // Chunk budget is a per-SKU constant (heterogeneous fleets may
         // mix chunk sizes; the implicit fleet reads cfg.perf as before).
         let chunk_budget = self.model_of(gi).cfg().chunk_tokens;
+        let store = &mut self.store;
         let g = &mut self.gpus[gi];
         if g.busy || g.failed || g.role != Role::Coalesced {
             return;
@@ -43,27 +53,29 @@ impl Cluster {
             &self.cfg.batch,
         );
         for _ in 0..n {
-            let item = g.dec_pending.pop_front().unwrap();
-            g.dec_active.push(item);
+            let s = g.dec_pending.pop_front().unwrap();
+            g.dec_active.push(s);
         }
-        // Take the next prefill chunk directly over the meta queue —
+        // Take the next prefill chunk directly over the slot queue —
         // same packing as `batcher::take_chunk` (head-first, spilling
         // into later prompts when the head completes inside the budget)
         // but in place: no cloned progress queue per iteration.
         let now = self.now;
-        let done_before = g.co_queue.front().map_or(0, |c| c.prog.done_tokens);
+        let done_before = g.co_queue.front().map_or(0, |&s| store.get(s).chunk_done);
         let mut used = 0u32;
         while used < chunk_budget {
-            let Some(head) = g.co_queue.front_mut() else { break };
-            if head.started.is_none() {
+            let Some(&head) = g.co_queue.front() else { break };
+            let st = store.get_mut(head);
+            if st.started.is_none() {
                 // The chunk reached this prompt: its execution starts now.
-                head.started = Some(now);
+                st.started = Some(now);
             }
-            used += head.prog.advance(chunk_budget - used);
-            if head.prog.complete() {
-                let meta = g.co_queue.pop_front().unwrap();
-                g.co_finishing
-                    .push((meta.prog.request, meta.started.unwrap_or(now)));
+            let adv = st.chunk_advance(chunk_budget - used);
+            used += adv;
+            g.co_tokens -= adv as u64;
+            if st.chunk_complete() {
+                let s = g.co_queue.pop_front().unwrap();
+                g.co_finishing.push(s);
             } else {
                 break;
             }
@@ -74,7 +86,7 @@ impl Cluster {
         }
         g.busy = true;
         let batch = g.dec_active.len();
-        let ctx = g.mean_ctx();
+        let ctx = g.mean_ctx(store);
         let power = self.power.effective(GpuId(gi), self.now);
         let t = self
             .model_of(gi)
@@ -95,23 +107,34 @@ impl Cluster {
         // Drain-and-restore keeps co_finishing's capacity across steps.
         let mut finishing = std::mem::take(&mut self.gpus[gi].co_finishing);
         let dynamic = self.policy.is_dynamic();
-        for (req, started) in finishing.drain(..) {
+        for slot in finishing.drain(..) {
+            let (arrival, ttft_slo, output_tokens, started) = {
+                let st = self.store.get(slot);
+                (
+                    st.req.arrival,
+                    st.req.slo.ttft,
+                    st.req.output_tokens,
+                    st.started.unwrap_or(self.now),
+                )
+            };
             if dynamic {
-                let ratio = (self.now - req.arrival) as f64 / req.slo.ttft as f64;
+                let ratio = (self.now - arrival) as f64 / ttft_slo as f64;
                 self.policy.observe_ttft(self.now, ratio);
             }
-            if req.output_tokens <= 1 {
+            if output_tokens <= 1 {
                 let now = self.now;
-                self.push_record(&req, started, now, now);
+                let st = self.store.remove(slot);
+                self.push_record(&st.req, started, now, now);
                 continue;
             }
-            self.gpus[gi].dec_pending.push_back(DecodeItem {
-                req,
-                prefill_start: started,
-                first_token: self.now,
-                tokens_done: 1,
-                cached_tokens: 0,
-            });
+            {
+                let st = self.store.get_mut(slot);
+                st.prefill_start = started;
+                st.first_token = self.now;
+                st.tokens_done = 1;
+                st.cached_tokens = 0;
+            }
+            self.gpus[gi].dec_pending.push_back(slot);
         }
         self.gpus[gi].co_finishing = finishing;
         // Decode completions, into the shared finished-items scratch.
@@ -120,12 +143,14 @@ impl Cluster {
         finished.clear();
         let mut tpot_sample = None;
         {
+            let store = &mut self.store;
             let g = &mut self.gpus[gi];
             let mut idx = 0;
             while idx < g.dec_active.len() {
-                g.dec_active[idx].tokens_done += 1;
-                ratio_sum += step as f64 / g.dec_active[idx].req.slo.tpot as f64;
-                if g.dec_active[idx].remaining() == 0 {
+                let st = store.get_mut(g.dec_active[idx]);
+                st.tokens_done += 1;
+                ratio_sum += step as f64 / st.req.slo.tpot as f64;
+                if st.remaining() == 0 {
                     finished.push(g.dec_active.swap_remove(idx));
                 } else {
                     idx += 1;
@@ -141,9 +166,10 @@ impl Cluster {
                 self.policy.observe_tpot(self.now, ratio);
             }
         }
-        for item in finished.drain(..) {
+        for slot in finished.drain(..) {
             let now = self.now;
-            self.push_record(&item.req, item.prefill_start, item.first_token, now);
+            let st = self.store.remove(slot);
+            self.push_record(&st.req, st.prefill_start, st.first_token, now);
         }
         self.scratch_done = finished;
         self.kick_coalesced(gi);
@@ -152,11 +178,12 @@ impl Cluster {
 
 #[cfg(test)]
 mod tests {
+    use std::sync::Arc;
+
+    use crate::cluster::store::ReqState;
     use crate::cluster::Cluster;
     use crate::config::presets;
-    use crate::coordinator::batcher::ChunkProgress;
     use crate::sim::engine::SimOptions;
-    use crate::sim::gpu::ChunkMeta;
     use crate::types::{Request, RequestId, Slo};
     use crate::workload::Trace;
 
@@ -174,7 +201,7 @@ mod tests {
     fn cluster() -> Cluster {
         Cluster::new(
             presets::coalesced(750.0),
-            Trace::default(),
+            Arc::new(Trace::default()),
             SimOptions::default(),
         )
     }
@@ -188,22 +215,25 @@ mod tests {
         let budget = cl.cfg.perf.chunk_tokens;
         assert!(budget > 300, "test assumes the first prompt fits one chunk");
         for (id, toks) in [(0u64, 300u32), (1, 5000)] {
-            cl.gpus[0].co_queue.push_back(ChunkMeta {
-                prog: ChunkProgress::new(req(id, toks)),
-                started: None,
-            });
+            let slot = cl.store.insert(ReqState::new(req(id, toks)));
+            cl.gpus[0].co_tokens += toks as u64;
+            cl.gpus[0].co_queue.push_back(slot);
         }
+        cl.sync_hot(0);
         cl.kick_coalesced(0);
         let g = &cl.gpus[0];
         assert_eq!(g.co_step_chunk, budget);
         assert_eq!(g.co_finishing.len(), 1);
-        assert_eq!(g.co_finishing[0].0.id.0, 0);
-        assert_eq!(g.co_finishing[0].1, 0, "head's started stamp");
-        let head = g.co_queue.front().unwrap();
-        assert_eq!(head.prog.request.id.0, 1);
-        assert_eq!(head.prog.done_tokens, budget - 300);
+        let done = cl.store.get(g.co_finishing[0]);
+        assert_eq!(done.req.id.0, 0);
+        assert_eq!(done.started, Some(0), "head's started stamp");
+        let head = cl.store.get(*g.co_queue.front().unwrap());
+        assert_eq!(head.req.id.0, 1);
+        assert_eq!(head.chunk_done, budget - 300);
         assert_eq!(head.started, Some(0), "reached prompt is marked started");
         assert!(g.busy);
+        // The incremental counter tracked both advances.
+        assert_eq!(g.co_queued_tokens(), (5000 - (budget - 300)) as u64);
     }
 
     #[test]

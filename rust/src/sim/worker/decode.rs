@@ -3,9 +3,10 @@
 
 use crate::cluster::Cluster;
 use crate::coordinator::batcher;
-use crate::sim::event::{DecodeItem, Event};
+use crate::sim::event::Event;
 use crate::sim::worker::RoleBehavior;
 use crate::types::{GpuId, Role};
+use crate::util::slab::SlotId;
 
 pub struct DecodeBehavior;
 
@@ -26,24 +27,24 @@ impl RoleBehavior for DecodeBehavior {
 impl Cluster {
     /// A KV transfer landed: ingest, release the producing node's ring
     /// slot, and let stalled prefill GPUs publish again.
-    pub(crate) fn on_kv_arrive(&mut self, gi: usize, src_node: usize, item: DecodeItem) {
+    pub(crate) fn on_kv_arrive(&mut self, gi: usize, src_node: usize, slot: SlotId) {
         self.ring_used[src_node] = self.ring_used[src_node].saturating_sub(1);
         // Re-transfers deferred on a full ring go out first, FIFO, as
         // soon as a slot frees (deterministic backpressure; strictly a
         // no-op while the wait queue is empty).
         while self.ring_free(src_node) > 0 {
-            let Some((via, it)) = self.retransfer_wait[src_node].pop_front() else {
+            let Some((via, s)) = self.retransfer_wait[src_node].pop_front() else {
                 break;
             };
-            self.redispatch_decode(via, src_node, None, it);
+            self.redispatch_decode(via, src_node, None, s);
         }
         if self.gpus[gi].failed {
             // The target died while the KV was in flight: re-fetch to a
             // surviving worker (conservation: the request is never lost).
-            self.redispatch_decode(gi, src_node, Some(gi), item);
+            self.redispatch_decode(gi, src_node, Some(gi), slot);
             return;
         }
-        self.gpus[gi].dec_pending.push_back(item);
+        self.gpus[gi].dec_pending.push_back(slot);
         self.reindex(gi); // occupancy grew: update before any publish picks
         // A slot freed: stalled prefill GPUs may publish now. Only live
         // prefill-role workers can hold publish_wait items (they drain
@@ -64,12 +65,23 @@ impl Cluster {
         crate::sim::worker::behavior(role).kick(self, gi);
     }
 
+    /// Start the next decode step if possible, then re-sync the hot
+    /// mirror: admissions and preemption swaps move slots between
+    /// pending and active without passing through `reindex` (the total
+    /// decode load is unchanged), but the tick-rate readers see the
+    /// split counts.
     pub(crate) fn kick_decode(&mut self, gi: usize) {
+        self.kick_decode_inner(gi);
+        self.sync_hot(gi);
+    }
+
+    fn kick_decode_inner(&mut self, gi: usize) {
         // In-progress KV demotions occupy the copy engines: the next
         // step waits out the eviction stall (a MemEvict event resumes).
         if self.mem.stalled(gi, self.now) {
             return;
         }
+        let store = &self.store;
         let g = &mut self.gpus[gi];
         if g.busy || g.failed || g.role != Role::Decode {
             return;
@@ -83,8 +95,8 @@ impl Cluster {
                 &self.cfg.batch,
             );
             for _ in 0..n {
-                let item = g.dec_pending.pop_front().unwrap();
-                g.dec_active.push(item);
+                let s = g.dec_pending.pop_front().unwrap();
+                g.dec_active.push(s);
             }
             // Priority-aware preemption (multi-tenant runs only; with no
             // tenant classes every tier is standard and the strict
@@ -112,7 +124,7 @@ impl Cluster {
                     .dec_pending
                     .iter()
                     .enumerate()
-                    .map(|(i, it)| (i, tier_of(it.req.tenant)))
+                    .map(|(i, &s)| (i, tier_of(store.get(s).req.tenant)))
                     .min_by_key(|&(i, t)| (t, i))
                     .unwrap();
                 // Victim: highest tier number; ties break to the last
@@ -121,7 +133,7 @@ impl Cluster {
                     .dec_active
                     .iter()
                     .enumerate()
-                    .map(|(i, it)| (i, tier_of(it.req.tenant)))
+                    .map(|(i, &s)| (i, tier_of(store.get(s).req.tenant)))
                     .max_by_key(|&(i, t)| (t, i))
                     .unwrap();
                 if promote_tier < victim_tier {
@@ -133,12 +145,13 @@ impl Cluster {
                 }
             }
         }
+        let g = &self.gpus[gi];
         if g.dec_active.is_empty() {
             return;
         }
-        g.busy = true;
         let batch = g.dec_active.len();
-        let ctx = g.mean_ctx();
+        let ctx = g.mean_ctx(&self.store);
+        self.gpus[gi].busy = true;
         let power = self.power.effective(GpuId(gi), self.now);
         let t = self.model_of(gi).decode_step_time(batch, ctx, power);
         self.gpus[gi].dec_step_time = t;
@@ -160,12 +173,14 @@ impl Cluster {
         finished.clear();
         let mut tpot_sample = None;
         {
+            let store = &mut self.store;
             let g = &mut self.gpus[gi];
             let mut idx = 0;
             while idx < g.dec_active.len() {
-                g.dec_active[idx].tokens_done += 1;
-                ratio_sum += step as f64 / g.dec_active[idx].req.slo.tpot as f64;
-                if g.dec_active[idx].remaining() == 0 {
+                let st = store.get_mut(g.dec_active[idx]);
+                st.tokens_done += 1;
+                ratio_sum += step as f64 / st.req.slo.tpot as f64;
+                if st.remaining() == 0 {
                     finished.push(g.dec_active.swap_remove(idx));
                 } else {
                     idx += 1;
@@ -183,16 +198,19 @@ impl Cluster {
             }
         }
         let n_finished = finished.len();
-        for item in finished.drain(..) {
+        for slot in finished.drain(..) {
+            // The slot dies here: take the state out, then settle memory
+            // and the completion record from the owned copy.
+            let st = self.store.remove(slot);
             if self.mem.active() {
                 // Turn the reservation into a prefix-cache block for the
                 // request's conversation (or release it outright).
-                let bytes = self.kv_bytes_for(gi, &item);
-                let conv = self.conv_of.get(&item.req.id.0).map(|c| c.0);
-                self.mem.finish(gi, conv, bytes, item.ctx_tokens());
+                let bytes = self.kv_bytes_for(gi, &st);
+                let conv = self.conv_of.get(&st.req.id.0).map(|c| c.0);
+                self.mem.finish(gi, conv, bytes, st.ctx_tokens());
             }
             let now = self.now;
-            self.push_record(&item.req, item.prefill_start, item.first_token, now);
+            self.push_record(&st.req, st.prefill_start, st.first_token, now);
         }
         self.scratch_done = finished;
         if n_finished > 0 {
@@ -214,10 +232,10 @@ impl Cluster {
         if !self.orphan_items.is_empty() {
             let node = self.node_of(gi);
             let items = std::mem::take(&mut self.orphan_items);
-            for it in items {
+            for s in items {
                 // The original KV source is gone (orphans outlive their
                 // producer); the freshly-freed GPU re-sources the fetch.
-                self.redispatch_decode(gi, node, None, it);
+                self.redispatch_decode(gi, node, None, s);
             }
         }
         let mut k = 0;

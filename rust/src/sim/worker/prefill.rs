@@ -3,7 +3,7 @@
 
 use crate::cluster::Cluster;
 use crate::coordinator::batcher;
-use crate::sim::event::{DecodeItem, Event};
+use crate::sim::event::Event;
 use crate::sim::worker::RoleBehavior;
 use crate::types::{GpuId, Role};
 
@@ -43,19 +43,30 @@ impl Cluster {
         // the allocator. Taken only after the guards so every return path
         // past this point restores it.
         let mut scratch = std::mem::take(&mut self.scratch_batch);
+        let store = &self.store;
         let g = &mut self.gpus[gi];
-        let total_tokens =
-            batcher::form_prefill_batch_into(&mut g.pf_queue, &self.cfg.batch, &mut scratch);
+        let total_tokens = batcher::form_prefill_batch_ids(
+            &mut g.pf_queue,
+            &self.cfg.batch,
+            |s| store.get(s).req.input_tokens,
+            &mut scratch,
+        );
         if scratch.is_empty() {
             self.scratch_batch = scratch;
             return;
         }
         g.pop_prefill_tokens(total_tokens as u64);
         g.pf_batch.clear();
-        g.pf_batch.extend(scratch.drain(..).map(|r| (r, now)));
+        g.pf_batch.extend(scratch.drain(..));
         g.busy = true;
         let epoch = g.epoch;
         self.scratch_batch = scratch;
+        // Stamp the batch's prefill start in the store (formerly the
+        // per-item tuple element in `pf_batch`).
+        for k in 0..self.gpus[gi].pf_batch.len() {
+            let s = self.gpus[gi].pf_batch[k];
+            self.store.get_mut(s).prefill_start = now;
+        }
         self.reindex(gi); // queue shrank: update the pick index
         let power = self.power.effective(GpuId(gi), now);
         let t = self.model_of(gi).prefill_batch_time(total_tokens, power);
@@ -70,29 +81,39 @@ impl Cluster {
         // Drain-and-restore keeps pf_batch's capacity across batches.
         let mut batch = std::mem::take(&mut self.gpus[gi].pf_batch);
         let dynamic = self.policy.is_dynamic();
-        for (req, prefill_start) in batch.drain(..) {
+        for slot in batch.drain(..) {
+            let (id, arrival, ttft_slo, output_tokens, prefill_start) = {
+                let st = self.store.get(slot);
+                (
+                    st.req.id.0,
+                    st.req.arrival,
+                    st.req.slo.ttft,
+                    st.req.output_tokens,
+                    st.prefill_start,
+                )
+            };
             if dynamic {
-                let ratio = (self.now - req.arrival) as f64 / req.slo.ttft as f64;
+                let ratio = (self.now - arrival) as f64 / ttft_slo as f64;
                 self.policy.observe_ttft(self.now, ratio);
             }
-            if req.output_tokens <= 1 {
+            if output_tokens <= 1 {
                 // Single-token request: done at prefill. Drop any parked
                 // prefix-hit state — it never reaches the decode pool.
-                self.mem.take_cached_tokens(req.id.0);
-                self.mem.take_fetch(req.id.0);
+                self.mem.take_cached_tokens(id);
+                self.mem.take_fetch(id);
                 let now = self.now;
-                self.push_record(&req, prefill_start, now, now);
+                let st = self.store.remove(slot);
+                self.push_record(&st.req, prefill_start, now, now);
                 continue;
             }
-            let id = req.id.0;
-            let item = DecodeItem {
-                req,
-                prefill_start,
-                first_token: self.now,
-                tokens_done: 1,
-                cached_tokens: self.mem.take_cached_tokens(id),
-            };
-            self.gpus[gi].publish_wait.push_back(item);
+            let cached = self.mem.take_cached_tokens(id);
+            {
+                let st = self.store.get_mut(slot);
+                st.first_token = self.now;
+                st.tokens_done = 1;
+                st.cached_tokens = cached;
+            }
+            self.gpus[gi].publish_wait.push_back(slot);
         }
         self.gpus[gi].pf_batch = batch;
         self.try_publish(gi);
@@ -108,7 +129,7 @@ impl Cluster {
     pub(crate) fn try_publish(&mut self, gi: usize) {
         let src_node = self.node_of(gi);
         while self.ring_used[src_node] < self.cfg.batch.ring_slots {
-            let Some(item) = self.gpus[gi].publish_wait.pop_front() else {
+            let Some(slot) = self.gpus[gi].publish_wait.pop_front() else {
                 break;
             };
             let target = self.pick_decode_gpu(None, src_node).or_else(|| {
@@ -120,7 +141,7 @@ impl Cluster {
             let Some(target) = target else {
                 // Every decode worker is down: park the item back; a
                 // recovery re-triggers publishing.
-                self.gpus[gi].publish_wait.push_front(item);
+                self.gpus[gi].publish_wait.push_front(slot);
                 break;
             };
             // Admission control: the decode pool must fit the context's
@@ -128,14 +149,14 @@ impl Cluster {
             // cannot evict enough stalls this publisher exactly like
             // ring backpressure (retried on completions/arrivals).
             if self.mem.active() {
-                let bytes = self.kv_bytes_for(target.0, &item);
+                let bytes = self.kv_bytes_for_slot(target.0, slot);
                 match self.mem.reserve(target.0, bytes) {
                     Ok(ev) => {
                         self.note_eviction(target.0, ev);
                         self.reindex(target.0);
                     }
                     Err(()) => {
-                        self.gpus[gi].publish_wait.push_front(item);
+                        self.gpus[gi].publish_wait.push_front(slot);
                         break;
                     }
                 }
@@ -144,13 +165,17 @@ impl Cluster {
             let same_node = self.node_of(target.0) == src_node;
             // Heterogeneous endpoints: the slower side's link binds. A
             // prefix-cache hit additionally pays its tier fetch here.
+            let (input, id) = {
+                let r = &self.store.get(slot).req;
+                (r.input_tokens, r.id.0)
+            };
             let t = self
                 .fleet
-                .kv_transfer_time_between(gi, target.0, item.req.input_tokens, same_node)
-                + self.mem.take_fetch(item.req.id.0);
+                .kv_transfer_time_between(gi, target.0, input, same_node)
+                + self.mem.take_fetch(id);
             self.events.push(
                 self.now + t,
-                Event::KvArrive { gpu: target.0, src_node, item },
+                Event::KvArrive { gpu: target.0, src_node, slot },
             );
         }
     }

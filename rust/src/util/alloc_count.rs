@@ -1,0 +1,52 @@
+//! Counting global allocator (compiled only with `--features alloc-count`).
+//!
+//! The DES claims an allocation-free steady state (DESIGN.md §10/§16):
+//! after warmup, stepping events must not touch the heap. That claim is
+//! enforced — not just asserted in prose — by `rust/tests/alloc_steady.rs`,
+//! which installs this allocator via the `#[global_allocator]` hook in
+//! `lib.rs`, warms a `rapid-600` run past every amortized-growth window,
+//! and requires the allocation counter delta across 1 000 simulated
+//! events to be exactly zero.
+//!
+//! Only allocation *events* are counted (alloc / realloc / alloc_zeroed);
+//! frees are deliberately ignored — a steady state that frees without
+//! allocating is impossible, and counting frees would double-charge
+//! drain-and-restore patterns.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// Thin wrapper over the system allocator that bumps a global counter on
+/// every allocation-side call.
+pub struct CountingAlloc;
+
+// SAFETY: defers entirely to `System`, which upholds the GlobalAlloc
+// contract; the counter bump has no effect on the returned memory.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+/// Total allocation events since process start. Diff two reads to count
+/// allocations across a region.
+pub fn allocation_count() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}

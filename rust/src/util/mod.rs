@@ -1,8 +1,11 @@
 //! Shared substrates: PRNG, statistics, JSON, parallel fan-out,
-//! property testing.
+//! property testing, slab storage.
 
+#[cfg(feature = "alloc-count")]
+pub mod alloc_count;
 pub mod check;
 pub mod json;
 pub mod par;
 pub mod rng;
+pub mod slab;
 pub mod stats;

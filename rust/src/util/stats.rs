@@ -58,7 +58,10 @@ impl SlidingWindow {
     pub fn new(span: Micros) -> Self {
         SlidingWindow {
             span,
-            entries: std::collections::VecDeque::new(),
+            // Sized for steady state up front: the controller's latency
+            // windows hold hundreds of samples, and growth mid-run would
+            // show up in the alloc-count steady-state test.
+            entries: std::collections::VecDeque::with_capacity(1024),
         }
     }
 

@@ -1,0 +1,55 @@
+//! Steady-state allocation discipline for the DES hot loop.
+//!
+//! Only compiled with `--features alloc-count`, which swaps in the
+//! counting `#[global_allocator]` (util::alloc_count). The contract
+//! under test: once a run is warmed — slab at its resident population,
+//! calendar buckets grown, metric windows full, scratch buffers sized —
+//! stepping the event loop performs ZERO heap allocations. Every
+//! container the per-event path touches is pre-sized at construction
+//! (see `Cluster::new`, `Slab::with_capacity`, `GpuSim::new`,
+//! `SlidingWindow::new`) or reused via take/restore scratch, so a
+//! regression here means someone put an allocating call back on the
+//! hot path.
+#![cfg(feature = "alloc-count")]
+
+use std::sync::Arc;
+
+use rapid::cluster::Cluster;
+use rapid::config::presets;
+use rapid::scenario::longbench_trace;
+use rapid::sim::SimOptions;
+use rapid::types::{Slo, SECOND};
+use rapid::util::alloc_count::allocation_count;
+
+#[test]
+fn warmed_des_window_is_allocation_free() {
+    let cfg = presets::rapid_600();
+    // Comfortable stationary load: no SLO violations in steady state, so
+    // the dynamic controller observes but never acts (an action would
+    // legitimately allocate for its decision-log entry).
+    let trace = longbench_trace(42, 1.0 * cfg.total_gpus() as f64, 2000, Slo::paper_default());
+    let opts = SimOptions {
+        // Telemetry samples legitimately append to the power/cap series;
+        // push the next sample past the horizon so the measured window
+        // contains only arrival/step/tick traffic.
+        sample_period: 3600 * SECOND,
+        ..SimOptions::default()
+    };
+    let mut cl = Cluster::new(cfg, Arc::new(trace), opts);
+    cl.prime();
+    // Warmup: grows every container to its steady level, including any
+    // that overshoot their initial pre-size (e.g. a metric window on a
+    // busy tick cadence). Capacity is never given back, so what the
+    // warmup grew stays grown.
+    let warmed = cl.step_events(6_000);
+    assert_eq!(warmed, 6_000, "trace too short: warmup ran off the end");
+
+    let before = allocation_count();
+    let stepped = cl.step_events(1_000);
+    let delta = allocation_count() - before;
+    assert_eq!(stepped, 1_000, "trace too short: window ran off the end");
+    assert_eq!(
+        delta, 0,
+        "steady-state DES window performed {delta} heap allocations"
+    );
+}

@@ -1,0 +1,93 @@
+//! Golden equivalence suite for the study-scale storage rework: slab
+//! request storage, shared trace arenas, and the SoA hot state are pure
+//! performance changes, so they must not perturb a single bit of any
+//! RunResult or emitted report.
+//!
+//! Four anchors: the rapid-600 and hetero-4p4d shipped configs through
+//! `sim::run` vs `sim::run_shared` (same `Arc<Trace>` reused twice),
+//! and the flash-crowd-curtail + kilo-grid shipped scenarios run
+//! arena-backed vs per-cell trace builds, at 1 and 4 threads, compared
+//! record-by-record and byte-for-byte through the emitters.
+
+#[path = "support/mod.rs"]
+mod support;
+
+use std::sync::Arc;
+
+use rapid::scenario::{emit, longbench_trace, Scenario, Study};
+use rapid::sim::{self, SimOptions};
+use rapid::types::Slo;
+
+fn run_vs_run_shared(config_file: &str, seed: u64) {
+    let cfg = support::shipped_config(config_file);
+    let trace = longbench_trace(
+        seed,
+        1.25 * cfg.total_gpus() as f64,
+        120,
+        Slo::paper_default(),
+    );
+    let opts = SimOptions::default();
+    let owned = sim::run(&cfg, &trace, &opts);
+    let shared = Arc::new(trace);
+    let a = sim::run_shared(&cfg, &shared, &opts);
+    // Second run off the SAME Arc: an engine that mutated the shared
+    // trace on its first pass would diverge here.
+    let b = sim::run_shared(&cfg, &shared, &opts);
+    support::assert_bit_identical(&owned, &a);
+    support::assert_bit_identical(&owned, &b);
+}
+
+#[test]
+fn run_shared_matches_run_on_rapid_600() {
+    run_vs_run_shared("rapid-600.toml", 17);
+}
+
+#[test]
+fn run_shared_matches_run_on_hetero_4p4d() {
+    run_vs_run_shared("hetero-4p4d.toml", 23);
+}
+
+fn shipped_scenario(name: &str, requests: usize) -> Scenario {
+    let path = format!("{}/scenarios/{name}", env!("CARGO_MANIFEST_DIR"));
+    let mut s = Scenario::from_toml_file(&path)
+        .unwrap_or_else(|e| panic!("{name}: {e}"));
+    s.requests = requests;
+    s
+}
+
+/// The tentpole equivalence: `Study::run` (shared trace arena) against
+/// `Study::run_uncached` (per-cell trace builds, the pre-arena code
+/// path kept as the golden reference), serial and fanned out.
+fn assert_arena_golden(s: Scenario) {
+    let arena1 = Study::new(s.clone()).run(Some(1)).unwrap();
+    let arena4 = Study::new(s.clone()).run(Some(4)).unwrap();
+    let fresh1 = Study::new(s).run_uncached(Some(1)).unwrap();
+
+    for (label, study) in [("1 thread", &arena1), ("4 threads", &arena4)] {
+        assert_eq!(study.cells.len(), fresh1.cells.len(), "{label}");
+        for (a, b) in study.cells.iter().zip(&fresh1.cells) {
+            assert_eq!(a.coords, b.coords, "{label}");
+            if let (Some(ra), Some(rb)) = (a.result(), b.result()) {
+                support::assert_bit_identical(ra, rb);
+            }
+        }
+    }
+    // And the full reports: emitter output is the artifact studies ship,
+    // so compare the exact bytes, not just the record series.
+    let golden_json = emit::emit(&fresh1, emit::Format::Json);
+    let golden_csv = emit::emit(&fresh1, emit::Format::Csv);
+    assert_eq!(emit::emit(&arena1, emit::Format::Json), golden_json);
+    assert_eq!(emit::emit(&arena4, emit::Format::Json), golden_json);
+    assert_eq!(emit::emit(&arena1, emit::Format::Csv), golden_csv);
+    assert_eq!(emit::emit(&arena4, emit::Format::Csv), golden_csv);
+}
+
+#[test]
+fn arena_study_bit_identical_on_flash_crowd_curtail() {
+    assert_arena_golden(shipped_scenario("flash-crowd-curtail.toml", 40));
+}
+
+#[test]
+fn arena_study_bit_identical_on_kilo_grid() {
+    assert_arena_golden(shipped_scenario("kilo-grid.toml", 40));
+}
