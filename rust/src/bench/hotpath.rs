@@ -273,6 +273,31 @@ pub fn run_suite(cfg: &SuiteConfig) -> BenchReport {
         }));
     }
 
+    // --- observability event recording -----------------------------------
+    if cfg.wants("obs/record_event") {
+        // What a traced run pays per record site: one counter bump plus
+        // a ring store (append below capacity, overwrite past it). The
+        // ring here is small enough that the steady state exercises the
+        // overwrite path — the one every long traced run lives in. Must
+        // stay allocation-free and within the flat-lookup budget of the
+        // router picks.
+        let mut sink = crate::obs::ObsSink::new(4096, (0..8u32).map(|i| i / 4).collect());
+        let mut t: u64 = 0;
+        push(bench("obs/record_event", cfg.target_ms, cfg.max_iters, || {
+            t += 1;
+            sink.record(std::hint::black_box(crate::obs::ObsEvent::GpuStep {
+                at: t,
+                gpu: (t % 8) as usize,
+                node: ((t % 8) / 4) as u32,
+                until: t + 900,
+                role: crate::types::Role::Decode,
+                reqs: 12,
+                tokens: 12,
+            }));
+            std::hint::black_box(sink.len());
+        }));
+    }
+
     // --- controller tick -----------------------------------------------
     if cfg.wants("controller/decide") {
         let mut ctl = Controller::new(ControllerConfig::default(), ControlPolicy::DynPowerGpu);
@@ -493,6 +518,13 @@ mod tests {
         let rep = run_suite(&tiny("env/event_apply"));
         let t = rep.entry("env/event_apply").expect("env entry");
         assert!(t.iters >= 3 && t.mean_us >= 0.0);
+    }
+
+    #[test]
+    fn obs_record_case_runs() {
+        let rep = run_suite(&tiny("obs/record_event"));
+        let t = rep.entry("obs/record_event").expect("obs entry");
+        assert!(t.iters >= 3 && t.per_sec() > 0.0);
     }
 
     #[test]

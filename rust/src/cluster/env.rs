@@ -80,6 +80,42 @@ impl Cluster {
         if !applied {
             return;
         }
+        if self.obs.is_some() {
+            let (kind, gpu): (&'static str, i64) = match ev.what {
+                EnvDisturbance::CapChange { scope: CapScope::Cluster, .. } => ("cap-cluster", -1),
+                EnvDisturbance::CapChange { scope: CapScope::Node(_), .. } => ("cap-node", -1),
+                EnvDisturbance::GpuFail { gpu } => ("gpu-fail", gpu as i64),
+                EnvDisturbance::GpuRecover { gpu } => ("gpu-recover", gpu as i64),
+                EnvDisturbance::ThermalThrottle { gpu, .. } => ("thermal-throttle", gpu as i64),
+                EnvDisturbance::ThermalClear { gpu } => ("thermal-clear", gpu as i64),
+            };
+            // Audited before the policy's own rebalance: `committed`
+            // reflects exactly what the mandatory safety work left on
+            // the books (the sum a `budget_trace` reconciliation sees).
+            let committed = self.power.committed_total();
+            if let Some(o) = self.obs.as_deref_mut() {
+                o.record(crate::obs::ObsEvent::EnvApplied { at: now, kind, gpu });
+                match ev.what {
+                    EnvDisturbance::CapChange { scope: CapScope::Cluster, watts } => {
+                        o.record(crate::obs::ObsEvent::BudgetChange {
+                            at: now,
+                            node: -1,
+                            watts,
+                            committed,
+                        });
+                    }
+                    EnvDisturbance::CapChange { scope: CapScope::Node(nd), watts } => {
+                        o.record(crate::obs::ObsEvent::BudgetChange {
+                            at: now,
+                            node: nd as i64,
+                            watts,
+                            committed,
+                        });
+                    }
+                    _ => {}
+                }
+            }
+        }
         // Let the policy rebalance immediately instead of waiting for
         // its next latency window / sampling tick.
         if self.policy.on_env_event(now, &ev) == EnvResponse::RedistributeUniform {
@@ -129,9 +165,27 @@ impl Cluster {
         // loops below route anything.
         self.refresh_worker(gi);
         for s in reqs {
+            if let Some(o) = self.obs.as_deref_mut() {
+                let req = self.store.get(s).req.id.0;
+                o.record(crate::obs::ObsEvent::Requeue {
+                    at: self.now,
+                    req,
+                    gpu: gi,
+                    why: "gpu-failed",
+                });
+            }
             self.route_request(s);
         }
         for s in items {
+            if let Some(o) = self.obs.as_deref_mut() {
+                let req = self.store.get(s).req.id.0;
+                o.record(crate::obs::ObsEvent::Requeue {
+                    at: self.now,
+                    req,
+                    gpu: gi,
+                    why: "kv-refetch",
+                });
+            }
             self.redispatch_decode(gi, node, Some(gi), s);
         }
         self.power.set_offline(self.now, GpuId(gi), true);

@@ -203,6 +203,11 @@ pub struct Cluster {
     /// probe per tick allocates, which the steady-state allocation test
     /// forbids.
     debug_ticks: bool,
+    /// Observability sink (DESIGN.md §17). `None` unless
+    /// `SimOptions::obs_events > 0`: the disabled path is a single
+    /// `Option::is_none` branch per record site, constructs no event,
+    /// and leaves `RunResult` bit-identical (golden-tested).
+    pub(crate) obs: Option<Box<crate::obs::ObsSink>>,
 }
 
 impl Cluster {
@@ -250,6 +255,14 @@ impl Cluster {
             .collect();
         let admission = admission::AdmissionState::new(cfg.admission.clone(), &cfg.tenants);
         let tenant_tiers = crate::workload::tracespec::tier_table(&cfg.tenants);
+        let obs = if opts.obs_events > 0 {
+            Some(Box::new(crate::obs::ObsSink::new(
+                opts.obs_events,
+                (0..total).map(|i| cfg.node_of(i) as u32).collect(),
+            )))
+        } else {
+            None
+        };
         let mut cl = Cluster {
             fleet,
             power,
@@ -299,6 +312,7 @@ impl Cluster {
             scratch_node_w: Vec::with_capacity(cfg.n_nodes),
             done: false,
             debug_ticks: std::env::var("RAPID_DEBUG_TICKS").is_ok(),
+            obs,
             cfg,
         };
         for gi in 0..cl.gpus.len() {
@@ -405,6 +419,13 @@ impl Cluster {
     pub(crate) fn note_eviction(&mut self, gi: usize, ev: crate::mem::Eviction) {
         if ev.bytes == 0 {
             return;
+        }
+        if let Some(o) = self.obs.as_deref_mut() {
+            o.record(crate::obs::ObsEvent::MemEvict {
+                at: self.now,
+                gpu: gi,
+                bytes: ev.bytes,
+            });
         }
         let until = (self.now + ev.time).max(self.mem.evict_until[gi]);
         self.mem.evict_until[gi] = until;
@@ -695,6 +716,15 @@ impl Cluster {
             self.events
                 .push(self.trace.requests[self.next_arrival].arrival, Event::Arrival);
         }
+        if let Some(o) = self.obs.as_deref_mut() {
+            o.record(crate::obs::ObsEvent::Arrival {
+                at: self.now,
+                req: req.id.0,
+                tenant: req.tenant,
+                input: req.input_tokens,
+                output: req.output_tokens,
+            });
+        }
         // Admission control (inert without an `[admission]` table): a
         // shed arrival is decided before any routing or prefix-cache
         // work, so it leaves no trace beyond its violation record.
@@ -703,6 +733,14 @@ impl Cluster {
             let tier = self.tier_of(req.tenant);
             let now = self.now;
             if !self.admission.admit(now, req.tenant, tier, in_system) {
+                if let Some(o) = self.obs.as_deref_mut() {
+                    o.record(crate::obs::ObsEvent::Shed {
+                        at: now,
+                        req: req.id.0,
+                        tenant: req.tenant,
+                        in_system,
+                    });
+                }
                 self.shed_request(&req);
                 return;
             }
@@ -717,6 +755,13 @@ impl Cluster {
                     self.mem.prefix_lookup(req.id.0, conv, prefix, req.input_tokens, bpt)
                 {
                     req.input_tokens -= cached;
+                    if let Some(o) = self.obs.as_deref_mut() {
+                        o.record(crate::obs::ObsEvent::PrefixHit {
+                            at: self.now,
+                            req: req.id.0,
+                            tokens: cached,
+                        });
+                    }
                 }
             }
         }
@@ -774,6 +819,10 @@ impl Cluster {
                 Some(i) => {
                     self.gpus[i].push_prefill(slot, input);
                     self.reindex(i);
+                    if let Some(o) = self.obs.as_deref_mut() {
+                        let req = self.store.get(slot).req.id.0;
+                        o.record(crate::obs::ObsEvent::PrefillQueued { at: self.now, req, gpu: i });
+                    }
                 }
                 None => self.orphan_reqs.push(slot),
             }
@@ -781,6 +830,10 @@ impl Cluster {
         };
         self.gpus[gpu.0].push_prefill(slot, input);
         self.reindex(gpu.0);
+        if let Some(o) = self.obs.as_deref_mut() {
+            let req = self.store.get(slot).req.id.0;
+            o.record(crate::obs::ObsEvent::PrefillQueued { at: self.now, req, gpu: gpu.0 });
+        }
         self.kick_prefill(gpu.0);
     }
 
@@ -829,6 +882,10 @@ impl Cluster {
             g.co_tokens += input;
         }
         self.sync_hot(gpu.0);
+        if let Some(o) = self.obs.as_deref_mut() {
+            let req = self.store.get(slot).req.id.0;
+            o.record(crate::obs::ObsEvent::PrefillQueued { at: self.now, req, gpu: gpu.0 });
+        }
         self.kick_coalesced(gpu.0);
     }
 
@@ -997,6 +1054,13 @@ impl Cluster {
                 // uniform split, bit-identically.
                 let weighted = self.fleet.heterogeneous()
                     && self.policy.power_weighting() == policy::PowerWeighting::MarginalTps;
+                // Audit snapshot before the books move (reads only; both
+                // are cached sums, so the disabled path skips them).
+                let (budget, committed_before) = if self.obs.is_some() {
+                    (self.power.budget(), self.power.committed_total())
+                } else {
+                    (0.0, 0.0)
+                };
                 let result = if weighted {
                     let now = self.now;
                     let src_w: Vec<f64> = sources
@@ -1018,6 +1082,7 @@ impl Cluster {
                 } else {
                     self.power.move_power(self.now, &sources, &sinks, total, ceiling)
                 };
+                let ok = result.is_ok();
                 match result {
                     Ok(mv) => {
                         self.decisions.push((
@@ -1029,6 +1094,21 @@ impl Cluster {
                     Err(e) => {
                         self.decisions
                             .push((self.now, format!("MovePower {from}->{to} failed: {e}")));
+                    }
+                }
+                if self.obs.is_some() {
+                    let committed_after = self.power.committed_total();
+                    if let Some(o) = self.obs.as_deref_mut() {
+                        o.record(crate::obs::ObsEvent::PowerMove {
+                            at: self.now,
+                            from,
+                            to,
+                            watts: total,
+                            ok,
+                            budget,
+                            committed_before,
+                            committed_after,
+                        });
                     }
                 }
             }
@@ -1056,6 +1136,14 @@ impl Cluster {
                     .unwrap();
                 self.decisions
                     .push((self.now, format!("MoveGpu {donor} {from}->{to}")));
+                if let Some(o) = self.obs.as_deref_mut() {
+                    o.record(crate::obs::ObsEvent::GpuMove {
+                        at: self.now,
+                        gpu: donor.0,
+                        from,
+                        to,
+                    });
+                }
                 self.begin_drain(donor.0, to);
                 // Paper line 14: uniform power across all GPUs after a
                 // role change.
@@ -1137,6 +1225,18 @@ impl Cluster {
                     self.now + t,
                     Event::KvArrive { gpu: target.0, src_node, slot },
                 );
+                if let Some(o) = self.obs.as_deref_mut() {
+                    let req = self.store.get(slot).req.id.0;
+                    let at = self.now;
+                    o.record(crate::obs::ObsEvent::Requeue { at, req, gpu: gi, why: "drain" });
+                    o.record(crate::obs::ObsEvent::KvSend {
+                        at,
+                        req,
+                        src: gi,
+                        dst: target.0,
+                        arrive_at: at + t,
+                    });
+                }
                 self.ring_used[src_node] += 1; // re-transfer occupies a slot
                 debug_assert!(self.ring_used[src_node] <= self.cfg.batch.ring_slots);
             } else {
@@ -1170,6 +1270,9 @@ impl Cluster {
         self.refresh_worker(gi);
         self.record_roles();
         let role = self.gpus[gi].role;
+        if let Some(o) = self.obs.as_deref_mut() {
+            o.record(crate::obs::ObsEvent::RoleFlip { at: self.now, gpu: gi, role });
+        }
         worker::behavior(role).kick(self, gi);
         // Rebalance: peers may hold queued work this GPU could take; the
         // router only balances new arrivals, so steal half the longest
@@ -1210,6 +1313,15 @@ impl Cluster {
         let applied = self.power.poll(self.now);
         if !applied.is_empty() {
             self.cap_trace.push((self.now, self.power.targets()));
+            if let Some(o) = self.obs.as_deref_mut() {
+                for &(g, w) in &applied {
+                    o.record(crate::obs::ObsEvent::CapApplied {
+                        at: self.now,
+                        gpu: g.0,
+                        watts: w,
+                    });
+                }
+            }
         }
         if let Some(at) = self.power.next_pending_at() {
             self.events.push(at, Event::PowerPoll);
@@ -1274,6 +1386,7 @@ impl Cluster {
     }
 
     fn finish(mut self) -> RunResult {
+        let obs = self.obs.take().map(|s| Box::new(s.into_report()));
         let duration = self.now.max(1);
         let mean_provisioned_w = if duration > 0 {
             self.provisioned_integral / duration as f64
@@ -1339,6 +1452,7 @@ impl Cluster {
                 self.tenant_tiers
             },
             preempted_by_tier: self.preempted_by_tier,
+            obs,
             summary_cache: None,
         };
         // Aggregate once here so emitters/figure drivers never re-scan

@@ -23,6 +23,7 @@ pub mod fleet;
 pub mod kv;
 pub mod mem;
 pub mod metrics;
+pub mod obs;
 pub mod power;
 #[cfg(feature = "pjrt")]
 pub mod runtime;

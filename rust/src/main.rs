@@ -4,6 +4,8 @@
 //!   fig1 | fig3 | fig4 | fig5 | fig6 | fig7 | fig8 | fig9
 //!       regenerate a paper figure (table + shape checks)
 //!   study    run a declarative scenario file (scenarios/*.toml)
+//!   trace    traced run of one scenario cell → Chrome/Perfetto JSON
+//!   explain  text timeline of one request from a traced run
 //!   validate parse config/scenario TOML files, listing every error
 //!   sim      run one configuration over a workload, print metrics
 //!   sweep    static design-space search (the paper's §5.1 exploration)
@@ -150,7 +152,9 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
             )
             .opt("format", "text", "output format: text | json | csv")
             .opt("threads", "0", "worker threads (0 = default; wins over RAPID_SWEEP_THREADS)")
-            .opt("requests", "0", "override the scenario's requests/cell (0 = keep)");
+            .opt("requests", "0", "override the scenario's requests/cell (0 = keep)")
+            .opt("out", "", "write the emitted output to this file instead of stdout")
+            .flag("progress", "live progress line on stderr (cells done, rate, ETA)");
             let a = parse_or_help(&cmd, rest)?;
             let Some(path) = a.positional.first() else {
                 return Err("usage: rapid study <scenario.toml> [--format f] [--threads t]".into());
@@ -162,8 +166,105 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
                 scenario.requests = requests;
             }
             let threads = Some(a.usize_or("threads", 0)?).filter(|&t| t >= 1);
-            let study = Study::new(scenario).run(threads)?;
-            print!("{}", emit::emit(&study, format));
+            let study = Study::new(scenario);
+            let result = if a.flag("progress") {
+                let t0 = std::time::Instant::now();
+                let r = study.run_with_progress(threads, |done, total| {
+                    let dt = t0.elapsed().as_secs_f64().max(1e-9);
+                    let rate = done as f64 / dt;
+                    let eta = (total - done) as f64 / rate.max(1e-9);
+                    eprint!("\rstudy: {done}/{total} cells  {rate:.2} cells/s  ETA {eta:.0}s  ");
+                })?;
+                eprintln!();
+                r
+            } else {
+                study.run(threads)?
+            };
+            let text = emit::emit(&result, format);
+            match a.get("out").filter(|p| !p.is_empty()) {
+                Some(out) => {
+                    std::fs::write(out, &text)?;
+                    println!("wrote {out}");
+                }
+                None => print!("{text}"),
+            }
+        }
+        "trace" => {
+            let cmd = Command::new(
+                "trace",
+                "run one scenario cell with the observability sink on and export a \
+                 Chrome-trace-event JSON (load it at https://ui.perfetto.dev)",
+            )
+            .opt("cell", "", "cell selector axis=value[,axis=value...] (default: first grid cell)")
+            .opt("out", "trace.json", "output path for the Chrome trace JSON")
+            .opt("requests", "0", "override the scenario's requests/cell (0 = keep)");
+            let a = parse_or_help(&cmd, rest)?;
+            let Some(source) = a.positional.first() else {
+                return Err(
+                    "usage: rapid trace <scenario.toml | config.toml | preset> \
+                     [--cell axis=value,...] [--out trace.json]"
+                        .into(),
+                );
+            };
+            let mut scenario = load_scenario(source)?;
+            let requests = a.usize_or("requests", 0)?;
+            if requests > 0 {
+                scenario.requests = requests;
+            }
+            let selector = parse_selector(a.get("cell").unwrap_or(""))?;
+            let (spec, res) = Study::new(scenario).run_traced(&selector)?;
+            let obs = res.obs.as_deref().expect("traced run carries an obs report");
+            let json = rapid::obs::chrome::chrome_trace(&res);
+            let out = a.get("out").unwrap();
+            std::fs::write(out, &json)?;
+            let cell_desc = if spec.coords.is_empty() {
+                "base cell".to_string()
+            } else {
+                spec.coords
+                    .iter()
+                    .map(|(k, v)| format!("{k}={v}"))
+                    .collect::<Vec<_>>()
+                    .join(",")
+            };
+            println!(
+                "traced {} ({cell_desc}): {} events ({} dropped), {} gpu steps, \
+                 {} power moves, {} role flips",
+                spec.config.name,
+                obs.events.len() as u64 + obs.dropped,
+                obs.dropped,
+                obs.counters.gpu_steps,
+                obs.counters.power_moves,
+                obs.counters.role_flips
+            );
+            println!("wrote {out} — open in Perfetto (ui.perfetto.dev) or chrome://tracing");
+        }
+        "explain" => {
+            let cmd = Command::new(
+                "explain",
+                "run one scenario cell traced and print a request's timeline with \
+                 per-stage latency attribution",
+            )
+            .opt("cell", "", "cell selector axis=value[,axis=value...] (default: first grid cell)")
+            .opt("requests", "0", "override the scenario's requests/cell (0 = keep)");
+            let a = parse_or_help(&cmd, rest)?;
+            let (Some(source), Some(rid)) = (a.positional.first(), a.positional.get(1)) else {
+                return Err(
+                    "usage: rapid explain <scenario.toml | config.toml | preset> <request-id> \
+                     [--cell axis=value,...]"
+                        .into(),
+                );
+            };
+            let rid: u64 = rid
+                .parse()
+                .map_err(|_| format!("request id '{rid}' is not an integer"))?;
+            let mut scenario = load_scenario(source)?;
+            let requests = a.usize_or("requests", 0)?;
+            if requests > 0 {
+                scenario.requests = requests;
+            }
+            let selector = parse_selector(a.get("cell").unwrap_or(""))?;
+            let (_, res) = Study::new(scenario).run_traced(&selector)?;
+            print!("{}", rapid::obs::explain::explain(&res, rid)?);
         }
         "validate" => {
             let cmd = Command::new(
@@ -276,8 +377,8 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
         "help" | "--help" | "-h" => {
             println!("rapid — power-aware disaggregated inference (paper reproduction)");
             println!(
-                "subcommands: fig1 fig3 fig4 fig5 fig6 fig7 fig8 fig9 study validate sim sweep \
-                 bench serve presets"
+                "subcommands: fig1 fig3 fig4 fig5 fig6 fig7 fig8 fig9 study trace explain \
+                 validate sim sweep bench serve presets"
             );
             println!("run `rapid <subcommand> --help` for flags");
         }
@@ -305,6 +406,37 @@ fn load_config(path: &str, preset: &str) -> Result<ClusterConfig, Box<dyn std::e
         return Ok(ClusterConfig::from_toml(&text)?);
     }
     Ok(presets::by_name(preset)?)
+}
+
+/// `rapid trace`/`rapid explain` input: a scenario TOML, a cluster
+/// config TOML (wrapped into a one-cell scenario), or a preset name.
+fn load_scenario(source: &str) -> Result<Scenario, Box<dyn std::error::Error>> {
+    if std::path::Path::new(source).exists() {
+        let text = std::fs::read_to_string(source)?;
+        return match Scenario::from_toml(&text) {
+            Ok(s) => Ok(s),
+            // Not a scenario: maybe a bare cluster config. If neither,
+            // the scenario grammar's error is the one to surface.
+            Err(scenario_err) => match ClusterConfig::from_toml(&text) {
+                Ok(cfg) => Ok(Scenario::new(source, cfg)),
+                Err(_) => Err(scenario_err.into()),
+            },
+        };
+    }
+    let cfg = presets::by_name(source)?;
+    Ok(Scenario::new(source, cfg))
+}
+
+/// Parse a `--cell` selector: `axis=value[,axis=value...]`.
+fn parse_selector(s: &str) -> Result<Vec<(String, String)>, Box<dyn std::error::Error>> {
+    let mut out = Vec::new();
+    for part in s.split(',').filter(|p| !p.is_empty()) {
+        let Some((k, v)) = part.split_once('=') else {
+            return Err(format!("bad --cell entry '{part}' (want axis=value)").into());
+        };
+        out.push((k.to_string(), v.to_string()));
+    }
+    Ok(out)
 }
 
 fn run_bench(

@@ -53,6 +53,11 @@ pub struct RunResult {
     /// Decode preemptions per priority tier (the preempted side):
     /// `[interactive, standard, batch]`.
     pub preempted_by_tier: [u64; 3],
+    /// Observability report (event log + counter registry) from a run
+    /// executed with recording enabled (`SimOptions::obs_events > 0`);
+    /// `None` — and structurally absent from every emitter — otherwise.
+    /// See DESIGN.md §17.
+    pub obs: Option<Box<crate::obs::ObsReport>>,
     /// Summary computed once when the run finishes, so study emitters
     /// and figure drivers never re-scan the record/power series.
     /// Hand-built results (tests) fall back to computing on demand.

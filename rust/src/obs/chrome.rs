@@ -1,0 +1,488 @@
+//! Chrome-trace-event JSON export (Perfetto-loadable).
+//!
+//! Layout: pid 0 is the cluster (counter tracks for budget vs committed
+//! power, role split and KV occupancy, plus decision instants), pid
+//! `1 + node` carries one thread per GPU (role-colored busy slices from
+//! [`ObsEvent::GpuStep`], role-flip instants, per-GPU cap counters),
+//! and pid [`REQUESTS_PID`] carries one thread per request with its
+//! lifecycle as stage slices (prefill → kv → decode-wait → decode,
+//! preemption segments included).
+//!
+//! Timestamps are sim microseconds, which is exactly the trace format's
+//! `ts` unit. Output is fully deterministic: events are collected with
+//! an insertion sequence and stable-sorted by (pid, tid, ts, seq), so
+//! every track is monotonic in time (the CI validator asserts this) and
+//! two runs of the same seed export byte-identical files.
+
+use std::collections::BTreeMap;
+
+use crate::metrics::RunResult;
+use crate::obs::{ObsEvent, ObsReport};
+use crate::types::{Micros, Role};
+use crate::util::json::Json;
+
+/// The synthetic process that holds one track per request.
+pub const REQUESTS_PID: u64 = 10_000;
+
+/// Reserved-color names Perfetto maps to stable palette entries.
+fn role_color(role: Role) -> &'static str {
+    match role {
+        Role::Prefill => "thread_state_running",
+        Role::Decode => "thread_state_runnable",
+        Role::Coalesced => "thread_state_iowait",
+    }
+}
+
+struct Out {
+    /// (pid, tid, ts, insertion seq, event) — the sort key that makes
+    /// every track monotonic while keeping ties deterministic.
+    events: Vec<(u64, u64, Micros, usize, Json)>,
+    meta: Vec<Json>,
+}
+
+impl Out {
+    fn push(&mut self, pid: u64, tid: u64, ts: Micros, ev: Json) {
+        let seq = self.events.len();
+        self.events.push((pid, tid, ts, seq, ev));
+    }
+
+    fn obj(fields: Vec<(&str, Json)>) -> Json {
+        Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+}
+
+fn base(name: &str, ph: &str, ts: Micros, pid: u64, tid: u64) -> Vec<(&'static str, Json)> {
+    // Field names are inserted into a BTreeMap, so declaration order
+    // here is cosmetic; the wire order is alphabetical.
+    let mut v: Vec<(&'static str, Json)> = Vec::with_capacity(8);
+    v.push(("name", Json::Str(name.to_string())));
+    v.push(("ph", Json::Str(ph.to_string())));
+    v.push(("ts", Json::Num(ts as f64)));
+    v.push(("pid", Json::Num(pid as f64)));
+    v.push(("tid", Json::Num(tid as f64)));
+    v
+}
+
+fn args(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn metadata(kind: &str, pid: u64, value: Json) -> Json {
+    let key = if kind == "process_sort_index" { "sort_index" } else { "name" };
+    Out::obj(vec![
+        ("name", Json::Str(kind.to_string())),
+        ("ph", Json::Str("M".to_string())),
+        ("pid", Json::Num(pid as f64)),
+        ("args", args(vec![(key, value)])),
+    ])
+}
+
+fn thread_meta(pid: u64, tid: u64, name: String) -> Json {
+    Out::obj(vec![
+        ("name", Json::Str("thread_name".to_string())),
+        ("ph", Json::Str("M".to_string())),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("args", args(vec![("name", Json::Str(name))])),
+    ])
+}
+
+fn counter(out: &mut Out, ts: Micros, name: &str, pairs: Vec<(&str, Json)>) {
+    let mut f = base(name, "C", ts, 0, 0);
+    f.push(("args", args(pairs)));
+    out.push(0, 0, ts, Out::obj(f));
+}
+
+fn instant(out: &mut Out, ts: Micros, pid: u64, tid: u64, name: String, a: Vec<(&str, Json)>) {
+    let mut f = base(&name, "i", ts, pid, tid);
+    f.push(("s", Json::Str("t".to_string())));
+    if !a.is_empty() {
+        f.push(("args", args(a)));
+    }
+    out.push(pid, tid, ts, Out::obj(f));
+}
+
+fn slice(
+    out: &mut Out,
+    pid: u64,
+    tid: u64,
+    start: Micros,
+    end: Micros,
+    name: &str,
+    cname: Option<&'static str>,
+    a: Vec<(&str, Json)>,
+) {
+    let mut f = base(name, "X", start, pid, tid);
+    f.push(("dur", Json::Num(end.saturating_sub(start) as f64)));
+    if let Some(c) = cname {
+        f.push(("cname", Json::Str(c.to_string())));
+    }
+    if !a.is_empty() {
+        f.push(("args", args(a)));
+    }
+    out.push(pid, tid, start, Out::obj(f));
+}
+
+/// Export a traced run as Chrome-trace-event JSON. Requires
+/// `result.obs` (a run executed with recording enabled); runs without
+/// a report export only the counter tracks derived from the metric
+/// series.
+pub fn chrome_trace(result: &RunResult) -> String {
+    let empty;
+    let obs: &ObsReport = match result.obs.as_deref() {
+        Some(o) => o,
+        None => {
+            empty = ObsReport::default();
+            &empty
+        }
+    };
+    let node_pid = |gpu: usize| -> u64 { 1 + obs.node_of.get(gpu).copied().unwrap_or(0) as u64 };
+
+    let mut out = Out { events: Vec::new(), meta: Vec::new() };
+
+    // --- process/thread metadata -------------------------------------
+    out.meta.push(metadata("process_name", 0, Json::Str("cluster".to_string())));
+    out.meta.push(metadata("process_sort_index", 0, Json::Num(0.0)));
+    let n_nodes = obs.node_of.iter().map(|n| *n as u64 + 1).max().unwrap_or(0);
+    for n in 0..n_nodes {
+        out.meta.push(metadata("process_name", 1 + n, Json::Str(format!("node {n}"))));
+        out.meta.push(metadata("process_sort_index", 1 + n, Json::Num((1 + n) as f64)));
+    }
+    for (g, n) in obs.node_of.iter().enumerate() {
+        out.meta.push(thread_meta(1 + *n as u64, g as u64, format!("gpu{g}")));
+    }
+    out.meta.push(metadata("process_name", REQUESTS_PID, Json::Str("requests".to_string())));
+    out.meta
+        .push(metadata("process_sort_index", REQUESTS_PID, Json::Num(REQUESTS_PID as f64)));
+
+    // --- counter tracks from the metric series -----------------------
+    for (t, caps) in &result.cap_trace {
+        let committed: f64 = caps.iter().sum();
+        counter(&mut out, *t, "cluster power (W)", vec![("committed", Json::Num(committed))]);
+    }
+    for (t, w) in &result.budget_trace {
+        counter(&mut out, *t, "cluster budget (W)", vec![("budget", Json::Num(*w))]);
+    }
+    for (t, p, d) in &result.role_trace {
+        counter(
+            &mut out,
+            *t,
+            "roles",
+            vec![("decode", Json::Num(*d as f64)), ("prefill", Json::Num(*p as f64))],
+        );
+    }
+    for (t, occ) in &result.mem_trace {
+        counter(&mut out, *t, "kv occupancy (max frac)", vec![("occ", Json::Num(*occ))]);
+    }
+
+    // --- the recorded event log --------------------------------------
+    // Open request-stage slices: req -> (start, stage name).
+    let mut open: BTreeMap<u64, (Micros, &'static str)> = BTreeMap::new();
+    let mut close = |out: &mut Out, open: &mut BTreeMap<u64, (Micros, &'static str)>,
+                     req: u64,
+                     at: Micros| {
+        if let Some((start, stage)) = open.remove(&req) {
+            slice(out, REQUESTS_PID, req, start, at, stage, None, vec![]);
+        }
+    };
+
+    for ev in &obs.events {
+        match *ev {
+            ObsEvent::Arrival { at, req, tenant, input, output } => {
+                instant(
+                    &mut out,
+                    at,
+                    REQUESTS_PID,
+                    req,
+                    "arrival".to_string(),
+                    vec![
+                        ("input", Json::Num(input as f64)),
+                        ("output", Json::Num(output as f64)),
+                        ("tenant", Json::Num(tenant as f64)),
+                    ],
+                );
+            }
+            ObsEvent::Shed { at, req, tenant, in_system } => {
+                instant(
+                    &mut out,
+                    at,
+                    REQUESTS_PID,
+                    req,
+                    "shed".to_string(),
+                    vec![
+                        ("in_system", Json::Num(in_system as f64)),
+                        ("tenant", Json::Num(tenant as f64)),
+                    ],
+                );
+            }
+            ObsEvent::PrefillQueued { at, req, gpu } => {
+                close(&mut out, &mut open, req, at);
+                open.insert(req, (at, "prefill"));
+                instant(
+                    &mut out,
+                    at,
+                    REQUESTS_PID,
+                    req,
+                    format!("queued gpu{gpu}"),
+                    vec![],
+                );
+            }
+            ObsEvent::GpuStep { at, gpu, node, until, role, reqs, tokens } => {
+                slice(
+                    &mut out,
+                    1 + node as u64,
+                    gpu as u64,
+                    at,
+                    until,
+                    &role.to_string(),
+                    Some(role_color(role)),
+                    vec![
+                        ("reqs", Json::Num(reqs as f64)),
+                        ("tokens", Json::Num(tokens as f64)),
+                    ],
+                );
+            }
+            ObsEvent::FirstToken { at, req, gpu: _ } => {
+                close(&mut out, &mut open, req, at);
+            }
+            ObsEvent::KvSend { at, req, src, dst, arrive_at: _ } => {
+                close(&mut out, &mut open, req, at);
+                open.insert(req, (at, "kv"));
+                instant(
+                    &mut out,
+                    at,
+                    REQUESTS_PID,
+                    req,
+                    format!("kv gpu{src}->gpu{dst}"),
+                    vec![],
+                );
+            }
+            ObsEvent::KvArrive { at, req, gpu: _ } => {
+                close(&mut out, &mut open, req, at);
+                open.insert(req, (at, "decode-wait"));
+            }
+            ObsEvent::DecodeAdmit { at, req, gpu: _ } => {
+                close(&mut out, &mut open, req, at);
+                open.insert(req, (at, "decode"));
+            }
+            ObsEvent::Preempt { at, victim, by, gpu, victim_tier, by_tier } => {
+                close(&mut out, &mut open, victim, at);
+                open.insert(victim, (at, "preempted"));
+                instant(
+                    &mut out,
+                    at,
+                    REQUESTS_PID,
+                    victim,
+                    format!("preempted by r{by} on gpu{gpu}"),
+                    vec![
+                        ("by_tier", Json::Num(by_tier as f64)),
+                        ("victim_tier", Json::Num(victim_tier as f64)),
+                    ],
+                );
+            }
+            ObsEvent::Requeue { at, req, gpu, why } => {
+                close(&mut out, &mut open, req, at);
+                open.insert(req, (at, "requeued"));
+                instant(
+                    &mut out,
+                    at,
+                    REQUESTS_PID,
+                    req,
+                    format!("requeue ({why}) gpu{gpu}"),
+                    vec![],
+                );
+            }
+            ObsEvent::Finish { at, req, gpu: _, tokens } => {
+                close(&mut out, &mut open, req, at);
+                instant(
+                    &mut out,
+                    at,
+                    REQUESTS_PID,
+                    req,
+                    "finish".to_string(),
+                    vec![("tokens", Json::Num(tokens as f64))],
+                );
+            }
+            ObsEvent::PowerMove { at, from, to, watts, ok, budget, committed_before, committed_after } => {
+                instant(
+                    &mut out,
+                    at,
+                    0,
+                    0,
+                    format!("MovePower {from}->{to} {watts:.0}W{}", if ok { "" } else { " (failed)" }),
+                    vec![
+                        ("budget", Json::Num(budget)),
+                        ("committed_after", Json::Num(committed_after)),
+                        ("committed_before", Json::Num(committed_before)),
+                    ],
+                );
+            }
+            ObsEvent::GpuMove { at, gpu, from, to } => {
+                instant(
+                    &mut out,
+                    at,
+                    node_pid(gpu),
+                    gpu as u64,
+                    format!("drain {from}->{to}"),
+                    vec![],
+                );
+            }
+            ObsEvent::RoleFlip { at, gpu, role } => {
+                instant(
+                    &mut out,
+                    at,
+                    node_pid(gpu),
+                    gpu as u64,
+                    format!("role={role}"),
+                    vec![],
+                );
+            }
+            ObsEvent::CapApplied { at, gpu, watts } => {
+                let mut f = base(&format!("cap gpu{gpu} (W)"), "C", at, node_pid(gpu), 0);
+                f.push(("args", args(vec![("cap", Json::Num(watts))])));
+                let pid = node_pid(gpu);
+                out.push(pid, 0, at, Out::obj(f));
+            }
+            ObsEvent::BudgetChange { at, node, watts, committed } => {
+                let scope = if node < 0 { "cluster".to_string() } else { format!("node {node}") };
+                instant(
+                    &mut out,
+                    at,
+                    0,
+                    0,
+                    format!("budget {scope} -> {watts:.0}W"),
+                    vec![("committed", Json::Num(committed))],
+                );
+            }
+            ObsEvent::EnvApplied { at, kind, gpu } => {
+                let tgt = if gpu < 0 { String::new() } else { format!(" gpu{gpu}") };
+                instant(&mut out, at, 0, 0, format!("env:{kind}{tgt}"), vec![]);
+            }
+            ObsEvent::PrefixHit { at, req, tokens } => {
+                instant(
+                    &mut out,
+                    at,
+                    REQUESTS_PID,
+                    req,
+                    "prefix hit".to_string(),
+                    vec![("tokens", Json::Num(tokens as f64))],
+                );
+            }
+            ObsEvent::MemEvict { at, gpu, bytes } => {
+                instant(
+                    &mut out,
+                    at,
+                    node_pid(gpu),
+                    gpu as u64,
+                    "kv evict".to_string(),
+                    vec![("bytes", Json::Num(bytes as f64))],
+                );
+            }
+        }
+    }
+    // Close anything still open at the end of the run.
+    let tail: Vec<u64> = open.keys().copied().collect();
+    for req in tail {
+        close(&mut out, &mut open, req, result.duration);
+    }
+
+    // Stable sort by (pid, tid, ts, seq): per-track monotonic, ties in
+    // original record order — fully deterministic.
+    out.events.sort_by(|a, b| (a.0, a.1, a.2, a.3).cmp(&(b.0, b.1, b.2, b.3)));
+
+    let mut all: Vec<Json> = out.meta;
+    all.extend(out.events.into_iter().map(|(_, _, _, _, e)| e));
+    let mut top = BTreeMap::new();
+    top.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+    top.insert("traceEvents".to_string(), Json::Arr(all));
+    Json::Obj(top).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::ObsCounters;
+
+    fn traced_result() -> RunResult {
+        let mut r = RunResult::default();
+        r.duration = 2_000_000;
+        r.cap_trace = vec![(0, vec![400.0, 500.0]), (1_000_000, vec![450.0, 450.0])];
+        let report = ObsReport {
+            counters: ObsCounters::default(),
+            events: vec![
+                ObsEvent::Arrival { at: 10, req: 1, tenant: 0, input: 100, output: 8 },
+                ObsEvent::PrefillQueued { at: 10, req: 1, gpu: 0 },
+                ObsEvent::GpuStep {
+                    at: 20,
+                    gpu: 0,
+                    node: 0,
+                    until: 120,
+                    role: Role::Prefill,
+                    reqs: 1,
+                    tokens: 100,
+                },
+                ObsEvent::FirstToken { at: 120, req: 1, gpu: 0 },
+                ObsEvent::KvSend { at: 120, req: 1, src: 0, dst: 1, arrive_at: 140 },
+                ObsEvent::KvArrive { at: 140, req: 1, gpu: 1 },
+                ObsEvent::DecodeAdmit { at: 150, req: 1, gpu: 1 },
+                ObsEvent::Finish { at: 900, req: 1, gpu: 1, tokens: 8 },
+            ],
+            dropped: 0,
+            node_of: vec![0, 0],
+        };
+        r.obs = Some(Box::new(report));
+        r
+    }
+
+    #[test]
+    fn export_is_valid_json_with_trace_events() {
+        let text = chrome_trace(&traced_result());
+        let v = Json::parse(&text).expect("exporter emits valid JSON");
+        let evs = v.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(evs.len() >= 10);
+        // Required keys on a slice event.
+        let x = evs
+            .iter()
+            .find(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+            .expect("at least one duration slice");
+        for key in ["name", "ts", "dur", "pid", "tid"] {
+            assert!(x.get(key).is_some(), "slice missing {key}");
+        }
+    }
+
+    #[test]
+    fn tracks_are_time_monotonic() {
+        let text = chrome_trace(&traced_result());
+        let v = Json::parse(&text).unwrap();
+        let mut last: BTreeMap<(u64, u64), f64> = BTreeMap::new();
+        for e in v.get("traceEvents").unwrap().as_arr().unwrap() {
+            if e.get("ph").and_then(|p| p.as_str()) == Some("M") {
+                continue;
+            }
+            let key = (
+                e.get("pid").unwrap().as_u64().unwrap(),
+                e.get("tid").map(|t| t.as_u64().unwrap()).unwrap_or(0),
+            );
+            let ts = e.get("ts").unwrap().as_f64().unwrap();
+            if let Some(prev) = last.get(&key) {
+                assert!(ts >= *prev, "track {key:?} went backwards: {prev} -> {ts}");
+            }
+            last.insert(key, ts);
+        }
+    }
+
+    #[test]
+    fn export_is_deterministic() {
+        let r = traced_result();
+        assert_eq!(chrome_trace(&r), chrome_trace(&r));
+    }
+
+    #[test]
+    fn stage_slices_cover_the_lifecycle() {
+        let text = chrome_trace(&traced_result());
+        for stage in ["\"prefill\"", "\"kv\"", "\"decode-wait\"", "\"decode\""] {
+            assert!(text.contains(stage), "missing stage {stage}");
+        }
+        assert!(text.contains("cluster power (W)"));
+    }
+}

@@ -1,0 +1,207 @@
+//! `rapid explain <request-id>`: a text timeline of one request's hops
+//! through the cluster, with per-stage latency attribution derived from
+//! the recorded event log.
+
+use crate::metrics::RunResult;
+use crate::obs::ObsEvent;
+use crate::types::Micros;
+
+fn secs(t: Micros) -> f64 {
+    t as f64 / 1e6
+}
+
+/// Per-stage latency attribution accumulated while walking a request's
+/// events in order.
+#[derive(Default)]
+struct Stages {
+    arrival: Option<Micros>,
+    prefill_queued: Option<Micros>,
+    first_token: Option<Micros>,
+    kv_send: Option<Micros>,
+    kv_arrive: Option<Micros>,
+    decode_admit: Option<Micros>,
+    finish: Option<Micros>,
+    /// Simulated time spent displaced from a decode batch (preempted or
+    /// requeued), summed across segments.
+    displaced: Micros,
+    displaced_since: Option<Micros>,
+    preemptions: u64,
+}
+
+/// Render the timeline for request `req`. Returns an error message when
+/// the run carries no observability report or never saw the request.
+pub fn explain(result: &RunResult, req: u64) -> Result<String, String> {
+    let obs = result
+        .obs
+        .as_deref()
+        .ok_or_else(|| "run has no observability report (record with `rapid trace`)".to_string())?;
+    let mine: Vec<&ObsEvent> = obs.events.iter().filter(|e| e.req() == Some(req)).collect();
+    if mine.is_empty() {
+        return Err(format!(
+            "request r{req} not found in the event log ({} events{})",
+            obs.events.len(),
+            if obs.dropped > 0 {
+                format!(", {} dropped by the ring — raise the trace capacity", obs.dropped)
+            } else {
+                String::new()
+            }
+        ));
+    }
+
+    let mut st = Stages::default();
+    let mut lines = Vec::new();
+    let mut line = |at: Micros, what: String| lines.push(format!("  t={:>9.3}s  {what}", secs(at)));
+
+    for ev in &mine {
+        match **ev {
+            ObsEvent::Arrival { at, tenant, input, output, .. } => {
+                st.arrival = Some(at);
+                line(at, format!("arrival          tenant {tenant}, {input} in / {output} out"));
+            }
+            ObsEvent::Shed { at, in_system, .. } => {
+                line(at, format!("SHED             admission refused ({in_system} in system)"));
+            }
+            ObsEvent::PrefixHit { at, tokens, .. } => {
+                line(at, format!("prefix hit       {tokens} prompt tokens cached"));
+            }
+            ObsEvent::PrefillQueued { at, gpu, .. } => {
+                if st.prefill_queued.is_none() {
+                    st.prefill_queued = Some(at);
+                }
+                if let Some(since) = st.displaced_since.take() {
+                    st.displaced += at - since;
+                }
+                line(at, format!("prefill queued   gpu{gpu}"));
+            }
+            ObsEvent::FirstToken { at, gpu, .. } => {
+                st.first_token = Some(at);
+                let d = st.prefill_queued.map(|q| at - q).unwrap_or(0);
+                line(at, format!("first token      gpu{gpu}  (+{:.3}s queue+prefill)", secs(d)));
+            }
+            ObsEvent::KvSend { at, src, dst, .. } => {
+                if st.kv_send.is_none() {
+                    st.kv_send = Some(at);
+                }
+                line(at, format!("kv send          gpu{src} -> gpu{dst}"));
+            }
+            ObsEvent::KvArrive { at, gpu, .. } => {
+                st.kv_arrive = Some(at);
+                let d = st.kv_send.map(|s| at - s).unwrap_or(0);
+                line(at, format!("kv arrive        gpu{gpu}  (+{:.3}s transfer)", secs(d)));
+            }
+            ObsEvent::DecodeAdmit { at, gpu, .. } => {
+                if st.decode_admit.is_none() {
+                    st.decode_admit = Some(at);
+                }
+                if let Some(since) = st.displaced_since.take() {
+                    st.displaced += at - since;
+                }
+                line(at, format!("decode admit     gpu{gpu}"));
+            }
+            ObsEvent::Preempt { at, by, gpu, victim_tier, by_tier, .. } => {
+                st.preemptions += 1;
+                st.displaced_since = Some(at);
+                line(
+                    at,
+                    format!("PREEMPTED        gpu{gpu} by r{by} (tier {victim_tier} -> {by_tier})"),
+                );
+            }
+            ObsEvent::Requeue { at, gpu, why, .. } => {
+                st.displaced_since.get_or_insert(at);
+                line(at, format!("requeue          gpu{gpu} ({why})"));
+            }
+            ObsEvent::Finish { at, gpu, tokens, .. } => {
+                st.finish = Some(at);
+                line(at, format!("finish           gpu{gpu}  ({tokens} tokens)"));
+            }
+            _ => {}
+        }
+    }
+
+    let mut head = format!("request r{req} — {} events", mine.len());
+    if st.preemptions > 0 {
+        head.push_str(&format!(", preempted {}x", st.preemptions));
+    }
+
+    // Attribution: each stage from the timestamps that bound it.
+    let mut attr: Vec<String> = Vec::new();
+    if let (Some(a), Some(q)) = (st.arrival, st.prefill_queued) {
+        attr.push(format!("route {:.3}s", secs(q - a)));
+    }
+    if let (Some(q), Some(f)) = (st.prefill_queued, st.first_token) {
+        attr.push(format!("queue+prefill {:.3}s", secs(f - q)));
+    }
+    if let (Some(s), Some(v)) = (st.kv_send, st.kv_arrive) {
+        attr.push(format!("kv {:.3}s", secs(v - s)));
+    }
+    if let (Some(v), Some(d)) = (st.kv_arrive, st.decode_admit) {
+        attr.push(format!("decode wait {:.3}s", secs(d - v)));
+    }
+    if let (Some(d), Some(f)) = (st.decode_admit, st.finish) {
+        attr.push(format!("decode {:.3}s", secs(f - d)));
+    }
+    if st.displaced > 0 {
+        attr.push(format!("displaced {:.3}s", secs(st.displaced)));
+    }
+    if let (Some(a), Some(f)) = (st.arrival, st.finish) {
+        attr.push(format!("total {:.3}s", secs(f - a)));
+    }
+
+    let mut out = String::new();
+    out.push_str(&head);
+    out.push('\n');
+    for l in &lines {
+        out.push_str(l);
+        out.push('\n');
+    }
+    if !attr.is_empty() {
+        out.push_str("stage attribution: ");
+        out.push_str(&attr.join(" · "));
+        out.push('\n');
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::ObsReport;
+
+    fn result_with(events: Vec<ObsEvent>) -> RunResult {
+        let mut r = RunResult::default();
+        r.duration = 2_000_000;
+        r.obs = Some(Box::new(ObsReport { events, node_of: vec![0, 0], ..ObsReport::default() }));
+        r
+    }
+
+    #[test]
+    fn renders_a_full_lifecycle_with_attribution() {
+        let r = result_with(vec![
+            ObsEvent::Arrival { at: 0, req: 5, tenant: 1, input: 800, output: 32 },
+            ObsEvent::PrefillQueued { at: 1_000, req: 5, gpu: 0 },
+            ObsEvent::FirstToken { at: 101_000, req: 5, gpu: 0 },
+            ObsEvent::KvSend { at: 101_000, req: 5, src: 0, dst: 1, arrive_at: 105_000 },
+            ObsEvent::KvArrive { at: 105_000, req: 5, gpu: 1 },
+            ObsEvent::DecodeAdmit { at: 106_000, req: 5, gpu: 1 },
+            ObsEvent::Preempt { at: 500_000, victim: 5, by: 9, gpu: 1, victim_tier: 2, by_tier: 0 },
+            ObsEvent::DecodeAdmit { at: 700_000, req: 5, gpu: 1 },
+            ObsEvent::Finish { at: 900_000, req: 5, gpu: 1, tokens: 32 },
+        ]);
+        let text = explain(&r, 5).unwrap();
+        assert!(text.starts_with("request r5"), "{text}");
+        assert!(text.contains("preempted 1x"), "{text}");
+        assert!(text.contains("PREEMPTED"), "{text}");
+        assert!(text.contains("queue+prefill 0.100s"), "{text}");
+        assert!(text.contains("kv 0.004s"), "{text}");
+        assert!(text.contains("displaced 0.200s"), "{text}");
+        assert!(text.contains("total 0.900s"), "{text}");
+    }
+
+    #[test]
+    fn unknown_request_reports_cleanly() {
+        let r = result_with(vec![ObsEvent::FirstToken { at: 1, req: 2, gpu: 0 }]);
+        let err = explain(&r, 99).unwrap_err();
+        assert!(err.contains("r99"), "{err}");
+        assert!(explain(&RunResult::default(), 1).is_err());
+    }
+}

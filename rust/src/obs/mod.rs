@@ -1,0 +1,345 @@
+//! Deterministic observability: typed event recording, decision audit,
+//! and trace export (DESIGN.md §17).
+//!
+//! The simulator's end-of-run summaries can say *that* goodput dipped,
+//! never *why*. This module records the causal record: every request's
+//! hop through the cluster (arrival → admission/shed → prefill queue →
+//! batch → KV transfer → decode → preemption/requeue → finish), every
+//! power-control action with the budgets and committed sums it saw
+//! (`MovePower`/`MoveGpu`/role flips audited against `PowerManager`
+//! books), every environment disturbance, and the memory events
+//! (prefix hits, tier evictions) that shape decode admission.
+//!
+//! Recording is `Option`-gated at the [`crate::cluster::Cluster`]: with
+//! the sink disabled (the default) no event is constructed and no byte
+//! of `RunResult` changes — the goldens in `rust/tests/obs_trace.rs`
+//! hold the disabled path to bit-identity and the `alloc-count` harness
+//! holds it to zero allocations. Enabled, events land in a pre-sized
+//! ring buffer: recording is a store plus an index bump, so a warmed
+//! window allocates nothing either (the ring overwrites its oldest
+//! entry and counts the drop).
+//!
+//! Every payload field is plain-old-data (`u64`/`f64`/[`Role`]/
+//! `&'static str`) — constructing an event never allocates, and the
+//! log is a pure function of the seed, so exports are byte-identical
+//! across thread counts and event-queue backends.
+
+pub mod chrome;
+pub mod explain;
+
+use crate::types::{Micros, Role};
+
+/// One recorded observation. Variants carry their own timestamp `at`
+/// (sim µs) plus the minimum payload to reconstruct the decision or
+/// hop; request ids are the raw `RequestId` integers.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ObsEvent {
+    /// A request entered the router (post trace replay, pre admission).
+    Arrival { at: Micros, req: u64, tenant: u8, input: u32, output: u32 },
+    /// Admission control shed the request (`in_system` = queue+active
+    /// population the decision saw).
+    Shed { at: Micros, req: u64, tenant: u8, in_system: usize },
+    /// Routed into a prefill (or coalesced) queue.
+    PrefillQueued { at: Micros, req: u64, gpu: usize },
+    /// A GPU started a work unit (prefill batch, decode iteration or
+    /// coalesced chunk) scheduled to complete at `until`. These become
+    /// the role-colored busy slices on the per-GPU Perfetto tracks.
+    GpuStep {
+        at: Micros,
+        gpu: usize,
+        node: u32,
+        until: Micros,
+        role: Role,
+        reqs: u32,
+        tokens: u64,
+    },
+    /// First output token produced (prefill completed).
+    FirstToken { at: Micros, req: u64, gpu: usize },
+    /// KV handoff published onto the ring; lands at `arrive_at`.
+    KvSend { at: Micros, req: u64, src: usize, dst: usize, arrive_at: Micros },
+    /// KV handoff landed on the decode GPU.
+    KvArrive { at: Micros, req: u64, gpu: usize },
+    /// Admitted into a decode batch.
+    DecodeAdmit { at: Micros, req: u64, gpu: usize },
+    /// Tier preemption: `by` displaced `victim` inside a full decode
+    /// batch (victim keeps progress, re-queues).
+    Preempt { at: Micros, victim: u64, by: u64, gpu: usize, victim_tier: u8, by_tier: u8 },
+    /// A request went back to a queue (GPU failure, preemption, memory
+    /// stall retry); `why` is a static reason tag.
+    Requeue { at: Micros, req: u64, gpu: usize, why: &'static str },
+    /// Request completed; `tokens` output tokens served.
+    Finish { at: Micros, req: u64, gpu: usize, tokens: u32 },
+    /// Power-control audit: a `MovePower` attempt with the cluster
+    /// budget and committed sums immediately before/after (reconciles
+    /// against `budget_trace`/`cap_trace`).
+    PowerMove {
+        at: Micros,
+        from: Role,
+        to: Role,
+        watts: f64,
+        ok: bool,
+        budget: f64,
+        committed_before: f64,
+        committed_after: f64,
+    },
+    /// A `MoveGpu` decision began draining `gpu` toward `to`.
+    GpuMove { at: Micros, gpu: usize, from: Role, to: Role },
+    /// A drain completed: `gpu` now serves `role`.
+    RoleFlip { at: Micros, gpu: usize, role: Role },
+    /// A deferred cap raise (or derate restore) took effect.
+    CapApplied { at: Micros, gpu: usize, watts: f64 },
+    /// A cluster (`node == -1`) or node budget changed; `committed` is
+    /// the committed sum after the books re-settled.
+    BudgetChange { at: Micros, node: i64, watts: f64, committed: f64 },
+    /// An environment disturbance was applied (`gpu == -1` when the
+    /// event targets the whole cluster or a node).
+    EnvApplied { at: Micros, kind: &'static str, gpu: i64 },
+    /// Prefix-cache hit at arrival: `tokens` prompt tokens skipped.
+    PrefixHit { at: Micros, req: u64, tokens: u32 },
+    /// KV tier eviction (demotion) charged to an admission on `gpu`.
+    MemEvict { at: Micros, gpu: usize, bytes: u64 },
+}
+
+impl ObsEvent {
+    /// The event's timestamp (sim µs).
+    pub fn at(&self) -> Micros {
+        use ObsEvent::*;
+        match *self {
+            Arrival { at, .. }
+            | Shed { at, .. }
+            | PrefillQueued { at, .. }
+            | GpuStep { at, .. }
+            | FirstToken { at, .. }
+            | KvSend { at, .. }
+            | KvArrive { at, .. }
+            | DecodeAdmit { at, .. }
+            | Preempt { at, .. }
+            | Requeue { at, .. }
+            | Finish { at, .. }
+            | PowerMove { at, .. }
+            | GpuMove { at, .. }
+            | RoleFlip { at, .. }
+            | CapApplied { at, .. }
+            | BudgetChange { at, .. }
+            | EnvApplied { at, .. }
+            | PrefixHit { at, .. }
+            | MemEvict { at, .. } => at,
+        }
+    }
+
+    /// The request id this event concerns, if any.
+    pub fn req(&self) -> Option<u64> {
+        use ObsEvent::*;
+        match *self {
+            Arrival { req, .. }
+            | Shed { req, .. }
+            | PrefillQueued { req, .. }
+            | FirstToken { req, .. }
+            | KvSend { req, .. }
+            | KvArrive { req, .. }
+            | DecodeAdmit { req, .. }
+            | Requeue { req, .. }
+            | Finish { req, .. }
+            | PrefixHit { req, .. } => Some(req),
+            Preempt { victim, .. } => Some(victim),
+            _ => None,
+        }
+    }
+}
+
+/// The aggregate counter registry: one monotonic count per event kind,
+/// bumped on every `record` (including events the ring later drops), so
+/// the totals survive even when the ring wraps. Aggregated into
+/// `RunResult.obs` for the emitters.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ObsCounters {
+    pub arrivals: u64,
+    pub sheds: u64,
+    pub gpu_steps: u64,
+    pub first_tokens: u64,
+    pub kv_transfers: u64,
+    pub decode_admits: u64,
+    pub preemptions: u64,
+    pub requeues: u64,
+    pub finishes: u64,
+    pub power_moves: u64,
+    pub gpu_moves: u64,
+    pub role_flips: u64,
+    pub cap_updates: u64,
+    pub budget_changes: u64,
+    pub env_applied: u64,
+    pub prefix_hits: u64,
+    pub evictions: u64,
+}
+
+/// What a traced run carries out of the simulator: the (possibly
+/// wrapped) event log in chronological order, the counter registry,
+/// and the GPU→node map the exporter needs to group tracks.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ObsReport {
+    pub counters: ObsCounters,
+    pub events: Vec<ObsEvent>,
+    /// Events overwritten because the ring was full.
+    pub dropped: u64,
+    /// Node index of each GPU (topology snapshot for the exporter).
+    pub node_of: Vec<u32>,
+}
+
+/// The recording sink the `Cluster` holds (`Option`-gated). A fixed-
+/// capacity ring: below capacity events append into pre-reserved
+/// storage; at capacity the oldest event is overwritten and counted in
+/// `dropped`. Either way a `record` is allocation-free.
+#[derive(Debug)]
+pub struct ObsSink {
+    events: Vec<ObsEvent>,
+    /// Oldest entry once the ring has wrapped; next overwrite target.
+    head: usize,
+    dropped: u64,
+    cap: usize,
+    pub counters: ObsCounters,
+    node_of: Vec<u32>,
+}
+
+impl ObsSink {
+    /// A sink retaining at most `cap` events (≥ 1), with the GPU→node
+    /// topology the Chrome exporter groups tracks by.
+    pub fn new(cap: usize, node_of: Vec<u32>) -> Self {
+        let cap = cap.max(1);
+        ObsSink {
+            events: Vec::with_capacity(cap),
+            head: 0,
+            dropped: 0,
+            cap,
+            counters: ObsCounters::default(),
+            node_of,
+        }
+    }
+
+    /// Record one event: bump its counter, then append (or overwrite
+    /// the oldest once full). Never allocates.
+    #[inline]
+    pub fn record(&mut self, ev: ObsEvent) {
+        self.bump(&ev);
+        if self.events.len() < self.cap {
+            self.events.push(ev);
+        } else {
+            self.events[self.head] = ev;
+            self.head += 1;
+            if self.head == self.cap {
+                self.head = 0;
+            }
+            self.dropped += 1;
+        }
+    }
+
+    #[inline]
+    fn bump(&mut self, ev: &ObsEvent) {
+        let c = &mut self.counters;
+        match ev {
+            ObsEvent::Arrival { .. } => c.arrivals += 1,
+            ObsEvent::Shed { .. } => c.sheds += 1,
+            ObsEvent::PrefillQueued { .. } => {}
+            ObsEvent::GpuStep { .. } => c.gpu_steps += 1,
+            ObsEvent::FirstToken { .. } => c.first_tokens += 1,
+            ObsEvent::KvSend { .. } => c.kv_transfers += 1,
+            ObsEvent::KvArrive { .. } => {}
+            ObsEvent::DecodeAdmit { .. } => c.decode_admits += 1,
+            ObsEvent::Preempt { .. } => c.preemptions += 1,
+            ObsEvent::Requeue { .. } => c.requeues += 1,
+            ObsEvent::Finish { .. } => c.finishes += 1,
+            ObsEvent::PowerMove { .. } => c.power_moves += 1,
+            ObsEvent::GpuMove { .. } => c.gpu_moves += 1,
+            ObsEvent::RoleFlip { .. } => c.role_flips += 1,
+            ObsEvent::CapApplied { .. } => c.cap_updates += 1,
+            ObsEvent::BudgetChange { .. } => c.budget_changes += 1,
+            ObsEvent::EnvApplied { .. } => c.env_applied += 1,
+            ObsEvent::PrefixHit { .. } => c.prefix_hits += 1,
+            ObsEvent::MemEvict { .. } => c.evictions += 1,
+        }
+    }
+
+    /// Events recorded and still resident (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Unroll the ring into a chronological report.
+    pub fn into_report(mut self) -> ObsReport {
+        // When wrapped, `head` indexes the oldest entry; rotating it to
+        // the front restores chronological order. Unwrapped, head is 0
+        // and the rotate is a no-op.
+        self.events.rotate_left(self.head);
+        ObsReport {
+            counters: self.counters,
+            events: self.events,
+            dropped: self.dropped,
+            node_of: self.node_of,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(at: Micros) -> ObsEvent {
+        ObsEvent::FirstToken { at, req: at, gpu: 0 }
+    }
+
+    #[test]
+    fn ring_appends_below_capacity() {
+        let mut s = ObsSink::new(4, vec![0]);
+        for t in 0..3 {
+            s.record(ev(t));
+        }
+        let r = s.into_report();
+        assert_eq!(r.dropped, 0);
+        assert_eq!(r.counters.first_tokens, 3);
+        let ats: Vec<Micros> = r.events.iter().map(|e| e.at()).collect();
+        assert_eq!(ats, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_stays_chronological() {
+        let mut s = ObsSink::new(4, vec![0]);
+        for t in 0..10 {
+            s.record(ev(t));
+        }
+        let r = s.into_report();
+        assert_eq!(r.dropped, 6);
+        assert_eq!(r.counters.first_tokens, 10, "counters survive drops");
+        let ats: Vec<Micros> = r.events.iter().map(|e| e.at()).collect();
+        assert_eq!(ats, vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn counters_classify_event_kinds() {
+        let mut s = ObsSink::new(16, vec![0, 0]);
+        s.record(ObsEvent::Arrival { at: 0, req: 1, tenant: 0, input: 10, output: 2 });
+        s.record(ObsEvent::Shed { at: 1, req: 2, tenant: 1, in_system: 30 });
+        s.record(ObsEvent::PowerMove {
+            at: 2,
+            from: Role::Decode,
+            to: Role::Prefill,
+            watts: 50.0,
+            ok: true,
+            budget: 4800.0,
+            committed_before: 4000.0,
+            committed_after: 4000.0,
+        });
+        s.record(ObsEvent::Preempt { at: 3, victim: 1, by: 2, gpu: 0, victim_tier: 2, by_tier: 0 });
+        let c = s.into_report().counters;
+        assert_eq!((c.arrivals, c.sheds, c.power_moves, c.preemptions), (1, 1, 1, 1));
+    }
+
+    #[test]
+    fn req_accessor_tracks_victim() {
+        let p = ObsEvent::Preempt { at: 0, victim: 7, by: 9, gpu: 1, victim_tier: 2, by_tier: 0 };
+        assert_eq!(p.req(), Some(7));
+        assert_eq!(ev(5).req(), Some(5));
+    }
+}

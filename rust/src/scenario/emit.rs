@@ -76,6 +76,19 @@ fn any_tenants(study: &StudyResult) -> bool {
     study.cells.iter().any(|c| c.tenants().is_some())
 }
 
+/// Any traced cell in the study? Gates the observability counter
+/// columns so untraced studies (every plain `rapid study` run — the
+/// sink is only enabled by `rapid trace`) render byte-identically to
+/// pre-obs output.
+fn any_obs(study: &StudyResult) -> bool {
+    study.cells.iter().any(|c| c.obs().is_some())
+}
+
+/// Total events a traced cell recorded (resident plus ring-dropped).
+fn obs_events_total(r: &crate::obs::ObsReport) -> u64 {
+    r.events.len() as u64 + r.dropped
+}
+
 // ---------------------------------------------------------------------------
 // Text
 // ---------------------------------------------------------------------------
@@ -160,6 +173,23 @@ fn text_metrics(study: &StudyResult) -> Vec<Metric> {
                     c.tenants()
                         .map_or(0.0, |t| t.iter().map(|x| x.preempted as f64).sum())
                 },
+                fmt: |v| format!("{v:.0}"),
+            });
+        }
+        if any_obs(study) {
+            metrics.push(Metric {
+                name: "obs_events",
+                value: |c| c.obs().map_or(0.0, |o| obs_events_total(o) as f64),
+                fmt: |v| format!("{v:.0}"),
+            });
+            metrics.push(Metric {
+                name: "power_moves",
+                value: |c| c.obs().map_or(0.0, |o| o.counters.power_moves as f64),
+                fmt: |v| format!("{v:.0}"),
+            });
+            metrics.push(Metric {
+                name: "requeues",
+                value: |c| c.obs().map_or(0.0, |o| o.counters.requeues as f64),
                 fmt: |v| format!("{v:.0}"),
             });
         }
@@ -331,6 +361,34 @@ fn cell_json(cell: &Cell) -> Json {
                 }
             }
             obj.insert("metrics".into(), Json::Obj(m));
+            if let Some(o) = r.obs.as_deref() {
+                let c = &o.counters;
+                let mut ob = BTreeMap::new();
+                ob.insert("events".into(), Json::Num(obs_events_total(o) as f64));
+                ob.insert("dropped".into(), Json::Num(o.dropped as f64));
+                for (k, v) in [
+                    ("arrivals", c.arrivals),
+                    ("sheds", c.sheds),
+                    ("gpu_steps", c.gpu_steps),
+                    ("first_tokens", c.first_tokens),
+                    ("kv_transfers", c.kv_transfers),
+                    ("decode_admits", c.decode_admits),
+                    ("preemptions", c.preemptions),
+                    ("requeues", c.requeues),
+                    ("finishes", c.finishes),
+                    ("power_moves", c.power_moves),
+                    ("gpu_moves", c.gpu_moves),
+                    ("role_flips", c.role_flips),
+                    ("cap_updates", c.cap_updates),
+                    ("budget_changes", c.budget_changes),
+                    ("env_applied", c.env_applied),
+                    ("prefix_hits", c.prefix_hits),
+                    ("evictions", c.evictions),
+                ] {
+                    ob.insert(k.into(), Json::Num(v as f64));
+                }
+                obj.insert("obs".into(), Json::Obj(ob));
+            }
         }
     }
     let checks: Vec<Json> = cell
@@ -413,6 +471,7 @@ impl Emitter for CsvEmitter {
         let resilience = any_resilience(study);
         let mem = any_mem(study);
         let tenants = any_tenants(study);
+        let obs = any_obs(study);
         let mut out = String::new();
         for k in &axis_keys {
             out.push_str(k);
@@ -437,6 +496,9 @@ impl Emitter for CsvEmitter {
                 out.push_str(
                     ",interactive_attainment,standard_attainment,batch_attainment,shed,preempted",
                 );
+            }
+            if obs {
+                out.push_str(",obs_events,power_moves,requeues");
             }
             out.push('\n');
         }
@@ -490,6 +552,13 @@ impl Emitter for CsvEmitter {
                             ",{},{},{},{shed},{preempted}",
                             tiers[0].attainment, tiers[1].attainment, tiers[2].attainment
                         ));
+                    }
+                    if obs {
+                        // Untraced cells in a mixed study emit zeros.
+                        let (ev, pm, rq) = r.obs.as_deref().map_or((0, 0, 0), |o| {
+                            (obs_events_total(o), o.counters.power_moves, o.counters.requeues)
+                        });
+                        out.push_str(&format!(",{ev},{pm},{rq}"));
                     }
                 }
             }
@@ -700,6 +769,47 @@ mod tests {
             "{csv}"
         );
         assert_eq!(csv.trim_end().lines().count(), 3);
+    }
+
+    #[test]
+    fn obs_rendered_only_for_traced_studies() {
+        // Untraced studies keep the pre-obs output shape exactly.
+        let plain = small_study();
+        assert!(!emit(&plain, Format::Text).contains("[obs_events]"));
+        assert!(!emit(&plain, Format::Csv).lines().next().unwrap().contains("obs_events"));
+        assert!(!emit(&plain, Format::Json).contains("\"obs\""));
+        // A study carrying a traced cell renders the counter block.
+        let study = Study::new(
+            Scenario::new("obs-emit", presets::p4d4(600.0)).requests(40).seed(9),
+        );
+        let (spec, res) = study.run_traced(&[]).unwrap();
+        assert!(res.obs.is_some());
+        let traced = StudyResult {
+            scenario: study.scenario.clone(),
+            cells: vec![Cell {
+                coords: spec.coords.clone(),
+                config: spec.config.clone(),
+                rate_per_gpu: spec.rate_per_gpu,
+                slo: spec.slo,
+                out: CellOut::Sim(res),
+                checks: Vec::new(),
+            }],
+        };
+        let text = emit(&traced, Format::Text);
+        assert!(text.contains("[obs_events]"), "{text}");
+        assert!(text.contains("[power_moves]"), "{text}");
+        let json = emit(&traced, Format::Json);
+        let v = Json::parse(json.trim()).unwrap();
+        let cells = v.get("cells").unwrap().as_arr().unwrap();
+        let ob = cells[0].get("obs").unwrap();
+        assert!(ob.get("events").unwrap().as_f64().unwrap() > 0.0);
+        assert!(ob.get("gpu_steps").unwrap().as_f64().unwrap() > 0.0);
+        assert!(ob.get("finishes").unwrap().as_f64().is_some());
+        let csv = emit(&traced, Format::Csv);
+        assert!(
+            csv.lines().next().unwrap().ends_with("obs_events,power_moves,requeues"),
+            "{csv}"
+        );
     }
 
     #[test]

@@ -40,7 +40,7 @@ use crate::metrics::RunResult;
 use crate::power::PowerModel;
 use crate::sim::{self, SimOptions};
 use crate::types::{Micros, Slo};
-use crate::util::par::parallel_map_threads;
+use crate::util::par::{parallel_map_threads, parallel_map_threads_progress};
 use crate::util::rng::Rng;
 use crate::workload::sonnet::{mixed_phases, MixedPhasesSpec, Sonnet};
 use crate::workload::tracespec::{assign_tenants, TraceSpec};
@@ -781,6 +781,92 @@ impl Study {
             cells,
         })
     }
+
+    /// [`Study::run`] with a completion callback: `on_done(done, total)`
+    /// fires after each cell finishes, from whichever worker completed
+    /// it. Drives `rapid study --progress`; results are bit-identical to
+    /// [`Study::run`] (the callback only observes).
+    pub fn run_with_progress<P>(
+        &self,
+        threads: Option<usize>,
+        on_done: P,
+    ) -> Result<StudyResult, ScenarioError>
+    where
+        P: Fn(usize, usize) + Sync,
+    {
+        let specs = self.cells()?;
+        let arena = build_trace_arena(&self.scenario, &specs);
+        let cells = parallel_map_threads_progress(
+            &specs,
+            threads,
+            |spec| run_cell(&self.scenario, spec, Some(&arena)),
+            on_done,
+        );
+        Ok(StudyResult {
+            scenario: self.scenario.clone(),
+            cells,
+        })
+    }
+
+    /// Run one grid cell with the observability sink enabled (the
+    /// `rapid trace` / `rapid explain` entry point). `selector` is a
+    /// list of `(axis key, value label)` pairs; the first cell (grid
+    /// order) whose coords match every pair wins, so an empty selector
+    /// picks the grid's first cell. Microbench cells are rejected —
+    /// they are analytic closed forms with no event timeline to record.
+    ///
+    /// The traced run is always serial (one cell) and records into a
+    /// ring of [`sim::TRACE_EVENT_CAPACITY`] events; everything else
+    /// matches [`Study::run`]'s per-cell setup exactly, so the returned
+    /// `RunResult` differs from the untraced cell only by its `obs`
+    /// report.
+    pub fn run_traced(
+        &self,
+        selector: &[(String, String)],
+    ) -> Result<(CellSpec, RunResult), ScenarioError> {
+        if self.scenario.workload.is_micro() {
+            return Err(ScenarioError(
+                "microbench scenarios have no event timeline to trace".into(),
+            ));
+        }
+        let specs = self.cells()?;
+        let matches = |spec: &CellSpec| {
+            selector.iter().all(|(k, v)| {
+                spec.coords
+                    .iter()
+                    .any(|(ck, cv)| ck == k && cv == v)
+            })
+        };
+        let Some(spec) = specs.iter().find(|s| matches(s)) else {
+            let grid: Vec<String> = specs
+                .iter()
+                .map(|s| {
+                    s.coords
+                        .iter()
+                        .map(|(k, v)| format!("{k}={v}"))
+                        .collect::<Vec<_>>()
+                        .join(",")
+                })
+                .collect();
+            return Err(ScenarioError(format!(
+                "no cell matches selector {:?}; grid cells: [{}]",
+                selector
+                    .iter()
+                    .map(|(k, v)| format!("{k}={v}"))
+                    .collect::<Vec<_>>()
+                    .join(","),
+                grid.join(" | ")
+            )));
+        };
+        let trace = Arc::new(build_cell_trace(&self.scenario, spec));
+        let mut opts = SimOptions::default();
+        if let Some(p) = self.scenario.sample_period {
+            opts.sample_period = p;
+        }
+        opts.obs_events = sim::TRACE_EVENT_CAPACITY;
+        let res = sim::run_shared(&spec.config, &trace, &opts);
+        Ok((spec.clone(), res))
+    }
 }
 
 /// One evaluated grid point.
@@ -859,6 +945,13 @@ impl Cell {
     /// untenanted runs).
     pub fn tenants(&self) -> Option<[crate::metrics::TierSummary; 3]> {
         self.result().and_then(|r| r.summary().tenants)
+    }
+
+    /// Observability report of a traced cell (`None` for microbench
+    /// cells and for every untraced run — studies never enable the
+    /// sink, so plain study output is unaffected by its existence).
+    pub fn obs(&self) -> Option<&crate::obs::ObsReport> {
+        self.result().and_then(|r| r.obs.as_deref())
     }
 
     pub fn rate_point(&self) -> RatePoint {

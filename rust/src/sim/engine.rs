@@ -28,6 +28,12 @@ pub struct SimOptions {
     /// Hard wall: stop this long after the last arrival even if requests
     /// are still unfinished (they count as SLO violations).
     pub drain_grace: Micros,
+    /// Observability event-ring capacity; 0 (the default) disables
+    /// recording entirely — no sink is constructed, the per-event
+    /// record sites reduce to an `Option::is_none` branch, and the run
+    /// is bit-identical to one built before the subsystem existed
+    /// (DESIGN.md §17, golden-tested in `rust/tests/obs_trace.rs`).
+    pub obs_events: usize,
 }
 
 impl Default for SimOptions {
@@ -37,9 +43,16 @@ impl Default for SimOptions {
             // aggregates; Fig 3 overrides to the paper's 10 ms.
             sample_period: 200_000,
             drain_grace: 120 * SECOND,
+            obs_events: 0,
         }
     }
 }
+
+/// Default event-ring capacity for a traced run (`rapid trace`): large
+/// enough to hold every event of the shipped scenarios at their default
+/// request counts; the ring drops oldest-first beyond it (the export
+/// records how many).
+pub const TRACE_EVENT_CAPACITY: usize = 1 << 20;
 
 /// Run one experiment: a trace through a cluster configuration.
 pub fn run(cfg: &ClusterConfig, trace: &Trace, opts: &SimOptions) -> RunResult {

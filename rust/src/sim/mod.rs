@@ -8,4 +8,4 @@ pub mod event;
 pub mod gpu;
 pub mod worker;
 
-pub use engine::{run, run_shared, SimOptions};
+pub use engine::{run, run_shared, SimOptions, TRACE_EVENT_CAPACITY};

@@ -56,6 +56,7 @@ impl Cluster {
             let s = g.dec_pending.pop_front().unwrap();
             g.dec_active.push(s);
         }
+        let admitted = n;
         // Take the next prefill chunk directly over the slot queue —
         // same packing as `batcher::take_chunk` (head-first, spilling
         // into later prompts when the head completes inside the budget)
@@ -95,6 +96,33 @@ impl Cluster {
         let epoch = self.gpus[gi].epoch;
         self.events
             .push(self.now + t, Event::StepDone { gpu: gi, epoch });
+        if self.obs.is_some() {
+            // Admitted slots sit at the tail of `dec_active`; the chunk
+            // loop above never reorders the decode batch.
+            for k in 0..admitted {
+                let idx = self.gpus[gi].dec_active.len() - admitted + k;
+                let s = self.gpus[gi].dec_active[idx];
+                let req = self.store.get(s).req.id.0;
+                if let Some(o) = self.obs.as_deref_mut() {
+                    o.record(crate::obs::ObsEvent::DecodeAdmit { at: self.now, req, gpu: gi });
+                }
+            }
+            let node = self.node_of(gi) as u32;
+            let at = self.now;
+            if let Some(o) = self.obs.as_deref_mut() {
+                o.record(crate::obs::ObsEvent::GpuStep {
+                    at,
+                    gpu: gi,
+                    node,
+                    until: at + t,
+                    role: Role::Coalesced,
+                    reqs: batch as u32,
+                    // Chunked prefill tokens plus one decode token per
+                    // active request this iteration.
+                    tokens: used as u64 + batch as u64,
+                });
+            }
+        }
     }
 
     pub(crate) fn on_coalesced_step(&mut self, gi: usize, epoch: u64) {
@@ -108,9 +136,10 @@ impl Cluster {
         let mut finishing = std::mem::take(&mut self.gpus[gi].co_finishing);
         let dynamic = self.policy.is_dynamic();
         for slot in finishing.drain(..) {
-            let (arrival, ttft_slo, output_tokens, started) = {
+            let (id, arrival, ttft_slo, output_tokens, started) = {
                 let st = self.store.get(slot);
                 (
+                    st.req.id.0,
                     st.req.arrival,
                     st.req.slo.ttft,
                     st.req.output_tokens,
@@ -125,6 +154,15 @@ impl Cluster {
                 let now = self.now;
                 let st = self.store.remove(slot);
                 self.push_record(&st.req, started, now, now);
+                if let Some(o) = self.obs.as_deref_mut() {
+                    o.record(crate::obs::ObsEvent::FirstToken { at: now, req: id, gpu: gi });
+                    o.record(crate::obs::ObsEvent::Finish {
+                        at: now,
+                        req: id,
+                        gpu: gi,
+                        tokens: output_tokens,
+                    });
+                }
                 continue;
             }
             {
@@ -133,6 +171,9 @@ impl Cluster {
                 st.first_token = self.now;
                 st.tokens_done = 1;
                 st.cached_tokens = 0;
+            }
+            if let Some(o) = self.obs.as_deref_mut() {
+                o.record(crate::obs::ObsEvent::FirstToken { at: self.now, req: id, gpu: gi });
             }
             self.gpus[gi].dec_pending.push_back(slot);
         }
@@ -170,6 +211,14 @@ impl Cluster {
             let now = self.now;
             let st = self.store.remove(slot);
             self.push_record(&st.req, st.prefill_start, st.first_token, now);
+            if let Some(o) = self.obs.as_deref_mut() {
+                o.record(crate::obs::ObsEvent::Finish {
+                    at: now,
+                    req: st.req.id.0,
+                    gpu: gi,
+                    tokens: st.req.output_tokens,
+                });
+            }
         }
         self.scratch_done = finished;
         self.kick_coalesced(gi);

@@ -45,6 +45,10 @@ impl Cluster {
             return;
         }
         self.gpus[gi].dec_pending.push_back(slot);
+        if let Some(o) = self.obs.as_deref_mut() {
+            let req = self.store.get(slot).req.id.0;
+            o.record(crate::obs::ObsEvent::KvArrive { at: self.now, req, gpu: gi });
+        }
         self.reindex(gi); // occupancy grew: update before any publish picks
         // A slot freed: stalled prefill GPUs may publish now. Only live
         // prefill-role workers can hold publish_wait items (they drain
@@ -88,6 +92,8 @@ impl Cluster {
         }
         // Admissions at step boundaries (continuous batching). Draining
         // GPUs stop admitting.
+        let mut admitted = 0usize;
+        let mut preempted: Option<(u64, u64, u8, u8)> = None;
         if g.accepting() {
             let n = batcher::decode_admissions(
                 g.dec_active.len(),
@@ -98,6 +104,7 @@ impl Cluster {
                 let s = g.dec_pending.pop_front().unwrap();
                 g.dec_active.push(s);
             }
+            admitted = n;
             // Priority-aware preemption (multi-tenant runs only; with no
             // tenant classes every tier is standard and the strict
             // comparison below never fires): when the batch is full and
@@ -142,6 +149,38 @@ impl Cluster {
                     g.dec_active.push(promoted);
                     g.dec_pending.push_back(demoted);
                     self.preempted_by_tier[victim_tier as usize] += 1;
+                    if self.obs.is_some() {
+                        preempted = Some((
+                            store.get(demoted).req.id.0,
+                            store.get(promoted).req.id.0,
+                            victim_tier,
+                            promote_tier,
+                        ));
+                    }
+                }
+            }
+        }
+        if self.obs.is_some() {
+            // The admitted slots sit at the tail of `dec_active` (the
+            // preemption swap only fires when `admitted == 0`).
+            for k in 0..admitted {
+                let idx = self.gpus[gi].dec_active.len() - admitted + k;
+                let s = self.gpus[gi].dec_active[idx];
+                let req = self.store.get(s).req.id.0;
+                if let Some(o) = self.obs.as_deref_mut() {
+                    o.record(crate::obs::ObsEvent::DecodeAdmit { at: self.now, req, gpu: gi });
+                }
+            }
+            if let Some((victim, by, victim_tier, by_tier)) = preempted {
+                if let Some(o) = self.obs.as_deref_mut() {
+                    o.record(crate::obs::ObsEvent::Preempt {
+                        at: self.now,
+                        victim,
+                        by,
+                        gpu: gi,
+                        victim_tier,
+                        by_tier,
+                    });
                 }
             }
         }
@@ -157,6 +196,22 @@ impl Cluster {
         self.gpus[gi].dec_step_time = t;
         let epoch = self.gpus[gi].epoch;
         self.events.push(self.now + t, Event::StepDone { gpu: gi, epoch });
+        if self.obs.is_some() {
+            let node = self.node_of(gi) as u32;
+            let at = self.now;
+            if let Some(o) = self.obs.as_deref_mut() {
+                o.record(crate::obs::ObsEvent::GpuStep {
+                    at,
+                    gpu: gi,
+                    node,
+                    until: at + t,
+                    role: Role::Decode,
+                    reqs: batch as u32,
+                    // One token per active request per decode iteration.
+                    tokens: batch as u64,
+                });
+            }
+        }
     }
 
     pub(crate) fn on_decode_step(&mut self, gi: usize, epoch: u64) {
@@ -211,6 +266,14 @@ impl Cluster {
             }
             let now = self.now;
             self.push_record(&st.req, st.prefill_start, st.first_token, now);
+            if let Some(o) = self.obs.as_deref_mut() {
+                o.record(crate::obs::ObsEvent::Finish {
+                    at: now,
+                    req: st.req.id.0,
+                    gpu: gi,
+                    tokens: st.req.output_tokens,
+                });
+            }
         }
         self.scratch_done = finished;
         if n_finished > 0 {

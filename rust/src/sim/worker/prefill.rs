@@ -71,6 +71,21 @@ impl Cluster {
         let power = self.power.effective(GpuId(gi), now);
         let t = self.model_of(gi).prefill_batch_time(total_tokens, power);
         self.events.push(now + t, Event::StepDone { gpu: gi, epoch });
+        if self.obs.is_some() {
+            let node = self.node_of(gi) as u32;
+            let reqs = self.gpus[gi].pf_batch.len() as u32;
+            if let Some(o) = self.obs.as_deref_mut() {
+                o.record(crate::obs::ObsEvent::GpuStep {
+                    at: now,
+                    gpu: gi,
+                    node,
+                    until: now + t,
+                    role: Role::Prefill,
+                    reqs,
+                    tokens: total_tokens as u64,
+                });
+            }
+        }
     }
 
     pub(crate) fn on_prefill_done(&mut self, gi: usize, epoch: u64) {
@@ -104,6 +119,15 @@ impl Cluster {
                 let now = self.now;
                 let st = self.store.remove(slot);
                 self.push_record(&st.req, prefill_start, now, now);
+                if let Some(o) = self.obs.as_deref_mut() {
+                    o.record(crate::obs::ObsEvent::FirstToken { at: now, req: id, gpu: gi });
+                    o.record(crate::obs::ObsEvent::Finish {
+                        at: now,
+                        req: id,
+                        gpu: gi,
+                        tokens: output_tokens,
+                    });
+                }
                 continue;
             }
             let cached = self.mem.take_cached_tokens(id);
@@ -112,6 +136,9 @@ impl Cluster {
                 st.first_token = self.now;
                 st.tokens_done = 1;
                 st.cached_tokens = cached;
+            }
+            if let Some(o) = self.obs.as_deref_mut() {
+                o.record(crate::obs::ObsEvent::FirstToken { at: self.now, req: id, gpu: gi });
             }
             self.gpus[gi].publish_wait.push_back(slot);
         }
@@ -177,6 +204,16 @@ impl Cluster {
                 self.now + t,
                 Event::KvArrive { gpu: target.0, src_node, slot },
             );
+            if let Some(o) = self.obs.as_deref_mut() {
+                let at = self.now;
+                o.record(crate::obs::ObsEvent::KvSend {
+                    at,
+                    req: id,
+                    src: gi,
+                    dst: target.0,
+                    arrive_at: at + t,
+                });
+            }
         }
     }
 }

@@ -78,6 +78,59 @@ where
     parallel_map_threads(items, None, f)
 }
 
+/// [`parallel_map_threads`] with a completion callback: `on_done(done,
+/// total)` fires after each item finishes (from whichever worker thread
+/// finished it; `done` is the monotone completion count, not an index).
+/// Results stay bit-identical to the plain variant — the callback only
+/// observes progress, it never orders work.
+pub fn parallel_map_threads_progress<T, R, F, P>(
+    items: &[T],
+    threads: Option<usize>,
+    f: F,
+    on_done: P,
+) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+    P: Fn(usize, usize) + Sync,
+{
+    let total = items.len();
+    let threads = sweep_threads_with(threads).min(total.max(1));
+    if threads <= 1 || total <= 1 {
+        return items
+            .iter()
+            .enumerate()
+            .map(|(i, x)| {
+                let r = f(x);
+                on_done(i + 1, total);
+                r
+            })
+            .collect();
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let completed = std::sync::atomic::AtomicUsize::new(0);
+    let done: std::sync::Mutex<Vec<(usize, R)>> =
+        std::sync::Mutex::new(Vec::with_capacity(total));
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= total {
+                    break;
+                }
+                let r = f(&items[i]);
+                done.lock().unwrap().push((i, r));
+                let n = completed.fetch_add(1, std::sync::atomic::Ordering::Relaxed) + 1;
+                on_done(n, total);
+            });
+        }
+    });
+    let mut out = done.into_inner().unwrap();
+    out.sort_by_key(|&(i, _)| i);
+    out.into_iter().map(|(_, r)| r).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -108,5 +161,29 @@ mod tests {
         let serial = parallel_map_threads(&items, Some(1), |&x| x * x + 1);
         let par = parallel_map_threads(&items, Some(8), |&x| x * x + 1);
         assert_eq!(serial, par);
+    }
+
+    #[test]
+    fn progress_callback_counts_every_completion() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let items: Vec<u64> = (0..23).collect();
+        for threads in [1, 4] {
+            let fired = AtomicUsize::new(0);
+            let max_seen = AtomicUsize::new(0);
+            let out = parallel_map_threads_progress(
+                &items,
+                Some(threads),
+                |&x| x + 7,
+                |done, total| {
+                    assert_eq!(total, 23);
+                    assert!(done >= 1 && done <= total);
+                    fired.fetch_add(1, Ordering::Relaxed);
+                    max_seen.fetch_max(done, Ordering::Relaxed);
+                },
+            );
+            assert_eq!(out, items.iter().map(|&x| x + 7).collect::<Vec<_>>());
+            assert_eq!(fired.load(Ordering::Relaxed), 23);
+            assert_eq!(max_seen.load(Ordering::Relaxed), 23);
+        }
     }
 }

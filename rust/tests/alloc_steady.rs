@@ -53,3 +53,33 @@ fn warmed_des_window_is_allocation_free() {
         "steady-state DES window performed {delta} heap allocations"
     );
 }
+
+#[test]
+fn warmed_traced_window_is_allocation_free() {
+    // Same harness with the observability sink ENABLED, at a capacity
+    // small enough that the 6k-event warmup wraps the ring: the window
+    // then exercises the overwrite path, which must be a store plus an
+    // index bump. Every event payload is POD and the ring Vec is
+    // pre-reserved at construction, so recording never allocates —
+    // whether appending below capacity or overwriting past it.
+    let cfg = presets::rapid_600();
+    let trace = longbench_trace(42, 1.0 * cfg.total_gpus() as f64, 2000, Slo::paper_default());
+    let opts = SimOptions {
+        sample_period: 3600 * SECOND,
+        obs_events: 4096,
+        ..SimOptions::default()
+    };
+    let mut cl = Cluster::new(cfg, Arc::new(trace), opts);
+    cl.prime();
+    let warmed = cl.step_events(6_000);
+    assert_eq!(warmed, 6_000, "trace too short: warmup ran off the end");
+
+    let before = allocation_count();
+    let stepped = cl.step_events(1_000);
+    let delta = allocation_count() - before;
+    assert_eq!(stepped, 1_000, "trace too short: window ran off the end");
+    assert_eq!(
+        delta, 0,
+        "traced steady-state window performed {delta} heap allocations"
+    );
+}

@@ -1,0 +1,283 @@
+//! Golden suite for the observability subsystem (DESIGN.md §17).
+//!
+//! The contract under test, in order of importance:
+//!
+//! * **Disabled path is invisible**: `obs_events: 0` (the default)
+//!   constructs no sink and a run is bit-identical — through the full
+//!   [`support::assert_bit_identical`] comparator — to one recorded
+//!   with the sink enabled, once the enabled run's `obs` report is
+//!   stripped. Recording observes; it never steers.
+//! * **Traced cell == study cell**: `Study::run_traced` reproduces the
+//!   exact `RunResult` of the matching `Study::run` grid cell, obs
+//!   report aside.
+//! * **Export determinism**: the Chrome-trace JSON of a traced run is
+//!   byte-identical across repeat runs, `RAPID_SWEEP_THREADS`
+//!   settings, and the `RAPID_EVENTQ=heap` event-queue backend — and
+//!   is valid Chrome Trace Event JSON with per-track monotone
+//!   timestamps.
+//! * **Audit reconciliation**: every cluster-level `BudgetChange`
+//!   event matches `budget_trace` 1:1 and to the bit; `PowerMove`
+//!   events agree with their counter and ok-moves stay within the
+//!   budget they recorded; every `CapApplied` timestamp appears in
+//!   `cap_trace`.
+//! * **`rapid explain`**: a preempted multi-turn request renders a
+//!   timeline with the preemption and stage attribution, identically
+//!   across reruns.
+
+#[path = "support/mod.rs"]
+mod support;
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use rapid::config::ClusterConfig;
+use rapid::obs::chrome::chrome_trace;
+use rapid::obs::{explain::explain, ObsEvent};
+use rapid::scenario::{longbench_trace, Scenario, Study};
+use rapid::sim::{self, SimOptions, TRACE_EVENT_CAPACITY};
+use rapid::types::{Micros, Slo};
+use rapid::util::json::Json;
+use rapid::workload::tracespec::{assign_tenants, TraceSpec};
+
+fn traced_opts() -> SimOptions {
+    SimOptions {
+        obs_events: TRACE_EVENT_CAPACITY,
+        ..SimOptions::default()
+    }
+}
+
+fn shipped_scenario(name: &str, requests: usize) -> Scenario {
+    let path = format!("{}/scenarios/{name}", env!("CARGO_MANIFEST_DIR"));
+    let mut s = Scenario::from_toml_file(&path).unwrap_or_else(|e| panic!("{name}: {e}"));
+    s.requests = requests;
+    s
+}
+
+/// The tentpole golden: an untraced run must be bit-identical to a
+/// traced run of the same inputs (report stripped), and the report
+/// itself must be present and self-consistent.
+fn disabled_vs_enabled(config_file: &str, seed: u64) {
+    let cfg = support::shipped_config(config_file);
+    let trace = longbench_trace(
+        seed,
+        1.25 * cfg.total_gpus() as f64,
+        120,
+        Slo::paper_default(),
+    );
+    let off = sim::run(&cfg, &trace, &SimOptions::default());
+    assert!(off.obs.is_none(), "untraced runs carry no report");
+
+    let mut on = sim::run(&cfg, &trace, &traced_opts());
+    let report = *on.obs.take().expect("traced run carries a report");
+    assert!(!report.events.is_empty());
+    assert_eq!(report.dropped, 0, "ring must hold a 120-request run");
+    assert_eq!(report.counters.arrivals as usize, trace.len());
+    assert_eq!(report.counters.finishes as usize, trace.len());
+    assert!(report.counters.gpu_steps > 0);
+    assert_eq!(report.node_of.len(), cfg.total_gpus());
+
+    // With the report stripped, every series — records, decisions,
+    // cap/budget/power/mem traces — must match to the bit.
+    support::assert_bit_identical(&off, &on);
+}
+
+#[test]
+fn recording_is_invisible_on_rapid_600() {
+    disabled_vs_enabled("rapid-600.toml", 17);
+}
+
+#[test]
+fn recording_is_invisible_on_hetero_4p4d() {
+    disabled_vs_enabled("hetero-4p4d.toml", 23);
+}
+
+#[test]
+fn traced_cell_matches_study_cell_on_flash_crowd_curtail() {
+    let selector = vec![("policy".to_string(), "rapid".to_string())];
+    let s = shipped_scenario("flash-crowd-curtail.toml", 40);
+    let study = Study::new(s.clone()).run(Some(1)).expect("study runs");
+    let (spec, mut traced) = Study::new(s).run_traced(&selector).expect("traced run");
+    assert!(spec.coords.iter().any(|(k, v)| k == "policy" && v == "rapid"));
+
+    let report = *traced.obs.take().expect("traced run carries a report");
+    assert!(report.counters.arrivals > 0);
+    assert!(report.counters.arrivals >= report.counters.finishes);
+
+    let cell = study
+        .cells
+        .iter()
+        .find(|c| c.coords == spec.coords)
+        .expect("selector names a grid cell");
+    support::assert_bit_identical(cell.result().expect("sim cell"), &traced);
+}
+
+#[test]
+fn run_traced_rejects_unknown_selectors() {
+    let s = shipped_scenario("flash-crowd-curtail.toml", 10);
+    let err = Study::new(s)
+        .run_traced(&[("policy".to_string(), "nope".to_string())])
+        .expect_err("unknown value must not silently pick a cell");
+    let msg = err.to_string();
+    assert!(msg.contains("policy=nope"), "{msg}");
+    assert!(msg.contains("policy=rapid"), "error lists the grid: {msg}");
+}
+
+fn traced_flash_crowd_json() -> String {
+    let s = shipped_scenario("flash-crowd-curtail.toml", 40);
+    let (_, res) = Study::new(s).run_traced(&[]).expect("traced run");
+    chrome_trace(&res)
+}
+
+#[test]
+fn chrome_export_is_valid_and_byte_identical_across_backends() {
+    let golden = traced_flash_crowd_json();
+
+    // Validity: parses, declares ms display units, and every event
+    // carries the required Chrome-trace keys with timestamps monotone
+    // per (pid, tid) track (metadata events excepted).
+    let doc = Json::parse(&golden).expect("chrome trace is valid JSON");
+    assert_eq!(doc.get("displayTimeUnit").and_then(Json::as_str), Some("ms"));
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents array");
+    assert!(!events.is_empty());
+    let mut last_ts: BTreeMap<(u64, u64), f64> = BTreeMap::new();
+    for ev in events {
+        assert!(ev.get("name").and_then(Json::as_str).is_some(), "{ev:?}");
+        let ph = ev.get("ph").and_then(Json::as_str).expect("ph");
+        let pid = ev.get("pid").and_then(Json::as_u64).expect("pid");
+        let tid = ev.get("tid").and_then(Json::as_u64).expect("tid");
+        if ph == "M" {
+            continue; // metadata names tracks; carries no timestamp order
+        }
+        let ts = ev.get("ts").and_then(Json::as_f64).expect("ts");
+        if let Some(prev) = last_ts.insert((pid, tid), ts) {
+            assert!(ts >= prev, "track ({pid},{tid}) went backwards: {prev} -> {ts}");
+        }
+    }
+
+    // Byte-identity: repeat run, forced fan-out width, and the heap
+    // event-queue backend must all export the exact same bytes.
+    assert_eq!(traced_flash_crowd_json(), golden, "repeat run");
+    std::env::set_var("RAPID_SWEEP_THREADS", "4");
+    let wide = traced_flash_crowd_json();
+    std::env::remove_var("RAPID_SWEEP_THREADS");
+    assert_eq!(wide, golden, "RAPID_SWEEP_THREADS=4");
+    std::env::set_var("RAPID_EVENTQ", "heap");
+    let heap = traced_flash_crowd_json();
+    std::env::remove_var("RAPID_EVENTQ");
+    assert_eq!(heap, golden, "RAPID_EVENTQ=heap");
+}
+
+#[test]
+fn power_audit_reconciles_with_budget_and_cap_traces() {
+    // A compact grid whose curtailment windows (10 s period offsets)
+    // land inside the ~25 s arrival span, so the cluster budget really
+    // steps mid-run and the audit has something to reconcile.
+    let toml = "name = \"audit-curtail\"\n\
+         seed = 42\n\
+         requests = 240\n\
+         rate_per_gpu = 1.2\n\
+         [workload]\nkind = \"longbench\"\n\
+         [slo]\nttft_ms = 1000\ntpot_ms = 40\n\
+         [base]\npreset = \"rapid-600\"\n\
+         [axes]\npolicy = [\"rapid\"]\nenv = [\"curtail:20:0.5:0.7:10\"]\n";
+    let selector = vec![("policy".to_string(), "rapid".to_string())];
+    let s = Scenario::from_toml(toml).expect("audit scenario parses");
+    let (_, res) = Study::new(s).run_traced(&selector).expect("traced run");
+    let obs = res.obs.as_deref().expect("traced run carries a report");
+    assert_eq!(obs.dropped, 0, "1:1 reconciliation needs the full log");
+
+    // Cluster-level BudgetChange audit events mirror budget_trace
+    // exactly: same count, same instants, bit-identical watts.
+    let changes: Vec<(Micros, f64)> = obs
+        .events
+        .iter()
+        .filter_map(|e| match *e {
+            ObsEvent::BudgetChange { at, node: -1, watts, .. } => Some((at, watts)),
+            _ => None,
+        })
+        .collect();
+    assert!(!changes.is_empty(), "curtailment must register a budget change");
+    assert_eq!(changes.len(), res.budget_trace.len());
+    for ((ea, ew), (ba, bw)) in changes.iter().zip(&res.budget_trace) {
+        assert_eq!(ea, ba, "audit instant must match budget_trace");
+        assert_eq!(ew.to_bits(), bw.to_bits(), "audit watts must match budget_trace");
+    }
+
+    // PowerMove audit: the resident events agree with the counter
+    // (no drops), and every accepted move stayed within the budget it
+    // recorded at decision time.
+    let mut moves = 0u64;
+    for e in &obs.events {
+        if let ObsEvent::PowerMove { ok, watts, budget, committed_after, .. } = *e {
+            moves += 1;
+            assert!(watts >= 0.0);
+            if ok {
+                assert!(
+                    committed_after <= budget + 1e-6,
+                    "accepted move overcommitted: {committed_after} > {budget}"
+                );
+            }
+        }
+    }
+    assert_eq!(moves, obs.counters.power_moves);
+
+    // Every deferred cap application the audit saw is a real cap_trace
+    // sample instant.
+    let cap_times: BTreeSet<Micros> = res.cap_trace.iter().map(|(t, _)| *t).collect();
+    for e in &obs.events {
+        if let ObsEvent::CapApplied { at, .. } = *e {
+            assert!(cap_times.contains(&at), "CapApplied at {at} missing from cap_trace");
+        }
+    }
+}
+
+/// The multi-tenant saturation recipe from `rust/tests/multi_tenant.rs`
+/// (proven to preempt), rewritten into 4-turn conversations the way
+/// `build_cell_trace` does it: multi-turn first, tenant tags second.
+fn preempting_multiturn() -> (ClusterConfig, rapid::workload::Trace) {
+    let toml = "preset = \"rapid-600\"\n\
+         [tenant.chat]\nshare = 0.5\ntier = \"interactive\"\n\
+         [tenant.api]\nshare = 0.3\ntier = \"standard\"\n\
+         [tenant.jobs]\nshare = 0.2\ntier = \"batch\"\nslo_scale = 4.0\n";
+    let cfg = ClusterConfig::from_toml(toml).expect("tenant config parses");
+    let spec = TraceSpec::preset("mt-4400x1200").unwrap();
+    let mut trace = spec.build(7, 8.0 * cfg.n_gpus as f64, 300, Slo::paper_default());
+    rapid::workload::make_multiturn(&mut trace, 4, 0.5);
+    assign_tenants(&mut trace, &cfg.tenants, 7);
+    (cfg, trace)
+}
+
+#[test]
+fn explain_renders_a_preempted_multiturn_request_deterministically() {
+    let (cfg, trace) = preempting_multiturn();
+    let res = sim::run(&cfg, &trace, &traced_opts());
+    let obs = res.obs.as_deref().expect("traced run carries a report");
+
+    let victim = obs
+        .events
+        .iter()
+        .find_map(|e| match *e {
+            ObsEvent::Preempt { victim, .. } => Some(victim),
+            _ => None,
+        })
+        .expect("saturated mixed-tier decode batches must preempt");
+    assert!(obs.counters.preemptions > 0);
+
+    let text = explain(&res, victim).expect("victim has a timeline");
+    assert!(text.starts_with(&format!("request r{victim}")), "{text}");
+    assert!(text.contains("preempted"), "{text}");
+    assert!(text.contains("PREEMPTED"), "{text}");
+    assert!(text.contains("arrival"), "{text}");
+    assert!(text.contains("stage attribution:"), "{text}");
+    assert!(text.contains("displaced"), "displacement must be attributed: {text}");
+    assert!(text.contains("total "), "{text}");
+
+    // Unknown ids fail with a pointer at the log, not a panic.
+    assert!(explain(&res, u64::MAX).is_err());
+
+    // Deterministic: the rerun renders the byte-identical timeline.
+    let res2 = sim::run(&cfg, &trace, &traced_opts());
+    assert_eq!(explain(&res2, victim).expect("rerun timeline"), text);
+}

@@ -47,4 +47,5 @@ pub fn assert_bit_identical(a: &RunResult, b: &RunResult) {
         assert_eq!(ta, tb);
         assert_eq!(oa.to_bits(), ob.to_bits(), "occupancy samples must be bit-identical");
     }
+    assert_eq!(a.obs, b.obs, "obs reports must match (None for untraced runs)");
 }
